@@ -1,0 +1,109 @@
+//! End-to-end driver: train a GPT-mini LM, quantize it, EfQAT it.
+//!
+//!   cargo run --release --example lm_e2e -- [--steps 300] [--ratio 25]
+//!
+//! This is the repository's full-system validation (EXPERIMENTS.md §E2E):
+//!   1. pretrains gpt_mini (~3.5M params, decoder-only) on a generated
+//!      Markov corpus for a few hundred steps, logging the loss curve to
+//!      bench_out/lm_e2e_loss.csv
+//!   2. PTQ-quantizes to W8A8 and measures perplexity
+//!   3. runs an EfQAT-CWPN epoch at the requested ratio and compares
+//!      perplexity + backward time against the QAT artifact
+//! proving all three layers (rust coordinator, JAX graph, Pallas kernels)
+//! compose on a real training workload.
+
+use anyhow::Result;
+use efqat::cfg::Config;
+use efqat::coordinator::pipeline::{
+    artifacts_dir, fp_ckpt_path, load_fp_checkpoint, parse_bits, run_efqat_pipeline, train_cfg,
+};
+use efqat::coordinator::tasks::build_task;
+use efqat::coordinator::trainer::pretrain_fp;
+use efqat::coordinator::{evaluate, Session};
+use efqat::harness::{sparkline, Table};
+use efqat::model::{save_checkpoint, ParamStore, StateStore};
+
+fn main() -> Result<()> {
+    let mut cfg = Config::empty();
+    cfg.set("train.lr_w", "0.003");
+    cfg.set("train.lr_q", "1e-6");
+    cfg.set("data.train_tokens", "300000");
+    for c in std::env::args().skip(1).collect::<Vec<_>>().chunks(2) {
+        if let (Some(k), Some(v)) = (c[0].strip_prefix("--"), c.get(1)) {
+            cfg.set(k, v);
+        }
+    }
+    let max_steps = cfg.usize("steps", 300);
+    let ratio = cfg.usize("ratio", 25);
+    let bits = cfg.str("bits", "w8a8");
+
+    let session = Session::new(&artifacts_dir(&cfg))?;
+
+    // ---- 1. FP pretraining with loss-curve logging -----------------------
+    let step = session.steps.get("gpt_mini_fp_train")?;
+    let bs = step.manifest.batch_size;
+    let mut task = build_task("gpt_mini", bs, &cfg)?;
+    println!(
+        "[e2e] gpt_mini: {} params, batch {bs}, seq {}, {} steps",
+        step.manifest.params.iter().map(|p| p.shape.iter().product::<usize>()).sum::<usize>(),
+        cfg.usize("data.seq_len", 128),
+        max_steps
+    );
+
+    let fp_path = fp_ckpt_path(&cfg, "gpt_mini");
+    if !fp_path.exists() {
+        let mut params = ParamStore::init(&step.manifest, 0);
+        let mut states = StateStore::init(&step.manifest);
+        let tcfg = train_cfg(&cfg, "gpt_mini");
+        // run whole epochs until the step budget is covered
+        let steps_per_epoch = task.train.n_batches();
+        let epochs = max_steps.div_ceil(steps_per_epoch.max(1)).max(1);
+        let t0 = std::time::Instant::now();
+        let log2 = pretrain_fp(&step, &mut params, &mut states, &mut task.train, epochs, &tcfg)?;
+        let dt = t0.elapsed();
+        let losses = log2.losses();
+        println!(
+            "[e2e] pretrain: {} steps in {:.1}s ({:.2} s/step)\n      loss {:.3} -> {:.3}  {}",
+            losses.len(),
+            dt.as_secs_f64(),
+            dt.as_secs_f64() / losses.len().max(1) as f64,
+            losses.first().copied().unwrap_or(0.0),
+            log2.mean_loss_tail(10),
+            sparkline(&losses, 60)
+        );
+        log2.write_csv(std::path::Path::new("bench_out/lm_e2e_loss.csv"))?;
+        save_checkpoint(&fp_path, &[("params", &params.map), ("states", &states.map)])?;
+    }
+
+    // FP perplexity
+    let (params, states) = load_fp_checkpoint(&cfg, "gpt_mini")?;
+    let fwd_fp = session.steps.get("gpt_mini_fp_fwd")?;
+    let fp_eval = evaluate(&fwd_fp, &params, None, &states, &mut task.test)?;
+    println!("[e2e] FP perplexity {:.2} (loss {:.3})", fp_eval.perplexity(), fp_eval.loss);
+
+    // ---- 2+3. PTQ → EfQAT vs QAT -----------------------------------------
+    parse_bits(&bits)?;
+    let efq = run_efqat_pipeline(&session, &cfg, "gpt_mini", &bits, "cwpn", ratio)?;
+    let qat = run_efqat_pipeline(&session, &cfg, "gpt_mini", &bits, "qat", 100)?;
+
+    let mut t = Table::new(
+        &format!("gpt_mini {bits} end-to-end (token-acc %, backward time)"),
+        &["scheme", "token acc %", "step exec s", "speedup"],
+    );
+    t.row(&["PTQ".into(), format!("{:.2}", efq.ptq_headline), "-".into(), "-".into()]);
+    t.row(&[
+        format!("EfQAT-CWPN {ratio}%"),
+        format!("{:.2}", efq.efqat_headline),
+        format!("{:.2}", efq.exec_seconds),
+        format!("{:.2}x", qat.exec_seconds / efq.exec_seconds.max(1e-9)),
+    ]);
+    t.row(&[
+        "QAT".into(),
+        format!("{:.2}", qat.efqat_headline),
+        format!("{:.2}", qat.exec_seconds),
+        "1.00x".into(),
+    ]);
+    t.print();
+    t.write_csv(std::path::Path::new("bench_out/lm_e2e.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the whole EfQAT story on resnet8 / synth-CIFAR in ~a minute.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. pretrains a small FP checkpoint (paper's "FP")
+//! 2. PTQ-quantizes it with MinMax calibration (paper's "PTQ")
+//! 3. runs one EfQAT-CWPL epoch updating 25% of channels
+//! 4. compares against the QAT upper bound (100% updates)
+
+use anyhow::Result;
+use efqat::cfg::Config;
+use efqat::coordinator::pipeline::{ensure_fp_checkpoint, run_efqat_pipeline};
+use efqat::coordinator::Session;
+use efqat::harness::Table;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::empty();
+    cfg.set("data.train_n", "1024");
+    cfg.set("data.test_n", "512");
+    cfg.set("train.lr_w", "0.02");
+    cfg.set("train.epochs", "4");
+    cfg.set("ckpt_dir", "ckpts");
+    for (k, v) in std::env::args().skip(1).collect::<Vec<_>>().chunks(2).filter_map(|c| {
+        c[0].strip_prefix("--").zip(c.get(1))
+    }) {
+        cfg.set(k, v);
+    }
+
+    let session = Session::new(std::path::Path::new(&cfg.str("artifacts", "artifacts")))?;
+    ensure_fp_checkpoint(&session, &cfg, "resnet8", 4)?;
+
+    let efqat = run_efqat_pipeline(&session, &cfg, "resnet8", "w8a8", "cwpl", 25)?;
+    println!("{}\n", efqat.render());
+    let qat = run_efqat_pipeline(&session, &cfg, "resnet8", "w8a8", "qat", 100)?;
+
+    let mut t = Table::new(
+        "EfQAT quickstart — resnet8, W8A8 (cf. paper Table 1)",
+        &["scheme", "accuracy %", "step exec s", "speedup vs QAT"],
+    );
+    t.row(&[
+        "PTQ".into(),
+        format!("{:.2}", efqat.ptq_headline),
+        "0.00".into(),
+        "∞".into(),
+    ]);
+    t.row(&[
+        "EfQAT-CWPL 25%".into(),
+        format!("{:.2}", efqat.efqat_headline),
+        format!("{:.2}", efqat.exec_seconds),
+        format!("{:.2}x", qat.exec_seconds / efqat.exec_seconds.max(1e-9)),
+    ]);
+    t.row(&[
+        "QAT".into(),
+        format!("{:.2}", qat.efqat_headline),
+        format!("{:.2}", qat.exec_seconds),
+        "1.00x".into(),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Span-extraction QA with bert_tiny — the paper's SQuAD/BERT experiment.
+//!
+//!   cargo run --release --example squad_bert -- [--bits w8a8] [--ratio 25]
+//!
+//! Fine-tunes the FP encoder on synthetic span QA, quantizes with PTQ,
+//! then runs EfQAT modes and reports F1 (exactly Table 4's BERT block at
+//! repro scale).  Embeddings stay frozen during EfQAT, as in the paper.
+
+use anyhow::Result;
+use efqat::cfg::Config;
+use efqat::coordinator::pipeline::{artifacts_dir, ensure_fp_checkpoint, run_efqat_pipeline};
+use efqat::coordinator::Session;
+use efqat::harness::Table;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::empty();
+    cfg.set("train.lr_w", "0.003");
+    cfg.set("train.lr_q", "1e-6");
+    for c in std::env::args().skip(1).collect::<Vec<_>>().chunks(2) {
+        if let (Some(k), Some(v)) = (c[0].strip_prefix("--"), c.get(1)) {
+            cfg.set(k, v);
+        }
+    }
+    let bits = cfg.str("bits", "w8a8");
+    let ratio = cfg.usize("ratio", 25);
+
+    let session = Session::new(&artifacts_dir(&cfg))?;
+    ensure_fp_checkpoint(&session, &cfg, "bert_tiny", cfg.usize("train.epochs", 4))?;
+
+    let mut t = Table::new(
+        &format!("bert_tiny {bits} span-QA (F1, cf. paper Table 4)"),
+        &["scheme", "F1", "step exec s"],
+    );
+    let mut qat_exec = 0f64;
+    for mode in ["qat", "r0", "cwpl", "cwpn", "lwpn"] {
+        let s = run_efqat_pipeline(&session, &cfg, "bert_tiny", &bits, mode, ratio)?;
+        if mode == "qat" {
+            qat_exec = s.exec_seconds;
+            t.row(&["PTQ".into(), format!("{:.2}", s.ptq_headline), "-".into()]);
+        }
+        let label = match mode {
+            "qat" => "QAT (100%)".to_string(),
+            "r0" => "EfQAT 0% (qparams only)".to_string(),
+            m => format!("EfQAT-{} {ratio}%", m.to_uppercase()),
+        };
+        t.row(&[label, format!("{:.2}", s.efqat_headline), format!("{:.2}", s.exec_seconds)]);
+    }
+    t.print();
+    println!("(QAT exec {qat_exec:.2}s — EfQAT rows above show the backward saving)");
+    Ok(())
+}

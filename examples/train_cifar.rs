@@ -1,0 +1,36 @@
+//! Full CIFAR-style pipeline on resnet20 — reproduces one Table 4 cell.
+//!
+//!   cargo run --release --example train_cifar -- \
+//!       --bits w4a8 --mode cwpn --ratio 25 --train.freq 4096
+//!
+//! Accepts every config key the `efqat` CLI accepts.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use efqat::cfg::Config;
+use efqat::cli::Args;
+use efqat::coordinator::pipeline::{artifacts_dir, ensure_fp_checkpoint, run_efqat_pipeline};
+use efqat::coordinator::Session;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = Config::empty();
+    if !argv.is_empty() {
+        let mut padded = vec!["run".to_string()];
+        padded.extend(argv);
+        let args = Args::parse(&padded)?;
+        let over: BTreeMap<String, String> = args.options;
+        cfg.override_with(&over);
+    }
+    let model = cfg.str("model", "resnet20");
+    let bits = cfg.str("bits", "w4a8");
+    let mode = cfg.str("mode", "cwpn");
+    let ratio = cfg.usize("ratio", 25);
+
+    let session = Session::new(&artifacts_dir(&cfg))?;
+    ensure_fp_checkpoint(&session, &cfg, &model, cfg.usize("train.epochs", 6))?;
+    let summary = run_efqat_pipeline(&session, &cfg, &model, &bits, &mode, ratio)?;
+    println!("{}", summary.render());
+    Ok(())
+}

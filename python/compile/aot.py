@@ -1,0 +1,222 @@
+"""AOT compiler: lower every step function to HLO text + JSON manifest.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the published `xla` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per (model, bits):
+    <m>_fp_train                 FP baseline train step (bits-independent)
+    <m>_<bits>_fwd               eval forward
+    <m>_<bits>_calib             PTQ MinMax calibration forward
+    <m>_<bits>_train_r{0,5,10,25,50}   EfQAT ratio artifacts (static k)
+    <m>_<bits>_train_r100        the QAT baseline (full dW)
+    <m>_<bits>_train_lwpn        per-layer lax.cond flags (fully dynamic)
+
+Usage:  python -m compile.aot --out-dir ../artifacts \
+            [--models resnet20,bert_tiny] [--bits w8a8,w4a8] \
+            [--ratios 0,5,10,25,50,100] [--force] [--no-pallas]
+
+Existing artifacts are skipped unless --force, so `make artifacts` is an
+incremental no-op when nothing changed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models as model_zoo
+from . import step as step_mod
+from .quantization import QuantCfg
+from .specs import wsites
+
+DEFAULT_BITS = {
+    "resnet8": ["w8a8", "w4a8"],
+    "resnet20": ["w8a8", "w4a8", "w4a4"],
+    "resnet11b": ["w8a8", "w4a8", "w4a4"],
+    "bert_tiny": ["w8a8", "w4a8"],
+    "gpt_mini": ["w8a8", "w4a8"],
+}
+DEFAULT_RATIOS = [0, 5, 10, 25, 50, 100]
+
+
+def parse_bits(tag: str) -> QuantCfg:
+    # 'w4a8' -> QuantCfg(4, 8)
+    w, a = tag[1:].split("a")
+    return QuantCfg(int(w), int(a))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract_args(inputs):
+    return [
+        jax.ShapeDtypeStruct(s.shape, jnp.float32 if s.dtype == "f32" else jnp.int32)
+        for s in inputs
+    ]
+
+
+def write_artifact(out_dir, name, fn, inputs, outputs, meta, force=False):
+    hlo_path = os.path.join(out_dir, name + ".hlo.txt")
+    man_path = os.path.join(out_dir, name + ".manifest.json")
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path):
+        print(f"  [skip] {name}")
+        return False
+    t0 = time.time()
+    # keep_unused=True: manifest order IS the ABI — XLA must not DCE inputs
+    # that don't reach an output (e.g. fc.w in the calib artifact).
+    lowered = jax.jit(fn, keep_unused=True).lower(*_abstract_args(inputs))
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    manifest = dict(meta)
+    manifest["name"] = name
+    manifest["inputs"] = [s.to_json() for s in inputs]
+    manifest["outputs"] = [s.to_json() for s in outputs]
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  [ok]   {name}  ({len(text)//1024} KiB HLO, {time.time()-t0:.1f}s)")
+    return True
+
+
+def model_meta(model, batch_size, qc: QuantCfg | None, extra=None):
+    meta = {
+        "model": model.name,
+        "batch_size": batch_size,
+        "w_bits": qc.w_bits if qc else 0,
+        "a_bits": qc.a_bits if qc else 0,
+        "params": [
+            {
+                "name": p.name,
+                "shape": list(p.shape),
+                "init": list(p.init),
+                "kind": p.kind,
+            }
+            for p in model.params
+        ],
+        "states": [
+            {"name": s.name, "shape": list(s.shape), "init": s.init}
+            for s in model.states
+        ],
+        "wsites": [{"name": p.name, "c_out": p.c_out, "size": p.size} for p in wsites(model.params)],
+    }
+    if extra:
+        meta.update(extra)
+    return meta
+
+
+def compile_model(model_name, bits_tags, ratios, out_dir, force, use_pallas):
+    model = model_zoo.build(model_name)
+    bs = model_zoo.BATCH_SIZES[model_name]
+    mode = "kernel" if use_pallas else "ref"
+    print(f"[{model_name}] batch={bs} sites={len(wsites(model.params))} "
+          f"params={sum(p.size for p in model.params)}")
+
+    # FP train (baseline pretraining / FP+1) — bits-independent
+    qc_fp = QuantCfg(0, 0, mode=mode)
+    fn, ins, outs = step_mod.build_train(model, qc_fp, "fp", 1.0, bs)
+    write_artifact(
+        out_dir,
+        f"{model_name}_fp_train",
+        fn,
+        ins,
+        outs,
+        model_meta(model, bs, None, {"kind": "train", "sel_mode": "fp", "ratio": 1.0}),
+        force,
+    )
+    # FP eval
+    fn, ins, outs = step_mod.build_fwd(model, qc_fp, bs)
+    write_artifact(
+        out_dir,
+        f"{model_name}_fp_fwd",
+        fn,
+        ins,
+        outs,
+        model_meta(model, bs, None, {"kind": "fwd", "sel_mode": "fp"}),
+        force,
+    )
+    # calibration (FP forward + MinMax taps)
+    fn, ins, outs = step_mod.build_calib(model, bs)
+    write_artifact(
+        out_dir,
+        f"{model_name}_calib",
+        fn,
+        ins,
+        outs,
+        model_meta(model, bs, None, {"kind": "calib"}),
+        force,
+    )
+
+    for tag in bits_tags:
+        qc = parse_bits(tag)
+        qc = QuantCfg(qc.w_bits, qc.a_bits, mode=mode)
+        fn, ins, outs = step_mod.build_fwd(model, qc, bs)
+        write_artifact(
+            out_dir,
+            f"{model_name}_{tag}_fwd",
+            fn,
+            ins,
+            outs,
+            model_meta(model, bs, qc, {"kind": "fwd"}),
+            force,
+        )
+        for r in ratios:
+            fn, ins, outs = step_mod.build_train(model, qc, "ratio", r / 100.0, bs)
+            write_artifact(
+                out_dir,
+                f"{model_name}_{tag}_train_r{r}",
+                fn,
+                ins,
+                outs,
+                model_meta(
+                    model, bs, qc,
+                    {"kind": "train", "sel_mode": "ratio", "ratio": r / 100.0},
+                ),
+                force,
+            )
+        fn, ins, outs = step_mod.build_train(model, qc, "lwpn", 1.0, bs)
+        write_artifact(
+            out_dir,
+            f"{model_name}_{tag}_train_lwpn",
+            fn,
+            ins,
+            outs,
+            model_meta(model, bs, qc, {"kind": "train", "sel_mode": "lwpn", "ratio": 1.0}),
+            force,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="resnet8,resnet20,resnet11b,bert_tiny,gpt_mini")
+    ap.add_argument("--bits", default="")
+    ap.add_argument("--ratios", default=",".join(str(r) for r in DEFAULT_RATIOS))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    ratios = [int(r) for r in args.ratios.split(",") if r != ""]
+    t0 = time.time()
+    for m in args.models.split(","):
+        bits = args.bits.split(",") if args.bits else DEFAULT_BITS[m]
+        compile_model(m, bits, ratios, args.out_dir, args.force, not args.no_pallas)
+    print(f"total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

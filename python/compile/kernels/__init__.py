@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU) + pure-jnp oracles."""
+
+from .fake_quant import fq_asym_pertensor, fq_sym_perrow
+from .importance import row_abs_mean
+from .partial_dw import partial_dw
+from .qmatmul import int8_matmul
+
+__all__ = [
+    "fq_sym_perrow",
+    "fq_asym_pertensor",
+    "partial_dw",
+    "row_abs_mean",
+    "int8_matmul",
+]

@@ -1,0 +1,106 @@
+"""Pallas fake-quantization kernels (paper Eq. 1-4).
+
+Two kernels:
+  * fq_sym_perrow      — symmetric per-output-channel weight fake-quant
+  * fq_asym_pertensor  — asymmetric per-tensor activation fake-quant
+
+Both are tiled over row blocks so each grid step works on a
+[ROW_BLOCK, features] tile that fits VMEM on a real TPU; on this testbed
+they run via interpret=True, which lowers them to plain HLO the CPU PJRT
+client can execute (Mosaic custom-calls cannot run on CPU).
+
+TPU mapping (see DESIGN.md §2): the tile is a pure VPU elementwise job —
+one HBM→VMEM stream in, one out, no MXU involvement; ROW_BLOCK is chosen
+so tile_bytes = ROW_BLOCK * F * 4 ≤ 4 MiB, leaving VMEM headroom for
+double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import qrange_asym, qrange_sym
+
+# Default row tile: 8 rows keeps the tile < 4 MiB for feature dims up to
+# 128k, and divides every channel count used by the bundled models.
+ROW_BLOCK = 8
+
+
+def _fq_sym_kernel(w_ref, s_ref, o_ref, *, qmin: int, qmax: int):
+    w = w_ref[...]
+    s = s_ref[...][:, None]
+    q = jnp.clip(jnp.round(w / s), qmin, qmax)
+    o_ref[...] = q * s
+
+
+def fq_sym_perrow(w: jnp.ndarray, s: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quantize weights per output row: ŵ = clip(round(w/s))·s.
+
+    w: [C_out, ...] any trailing shape, s: [C_out].  Rows are processed in
+    ROW_BLOCK tiles; C_out is padded up to a multiple internally.
+    """
+    qmin, qmax = qrange_sym(bits)
+    orig_shape = w.shape
+    c_out = orig_shape[0]
+    w2 = w.reshape(c_out, -1)
+    feat = w2.shape[1]
+
+    pad = (-c_out) % ROW_BLOCK
+    if pad:
+        w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+        s = jnp.pad(s, (0, pad), constant_values=1.0)
+    rows = c_out + pad
+
+    out = pl.pallas_call(
+        functools.partial(_fq_sym_kernel, qmin=qmin, qmax=qmax),
+        grid=(rows // ROW_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, feat), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, feat), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), w.dtype),
+        interpret=True,
+    )(w2, s)
+    return out[:c_out].reshape(orig_shape)
+
+
+def _fq_asym_kernel(x_ref, s_ref, z_ref, o_ref, *, qmin: int, qmax: int):
+    x = x_ref[...]
+    s = s_ref[0]
+    zr = jnp.round(z_ref[0])
+    c = jnp.clip(jnp.round(x / s) + zr, qmin, qmax)
+    o_ref[...] = (c - zr) * s
+
+
+def fq_asym_pertensor(
+    x: jnp.ndarray, s: jnp.ndarray, z: jnp.ndarray, bits: int
+) -> jnp.ndarray:
+    """Fake-quantize activations per tensor (asymmetric, Eq. 1).
+
+    x: any shape, s/z: scalars (or shape-[1] arrays).
+    """
+    qmin, qmax = qrange_asym(bits)
+    orig_shape = x.shape
+    flat = x.reshape(1, -1)
+    n = flat.shape[1]
+    s1 = jnp.asarray(s, jnp.float32).reshape(1)
+    z1 = jnp.asarray(z, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_fq_asym_kernel, qmin=qmin, qmax=qmax),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=True,
+    )(flat, s1, z1)
+    return out.reshape(orig_shape)

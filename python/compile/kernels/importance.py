@@ -1,0 +1,44 @@
+"""Pallas kernel for channel importance (paper Eq. 6).
+
+    I_B = (1/n) Σ_{w ∈ B} |w|
+
+where a block B is one output channel (conv) / one row (linear). The
+coordinator recomputes importances every `f` samples (the paper's
+freezing frequency); at the rust layer the same reduction is implemented
+host-side — this kernel is the in-graph variant used by the importance
+artifact and by tests to cross-check the rust implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+
+
+def _row_abs_mean_kernel(w_ref, o_ref):
+    w = w_ref[...]
+    o_ref[...] = jnp.mean(jnp.abs(w), axis=1)
+
+
+def row_abs_mean(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-row mean absolute value. w: [C_out, ...] → [C_out] f32."""
+    c_out = w.shape[0]
+    w2 = w.reshape(c_out, -1).astype(jnp.float32)
+    feat = w2.shape[1]
+    pad = (-c_out) % ROW_BLOCK
+    if pad:
+        w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+    rows = c_out + pad
+
+    out = pl.pallas_call(
+        _row_abs_mean_kernel,
+        grid=(rows // ROW_BLOCK,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, feat), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(w2)
+    return out[:c_out]

@@ -1,0 +1,69 @@
+"""Pallas kernel for the paper's core backward op (Fig. 1 right).
+
+EfQAT only computes the weight gradient for the unfrozen output channels:
+
+    dW[id] = dY[:, id]^T @ X̂          (linear layer, Eq. 5 restricted)
+
+The kernel fuses the column gather of dY with the matmul so the frozen
+columns of dY are never copied: each grid step loads a ROW_BLOCK-wide
+slice of the *index* vector, gathers those columns of dY into a
+[B, ROW_BLOCK] tile, and contracts with the full X̂ tile on the MXU.
+
+TPU mapping (DESIGN.md §2): dY and X̂ stream HBM→VMEM once; the gathered
+[B, ROW_BLOCK] tile plus an [ROW_BLOCK, C_in] accumulator live in VMEM
+(< 2 MiB at BERT-base scale: B=16·seq=128 ⇒ 2048×16×4B + 16×768×4B).
+The contraction is a bf16-able [ROW_BLOCK, B] × [B, C_in] MXU matmul.
+On this testbed it runs via interpret=True.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of dW produced per grid step. 16 gathered columns per step keeps
+# the gather loop short while the [16, B]x[B, C_in] matmul saturates the
+# MXU for C_in >= 128.
+ROW_BLOCK = 16
+
+
+def _partial_dw_kernel(idx_ref, dy_ref, x_ref, o_ref):
+    dy = dy_ref[...]  # [B, C_out]
+    x = x_ref[...]  # [B, C_in]
+    # Gather ROW_BLOCK columns of dY by dynamic index. The python loop
+    # unrolls at trace time into ROW_BLOCK dynamic slices.
+    cols = [dy[:, idx_ref[i]] for i in range(ROW_BLOCK)]
+    g = jnp.stack(cols, axis=0)  # [ROW_BLOCK, B]
+    o_ref[...] = g @ x  # [ROW_BLOCK, C_in]
+
+
+def partial_dw(dy: jnp.ndarray, x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """dW[idx] = dy[:, idx]^T @ x, computed without materializing full dW.
+
+    dy: [B, C_out], x: [B, C_in], idx: [k] int32 → [k, C_in].
+    idx is padded internally to a multiple of ROW_BLOCK (padded rows are
+    computed redundantly and sliced off; the FLOP overhead is < ROW_BLOCK
+    rows).
+    """
+    b, c_out = dy.shape
+    _, c_in = x.shape
+    k = idx.shape[0]
+    pad = (-k) % ROW_BLOCK
+    if pad:
+        idx = jnp.concatenate([idx, jnp.broadcast_to(idx[-1:], (pad,))])
+    kp = k + pad
+
+    out = pl.pallas_call(
+        _partial_dw_kernel,
+        grid=(kp // ROW_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((b, c_out), lambda i: (0, 0)),
+            pl.BlockSpec((b, c_in), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, c_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, c_in), jnp.float32),
+        interpret=True,
+    )(idx.astype(jnp.int32), dy.astype(jnp.float32), x.astype(jnp.float32))
+    return out[:k]

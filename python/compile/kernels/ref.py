@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these references exactly (fp32 tolerance).
+
+The quantization math follows the paper's Eq. (1)-(4):
+  weights:     symmetric, per-channel (per output row), zero point = 0
+  activations: asymmetric, per-tensor, zero point Z_x
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qrange_sym(bits: int) -> tuple[int, int]:
+    """Symmetric signed integer range [-(2^{b-1}-1), 2^{b-1}-1] (Eq. 3)."""
+    m = 2 ** (bits - 1) - 1
+    return -m, m
+
+
+def qrange_asym(bits: int) -> tuple[int, int]:
+    """Asymmetric unsigned range [0, 2^b - 1] (Eq. 1)."""
+    return 0, 2**bits - 1
+
+
+def fq_sym_perrow_ref(w: jnp.ndarray, s: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quantize weights symmetrically per output row (Eq. 3).
+
+    w: [C_out, ...] (row = leading axis), s: [C_out].
+    Returns dequantized ŵ = clip(round(w/s), qmin, qmax) * s.
+    """
+    qmin, qmax = qrange_sym(bits)
+    s = s.reshape((w.shape[0],) + (1,) * (w.ndim - 1))
+    q = jnp.clip(jnp.round(w / s), qmin, qmax)
+    return q * s
+
+
+def fq_asym_pertensor_ref(
+    x: jnp.ndarray, s: jnp.ndarray, z: jnp.ndarray, bits: int
+) -> jnp.ndarray:
+    """Fake-quantize activations asymmetrically per tensor (Eq. 1).
+
+    x̂ = (clip(round(x/s) + round(z), 0, 2^b-1) - round(z)) * s
+    """
+    qmin, qmax = qrange_asym(bits)
+    zr = jnp.round(z)
+    c = jnp.clip(jnp.round(x / s) + zr, qmin, qmax)
+    return (c - zr) * s
+
+
+def partial_dw_ref(dy: jnp.ndarray, x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """The paper's Fig. 1 (right) backward op for a linear layer.
+
+    dy: [B, C_out] output gradient, x: [B, C_in] (quantized) input,
+    idx: [k] int32 unfrozen row ids.  Returns dW[idx] = dy[:, idx]^T @ x,
+    shape [k, C_in] — only the unfrozen rows are ever materialized.
+    """
+    return jnp.take(dy, idx, axis=1).T @ x
+
+
+def row_abs_mean_ref(w: jnp.ndarray) -> jnp.ndarray:
+    """Channel importance I_B = mean |w| over each output row (Eq. 6)."""
+    return jnp.mean(jnp.abs(w.reshape(w.shape[0], -1)), axis=1)
+
+
+def int8_matmul_ref(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    s_x: jnp.ndarray,
+    z_x: jnp.ndarray,
+    s_w: jnp.ndarray,
+) -> jnp.ndarray:
+    """Integer forward path: y = (xq - z_x) @ wq^T scaled back to fp32.
+
+    xq: [B, C_in] unsigned-domain codes, wq: [C_out, C_in] signed codes,
+    s_w: [C_out].  Accumulation in int32, dequantization in fp32 — this is
+    what real int8 inference hardware computes; used to verify that the
+    fake-quant training graph matches integer arithmetic bit-for-bit.
+    """
+    acc = (xq.astype(jnp.int32) - z_x.astype(jnp.int32)) @ wq.astype(jnp.int32).T
+    return acc.astype(jnp.float32) * (s_x * s_w)[None, :]

@@ -1,0 +1,378 @@
+"""Manual forward/backward layers for the EfQAT training graph.
+
+Why manual?  `jax.grad` always materializes the *full* weight gradient.
+EfQAT's contribution (paper Section 3.2, Fig. 1 right) is that the weight
+gradient matmul is only evaluated for the unfrozen output channels:
+
+    dX     = dY · Ŵ                      (always full — needed to propagate)
+    dW[id] = gather(dY, id)ᵀ · X̂          (only k = ⌈r·C_out⌉ rows)
+
+so every layer here exposes an explicit `*_fwd` (returning a residual
+cache) and `*_bwd` (consuming the cache plus a `Sel` describing which
+rows are unfrozen).  Each hand-written VJP is verified against `jax.vjp`
+of the same forward in python/tests/test_layers.py.
+
+Selection (`Sel`) variants map to the paper's modes:
+    all    — QAT baseline / FP training: full dW
+    idx    — EfQAT-CWPL / CWPN: static-k row indices (AOT shape)
+    flag   — EfQAT-LWPN: per-layer lax.cond; XLA `conditional` is lazy, so
+             a frozen layer's dW matmul is skipped *at runtime*
+    none   — the 0% case: no dW at all (only qparams/bias/norm train)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+from .kernels import ref
+from .quantization import QuantCfg, fq_act_bwd, fq_act_fwd, fq_weight_bwd, fq_weight_fwd
+
+
+@dataclasses.dataclass
+class Sel:
+    """Per-layer weight-gradient selection."""
+
+    kind: str  # 'all' | 'idx' | 'flag' | 'none'
+    idx: Optional[jnp.ndarray] = None  # [k] int32, kind == 'idx'
+    flag: Optional[jnp.ndarray] = None  # scalar int32, kind == 'flag'
+
+    @staticmethod
+    def all() -> "Sel":
+        return Sel("all")
+
+    @staticmethod
+    def none() -> "Sel":
+        return Sel("none")
+
+
+@dataclasses.dataclass
+class QGrads:
+    """Gradients produced by one quantized layer's backward."""
+
+    dw: Optional[jnp.ndarray] = None  # [k,...] ('idx') or full ('all'/'flag')
+    dsw: Optional[jnp.ndarray] = None  # [k] or [C_out]
+    db: Optional[jnp.ndarray] = None  # [C_out]
+    dsx: Optional[jnp.ndarray] = None  # scalar
+    dzx: Optional[jnp.ndarray] = None  # scalar
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear:  y = x̂ ŵᵀ + b
+# ---------------------------------------------------------------------------
+
+
+def qlinear_fwd(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    sx: jnp.ndarray,
+    zx: jnp.ndarray,
+    sw: jnp.ndarray,
+    qc: QuantCfg,
+) -> tuple[jnp.ndarray, Any]:
+    """x: [..., C_in], w: [C_out, C_in].  Leading dims are flattened."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if qc.enabled:
+        xh = fq_act_fwd(x2, sx, zx, qc)
+        wh = fq_weight_fwd(w, sw, qc)
+    else:
+        xh, wh = x2, w
+    y2 = xh @ wh.T
+    if b is not None:
+        y2 = y2 + b[None, :]
+    y = y2.reshape(lead + (w.shape[0],))
+    cache = (x2, xh, w, wh, sx, zx, sw, b is not None, lead)
+    return y, cache
+
+
+def _linear_dwhat(dy2, xh, sel):
+    """dŴ restricted by `sel`.  Returns (dwhat, row_params_extractor)."""
+    if sel.kind == "all":
+        return dy2.T @ xh, lambda a: a
+    if sel.kind == "idx":
+        dwp = kernels.partial_dw(dy2, xh, sel.idx)
+        return dwp, lambda a: jnp.take(a, sel.idx, axis=0)
+    if sel.kind == "flag":
+        dwhat = lax.cond(
+            sel.flag > 0,
+            lambda: dy2.T @ xh,
+            lambda: jnp.zeros((xh.shape[1], dy2.shape[1]), jnp.float32).T,
+        )
+        return dwhat, lambda a: a
+    return None, None
+
+
+def qlinear_bwd(
+    dy: jnp.ndarray, cache: Any, sel: Sel, qc: QuantCfg
+) -> tuple[jnp.ndarray, QGrads]:
+    x2, xh, w, wh, sx, zx, sw, has_b, lead = cache
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    g = QGrads()
+    if has_b:
+        g.db = jnp.sum(dy2, axis=0)
+
+    dxh = dy2 @ wh  # full input gradient — same as QAT (Eq. 5 first matmul)
+
+    if qc.enabled:
+        dwhat, take_rows = _linear_dwhat(dy2, xh, sel)
+        if dwhat is not None:
+            g.dw, g.dsw = fq_weight_bwd(take_rows(w), take_rows(sw), dwhat, qc)
+        dx2, g.dsx, g.dzx = fq_act_bwd(x2, sx, zx, dxh, qc)
+    else:
+        if sel.kind != "none":
+            g.dw = dy2.T @ xh
+        dx2 = dxh
+    return dx2.reshape(lead + (x2.shape[-1],)), g
+
+
+# ---------------------------------------------------------------------------
+# Quantized conv2d (NCHW / OIHW), stride s, symmetric padding p
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, stride, pad):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def _conv_dx(dy, wh, x_shape, stride, pad):
+    """Full input gradient via the VJP of the forward conv (exact, and
+    XLA CSEs the re-traced forward with the original one)."""
+    _, vjp = jax.vjp(lambda t: _conv(t, wh, stride, pad), jnp.zeros(x_shape, dy.dtype))
+    return vjp(dy)[0]
+
+
+def _conv_dw(x, dy, kh, stride, pad):
+    """Weight gradient as a conv: dW[o,i,u,v] = Σ_{n,p,q} dy[n,o,p,q]·
+    x[n,i,u+p·s-pad,v+q·s-pad].  `dy` may be channel-gathered (EfQAT):
+    its channel count determines the produced rows."""
+    h = x.shape[2]
+    ho = dy.shape[2]
+    pad_hi = kh - h - pad + (ho - 1) * stride
+    return lax.conv_general_dilated(
+        x,
+        dy,
+        window_strides=(1, 1),
+        padding=((pad, pad_hi), (pad, pad_hi)),
+        rhs_dilation=(stride, stride),
+        dimension_numbers=("CNHW", "IOHW", "CNHW"),
+    )
+
+
+def qconv_fwd(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    sx: jnp.ndarray,
+    zx: jnp.ndarray,
+    sw: jnp.ndarray,
+    qc: QuantCfg,
+    stride: int = 1,
+    pad: int = 1,
+) -> tuple[jnp.ndarray, Any]:
+    """x: [N, C_in, H, W], w: [C_out, C_in, kh, kw].  Bias-free (BN follows)."""
+    if qc.enabled:
+        xh = fq_act_fwd(x, sx, zx, qc)
+        wh = fq_weight_fwd(w, sw, qc)
+    else:
+        xh, wh = x, w
+    y = _conv(xh, wh, stride, pad)
+    cache = (x, xh, w, wh, sx, zx, sw, stride, pad)
+    return y, cache
+
+
+def qconv_bwd(
+    dy: jnp.ndarray, cache: Any, sel: Sel, qc: QuantCfg
+) -> tuple[jnp.ndarray, QGrads]:
+    x, xh, w, wh, sx, zx, sw, stride, pad = cache
+    kh = w.shape[2]
+    g = QGrads()
+
+    dxh = _conv_dx(dy, wh, x.shape, stride, pad)
+
+    def full_dwhat():
+        return _conv_dw(xh, dy, kh, stride, pad)
+
+    if qc.enabled:
+        if sel.kind == "all":
+            g.dw, g.dsw = fq_weight_bwd(w, sw, full_dwhat(), qc)
+        elif sel.kind == "idx":
+            dy_g = jnp.take(dy, sel.idx, axis=1)
+            dwhat = _conv_dw(xh, dy_g, kh, stride, pad)
+            w_g = jnp.take(w, sel.idx, axis=0)
+            s_g = jnp.take(sw, sel.idx, axis=0)
+            g.dw, g.dsw = fq_weight_bwd(w_g, s_g, dwhat, qc)
+        elif sel.kind == "flag":
+            zero = lambda: jnp.zeros(w.shape, jnp.float32)
+            dwhat = lax.cond(sel.flag > 0, full_dwhat, zero)
+            g.dw, g.dsw = fq_weight_bwd(w, sw, dwhat, qc)
+        dx, g.dsx, g.dzx = fq_act_bwd(x, sx, zx, dxh, qc)
+    else:
+        if sel.kind != "none":
+            g.dw = full_dwhat()
+        dx = dxh
+    return dx, g
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm2d (training mode, running-stat state threaded through)
+# ---------------------------------------------------------------------------
+
+BN_EPS = 1e-5
+
+
+def bn_fwd(x, gamma, beta, rmean, rvar, momentum=0.1, train=True):
+    """x: [N, C, H, W].  Returns (y, cache, new_rmean, new_rvar)."""
+    if train:
+        mu = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.var(x, axis=(0, 2, 3))
+        new_rmean = (1 - momentum) * rmean + momentum * mu
+        new_rvar = (1 - momentum) * rvar + momentum * var
+    else:
+        mu, var = rmean, rvar
+        new_rmean, new_rvar = rmean, rvar
+    inv = 1.0 / jnp.sqrt(var + BN_EPS)
+    xhat = (x - mu[None, :, None, None]) * inv[None, :, None, None]
+    y = gamma[None, :, None, None] * xhat + beta[None, :, None, None]
+    return y, (xhat, gamma, inv, x.shape), new_rmean, new_rvar
+
+
+def bn_bwd(dy, cache):
+    xhat, gamma, inv, shape = cache
+    n = shape[0] * shape[2] * shape[3]
+    dgamma = jnp.sum(dy * xhat, axis=(0, 2, 3))
+    dbeta = jnp.sum(dy, axis=(0, 2, 3))
+    gi = (gamma * inv)[None, :, None, None]
+    dx = gi * (
+        dy
+        - (dbeta / n)[None, :, None, None]
+        - xhat * (dgamma / n)[None, :, None, None]
+    )
+    return dx, dgamma, dbeta
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (last axis)
+# ---------------------------------------------------------------------------
+
+LN_EPS = 1e-5
+
+
+def ln_fwd(x, gamma, beta):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(var + LN_EPS)
+    xhat = (x - mu) * inv
+    return gamma * xhat + beta, (xhat, gamma, inv)
+
+
+def ln_bwd(dy, cache):
+    xhat, gamma, inv = cache
+    d = xhat.shape[-1]
+    dgamma = jnp.sum(dy * xhat, axis=tuple(range(dy.ndim - 1)))
+    dbeta = jnp.sum(dy, axis=tuple(range(dy.ndim - 1)))
+    dxhat = dy * gamma
+    dx = inv * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+    return dx, dgamma, dbeta
+
+
+# ---------------------------------------------------------------------------
+# Elementwise activations
+# ---------------------------------------------------------------------------
+
+
+def relu_fwd(x):
+    return jnp.maximum(x, 0.0), (x > 0)
+
+
+def relu_bwd(dy, cache):
+    return dy * cache
+
+
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def gelu_fwd(x):
+    inner = _GELU_C * (x + 0.044715 * x**3)
+    t = jnp.tanh(inner)
+    return 0.5 * x * (1.0 + t), (x, t)
+
+
+def gelu_bwd(dy, cache):
+    x, t = cache
+    dinner = _GELU_C * (1.0 + 3 * 0.044715 * x**2)
+    dydx = 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * dinner
+    return dy * dydx
+
+
+# ---------------------------------------------------------------------------
+# Pooling / softmax / losses
+# ---------------------------------------------------------------------------
+
+
+def global_avg_pool_fwd(x):
+    """[N, C, H, W] → [N, C]"""
+    return jnp.mean(x, axis=(2, 3)), x.shape
+
+
+def global_avg_pool_bwd(dy, shape):
+    n, c, h, w = shape
+    return jnp.broadcast_to(dy[:, :, None, None], shape) / (h * w)
+
+
+def softmax_fwd(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    return p, p
+
+
+def softmax_bwd(dy, p):
+    return p * (dy - jnp.sum(dy * p, axis=-1, keepdims=True))
+
+
+def ce_loss_fwd(logits, labels):
+    """Mean softmax cross-entropy.  logits: [B, C], labels: [B] int32.
+    Returns (loss, correct_count, cache)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    sh = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(sh), axis=-1)) + m[:, 0]
+    nll = lse - jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    loss = jnp.mean(nll)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+    return loss, correct, (logits, labels, lse)
+
+
+def ce_loss_bwd(cache, scale=1.0):
+    logits, labels, lse = cache
+    b, c = logits.shape
+    p = jnp.exp(logits - lse[:, None])
+    onehot = jax.nn.one_hot(labels, c, dtype=logits.dtype)
+    return (p - onehot) * (scale / b)
+
+
+def embedding_fwd(table, ids):
+    """table: [V, D], ids: [...] int32 → [..., D]"""
+    return jnp.take(table, ids, axis=0), (table.shape, ids)
+
+
+def embedding_bwd(dy, cache):
+    shape, ids = cache
+    flat_ids = ids.reshape(-1)
+    flat_dy = dy.reshape(-1, shape[1])
+    return jnp.zeros(shape, dy.dtype).at[flat_ids].add(flat_dy)

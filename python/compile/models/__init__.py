@@ -1,0 +1,47 @@
+"""Model registry.
+
+Maps the paper's benchmarks to this testbed (DESIGN.md §3):
+  resnet20   — CIFAR-10 / ResNet-20 (faithful architecture)
+  resnet8    — quickstart-scale variant of the same family
+  resnet11b  — bottleneck net on a 100-class task (ResNet-50/ImageNet stand-in)
+  bert_tiny  — span-QA encoder (BERT-base/SQuAD stand-in)
+  gpt_mini   — decoder LM for the end-to-end example
+"""
+
+from __future__ import annotations
+
+from .bert import BertTiny
+from .gpt import GptMini
+from .resnet import ResNet
+
+# Per-model training batch size baked into the AOT artifacts.
+BATCH_SIZES = {
+    "resnet8": 32,
+    "resnet20": 32,
+    "resnet11b": 16,
+    "bert_tiny": 16,
+    "gpt_mini": 8,
+}
+
+
+def build(name: str):
+    if name == "resnet8":
+        return ResNet("resnet8", blocks=(1, 1, 1))
+    if name == "resnet20":
+        return ResNet("resnet20", blocks=(3, 3, 3))
+    if name == "resnet11b":
+        return ResNet(
+            "resnet11b",
+            blocks=(1, 1, 1),
+            widths=(32, 64, 128),
+            num_classes=100,
+            bottleneck=True,
+        )
+    if name == "bert_tiny":
+        return BertTiny()
+    if name == "gpt_mini":
+        return GptMini()
+    raise KeyError(f"unknown model {name!r}")
+
+
+ALL_MODELS = ["resnet8", "resnet20", "resnet11b", "bert_tiny", "gpt_mini"]

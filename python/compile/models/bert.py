@@ -1,0 +1,125 @@
+"""BERT-tiny encoder for span-extraction QA (the paper's SQuAD stand-in).
+
+Post-LN encoder (Devlin et al.): per layer
+    h = LN(x + MHA(x));  y = LN(h + FFN(h))
+with a 2-output QA head producing start/end logits.  Loss is the mean of
+start- and end-position cross-entropy, exactly the SQuAD v1.1 training
+objective; the rust coordinator computes token-overlap F1 from the
+logits (paper's metric).
+
+Embeddings (token + position) are fp32 and receive gradients only in FP
+mode — the paper does not update them during EfQAT.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..quantization import QuantCfg
+from ..specs import BatchSpec, ParamSpec, StateSpec
+from . import transformer_common as T
+
+
+class BertTiny:
+    def __init__(
+        self,
+        name: str = "bert_tiny",
+        n_layers: int = 4,
+        d_model: int = 128,
+        n_heads: int = 4,
+        d_ff: int = 512,
+        vocab: int = 1024,
+        seq_len: int = 64,
+    ):
+        self.name = name
+        self.n_layers = n_layers
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.params, self.states = self._build_specs()
+
+    def _build_specs(self):
+        d, ff = self.d_model, self.d_ff
+        params: list[ParamSpec] = [
+            ParamSpec("emb.tok", (self.vocab, d), ("normal", 0.02), "embed"),
+            ParamSpec("emb.pos", (self.seq_len, d), ("normal", 0.02), "embed"),
+        ]
+        params += T.ln_specs("emb.ln", d)
+        for i in range(self.n_layers):
+            pre = f"l{i}"
+            for proj in ("q", "k", "v", "o"):
+                params += T.lin_specs(f"{pre}.att.{proj}", d, d)
+            params += T.ln_specs(f"{pre}.ln1", d)
+            params += T.lin_specs(f"{pre}.ff1", ff, d)
+            params += T.lin_specs(f"{pre}.ff2", d, ff)
+            params += T.ln_specs(f"{pre}.ln2", d)
+        params += T.lin_specs("qa", 2, d)
+        return params, []
+
+    def batch_specs(self, batch_size: int) -> list[BatchSpec]:
+        return [
+            BatchSpec("x", (batch_size, self.seq_len), "i32"),
+            BatchSpec("y_start", (batch_size,), "i32"),
+            BatchSpec("y_end", (batch_size,), "i32"),
+        ]
+
+    def forward(self, P, Q, S, batch, train, qc: QuantCfg, tap=None):
+        caches: dict = {}
+        ctx = (P, Q, qc, caches, tap)
+        ids = batch["x"]
+        b, t = ids.shape
+
+        tok, ce = L.embedding_fwd(P["emb.tok"], ids)
+        caches["emb"] = ce
+        h = tok + P["emb.pos"][None, :t]
+        h = T.ln_fwd(ctx, "emb.ln", h)
+
+        for i in range(self.n_layers):
+            pre = f"l{i}"
+            a = T.mha_fwd(ctx, f"{pre}.att", h, self.n_heads, causal=False)
+            h = T.ln_fwd(ctx, f"{pre}.ln1", h + a)
+            f1 = T.qlin_fwd(ctx, f"{pre}.ff1", h)
+            g, cg = L.gelu_fwd(f1)
+            caches[f"{pre}.gelu"] = cg
+            f2 = T.qlin_fwd(ctx, f"{pre}.ff2", g)
+            h = T.ln_fwd(ctx, f"{pre}.ln2", h + f2)
+
+        logits = T.qlin_fwd(ctx, "qa", h)  # [B, T, 2]
+        start_logits = logits[:, :, 0]
+        end_logits = logits[:, :, 1]
+        loss_s, corr_s, cs = L.ce_loss_fwd(start_logits, batch["y_start"])
+        loss_e, corr_e, cend = L.ce_loss_fwd(end_logits, batch["y_end"])
+        caches["ce"] = (cs, cend)
+        loss = 0.5 * (loss_s + loss_e)
+        em = jnp.sum(
+            (jnp.argmax(start_logits, -1) == batch["y_start"])
+            & (jnp.argmax(end_logits, -1) == batch["y_end"])
+        ).astype(jnp.int32)
+        return loss, {"correct": em, "logits": logits}, caches, dict(S)
+
+    def backward(self, P, Q, caches, sels, qc: QuantCfg):
+        grads: dict = {}
+        bctx = (P, Q, sels, qc, caches, grads)
+        cs, cend = caches["ce"]
+        dls = L.ce_loss_bwd(cs, scale=0.5)
+        dle = L.ce_loss_bwd(cend, scale=0.5)
+        dlogits = jnp.stack([dls, dle], axis=-1)  # [B, T, 2]
+
+        dh = T.qlin_bwd(bctx, "qa", dlogits)
+        for i in reversed(range(self.n_layers)):
+            pre = f"l{i}"
+            dh = T.ln_bwd(bctx, f"{pre}.ln2", dh)
+            df2 = T.qlin_bwd(bctx, f"{pre}.ff2", dh)
+            dg = L.gelu_bwd(df2, caches[f"{pre}.gelu"])
+            dh = dh + T.qlin_bwd(bctx, f"{pre}.ff1", dg)
+            dh = T.ln_bwd(bctx, f"{pre}.ln1", dh)
+            da = T.mha_bwd(bctx, f"{pre}.att", dh)
+            dh = dh + da
+        dh = T.ln_bwd(bctx, "emb.ln", dh)
+        if not qc.enabled:  # FP pretraining also trains the embeddings
+            grads["emb.tok"] = L.embedding_bwd(dh, caches["emb"])
+            grads["emb.pos"] = jnp.sum(dh, axis=0)
+        return grads

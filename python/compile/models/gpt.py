@@ -1,0 +1,115 @@
+"""GPT-mini: pre-LN decoder-only LM used by the end-to-end example.
+
+Causal transformer (GPT-2 style):
+    x = x + MHA(LN(x), causal);  x = x + FFN(LN(x));  logits = head(LN(x))
+Next-token cross-entropy loss over [B, T].  The output head is a
+quantized, channel-freezable weight site like every other linear layer;
+embeddings are fp32 (trained only in FP mode).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..quantization import QuantCfg
+from ..specs import BatchSpec, ParamSpec, StateSpec
+from . import transformer_common as T
+
+
+class GptMini:
+    def __init__(
+        self,
+        name: str = "gpt_mini",
+        n_layers: int = 4,
+        d_model: int = 256,
+        n_heads: int = 4,
+        d_ff: int = 1024,
+        vocab: int = 512,
+        seq_len: int = 128,
+    ):
+        self.name = name
+        self.n_layers = n_layers
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.params, self.states = self._build_specs()
+
+    def _build_specs(self):
+        d, ff = self.d_model, self.d_ff
+        params: list[ParamSpec] = [
+            ParamSpec("emb.tok", (self.vocab, d), ("normal", 0.02), "embed"),
+            ParamSpec("emb.pos", (self.seq_len, d), ("normal", 0.02), "embed"),
+        ]
+        for i in range(self.n_layers):
+            pre = f"l{i}"
+            params += T.ln_specs(f"{pre}.ln1", d)
+            for proj in ("q", "k", "v", "o"):
+                params += T.lin_specs(f"{pre}.att.{proj}", d, d)
+            params += T.ln_specs(f"{pre}.ln2", d)
+            params += T.lin_specs(f"{pre}.ff1", ff, d)
+            params += T.lin_specs(f"{pre}.ff2", d, ff)
+        params += T.ln_specs("lnf", d)
+        params += T.lin_specs("head", self.vocab, d)
+        return params, []
+
+    def batch_specs(self, batch_size: int) -> list[BatchSpec]:
+        return [
+            BatchSpec("x", (batch_size, self.seq_len), "i32"),
+            BatchSpec("y", (batch_size, self.seq_len), "i32"),
+        ]
+
+    def forward(self, P, Q, S, batch, train, qc: QuantCfg, tap=None):
+        caches: dict = {}
+        ctx = (P, Q, qc, caches, tap)
+        ids = batch["x"]
+        b, t = ids.shape
+
+        tok, ce = L.embedding_fwd(P["emb.tok"], ids)
+        caches["emb"] = ce
+        h = tok + P["emb.pos"][None, :t]
+
+        for i in range(self.n_layers):
+            pre = f"l{i}"
+            n1 = T.ln_fwd(ctx, f"{pre}.ln1", h)
+            a = T.mha_fwd(ctx, f"{pre}.att", n1, self.n_heads, causal=True)
+            h = h + a
+            n2 = T.ln_fwd(ctx, f"{pre}.ln2", h)
+            f1 = T.qlin_fwd(ctx, f"{pre}.ff1", n2)
+            g, cg = L.gelu_fwd(f1)
+            caches[f"{pre}.gelu"] = cg
+            f2 = T.qlin_fwd(ctx, f"{pre}.ff2", g)
+            h = h + f2
+
+        hf = T.ln_fwd(ctx, "lnf", h)
+        logits = T.qlin_fwd(ctx, "head", hf)  # [B, T, V]
+        flat = logits.reshape(b * t, self.vocab)
+        labels = batch["y"].reshape(b * t)
+        loss, correct, cce = L.ce_loss_fwd(flat, labels)
+        caches["ce"] = cce
+        caches["bt"] = (b, t)
+        return loss, {"correct": correct, "logits": logits}, caches, dict(S)
+
+    def backward(self, P, Q, caches, sels, qc: QuantCfg):
+        grads: dict = {}
+        bctx = (P, Q, sels, qc, caches, grads)
+        b, t = caches["bt"]
+        dflat = L.ce_loss_bwd(caches["ce"])
+        dlogits = dflat.reshape(b, t, self.vocab)
+
+        dhf = T.qlin_bwd(bctx, "head", dlogits)
+        dh = T.ln_bwd(bctx, "lnf", dhf)
+        for i in reversed(range(self.n_layers)):
+            pre = f"l{i}"
+            df2 = T.qlin_bwd(bctx, f"{pre}.ff2", dh)
+            dg = L.gelu_bwd(df2, caches[f"{pre}.gelu"])
+            dn2 = T.qlin_bwd(bctx, f"{pre}.ff1", dg)
+            dh = dh + T.ln_bwd(bctx, f"{pre}.ln2", dn2)
+            da = T.mha_bwd(bctx, f"{pre}.att", dh)
+            dh = dh + T.ln_bwd(bctx, f"{pre}.ln1", da)
+        if not qc.enabled:
+            grads["emb.tok"] = L.embedding_bwd(dh, caches["emb"])
+            grads["emb.pos"] = jnp.sum(dh, axis=0)
+        return grads

@@ -1,0 +1,269 @@
+"""CIFAR-style ResNets with manual forward/backward (He et al., 2016).
+
+Two families, matching the paper's CNN benchmarks:
+
+  * basic-block ResNet (resnet8 / resnet20): 3 stages of n blocks,
+    widths (16, 32, 64), depth = 6n+2 — the paper's CIFAR-10 network.
+  * bottleneck ResNet (resnet11b): 1x1 → 3x3 → 1x1(×4) blocks — the
+    stand-in for the paper's ResNet-50/ImageNet experiment (see
+    DESIGN.md §3 substitutions).
+
+Every conv (stem, both/all block convs, and the 1x1 shortcut convs) is a
+quantized weight site, as in the paper ("we quantize all convolutions
+and linear layers, including the input, output, and shortcut layers").
+BN and the final FC bias always train during EfQAT.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..quantization import QuantCfg
+from ..specs import BatchSpec, ParamSpec, StateSpec
+
+
+def _he_conv(name, c_out, c_in, k):
+    fan = c_in * k * k
+    return ParamSpec(name, (c_out, c_in, k, k), ("he_conv", fan), "weight")
+
+
+class ResNet:
+    """Manual-backprop ResNet.
+
+    blocks: tuple of per-stage block counts; widths: per-stage output
+    channels (pre-expansion); bottleneck: use 1-3-1 bottleneck blocks
+    with expansion 4.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        blocks=(3, 3, 3),
+        widths=(16, 32, 64),
+        num_classes: int = 10,
+        image_hw: int = 32,
+        bottleneck: bool = False,
+    ):
+        self.name = name
+        self.blocks = blocks
+        self.widths = widths
+        self.num_classes = num_classes
+        self.image_hw = image_hw
+        self.bottleneck = bottleneck
+        self.expansion = 4 if bottleneck else 1
+        self.params, self.states = self._build_specs()
+
+    # -- specs ---------------------------------------------------------
+
+    def _bn_specs(self, name, c):
+        return (
+            [
+                ParamSpec(f"{name}.g", (c,), ("ones",), "norm"),
+                ParamSpec(f"{name}.b", (c,), ("zeros",), "norm"),
+            ],
+            [
+                StateSpec(f"{name}.rm", (c,), "zeros"),
+                StateSpec(f"{name}.rv", (c,), "ones"),
+            ],
+        )
+
+    def _build_specs(self):
+        params: list[ParamSpec] = []
+        states: list[StateSpec] = []
+        w0 = self.widths[0]
+        params.append(_he_conv("stem.conv", w0, 3, 3))
+        p, s = self._bn_specs("stem.conv.bn", w0)
+        params += p
+        states += s
+
+        c_in = w0
+        for si, (n, w) in enumerate(zip(self.blocks, self.widths)):
+            c_out = w * self.expansion
+            for bi in range(n):
+                pre = f"s{si}.b{bi}"
+                stride = 2 if (si > 0 and bi == 0) else 1
+                if self.bottleneck:
+                    convs = [
+                        (f"{pre}.c1", w, c_in, 1),
+                        (f"{pre}.c2", w, w, 3),
+                        (f"{pre}.c3", c_out, w, 1),
+                    ]
+                else:
+                    convs = [
+                        (f"{pre}.c1", w, c_in, 3),
+                        (f"{pre}.c2", c_out, w, 3),
+                    ]
+                for cname, co, ci, k in convs:
+                    params.append(_he_conv(cname, co, ci, k))
+                    p, s = self._bn_specs(cname + ".bn", co)
+                    params += p
+                    states += s
+                if stride != 1 or c_in != c_out:
+                    params.append(_he_conv(f"{pre}.sc", c_out, c_in, 1))
+                    p, s = self._bn_specs(f"{pre}.sc.bn", c_out)
+                    params += p
+                    states += s
+                c_in = c_out
+
+        params.append(
+            ParamSpec("fc.w", (self.num_classes, c_in), ("he_lin", c_in), "weight")
+        )
+        params.append(ParamSpec("fc.b", (self.num_classes,), ("zeros",), "bias"))
+        return params, states
+
+    def batch_specs(self, batch_size: int) -> list[BatchSpec]:
+        hw = self.image_hw
+        return [
+            BatchSpec("x", (batch_size, 3, hw, hw), "f32"),
+            BatchSpec("y", (batch_size,), "i32"),
+        ]
+
+    # -- forward/backward ----------------------------------------------
+
+    def _conv_bn_relu(
+        self, ctx, name, x, stride, pad, train, relu=True
+    ) -> jnp.ndarray:
+        P, Q, S, qc, caches, newS, tap = ctx
+        if tap:
+            tap(name, x)
+        if qc.enabled:
+            y, cc = L.qconv_fwd(
+                x,
+                P[name],
+                Q[f"sx:{name}"],
+                Q[f"zx:{name}"],
+                Q[f"sw:{name}"],
+                qc,
+                stride=stride,
+                pad=pad,
+            )
+        else:
+            y = L._conv(x, P[name], stride, pad)
+            cc = (x, x, P[name], P[name], None, None, None, stride, pad)
+        bn = name + ".bn"
+        y, cb, nrm, nrv = L.bn_fwd(y, P[bn + ".g"], P[bn + ".b"], S[bn + ".rm"], S[bn + ".rv"], train=train)
+        newS[bn + ".rm"], newS[bn + ".rv"] = nrm, nrv
+        mask = None
+        if relu:
+            y, mask = L.relu_fwd(y)
+        caches[name] = (cc, cb, mask)
+        return y
+
+    def _conv_bn_bwd(self, ctx, name, dy, relu=True):
+        P, Q, sels, qc, caches, grads = ctx
+        cc, cb, mask = caches[name]
+        if relu:
+            dy = L.relu_bwd(dy, mask)
+        dy, dg, db = L.bn_bwd(dy, cb)
+        bn = name + ".bn"
+        grads[bn + ".g"], grads[bn + ".b"] = dg, db
+        if qc.enabled:
+            dx, g = L.qconv_bwd(dy, cc, sels[name], qc)
+            if g.dw is not None:
+                grads[name], grads[f"sw:{name}"] = g.dw, g.dsw
+            grads[f"sx:{name}"], grads[f"zx:{name}"] = g.dsx, g.dzx
+        else:
+            x, xh, w, wh, _, _, _, stride, pad = cc
+            dx = L._conv_dx(dy, wh, x.shape, stride, pad)
+            if sels[name].kind != "none":
+                grads[name] = L._conv_dw(xh, dy, w.shape[2], stride, pad)
+        return dx
+
+    def forward(self, P, Q, S, batch, train, qc: QuantCfg, tap=None):
+        """Returns (loss, metrics, caches, new_state)."""
+        caches: dict = {}
+        newS: dict = dict(S)
+        ctx = (P, Q, S, qc, caches, newS, tap)
+        x = batch["x"]
+
+        h = self._conv_bn_relu(ctx, "stem.conv", x, 1, 1, train)
+        c_in = self.widths[0]
+        for si, (n, w) in enumerate(zip(self.blocks, self.widths)):
+            c_out = w * self.expansion
+            for bi in range(n):
+                pre = f"s{si}.b{bi}"
+                stride = 2 if (si > 0 and bi == 0) else 1
+                ident = h
+                if self.bottleneck:
+                    h1 = self._conv_bn_relu(ctx, f"{pre}.c1", h, 1, 0, train)
+                    h2 = self._conv_bn_relu(ctx, f"{pre}.c2", h1, stride, 1, train)
+                    h3 = self._conv_bn_relu(ctx, f"{pre}.c3", h2, 1, 0, train, relu=False)
+                else:
+                    h1 = self._conv_bn_relu(ctx, f"{pre}.c1", h, stride, 1, train)
+                    h3 = self._conv_bn_relu(ctx, f"{pre}.c2", h1, 1, 1, train, relu=False)
+                if stride != 1 or c_in != c_out:
+                    sc = self._conv_bn_relu(ctx, f"{pre}.sc", ident, stride, 0, train, relu=False)
+                else:
+                    sc = ident
+                    caches[f"{pre}.nosc"] = True
+                h, rmask = L.relu_fwd(h3 + sc)
+                caches[f"{pre}.relu"] = rmask
+                c_in = c_out
+
+        pooled, pshape = L.global_avg_pool_fwd(h)
+        caches["pool"] = pshape
+        if tap:
+            tap("fc.w", pooled)
+        if qc.enabled:
+            logits, cfc = L.qlinear_fwd(
+                pooled, P["fc.w"], P["fc.b"], Q["sx:fc.w"], Q["zx:fc.w"], Q["sw:fc.w"], qc
+            )
+        else:
+            logits = pooled @ P["fc.w"].T + P["fc.b"][None, :]
+            cfc = (pooled, pooled)
+        caches["fc"] = cfc
+        loss, correct, cce = L.ce_loss_fwd(logits, batch["y"])
+        caches["ce"] = cce
+        return loss, {"correct": correct, "logits": logits}, caches, newS
+
+    def backward(self, P, Q, caches, sels, qc: QuantCfg):
+        grads: dict = {}
+        ctx = (P, Q, sels, qc, caches, grads)
+        dlogits = L.ce_loss_bwd(caches["ce"])
+
+        if qc.enabled:
+            dpool, g = L.qlinear_bwd(dlogits, caches["fc"], sels["fc.w"], qc)
+            if g.dw is not None:
+                grads["fc.w"], grads["sw:fc.w"] = g.dw, g.dsw
+            grads["fc.b"] = g.db
+            grads["sx:fc.w"], grads["zx:fc.w"] = g.dsx, g.dzx
+        else:
+            pooled, _ = caches["fc"]
+            dpool = dlogits @ P["fc.w"]
+            if sels["fc.w"].kind != "none":
+                grads["fc.w"] = dlogits.T @ pooled
+            grads["fc.b"] = jnp.sum(dlogits, axis=0)
+
+        dh = L.global_avg_pool_bwd(dpool, caches["pool"])
+
+        c_outs = []
+        c_in = self.widths[0]
+        plan = []
+        for si, (n, w) in enumerate(zip(self.blocks, self.widths)):
+            c_out = w * self.expansion
+            for bi in range(n):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                plan.append((si, bi, stride, c_in, c_out))
+                c_in = c_out
+
+        for si, bi, stride, ci, co in reversed(plan):
+            pre = f"s{si}.b{bi}"
+            dh = L.relu_bwd(dh, caches[f"{pre}.relu"])
+            if f"{pre}.nosc" in caches:
+                dident = dh
+            else:
+                dident = self._conv_bn_bwd(ctx, f"{pre}.sc", dh, relu=False)
+            if self.bottleneck:
+                d3 = self._conv_bn_bwd(ctx, f"{pre}.c3", dh, relu=False)
+                d2 = self._conv_bn_bwd(ctx, f"{pre}.c2", d3)
+                dmain = self._conv_bn_bwd(ctx, f"{pre}.c1", d2)
+            else:
+                d2 = self._conv_bn_bwd(ctx, f"{pre}.c2", dh, relu=False)
+                dmain = self._conv_bn_bwd(ctx, f"{pre}.c1", d2)
+            dh = dmain + dident
+
+        self._conv_bn_bwd(ctx, "stem.conv", dh)
+        return grads

@@ -1,0 +1,135 @@
+"""Shared manual-backprop transformer pieces (BERT-tiny / GPT-mini).
+
+All linear projections (Q, K, V, O, FFN up/down, heads) are quantized
+weight sites — matching the paper's BERT setup where every linear layer
+is quantized and channel-freezable, while embeddings stay fp32 and are
+not updated during EfQAT.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..quantization import QuantCfg
+from ..specs import ParamSpec, StateSpec
+
+
+def lin_specs(name: str, d_out: int, d_in: int) -> list[ParamSpec]:
+    return [
+        ParamSpec(f"{name}.w", (d_out, d_in), ("he_lin", d_in), "weight"),
+        ParamSpec(f"{name}.b", (d_out,), ("zeros",), "bias"),
+    ]
+
+
+def ln_specs(name: str, d: int) -> list[ParamSpec]:
+    return [
+        ParamSpec(f"{name}.g", (d,), ("ones",), "norm"),
+        ParamSpec(f"{name}.b", (d,), ("zeros",), "norm"),
+    ]
+
+
+# ctx = (P, Q, qc, caches, tap)  for fwd
+# bctx = (P, Q, sels, qc, caches, grads)  for bwd
+
+
+def qlin_fwd(ctx, name, x):
+    P, Q, qc, caches, tap = ctx
+    w, b = P[f"{name}.w"], P[f"{name}.b"]
+    if tap:
+        tap(f"{name}.w", x)
+    if qc.enabled:
+        y, cc = L.qlinear_fwd(
+            x, w, b, Q[f"sx:{name}.w"], Q[f"zx:{name}.w"], Q[f"sw:{name}.w"], qc
+        )
+    else:
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = (x2 @ w.T + b[None, :]).reshape(lead + (w.shape[0],))
+        cc = (x2, x2, w, w, None, None, None, True, lead)
+    caches[name] = cc
+    return y
+
+
+def qlin_bwd(bctx, name, dy):
+    P, Q, sels, qc, caches, grads = bctx
+    cc = caches[name]
+    pname = f"{name}.w"
+    if qc.enabled:
+        dx, g = L.qlinear_bwd(dy, cc, sels[pname], qc)
+        if g.dw is not None:
+            grads[pname], grads[f"sw:{pname}"] = g.dw, g.dsw
+        grads[f"{name}.b"] = g.db
+        grads[f"sx:{pname}"], grads[f"zx:{pname}"] = g.dsx, g.dzx
+    else:
+        x2, xh, w, wh, _, _, _, _, lead = cc
+        dy2 = dy.reshape(-1, dy.shape[-1])
+        dx = (dy2 @ w).reshape(lead + (x2.shape[-1],))
+        if sels[pname].kind != "none":
+            grads[pname] = dy2.T @ x2
+        grads[f"{name}.b"] = jnp.sum(dy2, axis=0)
+    return dx
+
+
+def ln_fwd(ctx, name, x):
+    P, Q, qc, caches, tap = ctx
+    y, c = L.ln_fwd(x, P[f"{name}.g"], P[f"{name}.b"])
+    caches[name] = c
+    return y
+
+
+def ln_bwd(bctx, name, dy):
+    P, Q, sels, qc, caches, grads = bctx
+    dx, dg, db = L.ln_bwd(dy, caches[name])
+    grads[f"{name}.g"], grads[f"{name}.b"] = dg, db
+    return dx
+
+
+def mha_fwd(ctx, name, x, n_heads: int, causal: bool):
+    """Multi-head self-attention.  x: [B, T, D]."""
+    P, Q, qc, caches, tap = ctx
+    b, t, d = x.shape
+    dh = d // n_heads
+    alpha = 1.0 / math.sqrt(dh)
+
+    q = qlin_fwd(ctx, f"{name}.q", x)
+    k = qlin_fwd(ctx, f"{name}.k", x)
+    v = qlin_fwd(ctx, f"{name}.v", x)
+
+    def split(a):  # [B,T,D] -> [B,H,T,dh]
+        return a.reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    s = jnp.einsum("bhtd,bhsd->bhts", qh, kh) * alpha
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask[None, None], s, -1e9)
+    p, _ = L.softmax_fwd(s)
+    o = jnp.einsum("bhts,bhsd->bhtd", p, vh)  # [B,H,T,dh]
+    om = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    out = qlin_fwd(ctx, f"{name}.o", om)
+    caches[f"{name}.attn"] = (qh, kh, vh, p, alpha, (b, t, d, n_heads, dh))
+    return out
+
+
+def mha_bwd(bctx, name, dout):
+    P, Q, sels, qc, caches, grads = bctx
+    qh, kh, vh, p, alpha, (b, t, d, n_heads, dh) = caches[f"{name}.attn"]
+
+    dom = qlin_bwd(bctx, f"{name}.o", dout)
+    do = dom.reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+    dp = jnp.einsum("bhtd,bhsd->bhts", do, vh)
+    dv = jnp.einsum("bhts,bhtd->bhsd", p, do)
+    ds = L.softmax_bwd(dp, p) * alpha
+    dq = jnp.einsum("bhts,bhsd->bhtd", ds, kh)
+    dk = jnp.einsum("bhts,bhtd->bhsd", ds, qh)
+
+    def merge(a):  # [B,H,T,dh] -> [B,T,D]
+        return a.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+    dx = qlin_bwd(bctx, f"{name}.q", merge(dq))
+    dx = dx + qlin_bwd(bctx, f"{name}.k", merge(dk))
+    dx = dx + qlin_bwd(bctx, f"{name}.v", merge(dv))
+    return dx

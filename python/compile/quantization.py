@@ -1,0 +1,167 @@
+"""Fake-quantization forward/backward with STE + LSQ-style gradients.
+
+This module implements the differentiable quantizers the paper trains
+with (Section 3.1 + Section 4 "we use STE to approximate the gradient of
+the rounding function"):
+
+  weights      symmetric, per-output-channel scale S_w (Eq. 3/4), Z_w = 0
+  activations  asymmetric, per-tensor scale S_x and zero point Z_x (Eq. 1/2)
+
+Backward rules (w.r.t. a downstream gradient g = ∂L/∂x̂):
+
+  STE on round():     ∂x̂/∂x = 1 inside the clip range, 0 outside
+  LSQ scale grad:     ∂x̂/∂s = round(x/s) - x/s   (in range)
+                              clip boundary code  (out of range)
+  LSQ+ zero point:    ∂x̂/∂z = 0 (in range) / -s (out of range)
+
+The *forward* dequantized values come from the Pallas kernels
+(kernels.fq_sym_perrow / fq_asym_pertensor) when `QuantCfg.use_pallas`
+is set, otherwise from the pure-jnp oracle; both are bit-identical (see
+python/tests/test_kernels.py). Backward formulas are plain jnp — they
+are cheap elementwise ops fused by XLA into the surrounding graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCfg:
+    """Static quantization configuration for a model build.
+
+    w_bits/a_bits of 0 disable quantization entirely (the FP path used to
+    pretrain baselines).
+    """
+
+    w_bits: int = 8
+    a_bits: int = 8
+    # forward quantizer implementation: 'kernel' (Pallas), 'ref' (pure jnp),
+    # 'ste' (stop_gradient construction — differentiable, used as the
+    # jax.grad oracle in tests)
+    mode: str = "kernel"
+
+    @property
+    def enabled(self) -> bool:
+        return self.w_bits > 0
+
+    @property
+    def tag(self) -> str:
+        return "fp" if not self.enabled else f"w{self.w_bits}a{self.a_bits}"
+
+
+# ---------------------------------------------------------------------------
+# STE-differentiable reference quantizers (test oracles).
+#
+# jax.vjp of the plain forward is useless as an oracle: round() has zero
+# gradient a.e.  These encode the STE/LSQ rules via stop_gradient so that
+# jax.vjp of *these* yields exactly the gradients the manual backward
+# (fq_weight_bwd / fq_act_bwd) must produce.  Used only by tests.
+# ---------------------------------------------------------------------------
+
+
+def fq_weight_ste(w: jnp.ndarray, s: jnp.ndarray, bits: int) -> jnp.ndarray:
+    from jax import lax
+
+    qmin, qmax = ref.qrange_sym(bits)
+    sb = s.reshape((w.shape[0],) + (1,) * (w.ndim - 1))
+    v = w / sb
+    vb = jnp.clip(v, qmin, qmax)
+    q = vb + lax.stop_gradient(jnp.round(vb) - vb)
+    return q * sb
+
+
+def fq_act_ste(
+    x: jnp.ndarray, s: jnp.ndarray, z: jnp.ndarray, bits: int
+) -> jnp.ndarray:
+    from jax import lax
+
+    qmin, qmax = ref.qrange_asym(bits)
+    v = x / s
+    zr = z + lax.stop_gradient(jnp.round(z) - z)
+    t = jnp.clip(v + zr, qmin, qmax) - zr
+    c = jnp.clip(jnp.round(v) + jnp.round(z), qmin, qmax)
+    return s * (t + lax.stop_gradient((c - jnp.round(z)) - t))
+
+
+# ---------------------------------------------------------------------------
+# Weights: symmetric per-row
+# ---------------------------------------------------------------------------
+
+
+def fq_weight_fwd(w: jnp.ndarray, s: jnp.ndarray, qc: QuantCfg) -> jnp.ndarray:
+    """ŵ = clip(round(w/s))·s per output row. w: [C_out, ...], s: [C_out]."""
+    if qc.mode == "kernel":
+        return kernels.fq_sym_perrow(w, s, qc.w_bits)
+    if qc.mode == "ste":
+        return fq_weight_ste(w, s, qc.w_bits)
+    return ref.fq_sym_perrow_ref(w, s, qc.w_bits)
+
+
+def fq_weight_bwd(
+    w: jnp.ndarray, s: jnp.ndarray, dwhat: jnp.ndarray, qc: QuantCfg
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Backward of the weight fake-quantizer for *the given rows only*.
+
+    `w`, `s`, `dwhat` must already be restricted to the unfrozen rows
+    (shape [k, ...] / [k]); dW and dS_w never exist for frozen rows, which
+    is exactly the EfQAT compute saving.
+    Returns (dw [k, ...], ds [k]).
+    """
+    qmin, qmax = ref.qrange_sym(qc.w_bits)
+    sb = s.reshape((w.shape[0],) + (1,) * (w.ndim - 1))
+    v = w / sb
+    q = jnp.clip(jnp.round(v), qmin, qmax)
+    in_range = (v >= qmin) & (v <= qmax)
+    dw = dwhat * in_range
+    # LSQ: ∂ŵ/∂s = q - v in range, q (= clip boundary) outside.
+    ds_elem = dwhat * jnp.where(in_range, q - v, q)
+    ds = jnp.sum(ds_elem.reshape(w.shape[0], -1), axis=1)
+    return dw, ds
+
+
+# ---------------------------------------------------------------------------
+# Activations: asymmetric per-tensor
+# ---------------------------------------------------------------------------
+
+
+def fq_act_fwd(
+    x: jnp.ndarray, s: jnp.ndarray, z: jnp.ndarray, qc: QuantCfg
+) -> jnp.ndarray:
+    """x̂ = (clip(round(x/s)+round(z), 0, 2^b-1) - round(z))·s."""
+    if qc.mode == "kernel":
+        return kernels.fq_asym_pertensor(x, s, z, qc.a_bits)
+    if qc.mode == "ste":
+        return fq_act_ste(x, s, z, qc.a_bits)
+    return ref.fq_asym_pertensor_ref(x, s, z, qc.a_bits)
+
+
+def fq_act_bwd(
+    x: jnp.ndarray,
+    s: jnp.ndarray,
+    z: jnp.ndarray,
+    dxhat: jnp.ndarray,
+    qc: QuantCfg,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Backward of the activation fake-quantizer.
+
+    Returns (dx [like x], ds scalar, dz scalar).
+    """
+    qmin, qmax = ref.qrange_asym(qc.a_bits)
+    v = x / s
+    zr = jnp.round(z)
+    # LSQ+ convention: the pass-through mask is evaluated on the
+    # *continuous* code v + z, not the rounded one.
+    in_range = (v + zr >= qmin) & (v + zr <= qmax)
+    c = jnp.clip(jnp.round(v) + zr, qmin, qmax)
+    dx = dxhat * in_range
+    # in range: ∂x̂/∂s = (c - z) - v,  ∂x̂/∂z = 0
+    # clipped:  ∂x̂/∂s = (c - z),      ∂x̂/∂z = -s
+    ds = jnp.sum(dxhat * ((c - zr) - jnp.where(in_range, v, 0.0)))
+    dz = jnp.sum(dxhat * jnp.where(in_range, 0.0, -s))
+    return dx, ds, dz

@@ -1,0 +1,68 @@
+"""Model/parameter/state specs shared by models, aot.py and the manifest.
+
+Everything the rust coordinator needs to own the training state is
+declared here: parameter names, shapes, initializer recipes, which
+parameters are quantized weights (and therefore freezable channel-wise),
+and the per-model list of weight sites in a stable order.  aot.py
+serializes these into the artifact manifest; rust binds literals by
+manifest order, so the specs are the single source of truth for the
+cross-language ABI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One trainable tensor.
+
+    kind:
+      weight     conv/linear weight — quantized (per-row S_w), freezable
+      bias       linear bias — always trained during EfQAT
+      norm       BN/LN gamma+beta — always trained during EfQAT
+      embed      embedding table — trained only in FP mode (paper §4)
+    init: ("he_conv", fan_in) | ("he_lin", fan_in) | ("normal", std)
+          | ("zeros",) | ("ones",) | ("uniform", lo, hi)
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    init: tuple
+    kind: str
+
+    @property
+    def c_out(self) -> int:
+        return self.shape[0]
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpec:
+    """Non-trainable state threaded through the train step (BN stats)."""
+
+    name: str
+    shape: tuple[int, ...]
+    init: str  # 'zeros' | 'ones'
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    """One data input of the step function."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str  # 'f32' | 'i32'
+
+
+def wsites(params: list[ParamSpec]) -> list[ParamSpec]:
+    """Quantized/freezable weight sites in declaration order."""
+    return [p for p in params if p.kind == "weight"]

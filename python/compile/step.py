@@ -1,0 +1,272 @@
+"""Step-function builders: the cross-language ABI of the system.
+
+Each builder returns a pure jax function plus the ordered input/output
+`IOSpec` lists that aot.py serializes into the artifact manifest.  The
+rust coordinator packs literals in manifest order, executes the compiled
+HLO, and unpacks outputs by manifest order — these lists ARE the
+contract.
+
+Step kinds:
+  train  — one EfQAT/QAT/FP training step: forward + manual backward.
+           Selection plumbing per weight site:
+             fp     no quantization, full dW everywhere (baseline pretraining)
+             ratio  r=0: no dW; 0<r<1: per-site index vector id[k];
+                    r=1: full dW (the QAT baseline)
+             lwpn   per-site i32 flag, lax.cond skips the dW matmul at runtime
+  fwd    — evaluation forward (BN in inference mode), returns loss/metric/logits
+  calib  — FP forward that records per-site activation (min,max) for PTQ
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from .layers import Sel
+from .quantization import QuantCfg
+from .specs import ParamSpec, wsites
+
+
+@dataclasses.dataclass(frozen=True)
+class IOSpec:
+    name: str
+    shape: tuple[int, ...]
+    dtype: str  # 'f32' | 'i32'
+    role: str
+    of: Optional[str] = None  # grad/state/calib target
+
+    def to_json(self) -> dict:
+        d = {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "role": self.role,
+        }
+        if self.of is not None:
+            d["of"] = self.of
+        return d
+
+
+def site_k(c_out: int, ratio: float) -> int:
+    """Static gradient-slot count per site: k = max(1, ⌊r·C_out⌋) (Eq. 7/8;
+    the max(1,·) keeps tiny layers trainable at r=5%, see DESIGN.md §3)."""
+    if ratio >= 1.0:
+        return c_out
+    return max(1, int(ratio * c_out))
+
+
+def _np_dtype(d):
+    return jnp.float32 if d == "f32" else jnp.int32
+
+
+def _param_inputs(model) -> list[IOSpec]:
+    return [IOSpec(p.name, p.shape, "f32", "param") for p in model.params]
+
+
+def _qparam_inputs(model) -> list[IOSpec]:
+    out = []
+    for p in wsites(model.params):
+        out.append(IOSpec(f"sw:{p.name}", (p.c_out,), "f32", "qparam_sw", of=p.name))
+        out.append(IOSpec(f"sx:{p.name}", (1,), "f32", "qparam_sx", of=p.name))
+        out.append(IOSpec(f"zx:{p.name}", (1,), "f32", "qparam_zx", of=p.name))
+    return out
+
+
+def _state_inputs(model) -> list[IOSpec]:
+    return [IOSpec(s.name, s.shape, "f32", "state") for s in model.states]
+
+
+def _data_inputs(model, batch_size) -> list[IOSpec]:
+    return [
+        IOSpec(b.name, b.shape, b.dtype, "data") for b in model.batch_specs(batch_size)
+    ]
+
+
+def _unpack(args, specs_groups):
+    """Split the flat positional args tuple by spec groups into dicts."""
+    out = []
+    i = 0
+    for specs in specs_groups:
+        d = {}
+        for s in specs:
+            d[s.name] = args[i]
+            i += 1
+        out.append(d)
+    assert i == len(args)
+    return out
+
+
+def build_train(
+    model, qc: QuantCfg, sel_mode: str, ratio: float, batch_size: int
+) -> tuple[Callable, list[IOSpec], list[IOSpec]]:
+    """sel_mode: 'fp' | 'ratio' | 'lwpn'."""
+    sites = wsites(model.params)
+    fp = sel_mode == "fp"
+    if fp:
+        qc = QuantCfg(0, 0, mode=qc.mode)
+
+    in_params = _param_inputs(model)
+    in_qp = [] if fp else _qparam_inputs(model)
+    in_state = _state_inputs(model)
+    in_data = _data_inputs(model, batch_size)
+    in_sel: list[IOSpec] = []
+    if sel_mode == "ratio" and 0.0 < ratio < 1.0:
+        for p in sites:
+            k = site_k(p.c_out, ratio)
+            in_sel.append(IOSpec(f"id:{p.name}", (k,), "i32", "index", of=p.name))
+    elif sel_mode == "lwpn":
+        for p in sites:
+            in_sel.append(IOSpec(f"flag:{p.name}", (1,), "i32", "flag", of=p.name))
+    inputs = in_params + in_qp + in_state + in_data + in_sel
+
+    # ---- probe the model once (abstractly at lower time) to learn which
+    # grads/outputs exist; outputs are then fixed in manifest order.
+    def make_sels(sel_args):
+        sels = {}
+        for p in sites:
+            if fp or (sel_mode == "ratio" and ratio >= 1.0):
+                sels[p.name] = Sel.all()
+            elif sel_mode == "ratio" and ratio <= 0.0:
+                sels[p.name] = Sel.none()
+            elif sel_mode == "ratio":
+                sels[p.name] = Sel("idx", idx=sel_args[f"id:{p.name}"])
+            else:
+                sels[p.name] = Sel("flag", flag=sel_args[f"flag:{p.name}"][0])
+        return sels
+
+    def run(args):
+        P, Q, S, B, SA = _unpack(args, [in_params, in_qp, in_state, in_data, in_sel])
+        Q = {k: (v if k.startswith("sw:") else v[0]) for k, v in Q.items()}
+        loss, metrics, caches, newS = model.forward(P, Q, S, B, True, qc)
+        grads = model.backward(P, Q, caches, make_sels(SA), qc)
+        return loss, metrics, grads, newS
+
+    # figure out output presence with a cheap abstract evaluation
+    import jax
+
+    probe_args = [
+        jnp.zeros(s.shape, _np_dtype(s.dtype))
+        if s.dtype == "f32"
+        else jnp.zeros(s.shape, jnp.int32)
+        for s in inputs
+    ]
+    # scales must be nonzero to avoid div-by-zero during probing
+    probe_args = [
+        jnp.ones(s.shape, jnp.float32) if s.role in ("qparam_sw", "qparam_sx") else a
+        for s, a in zip(inputs, probe_args)
+    ]
+    probe = jax.eval_shape(lambda *a: run(a), *probe_args)
+    _, _, probe_grads, probe_state = probe
+
+    outputs: list[IOSpec] = [
+        IOSpec("loss", (1,), "f32", "loss"),
+        IOSpec("correct", (1,), "i32", "metric"),
+    ]
+    grad_order: list[str] = []
+    for p in model.params:
+        if p.name in probe_grads:
+            outputs.append(
+                IOSpec(f"d:{p.name}", tuple(probe_grads[p.name].shape), "f32", "grad", of=p.name)
+            )
+            grad_order.append(p.name)
+    if not fp:
+        for p in sites:
+            for pref in ("sw:", "sx:", "zx:"):
+                key = f"{pref}{p.name}"
+                if key in probe_grads:
+                    shp = tuple(probe_grads[key].shape) or (1,)
+                    outputs.append(IOSpec(f"d:{key}", shp, "f32", "grad", of=key))
+                    grad_order.append(key)
+    state_order = [s.name for s in model.states]
+    for s in model.states:
+        outputs.append(IOSpec(f"new:{s.name}", s.shape, "f32", "state", of=s.name))
+
+    def fn(*args):
+        loss, metrics, grads, newS = run(args)
+        outs = [loss.reshape(1), metrics["correct"].reshape(1).astype(jnp.int32)]
+        for name in grad_order:
+            g = grads[name]
+            outs.append(g.reshape((1,)) if g.ndim == 0 else g)
+        for name in state_order:
+            outs.append(newS[name])
+        return tuple(outs)
+
+    return fn, inputs, outputs
+
+
+def build_fwd(
+    model, qc: QuantCfg, batch_size: int
+) -> tuple[Callable, list[IOSpec], list[IOSpec]]:
+    """Evaluation forward (BN inference mode). Also used for QAT-mode eval."""
+    fp = not qc.enabled
+    in_params = _param_inputs(model)
+    in_qp = [] if fp else _qparam_inputs(model)
+    in_state = _state_inputs(model)
+    in_data = _data_inputs(model, batch_size)
+    inputs = in_params + in_qp + in_state + in_data
+
+    import jax
+
+    def run(args):
+        P, Q, S, B = _unpack(args, [in_params, in_qp, in_state, in_data])
+        Q = {k: (v if k.startswith("sw:") else v[0]) for k, v in Q.items()}
+        loss, metrics, _, _ = model.forward(P, Q, S, B, False, qc)
+        return loss, metrics
+
+    probe_args = [
+        jnp.ones(s.shape, jnp.float32)
+        if s.dtype == "f32"
+        else jnp.zeros(s.shape, jnp.int32)
+        for s in inputs
+    ]
+    probe_loss, probe_metrics = jax.eval_shape(lambda *a: run(a), *probe_args)
+    outputs = [
+        IOSpec("loss", (1,), "f32", "loss"),
+        IOSpec("correct", (1,), "i32", "metric"),
+        IOSpec("logits", tuple(probe_metrics["logits"].shape), "f32", "logits"),
+    ]
+
+    def fn(*args):
+        loss, metrics = run(args)
+        return (
+            loss.reshape(1),
+            metrics["correct"].reshape(1).astype(jnp.int32),
+            metrics["logits"],
+        )
+
+    return fn, inputs, outputs
+
+
+def build_calib(
+    model, batch_size: int
+) -> tuple[Callable, list[IOSpec], list[IOSpec]]:
+    """FP forward recording per-site activation (min,max) — the MinMax
+    observer of the paper's PTQ baseline, evaluated on the calibration set."""
+    sites = wsites(model.params)
+    in_params = _param_inputs(model)
+    in_state = _state_inputs(model)
+    in_data = [s for s in _data_inputs(model, batch_size) if s.name == "x"]
+    inputs = in_params + in_state + in_data
+    qc = QuantCfg(0, 0)
+
+    label_specs = [b for b in model.batch_specs(batch_size) if b.name != "x"]
+
+    outputs = [
+        IOSpec(f"mm:{p.name}", (2,), "f32", "calib", of=p.name) for p in sites
+    ]
+
+    def fn(*args):
+        P, S, B = _unpack(args, [in_params, in_state, in_data])
+        for ls in label_specs:  # dummy labels, unused by the taps
+            B[ls.name] = jnp.zeros(ls.shape, jnp.int32)
+        mm = {}
+
+        def tap(site, x):
+            mm[site] = jnp.stack([jnp.min(x), jnp.max(x)])
+
+        model.forward(P, {}, S, B, False, qc, tap=tap)
+        return tuple(mm[p.name] for p in sites)
+
+    return fn, inputs, outputs

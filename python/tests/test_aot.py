@@ -1,0 +1,89 @@
+"""AOT pipeline tests: manifest/HLO emission and ABI invariants."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, models as zoo, step as step_mod
+from compile.quantization import QuantCfg
+from compile.specs import wsites
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.compile_model("resnet8", ["w8a8"], [25], out, force=False, use_pallas=True)
+    return out
+
+
+def test_manifest_and_hlo_emitted(tiny_artifacts):
+    names = [
+        "resnet8_fp_train",
+        "resnet8_fp_fwd",
+        "resnet8_calib",
+        "resnet8_w8a8_fwd",
+        "resnet8_w8a8_train_r25",
+        "resnet8_w8a8_train_lwpn",
+    ]
+    for n in names:
+        assert os.path.exists(os.path.join(tiny_artifacts, n + ".hlo.txt")), n
+        man = json.load(open(os.path.join(tiny_artifacts, n + ".manifest.json")))
+        assert man["name"] == n
+        assert man["inputs"] and man["outputs"]
+
+
+def test_hlo_parameter_count_matches_manifest(tiny_artifacts):
+    """keep_unused=True: the HLO entry computation must declare exactly the
+    manifest's inputs — XLA DCE of unused params would break the rust ABI."""
+    for n in ["resnet8_calib", "resnet8_w8a8_train_r25"]:
+        man = json.load(open(os.path.join(tiny_artifacts, n + ".manifest.json")))
+        hlo = open(os.path.join(tiny_artifacts, n + ".hlo.txt")).read()
+        entry = hlo.split("ENTRY")[1]
+        n_params = entry.count("parameter(")
+        assert n_params == len(man["inputs"]), n
+
+
+def test_train_manifest_roles(tiny_artifacts):
+    man = json.load(open(os.path.join(tiny_artifacts, "resnet8_w8a8_train_r25.manifest.json")))
+    roles = {i["role"] for i in man["inputs"]}
+    assert {"param", "qparam_sw", "qparam_sx", "qparam_zx", "state", "data", "index"} <= roles
+    out_roles = {o["role"] for o in man["outputs"]}
+    assert {"loss", "metric", "grad", "state"} <= out_roles
+    # index slot counts match site_k
+    for i in man["inputs"]:
+        if i["role"] == "index":
+            site = next(w for w in man["wsites"] if w["name"] == i["of"])
+            assert i["shape"][0] == step_mod.site_k(site["c_out"], 0.25)
+
+
+def test_grad_outputs_restricted_to_k_rows(tiny_artifacts):
+    man = json.load(open(os.path.join(tiny_artifacts, "resnet8_w8a8_train_r25.manifest.json")))
+    for o in man["outputs"]:
+        if o["role"] == "grad" and not o["of"].startswith(("sw:", "sx:", "zx:")):
+            site = next((w for w in man["wsites"] if w["name"] == o["of"]), None)
+            if site is not None:  # weight site — partial grad
+                assert o["shape"][0] == step_mod.site_k(site["c_out"], 0.25), o["of"]
+
+
+def test_lwpn_has_flags_and_full_grads(tiny_artifacts):
+    man = json.load(open(os.path.join(tiny_artifacts, "resnet8_w8a8_train_lwpn.manifest.json")))
+    flags = [i for i in man["inputs"] if i["role"] == "flag"]
+    assert len(flags) == len(man["wsites"])
+    for o in man["outputs"]:
+        if o["role"] == "grad":
+            site = next((w for w in man["wsites"] if w["name"] == o["of"]), None)
+            if site is not None:
+                assert o["shape"][0] == site["c_out"]
+
+
+def test_site_k_rule():
+    assert step_mod.site_k(16, 0.05) == 1
+    assert step_mod.site_k(64, 0.25) == 16
+    assert step_mod.site_k(64, 1.0) == 64
+
+
+def test_skip_existing_artifacts(tiny_artifacts, capsys):
+    aot.compile_model("resnet8", ["w8a8"], [25], tiny_artifacts, force=False, use_pallas=True)
+    out = capsys.readouterr().out
+    assert "[skip]" in out and "[ok]" not in out

@@ -1,0 +1,131 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, bit-widths and scale magnitudes; every
+kernel must match its ref.py oracle to fp32 tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+S = settings(max_examples=10, deadline=None)
+
+
+def farr(rng, shape, scale=1.0):
+    return jnp.array((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+@S
+@given(
+    rows=st.integers(1, 40),
+    feat=st.integers(1, 65),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fq_sym_perrow_matches_ref(rows, feat, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = farr(rng, (rows, feat))
+    s = jnp.array(rng.uniform(1e-3, 0.5, rows).astype(np.float32))
+    got = kernels.fq_sym_perrow(w, s, bits)
+    want = ref.fq_sym_perrow_ref(w, s, bits)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@S
+@given(
+    ndim=st.integers(1, 4),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fq_asym_pertensor_matches_ref(ndim, bits, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 6, ndim))
+    x = farr(rng, shape, scale=2.0)
+    s = jnp.float32(rng.uniform(1e-3, 0.3))
+    z = jnp.float32(rng.uniform(-10, 200))
+    got = kernels.fq_asym_pertensor(x, s, z, bits)
+    want = ref.fq_asym_pertensor_ref(x, s, z, bits)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@S
+@given(
+    b=st.integers(1, 17),
+    c_out=st.integers(1, 50),
+    c_in=st.integers(1, 33),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_partial_dw_matches_ref(b, c_out, c_in, seed):
+    rng = np.random.default_rng(seed)
+    dy = farr(rng, (b, c_out))
+    x = farr(rng, (b, c_in))
+    k = int(rng.integers(1, c_out + 1))
+    idx = jnp.array(rng.choice(c_out, size=k, replace=False).astype(np.int32))
+    got = kernels.partial_dw(dy, x, idx)
+    want = ref.partial_dw_ref(dy, x, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_partial_dw_never_materializes_frozen_rows():
+    # output shape is [k, C_in] — the frozen rows simply do not exist
+    rng = np.random.default_rng(0)
+    dy, x = farr(rng, (8, 64)), farr(rng, (8, 32))
+    idx = jnp.array([5, 2], dtype=jnp.int32)
+    assert kernels.partial_dw(dy, x, idx).shape == (2, 32)
+
+
+@S
+@given(
+    rows=st.integers(1, 30),
+    ndim=st.integers(2, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_abs_mean_matches_ref(rows, ndim, seed):
+    rng = np.random.default_rng(seed)
+    shape = (rows,) + tuple(rng.integers(1, 5, ndim - 1))
+    w = farr(rng, shape)
+    np.testing.assert_allclose(
+        kernels.row_abs_mean(w), ref.row_abs_mean_ref(w), rtol=1e-6
+    )
+
+
+@S
+@given(
+    b=st.integers(1, 9),
+    c_in=st.integers(1, 20),
+    c_out=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_matmul_matches_ref(b, c_in, c_out, seed):
+    rng = np.random.default_rng(seed)
+    xq = jnp.array(rng.integers(0, 256, (b, c_in)), dtype=jnp.int32)
+    wq = jnp.array(rng.integers(-127, 128, (c_out, c_in)), dtype=jnp.int32)
+    sx = jnp.float32(rng.uniform(1e-3, 0.1))
+    zx = jnp.float32(rng.integers(0, 255))
+    sw = jnp.array(rng.uniform(1e-3, 0.1, c_out).astype(np.float32))
+    got = kernels.int8_matmul(xq, wq, sx, zx, sw)
+    want = ref.int8_matmul_ref(xq, wq, sx, zx, sw)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_int8_matmul_equals_fakequant_matmul():
+    """Integer arithmetic == fake-quant fp32 arithmetic (train/deploy gap)."""
+    rng = np.random.default_rng(7)
+    b, c_in, c_out, bits = 4, 16, 8, 8
+    x = farr(rng, (b, c_in))
+    w = farr(rng, (c_out, c_in))
+    sx = jnp.float32(0.05)
+    zx = jnp.float32(round(float(rng.uniform(50, 200))))
+    sw = jnp.array(rng.uniform(0.01, 0.05, c_out).astype(np.float32))
+    # quantize to codes
+    xq = jnp.clip(jnp.round(x / sx) + zx, 0, 255)
+    wq = jnp.clip(jnp.round(w / sw[:, None]), -127, 127)
+    y_int = kernels.int8_matmul(xq, wq, sx, zx, sw)
+    xh = ref.fq_asym_pertensor_ref(x, sx, zx, bits)
+    wh = ref.fq_sym_perrow_ref(w, sw, bits)
+    y_fq = xh @ wh.T
+    np.testing.assert_allclose(y_int, y_fq, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,212 @@
+"""Manual layer VJPs vs jax.vjp of STE-differentiable forwards."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import layers as L
+from compile.quantization import QuantCfg, fq_act_ste, fq_weight_ste
+
+QC = QuantCfg(8, 8, mode="ref")
+RNG = np.random.default_rng(42)
+
+
+def f32(*shape, scale=1.0):
+    return jnp.array((RNG.standard_normal(shape) * scale).astype(np.float32))
+
+
+def ste_linear(x, w, b, sx, zx, sw, qc):
+    xh = fq_act_ste(x, sx, zx, qc.a_bits)
+    wh = fq_weight_ste(w, sw, qc.w_bits)
+    y = xh @ wh.T
+    return y + b[None, :] if b is not None else y
+
+
+class TestQLinear:
+    def setup_method(self, _):
+        self.x = f32(6, 10)
+        self.w = f32(7, 10)
+        self.b = f32(7)
+        self.sx, self.zx = jnp.float32(0.033), jnp.float32(4.7)
+        self.sw = jnp.array(RNG.uniform(0.01, 0.05, 7).astype(np.float32))
+        self.dy = f32(6, 7)
+        self.ref = jax.vjp(
+            lambda x, w, b, sx, zx, sw: ste_linear(x, w, b, sx, zx, sw, QC),
+            self.x, self.w, self.b, self.sx, self.zx, self.sw,
+        )[1](self.dy)
+        _, self.cache = L.qlinear_fwd(
+            self.x, self.w, self.b, self.sx, self.zx, self.sw, QC
+        )
+
+    def test_forward_matches_ste_value(self):
+        y, _ = L.qlinear_fwd(self.x, self.w, self.b, self.sx, self.zx, self.sw, QC)
+        yr = ste_linear(self.x, self.w, self.b, self.sx, self.zx, self.sw, QC)
+        np.testing.assert_allclose(y, yr, atol=1e-6)
+
+    def test_full_backward(self):
+        dx, g = L.qlinear_bwd(self.dy, self.cache, L.Sel.all(), QC)
+        dx_r, dw_r, db_r, dsx_r, dzx_r, dsw_r = self.ref
+        np.testing.assert_allclose(dx, dx_r, atol=1e-5)
+        np.testing.assert_allclose(g.dw, dw_r, atol=1e-5)
+        np.testing.assert_allclose(g.db, db_r, atol=1e-5)
+        np.testing.assert_allclose(g.dsw, dsw_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(g.dsx, dsx_r, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(g.dzx, dzx_r, rtol=1e-4, atol=1e-3)
+
+    def test_idx_backward_is_rows_of_full(self):
+        idx = jnp.array([2, 5, 0], dtype=jnp.int32)
+        _, g = L.qlinear_bwd(self.dy, self.cache, L.Sel("idx", idx=idx), QC)
+        _, dw_r, _, _, _, dsw_r = self.ref
+        np.testing.assert_allclose(g.dw, np.asarray(dw_r)[np.asarray(idx)], atol=1e-5)
+        np.testing.assert_allclose(
+            g.dsw, np.asarray(dsw_r)[np.asarray(idx)], rtol=1e-4, atol=1e-4
+        )
+
+    def test_idx_backward_shape_is_k(self):
+        idx = jnp.array([4], dtype=jnp.int32)
+        _, g = L.qlinear_bwd(self.dy, self.cache, L.Sel("idx", idx=idx), QC)
+        assert g.dw.shape == (1, 10) and g.dsw.shape == (1,)
+
+    def test_none_sel_produces_no_weight_grad(self):
+        _, g = L.qlinear_bwd(self.dy, self.cache, L.Sel.none(), QC)
+        assert g.dw is None and g.dsw is None
+        assert g.dsx is not None  # activation qparams still train at r=0
+
+    def test_flag_backward(self):
+        _, g1 = L.qlinear_bwd(self.dy, self.cache, L.Sel("flag", flag=jnp.int32(1)), QC)
+        _, g0 = L.qlinear_bwd(self.dy, self.cache, L.Sel("flag", flag=jnp.int32(0)), QC)
+        _, dw_r, *_ = self.ref
+        np.testing.assert_allclose(g1.dw, dw_r, atol=1e-5)
+        assert float(jnp.abs(g0.dw).max()) == 0.0
+
+    def test_3d_input(self):
+        x3 = f32(2, 5, 10)
+        y, cache = L.qlinear_fwd(x3, self.w, self.b, self.sx, self.zx, self.sw, QC)
+        assert y.shape == (2, 5, 7)
+        dx, g = L.qlinear_bwd(f32(2, 5, 7), cache, L.Sel.all(), QC)
+        assert dx.shape == x3.shape and g.dw.shape == self.w.shape
+
+
+@pytest.mark.parametrize("stride,pad,k", [(1, 1, 3), (2, 1, 3), (1, 0, 1), (2, 0, 1)])
+def test_qconv_backward(stride, pad, k):
+    x = f32(3, 4, 8, 8)
+    w = f32(5, 4, k, k)
+    sx, zx = jnp.float32(0.04), jnp.float32(6.0)
+    sw = jnp.array(RNG.uniform(0.01, 0.05, 5).astype(np.float32))
+
+    def ste_conv(x, w, sx, zx, sw):
+        xh = fq_act_ste(x, sx, zx, QC.a_bits)
+        wh = fq_weight_ste(w, sw, QC.w_bits)
+        return L._conv(xh, wh, stride, pad)
+
+    y, vjp = jax.vjp(ste_conv, x, w, sx, zx, sw)
+    dy = f32(*y.shape)
+    dx_r, dw_r, dsx_r, dzx_r, dsw_r = vjp(dy)
+
+    y2, cache = L.qconv_fwd(x, w, sx, zx, sw, QC, stride=stride, pad=pad)
+    np.testing.assert_allclose(y2, y, atol=1e-5)
+    dx, g = L.qconv_bwd(dy, cache, L.Sel.all(), QC)
+    np.testing.assert_allclose(dx, dx_r, atol=1e-4)
+    np.testing.assert_allclose(g.dw, dw_r, atol=1e-4)
+    np.testing.assert_allclose(g.dsw, dsw_r, rtol=1e-3, atol=5e-4)
+
+    idx = jnp.array([4, 1], dtype=jnp.int32)
+    _, gi = L.qconv_bwd(dy, cache, L.Sel("idx", idx=idx), QC)
+    np.testing.assert_allclose(gi.dw, np.asarray(dw_r)[np.asarray(idx)], atol=1e-4)
+
+    _, g0 = L.qconv_bwd(dy, cache, L.Sel("flag", flag=jnp.int32(0)), QC)
+    assert float(jnp.abs(g0.dw).max()) == 0.0
+
+
+def _check_simple(fwd, bwd, args, dy_shape, n_grads, atol=1e-4):
+    y, vjp = jax.vjp(fwd, *args)
+    dy = f32(*dy_shape)
+    refs = vjp(dy)[:n_grads]
+    outs = bwd(dy)
+    if not isinstance(outs, tuple):
+        outs = (outs,)
+    for o, r in zip(outs, refs):
+        np.testing.assert_allclose(o, r, atol=atol)
+
+
+def test_bn_backward():
+    x, g, b = f32(4, 3, 5, 5), f32(3), f32(3)
+    rm, rv = jnp.zeros(3), jnp.ones(3)
+    _, cache, _, _ = L.bn_fwd(x, g, b, rm, rv)
+    _check_simple(
+        lambda x, g, b: L.bn_fwd(x, g, b, rm, rv)[0],
+        lambda dy: L.bn_bwd(dy, cache),
+        (x, g, b),
+        (4, 3, 5, 5),
+        3,
+    )
+
+
+def test_bn_running_stats_update():
+    x = f32(4, 3, 5, 5) + 2.0
+    rm, rv = jnp.zeros(3), jnp.ones(3)
+    _, _, nrm, nrv = L.bn_fwd(x, jnp.ones(3), jnp.zeros(3), rm, rv, momentum=0.1)
+    np.testing.assert_allclose(nrm, 0.1 * jnp.mean(x, axis=(0, 2, 3)), rtol=1e-5)
+    # eval mode uses running stats and leaves them unchanged
+    _, _, erm, erv = L.bn_fwd(x, jnp.ones(3), jnp.zeros(3), nrm, nrv, train=False)
+    np.testing.assert_allclose(erm, nrm)
+
+
+def test_ln_backward():
+    x, g, b = f32(4, 6, 12), f32(12), f32(12)
+    _, cache = L.ln_fwd(x, g, b)
+    _check_simple(
+        lambda x, g, b: L.ln_fwd(x, g, b)[0],
+        lambda dy: L.ln_bwd(dy, cache),
+        (x, g, b),
+        (4, 6, 12),
+        3,
+    )
+
+
+def test_relu_gelu_backward():
+    x = f32(5, 9)
+    _, c = L.relu_fwd(x)
+    _check_simple(lambda x: L.relu_fwd(x)[0], lambda dy: L.relu_bwd(dy, c), (x,), (5, 9), 1)
+    _, cg = L.gelu_fwd(x)
+    _check_simple(lambda x: L.gelu_fwd(x)[0], lambda dy: L.gelu_bwd(dy, cg), (x,), (5, 9), 1, atol=1e-5)
+
+
+def test_pool_softmax_ce_embedding_backward():
+    x = f32(2, 3, 4, 4)
+    _, shape = L.global_avg_pool_fwd(x)
+    _check_simple(
+        lambda x: L.global_avg_pool_fwd(x)[0],
+        lambda dy: L.global_avg_pool_bwd(dy, shape),
+        (x,),
+        (2, 3),
+        1,
+    )
+    s = f32(3, 7)
+    _, p = L.softmax_fwd(s)
+    _check_simple(
+        lambda s: L.softmax_fwd(s)[0], lambda dy: L.softmax_bwd(dy, p), (s,), (3, 7), 1
+    )
+    logits = f32(6, 10)
+    labels = jnp.array(RNG.integers(0, 10, 6), dtype=jnp.int32)
+    loss, correct, cache = L.ce_loss_fwd(logits, labels)
+
+    def ce(lg):
+        m = jnp.max(lg, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[:, 0]
+        return jnp.mean(lse - jnp.take_along_axis(lg, labels[:, None], 1)[:, 0])
+
+    _, vjp = jax.vjp(ce, logits)
+    np.testing.assert_allclose(L.ce_loss_bwd(cache), vjp(jnp.float32(1))[0], atol=1e-6)
+
+    table = f32(11, 5)
+    ids = jnp.array(RNG.integers(0, 11, (3, 4)), dtype=jnp.int32)
+    _, ce2 = L.embedding_fwd(table, ids)
+    _check_simple(
+        lambda t: L.embedding_fwd(t, ids)[0],
+        lambda dy: L.embedding_bwd(dy, ce2),
+        (table,),
+        (3, 4, 5),
+        1,
+    )

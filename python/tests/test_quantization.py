@@ -1,0 +1,83 @@
+"""Fake-quantizer backward rules vs jax.grad of the STE reference."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.quantization import (
+    QuantCfg,
+    fq_act_bwd,
+    fq_act_fwd,
+    fq_act_ste,
+    fq_weight_bwd,
+    fq_weight_fwd,
+    fq_weight_ste,
+)
+
+S = settings(max_examples=10, deadline=None)
+
+
+@S
+@given(
+    rows=st.integers(1, 20),
+    feat=st.integers(1, 40),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_weight_bwd_matches_ste_grad(rows, feat, bits, seed):
+    rng = np.random.default_rng(seed)
+    qc = QuantCfg(bits, 8, mode="ref")
+    w = jnp.array(rng.standard_normal((rows, feat)).astype(np.float32))
+    s = jnp.array(rng.uniform(0.01, 0.2, rows).astype(np.float32))
+    dout = jnp.array(rng.standard_normal((rows, feat)).astype(np.float32))
+
+    # forward values agree between ref and STE construction
+    np.testing.assert_allclose(
+        fq_weight_fwd(w, s, qc), fq_weight_ste(w, s, bits), atol=0
+    )
+    _, vjp = jax.vjp(lambda w, s: fq_weight_ste(w, s, bits), w, s)
+    dw_ref, ds_ref = vjp(dout)
+    dw, ds = fq_weight_bwd(w, s, dout, qc)
+    np.testing.assert_allclose(dw, dw_ref, atol=1e-5)
+    np.testing.assert_allclose(ds, ds_ref, rtol=1e-3, atol=1e-3)
+
+
+@S
+@given(
+    n=st.integers(1, 200),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_act_bwd_matches_ste_grad(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    qc = QuantCfg(8, bits, mode="ref")
+    x = jnp.array((rng.standard_normal(n) * 2).astype(np.float32))
+    s = jnp.float32(rng.uniform(0.01, 0.2))
+    z = jnp.float32(rng.uniform(0, 2**bits - 1))
+    dout = jnp.array(rng.standard_normal(n).astype(np.float32))
+
+    np.testing.assert_allclose(fq_act_fwd(x, s, z, qc), fq_act_ste(x, s, z, bits))
+    _, vjp = jax.vjp(lambda x, s, z: fq_act_ste(x, s, z, bits), x, s, z)
+    dx_ref, ds_ref, dz_ref = vjp(dout)
+    dx, ds, dz = fq_act_bwd(x, s, z, dout, qc)
+    np.testing.assert_allclose(dx, dx_ref, atol=1e-5)
+    np.testing.assert_allclose(ds, ds_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(dz, dz_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_weight_quant_is_symmetric():
+    qc = QuantCfg(8, 8, mode="ref")
+    w = jnp.array([[-1.0, 1.0], [0.5, -0.5]], jnp.float32)
+    s = jnp.array([0.01, 0.01], jnp.float32)
+    wh = fq_weight_fwd(w, s, qc)
+    np.testing.assert_allclose(wh, -fq_weight_fwd(-w, s, qc))
+
+
+def test_act_clip_range_respected():
+    qc = QuantCfg(8, 4, mode="ref")  # 4-bit activations: codes 0..15
+    x = jnp.linspace(-10, 10, 101, dtype=jnp.float32)
+    s, z = jnp.float32(0.1), jnp.float32(8.0)
+    xh = fq_act_fwd(x, s, z, qc)
+    codes = np.round(np.asarray(xh) / 0.1) + 8
+    assert codes.min() >= 0 and codes.max() <= 15

@@ -1,0 +1,173 @@
+"""Step-builder (AOT ABI) tests: the exact functions that get lowered to
+HLO are executed here with concrete inputs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import models as zoo
+from compile import step as step_mod
+from compile.quantization import QuantCfg
+from compile.specs import wsites
+
+from .test_models import init_params, init_qparams, init_states, make_batch
+
+RNG = np.random.default_rng(9)
+
+
+def pack_inputs(model, inputs, P, Q, S, B, sel_vals=None):
+    args = []
+    for s in inputs:
+        if s.role == "param":
+            args.append(P[s.name])
+        elif s.role.startswith("qparam"):
+            v = Q[s.name]
+            args.append(v.reshape(s.shape) if s.role != "qparam_sw" else v)
+        elif s.role == "state":
+            args.append(S[s.name])
+        elif s.role == "data":
+            args.append(B[s.name])
+        elif s.role in ("index", "flag"):
+            args.append(sel_vals[s.name])
+        else:
+            raise KeyError(s.role)
+    return args
+
+
+def out_map(outputs, vals):
+    return {s.name: v for s, v in zip(outputs, vals)}
+
+
+class TestTrainStep:
+    def setup_method(self, _):
+        self.model = zoo.build("resnet8")
+        self.bs = 8
+        self.qc = QuantCfg(8, 8, mode="ref")
+        self.P = init_params(self.model)
+        self.Q = init_qparams(self.model, self.P)
+        self.S = init_states(self.model)
+        self.B = make_batch(self.model, self.bs)
+
+    def test_qat_loss_decreases_with_sgd(self):
+        fn, ins, outs = step_mod.build_train(self.model, self.qc, "ratio", 1.0, self.bs)
+        jfn = jax.jit(fn)
+        P = dict(self.P)
+        S = dict(self.S)
+        losses = []
+        for _ in range(8):
+            args = pack_inputs(self.model, ins, P, self.Q, S, self.B)
+            vals = out_map(outs, jfn(*args))
+            losses.append(float(vals["loss"][0]))
+            for o in outs:
+                if o.role == "grad" and not o.of.startswith(("sw:", "sx:", "zx:")):
+                    P[o.of] = P[o.of] - 0.05 * vals[o.name]
+                elif o.role == "state":
+                    S[o.of] = vals[o.name]
+        assert losses[-1] < losses[0], losses
+
+    def test_ratio_grads_are_rows_of_qat_grads(self):
+        fn_full, ins_f, outs_f = step_mod.build_train(
+            self.model, self.qc, "ratio", 1.0, self.bs
+        )
+        fn_r, ins_r, outs_r = step_mod.build_train(
+            self.model, self.qc, "ratio", 0.25, self.bs
+        )
+        sites = wsites(self.model.params)
+        sel_vals = {}
+        for s in ins_r:
+            if s.role == "index":
+                c_out = next(p.c_out for p in sites if p.name == s.of)
+                sel_vals[s.name] = jnp.array(
+                    RNG.choice(c_out, size=s.shape[0], replace=False).astype(np.int32)
+                )
+        vf = out_map(outs_f, fn_full(*pack_inputs(self.model, ins_f, self.P, self.Q, self.S, self.B)))
+        vr = out_map(outs_r, fn_r(*pack_inputs(self.model, ins_r, self.P, self.Q, self.S, self.B, sel_vals)))
+        np.testing.assert_allclose(vf["loss"], vr["loss"], rtol=1e-5)
+        for p in sites:
+            idx = np.asarray(sel_vals[f"id:{p.name}"])
+            np.testing.assert_allclose(
+                vr[f"d:{p.name}"], np.asarray(vf[f"d:{p.name}"])[idx],
+                rtol=1e-4, atol=1e-4, err_msg=p.name,
+            )
+
+    def test_r0_has_no_weight_grads_but_trains_qparams(self):
+        fn, ins, outs = step_mod.build_train(self.model, self.qc, "ratio", 0.0, self.bs)
+        roles = {o.of for o in outs if o.role == "grad"}
+        sites = wsites(self.model.params)
+        for p in sites:
+            assert p.name not in roles
+            assert f"sx:{p.name}" in roles and f"zx:{p.name}" in roles
+        # biases + norm still train (the paper's "0%" column)
+        assert "fc.b" in roles and "stem.conv.bn.g" in roles
+
+    def test_lwpn_flags_gate_grads(self):
+        fn, ins, outs = step_mod.build_train(self.model, self.qc, "lwpn", 1.0, self.bs)
+        sites = wsites(self.model.params)
+        sel_vals = {f"flag:{p.name}": jnp.array([i % 2], jnp.int32) for i, p in enumerate(sites)}
+        vals = out_map(outs, fn(*pack_inputs(self.model, ins, self.P, self.Q, self.S, self.B, sel_vals)))
+        for i, p in enumerate(sites):
+            mx = float(jnp.abs(vals[f"d:{p.name}"]).max())
+            assert (mx == 0.0) == (i % 2 == 0), p.name
+
+    def test_fp_train_has_all_param_grads(self):
+        fn, ins, outs = step_mod.build_train(self.model, self.qc, "fp", 1.0, self.bs)
+        grad_of = {o.of for o in outs if o.role == "grad"}
+        for p in self.model.params:
+            assert p.name in grad_of, p.name
+        assert not any(s.role.startswith("qparam") for s in ins)
+
+
+def test_fwd_step_eval_mode():
+    model = zoo.build("resnet8")
+    qc = QuantCfg(8, 8, mode="ref")
+    P, S = init_params(model), init_states(model)
+    Q = init_qparams(model, P)
+    B = make_batch(model, 8)
+    fn, ins, outs = step_mod.build_fwd(model, qc, 8)
+    vals = out_map(outs, fn(*pack_inputs(model, ins, P, Q, S, B)))
+    assert vals["logits"].shape == (8, 10)
+    assert 0 <= int(vals["correct"][0]) <= 8
+
+
+def test_calib_step_minmax():
+    model = zoo.build("resnet8")
+    P, S = init_params(model), init_states(model)
+    B = make_batch(model, 8)
+    fn, ins, outs = step_mod.build_calib(model, 8)
+    args = []
+    for s in ins:
+        if s.role == "param":
+            args.append(P[s.name])
+        elif s.role == "state":
+            args.append(S[s.name])
+        else:
+            args.append(B["x"])
+    vals = out_map(outs, fn(*args))
+    # first conv sees the raw input, so its minmax must bound the batch
+    mm = vals["mm:stem.conv"]
+    assert float(mm[0]) <= float(jnp.min(B["x"])) + 1e-6
+    assert float(mm[1]) >= float(jnp.max(B["x"])) - 1e-6
+    for o in outs:
+        assert float(vals[o.name][0]) <= float(vals[o.name][1])
+
+
+def test_bert_train_step_runs():
+    model = zoo.build("bert_tiny")
+    qc = QuantCfg(4, 8, mode="ref")
+    P, S = init_params(model), init_states(model)
+    Q = init_qparams(model, P)
+    B = make_batch(model, 4)
+    fn, ins, outs = step_mod.build_train(model, qc, "ratio", 0.1, 4)
+    sites = wsites(model.params)
+    sel_vals = {}
+    for s in ins:
+        if s.role == "index":
+            sel_vals[s.name] = jnp.arange(s.shape[0], dtype=jnp.int32)
+    vals = out_map(outs, fn(*pack_inputs(model, ins, P, Q, S, B, sel_vals)))
+    assert np.isfinite(float(vals["loss"][0]))
+    # embeddings are frozen in EfQAT mode
+    assert "d:emb.tok" not in vals
+    for p in sites:
+        k = step_mod.site_k(p.c_out, 0.1)
+        assert vals[f"d:{p.name}"].shape[0] == k

@@ -1,0 +1,34 @@
+//! Shared bench scaffolding: config from env/args, session setup.
+
+use std::collections::BTreeMap;
+
+use efqat::cfg::Config;
+use efqat::coordinator::Session;
+
+/// Bench config: defaults tuned for single-core repro scale; `--key value`
+/// args and `EFQAT_BENCH_*`-style keys override.
+pub fn bench_config() -> Config {
+    let mut cfg = Config::empty();
+    cfg.set("ckpt_dir", "ckpts");
+    cfg.set("save_ckpt", "false");
+    cfg.set("data.train_n", "1024"); // bench default: half-size epochs
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut over = BTreeMap::new();
+    for c in argv.chunks(2) {
+        if let (Some(k), Some(v)) = (c[0].strip_prefix("--"), c.get(1)) {
+            over.insert(k.to_string(), v.clone());
+        }
+    }
+    cfg.override_with(&over);
+    cfg
+}
+
+pub fn session(cfg: &Config) -> Session {
+    Session::new(std::path::Path::new(&cfg.str("artifacts", "artifacts")))
+        .expect("PJRT session (run `make artifacts` first)")
+}
+
+/// `cargo bench` passes --bench; strip it so chunk-parsing stays sane.
+pub fn is_quick(cfg: &Config) -> bool {
+    !cfg.bool("full", false)
+}

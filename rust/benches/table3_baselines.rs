@@ -1,0 +1,72 @@
+//! Paper Table 3: baseline models — FP, FP+1, and PTQ at each bit-width.
+//!
+//!   cargo bench --bench table3_baselines [-- --full true --models resnet20]
+//!
+//! Pretrains FP checkpoints if missing, trains one extra FP epoch (FP+1),
+//! and applies MinMax PTQ at W8A8/W4A8/W4A4 — the same three columns as
+//! the paper, at repro scale (synthetic datasets, DESIGN.md §3).
+
+mod common;
+
+use efqat::coordinator::pipeline::{
+    ensure_fp_checkpoint, fp_ckpt_path, load_fp_checkpoint, parse_bits, train_cfg,
+};
+use efqat::coordinator::tasks::build_task;
+use efqat::coordinator::trainer::{fwd_artifact_name, pretrain_fp};
+use efqat::coordinator::{calibrate, evaluate};
+use efqat::harness::Table;
+
+fn main() {
+    let cfg = common::bench_config();
+    let session = common::session(&cfg);
+    let quick = common::is_quick(&cfg);
+    let models: Vec<String> = if quick {
+        cfg.list("models", &["resnet8", "resnet20"])
+    } else {
+        cfg.list("models", &["resnet8", "resnet20", "resnet11b", "bert_tiny"])
+    };
+
+    let mut t = Table::new(
+        "Table 3: baselines (headline = acc% / F1)",
+        &["model", "FP", "FP+1", "bits", "PTQ"],
+    );
+    for model in &models {
+        ensure_fp_checkpoint(&session, &cfg, model, cfg.usize("train.epochs", 5)).unwrap();
+        let (mut params, mut states) = load_fp_checkpoint(&cfg, model).unwrap();
+        let fwd_fp = session.steps.get(&fwd_artifact_name(model, "fp")).unwrap();
+        let mut task = build_task(model, fwd_fp.manifest.batch_size, &cfg).unwrap();
+        let fp = evaluate(&fwd_fp, &params, None, &states, &mut task.test).unwrap();
+
+        // FP+1: one more FP epoch from the checkpoint (same optimizer family)
+        let step = session.steps.get(&format!("{model}_fp_train")).unwrap();
+        let tcfg = train_cfg(&cfg, model);
+        pretrain_fp(&step, &mut params, &mut states, &mut task.train, 1, &tcfg).unwrap();
+        let fp1 = evaluate(&fwd_fp, &params, None, &states, &mut task.test).unwrap();
+
+        // PTQ columns from the *original* checkpoint
+        let (orig_params, orig_states) = load_fp_checkpoint(&cfg, model).unwrap();
+        let bits_set: Vec<&str> = match model.as_str() {
+            "bert_tiny" | "gpt_mini" | "resnet8" => vec!["w8a8", "w4a8"],
+            _ => vec!["w8a8", "w4a8", "w4a4"],
+        };
+        let mut first = true;
+        for bits in bits_set {
+            let (wb, ab) = parse_bits(bits).unwrap();
+            let calib = session.steps.get(&format!("{model}_calib")).unwrap();
+            let q = calibrate(&calib, &orig_params, &orig_states, &mut task.calib, task.calib_samples, wb, ab).unwrap();
+            let fwd = session.steps.get(&fwd_artifact_name(model, bits)).unwrap();
+            let ptq = evaluate(&fwd, &orig_params, Some(&q), &orig_states, &mut task.test).unwrap();
+            t.row(&[
+                if first { model.clone() } else { String::new() },
+                if first { format!("{:.2}", fp.headline()) } else { String::new() },
+                if first { format!("{:.2}", fp1.headline()) } else { String::new() },
+                bits.to_uppercase(),
+                format!("{:.2}", ptq.headline()),
+            ]);
+            first = false;
+        }
+    }
+    t.print();
+    t.write_csv(std::path::Path::new("bench_out/table3_baselines.csv")).unwrap();
+    println!("\npaper shape check: PTQ degrades with fewer bits; W4A4 collapses on the deeper net.");
+}

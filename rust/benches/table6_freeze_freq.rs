@@ -1,0 +1,41 @@
+//! Paper Table 6 + Figure 4: freezing frequency f vs accuracy (EfQAT-CWPN).
+//!
+//!   cargo bench --bench table6_freeze_freq [-- --model resnet20 --bits w8a8]
+//!
+//! Sweeps the importance-refresh interval f (in samples).  The paper's
+//! claim: accuracy is flat in f, so the refresh cost amortizes freely.
+
+mod common;
+
+use efqat::coordinator::pipeline::{ensure_fp_checkpoint, run_efqat_pipeline};
+use efqat::harness::Table;
+
+fn main() {
+    let cfg = common::bench_config();
+    let session = common::session(&cfg);
+    let quick = common::is_quick(&cfg);
+    let model = cfg.str("model", "resnet20");
+    let bits = cfg.str("bits", "w8a8");
+    let ratio = cfg.usize("ratio", 25);
+    let freqs: Vec<usize> = cfg
+        .list("freqs", if quick { &["128", "16384"] } else { &["16", "128", "1024", "4096", "16384"] })
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    ensure_fp_checkpoint(&session, &cfg, &model, cfg.usize("train.epochs", 5)).unwrap();
+
+    let mut t = Table::new(
+        &format!("Table 6 / Fig 4: freezing frequency, {model} {bits} CWPN {ratio}%"),
+        &["freq f (samples)", "headline", "freeze overhead s"],
+    );
+    for f in freqs {
+        let mut c = cfg.clone();
+        c.set("train.freq", &f.to_string());
+        let s = run_efqat_pipeline(&session, &c, &model, &bits, "cwpn", ratio).unwrap();
+        t.row(&[f.to_string(), format!("{:.2}", s.efqat_headline), format!("{:.3}", s.overhead_seconds)]);
+    }
+    t.print();
+    t.write_csv(std::path::Path::new("bench_out/table6_freeze_freq.csv")).unwrap();
+    println!("\npaper shape check: headline flat across f (≤ ~0.3 spread).");
+}

@@ -1,0 +1,50 @@
+//! Paper Table 7 (Appendix A.2): qparam learning rate × raw-vs-log scales.
+//!
+//!   cargo bench --bench table7_qparam_lr [-- --model resnet20 --bits w8a8]
+//!
+//! Trains EfQAT-CWPN with the nominal Adam LR and a 100× larger one, with
+//! the scales optimized directly (raw) and in the log domain (TQT-style).
+//! Paper's claim: EfQAT is robust to the LR and raw ≥ log throughout.
+
+mod common;
+
+use efqat::coordinator::pipeline::{ensure_fp_checkpoint, run_efqat_pipeline};
+use efqat::harness::Table;
+
+fn main() {
+    let cfg = common::bench_config();
+    let session = common::session(&cfg);
+    let model = cfg.str("model", "resnet20");
+    let bits = cfg.str("bits", "w8a8");
+    let ratios: Vec<usize> = cfg
+        .list("ratios", &["0", "5", "25"])
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let nominal = cfg.f32("train.lr_q", 1e-6);
+
+    ensure_fp_checkpoint(&session, &cfg, &model, cfg.usize("train.epochs", 5)).unwrap();
+
+    let mut header = vec!["qparam func".to_string(), "LR".to_string()];
+    header.extend(ratios.iter().map(|r| format!("{r}%")));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&format!("Table 7: {model} {bits}, EfQAT-CWPN"), &hdr);
+
+    for (log_scales, label) in [(false, "raw"), (true, "log")] {
+        for lr in [nominal, nominal * 100.0] {
+            let mut row = vec![label.to_string(), format!("{lr:.0e}")];
+            for &r in &ratios {
+                let mut c = cfg.clone();
+                c.set("train.lr_q", &lr.to_string());
+                c.set("train.log_scales", if log_scales { "true" } else { "false" });
+                let mode = if r == 0 { "r0" } else { "cwpn" };
+                let s = run_efqat_pipeline(&session, &c, &model, &bits, mode, r).unwrap();
+                row.push(format!("{:.2}", s.efqat_headline));
+            }
+            t.row(&row);
+        }
+    }
+    t.print();
+    t.write_csv(std::path::Path::new("bench_out/table7_qparam_lr.csv")).unwrap();
+    println!("\npaper shape check: all cells within noise; raw ≥ log.");
+}

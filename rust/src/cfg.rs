@@ -1,0 +1,187 @@
+//! Experiment configuration: a TOML-subset parser + typed accessors.
+//!
+//! Supports the subset the experiment configs use: `[section]` headers,
+//! `key = value` with strings, numbers, booleans and flat arrays, `#`
+//! comments.  Values are addressed as "section.key"; CLI `--key value`
+//! pairs override file values, so every experiment is reproducible from
+//! `configs/*.toml` + the command line.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn empty() -> Config {
+        Config::default()
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section {line:?}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, unquote(v.trim()));
+        }
+        Ok(Config { values })
+    }
+
+    /// Apply `--key value` CLI overrides (highest precedence).
+    pub fn override_with(&mut self, pairs: &BTreeMap<String, String>) {
+        for (k, v) in pairs {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.values.get(key).cloned().ok_or_else(|| anyhow!("missing config key {key:?}"))
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.values.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.values.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.values.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.values
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Comma/array list of strings: `a = ["x", "y"]` or `a = x,y`.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.values.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => {
+                let inner = v.trim().trim_start_matches('[').trim_end_matches(']');
+                inner
+                    .split(',')
+                    .map(|s| unquote(s.trim()))
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            }
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # experiment
+            name = "table4"
+            [train]
+            lr = 1e-3          # comment after value
+            epochs = 2
+            modes = ["cwpl", "cwpn"]
+            log = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str("name", ""), "table4");
+        assert_eq!(cfg.f32("train.lr", 0.0), 1e-3);
+        assert_eq!(cfg.usize("train.epochs", 0), 2);
+        assert_eq!(cfg.list("train.modes", &[]), vec!["cwpl", "cwpn"]);
+        assert!(cfg.bool("train.log", false));
+        assert_eq!(cfg.usize("train.missing", 7), 7);
+    }
+
+    #[test]
+    fn overrides_take_precedence() {
+        let mut cfg = Config::parse("a = 1").unwrap();
+        let mut over = BTreeMap::new();
+        over.insert("a".to_string(), "2".to_string());
+        cfg.override_with(&over);
+        assert_eq!(cfg.usize("a", 0), 2);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let cfg = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(cfg.str("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[oops").is_err());
+        assert!(Config::parse("novalue").is_err());
+    }
+}

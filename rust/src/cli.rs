@@ -1,0 +1,89 @@
+//! Tiny CLI parser (clap is unavailable offline).
+//!
+//! Grammar: `efqat <subcommand> [--key value | --flag] ...`
+//! All `--key value` pairs are collected and overlaid onto the experiment
+//! [`crate::cfg::Config`], so any config key can be overridden from the
+//! command line.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Boolean switches that never consume a value (resolves the `--flag
+/// positional` ambiguity the same way clap's `action = SetTrue` would).
+const KNOWN_FLAGS: &[&str] = &["verbose", "force", "full", "fast", "help", "quiet", "no-save"];
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&key) {
+                    a.flags.push(key.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    a.options.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(key.to_string());
+                }
+            } else if a.subcommand.is_empty() {
+                a.subcommand = arg.clone();
+            } else {
+                a.positional.push(arg.clone());
+            }
+        }
+        if a.subcommand.is_empty() {
+            bail!("no subcommand given");
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&v(&["train", "--model", "resnet20", "--ratio=0.25", "--verbose", "ckpt.bin"])).unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.opt("model"), Some("resnet20"));
+        assert_eq!(a.opt("ratio"), Some("0.25"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["ckpt.bin"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&v(&["eval", "--fast"])).unwrap();
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn requires_subcommand() {
+        assert!(Args::parse(&v(&["--model", "x"])).is_err());
+    }
+}

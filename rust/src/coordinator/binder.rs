@@ -1,0 +1,86 @@
+//! Manifest-driven literal binding: turn host stores + a batch + the
+//! current freeze selection into the exact input vector an artifact wants.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::freeze::Selection;
+use crate::model::{Dtype, Manifest, ParamStore, QParamStore, StateStore};
+use crate::runtime::{literal_f32, literal_i32};
+use crate::data::Batch;
+use crate::tensor::{ITensor, Tensor};
+
+/// Everything an artifact input can refer to.
+pub struct BindCtx<'a> {
+    pub params: &'a ParamStore,
+    pub qparams: Option<&'a QParamStore>,
+    pub states: &'a StateStore,
+    pub batch: &'a Batch,
+    /// freeze selection (ratio/LWPN train artifacts only)
+    pub selection: Option<&'a Selection>,
+}
+
+/// Pack literals in manifest input order.
+pub fn bind_inputs(man: &Manifest, ctx: &BindCtx) -> Result<Vec<xla::Literal>> {
+    let site_pos = |of: &Option<String>| -> Result<usize> {
+        let name = of.as_deref().ok_or_else(|| anyhow!("selector input without 'of'"))?;
+        man.wsites
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("unknown wsite {name:?}"))
+    };
+    let mut out = Vec::with_capacity(man.inputs.len());
+    for spec in &man.inputs {
+        let lit = match spec.role.as_str() {
+            "param" => literal_f32(ctx.params.get(&spec.name)?)?,
+            "qparam_sw" => {
+                let q = ctx.qparams.ok_or_else(|| anyhow!("artifact wants qparams"))?;
+                let of = spec.of.as_deref().unwrap_or("");
+                let sw = q.sw.get(of).ok_or_else(|| anyhow!("missing sw for {of:?}"))?;
+                literal_f32(sw)?
+            }
+            "qparam_sx" | "qparam_zx" => {
+                let q = ctx.qparams.ok_or_else(|| anyhow!("artifact wants qparams"))?;
+                let of = spec.of.as_deref().unwrap_or("");
+                let act = q.act.get(of).ok_or_else(|| anyhow!("missing act qparams for {of:?}"))?;
+                let v = if spec.role == "qparam_sx" { act.scale } else { act.zero_point };
+                literal_f32(&Tensor::scalar(v))?
+            }
+            "state" => literal_f32(ctx.states.get(&spec.name)?)?,
+            "data" => match spec.dtype {
+                Dtype::F32 => literal_f32(
+                    ctx.batch
+                        .f32s
+                        .get(&spec.name)
+                        .ok_or_else(|| anyhow!("batch missing f32 {:?}", spec.name))?,
+                )?,
+                Dtype::I32 => literal_i32(
+                    ctx.batch
+                        .i32s
+                        .get(&spec.name)
+                        .ok_or_else(|| anyhow!("batch missing i32 {:?}", spec.name))?,
+                )?,
+            },
+            "index" => {
+                let sel = ctx.selection.ok_or_else(|| anyhow!("artifact wants a selection"))?;
+                let si = site_pos(&spec.of)?;
+                let ids = &sel.channels[si];
+                if ids.len() != spec.shape[0] {
+                    bail!(
+                        "site {:?}: selection has {} channels, artifact slot is {}",
+                        spec.of, ids.len(), spec.shape[0]
+                    );
+                }
+                let data: Vec<i32> = ids.iter().map(|&c| c as i32).collect();
+                literal_i32(&ITensor { shape: spec.shape.clone(), data })?
+            }
+            "flag" => {
+                let sel = ctx.selection.ok_or_else(|| anyhow!("artifact wants a selection"))?;
+                let si = site_pos(&spec.of)?;
+                literal_i32(&ITensor { shape: vec![1], data: vec![sel.flags[si] as i32] })?
+            }
+            other => bail!("unknown input role {other:?} ({})", spec.name),
+        };
+        out.push(lit);
+    }
+    Ok(out)
+}

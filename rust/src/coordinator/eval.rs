@@ -1,0 +1,122 @@
+//! Evaluation: accuracy (CNNs), span exact-match + token-F1 (QA),
+//! loss/perplexity (LM) — the metrics of the paper's Tables 3/4.
+
+use anyhow::Result;
+
+use crate::data::{squad::span_f1, Batch, Loader};
+use crate::model::{ParamStore, QParamStore, StateStore};
+use crate::runtime::Step;
+use crate::tensor::argmax;
+
+use super::binder::{bind_inputs, BindCtx};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f32,
+    /// top-1 accuracy (CNNs) or exact-match rate (QA) or token accuracy (LM)
+    pub accuracy: f32,
+    /// token-overlap F1 × 100 (QA models only)
+    pub f1: Option<f32>,
+    pub n: usize,
+}
+
+impl EvalResult {
+    /// The paper's headline number for this task: accuracy% or F1.
+    pub fn headline(&self) -> f32 {
+        self.f1.unwrap_or(self.accuracy * 100.0)
+    }
+
+    pub fn perplexity(&self) -> f32 {
+        self.loss.exp()
+    }
+}
+
+/// Run the fwd artifact over the loader.  Handles wrap-padded final
+/// batches by scoring only the first `batch.count` examples host-side.
+pub fn evaluate(
+    fwd: &Step,
+    params: &ParamStore,
+    qparams: Option<&QParamStore>,
+    states: &StateStore,
+    loader: &mut Loader,
+) -> Result<EvalResult> {
+    let man = &fwd.manifest;
+    let is_qa = man.outputs.iter().any(|o| o.name == "logits")
+        && man.inputs.iter().any(|i| i.name == "y_start");
+    loader.reset();
+    let (mut loss_sum, mut correct, mut f1_sum, mut n) = (0f64, 0usize, 0f64, 0usize);
+    let mut batches = 0usize;
+    while let Some(batch) = loader.next_batch() {
+        let ctx = BindCtx { params, qparams, states, batch: &batch, selection: None };
+        let out = fwd.execute(&bind_inputs(man, &ctx)?)?;
+        loss_sum += out.loss()? as f64; // padded rows repeat real rows; bias is negligible for loss
+        batches += 1;
+        let logits = out.get("logits")?.f32()?;
+        if is_qa {
+            let (em, f1) = score_spans(logits, &batch);
+            correct += em;
+            f1_sum += f1;
+        } else {
+            correct += score_top1(logits, &batch);
+        }
+        n += batch.count;
+    }
+    Ok(EvalResult {
+        loss: (loss_sum / batches.max(1) as f64) as f32,
+        accuracy: correct as f32 / n.max(1) as f32,
+        f1: if is_qa { Some((f1_sum / n.max(1) as f64 * 100.0) as f32) } else { None },
+        n,
+    })
+}
+
+fn score_top1(logits: &crate::tensor::Tensor, batch: &Batch) -> usize {
+    // logits [B, C] (CNNs) or [B, T, V] (LM: token accuracy)
+    let labels = &batch.i32s["y"].data;
+    if logits.shape.len() == 2 {
+        let c = logits.shape[1];
+        (0..batch.count)
+            .filter(|&i| argmax(&logits.data[i * c..(i + 1) * c]) == labels[i] as usize)
+            .count()
+    } else {
+        let (t, v) = (logits.shape[1], logits.shape[2]);
+        let mut ok = 0;
+        for i in 0..batch.count {
+            for j in 0..t {
+                let off = (i * t + j) * v;
+                if argmax(&logits.data[off..off + v]) == labels[i * t + j] as usize {
+                    ok += 1;
+                }
+            }
+        }
+        // report tokens as "examples" scaled back to sequences
+        ok / t
+    }
+}
+
+fn score_spans(logits: &crate::tensor::Tensor, batch: &Batch) -> (usize, f64) {
+    // logits [B, T, 2]
+    let t = logits.shape[1];
+    let ys = &batch.i32s["y_start"].data;
+    let ye = &batch.i32s["y_end"].data;
+    let (mut em, mut f1) = (0usize, 0f64);
+    for i in 0..batch.count {
+        let mut s_best = (f32::NEG_INFINITY, 0usize);
+        let mut e_best = (f32::NEG_INFINITY, 0usize);
+        for j in 0..t {
+            let s = logits.data[(i * t + j) * 2];
+            let e = logits.data[(i * t + j) * 2 + 1];
+            if s > s_best.0 {
+                s_best = (s, j);
+            }
+            if e > e_best.0 {
+                e_best = (e, j);
+            }
+        }
+        let (ps, pe) = (s_best.1, e_best.1);
+        if ps == ys[i] as usize && pe == ye[i] as usize {
+            em += 1;
+        }
+        f1 += span_f1(ps, pe, ys[i] as usize, ye[i] as usize) as f64;
+    }
+    (em, f1)
+}

@@ -1,0 +1,145 @@
+//! Training metrics: per-step records, timing breakdown, CSV logging.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Duration;
+
+/// Per-step timing breakdown of the coordinator loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    /// literal packing + host→device
+    pub bind: Duration,
+    /// artifact execution (fwd + bwd on the device)
+    pub exec: Duration,
+    /// host optimizer (SGD rows / Adam qparams)
+    pub optim: Duration,
+    /// importance refresh + Top-K reselection
+    pub freeze: Duration,
+}
+
+impl StepTiming {
+    pub fn total(&self) -> Duration {
+        self.bind + self.exec + self.optim + self.freeze
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub correct: i32,
+    pub batch: usize,
+    pub timing: StepTiming,
+}
+
+/// Accumulates step records; prints progress and dumps CSV.
+#[derive(Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+    pub label: String,
+}
+
+impl MetricsLog {
+    pub fn new(label: &str) -> MetricsLog {
+        MetricsLog { records: Vec::new(), label: label.to_string() }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn losses(&self) -> Vec<f32> {
+        self.records.iter().map(|r| r.loss).collect()
+    }
+
+    pub fn mean_loss_tail(&self, k: usize) -> f32 {
+        let tail: Vec<f32> = self.records.iter().rev().take(k).map(|r| r.loss).collect();
+        tail.iter().sum::<f32>() / tail.len().max(1) as f32
+    }
+
+    pub fn train_accuracy(&self) -> f32 {
+        let c: i64 = self.records.iter().map(|r| r.correct as i64).sum();
+        let n: usize = self.records.iter().map(|r| r.batch).sum();
+        c as f32 / n.max(1) as f32
+    }
+
+    /// Sum of artifact execution time — the quantity Table 5 reports
+    /// (the paper's "backward runtime ... over the total training steps").
+    pub fn total_exec(&self) -> Duration {
+        self.records.iter().map(|r| r.timing.exec).sum()
+    }
+
+    pub fn total_overhead(&self) -> Duration {
+        self.records
+            .iter()
+            .map(|r| r.timing.bind + r.timing.optim + r.timing.freeze)
+            .sum()
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,correct,batch,bind_us,exec_us,optim_us,freeze_us")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{}",
+                r.step,
+                r.loss,
+                r.correct,
+                r.batch,
+                r.timing.bind.as_micros(),
+                r.timing.exec.as_micros(),
+                r.timing.optim.as_micros(),
+                r.timing.freeze.as_micros()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            correct: 4,
+            batch: 8,
+            timing: StepTiming {
+                bind: Duration::from_micros(10),
+                exec: Duration::from_micros(100),
+                optim: Duration::from_micros(5),
+                freeze: Duration::from_micros(1),
+            },
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = MetricsLog::new("t");
+        m.push(rec(0, 2.0));
+        m.push(rec(1, 1.0));
+        assert_eq!(m.losses(), vec![2.0, 1.0]);
+        assert_eq!(m.mean_loss_tail(1), 1.0);
+        assert_eq!(m.train_accuracy(), 0.5);
+        assert_eq!(m.total_exec(), Duration::from_micros(200));
+        assert_eq!(m.total_overhead(), Duration::from_micros(32));
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut m = MetricsLog::new("t");
+        m.push(rec(0, 2.0));
+        let dir = std::env::temp_dir().join("efqat_metrics_test");
+        let p = dir.join("m.csv");
+        m.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("step,loss"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,45 @@
+//! The coordinator: the paper's Algorithm 1 as a rust training system.
+//!
+//! Pipeline (all phases driven from here, python never runs):
+//!   1. [`trainer::pretrain_fp`]   — train the FP baseline checkpoint
+//!      (and FP+1) with the `<model>_fp_train` artifact.
+//!   2. [`ptq::calibrate`]         — MinMax PTQ over a calibration set
+//!      (Eq. 2/4), producing the initial [`crate::model::QParamStore`].
+//!   3. [`trainer::EfqatTrainer`]  — one EfQAT epoch: forward+backward on
+//!      the ratio/LWPN artifact, Top-K channel selection every `f`
+//!      samples, row-masked SGD on unfrozen channels, Adam on the
+//!      quantization parameters.
+//!   4. [`eval::evaluate`]         — accuracy / span-F1 / perplexity.
+
+pub mod binder;
+pub mod pipeline;
+pub mod eval;
+pub mod metrics;
+pub mod ptq;
+pub mod tasks;
+pub mod trainer;
+
+pub use binder::bind_inputs;
+pub use eval::{evaluate, EvalResult};
+pub use ptq::calibrate;
+pub use trainer::{pretrain_fp, EfqatTrainer, TrainCfg};
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, StepCache};
+
+/// Shared runtime + compiled-step cache for one process.
+pub struct Session {
+    pub runtime: Rc<Runtime>,
+    pub steps: StepCache,
+}
+
+impl Session {
+    pub fn new(artifacts_dir: &Path) -> Result<Session> {
+        let runtime = Rc::new(Runtime::new(artifacts_dir)?);
+        Ok(Session { steps: StepCache::new(runtime.clone()), runtime })
+    }
+}

@@ -1,0 +1,273 @@
+//! High-level pipeline: FP checkpoint → PTQ → EfQAT epoch → eval.
+//!
+//! Shared by the `efqat` CLI, the examples, and every bench that
+//! regenerates a paper table — one code path, many entry points.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cfg::Config;
+use crate::freeze::Mode;
+use crate::harness::sparkline;
+use crate::model::{load_checkpoint, save_checkpoint, ParamStore, QParamStore, StateStore};
+use crate::quant::ActQParams;
+use crate::tensor::Tensor;
+
+use super::metrics::MetricsLog;
+use super::tasks::build_task;
+use super::trainer::{artifact_name, fwd_artifact_name, pretrain_fp, EfqatTrainer, TrainCfg};
+
+pub use super::trainer::fwd_artifact_name as fwd_artifact_name_of;
+use super::{calibrate, evaluate, Session};
+
+pub fn artifacts_dir(cfg: &Config) -> PathBuf {
+    PathBuf::from(cfg.str("artifacts", "artifacts"))
+}
+
+pub fn ckpt_dir(cfg: &Config) -> PathBuf {
+    PathBuf::from(cfg.str("ckpt_dir", "ckpts"))
+}
+
+pub fn fp_ckpt_path(cfg: &Config, model: &str) -> PathBuf {
+    ckpt_dir(cfg).join(format!("{model}_fp.ckpt"))
+}
+
+/// "w4a8" → (4, 8)
+pub fn parse_bits(bits: &str) -> Result<(u32, u32)> {
+    let rest = bits
+        .strip_prefix('w')
+        .ok_or_else(|| anyhow!("bad bits tag {bits:?} (want e.g. w4a8)"))?;
+    let (w, a) = rest.split_once('a').ok_or_else(|| anyhow!("bad bits tag {bits:?}"))?;
+    Ok((w.parse()?, a.parse()?))
+}
+
+/// Paper-default hyper-parameters, config-overridable.
+pub fn train_cfg(cfg: &Config, model: &str) -> TrainCfg {
+    let default_lr = match model {
+        "resnet11b" => 1e-3,
+        _ => 1e-2,
+    };
+    TrainCfg {
+        lr_w: cfg.f32("train.lr_w", default_lr),
+        momentum: cfg.f32("train.momentum", 0.9),
+        weight_decay: cfg.f32("train.weight_decay", 1e-4),
+        lr_q: cfg.f32("train.lr_q", 1e-6),
+        log_domain_scales: cfg.bool("train.log_scales", false),
+        freq: cfg.usize("train.freq", 4096),
+        ratio_override: None,
+        seed: cfg.u64("train.seed", 0),
+    }
+}
+
+pub fn load_fp_checkpoint(cfg: &Config, model: &str) -> Result<(ParamStore, StateStore)> {
+    let path = fp_ckpt_path(cfg, model);
+    let ck = load_checkpoint(&path).with_context(|| {
+        format!("loading FP checkpoint {} (run `efqat pretrain` first)", path.display())
+    })?;
+    Ok((
+        ParamStore { map: ck.get("params").cloned().unwrap_or_default() },
+        StateStore { map: ck.get("states").cloned().unwrap_or_default() },
+    ))
+}
+
+/// Pretrain the FP baseline and save its checkpoint.  Returns the test
+/// headline (paper Table 3 "FP" column).
+pub fn run_pretrain(session: &Session, cfg: &Config, model: &str, epochs: usize) -> Result<f32> {
+    let step = session.steps.get(&artifact_name(model, "fp", "fp", 100))?;
+    let bs = step.manifest.batch_size;
+    let mut task = build_task(model, bs, cfg)?;
+    let mut params = ParamStore::init(&step.manifest, cfg.u64("train.seed", 0));
+    let mut states = StateStore::init(&step.manifest);
+    let tcfg = train_cfg(cfg, model);
+    let log = pretrain_fp(&step, &mut params, &mut states, &mut task.train, epochs, &tcfg)?;
+    let fwd = session.steps.get(&fwd_artifact_name(model, "fp"))?;
+    let result = evaluate(&fwd, &params, None, &states, &mut task.test)?;
+    println!(
+        "[pretrain] {model}: train-loss {:.4} test-headline {:.2}  {}",
+        log.mean_loss_tail(20),
+        result.headline(),
+        sparkline(&log.losses(), 50)
+    );
+    save_checkpoint(
+        &fp_ckpt_path(cfg, model),
+        &[("params", &params.map), ("states", &states.map)],
+    )?;
+    Ok(result.headline())
+}
+
+/// Everything one EfQAT run produces; reused by CLI, examples and benches.
+#[derive(Clone, Debug)]
+pub struct PipelineSummary {
+    pub model: String,
+    pub bits: String,
+    pub mode: String,
+    pub ratio: usize,
+    pub ptq_headline: f32,
+    pub efqat_headline: f32,
+    /// artifact execution time over the epoch (paper Table 5's quantity)
+    pub exec_seconds: f64,
+    pub overhead_seconds: f64,
+    pub losses: Vec<f32>,
+}
+
+impl PipelineSummary {
+    pub fn render(&self) -> String {
+        format!(
+            "[efqat] {} {} mode={} ratio={}%\n  PTQ   headline {:.2}\n  EfQAT headline {:.2}  ({:+.2})\n  step exec {:.2}s, coordinator overhead {:.2}s\n  loss {}",
+            self.model,
+            self.bits,
+            self.mode,
+            self.ratio,
+            self.ptq_headline,
+            self.efqat_headline,
+            self.efqat_headline - self.ptq_headline,
+            self.exec_seconds,
+            self.overhead_seconds,
+            sparkline(&self.losses, 60),
+        )
+    }
+}
+
+/// The full Algorithm-1 pipeline for one (model, bits, mode, ratio) cell:
+/// loads the FP checkpoint, calibrates PTQ, runs the EfQAT epoch(s), and
+/// evaluates.  `mode` ∈ {cwpl, cwpn, lwpn, qat, r0}.
+pub fn run_efqat_pipeline(
+    session: &Session,
+    cfg: &Config,
+    model: &str,
+    bits: &str,
+    mode: &str,
+    ratio: usize,
+) -> Result<PipelineSummary> {
+    let (params, states) = load_fp_checkpoint(cfg, model)?;
+    let (w_bits, a_bits) = parse_bits(bits)?;
+
+    // PTQ initialization (Algorithm 1: "Start from a PTQ model")
+    let calib = session.steps.get(&format!("{model}_calib"))?;
+    let mut task = build_task(model, calib.manifest.batch_size, cfg)?;
+    let q = calibrate(&calib, &params, &states, &mut task.calib, task.calib_samples, w_bits, a_bits)?;
+    let fwd = session.steps.get(&fwd_artifact_name(model, bits))?;
+    let ptq_eval = evaluate(&fwd, &params, Some(&q), &states, &mut task.test)?;
+
+    // EfQAT epoch
+    let ratio_for_artifact = match mode {
+        "qat" => 100,
+        "r0" => 0,
+        _ => ratio,
+    };
+    let art = artifact_name(model, bits, mode, ratio_for_artifact);
+    let step = session.steps.get(&art)?;
+    let mut tcfg = train_cfg(cfg, model);
+    if mode == "lwpn" {
+        tcfg.ratio_override = Some(ratio as f32 / 100.0);
+    }
+    let mut trainer = EfqatTrainer::new(step, params, q, states, Mode::parse(mode), tcfg)?;
+    let epochs = cfg.usize("train.efqat_epochs", 1);
+    let mut log = MetricsLog::new(&art);
+    for _ in 0..epochs {
+        let l = trainer.train_epoch(&mut task.train)?;
+        for r in l.records {
+            log.push(r);
+        }
+    }
+
+    let result = evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test)?;
+
+    if cfg.bool("save_ckpt", true) {
+        let qmap = qparams_to_tensors(&trainer.qparams);
+        let out = ckpt_dir(cfg).join(format!("{model}_{bits}_{mode}{ratio}.ckpt"));
+        save_checkpoint(
+            &out,
+            &[("params", &trainer.params.map), ("states", &trainer.states.map), ("qparams", &qmap)],
+        )?;
+    }
+
+    Ok(PipelineSummary {
+        model: model.to_string(),
+        bits: bits.to_string(),
+        mode: mode.to_string(),
+        ratio,
+        ptq_headline: ptq_eval.headline(),
+        efqat_headline: result.headline(),
+        exec_seconds: log.total_exec().as_secs_f64(),
+        overhead_seconds: log.total_overhead().as_secs_f64(),
+        losses: log.losses(),
+    })
+}
+
+/// Make sure an FP checkpoint exists (pretraining if needed); idempotent.
+pub fn ensure_fp_checkpoint(session: &Session, cfg: &Config, model: &str, epochs: usize) -> Result<()> {
+    if fp_ckpt_path(cfg, model).exists() {
+        return Ok(());
+    }
+    run_pretrain(session, cfg, model, epochs)?;
+    Ok(())
+}
+
+pub fn qparams_to_tensors(q: &QParamStore) -> BTreeMap<String, Tensor> {
+    let mut m = BTreeMap::new();
+    for (k, v) in &q.sw {
+        m.insert(format!("sw:{k}"), v.clone());
+    }
+    for (k, a) in &q.act {
+        m.insert(format!("sx:{k}"), Tensor::scalar(a.scale));
+        m.insert(format!("zx:{k}"), Tensor::scalar(a.zero_point));
+    }
+    m
+}
+
+pub fn qparams_from_tensors(m: &BTreeMap<String, Tensor>) -> QParamStore {
+    let mut q = QParamStore::default();
+    for (k, v) in m {
+        if let Some(site) = k.strip_prefix("sw:") {
+            q.sw.insert(site.to_string(), v.clone());
+        } else if let Some(site) = k.strip_prefix("sx:") {
+            q.act
+                .entry(site.to_string())
+                .or_insert(ActQParams { scale: 1.0, zero_point: 0.0 })
+                .scale = v.data[0];
+        } else if let Some(site) = k.strip_prefix("zx:") {
+            q.act
+                .entry(site.to_string())
+                .or_insert(ActQParams { scale: 1.0, zero_point: 0.0 })
+                .zero_point = v.data[0];
+        }
+    }
+    q
+}
+
+/// Load a quantized checkpoint produced by [`run_efqat_pipeline`].
+pub fn load_quant_checkpoint(path: &Path) -> Result<(ParamStore, StateStore, QParamStore)> {
+    let ck = load_checkpoint(path)?;
+    Ok((
+        ParamStore { map: ck.get("params").cloned().unwrap_or_default() },
+        StateStore { map: ck.get("states").cloned().unwrap_or_default() },
+        ck.get("qparams").map(qparams_from_tensors).unwrap_or_default(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_parsing() {
+        assert_eq!(parse_bits("w8a8").unwrap(), (8, 8));
+        assert_eq!(parse_bits("w4a4").unwrap(), (4, 4));
+        assert!(parse_bits("8a8").is_err());
+        assert!(parse_bits("w8").is_err());
+    }
+
+    #[test]
+    fn qparams_tensor_round_trip() {
+        let mut q = QParamStore::default();
+        q.sw.insert("fc.w".into(), Tensor::new(vec![2], vec![0.1, 0.2]).unwrap());
+        q.act.insert("fc.w".into(), ActQParams { scale: 0.05, zero_point: 7.0 });
+        let m = qparams_to_tensors(&q);
+        let q2 = qparams_from_tensors(&m);
+        assert_eq!(q2.sw["fc.w"].data, vec![0.1, 0.2]);
+        assert_eq!(q2.act["fc.w"], ActQParams { scale: 0.05, zero_point: 7.0 });
+    }
+}

@@ -1,0 +1,58 @@
+//! PTQ: MinMax calibration (the paper's PTQ baseline, §4).
+//!
+//! Runs the `<model>_calib` artifact (an FP forward with min/max taps at
+//! every quantized activation site) over the calibration set — 512
+//! samples in the paper and in our default configs — aggregates the
+//! per-batch ranges in [`crate::quant::MinMaxObserver`]s, and derives
+//! activation scales/zero-points (Eq. 2).  Weight scales come directly
+//! from the weights (Eq. 4), per output channel.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::Loader;
+use crate::model::{ParamStore, QParamStore, StateStore};
+use crate::quant::MinMaxObserver;
+use crate::runtime::Step;
+
+use super::binder::{bind_inputs, BindCtx};
+
+/// Calibrate activation qparams with the calib artifact and initialize
+/// weight scales from the current parameters.
+pub fn calibrate(
+    calib_step: &Step,
+    params: &ParamStore,
+    states: &StateStore,
+    loader: &mut Loader,
+    max_samples: usize,
+    bits_w: u32,
+    bits_a: u32,
+) -> Result<QParamStore> {
+    let man = &calib_step.manifest;
+    let mut observers: BTreeMap<String, MinMaxObserver> = BTreeMap::new();
+    loader.reset();
+    let mut seen = 0usize;
+    while seen < max_samples {
+        let Some(batch) = loader.next_batch() else { break };
+        let ctx = BindCtx { params, qparams: None, states, batch: &batch, selection: None };
+        let inputs = bind_inputs(man, &ctx)?;
+        let out = calib_step.execute(&inputs)?;
+        for spec in &man.outputs {
+            if spec.role != "calib" {
+                continue;
+            }
+            let mm = out.get(&spec.name)?.f32()?;
+            let site = spec.of.clone().unwrap_or_default();
+            observers.entry(site).or_default().observe(mm.data[0], mm.data[1]);
+        }
+        seen += batch.count;
+    }
+
+    let mut q = QParamStore::default();
+    for (site, obs) in observers {
+        q.act.insert(site, obs.qparams(bits_a));
+    }
+    q.init_weight_scales(man, params, bits_w);
+    Ok(q)
+}

@@ -1,0 +1,106 @@
+//! Task registry: maps each model to its dataset generators and default
+//! scales (the repro-scale substitutes of DESIGN.md §3).  All sizes are
+//! config-overridable (`data.*` keys).
+
+use anyhow::{bail, Result};
+
+use crate::cfg::Config;
+use crate::data::{corpus, images, squad, Loader};
+use crate::data::loader::Source;
+
+pub struct Task {
+    pub train: Loader,
+    pub test: Loader,
+    /// calibration split (paper: 512 samples)
+    pub calib: Loader,
+    pub calib_samples: usize,
+}
+
+/// Default dataset scales per model — chosen so a full Table-4-style grid
+/// runs on a single CPU core in minutes (see EXPERIMENTS.md).
+fn defaults(model: &str) -> (usize, usize, usize) {
+    // (train_n, test_n, classes) — classes unused for seq tasks
+    match model {
+        "resnet8" => (1024, 512, 10),
+        "resnet20" => (2048, 512, 10),
+        "resnet11b" => (2048, 512, 100),
+        "bert_tiny" => (2048, 512, 0),
+        "gpt_mini" => (0, 0, 0), // corpus-based, see below
+        _ => (1024, 512, 10),
+    }
+}
+
+pub fn build_task(model: &str, batch_size: usize, cfg: &Config) -> Result<Task> {
+    let seed = cfg.u64("data.seed", 0);
+    let (dn, tn, classes) = defaults(model);
+    let train_n = cfg.usize("data.train_n", dn);
+    let test_n = cfg.usize("data.test_n", tn);
+    let calib_samples = cfg.usize("data.calib_samples", 512);
+    let noise = cfg.f32("data.noise", 2.0); // ~75% FP ceiling: leaves room for the PTQ→QAT ordering
+
+    let (train_src, test_src) = match model {
+        "resnet8" | "resnet20" | "resnet11b" => {
+            let hw = cfg.usize("data.hw", 32);
+            // same task (prototypes), disjoint sample streams
+            let tr = images::generate_split(train_n, classes, hw, noise, seed, seed);
+            let te = images::generate_split(test_n, classes, hw, noise, seed, seed ^ 0x7e57);
+            (Source::Images(tr), Source::Images(te))
+        }
+        "bert_tiny" => {
+            let seq = cfg.usize("data.seq_len", 64);
+            let vocab = cfg.usize("data.vocab", 1024);
+            let tr = squad::generate(train_n, seq, vocab, seed);
+            let te = squad::generate(test_n, seq, vocab, seed ^ 0x7e57);
+            (Source::Squad(tr), Source::Squad(te))
+        }
+        "gpt_mini" => {
+            let seq = cfg.usize("data.seq_len", 128);
+            let vocab = cfg.usize("data.vocab", 512);
+            let train_tokens = cfg.usize("data.train_tokens", 300_000);
+            let test_tokens = cfg.usize("data.test_tokens", 40_000);
+            // same language, disjoint streams
+            let tr = corpus::generate_split(train_tokens, vocab, seed, seed);
+            let te = corpus::generate_split(test_tokens, vocab, seed, seed ^ 0x7e57);
+            (
+                Source::Lm { corpus: tr, seq_len: seq },
+                Source::Lm { corpus: te, seq_len: seq },
+            )
+        }
+        other => bail!("unknown model {other:?}"),
+    };
+
+    Ok(Task {
+        train: Loader::new(train_src.clone(), batch_size, seed + 1, true, true),
+        test: Loader::new(test_src, batch_size, seed + 2, false, false),
+        calib: Loader::new(train_src, batch_size, seed + 3, true, true),
+        calib_samples,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_model_task() {
+        let cfg = Config::empty();
+        for m in ["resnet8", "resnet20", "resnet11b", "bert_tiny", "gpt_mini"] {
+            let t = build_task(m, 8, &cfg).unwrap();
+            assert!(t.train.n_batches() > 0, "{m}");
+            assert!(t.test.n_batches() > 0, "{m}");
+        }
+    }
+
+    #[test]
+    fn config_overrides_sizes() {
+        let mut cfg = Config::empty();
+        cfg.set("data.train_n", "64");
+        let t = build_task("resnet8", 8, &cfg).unwrap();
+        assert_eq!(t.train.n_batches(), 8);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(build_task("nope", 8, &Config::empty()).is_err());
+    }
+}

@@ -1,0 +1,377 @@
+//! Trainers: FP baseline pretraining and the EfQAT epoch (Algorithm 1).
+//!
+//! The EfQAT step is exactly the paper's loop:
+//!   1. forward + backward on the AOT artifact — the backward computes the
+//!      full dX chain but only the unfrozen rows of dW/dS_w
+//!      (ratio artifacts: gathered rows; LWPN artifact: lax.cond-gated)
+//!   2. "Optimizer Step": row-masked SGD(momentum) for the unfrozen weight
+//!      channels, dense SGD for biases/norm params, Adam for quantization
+//!      parameters (S_w rows of unfrozen channels; S_x/Z_x per site)
+//!   3. BN running statistics threaded back into the state store
+//!   4. every `f` samples: refresh importances of unfrozen channels and
+//!      re-run Top-K selection (CWPL/CWPN/LWPN policies)
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Loader;
+use crate::freeze::{site_k, FreezePolicy, Mode, Selection, Site};
+use crate::model::{Manifest, ParamStore, QParamStore, StateStore};
+use crate::optim::{Adam, SgdMomentum};
+use crate::runtime::Step;
+use crate::tensor::Tensor;
+
+use super::binder::{bind_inputs, BindCtx};
+use super::metrics::{MetricsLog, StepRecord, StepTiming};
+
+/// Hyper-parameters of one training phase (defaults follow the paper §4).
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub lr_w: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Adam LR for quantization parameters (paper: 1e-6 / 1e-7 per task)
+    pub lr_q: f32,
+    /// optimize ln(S) instead of S (Appendix A.2 ablation)
+    pub log_domain_scales: bool,
+    /// freezing frequency f in *samples* (paper §3.2)
+    pub freq: usize,
+    /// LWPN only: unfrozen-parameter budget (the lwpn artifact is shared
+    /// across ratios — the budget lives in the policy, not the ABI)
+    pub ratio_override: Option<f32>,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            lr_w: 1e-2,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            lr_q: 1e-6,
+            log_domain_scales: false,
+            freq: 4096,
+            ratio_override: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Map (model, bits, mode, ratio%) to the artifact name that serves it.
+pub fn artifact_name(model: &str, bits: &str, mode: &str, ratio_pct: usize) -> String {
+    match mode {
+        "fp" => format!("{model}_fp_train"),
+        "lwpn" => format!("{model}_{bits}_train_lwpn"),
+        // qat == ratio 100; r0 == ratio 0 — all served by ratio artifacts
+        _ => format!("{model}_{bits}_train_r{ratio_pct}"),
+    }
+}
+
+pub fn fwd_artifact_name(model: &str, bits: &str) -> String {
+    if bits == "fp" {
+        format!("{model}_fp_fwd")
+    } else {
+        format!("{model}_{bits}_fwd")
+    }
+}
+
+/// FP baseline pretraining (the paper's FP / FP+1 checkpoints): dense SGD
+/// over every parameter with the `<model>_fp_train` artifact.
+pub fn pretrain_fp(
+    step: &Step,
+    params: &mut ParamStore,
+    states: &mut StateStore,
+    loader: &mut Loader,
+    epochs: usize,
+    cfg: &TrainCfg,
+) -> Result<MetricsLog> {
+    let man = &step.manifest;
+    if man.sel_mode != "fp" {
+        bail!("{} is not an FP train artifact", man.name);
+    }
+    let mut sgd = SgdMomentum::new(cfg.lr_w, cfg.momentum, cfg.weight_decay);
+    let mut log = MetricsLog::new(&format!("pretrain:{}", man.model));
+    let mut step_no = 0usize;
+    for _ in 0..epochs {
+        loader.reset();
+        while let Some(batch) = loader.next_batch() {
+            let mut timing = StepTiming::default();
+            let t0 = Instant::now();
+            let ctx = BindCtx { params, qparams: None, states, batch: &batch, selection: None };
+            let inputs = bind_inputs(man, &ctx)?;
+            timing.bind = t0.elapsed();
+            let (out, dt) = step.execute_timed(&inputs)?;
+            timing.exec = dt;
+
+            let t2 = Instant::now();
+            for spec in &man.outputs {
+                match spec.role.as_str() {
+                    "grad" => {
+                        let of = spec.of.as_deref().unwrap();
+                        let g = out.get(&spec.name)?.f32()?;
+                        sgd.apply_full(of, params.get_mut(of)?, &g.data);
+                    }
+                    "state" => {
+                        let of = spec.of.as_deref().unwrap();
+                        *states.map.get_mut(of).unwrap() = out.get(&spec.name)?.f32()?.clone();
+                    }
+                    _ => {}
+                }
+            }
+            timing.optim = t2.elapsed();
+            log.push(StepRecord {
+                step: step_no,
+                loss: out.loss()?,
+                correct: out.correct()?,
+                batch: batch.count,
+                timing,
+            });
+            step_no += 1;
+        }
+    }
+    Ok(log)
+}
+
+/// How the weight-gradient selection works for a given train artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SelKind {
+    /// full dW everywhere (QAT baseline, ratio=100)
+    Full,
+    /// no dW at all (ratio=0)
+    None,
+    /// per-site index vectors (EfQAT-CWPL / CWPN)
+    Indexed,
+    /// per-site flags (EfQAT-LWPN)
+    Flagged,
+}
+
+fn sel_kind(man: &Manifest) -> SelKind {
+    if man.sel_mode == "lwpn" {
+        SelKind::Flagged
+    } else if man.inputs.iter().any(|i| i.role == "index") {
+        SelKind::Indexed
+    } else if man.ratio <= 0.0 {
+        SelKind::None
+    } else {
+        SelKind::Full
+    }
+}
+
+/// One EfQAT (or QAT) training phase over a quantized model.
+pub struct EfqatTrainer {
+    pub step: Rc<Step>,
+    pub params: ParamStore,
+    pub qparams: QParamStore,
+    pub states: StateStore,
+    pub cfg: TrainCfg,
+    pub policy: Option<FreezePolicy>,
+    sel: SelKind,
+    sgd: SgdMomentum,
+    adam: Adam,
+    step_no: usize,
+}
+
+impl EfqatTrainer {
+    pub fn new(
+        step: Rc<Step>,
+        params: ParamStore,
+        qparams: QParamStore,
+        states: StateStore,
+        mode: Option<Mode>,
+        cfg: TrainCfg,
+    ) -> Result<EfqatTrainer> {
+        let man = &step.manifest;
+        let sel = sel_kind(man);
+        let policy = match sel {
+            SelKind::Indexed | SelKind::Flagged => {
+                let mode = mode.ok_or_else(|| anyhow!("freezing mode required for {}", man.name))?;
+                if sel == SelKind::Flagged && mode != Mode::Lwpn {
+                    bail!("artifact {} is LWPN but mode is {mode:?}", man.name);
+                }
+                let sites: Vec<Site> = man
+                    .wsites
+                    .iter()
+                    .map(|s| Site {
+                        name: s.name.clone(),
+                        c_out: s.c_out,
+                        k: site_k(s.c_out, man.ratio),
+                        size: s.size,
+                    })
+                    .collect();
+                // cross-check static slot counts against the artifact ABI
+                for inp in man.inputs.iter().filter(|i| i.role == "index") {
+                    let of = inp.of.as_deref().unwrap_or("");
+                    let site = sites.iter().find(|s| s.name == of).unwrap();
+                    if site.k != inp.shape[0] {
+                        bail!("site {of}: k mismatch rust {} vs artifact {}", site.k, inp.shape[0]);
+                    }
+                }
+                let weights: Vec<&Tensor> =
+                    sites.iter().map(|s| params.get(&s.name).unwrap()).collect();
+                // indexed artifacts bake k into the ABI — the ratio cannot be
+                // overridden there; the shared LWPN artifact can.
+                let ratio = match (sel, cfg.ratio_override) {
+                    (SelKind::Flagged, Some(r)) => r,
+                    _ => man.ratio,
+                };
+                Some(FreezePolicy::new(mode, ratio, cfg.freq, sites.clone(), &weights))
+            }
+            _ => None,
+        };
+        let sgd = SgdMomentum::new(cfg.lr_w, cfg.momentum, cfg.weight_decay);
+        let adam = Adam::new(cfg.lr_q).log_domain(cfg.log_domain_scales);
+        Ok(EfqatTrainer { step, params, qparams, states, cfg, policy, sel, sgd, adam, step_no: 0 })
+    }
+
+    /// Current selection snapshot (bound to the artifact this step).
+    fn selection(&self) -> Option<Selection> {
+        self.policy.as_ref().map(|p| p.selection().clone())
+    }
+
+    /// One training step on one batch.  Returns the step record.
+    pub fn train_step(&mut self, batch: &crate::data::Batch) -> Result<StepRecord> {
+        let man = self.step.manifest.clone();
+        let mut timing = StepTiming::default();
+        let selection = self.selection();
+
+        let t0 = Instant::now();
+        let ctx = BindCtx {
+            params: &self.params,
+            qparams: Some(&self.qparams),
+            states: &self.states,
+            batch,
+            selection: selection.as_ref(),
+        };
+        let inputs = bind_inputs(&man, &ctx)?;
+        timing.bind = t0.elapsed();
+
+        let (out, dt) = self.step.execute_timed(&inputs)?;
+        timing.exec = dt;
+
+        // ---- Optimizer Step (Algorithm 1) --------------------------------
+        let t2 = Instant::now();
+        let kind_of = |name: &str| -> &str {
+            man.params
+                .iter()
+                .find(|p| p.name == name)
+                .map(|p| p.kind.as_str())
+                .unwrap_or("")
+        };
+        let site_index = |name: &str| man.wsites.iter().position(|s| s.name == name);
+        for spec in &man.outputs {
+            match spec.role.as_str() {
+                "grad" => {
+                    let of = spec.of.as_deref().unwrap();
+                    let g = out.get(&spec.name)?.f32()?;
+                    if let Some(site) = of.strip_prefix("sw:") {
+                        // per-row weight scales: only unfrozen channels update
+                        let sw = self.qparams.sw.get_mut(site).unwrap();
+                        match (self.sel, &selection) {
+                            (SelKind::Indexed, Some(sel)) => {
+                                let si = site_index(site).unwrap();
+                                self.adam.apply_rows(of, &mut sw.data, &g.data, &sel.channels[si]);
+                            }
+                            (SelKind::Flagged, Some(sel)) => {
+                                let si = site_index(site).unwrap();
+                                if sel.flags[si] {
+                                    self.adam.apply_full(of, &mut sw.data, &g.data);
+                                }
+                            }
+                            _ => self.adam.apply_full(of, &mut sw.data, &g.data),
+                        }
+                    } else if let Some(site) = of.strip_prefix("sx:") {
+                        let act = self.qparams.act.get_mut(site).unwrap();
+                        self.adam.apply_scalar(of, &mut act.scale, g.data[0]);
+                    } else if let Some(site) = of.strip_prefix("zx:") {
+                        let act = self.qparams.act.get_mut(site).unwrap();
+                        // zero points are plain parameters (never log-domain)
+                        let mut zp = act.zero_point;
+                        let saved = self.adam.log_domain;
+                        self.adam.log_domain = false;
+                        self.adam.apply_scalar(of, &mut zp, g.data[0]);
+                        self.adam.log_domain = saved;
+                        act.zero_point = zp;
+                    } else if kind_of(of) == "weight" {
+                        match (self.sel, &selection) {
+                            (SelKind::Indexed, Some(sel)) => {
+                                let si = site_index(of).unwrap();
+                                self.sgd.apply_rows(
+                                    of,
+                                    self.params.get_mut(of)?,
+                                    &g.data,
+                                    &sel.channels[si],
+                                );
+                            }
+                            (SelKind::Flagged, Some(sel)) => {
+                                let si = site_index(of).unwrap();
+                                if sel.flags[si] {
+                                    self.sgd.apply_full(of, self.params.get_mut(of)?, &g.data);
+                                }
+                            }
+                            _ => self.sgd.apply_full(of, self.params.get_mut(of)?, &g.data),
+                        }
+                    } else {
+                        // biases / norm params: always updated (paper §4)
+                        self.sgd.apply_full(of, self.params.get_mut(of)?, &g.data);
+                    }
+                }
+                "state" => {
+                    let of = spec.of.as_deref().unwrap();
+                    *self.states.map.get_mut(of).unwrap() = out.get(&spec.name)?.f32()?.clone();
+                }
+                _ => {}
+            }
+        }
+        timing.optim = t2.elapsed();
+
+        // ---- freezing-frequency bookkeeping -------------------------------
+        let t3 = Instant::now();
+        if let Some(policy) = &mut self.policy {
+            let weights: Vec<&Tensor> = policy
+                .sites
+                .iter()
+                .map(|s| self.params.get(&s.name).unwrap())
+                .collect();
+            policy.observe_samples(batch.count, &weights);
+        }
+        timing.freeze = t3.elapsed();
+
+        let rec = StepRecord {
+            step: self.step_no,
+            loss: out.loss()?,
+            correct: out.correct()?,
+            batch: batch.count,
+            timing,
+        };
+        self.step_no += 1;
+        Ok(rec)
+    }
+
+    /// One full epoch (the paper applies exactly one EfQAT epoch).
+    pub fn train_epoch(&mut self, loader: &mut Loader) -> Result<MetricsLog> {
+        let mut log = MetricsLog::new(&format!("efqat:{}", self.step.manifest.name));
+        loader.reset();
+        while let Some(batch) = loader.next_batch() {
+            let rec = self.train_step(&batch)?;
+            log.push(rec);
+        }
+        Ok(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(artifact_name("resnet20", "w4a8", "cwpn", 25), "resnet20_w4a8_train_r25");
+        assert_eq!(artifact_name("resnet20", "w4a8", "qat", 100), "resnet20_w4a8_train_r100");
+        assert_eq!(artifact_name("resnet20", "w4a8", "lwpn", 25), "resnet20_w4a8_train_lwpn");
+        assert_eq!(artifact_name("bert_tiny", "w8a8", "fp", 100), "bert_tiny_fp_train");
+        assert_eq!(fwd_artifact_name("bert_tiny", "fp"), "bert_tiny_fp_fwd");
+        assert_eq!(fwd_artifact_name("bert_tiny", "w8a8"), "bert_tiny_w8a8_fwd");
+    }
+}

@@ -1,0 +1,213 @@
+//! Shuffled mini-batch loader over any synthetic dataset.
+//!
+//! Batches carry named tensors matching the artifact manifest's `data`
+//! inputs (`x`, `y`, `y_start`, `y_end`), plus the *true* example count so
+//! evaluation can wrap-pad the final partial batch (artifacts have a
+//! static batch dimension) without biasing metrics.
+
+use std::collections::BTreeMap;
+
+use crate::rng::Pcg64;
+use crate::tensor::{ITensor, Tensor};
+
+use super::corpus::Corpus;
+use super::images::ImageDataset;
+use super::squad::SquadDataset;
+
+#[derive(Clone)]
+pub enum Source {
+    Images(ImageDataset),
+    Squad(SquadDataset),
+    Lm { corpus: Corpus, seq_len: usize },
+}
+
+impl Source {
+    pub fn len(&self) -> usize {
+        match self {
+            Source::Images(d) => d.n,
+            Source::Squad(d) => d.n,
+            Source::Lm { corpus, seq_len } => corpus.max_offset(*seq_len) / *seq_len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One packed mini-batch.  `count` ≤ batch_size is the number of real
+/// (non-padding) examples.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub f32s: BTreeMap<String, Tensor>,
+    pub i32s: BTreeMap<String, ITensor>,
+    pub count: usize,
+}
+
+pub struct Loader {
+    pub source: Source,
+    pub batch_size: usize,
+    indices: Vec<usize>,
+    pos: usize,
+    rng: Pcg64,
+    shuffle: bool,
+    drop_last: bool,
+}
+
+impl Loader {
+    pub fn new(source: Source, batch_size: usize, seed: u64, shuffle: bool, drop_last: bool) -> Loader {
+        let mut l = Loader {
+            indices: (0..source.len()).collect(),
+            source,
+            batch_size,
+            pos: 0,
+            rng: Pcg64::new(seed ^ 0x10ade8),
+            shuffle,
+            drop_last,
+        };
+        l.reset();
+        l
+    }
+
+    /// Start a new epoch (reshuffles if enabled).
+    pub fn reset(&mut self) {
+        self.pos = 0;
+        if self.shuffle {
+            self.rng.shuffle(&mut self.indices);
+        }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        if self.drop_last {
+            self.indices.len() / self.batch_size
+        } else {
+            self.indices.len().div_ceil(self.batch_size)
+        }
+    }
+
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        let remaining = self.indices.len().saturating_sub(self.pos);
+        if remaining == 0 || (self.drop_last && remaining < self.batch_size) {
+            return None;
+        }
+        let count = remaining.min(self.batch_size);
+        // wrap-pad the final partial batch
+        let ids: Vec<usize> = (0..self.batch_size)
+            .map(|i| self.indices[(self.pos + i) % self.indices.len().max(1)])
+            .collect();
+        self.pos += count;
+        Some(self.pack(&ids, count))
+    }
+
+    fn pack(&self, ids: &[usize], count: usize) -> Batch {
+        let b = self.batch_size;
+        let mut f32s = BTreeMap::new();
+        let mut i32s = BTreeMap::new();
+        match &self.source {
+            Source::Images(d) => {
+                let s = d.sample_size();
+                let mut x = Vec::with_capacity(b * s);
+                let mut y = Vec::with_capacity(b);
+                for &i in ids {
+                    x.extend_from_slice(d.image(i));
+                    y.push(d.labels[i]);
+                }
+                f32s.insert(
+                    "x".to_string(),
+                    Tensor { shape: vec![b, d.channels, d.hw, d.hw], data: x },
+                );
+                i32s.insert("y".to_string(), ITensor { shape: vec![b], data: y });
+            }
+            Source::Squad(d) => {
+                let mut x = Vec::with_capacity(b * d.seq_len);
+                let (mut ys, mut ye) = (Vec::with_capacity(b), Vec::with_capacity(b));
+                for &i in ids {
+                    x.extend_from_slice(d.seq(i));
+                    ys.push(d.starts[i]);
+                    ye.push(d.ends[i]);
+                }
+                i32s.insert("x".to_string(), ITensor { shape: vec![b, d.seq_len], data: x });
+                i32s.insert("y_start".to_string(), ITensor { shape: vec![b], data: ys });
+                i32s.insert("y_end".to_string(), ITensor { shape: vec![b], data: ye });
+            }
+            Source::Lm { corpus, seq_len } => {
+                let t = *seq_len;
+                let mut x = Vec::with_capacity(b * t);
+                let mut y = Vec::with_capacity(b * t);
+                for &i in ids {
+                    let (xs, ys) = corpus.window(i * t, t);
+                    x.extend_from_slice(xs);
+                    y.extend_from_slice(ys);
+                }
+                i32s.insert("x".to_string(), ITensor { shape: vec![b, t], data: x });
+                i32s.insert("y".to_string(), ITensor { shape: vec![b, t], data: y });
+            }
+        }
+        Batch { f32s, i32s, count }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corpus, images, squad};
+
+    #[test]
+    fn epoch_covers_every_sample_once() {
+        let ds = images::generate(50, 10, 4, 0.1, 1);
+        let mut l = Loader::new(Source::Images(ds), 8, 0, true, true);
+        let mut seen = 0;
+        while let Some(b) = l.next_batch() {
+            assert_eq!(b.count, 8);
+            seen += b.count;
+        }
+        assert_eq!(seen, 48); // drop_last
+        assert_eq!(l.n_batches(), 6);
+    }
+
+    #[test]
+    fn eval_pads_final_batch() {
+        let ds = images::generate(10, 10, 4, 0.1, 1);
+        let mut l = Loader::new(Source::Images(ds), 8, 0, false, false);
+        let b1 = l.next_batch().unwrap();
+        assert_eq!(b1.count, 8);
+        let b2 = l.next_batch().unwrap();
+        assert_eq!(b2.count, 2);
+        assert_eq!(b2.f32s["x"].shape, vec![8, 3, 4, 4]); // padded to full shape
+        assert!(l.next_batch().is_none());
+    }
+
+    #[test]
+    fn squad_batch_shapes() {
+        let ds = squad::generate(20, 32, 256, 2);
+        let mut l = Loader::new(Source::Squad(ds), 4, 0, true, true);
+        let b = l.next_batch().unwrap();
+        assert_eq!(b.i32s["x"].shape, vec![4, 32]);
+        assert_eq!(b.i32s["y_start"].shape, vec![4]);
+        assert_eq!(b.i32s["y_end"].shape, vec![4]);
+    }
+
+    #[test]
+    fn lm_windows_are_shifted_targets() {
+        let c = corpus::generate(10_000, 64, 3);
+        let mut l = Loader::new(Source::Lm { corpus: c, seq_len: 16 }, 2, 0, false, true);
+        let b = l.next_batch().unwrap();
+        let x = &b.i32s["x"].data;
+        let y = &b.i32s["y"].data;
+        assert_eq!(&x[1..16], &y[..15]);
+    }
+
+    #[test]
+    fn shuffle_changes_order_but_not_multiset() {
+        let ds = images::generate(30, 10, 4, 0.1, 7);
+        let labels = ds.labels.clone();
+        let mut l = Loader::new(Source::Images(ds), 30, 11, true, true);
+        let b = l.next_batch().unwrap();
+        let mut got = b.i32s["y"].data.clone();
+        assert_ne!(got, labels, "shuffle did nothing");
+        got.sort();
+        let mut want = labels;
+        want.sort();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic datasets standing in for the paper's benchmarks
+//! (DESIGN.md §3 substitutions — no CIFAR/ImageNet/SQuAD on this testbed):
+//!
+//! * [`images`]  — class-conditioned structured images (CIFAR-10 /
+//!   ImageNet-100 stand-ins) learnable by the same ResNets.
+//! * [`squad`]   — span-extraction QA with needle-pattern answers
+//!   (SQuAD stand-in, evaluated with token-overlap F1 like the paper).
+//! * [`corpus`]  — a tiny Markov LM corpus for the end-to-end example.
+//! * [`loader`]  — shuffled mini-batch iteration over any of the above.
+
+pub mod corpus;
+pub mod images;
+pub mod loader;
+pub mod squad;
+
+pub use loader::{Batch, Loader};

@@ -1,0 +1,137 @@
+//! Span-extraction QA dataset (SQuAD v1.1 stand-in, DESIGN.md §3).
+//!
+//! Layout of each sequence (length T, vocab V):
+//!   pos 0:  CLS
+//!   pos 1:  the *query* token q (a random content token)
+//!   pos 2:  the *length* token encoding the answer length L ∈ 1..=4
+//!   pos 3+: random context tokens, with the answer planted: the token at
+//!           the answer start equals q, followed by L-1 "payload" tokens.
+//!
+//! A model must attend from the query position to the matching context
+//! token — the same retrieval structure extractive QA rewards — and emit
+//! (start, end).  Metrics: exact match and token-overlap F1 (the paper's
+//! SQuAD metric), see [`span_f1`].
+
+use crate::rng::Pcg64;
+
+pub const CLS: i32 = 0;
+pub const LEN_BASE: i32 = 1; // tokens 1..=4 encode answer length
+pub const CONTENT_BASE: i32 = 8;
+
+#[derive(Clone)]
+pub struct SquadDataset {
+    pub n: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// flattened [n, seq_len]
+    pub tokens: Vec<i32>,
+    pub starts: Vec<i32>,
+    pub ends: Vec<i32>,
+}
+
+pub fn generate(n: usize, seq_len: usize, vocab: usize, seed: u64) -> SquadDataset {
+    assert!(vocab > CONTENT_BASE as usize + 8);
+    let mut rng = Pcg64::new(seed ^ 0x50AD);
+    let mut tokens = vec![0i32; n * seq_len];
+    let mut starts = vec![0i32; n];
+    let mut ends = vec![0i32; n];
+    let content = |r: &mut Pcg64| CONTENT_BASE + r.below(vocab - CONTENT_BASE as usize) as i32;
+    for i in 0..n {
+        let t = &mut tokens[i * seq_len..(i + 1) * seq_len];
+        let q = content(&mut rng);
+        let len = 1 + rng.below(4); // answer length 1..=4
+        let start = 3 + rng.below(seq_len - 3 - len);
+        t[0] = CLS;
+        t[1] = q;
+        t[2] = LEN_BASE + (len as i32 - 1);
+        for j in 3..seq_len {
+            let mut tok = content(&mut rng);
+            // the query token must appear exactly once in the context
+            while tok == q {
+                tok = content(&mut rng);
+            }
+            t[j] = tok;
+        }
+        t[start] = q;
+        starts[i] = start as i32;
+        ends[i] = (start + len - 1) as i32;
+    }
+    SquadDataset { n, seq_len, vocab, tokens, starts, ends }
+}
+
+impl SquadDataset {
+    pub fn seq(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+}
+
+/// Token-overlap F1 between a predicted span and the gold span — the
+/// SQuAD metric the paper reports for BERT.
+pub fn span_f1(pred_start: usize, pred_end: usize, gold_start: usize, gold_end: usize) -> f32 {
+    let (ps, pe) = if pred_end < pred_start { (pred_start, pred_start) } else { (pred_start, pred_end) };
+    let overlap = {
+        let lo = ps.max(gold_start);
+        let hi = pe.min(gold_end);
+        (hi + 1).saturating_sub(lo)
+    };
+    if overlap == 0 {
+        return 0.0;
+    }
+    let pred_len = pe - ps + 1;
+    let gold_len = gold_end - gold_start + 1;
+    let p = overlap as f32 / pred_len as f32;
+    let r = overlap as f32 / gold_len as f32;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn answers_are_recoverable_by_needle_search() {
+        let ds = generate(100, 32, 256, 5);
+        for i in 0..ds.n {
+            let t = ds.seq(i);
+            let q = t[1];
+            let len = (t[2] - LEN_BASE + 1) as usize;
+            // the only context occurrence of q is the answer start
+            let found: Vec<usize> = (3..32).filter(|&j| t[j] == q).collect();
+            assert_eq!(found.len(), 1, "sample {i}");
+            assert_eq!(found[0], ds.starts[i] as usize);
+            assert_eq!(ds.ends[i] as usize, found[0] + len - 1);
+        }
+    }
+
+    #[test]
+    fn f1_exact_match_is_one() {
+        assert_eq!(span_f1(5, 7, 5, 7), 1.0);
+    }
+
+    #[test]
+    fn f1_disjoint_is_zero() {
+        assert_eq!(span_f1(1, 2, 5, 7), 0.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        // pred [5,6], gold [6,7]: overlap 1, p=0.5, r=0.5 -> f1=0.5
+        assert!((span_f1(5, 6, 6, 7) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_f1_bounds_and_symmetry() {
+        forall(500, |r| {
+            let gs = r.below(20);
+            let ge = gs + r.below(4);
+            let ps = r.below(20);
+            let pe = ps + r.below(4);
+            let f = span_f1(ps, pe, gs, ge);
+            assert!((0.0..=1.0).contains(&f));
+            // overlap metric is symmetric in pred/gold
+            let g = span_f1(gs, ge, ps, pe);
+            assert!((f - g).abs() < 1e-6);
+        });
+    }
+}

@@ -1,0 +1,392 @@
+//! Channel/layer freezing — the heart of EfQAT (paper §3.2, Table 2).
+//!
+//! * importance metric: I_B = mean |w| per output channel (Eq. 6)
+//! * three selection policies:
+//!     CWPL  channel-wise per-layer   — top-⌈r·C_out⌉ channels in each layer
+//!     CWPN  channel-wise per-network — channels ranked globally; each
+//!           layer's static gradient slots are filled by global rank first,
+//!           then local rank (AOT artifacts fix the per-layer slot count —
+//!           see DESIGN.md §3 substitutions)
+//!     LWPN  layer-wise per-network   — whole layers freeze; greedy by
+//!           layer importance under the global weight budget r·|W|
+//! * freezing frequency: importances of the *unfrozen* channels are
+//!   recomputed every `f` training samples (paper §3.2 "Freezing
+//!   Frequency"); frozen channels keep their stale importance and keep
+//!   competing, exactly as in the paper.
+
+use crate::tensor::{topk, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Cwpl,
+    Cwpn,
+    Lwpn,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "cwpl" => Some(Mode::Cwpl),
+            "cwpn" => Some(Mode::Cwpn),
+            "lwpn" => Some(Mode::Lwpn),
+            _ => None,
+        }
+    }
+}
+
+/// One freezable weight site (a conv's output channels / a linear's rows).
+#[derive(Clone, Debug)]
+pub struct Site {
+    pub name: String,
+    pub c_out: usize,
+    /// gradient slots in the ratio artifacts: k = max(1, ⌊r·C_out⌋)
+    pub k: usize,
+    /// total parameter count of the site (LWPN budgeting)
+    pub size: usize,
+}
+
+/// Current selection: which channels (or layers) are unfrozen.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// per site: unfrozen channel ids, length = site.k (CWPL/CWPN)
+    pub channels: Vec<Vec<usize>>,
+    /// per site: unfrozen flag (LWPN)
+    pub flags: Vec<bool>,
+}
+
+pub struct FreezePolicy {
+    pub mode: Mode,
+    pub ratio: f32,
+    /// recompute importances every `freq` samples (paper's f)
+    pub freq: usize,
+    pub sites: Vec<Site>,
+    importance: Vec<Vec<f32>>,
+    selection: Selection,
+    samples_since_update: usize,
+    /// number of importance refreshes performed (exposed for tests/metrics)
+    pub updates: usize,
+}
+
+impl FreezePolicy {
+    pub fn new(mode: Mode, ratio: f32, freq: usize, sites: Vec<Site>, weights: &[&Tensor]) -> Self {
+        assert_eq!(sites.len(), weights.len());
+        let importance: Vec<Vec<f32>> = weights.iter().map(|w| w.row_abs_mean()).collect();
+        let mut p = FreezePolicy {
+            mode,
+            ratio,
+            freq,
+            sites,
+            importance,
+            selection: Selection { channels: Vec::new(), flags: Vec::new() },
+            samples_since_update: 0,
+            updates: 0,
+        };
+        p.reselect();
+        p
+    }
+
+    pub fn selection(&self) -> &Selection {
+        &self.selection
+    }
+
+    pub fn importance(&self, site: usize) -> &[f32] {
+        &self.importance[site]
+    }
+
+    /// Advance the sample counter; when `f` samples have passed, refresh the
+    /// importance of the currently-unfrozen channels and reselect.
+    /// Returns true if a refresh happened.
+    pub fn observe_samples(&mut self, n: usize, weights: &[&Tensor]) -> bool {
+        self.samples_since_update += n;
+        if self.samples_since_update < self.freq.max(1) {
+            return false;
+        }
+        self.samples_since_update = 0;
+        self.refresh(weights);
+        true
+    }
+
+    /// Paper §3.2: iterate over the *unfrozen* channels only, update their
+    /// importance, then re-run selection.
+    pub fn refresh(&mut self, weights: &[&Tensor]) {
+        match self.mode {
+            Mode::Lwpn => {
+                for (si, unfrozen) in self.selection.flags.clone().iter().enumerate() {
+                    if *unfrozen {
+                        self.importance[si] = weights[si].row_abs_mean();
+                    }
+                }
+            }
+            _ => {
+                for (si, chans) in self.selection.channels.clone().iter().enumerate() {
+                    let rs = weights[si].row_size() as f32;
+                    for &c in chans {
+                        let imp = weights[si].row(c).iter().map(|x| x.abs()).sum::<f32>() / rs;
+                        self.importance[si][c] = imp;
+                    }
+                }
+            }
+        }
+        self.reselect();
+        self.updates += 1;
+    }
+
+    fn reselect(&mut self) {
+        self.selection = match self.mode {
+            Mode::Cwpl => self.select_cwpl(),
+            Mode::Cwpn => self.select_cwpn(),
+            Mode::Lwpn => self.select_lwpn(),
+        };
+    }
+
+    fn select_cwpl(&self) -> Selection {
+        let channels = self
+            .sites
+            .iter()
+            .zip(&self.importance)
+            .map(|(site, imp)| topk(imp, site.k))
+            .collect();
+        Selection { channels, flags: vec![true; self.sites.len()] }
+    }
+
+    /// Global ranking, filled into each site's static slot budget; leftover
+    /// slots of under-subscribed sites are topped up by local rank.
+    fn select_cwpn(&self) -> Selection {
+        let mut ranked: Vec<(usize, usize, f32)> = Vec::new(); // (site, ch, imp)
+        for (si, imp) in self.importance.iter().enumerate() {
+            for (ci, &v) in imp.iter().enumerate() {
+                ranked.push((si, ci, v));
+            }
+        }
+        ranked.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+        let mut channels: Vec<Vec<usize>> = vec![Vec::new(); self.sites.len()];
+        for (si, ci, _) in ranked {
+            if channels[si].len() < self.sites[si].k {
+                channels[si].push(ci);
+            }
+        }
+        Selection { channels, flags: vec![true; self.sites.len()] }
+    }
+
+    /// Greedy layer selection by mean layer importance, under the global
+    /// parameter budget r·Σ|site|; always unfreezes at least one layer for
+    /// r > 0.
+    fn select_lwpn(&self) -> Selection {
+        let total: usize = self.sites.iter().map(|s| s.size).sum();
+        let budget = (self.ratio as f64 * total as f64) as usize;
+        let mut order: Vec<usize> = (0..self.sites.len()).collect();
+        let layer_imp: Vec<f32> = self
+            .importance
+            .iter()
+            .map(|imp| imp.iter().sum::<f32>() / imp.len().max(1) as f32)
+            .collect();
+        order.sort_by(|&a, &b| {
+            layer_imp[b].partial_cmp(&layer_imp[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut flags = vec![false; self.sites.len()];
+        let mut used = 0usize;
+        for si in order {
+            if self.ratio <= 0.0 {
+                break;
+            }
+            if used == 0 || used + self.sites[si].size <= budget {
+                flags[si] = true;
+                used += self.sites[si].size;
+            }
+        }
+        Selection { channels: vec![Vec::new(); self.sites.len()], flags }
+    }
+
+    /// Fraction of network weights currently receiving gradients.
+    pub fn unfrozen_fraction(&self) -> f32 {
+        let total: usize = self.sites.iter().map(|s| s.size).sum();
+        let unfrozen: usize = match self.mode {
+            Mode::Lwpn => self
+                .sites
+                .iter()
+                .zip(&self.selection.flags)
+                .filter(|(_, &f)| f)
+                .map(|(s, _)| s.size)
+                .sum(),
+            _ => self
+                .sites
+                .iter()
+                .zip(&self.selection.channels)
+                .map(|(s, ch)| ch.len() * s.size / s.c_out.max(1))
+                .sum(),
+        };
+        unfrozen as f32 / total.max(1) as f32
+    }
+}
+
+/// Static slot count per site (must mirror python/compile/step.py::site_k).
+pub fn site_k(c_out: usize, ratio: f32) -> usize {
+    if ratio >= 1.0 {
+        c_out
+    } else {
+        ((ratio * c_out as f32) as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::forall;
+
+    fn mk_weights(rng: &mut Pcg64, dims: &[(usize, usize)]) -> Vec<Tensor> {
+        dims.iter()
+            .map(|&(r, c)| Tensor::new(vec![r, c], rng.normal_vec(r * c, 1.0)).unwrap())
+            .collect()
+    }
+
+    fn mk_sites(dims: &[(usize, usize)], ratio: f32) -> Vec<Site> {
+        dims.iter()
+            .enumerate()
+            .map(|(i, &(r, c))| Site {
+                name: format!("w{i}"),
+                c_out: r,
+                k: site_k(r, ratio),
+                size: r * c,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn site_k_matches_python_rule() {
+        assert_eq!(site_k(16, 0.05), 1); // max(1, floor(0.8))
+        assert_eq!(site_k(64, 0.25), 16);
+        assert_eq!(site_k(64, 1.0), 64);
+        assert_eq!(site_k(10, 0.999), 9);
+    }
+
+    #[test]
+    fn cwpl_selects_top_channels_per_layer() {
+        let w = Tensor::new(vec![4, 2], vec![0.1, 0.1, 9., 9., 0.2, 0.2, 5., 5.]).unwrap();
+        let sites = mk_sites(&[(4, 2)], 0.5);
+        let p = FreezePolicy::new(Mode::Cwpl, 0.5, 100, sites, &[&w]);
+        assert_eq!(p.selection().channels[0], vec![1, 3]);
+    }
+
+    #[test]
+    fn cwpn_prefers_globally_important_channels() {
+        // site 0 channels dwarf site 1's, so site 0's slots fill from the
+        // global top while site 1 still gets its guaranteed k slots
+        let w0 = Tensor::new(vec![2, 2], vec![10., 10., 8., 8.]).unwrap();
+        let w1 = Tensor::new(vec![4, 2], vec![1., 1., 3., 3., 2., 2., 0.5, 0.5]).unwrap();
+        let sites = mk_sites(&[(2, 2), (4, 2)], 0.5);
+        let p = FreezePolicy::new(Mode::Cwpn, 0.5, 100, sites, &[&w0, &w1]);
+        assert_eq!(p.selection().channels[0], vec![0]);
+        assert_eq!(p.selection().channels[1], vec![1, 2]);
+    }
+
+    #[test]
+    fn lwpn_respects_budget_and_importance() {
+        let w0 = Tensor::new(vec![2, 4], vec![5.0; 8]).unwrap(); // important, 8 params
+        let w1 = Tensor::new(vec![2, 4], vec![0.1; 8]).unwrap();
+        let sites = mk_sites(&[(2, 4), (2, 4)], 0.5);
+        let p = FreezePolicy::new(Mode::Lwpn, 0.5, 100, sites, &[&w0, &w1]);
+        assert_eq!(p.selection().flags, vec![true, false]);
+    }
+
+    #[test]
+    fn lwpn_always_unfreezes_one_layer() {
+        let w0 = Tensor::new(vec![2, 4], vec![5.0; 8]).unwrap();
+        let w1 = Tensor::new(vec![2, 4], vec![0.1; 8]).unwrap();
+        let sites = mk_sites(&[(2, 4), (2, 4)], 0.05);
+        let p = FreezePolicy::new(Mode::Lwpn, 0.05, 100, sites, &[&w0, &w1]);
+        assert_eq!(p.selection().flags.iter().filter(|&&f| f).count(), 1);
+    }
+
+    #[test]
+    fn freezing_frequency_counts_samples() {
+        let mut rng = Pcg64::new(0);
+        let ws = mk_weights(&mut rng, &[(8, 4)]);
+        let refs: Vec<&Tensor> = ws.iter().collect();
+        let mut p = FreezePolicy::new(Mode::Cwpl, 0.5, 100, mk_sites(&[(8, 4)], 0.5), &refs);
+        assert!(!p.observe_samples(64, &refs));
+        assert!(p.observe_samples(64, &refs)); // 128 >= 100 -> refresh
+        assert_eq!(p.updates, 1);
+        assert!(!p.observe_samples(32, &refs)); // counter reset
+    }
+
+    #[test]
+    fn refresh_tracks_weight_changes_of_unfrozen_channels() {
+        let mut w = Tensor::new(vec![4, 2], vec![4., 4., 3., 3., 2., 2., 1., 1.]).unwrap();
+        let sites = mk_sites(&[(4, 2)], 0.5);
+        let mut p = FreezePolicy::new(Mode::Cwpl, 0.5, 1, sites, &[&w]);
+        assert_eq!(p.selection().channels[0], vec![0, 1]);
+        // unfrozen channel 1 decays below frozen channel 2's stale value
+        w.row_mut(1).copy_from_slice(&[0.1, 0.1]);
+        p.refresh(&[&w]);
+        assert_eq!(p.selection().channels[0], vec![0, 2]);
+    }
+
+    #[test]
+    fn prop_selection_invariants() {
+        forall(200, |r| {
+            let n_sites = 1 + r.below(4);
+            let dims: Vec<(usize, usize)> =
+                (0..n_sites).map(|_| (1 + r.below(32), 1 + r.below(8))).collect();
+            let mut rng = r.split(1);
+            let ws = mk_weights(&mut rng, &dims);
+            let refs: Vec<&Tensor> = ws.iter().collect();
+            let ratio = r.uniform_in(0.01, 0.99);
+            for mode in [Mode::Cwpl, Mode::Cwpn, Mode::Lwpn] {
+                let p = FreezePolicy::new(mode, ratio, 100, mk_sites(&dims, ratio), &refs);
+                let sel = p.selection();
+                match mode {
+                    Mode::Lwpn => {
+                        assert!(sel.flags.iter().any(|&f| f));
+                        let total: usize = dims.iter().map(|(a, b)| a * b).sum();
+                        let used: usize = dims
+                            .iter()
+                            .zip(&sel.flags)
+                            .filter(|(_, &f)| f)
+                            .map(|((a, b), _)| a * b)
+                            .sum();
+                        // greedy guarantees: either within budget, or a
+                        // single (guaranteed) layer that alone exceeds it
+                        let largest = dims.iter().map(|(a, b)| a * b).max().unwrap();
+                        let budget = (ratio as f64 * total as f64) as usize;
+                        assert!(
+                            used <= budget.max(largest),
+                            "budget exceeded: {used} of {total} at r={ratio}"
+                        );
+                    }
+                    _ => {
+                        for (si, ch) in sel.channels.iter().enumerate() {
+                            // exactly k slots, all distinct, all in range
+                            assert_eq!(ch.len(), site_k(dims[si].0, ratio));
+                            let mut s = ch.clone();
+                            s.sort();
+                            s.dedup();
+                            assert_eq!(s.len(), ch.len(), "duplicate channels");
+                            assert!(ch.iter().all(|&c| c < dims[si].0));
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_cwpl_selects_max_importance_channels() {
+        forall(100, |r| {
+            let rows = 2 + r.below(20);
+            let mut rng = r.split(2);
+            let w = Tensor::new(vec![rows, 3], rng.normal_vec(rows * 3, 1.0)).unwrap();
+            let ratio = r.uniform_in(0.05, 0.95);
+            let sites = mk_sites(&[(rows, 3)], ratio);
+            let p = FreezePolicy::new(Mode::Cwpl, ratio, 100, sites, &[&w]);
+            let imp = w.row_abs_mean();
+            let sel = &p.selection().channels[0];
+            let worst_sel = sel.iter().map(|&c| imp[c]).fold(f32::INFINITY, f32::min);
+            for (c, &v) in imp.iter().enumerate() {
+                if !sel.contains(&c) {
+                    assert!(v <= worst_sel + 1e-6);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Benchmark harness: timing statistics + paper-format table printing
+//! (criterion is unavailable offline; benches use `harness = false`).
+//!
+//! Every `benches/*.rs` regenerates one of the paper's tables/figures and
+//! appends machine-readable CSV rows to `bench_out/` alongside the pretty
+//! console table.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Summary statistics over repeated timed runs (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from(samples: &[f64]) -> Stats {
+        if samples.is_empty() {
+            return Stats::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+/// Time `f` for `warmup + iters` runs, keeping the last `iters`.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Stats::from(&samples)
+}
+
+/// Fixed-width console table, paper style.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        println!("\n=== {} ===", self.title);
+        println!("{}", "-".repeat(line));
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, w) in widths.iter().enumerate() {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                s.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(line));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!("{}", "-".repeat(line));
+    }
+
+    /// Append rows as CSV (with header if the file is new).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let new = !path.exists();
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if new {
+            writeln!(f, "{}", self.header.join(","))?;
+        }
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Render an ASCII sparkline for loss curves / figure-style output.
+pub fn sparkline(values: &[f32], width: usize) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let stride = (values.len() as f32 / width.max(1) as f32).max(1.0);
+    let pick: Vec<f32> = (0..values.len().min(width))
+        .map(|i| values[(i as f32 * stride) as usize % values.len()])
+        .collect();
+    let lo = pick.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = pick.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-9);
+    pick.iter()
+        .map(|v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_renders_and_writes_csv() {
+        let mut t = Table::new("Table 5", &["model", "mode", "time"]);
+        t.row(&["resnet20".into(), "CWPN".into(), "3.46".into()]);
+        t.print();
+        let dir = std::env::temp_dir().join("efqat_tbl_test");
+        let p = dir.join("t.csv");
+        std::fs::remove_file(&p).ok();
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("model,mode,time\n"));
+        assert!(s.contains("resnet20,CWPN,3.46"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0], 4);
+        assert_eq!(s.chars().count(), 4);
+    }
+}

@@ -1,0 +1,35 @@
+//! EfQAT — Efficient Quantization-Aware Training (Ashkboos et al., 2024).
+//!
+//! Layer-3 coordinator of the three-layer reproduction:
+//!
+//! * [`runtime`] loads AOT-compiled HLO artifacts (JAX/Pallas, built once by
+//!   `make artifacts`) onto a PJRT client and executes them — python is
+//!   never on the training path.
+//! * [`coordinator`] implements the paper's Algorithm 1: PTQ initialization,
+//!   the EfQAT epoch with channel/layer freezing, and the optimizer step.
+//! * [`freeze`] implements the importance metric (Eq. 6) and the three
+//!   freezing policies (CWPL / CWPN / LWPN, Table 2).
+//! * [`quant`] mirrors the quantization math (Eq. 1–4) host-side for PTQ
+//!   calibration and unit-testing against the L1 kernels.
+//! * [`data`] generates the synthetic datasets standing in for CIFAR-10 /
+//!   ImageNet / SQuAD (DESIGN.md §3) and a tiny LM corpus.
+//!
+//! Offline-build note: only the crates vendored with the `xla` crate are
+//! available, so [`cli`], [`cfg`], [`json`], [`rng`], [`harness`] and
+//! [`testing`] provide the small subset of clap/serde/rand/criterion/
+//! proptest functionality this project needs.
+
+pub mod cfg;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod freeze;
+pub mod harness;
+pub mod json;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;

@@ -1,0 +1,151 @@
+//! `efqat` — CLI launcher for the EfQAT training system.
+//!
+//! Subcommands:
+//!   pretrain  train the FP baseline checkpoint         (paper Table 3 "FP")
+//!   ptq       MinMax post-training quantization + eval (paper Table 3 "PTQ")
+//!   train     full pipeline: FP ckpt → PTQ → one EfQAT epoch → eval
+//!             (--mode cwpl|cwpn|lwpn|qat|r0, --ratio %, --train.freq f)
+//!   eval      evaluate a saved checkpoint (fp or quantized)
+//!   info      list artifacts and their manifests
+//!
+//! Any config key can be overridden with `--key value`
+//! (e.g. `--data.train_n 4096 --train.lr_w 1e-3 --config configs/cifar.toml`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use efqat::cfg::Config;
+use efqat::cli::Args;
+use efqat::coordinator::pipeline::{
+    artifacts_dir, fwd_artifact_name_of, load_quant_checkpoint, run_efqat_pipeline, run_pretrain,
+};
+use efqat::coordinator::tasks::build_task;
+use efqat::coordinator::{evaluate, Session};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: efqat <pretrain|ptq|train|eval|info> --model <m> [--bits w8a8] \
+         [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--config file.toml] [--key value ...]"
+    );
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let mut cfg = match args.opt("config") {
+        Some(p) => Config::load(Path::new(p))?,
+        None => Config::empty(),
+    };
+    let overrides: BTreeMap<String, String> = args.options.clone();
+    cfg.override_with(&overrides);
+
+    match args.subcommand.as_str() {
+        "pretrain" => {
+            let model = cfg.req_str("model")?;
+            let session = Session::new(&artifacts_dir(&cfg))?;
+            run_pretrain(&session, &cfg, &model, cfg.usize("train.epochs", 3))?;
+            Ok(())
+        }
+        "ptq" => cmd_ptq(&cfg),
+        "train" => {
+            let model = cfg.req_str("model")?;
+            let session = Session::new(&artifacts_dir(&cfg))?;
+            let summary = run_efqat_pipeline(
+                &session,
+                &cfg,
+                &model,
+                &cfg.str("bits", "w8a8"),
+                &cfg.str("mode", "cwpn"),
+                cfg.usize("ratio", 25),
+            )?;
+            println!("{}", summary.render());
+            Ok(())
+        }
+        "eval" => cmd_eval(&cfg),
+        "info" => cmd_info(&cfg),
+        other => {
+            print_usage();
+            bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn cmd_ptq(cfg: &Config) -> Result<()> {
+    use efqat::coordinator::calibrate;
+    use efqat::coordinator::pipeline::{load_fp_checkpoint, parse_bits};
+
+    let model = cfg.req_str("model")?;
+    let bits = cfg.str("bits", "w8a8");
+    let session = Session::new(&artifacts_dir(cfg))?;
+    let (params, states) = load_fp_checkpoint(cfg, &model)?;
+    let calib = session.steps.get(&format!("{model}_calib"))?;
+    let mut task = build_task(&model, calib.manifest.batch_size, cfg)?;
+    let (w_bits, a_bits) = parse_bits(&bits)?;
+    let q = calibrate(&calib, &params, &states, &mut task.calib, task.calib_samples, w_bits, a_bits)?;
+    let fwd = session.steps.get(&fwd_artifact_name_of(&model, &bits))?;
+    let result = evaluate(&fwd, &params, Some(&q), &states, &mut task.test)?;
+    println!("[ptq] {model} {bits}: loss {:.4} headline {:.2}", result.loss, result.headline());
+    Ok(())
+}
+
+fn cmd_eval(cfg: &Config) -> Result<()> {
+    let model = cfg.req_str("model")?;
+    let bits = cfg.str("bits", "fp");
+    let ckpt = cfg.req_str("ckpt")?;
+    let session = Session::new(&artifacts_dir(cfg))?;
+    let (params, states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
+    let fwd = session.steps.get(&fwd_artifact_name_of(&model, &bits))?;
+    let mut task = build_task(&model, fwd.manifest.batch_size, cfg)?;
+    let qopt = if bits == "fp" { None } else { Some(&q) };
+    let result = evaluate(&fwd, &params, qopt, &states, &mut task.test)?;
+    println!(
+        "[eval] {model} {bits}: loss {:.4} acc {:.4} headline {:.2} (n={})",
+        result.loss,
+        result.accuracy,
+        result.headline(),
+        result.n
+    );
+    Ok(())
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    let dir = artifacts_dir(cfg);
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            e.file_name()
+                .to_string_lossy()
+                .strip_suffix(".manifest.json")
+                .map(str::to_string)
+        })
+        .collect();
+    names.sort();
+    println!("{} artifacts in {}:", names.len(), dir.display());
+    for n in names {
+        let m = efqat::model::Manifest::load(&dir.join(format!("{n}.manifest.json")))?;
+        println!(
+            "  {n:<40} kind={:<6} bits=w{}a{} batch={} inputs={} outputs={}",
+            m.kind,
+            m.w_bits,
+            m.a_bits,
+            m.batch_size,
+            m.inputs.len(),
+            m.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,445 @@
+//! Artifact manifests, parameter/state stores, and checkpoint I/O.
+//!
+//! The manifest JSON emitted by `python/compile/aot.py` is the ABI between
+//! the layers: ordered input/output tensor specs plus the model's parameter
+//! inventory (shapes, initializer recipes, kinds).  The coordinator builds
+//! a [`ParamStore`] from it (so rust owns initialization — python never
+//! ships weights) and binds literals by manifest order at execution time.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+use crate::quant::{weight_scales, ActQParams};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub role: String,
+    pub of: Option<String>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Init {
+    HeConv(usize),
+    HeLin(usize),
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+    /// 'weight' | 'bias' | 'norm' | 'embed'
+    pub kind: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct StateInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // 'zeros' | 'ones'
+}
+
+#[derive(Clone, Debug)]
+pub struct WSite {
+    pub name: String,
+    pub c_out: usize,
+    pub size: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub model: String,
+    pub kind: String,     // 'train' | 'fwd' | 'calib'
+    pub sel_mode: String, // 'fp' | 'ratio' | 'lwpn' | ''
+    pub ratio: f32,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub batch_size: usize,
+    pub params: Vec<ParamInfo>,
+    pub states: Vec<StateInfo>,
+    pub wsites: Vec<WSite>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.get("name")?.str()?.to_string(),
+        shape: j.get("shape")?.shape()?,
+        dtype: match j.get("dtype")?.str()? {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype {other}"),
+        },
+        role: j.get("role")?.str()?.to_string(),
+        of: j.opt("of").map(|v| v.str().map(str::to_string)).transpose()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&src).with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src)?;
+        let params = j
+            .get("params")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                let init = p.get("init")?.arr()?;
+                let kind0 = init
+                    .first()
+                    .ok_or_else(|| anyhow!("empty init"))?
+                    .str()?;
+                let init = match kind0 {
+                    "he_conv" => Init::HeConv(init[1].usize()?),
+                    "he_lin" => Init::HeLin(init[1].usize()?),
+                    "normal" => Init::Normal(init[1].num()? as f32),
+                    "zeros" => Init::Zeros,
+                    "ones" => Init::Ones,
+                    other => bail!("unknown init {other}"),
+                };
+                Ok(ParamInfo {
+                    name: p.get("name")?.str()?.to_string(),
+                    shape: p.get("shape")?.shape()?,
+                    init,
+                    kind: p.get("kind")?.str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let states = j
+            .get("states")?
+            .arr()?
+            .iter()
+            .map(|s| {
+                Ok(StateInfo {
+                    name: s.get("name")?.str()?.to_string(),
+                    shape: s.get("shape")?.shape()?,
+                    init: s.get("init")?.str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let wsites = j
+            .get("wsites")?
+            .arr()?
+            .iter()
+            .map(|s| {
+                Ok(WSite {
+                    name: s.get("name")?.str()?.to_string(),
+                    c_out: s.get("c_out")?.usize()?,
+                    size: s.get("size")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            name: j.get("name")?.str()?.to_string(),
+            model: j.get("model")?.str()?.to_string(),
+            kind: j.get("kind")?.str()?.to_string(),
+            sel_mode: j.opt("sel_mode").map(|v| v.str().unwrap_or("")).unwrap_or("").to_string(),
+            ratio: j.opt("ratio").and_then(|v| v.num().ok()).unwrap_or(1.0) as f32,
+            w_bits: j.get("w_bits")?.usize()? as u32,
+            a_bits: j.get("a_bits")?.usize()? as u32,
+            batch_size: j.get("batch_size")?.usize()?,
+            params,
+            states,
+            wsites,
+            inputs: j.get("inputs")?.arr()?.iter().map(parse_io).collect::<Result<Vec<_>>>()?,
+            outputs: j.get("outputs")?.arr()?.iter().map(parse_io).collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// All trainable tensors of a model, keyed by parameter name.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    /// Initialize from the manifest's recipes (deterministic per seed —
+    /// matches the distribution, not the values, of the python test init).
+    pub fn init(manifest: &Manifest, seed: u64) -> ParamStore {
+        let mut rng = Pcg64::new(seed);
+        let mut map = BTreeMap::new();
+        for p in &manifest.params {
+            let n: usize = p.shape.iter().product();
+            let data = match p.init {
+                Init::HeConv(fan) | Init::HeLin(fan) => {
+                    let std = (2.0 / fan as f32).sqrt();
+                    rng.normal_vec(n, std)
+                }
+                Init::Normal(std) => rng.normal_vec(n, std),
+                Init::Zeros => vec![0.0; n],
+                Init::Ones => vec![1.0; n],
+            };
+            map.insert(p.name.clone(), Tensor { shape: p.shape.clone(), data });
+        }
+        ParamStore { map }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map.get_mut(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+}
+
+/// BN running statistics and any other threaded state.
+#[derive(Clone, Debug, Default)]
+pub struct StateStore {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl StateStore {
+    pub fn init(manifest: &Manifest) -> StateStore {
+        let map = manifest
+            .states
+            .iter()
+            .map(|s| {
+                let t = if s.init == "ones" { Tensor::ones(&s.shape) } else { Tensor::zeros(&s.shape) };
+                (s.name.clone(), t)
+            })
+            .collect();
+        StateStore { map }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing state {name:?}"))
+    }
+}
+
+/// Quantization parameters: per-site weight scales (vectors) and per-site
+/// activation scale/zero-point scalars.
+#[derive(Clone, Debug, Default)]
+pub struct QParamStore {
+    pub sw: BTreeMap<String, Tensor>,
+    pub act: BTreeMap<String, ActQParams>,
+}
+
+impl QParamStore {
+    /// PTQ weight-scale initialization (Eq. 4) from the current weights.
+    pub fn init_weight_scales(&mut self, manifest: &Manifest, params: &ParamStore, bits: u32) {
+        for site in &manifest.wsites {
+            let w = params.get(&site.name).expect("wsite param");
+            let scales = weight_scales(&w.row_abs_max(), bits);
+            self.sw.insert(site.name.clone(), Tensor { shape: vec![site.c_out], data: scales });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint I/O: a simple length-prefixed binary format (name, shape, f32 LE)
+// ---------------------------------------------------------------------------
+
+const CKPT_MAGIC: &[u8; 8] = b"EFQATCK1";
+
+pub fn save_checkpoint(path: &Path, sections: &[(&str, &BTreeMap<String, Tensor>)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(CKPT_MAGIC)?;
+    f.write_all(&(sections.len() as u32).to_le_bytes())?;
+    for (section, map) in sections {
+        write_str(&mut f, section)?;
+        f.write_all(&(map.len() as u32).to_le_bytes())?;
+        for (name, t) in map.iter() {
+            write_str(&mut f, name)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in &t.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<BTreeMap<String, BTreeMap<String, Tensor>>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != CKPT_MAGIC {
+        bail!("{} is not an EfQAT checkpoint", path.display());
+    }
+    let n_sections = read_u32(&mut f)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..n_sections {
+        let section = read_str(&mut f)?;
+        let n = read_u32(&mut f)?;
+        let mut map = BTreeMap::new();
+        for _ in 0..n {
+            let name = read_str(&mut f)?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut data = vec![0f32; count];
+            for x in data.iter_mut() {
+                let mut b = [0u8; 4];
+                f.read_exact(&mut b)?;
+                *x = f32::from_le_bytes(b);
+            }
+            map.insert(name, Tensor { shape, data });
+        }
+        out.insert(section, map);
+    }
+    Ok(out)
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "name": "toy_w8a8_train_r25", "model": "toy", "kind": "train",
+      "sel_mode": "ratio", "ratio": 0.25, "w_bits": 8, "a_bits": 8,
+      "batch_size": 4,
+      "params": [
+        {"name": "fc.w", "shape": [8, 4], "init": ["he_lin", 4], "kind": "weight"},
+        {"name": "fc.b", "shape": [8], "init": ["zeros"], "kind": "bias"},
+        {"name": "bn.g", "shape": [8], "init": ["ones"], "kind": "norm"}
+      ],
+      "states": [{"name": "bn.rm", "shape": [8], "init": "zeros"}],
+      "wsites": [{"name": "fc.w", "c_out": 8, "size": 32}],
+      "inputs": [
+        {"name": "fc.w", "shape": [8, 4], "dtype": "f32", "role": "param"},
+        {"name": "id:fc.w", "shape": [2], "dtype": "i32", "role": "index", "of": "fc.w"}
+      ],
+      "outputs": [
+        {"name": "loss", "shape": [1], "dtype": "f32", "role": "loss"},
+        {"name": "d:fc.w", "shape": [2, 4], "dtype": "f32", "role": "grad", "of": "fc.w"}
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.name, "toy_w8a8_train_r25");
+        assert_eq!(m.ratio, 0.25);
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.wsites[0].c_out, 8);
+        assert_eq!(m.inputs[1].dtype, Dtype::I32);
+        assert_eq!(m.outputs[1].of.as_deref(), Some("fc.w"));
+    }
+
+    #[test]
+    fn param_store_init_follows_recipes() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        let p = ParamStore::init(&m, 1);
+        assert_eq!(p.get("fc.w").unwrap().shape, vec![8, 4]);
+        assert!(p.get("fc.b").unwrap().data.iter().all(|&x| x == 0.0));
+        assert!(p.get("bn.g").unwrap().data.iter().all(|&x| x == 1.0));
+        // he init spread: std = sqrt(2/4) ≈ 0.707; values should be varied
+        let w = p.get("fc.w").unwrap();
+        assert!(w.data.iter().any(|&x| x.abs() > 0.1));
+        // same seed → same init, different seed → different
+        let p2 = ParamStore::init(&m, 1);
+        assert_eq!(p.get("fc.w").unwrap().data, p2.get("fc.w").unwrap().data);
+        let p3 = ParamStore::init(&m, 2);
+        assert_ne!(p.get("fc.w").unwrap().data, p3.get("fc.w").unwrap().data);
+    }
+
+    #[test]
+    fn qparam_weight_scale_init() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        let p = ParamStore::init(&m, 1);
+        let mut q = QParamStore::default();
+        q.init_weight_scales(&m, &p, 8);
+        let sw = &q.sw["fc.w"];
+        assert_eq!(sw.shape, vec![8]);
+        let w = p.get("fc.w").unwrap();
+        for r in 0..8 {
+            let maxabs = w.row(r).iter().fold(0f32, |a, &b| a.max(b.abs()));
+            assert!((sw.data[r] - maxabs / 127.0).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let dir = std::env::temp_dir().join("efqat_test_ckpt");
+        let path = dir.join("a.ckpt");
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        let mut states = BTreeMap::new();
+        states.insert("rm".to_string(), Tensor::zeros(&[3]));
+        save_checkpoint(&path, &[("params", &params), ("states", &states)]).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded["params"]["w"], params["w"]);
+        assert_eq!(loaded["states"]["rm"], states["rm"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let dir = std::env::temp_dir().join("efqat_test_ckpt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,264 @@
+//! Optimizers — the "Optimizer Step" of the paper's Algorithm 1, run
+//! host-side by the coordinator.
+//!
+//! * [`SgdMomentum`] updates network parameters.  For EfQAT it supports
+//!   **row-masked updates**: `apply_rows` touches only the unfrozen output
+//!   channels, with per-row momentum buffers (frozen rows keep their
+//!   momentum untouched, exactly like masking the gradient in the paper's
+//!   PyTorch implementation).
+//! * [`Adam`] updates quantization parameters (the paper "always uses Adam
+//!   to update the quantization parameters"), optionally in the log domain
+//!   for scales (Appendix A.2, TQT-style) — the `table7` ablation.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// SGD with momentum and decoupled weight decay (PyTorch semantics:
+/// v = μv + g + λw;  w -= lr·v).
+pub struct SgdMomentum {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: BTreeMap<String, Tensor>,
+}
+
+impl SgdMomentum {
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        SgdMomentum { lr, momentum, weight_decay, velocity: BTreeMap::new() }
+    }
+
+    /// Dense update of a whole parameter tensor.
+    pub fn apply_full(&mut self, name: &str, param: &mut Tensor, grad: &[f32]) {
+        assert_eq!(param.len(), grad.len(), "{name}: grad size mismatch");
+        let v = self
+            .velocity
+            .entry(name.to_string())
+            .or_insert_with(|| Tensor::zeros(&param.shape));
+        for i in 0..grad.len() {
+            let g = grad[i] + self.weight_decay * param.data[i];
+            v.data[i] = self.momentum * v.data[i] + g;
+            param.data[i] -= self.lr * v.data[i];
+        }
+    }
+
+    /// Row-sparse update: `grad_rows` holds `idx.len()` rows of gradient
+    /// (the EfQAT partial dW); only those rows of the parameter (and its
+    /// momentum buffer) are touched.
+    pub fn apply_rows(&mut self, name: &str, param: &mut Tensor, grad_rows: &[f32], idx: &[usize]) {
+        let rs = param.row_size();
+        assert_eq!(grad_rows.len(), idx.len() * rs, "{name}: partial grad size mismatch");
+        let v = self
+            .velocity
+            .entry(name.to_string())
+            .or_insert_with(|| Tensor::zeros(&param.shape));
+        for (gi, &r) in idx.iter().enumerate() {
+            let g = &grad_rows[gi * rs..(gi + 1) * rs];
+            let pv = &mut v.data[r * rs..(r + 1) * rs];
+            let pw = &mut param.data[r * rs..(r + 1) * rs];
+            for i in 0..rs {
+                let gg = g[i] + self.weight_decay * pw[i];
+                pv[i] = self.momentum * pv[i] + gg;
+                pw[i] -= self.lr * pv[i];
+            }
+        }
+    }
+}
+
+/// Adam (Kingma & Ba).  Optional log-domain mode for positive scales:
+/// the update is applied to ln(s), i.e. s ← exp(ln(s) - lr·m̂/(√v̂+ε)),
+/// which keeps scales positive (Appendix A.2).
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub log_domain: bool,
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
+    t: BTreeMap<String, u64>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            log_domain: false,
+            m: BTreeMap::new(),
+            v: BTreeMap::new(),
+            t: BTreeMap::new(),
+        }
+    }
+
+    pub fn log_domain(mut self, on: bool) -> Self {
+        self.log_domain = on;
+        self
+    }
+
+    /// Adam update over the given (index, grad) pairs.
+    fn apply_indices(&mut self, name: &str, param: &mut [f32], grads: &[(usize, f32)]) {
+        let n = param.len();
+        let (b1, b2, eps, lr, logd) = (self.beta1, self.beta2, self.eps, self.lr, self.log_domain);
+        let m = self.m.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
+        let v = self.v.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
+        let t = self.t.entry(name.to_string()).or_insert(0);
+        *t += 1;
+        let bc1 = 1.0 - b1.powi(*t as i32);
+        let bc2 = 1.0 - b2.powi(*t as i32);
+        for &(i, g0) in grads {
+            // chain rule into the log domain: d/d ln(s) = s · d/ds
+            let g = if logd { g0 * param[i] } else { g0 };
+            m[i] = b1 * m[i] + (1.0 - b1) * g;
+            v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+            let mh = m[i] / bc1;
+            let vh = v[i] / bc2;
+            let step = lr * mh / (vh.sqrt() + eps);
+            if logd {
+                param[i] = (param[i].ln() - step).exp();
+            } else {
+                param[i] -= step;
+            }
+        }
+    }
+
+    pub fn apply_full(&mut self, name: &str, param: &mut [f32], grad: &[f32]) {
+        let grads: Vec<(usize, f32)> = grad.iter().copied().enumerate().collect();
+        self.apply_indices(name, param, &grads);
+    }
+
+    /// Sparse update for per-row weight scales: only the unfrozen rows of
+    /// S_w are updated ("we update the quantization parameters of a channel
+    /// only if we update the weights of that channel").
+    pub fn apply_rows(&mut self, name: &str, param: &mut [f32], grad_rows: &[f32], idx: &[usize]) {
+        assert_eq!(grad_rows.len(), idx.len());
+        let grads: Vec<(usize, f32)> = idx.iter().copied().zip(grad_rows.iter().copied()).collect();
+        self.apply_indices(name, param, &grads);
+    }
+
+    pub fn apply_scalar(&mut self, name: &str, param: &mut f32, grad: f32) {
+        let mut p = [*param];
+        self.apply_indices(name, &mut p, &[(0, grad)]);
+        *param = p[0];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn sgd_plain_step() {
+        let mut opt = SgdMomentum::new(0.1, 0.0, 0.0);
+        let mut p = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        opt.apply_full("p", &mut p, &[1.0, -1.0]);
+        assert_eq!(p.data, vec![0.9, 2.1]);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut opt = SgdMomentum::new(1.0, 0.9, 0.0);
+        let mut p = Tensor::new(vec![1], vec![0.0]).unwrap();
+        opt.apply_full("p", &mut p, &[1.0]); // v=1, p=-1
+        opt.apply_full("p", &mut p, &[1.0]); // v=1.9, p=-2.9
+        assert!((p.data[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_weight_decay_matches_pytorch() {
+        let mut opt = SgdMomentum::new(0.1, 0.0, 0.1);
+        let mut p = Tensor::new(vec![1], vec![2.0]).unwrap();
+        opt.apply_full("p", &mut p, &[0.0]);
+        assert!((p.data[0] - (2.0 - 0.1 * 0.2)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sgd_rows_touch_only_selected() {
+        let mut opt = SgdMomentum::new(0.5, 0.9, 0.0);
+        let mut p = Tensor::new(vec![3, 2], vec![1.0; 6]).unwrap();
+        opt.apply_rows("p", &mut p, &[1.0, 1.0], &[1]);
+        assert_eq!(p.row(0), &[1.0, 1.0]);
+        assert_eq!(p.row(1), &[0.5, 0.5]);
+        assert_eq!(p.row(2), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn sgd_rows_equals_full_on_selected_rows() {
+        // property: a masked update == dense update restricted to the rows
+        forall(100, |r| {
+            let rows = 2 + r.below(8);
+            let cols = 1 + r.below(6);
+            let mut rng = r.split(3);
+            let init = rng.normal_vec(rows * cols, 1.0);
+            let grad = rng.normal_vec(rows * cols, 1.0);
+            let k = 1 + r.below(rows);
+            let idx = {
+                let mut rng2 = r.split(4);
+                rng2.choice(rows, k)
+            };
+            let mut dense = Tensor::new(vec![rows, cols], init.clone()).unwrap();
+            let mut sparse = Tensor::new(vec![rows, cols], init.clone()).unwrap();
+            let mut o1 = SgdMomentum::new(0.1, 0.9, 0.01);
+            let mut o2 = SgdMomentum::new(0.1, 0.9, 0.01);
+            for _ in 0..3 {
+                o1.apply_full("p", &mut dense, &grad);
+                let gr: Vec<f32> = idx
+                    .iter()
+                    .flat_map(|&r0| grad[r0 * cols..(r0 + 1) * cols].to_vec())
+                    .collect();
+                o2.apply_rows("p", &mut sparse, &gr, &idx);
+            }
+            for &r0 in &idx {
+                for c in 0..cols {
+                    let a = dense.data[r0 * cols + c];
+                    let b = sparse.data[r0 * cols + c];
+                    assert!((a - b).abs() < 1e-5, "row {r0} col {c}: {a} vs {b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut opt = Adam::new(0.1);
+        let mut p = [5.0f32];
+        for _ in 0..500 {
+            let g = 2.0 * (p[0] - 1.0);
+            opt.apply_full("p", &mut p, &[g]);
+        }
+        assert!((p[0] - 1.0).abs() < 1e-2, "{}", p[0]);
+    }
+
+    #[test]
+    fn adam_log_domain_keeps_scales_positive() {
+        let mut opt = Adam::new(0.5).log_domain(true);
+        let mut s = [0.01f32];
+        for _ in 0..200 {
+            opt.apply_scalar("s", &mut s[0], 10.0); // huge pushes downward
+            assert!(s[0] > 0.0, "scale went non-positive: {}", s[0]);
+        }
+    }
+
+    #[test]
+    fn adam_raw_can_go_negative_log_cannot() {
+        // the instability Appendix A.2 talks about
+        let mut raw = Adam::new(0.5);
+        let mut s = 0.01f32;
+        for _ in 0..10 {
+            raw.apply_scalar("s", &mut s, 10.0);
+        }
+        assert!(s < 0.0);
+    }
+
+    #[test]
+    fn adam_sparse_rows_update_independently() {
+        let mut opt = Adam::new(0.1);
+        let mut p = vec![1.0f32; 4];
+        opt.apply_rows("sw", &mut p, &[1.0], &[2]);
+        assert_eq!(p[0], 1.0);
+        assert!(p[2] < 1.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Host-side quantization math (paper Eq. 1–4) and the PTQ MinMax observer.
+//!
+//! The coordinator computes the *initial* quantization parameters here
+//! (the PTQ step of Algorithm 1); the training-time fake-quant itself runs
+//! inside the AOT artifacts (L1 Pallas kernels).  The formulas are
+//! unit-tested to mirror `python/compile/kernels/ref.py` exactly so both
+//! layers agree bit-for-bit.
+
+/// Symmetric signed range for b-bit weights: [-(2^{b-1}-1), 2^{b-1}-1].
+pub fn qrange_sym(bits: u32) -> (i32, i32) {
+    let m = (1i32 << (bits - 1)) - 1;
+    (-m, m)
+}
+
+/// Asymmetric unsigned range for b-bit activations: [0, 2^b - 1].
+pub fn qrange_asym(bits: u32) -> (i32, i32) {
+    (0, (1i32 << bits) - 1)
+}
+
+/// Quantization parameters of one activation site (per-tensor, asymmetric).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActQParams {
+    pub scale: f32,
+    pub zero_point: f32,
+}
+
+/// MinMax observer (Eq. 2): S_x = (β-α)/(2^b-1), Z_x = -round(α/S_x).
+#[derive(Clone, Debug)]
+pub struct MinMaxObserver {
+    pub min: f32,
+    pub max: f32,
+    samples: usize,
+}
+
+impl Default for MinMaxObserver {
+    fn default() -> Self {
+        MinMaxObserver { min: f32::INFINITY, max: f32::NEG_INFINITY, samples: 0 }
+    }
+}
+
+impl MinMaxObserver {
+    pub fn observe(&mut self, lo: f32, hi: f32) {
+        self.min = self.min.min(lo);
+        self.max = self.max.max(hi);
+        self.samples += 1;
+    }
+
+    pub fn observe_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.samples += 1;
+    }
+
+    pub fn qparams(&self, bits: u32) -> ActQParams {
+        assert!(self.samples > 0, "observer saw no data");
+        // the range must include 0 so that zero maps to an exact code
+        let lo = self.min.min(0.0);
+        let hi = self.max.max(0.0);
+        let (_, qmax) = qrange_asym(bits);
+        let scale = ((hi - lo) / qmax as f32).max(1e-8);
+        let zero_point = (-lo / scale).round();
+        ActQParams { scale, zero_point }
+    }
+}
+
+/// Per-row symmetric weight scales (Eq. 4): S_w = max(|α|,|β|)/(2^{b-1}-1).
+pub fn weight_scales(row_abs_max: &[f32], bits: u32) -> Vec<f32> {
+    let (_, qmax) = qrange_sym(bits);
+    row_abs_max.iter().map(|&m| (m / qmax as f32).max(1e-8)).collect()
+}
+
+/// Reference symmetric fake-quant (Eq. 3) — mirrors kernels/ref.py.
+pub fn fq_sym(w: f32, s: f32, bits: u32) -> f32 {
+    let (qmin, qmax) = qrange_sym(bits);
+    let q = (w / s).round().clamp(qmin as f32, qmax as f32);
+    q * s
+}
+
+/// Reference asymmetric fake-quant (Eq. 1) — mirrors kernels/ref.py.
+pub fn fq_asym(x: f32, s: f32, z: f32, bits: u32) -> f32 {
+    let (qmin, qmax) = qrange_asym(bits);
+    let zr = z.round();
+    let c = ((x / s).round() + zr).clamp(qmin as f32, qmax as f32);
+    (c - zr) * s
+}
+
+/// Mean squared quantization error of a row under a given scale — used by
+/// tests and by the `fig3` importance analysis bench.
+pub fn row_quant_mse(row: &[f32], s: f32, bits: u32) -> f32 {
+    row.iter().map(|&w| {
+        let d = w - fq_sym(w, s, bits);
+        d * d
+    }).sum::<f32>() / row.len().max(1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(qrange_sym(8), (-127, 127));
+        assert_eq!(qrange_sym(4), (-7, 7));
+        assert_eq!(qrange_asym(8), (0, 255));
+        assert_eq!(qrange_asym(4), (0, 15));
+    }
+
+    #[test]
+    fn observer_matches_eq2() {
+        let mut o = MinMaxObserver::default();
+        o.observe_slice(&[-1.0, 0.5, 2.0]);
+        let q = o.qparams(8);
+        assert!((q.scale - 3.0 / 255.0).abs() < 1e-7);
+        assert_eq!(q.zero_point, (1.0 / q.scale).round());
+    }
+
+    #[test]
+    fn observer_range_always_contains_zero() {
+        let mut o = MinMaxObserver::default();
+        o.observe_slice(&[3.0, 5.0]); // all-positive activations
+        let q = o.qparams(8);
+        // zero must map to code 0 exactly
+        assert_eq!(q.zero_point, 0.0);
+        assert!((fq_asym(0.0, q.scale, q.zero_point, 8)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn weight_scale_covers_max() {
+        let s = weight_scales(&[1.27], 8)[0];
+        assert!((fq_sym(1.27, s, 8) - 1.27).abs() < 1e-6);
+        assert!((fq_sym(-1.27, s, 8) + 1.27).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_fq_sym_within_one_half_scale_in_range() {
+        forall(1000, |r| {
+            let bits = if r.uniform() < 0.5 { 4 } else { 8 };
+            let s = r.uniform_in(1e-3, 0.2);
+            let (qmin, qmax) = qrange_sym(bits);
+            let w = r.uniform_in(qmin as f32 * s, qmax as f32 * s);
+            let err = (w - fq_sym(w, s, bits)).abs();
+            assert!(err <= s * 0.5 + 1e-6, "err {err} s {s} bits {bits}");
+        });
+    }
+
+    #[test]
+    fn prop_fq_asym_idempotent() {
+        forall(1000, |r| {
+            let bits = 8;
+            let s = r.uniform_in(1e-3, 0.1);
+            let z = r.uniform_in(0.0, 255.0).round();
+            let x = r.uniform_in(-5.0, 5.0);
+            let once = fq_asym(x, s, z, bits);
+            let twice = fq_asym(once, s, z, bits);
+            assert!((once - twice).abs() < 1e-5, "not idempotent: {once} vs {twice}");
+        });
+    }
+
+    #[test]
+    fn prop_quantization_error_bounded_by_clip() {
+        forall(500, |r| {
+            let s = r.uniform_in(0.01, 0.1);
+            let x = r.uniform_in(-1.0, 1.0);
+            let q = fq_asym(x, s, 128.0, 8);
+            // in-range values: |err| <= s/2; clipped: err can be larger but
+            // output stays inside the representable interval
+            let (qmin, qmax) = qrange_asym(8);
+            let lo = (qmin as f32 - 128.0) * s;
+            let hi = (qmax as f32 - 128.0) * s;
+            assert!(q >= lo - 1e-5 && q <= hi + 1e-5);
+        });
+    }
+}

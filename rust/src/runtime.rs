@@ -1,0 +1,208 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax≥0.5 serialized
+//! protos), `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`.
+//!
+//! A [`Step`] couples a compiled executable with its [`Manifest`]; inputs
+//! are packed host-tensors in manifest order, outputs are unpacked into a
+//! name → [`Value`] map.  [`StepCache`] memoizes compilation per artifact.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{Dtype, IoSpec, Manifest};
+use crate::tensor::{ITensor, Tensor};
+
+/// A host value crossing the runtime boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(ITensor),
+}
+
+impl Value {
+    pub fn f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn i32(&self) -> Result<&ITensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    /// First element of an f32 value (for [1]-shaped scalars).
+    pub fn scalar(&self) -> Result<f32> {
+        Ok(self.f32()?.data[0])
+    }
+}
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.to_path_buf() })
+    }
+
+    /// Load + compile one artifact by name (e.g. "resnet20_w8a8_train_r25").
+    pub fn load(&self, name: &str) -> Result<Step> {
+        let hlo = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let man = self.artifacts_dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::load(&man)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Step { manifest, exe, compile_time: t0.elapsed() })
+    }
+}
+
+pub struct Step {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_time: Duration,
+}
+
+/// Pack a host f32 tensor into an XLA literal of the given shape.
+pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+}
+
+pub fn literal_i32(t: &ITensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+}
+
+impl Step {
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    /// Execute with literals packed in manifest input order.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Outputs> {
+        let (out, _) = self.execute_timed(inputs)?;
+        Ok(out)
+    }
+
+    /// Execute and report device wall-time (the paper's backward-runtime
+    /// measurements in Table 5 time exactly this call).
+    pub fn execute_timed(&self, inputs: &[xla::Literal]) -> Result<(Outputs, Duration)> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: {} inputs supplied, manifest wants {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.manifest.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let dt = t0.elapsed();
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, manifest declares {}",
+                self.manifest.name,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        let mut map = BTreeMap::new();
+        for (spec, lit) in self.manifest.outputs.iter().zip(parts) {
+            map.insert(spec.name.clone(), unpack(spec, lit)?);
+        }
+        Ok((Outputs { map }, dt))
+    }
+}
+
+fn unpack(spec: &IoSpec, lit: xla::Literal) -> Result<Value> {
+    match spec.dtype {
+        Dtype::F32 => {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("{}: to_vec f32: {e:?}", spec.name))?;
+            Ok(Value::F32(Tensor::new(spec.shape.clone(), data)?))
+        }
+        Dtype::I32 => {
+            let data = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("{}: to_vec i32: {e:?}", spec.name))?;
+            Ok(Value::I32(ITensor::new(spec.shape.clone(), data)?))
+        }
+    }
+}
+
+/// Named outputs of one step execution.
+#[derive(Debug)]
+pub struct Outputs {
+    pub map: BTreeMap<String, Value>,
+}
+
+impl Outputs {
+    pub fn get(&self, name: &str) -> Result<&Value> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing output {name:?}"))
+    }
+
+    pub fn loss(&self) -> Result<f32> {
+        self.get("loss")?.scalar()
+    }
+
+    pub fn correct(&self) -> Result<i32> {
+        Ok(self.get("correct")?.i32()?.data[0])
+    }
+}
+
+/// Lazily-compiled, memoized steps keyed by artifact name.
+pub struct StepCache {
+    runtime: Rc<Runtime>,
+    cache: RefCell<BTreeMap<String, Rc<Step>>>,
+}
+
+impl StepCache {
+    pub fn new(runtime: Rc<Runtime>) -> StepCache {
+        StepCache { runtime, cache: RefCell::new(BTreeMap::new()) }
+    }
+
+    pub fn get(&self, name: &str) -> Result<Rc<Step>> {
+        if let Some(s) = self.cache.borrow().get(name) {
+            return Ok(s.clone());
+        }
+        let step = Rc::new(
+            self.runtime
+                .load(name)
+                .with_context(|| format!("loading artifact {name} (run `make artifacts`?)"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+}

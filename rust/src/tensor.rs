@@ -1,0 +1,180 @@
+//! Minimal host tensor: shape + contiguous f32 (or i32) storage.
+//!
+//! The coordinator owns all training state (parameters, optimizer moments,
+//! quantization parameters) host-side; the accelerator artifacts are pure
+//! functions.  Only the handful of ops the coordinator itself needs live
+//! here — row reductions for the importance metric (Eq. 6), Top-K for
+//! channel selection, and elementwise update helpers for the optimizers.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Leading dimension = output-channel count for weight tensors.
+    pub fn rows(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+
+    /// Elements per output channel.
+    pub fn row_size(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.data.len() / self.shape[0]
+        }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let rs = self.row_size();
+        &self.data[r * rs..(r + 1) * rs]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let rs = self.row_size();
+        &mut self.data[r * rs..(r + 1) * rs]
+    }
+
+    /// Channel importance I_B = mean |w| per output row (paper Eq. 6).
+    pub fn row_abs_mean(&self) -> Vec<f32> {
+        let rs = self.row_size() as f32;
+        (0..self.rows())
+            .map(|r| self.row(r).iter().map(|x| x.abs()).sum::<f32>() / rs)
+            .collect()
+    }
+
+    /// Per-row absolute maximum (symmetric weight-scale init, Eq. 4).
+    pub fn row_abs_max(&self) -> Vec<f32> {
+        (0..self.rows())
+            .map(|r| self.row(r).iter().fold(0f32, |m, x| m.max(x.abs())))
+            .collect()
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+}
+
+/// Integer tensor (labels, token ids, channel indices, flags).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ITensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl ITensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(ITensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        ITensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+}
+
+/// Indices of the k largest values (descending).  Deterministic: ties break
+/// toward the lower index, matching jnp.argsort stability assumptions.
+pub fn topk(values: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    let k = k.min(values.len());
+    idx.sort_by(|&a, &b| {
+        values[b]
+            .partial_cmp(&values[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// argmax over a slice (first max wins).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(ITensor::new(vec![2], vec![1]).is_err());
+    }
+
+    #[test]
+    fn row_ops() {
+        let t = Tensor::new(vec![2, 3], vec![1., -2., 3., -4., 5., -6.]).unwrap();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row_size(), 3);
+        assert_eq!(t.row_abs_mean(), vec![2.0, 5.0]);
+        assert_eq!(t.row_abs_max(), vec![3.0, 6.0]);
+        assert_eq!(t.min(), -6.0);
+        assert_eq!(t.max(), 5.0);
+    }
+
+    #[test]
+    fn topk_orders_and_breaks_ties_low_index_first() {
+        assert_eq!(topk(&[1.0, 5.0, 3.0, 5.0], 3), vec![1, 3, 2]);
+        assert_eq!(topk(&[1.0], 5), vec![0]);
+        assert_eq!(topk(&[], 2), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn argmax_first_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

@@ -1,0 +1,44 @@
+//! Micro property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(n, |rng| ...)` runs a closure against `n` seeded random cases;
+//! on panic it re-raises with the failing case index and seed so the case
+//! reproduces deterministically.  Not shrinking — cases are printed small
+//! enough to debug directly.
+
+use crate::rng::Pcg64;
+
+/// Run `f` against `n` deterministic random cases.
+pub fn forall<F: Fn(&mut Pcg64)>(n: usize, f: F) {
+    for case in 0..n {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut rng = Pcg64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random vector helper for property tests.
+pub fn fvec(rng: &mut Pcg64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let count = std::cell::Cell::new(0);
+        forall(25, |_| count.set(count.get() + 1));
+        assert_eq!(count.get(), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(10, |r| assert!(r.uniform() < 0.0));
+    }
+}

@@ -1,0 +1,218 @@
+//! Integration tests: rust coordinator × real AOT artifacts.
+//!
+//! These exercise the full cross-language ABI — manifest binding, PJRT
+//! execution, PTQ calibration, EfQAT steps with channel/layer freezing —
+//! against the resnet8 artifacts.  They require `make artifacts` to have
+//! run; if the artifacts are missing the tests fail with a clear message.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use efqat::cfg::Config;
+use efqat::coordinator::binder::{bind_inputs, BindCtx};
+use efqat::coordinator::tasks::build_task;
+use efqat::coordinator::trainer::{pretrain_fp, EfqatTrainer, TrainCfg};
+use efqat::coordinator::{calibrate, evaluate, Session};
+use efqat::freeze::Mode;
+use efqat::model::{ParamStore, StateStore};
+
+fn artifacts_dir() -> PathBuf {
+    let candidates = ["artifacts", "../artifacts"];
+    for c in candidates {
+        if Path::new(c).join("resnet8_fp_train.hlo.txt").exists() {
+            return PathBuf::from(c);
+        }
+    }
+    panic!("artifacts not found — run `make artifacts` first");
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::empty();
+    cfg.set("data.train_n", "256");
+    cfg.set("data.test_n", "128");
+    cfg.set("data.calib_samples", "128");
+    cfg
+}
+
+fn session() -> Session {
+    Session::new(&artifacts_dir()).expect("PJRT session")
+}
+
+#[test]
+fn fwd_artifact_executes_and_scores() {
+    let s = session();
+    let fwd = s.steps.get("resnet8_fp_fwd").unwrap();
+    let params = ParamStore::init(&fwd.manifest, 0);
+    let states = StateStore::init(&fwd.manifest);
+    let mut task = build_task("resnet8", fwd.manifest.batch_size, &small_cfg()).unwrap();
+    let r = evaluate(&fwd, &params, None, &states, &mut task.test).unwrap();
+    assert!(r.loss.is_finite());
+    assert_eq!(r.n, 128);
+    // untrained net ≈ chance
+    assert!(r.accuracy < 0.5);
+}
+
+#[test]
+fn fp_pretraining_reduces_loss() {
+    let s = session();
+    let step = s.steps.get("resnet8_fp_train").unwrap();
+    let mut params = ParamStore::init(&step.manifest, 0);
+    let mut states = StateStore::init(&step.manifest);
+    let mut task = build_task("resnet8", step.manifest.batch_size, &small_cfg()).unwrap();
+    let cfg = TrainCfg { lr_w: 0.05, ..TrainCfg::default() };
+    let log = pretrain_fp(&step, &mut params, &mut states, &mut task.train, 3, &cfg).unwrap();
+    let first = log.records[0].loss;
+    let last = log.mean_loss_tail(4);
+    assert!(last < first * 0.9, "loss did not drop: {first} -> {last}");
+}
+
+#[test]
+fn calibration_produces_sane_qparams() {
+    let s = session();
+    let calib = s.steps.get("resnet8_calib").unwrap();
+    let params = ParamStore::init(&calib.manifest, 0);
+    let states = StateStore::init(&calib.manifest);
+    let mut task = build_task("resnet8", calib.manifest.batch_size, &small_cfg()).unwrap();
+    let q = calibrate(&calib, &params, &states, &mut task.calib, 128, 8, 8).unwrap();
+    assert_eq!(q.sw.len(), calib.manifest.wsites.len());
+    assert_eq!(q.act.len(), calib.manifest.wsites.len());
+    for (site, act) in &q.act {
+        assert!(act.scale > 0.0, "{site}: scale {}", act.scale);
+        assert!(act.zero_point >= 0.0 && act.zero_point <= 255.0, "{site}");
+    }
+    // the first conv sees raw data (std ~1, range ~±4) → scale ~ 8/255
+    let stem = &q.act["stem.conv"];
+    assert!(stem.scale > 0.005 && stem.scale < 0.2, "stem scale {}", stem.scale);
+}
+
+fn make_trainer(s: &Session, artifact: &str, mode: Option<Mode>) -> (EfqatTrainer, efqat::coordinator::tasks::Task) {
+    let calib = s.steps.get("resnet8_calib").unwrap();
+    let params = ParamStore::init(&calib.manifest, 0);
+    let states = StateStore::init(&calib.manifest);
+    let mut task = build_task("resnet8", calib.manifest.batch_size, &small_cfg()).unwrap();
+    let q = calibrate(&calib, &params, &states, &mut task.calib, 128, 8, 8).unwrap();
+    let step = s.steps.get(artifact).unwrap();
+    let tcfg = TrainCfg { lr_w: 0.05, ..TrainCfg::default() };
+    let trainer = EfqatTrainer::new(step, params, q, states, mode, tcfg).unwrap();
+    (trainer, task)
+}
+
+#[test]
+fn efqat_ratio_step_updates_only_selected_rows() {
+    let s = session();
+    let (mut trainer, mut task) = make_trainer(&s, "resnet8_w8a8_train_r25", Some(Mode::Cwpl));
+    let before = trainer.params.get("s1.b0.c1").unwrap().clone();
+    let sel = trainer.policy.as_ref().unwrap().selection().clone();
+    let si = trainer
+        .step
+        .manifest
+        .wsites
+        .iter()
+        .position(|w| w.name == "s1.b0.c1")
+        .unwrap();
+    let selected = sel.channels[si].clone();
+    assert!(!selected.is_empty());
+
+    task.train.reset();
+    let batch = task.train.next_batch().unwrap();
+    let rec = trainer.train_step(&batch).unwrap();
+    assert!(rec.loss.is_finite());
+
+    let after = trainer.params.get("s1.b0.c1").unwrap();
+    let rows = before.rows();
+    for r in 0..rows {
+        let changed = before.row(r) != after.row(r);
+        assert_eq!(
+            changed,
+            selected.contains(&r),
+            "row {r}: changed={changed}, selected={}",
+            selected.contains(&r)
+        );
+    }
+    // sw likewise: only selected rows move
+    let sw = &trainer.qparams.sw["s1.b0.c1"];
+    assert_eq!(sw.shape[0], rows);
+}
+
+#[test]
+fn efqat_lwpn_step_skips_frozen_layers() {
+    let s = session();
+    let (mut trainer, mut task) = make_trainer(&s, "resnet8_w8a8_train_lwpn", Some(Mode::Lwpn));
+    // force ratio-driven flags: policy built with artifact ratio (1.0 for the
+    // lwpn artifact); rebuild with a tighter budget through cfg is indirect,
+    // so instead check consistency: frozen ⇔ unchanged
+    let flags = trainer.policy.as_ref().unwrap().selection().flags.clone();
+    let names: Vec<String> = trainer.step.manifest.wsites.iter().map(|w| w.name.clone()).collect();
+    let before: Vec<_> = names.iter().map(|n| trainer.params.get(n).unwrap().clone()).collect();
+
+    task.train.reset();
+    let batch = task.train.next_batch().unwrap();
+    trainer.train_step(&batch).unwrap();
+
+    for ((name, before), &flag) in names.iter().zip(&before).zip(&flags) {
+        let after = trainer.params.get(name).unwrap();
+        let changed = before.data != after.data;
+        assert_eq!(changed, flag, "{name}: changed={changed} flag={flag}");
+    }
+}
+
+#[test]
+fn efqat_epoch_improves_over_ptq() {
+    let s = session();
+    let (mut trainer, mut task) = make_trainer(&s, "resnet8_w8a8_train_r50", Some(Mode::Cwpn));
+    // quantized eval before
+    let fwd = s.steps.get("resnet8_w8a8_fwd").unwrap();
+    let before = evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test).unwrap();
+    let log = trainer.train_epoch(&mut task.train).unwrap();
+    let after = evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test).unwrap();
+    // untrained random net + an 8-batch epoch: require genuine progress but
+    // leave room for SGD noise at this tiny scale
+    assert!(
+        log.mean_loss_tail(4) < log.records[0].loss * 1.1,
+        "no training progress: {} -> {}",
+        log.records[0].loss,
+        log.mean_loss_tail(4)
+    );
+    assert!(after.loss <= before.loss * 1.25, "eval loss regressed: {} -> {}", before.loss, after.loss);
+}
+
+#[test]
+fn binder_rejects_wrong_selection_size() {
+    let s = session();
+    let step = s.steps.get("resnet8_w8a8_train_r25").unwrap();
+    let params = ParamStore::init(&step.manifest, 0);
+    let states = StateStore::init(&step.manifest);
+    let mut task = build_task("resnet8", step.manifest.batch_size, &small_cfg()).unwrap();
+    let batch = task.train.next_batch().unwrap();
+    // selection with wrong channel counts must be rejected at bind time
+    let bad = efqat::freeze::Selection {
+        channels: vec![vec![0]; step.manifest.wsites.len()],
+        flags: vec![true; step.manifest.wsites.len()],
+    };
+    let mut q = efqat::model::QParamStore::default();
+    q.init_weight_scales(&step.manifest, &params, 8);
+    for w in &step.manifest.wsites {
+        q.act.insert(w.name.clone(), efqat::quant::ActQParams { scale: 0.05, zero_point: 0.0 });
+    }
+    let ctx = BindCtx { params: &params, qparams: Some(&q), states: &states, batch: &batch, selection: Some(&bad) };
+    let err = bind_inputs(&step.manifest, &ctx);
+    assert!(err.is_err());
+}
+
+#[test]
+fn qat_and_ratio_artifacts_agree_on_loss() {
+    // identical params/batch → identical forward loss regardless of ratio
+    let s = session();
+    let (mut t1, mut task) = make_trainer(&s, "resnet8_w8a8_train_r100", None);
+    let (mut t2, _) = make_trainer(&s, "resnet8_w8a8_train_r25", Some(Mode::Cwpl));
+    task.train.reset();
+    let batch = task.train.next_batch().unwrap();
+    let r1 = t1.train_step(&batch).unwrap();
+    let r2 = t2.train_step(&batch).unwrap();
+    assert!(
+        (r1.loss - r2.loss).abs() < 1e-4,
+        "loss mismatch: qat {} vs r25 {}",
+        r1.loss,
+        r2.loss
+    );
+}

@@ -1,0 +1,79 @@
+//! End-to-end pipeline test: pretrain → PTQ → EfQAT → eval on resnet8,
+//! exercising `coordinator::pipeline` exactly as the CLI/examples do.
+
+use std::path::{Path, PathBuf};
+
+use efqat::cfg::Config;
+use efqat::coordinator::pipeline::{
+    ensure_fp_checkpoint, fp_ckpt_path, load_quant_checkpoint, run_efqat_pipeline,
+};
+use efqat::coordinator::Session;
+
+fn artifacts_dir() -> PathBuf {
+    for c in ["artifacts", "../artifacts"] {
+        if Path::new(c).join("resnet8_fp_train.hlo.txt").exists() {
+            return PathBuf::from(c);
+        }
+    }
+    panic!("artifacts not found — run `make artifacts` first");
+}
+
+fn tiny_cfg(tag: &str) -> Config {
+    let mut cfg = Config::empty();
+    cfg.set("data.train_n", "512");
+    cfg.set("data.test_n", "256");
+    cfg.set("data.calib_samples", "128");
+    cfg.set("train.epochs", "2");
+    cfg.set("train.lr_w", "0.03");
+    let dir = std::env::temp_dir().join(format!("efqat_pipe_{tag}"));
+    cfg.set("ckpt_dir", dir.to_str().unwrap());
+    cfg
+}
+
+#[test]
+fn full_pipeline_end_to_end() {
+    let cfg = tiny_cfg("e2e");
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+    let session = Session::new(&artifacts_dir()).unwrap();
+
+    // pretrain runs once, is idempotent afterwards
+    ensure_fp_checkpoint(&session, &cfg, "resnet8", 2).unwrap();
+    assert!(fp_ckpt_path(&cfg, "resnet8").exists());
+    let mtime = std::fs::metadata(fp_ckpt_path(&cfg, "resnet8")).unwrap().modified().unwrap();
+    ensure_fp_checkpoint(&session, &cfg, "resnet8", 2).unwrap();
+    assert_eq!(
+        mtime,
+        std::fs::metadata(fp_ckpt_path(&cfg, "resnet8")).unwrap().modified().unwrap(),
+        "pretrain not idempotent"
+    );
+
+    let s = run_efqat_pipeline(&session, &cfg, "resnet8", "w8a8", "cwpn", 25).unwrap();
+    // EfQAT must not be (much) worse than PTQ, and losses must be finite
+    assert!(s.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        s.efqat_headline >= s.ptq_headline - 2.0,
+        "EfQAT {} << PTQ {}",
+        s.efqat_headline,
+        s.ptq_headline
+    );
+    assert!(s.exec_seconds > 0.0);
+
+    // quantized checkpoint written and loadable
+    let ck = PathBuf::from(cfg.str("ckpt_dir", "")).join("resnet8_w8a8_cwpn25.ckpt");
+    let (p, st, q) = load_quant_checkpoint(&ck).unwrap();
+    assert!(!p.map.is_empty() && !st.map.is_empty());
+    assert_eq!(q.sw.len(), q.act.len());
+
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+}
+
+#[test]
+fn lwpn_pipeline_respects_budget() {
+    let cfg = tiny_cfg("lwpn");
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+    let session = Session::new(&artifacts_dir()).unwrap();
+    ensure_fp_checkpoint(&session, &cfg, "resnet8", 1).unwrap();
+    let s = run_efqat_pipeline(&session, &cfg, "resnet8", "w8a8", "lwpn", 10).unwrap();
+    assert!(s.losses.iter().all(|l| l.is_finite()));
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+}
