@@ -1,0 +1,31 @@
+# EfQAT build entry points.
+#
+# `make artifacts` needs the L1/L2 python toolchain (jax + pallas); the
+# default rust build and tests do not — they run on the native backend.
+
+ARTIFACTS ?= artifacts
+
+.PHONY: build test doc artifacts bundle bench-quick
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+doc:
+	cargo doc --no-deps
+
+# Compile every step function to HLO + per-artifact manifests, then write
+# the schema-versioned bundle inventory (RFC 0001) the PJRT backend
+# verifies against.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS)
+	cargo run --release -- bundle --artifacts $(ARTIFACTS)
+
+# Re-inventory an existing artifacts directory without rebuilding it.
+bundle:
+	cargo run --release -- bundle --artifacts $(ARTIFACTS)
+
+bench-quick:
+	cargo bench --bench table5_backward_runtime

@@ -12,11 +12,11 @@
 //! proving all three layers (rust coordinator, JAX graph, Pallas kernels)
 //! compose on a real training workload.
 
-use anyhow::Result;
 use efqat::cfg::Config;
 use efqat::coordinator::pipeline::{
-    artifacts_dir, fp_ckpt_path, load_fp_checkpoint, parse_bits, run_efqat_pipeline, train_cfg,
+    fp_ckpt_path, load_fp_checkpoint, parse_bits, run_efqat_pipeline, train_cfg,
 };
+use efqat::error::Result;
 use efqat::coordinator::tasks::build_task;
 use efqat::coordinator::trainer::pretrain_fp;
 use efqat::coordinator::{evaluate, Session};
@@ -37,7 +37,9 @@ fn main() -> Result<()> {
     let ratio = cfg.usize("ratio", 25);
     let bits = cfg.str("bits", "w8a8");
 
-    let session = Session::new(&artifacts_dir(&cfg))?;
+    // gpt_mini has no native reference implementation — build the AOT
+    // artifacts with `make artifacts` and pass `--backend pjrt`
+    let session = Session::from_cfg(&cfg)?;
 
     // ---- 1. FP pretraining with loss-curve logging -----------------------
     let step = session.steps.get("gpt_mini_fp_train")?;

@@ -1,16 +1,22 @@
-//! Quickstart: the whole EfQAT story on resnet8 / synth-CIFAR in ~a minute.
+//! Quickstart: the whole EfQAT story on the native CPU backend in seconds.
 //!
 //!   cargo run --release --example quickstart
+//!
+//! No Python, no artifacts, no GPUs — the native reference executor
+//! (rust/src/backend/native.rs) runs the `mlp` model end-to-end:
 //!
 //! 1. pretrains a small FP checkpoint (paper's "FP")
 //! 2. PTQ-quantizes it with MinMax calibration (paper's "PTQ")
 //! 3. runs one EfQAT-CWPL epoch updating 25% of channels
 //! 4. compares against the QAT upper bound (100% updates)
+//!
+//! To run the conv/transformer models instead, build the PJRT artifacts
+//! (`make artifacts`) and pass `--backend pjrt --model resnet8`.
 
-use anyhow::Result;
 use efqat::cfg::Config;
 use efqat::coordinator::pipeline::{ensure_fp_checkpoint, run_efqat_pipeline};
 use efqat::coordinator::Session;
+use efqat::error::Result;
 use efqat::harness::Table;
 
 fn main() -> Result<()> {
@@ -25,16 +31,17 @@ fn main() -> Result<()> {
     }) {
         cfg.set(k, v);
     }
+    let model = cfg.str("model", "mlp");
 
-    let session = Session::new(std::path::Path::new(&cfg.str("artifacts", "artifacts")))?;
-    ensure_fp_checkpoint(&session, &cfg, "resnet8", 4)?;
+    let session = Session::from_cfg(&cfg)?;
+    ensure_fp_checkpoint(&session, &cfg, &model, cfg.usize("train.epochs", 4))?;
 
-    let efqat = run_efqat_pipeline(&session, &cfg, "resnet8", "w8a8", "cwpl", 25)?;
+    let efqat = run_efqat_pipeline(&session, &cfg, &model, "w8a8", "cwpl", 25)?;
     println!("{}\n", efqat.render());
-    let qat = run_efqat_pipeline(&session, &cfg, "resnet8", "w8a8", "qat", 100)?;
+    let qat = run_efqat_pipeline(&session, &cfg, &model, "w8a8", "qat", 100)?;
 
     let mut t = Table::new(
-        "EfQAT quickstart — resnet8, W8A8 (cf. paper Table 1)",
+        &format!("EfQAT quickstart — {model}, W8A8 (cf. paper Table 1)"),
         &["scheme", "accuracy %", "step exec s", "speedup vs QAT"],
     );
     t.row(&[

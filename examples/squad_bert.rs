@@ -6,10 +6,10 @@
 //! then runs EfQAT modes and reports F1 (exactly Table 4's BERT block at
 //! repro scale).  Embeddings stay frozen during EfQAT, as in the paper.
 
-use anyhow::Result;
 use efqat::cfg::Config;
-use efqat::coordinator::pipeline::{artifacts_dir, ensure_fp_checkpoint, run_efqat_pipeline};
+use efqat::coordinator::pipeline::{ensure_fp_checkpoint, run_efqat_pipeline};
 use efqat::coordinator::Session;
+use efqat::error::Result;
 use efqat::harness::Table;
 
 fn main() -> Result<()> {
@@ -24,7 +24,9 @@ fn main() -> Result<()> {
     let bits = cfg.str("bits", "w8a8");
     let ratio = cfg.usize("ratio", 25);
 
-    let session = Session::new(&artifacts_dir(&cfg))?;
+    // bert_tiny needs the PJRT artifacts: `make artifacts`, then
+    // `--backend pjrt`
+    let session = Session::from_cfg(&cfg)?;
     ensure_fp_checkpoint(&session, &cfg, "bert_tiny", cfg.usize("train.epochs", 4))?;
 
     let mut t = Table::new(

@@ -7,11 +7,11 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
 use efqat::cfg::Config;
 use efqat::cli::Args;
-use efqat::coordinator::pipeline::{artifacts_dir, ensure_fp_checkpoint, run_efqat_pipeline};
+use efqat::coordinator::pipeline::{ensure_fp_checkpoint, run_efqat_pipeline};
 use efqat::coordinator::Session;
+use efqat::error::Result;
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -28,7 +28,9 @@ fn main() -> Result<()> {
     let mode = cfg.str("mode", "cwpn");
     let ratio = cfg.usize("ratio", 25);
 
-    let session = Session::new(&artifacts_dir(&cfg))?;
+    // resnet models need the PJRT artifacts: `make artifacts`, then
+    // `--backend pjrt`
+    let session = Session::from_cfg(&cfg)?;
     ensure_fp_checkpoint(&session, &cfg, &model, cfg.usize("train.epochs", 6))?;
     let summary = run_efqat_pipeline(&session, &cfg, &model, &bits, &mode, ratio)?;
     println!("{}", summary.render());

@@ -12,6 +12,10 @@ pub fn bench_config() -> Config {
     cfg.set("ckpt_dir", "ckpts");
     cfg.set("save_ckpt", "false");
     cfg.set("data.train_n", "1024"); // bench default: half-size epochs
+    // the paper-scale default models (resnet/bert/gpt) only exist as PJRT
+    // artifacts, so benches default to that backend; override with
+    // `--backend native --models mlp` to run dependency-free
+    cfg.set("backend", "pjrt");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut over = BTreeMap::new();
     for c in argv.chunks(2) {
@@ -24,8 +28,8 @@ pub fn bench_config() -> Config {
 }
 
 pub fn session(cfg: &Config) -> Session {
-    Session::new(std::path::Path::new(&cfg.str("artifacts", "artifacts")))
-        .expect("PJRT session (run `make artifacts` first)")
+    Session::from_cfg(cfg)
+        .expect("session (pjrt backend needs `make artifacts` and `--features pjrt`)")
 }
 
 /// `cargo bench` passes --bench; strip it so chunk-parsing stays sane.

@@ -1,0 +1,352 @@
+//! Execution backends: the seam between the coordinator and "something
+//! that can run a compiled step function".
+//!
+//! The coordinator (Algorithm 1) is backend-agnostic: it binds host
+//! tensors to a [`crate::model::Manifest`]'s input specs, asks a [`Step`]
+//! to execute, and unpacks named outputs.  Two backends implement that
+//! contract:
+//!
+//! * [`native`] — a pure-rust CPU reference executor that evaluates the
+//!   forward, fake-quant (paper Eq. 1–4), loss, and frozen-channel-aware
+//!   partial backward entirely host-side, mirroring
+//!   `python/compile/kernels/ref.py`.  Zero dependencies; this is what
+//!   `cargo test` and the quickstart run.
+//! * [`pjrt`] — the XLA/PJRT backend for AOT-compiled HLO artifacts built
+//!   by `make artifacts` (feature `pjrt`; requires the vendored `xla`
+//!   crate).  Artifact integrity is checked against the schema-versioned
+//!   bundle manifest ([`crate::bundle::Bundle`]) before compilation.
+//!
+//! Backends are selected by name (`--backend native|pjrt`, see
+//! [`BackendKind`]); an unavailable backend or a stale/corrupt artifact
+//! bundle fails with a descriptive error, never a panic.
+
+pub mod native;
+pub mod pjrt;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Duration;
+
+use crate::error::{anyhow, bail, Context, Result};
+use crate::model::{Dtype, IoSpec, Manifest};
+use crate::tensor::{ITensor, Tensor};
+
+/// A host value crossing the backend boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(ITensor),
+}
+
+impl Value {
+    /// Borrow as an f32 tensor, or error.
+    pub fn f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    /// Borrow as an i32 tensor, or error.
+    pub fn i32(&self) -> Result<&ITensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    /// First element of an f32 value (for `[1]`-shaped scalars).
+    pub fn scalar(&self) -> Result<f32> {
+        Ok(self.f32()?.data[0])
+    }
+
+    /// Element type of the value.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32(_) => Dtype::I32,
+        }
+    }
+
+    /// Shape of the underlying tensor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape().iter().product()
+    }
+}
+
+/// Named outputs of one step execution.
+#[derive(Debug)]
+pub struct Outputs {
+    pub map: BTreeMap<String, Value>,
+}
+
+impl Outputs {
+    /// Fetch an output by manifest name.
+    pub fn get(&self, name: &str) -> Result<&Value> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing output {name:?}"))
+    }
+
+    /// The scalar training loss (`loss` output).
+    pub fn loss(&self) -> Result<f32> {
+        self.get("loss")?.scalar()
+    }
+
+    /// The per-batch correct-prediction count (`correct` output).
+    pub fn correct(&self) -> Result<i32> {
+        Ok(self.get("correct")?.i32()?.data[0])
+    }
+}
+
+/// The executable part of a [`Step`]: run positional inputs to positional
+/// outputs.  Implementations do no ABI validation — [`Step`] validates
+/// both directions against the manifest so every backend fails with the
+/// same descriptive errors.
+pub trait StepExec {
+    /// Execute on inputs packed in manifest order; return outputs in
+    /// manifest order plus the backend's own measure of execution
+    /// wall-time.  The duration must cover exactly the step-function
+    /// evaluation (device execute + result fetch for PJRT; the host
+    /// compute for native) and exclude host-side packing/unpacking, so
+    /// the Table 5 runtime numbers stay comparable across backends.
+    fn run(&self, inputs: &[Value]) -> Result<(Vec<Value>, Duration)>;
+}
+
+/// One loaded step function: its manifest (the cross-language ABI) plus a
+/// backend executor.
+pub struct Step {
+    /// The artifact manifest this step was loaded against.
+    pub manifest: Manifest,
+    /// Which backend produced this step (`"native"` / `"pjrt"`).
+    pub backend: &'static str,
+    /// Wall time spent loading/compiling the step.
+    pub compile_time: Duration,
+    exec: Box<dyn StepExec>,
+}
+
+impl Step {
+    /// Couple a manifest with a backend executor.
+    pub fn new(
+        manifest: Manifest,
+        backend: &'static str,
+        compile_time: Duration,
+        exec: Box<dyn StepExec>,
+    ) -> Step {
+        Step { manifest, backend, compile_time, exec }
+    }
+
+    /// Artifact name from the manifest.
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    /// Execute with values packed in manifest input order.
+    pub fn execute(&self, inputs: &[Value]) -> Result<Outputs> {
+        let (out, _) = self.execute_timed(inputs)?;
+        Ok(out)
+    }
+
+    /// Execute and report the backend's execution wall-time (the paper's
+    /// backward-runtime measurements in Table 5 report exactly this
+    /// duration — see [`StepExec::run`] for what it covers).
+    pub fn execute_timed(&self, inputs: &[Value]) -> Result<(Outputs, Duration)> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: {} inputs supplied, manifest wants {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        for (spec, v) in self.manifest.inputs.iter().zip(inputs) {
+            check_abi(&self.manifest.name, "input", spec, v)?;
+        }
+        let (outs, dt) = self.exec.run(inputs)?;
+        if outs.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, manifest declares {}",
+                self.manifest.name,
+                outs.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        let mut map = BTreeMap::new();
+        for (spec, v) in self.manifest.outputs.iter().zip(outs) {
+            check_abi(&self.manifest.name, "output", spec, &v)?;
+            map.insert(spec.name.clone(), v);
+        }
+        Ok((Outputs { map }, dt))
+    }
+}
+
+fn check_abi(step: &str, dir: &str, spec: &IoSpec, v: &Value) -> Result<()> {
+    if v.dtype() != spec.dtype {
+        bail!(
+            "{step}: {dir} {:?} has dtype {:?}, manifest declares {:?}",
+            spec.name,
+            v.dtype(),
+            spec.dtype
+        );
+    }
+    if v.shape() != spec.shape.as_slice() {
+        bail!(
+            "{step}: {dir} {:?} has shape {:?} ({} elems), manifest declares {:?} ({} elems)",
+            spec.name,
+            v.shape(),
+            v.elems(),
+            spec.shape,
+            spec.elems()
+        );
+    }
+    Ok(())
+}
+
+/// A named execution backend: loads artifacts into executable [`Step`]s.
+pub trait Backend {
+    /// Stable backend name used in logs and errors.
+    fn name(&self) -> &'static str;
+    /// Load (and, for compiled backends, verify + compile) one artifact.
+    fn load(&self, artifact: &str) -> Result<Step>;
+}
+
+/// Which backend to use; selected by name on the CLI (`--backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust CPU reference executor ([`native`]); always available.
+    #[default]
+    Native,
+    /// XLA/PJRT artifact executor ([`pjrt`]); needs the `pjrt` feature
+    /// and a bundle of AOT-compiled artifacts.
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI/config backend name.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "cpu" | "ref" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (available: native, pjrt)"),
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Instantiate a backend by kind.  Fails with a descriptive error when
+/// the requested backend is not compiled in or its artifact bundle is
+/// missing/invalid.
+pub fn create(kind: BackendKind, artifacts_dir: &Path) -> Result<Rc<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Rc::new(native::NativeBackend::new(artifacts_dir))),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Rc::new(pjrt::PjrtBackend::new(artifacts_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => bail!(
+            "this build does not include the PJRT backend; rebuild with \
+             `cargo build --features pjrt` and the vendored `xla` crate \
+             (README.md §PJRT backend), or use `--backend native`"
+        ),
+    }
+}
+
+/// Lazily-loaded, memoized steps keyed by artifact name.
+pub struct StepCache {
+    backend: Rc<dyn Backend>,
+    cache: RefCell<BTreeMap<String, Rc<Step>>>,
+}
+
+impl StepCache {
+    /// Wrap a backend with a per-process step cache.
+    pub fn new(backend: Rc<dyn Backend>) -> StepCache {
+        StepCache { backend, cache: RefCell::new(BTreeMap::new()) }
+    }
+
+    /// Get (loading + memoizing on first use) a step by artifact name.
+    pub fn get(&self, name: &str) -> Result<Rc<Step>> {
+        if let Some(s) = self.cache.borrow().get(name) {
+            return Ok(s.clone());
+        }
+        let step = Rc::new(
+            self.backend
+                .load(name)
+                .with_context(|| format!("loading artifact {name} on the {} backend", self.backend.name()))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl StepExec for Echo {
+        fn run(&self, inputs: &[Value]) -> Result<(Vec<Value>, Duration)> {
+            Ok((vec![inputs[0].clone()], Duration::ZERO))
+        }
+    }
+
+    fn toy_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "name": "toy_fwd", "model": "toy", "kind": "fwd",
+              "w_bits": 0, "a_bits": 0, "batch_size": 2,
+              "params": [], "states": [], "wsites": [],
+              "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32", "role": "data"}],
+              "outputs": [{"name": "y", "shape": [2, 3], "dtype": "f32", "role": "logits"}]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn step_validates_input_count_and_shape() {
+        let step = Step::new(toy_manifest(), "native", Duration::ZERO, Box::new(Echo));
+        assert!(step.execute(&[]).is_err());
+        let bad = Value::F32(Tensor::zeros(&[4, 3]));
+        let err = step.execute(&[bad]).unwrap_err().to_string();
+        assert!(err.contains("manifest declares"), "{err}");
+        // same element count but transposed layout is also rejected
+        let bad = Value::F32(Tensor::zeros(&[3, 2]));
+        let err = step.execute(&[bad]).unwrap_err().to_string();
+        assert!(err.contains("manifest declares"), "{err}");
+        let ok = Value::F32(Tensor::zeros(&[2, 3]));
+        let out = step.execute(&[ok]).unwrap();
+        assert_eq!(out.get("y").unwrap().shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn step_validates_dtype() {
+        let step = Step::new(toy_manifest(), "native", Duration::ZERO, Box::new(Echo));
+        let bad = Value::I32(ITensor::zeros(&[2, 3]));
+        let err = step.execute(&[bad]).unwrap_err().to_string();
+        assert!(err.contains("dtype"), "{err}");
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("PJRT").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+    }
+}

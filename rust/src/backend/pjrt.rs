@@ -1,0 +1,157 @@
+//! PJRT backend: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax≥0.5 serialized
+//! protos), `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`.
+//!
+//! Before anything is compiled, the artifacts directory's schema-versioned
+//! bundle manifest ([`crate::bundle::Bundle`], written by `make
+//! artifacts` / `efqat bundle`) is loaded and the requested artifact's
+//! files are verified against their recorded SHA-256 checksums — a stale
+//! or corrupted artifact set fails with a descriptive error before any
+//! training starts.
+//!
+//! This module is compiled only with the `pjrt` cargo feature, which in
+//! turn requires the vendored `xla` crate as a dependency (see README.md
+//! §PJRT backend).  Without the feature, requesting `--backend pjrt`
+//! reports a descriptive error from [`crate::backend::create`].
+
+#[cfg(feature = "pjrt")]
+pub use imp::PjrtBackend;
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::{Path, PathBuf};
+    use std::time::{Duration, Instant};
+
+    use crate::backend::{Backend, Step, StepExec, Value};
+    use crate::bundle::Bundle;
+    use crate::error::{anyhow, bail, Context, Result};
+    use crate::model::{Dtype, IoSpec, Manifest};
+    use crate::tensor::{ITensor, Tensor};
+
+    /// PJRT CPU backend over a verified artifact bundle.
+    pub struct PjrtBackend {
+        client: xla::PjRtClient,
+        artifacts_dir: PathBuf,
+        bundle: Bundle,
+    }
+
+    impl PjrtBackend {
+        /// Create a CPU PJRT client and load + schema-check the bundle
+        /// manifest for `artifacts_dir`.
+        pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend> {
+            let bundle = Bundle::load(&Bundle::manifest_path(artifacts_dir)).context(
+                "the PJRT backend needs a bundle manifest; run `make artifacts` \
+                 (or `efqat bundle` over an existing artifacts directory)",
+            )?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(PjrtBackend { client, artifacts_dir: artifacts_dir.to_path_buf(), bundle })
+        }
+    }
+
+    impl Backend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        /// Verify the artifact against the bundle, then parse + compile
+        /// its HLO text.
+        fn load(&self, artifact: &str) -> Result<Step> {
+            self.bundle.verify_entry(&self.artifacts_dir, artifact)?;
+            let entry = self.bundle.entry(artifact)?;
+            let man_file = entry
+                .files
+                .get("manifest")
+                .ok_or_else(|| anyhow!("bundle entry {artifact} has no manifest file"))?;
+            let hlo_file = entry
+                .files
+                .get("hlo")
+                .ok_or_else(|| anyhow!("bundle entry {artifact} has no hlo file"))?;
+            let manifest = Manifest::load(&self.artifacts_dir.join(&man_file.path))?;
+            let hlo = self.artifacts_dir.join(&hlo_file.path);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&hlo)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", hlo.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {artifact}: {e:?}"))?;
+            let exec = PjrtStep { exe, outputs: manifest.outputs.clone(), name: artifact.to_string() };
+            Ok(Step::new(manifest, "pjrt", t0.elapsed(), Box::new(exec)))
+        }
+    }
+
+    struct PjrtStep {
+        exe: xla::PjRtLoadedExecutable,
+        outputs: Vec<IoSpec>,
+        name: String,
+    }
+
+    impl StepExec for PjrtStep {
+        fn run(&self, inputs: &[Value]) -> Result<(Vec<Value>, Duration)> {
+            let literals = inputs.iter().map(literal_of).collect::<Result<Vec<_>>>()?;
+            // time exactly the device execute + result fetch (the seed
+            // runtime's Table 5 window) — literal packing above and
+            // unpacking below are host overhead, reported separately
+            let t0 = Instant::now();
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let dt = t0.elapsed();
+            let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            if parts.len() != self.outputs.len() {
+                bail!("{}: {} outputs returned, manifest declares {}", self.name, parts.len(), self.outputs.len());
+            }
+            let outs = self
+                .outputs
+                .iter()
+                .zip(parts)
+                .map(|(spec, lit)| unpack(spec, lit))
+                .collect::<Result<Vec<_>>>()?;
+            Ok((outs, dt))
+        }
+    }
+
+    /// Pack a host value into an XLA literal of its own shape.
+    fn literal_of(v: &Value) -> Result<xla::Literal> {
+        match v {
+            Value::F32(t) => {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+            }
+            Value::I32(t) => {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+            }
+        }
+    }
+
+    fn unpack(spec: &IoSpec, lit: xla::Literal) -> Result<Value> {
+        match spec.dtype {
+            Dtype::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{}: to_vec f32: {e:?}", spec.name))?;
+                Ok(Value::F32(Tensor::new(spec.shape.clone(), data)?))
+            }
+            Dtype::I32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("{}: to_vec i32: {e:?}", spec.name))?;
+                Ok(Value::I32(ITensor::new(spec.shape.clone(), data)?))
+            }
+        }
+    }
+}

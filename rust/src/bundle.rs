@@ -1,0 +1,478 @@
+//! Schema-versioned artifact-bundle manifests (`artifacts/manifest.json`).
+//!
+//! The per-artifact `<name>.manifest.json` files describe one step
+//! function's ABI; this module adds the layer above them: a single
+//! `manifest.json` at the root of the artifacts directory that inventories
+//! every artifact with per-file SHA-256 checksums, byte sizes, and build
+//! provenance, under an explicit `schema_version`.  The design follows the
+//! program-bundle manifests of the related repos (artcode RFC 0005,
+//! raster's "Program Bundle and Manifests") and is specified in
+//! `docs/rfcs/0001-artifact-manifest.md`.
+//!
+//! Loading a bundle with an unknown `schema_version`, a missing entry, or
+//! a checksum mismatch produces a descriptive [`crate::error::Error`] —
+//! never a panic and never a silent fallback — so a stale or corrupted
+//! artifacts directory is caught before a multi-minute training run
+//! starts.  Bundles are written by `efqat bundle` (or `make artifacts`)
+//! via [`Bundle::scan`] + [`Bundle::save`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{anyhow, bail, Context, Result};
+use crate::json::Json;
+
+/// The bundle schema this build reads and writes.  Readers must reject
+/// any other major version loudly (RFC 0001 §Versioning).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One checksummed file belonging to a bundle entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FileRef {
+    /// Path relative to the artifacts directory.
+    pub path: String,
+    /// Lowercase hex SHA-256 of the file contents.
+    pub sha256: String,
+    /// File size in bytes (fast pre-check before hashing).
+    pub bytes: u64,
+}
+
+/// One artifact: a step-function manifest plus (for compiled backends)
+/// its HLO text.  `files` is keyed by role: `"manifest"` is always
+/// present; `"hlo"` is present for PJRT-compiled artifacts and absent for
+/// entries the native backend synthesizes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BundleEntry {
+    /// Artifact name, e.g. `resnet8_w8a8_train_r25`.
+    pub name: String,
+    /// Step kind from the per-artifact manifest: `train` | `fwd` | `calib`.
+    pub kind: String,
+    /// Role → file reference (`"manifest"`, `"hlo"`).
+    pub files: BTreeMap<String, FileRef>,
+}
+
+/// The top-level, schema-versioned artifact inventory.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Bundle {
+    /// Free-form provenance (`builder`, `jax`, `created`, …) recorded at
+    /// build time; informational only, never validated.
+    pub provenance: BTreeMap<String, String>,
+    /// Artifacts in name order.
+    pub entries: Vec<BundleEntry>,
+}
+
+impl Bundle {
+    /// Canonical bundle path inside an artifacts directory.
+    pub fn manifest_path(dir: &Path) -> PathBuf {
+        dir.join("manifest.json")
+    }
+
+    /// Load and schema-check `manifest.json`.
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bundle manifest {}", path.display()))?;
+        Self::parse(&src).with_context(|| format!("parsing bundle manifest {}", path.display()))
+    }
+
+    /// Parse from JSON text, rejecting unsupported schema versions with a
+    /// descriptive error.
+    pub fn parse(src: &str) -> Result<Bundle> {
+        let j = Json::parse(src)?;
+        let raw = j.get("schema_version")?.num()?;
+        if raw.fract() != 0.0 || raw < 0.0 {
+            bail!("malformed bundle schema_version {raw:?} (must be a non-negative integer)");
+        }
+        let ver = raw as u64;
+        if ver != SCHEMA_VERSION {
+            bail!(
+                "unsupported bundle schema_version {ver} (this build supports {SCHEMA_VERSION}); \
+                 re-run `make artifacts` with a matching toolchain"
+            );
+        }
+        let mut provenance = BTreeMap::new();
+        if let Some(p) = j.opt("provenance") {
+            if let Json::Obj(m) = p {
+                for (k, v) in m {
+                    provenance.insert(k.clone(), v.str().unwrap_or("").to_string());
+                }
+            }
+        }
+        let entries = j
+            .get("entries")?
+            .arr()?
+            .iter()
+            .map(|e| {
+                let mut files = BTreeMap::new();
+                if let Json::Obj(m) = e.get("files")? {
+                    for (role, f) in m {
+                        files.insert(
+                            role.clone(),
+                            FileRef {
+                                path: f.get("path")?.str()?.to_string(),
+                                sha256: f.get("sha256")?.str()?.to_string(),
+                                bytes: f.get("bytes")?.num()? as u64,
+                            },
+                        );
+                    }
+                } else {
+                    bail!("entry files is not an object");
+                }
+                Ok(BundleEntry {
+                    name: e.get("name")?.str()?.to_string(),
+                    kind: e.get("kind")?.str()?.to_string(),
+                    files,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Bundle { provenance, entries })
+    }
+
+    /// Serialize to the canonical JSON form ([`crate::json::Json::render`]).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema_version".to_string(), Json::Num(SCHEMA_VERSION as f64));
+        root.insert("bundle_hash".to_string(), Json::Str(self.bundle_hash()));
+        root.insert(
+            "provenance".to_string(),
+            Json::Obj(
+                self.provenance
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        );
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.clone()));
+                m.insert("kind".to_string(), Json::Str(e.kind.clone()));
+                let files = e
+                    .files
+                    .iter()
+                    .map(|(role, f)| {
+                        let mut fm = BTreeMap::new();
+                        fm.insert("path".to_string(), Json::Str(f.path.clone()));
+                        fm.insert("sha256".to_string(), Json::Str(f.sha256.clone()));
+                        fm.insert("bytes".to_string(), Json::Num(f.bytes as f64));
+                        (role.clone(), Json::Obj(fm))
+                    })
+                    .collect();
+                m.insert("files".to_string(), Json::Obj(files));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(root)
+    }
+
+    /// Write `manifest.json` (creating parent directories as needed).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().render())
+            .with_context(|| format!("writing bundle manifest {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Look up an entry by artifact name.
+    pub fn entry(&self, name: &str) -> Result<&BundleEntry> {
+        self.entries.iter().find(|e| e.name == name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} is not listed in the bundle manifest \
+                 ({} entries); the artifacts directory is stale — re-run `make artifacts`",
+                self.entries.len()
+            )
+        })
+    }
+
+    /// Verify every file of one entry against its recorded size + SHA-256.
+    pub fn verify_entry(&self, dir: &Path, name: &str) -> Result<()> {
+        let entry = self.entry(name)?;
+        for (role, f) in &entry.files {
+            let path = dir.join(&f.path);
+            let data = std::fs::read(&path).with_context(|| {
+                format!("artifact {name}: {role} file {} listed in manifest.json is unreadable", path.display())
+            })?;
+            if data.len() as u64 != f.bytes {
+                bail!(
+                    "artifact {name}: {} is {} bytes, manifest.json records {} — \
+                     artifacts and manifest are out of sync, re-run `make artifacts`",
+                    f.path,
+                    data.len(),
+                    f.bytes
+                );
+            }
+            let got = sha256_hex(&data);
+            if got != f.sha256 {
+                // .get() so a corrupted (non-ASCII) recorded hash can't
+                // panic the error path it is being reported on
+                let want = f.sha256.get(..12).unwrap_or(&f.sha256);
+                bail!(
+                    "artifact {name}: {} checksum mismatch (manifest {want}…, disk {}…) — \
+                     artifacts and manifest are out of sync, re-run `make artifacts`",
+                    f.path,
+                    &got[..12]
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify every entry ([`Bundle::verify_entry`]) in the bundle.
+    pub fn verify_all(&self, dir: &Path) -> Result<()> {
+        for e in &self.entries {
+            self.verify_entry(dir, &e.name)?;
+        }
+        Ok(())
+    }
+
+    /// Content hash over the sorted (name, file, sha256) triples — a
+    /// single value that changes iff any artifact changes.
+    pub fn bundle_hash(&self) -> String {
+        let mut acc = String::new();
+        for e in &self.entries {
+            for (role, f) in &e.files {
+                acc.push_str(&e.name);
+                acc.push(':');
+                acc.push_str(role);
+                acc.push(':');
+                acc.push_str(&f.sha256);
+                acc.push('\n');
+            }
+        }
+        sha256_hex(acc.as_bytes())
+    }
+
+    /// Build a bundle by scanning an artifacts directory for
+    /// `<name>.manifest.json` (+ optional `<name>.hlo.txt`) pairs,
+    /// hashing each file and reading the step kind from the per-artifact
+    /// manifest.
+    pub fn scan(dir: &Path, provenance: BTreeMap<String, String>) -> Result<Bundle> {
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .with_context(|| format!("scanning artifacts directory {}", dir.display()))?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                e.file_name()
+                    .to_string_lossy()
+                    .strip_suffix(".manifest.json")
+                    .map(str::to_string)
+            })
+            .collect();
+        names.sort();
+        let mut entries = Vec::with_capacity(names.len());
+        for name in names {
+            let man_rel = format!("{name}.manifest.json");
+            let man = crate::model::Manifest::load(&dir.join(&man_rel))?;
+            let mut files = BTreeMap::new();
+            files.insert("manifest".to_string(), file_ref(dir, &man_rel)?);
+            let hlo_rel = format!("{name}.hlo.txt");
+            if dir.join(&hlo_rel).exists() {
+                files.insert("hlo".to_string(), file_ref(dir, &hlo_rel)?);
+            }
+            entries.push(BundleEntry { name, kind: man.kind, files });
+        }
+        Ok(Bundle { provenance, entries })
+    }
+}
+
+fn file_ref(dir: &Path, rel: &str) -> Result<FileRef> {
+    let data = std::fs::read(dir.join(rel))
+        .with_context(|| format!("reading {rel} for checksumming"))?;
+    Ok(FileRef { path: rel.to_string(), sha256: sha256_hex(&data), bytes: data.len() as u64 })
+}
+
+// ---------------------------------------------------------------------------
+// SHA-256 (FIPS 180-4) — no crypto crates offline; checksums only, not
+// security-critical.
+// ---------------------------------------------------------------------------
+
+const SHA256_K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// SHA-256 digest as lowercase hex.
+pub fn sha256_hex(data: &[u8]) -> String {
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let bitlen = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+    for chunk in msg.chunks_exact(64) {
+        let mut w = [0u32; 64];
+        for i in 0..16 {
+            w[i] = u32::from_be_bytes([chunk[4 * i], chunk[4 * i + 1], chunk[4 * i + 2], chunk[4 * i + 3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16].wrapping_add(s0).wrapping_add(w[i - 7]).wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(SHA256_K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOY_MANIFEST: &str = r#"{
+      "name": "toy_calib", "model": "toy", "kind": "calib",
+      "w_bits": 0, "a_bits": 0, "batch_size": 4,
+      "params": [], "states": [], "wsites": [],
+      "inputs": [], "outputs": []
+    }"#;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("efqat_bundle_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn sha256_known_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // multi-block message (> 64 bytes)
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn scan_save_load_verify_round_trip() {
+        let dir = tmp("rt");
+        std::fs::write(dir.join("toy_calib.manifest.json"), TOY_MANIFEST).unwrap();
+        std::fs::write(dir.join("toy_calib.hlo.txt"), "HloModule toy").unwrap();
+        let mut prov = BTreeMap::new();
+        prov.insert("builder".to_string(), "test".to_string());
+        let bundle = Bundle::scan(&dir, prov).unwrap();
+        assert_eq!(bundle.entries.len(), 1);
+        assert_eq!(bundle.entries[0].kind, "calib");
+        assert!(bundle.entries[0].files.contains_key("hlo"));
+
+        let path = Bundle::manifest_path(&dir);
+        bundle.save(&path).unwrap();
+        let loaded = Bundle::load(&path).unwrap();
+        assert_eq!(loaded, bundle);
+        loaded.verify_all(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_file_fails_checksum_with_descriptive_error() {
+        let dir = tmp("corrupt");
+        std::fs::write(dir.join("toy_calib.manifest.json"), TOY_MANIFEST).unwrap();
+        std::fs::write(dir.join("toy_calib.hlo.txt"), "HloModule toy").unwrap();
+        let bundle = Bundle::scan(&dir, BTreeMap::new()).unwrap();
+        // same length, different content → size check passes, hash fails
+        std::fs::write(dir.join("toy_calib.hlo.txt"), "HloModule t0y").unwrap();
+        let err = bundle.verify_entry(&dir, "toy_calib").unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("toy_calib"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_schema_version_rejected() {
+        let src = r#"{"schema_version": 999, "entries": []}"#;
+        let err = Bundle::parse(src).unwrap_err().to_string();
+        assert!(err.contains("schema_version 999"), "{err}");
+        assert!(err.contains("supports 1"), "{err}");
+        // fractional/negative versions don't silently truncate to 1
+        assert!(Bundle::parse(r#"{"schema_version": 1.5, "entries": []}"#).is_err());
+        assert!(Bundle::parse(r#"{"schema_version": -1, "entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_is_an_error_not_a_panic() {
+        assert!(Bundle::parse("{ not json").is_err());
+        assert!(Bundle::parse(r#"{"entries": []}"#).is_err()); // missing schema_version
+        let dir = tmp("missing");
+        let err = Bundle::load(&Bundle::manifest_path(&dir)).unwrap_err().to_string();
+        assert!(err.contains("manifest.json"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_entry_and_missing_file_are_descriptive() {
+        let dir = tmp("entries");
+        std::fs::write(dir.join("toy_calib.manifest.json"), TOY_MANIFEST).unwrap();
+        let bundle = Bundle::scan(&dir, BTreeMap::new()).unwrap();
+        let err = bundle.entry("nope_fwd").unwrap_err().to_string();
+        assert!(err.contains("nope_fwd"), "{err}");
+        std::fs::remove_file(dir.join("toy_calib.manifest.json")).unwrap();
+        let err = bundle.verify_entry(&dir, "toy_calib").unwrap_err().to_string();
+        assert!(err.contains("unreadable"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bundle_hash_tracks_content() {
+        let mut b1 = Bundle::default();
+        b1.entries.push(BundleEntry {
+            name: "a".into(),
+            kind: "fwd".into(),
+            files: BTreeMap::from([(
+                "manifest".to_string(),
+                FileRef { path: "a.manifest.json".into(), sha256: "00".into(), bytes: 2 },
+            )]),
+        });
+        let mut b2 = b1.clone();
+        assert_eq!(b1.bundle_hash(), b2.bundle_hash());
+        b2.entries[0].files.get_mut("manifest").unwrap().sha256 = "ff".into();
+        assert_ne!(b1.bundle_hash(), b2.bundle_hash());
+    }
+}

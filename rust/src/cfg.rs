@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{anyhow, bail, Context, Result};
 
 #[derive(Clone, Debug, Default)]
 pub struct Config {

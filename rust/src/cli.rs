@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 /// Boolean switches that never consume a value (resolves the `--flag
 /// positional` ambiguity the same way clap's `action = SetTrue` would).

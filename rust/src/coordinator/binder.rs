@@ -1,12 +1,12 @@
-//! Manifest-driven literal binding: turn host stores + a batch + the
-//! current freeze selection into the exact input vector an artifact wants.
+//! Manifest-driven input binding: turn host stores + a batch + the
+//! current freeze selection into the exact input vector an artifact
+//! wants, as backend-agnostic [`Value`]s packed in manifest order.
 
-use anyhow::{anyhow, bail, Result};
-
+use crate::backend::Value;
+use crate::data::Batch;
+use crate::error::{anyhow, bail, Result};
 use crate::freeze::Selection;
 use crate::model::{Dtype, Manifest, ParamStore, QParamStore, StateStore};
-use crate::runtime::{literal_f32, literal_i32};
-use crate::data::Batch;
 use crate::tensor::{ITensor, Tensor};
 
 /// Everything an artifact input can refer to.
@@ -19,8 +19,13 @@ pub struct BindCtx<'a> {
     pub selection: Option<&'a Selection>,
 }
 
-/// Pack literals in manifest input order.
-pub fn bind_inputs(man: &Manifest, ctx: &BindCtx) -> Result<Vec<xla::Literal>> {
+/// Pack host values in manifest input order.
+///
+/// Note: values are cloned into owned [`Value`]s — one copy per input
+/// per step.  That keeps the backend seam lifetime-free; if profiling
+/// ever shows the copies on a hot path, the seam-preserving fix is
+/// `Value` holding `Rc<Tensor>` rather than borrowing here.
+pub fn bind_inputs(man: &Manifest, ctx: &BindCtx) -> Result<Vec<Value>> {
     let site_pos = |of: &Option<String>| -> Result<usize> {
         let name = of.as_deref().ok_or_else(|| anyhow!("selector input without 'of'"))?;
         man.wsites
@@ -30,35 +35,37 @@ pub fn bind_inputs(man: &Manifest, ctx: &BindCtx) -> Result<Vec<xla::Literal>> {
     };
     let mut out = Vec::with_capacity(man.inputs.len());
     for spec in &man.inputs {
-        let lit = match spec.role.as_str() {
-            "param" => literal_f32(ctx.params.get(&spec.name)?)?,
+        let val = match spec.role.as_str() {
+            "param" => Value::F32(ctx.params.get(&spec.name)?.clone()),
             "qparam_sw" => {
                 let q = ctx.qparams.ok_or_else(|| anyhow!("artifact wants qparams"))?;
                 let of = spec.of.as_deref().unwrap_or("");
                 let sw = q.sw.get(of).ok_or_else(|| anyhow!("missing sw for {of:?}"))?;
-                literal_f32(sw)?
+                Value::F32(sw.clone())
             }
             "qparam_sx" | "qparam_zx" => {
                 let q = ctx.qparams.ok_or_else(|| anyhow!("artifact wants qparams"))?;
                 let of = spec.of.as_deref().unwrap_or("");
                 let act = q.act.get(of).ok_or_else(|| anyhow!("missing act qparams for {of:?}"))?;
                 let v = if spec.role == "qparam_sx" { act.scale } else { act.zero_point };
-                literal_f32(&Tensor::scalar(v))?
+                Value::F32(Tensor::scalar(v))
             }
-            "state" => literal_f32(ctx.states.get(&spec.name)?)?,
+            "state" => Value::F32(ctx.states.get(&spec.name)?.clone()),
             "data" => match spec.dtype {
-                Dtype::F32 => literal_f32(
+                Dtype::F32 => Value::F32(
                     ctx.batch
                         .f32s
                         .get(&spec.name)
-                        .ok_or_else(|| anyhow!("batch missing f32 {:?}", spec.name))?,
-                )?,
-                Dtype::I32 => literal_i32(
+                        .ok_or_else(|| anyhow!("batch missing f32 {:?}", spec.name))?
+                        .clone(),
+                ),
+                Dtype::I32 => Value::I32(
                     ctx.batch
                         .i32s
                         .get(&spec.name)
-                        .ok_or_else(|| anyhow!("batch missing i32 {:?}", spec.name))?,
-                )?,
+                        .ok_or_else(|| anyhow!("batch missing i32 {:?}", spec.name))?
+                        .clone(),
+                ),
             },
             "index" => {
                 let sel = ctx.selection.ok_or_else(|| anyhow!("artifact wants a selection"))?;
@@ -71,16 +78,16 @@ pub fn bind_inputs(man: &Manifest, ctx: &BindCtx) -> Result<Vec<xla::Literal>> {
                     );
                 }
                 let data: Vec<i32> = ids.iter().map(|&c| c as i32).collect();
-                literal_i32(&ITensor { shape: spec.shape.clone(), data })?
+                Value::I32(ITensor { shape: spec.shape.clone(), data })
             }
             "flag" => {
                 let sel = ctx.selection.ok_or_else(|| anyhow!("artifact wants a selection"))?;
                 let si = site_pos(&spec.of)?;
-                literal_i32(&ITensor { shape: vec![1], data: vec![sel.flags[si] as i32] })?
+                Value::I32(ITensor { shape: vec![1], data: vec![sel.flags[si] as i32] })
             }
             other => bail!("unknown input role {other:?} ({})", spec.name),
         };
-        out.push(lit);
+        out.push(val);
     }
     Ok(out)
 }

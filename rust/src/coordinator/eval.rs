@@ -1,11 +1,10 @@
 //! Evaluation: accuracy (CNNs), span exact-match + token-F1 (QA),
 //! loss/perplexity (LM) — the metrics of the paper's Tables 3/4.
 
-use anyhow::Result;
-
+use crate::backend::Step;
 use crate::data::{squad::span_f1, Batch, Loader};
+use crate::error::Result;
 use crate::model::{ParamStore, QParamStore, StateStore};
-use crate::runtime::Step;
 use crate::tensor::argmax;
 
 use super::binder::{bind_inputs, BindCtx};

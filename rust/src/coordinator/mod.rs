@@ -10,6 +10,10 @@
 //!      samples, row-masked SGD on unfrozen channels, Adam on the
 //!      quantization parameters.
 //!   4. [`eval::evaluate`]         — accuracy / span-F1 / perplexity.
+//!
+//! Every phase talks to the execution layer through the
+//! [`crate::backend::Backend`] seam, so the same coordinator code drives
+//! the native CPU reference executor and the PJRT artifact runtime.
 
 pub mod binder;
 pub mod pipeline;
@@ -27,19 +31,33 @@ pub use trainer::{pretrain_fp, EfqatTrainer, TrainCfg};
 use std::path::Path;
 use std::rc::Rc;
 
-use anyhow::Result;
+use crate::backend::{self, Backend, BackendKind, StepCache};
+use crate::cfg::Config;
+use crate::error::Result;
 
-use crate::runtime::{Runtime, StepCache};
-
-/// Shared runtime + compiled-step cache for one process.
+/// Shared backend + loaded-step cache for one process.
 pub struct Session {
-    pub runtime: Rc<Runtime>,
+    pub backend: Rc<dyn Backend>,
     pub steps: StepCache,
 }
 
 impl Session {
+    /// Open a session on the default backend ([`BackendKind::Native`]).
     pub fn new(artifacts_dir: &Path) -> Result<Session> {
-        let runtime = Rc::new(Runtime::new(artifacts_dir)?);
-        Ok(Session { steps: StepCache::new(runtime.clone()), runtime })
+        Self::with_backend(BackendKind::default(), artifacts_dir)
+    }
+
+    /// Open a session on an explicitly selected backend.
+    pub fn with_backend(kind: BackendKind, artifacts_dir: &Path) -> Result<Session> {
+        let backend = backend::create(kind, artifacts_dir)?;
+        Ok(Session { steps: StepCache::new(backend.clone()), backend })
+    }
+
+    /// Open a session from config keys: `backend` (default `native`) and
+    /// `artifacts` (default `artifacts`) — what the CLI's `--backend` /
+    /// `--artifacts` flags map to.
+    pub fn from_cfg(cfg: &Config) -> Result<Session> {
+        let kind = BackendKind::parse(&cfg.str("backend", "native"))?;
+        Self::with_backend(kind, &pipeline::artifacts_dir(cfg))
     }
 }

@@ -6,9 +6,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::cfg::Config;
+use crate::error::{anyhow, Context, Result};
 use crate::freeze::Mode;
 use crate::harness::sparkline;
 use crate::model::{load_checkpoint, save_checkpoint, ParamStore, QParamStore, StateStore};
@@ -36,11 +35,8 @@ pub fn fp_ckpt_path(cfg: &Config, model: &str) -> PathBuf {
 
 /// "w4a8" → (4, 8)
 pub fn parse_bits(bits: &str) -> Result<(u32, u32)> {
-    let rest = bits
-        .strip_prefix('w')
-        .ok_or_else(|| anyhow!("bad bits tag {bits:?} (want e.g. w4a8)"))?;
-    let (w, a) = rest.split_once('a').ok_or_else(|| anyhow!("bad bits tag {bits:?}"))?;
-    Ok((w.parse()?, a.parse()?))
+    crate::quant::parse_bits_tag(bits)
+        .ok_or_else(|| anyhow!("bad bits tag {bits:?} (want e.g. w4a8)"))
 }
 
 /// Paper-default hyper-parameters, config-overridable.

@@ -9,12 +9,11 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
-
+use crate::backend::Step;
 use crate::data::Loader;
+use crate::error::Result;
 use crate::model::{ParamStore, QParamStore, StateStore};
 use crate::quant::MinMaxObserver;
-use crate::runtime::Step;
 
 use super::binder::{bind_inputs, BindCtx};
 

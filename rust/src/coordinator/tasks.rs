@@ -2,9 +2,8 @@
 //! scales (the repro-scale substitutes of DESIGN.md §3).  All sizes are
 //! config-overridable (`data.*` keys).
 
-use anyhow::{bail, Result};
-
 use crate::cfg::Config;
+use crate::error::{bail, Result};
 use crate::data::{corpus, images, squad, Loader};
 use crate::data::loader::Source;
 
@@ -26,6 +25,9 @@ fn defaults(model: &str) -> (usize, usize, usize) {
         "resnet11b" => (2048, 512, 100),
         "bert_tiny" => (2048, 512, 0),
         "gpt_mini" => (0, 0, 0), // corpus-based, see below
+        // native-backend MLPs: small enough that a full pipeline is a
+        // sub-second affair in `cargo test`
+        "mlp" | "mlp_wide" => (512, 256, 10),
         _ => (1024, 512, 10),
     }
 }
@@ -39,8 +41,11 @@ pub fn build_task(model: &str, batch_size: usize, cfg: &Config) -> Result<Task> 
     let noise = cfg.f32("data.noise", 2.0); // ~75% FP ceiling: leaves room for the PTQ→QAT ordering
 
     let (train_src, test_src) = match model {
-        "resnet8" | "resnet20" | "resnet11b" => {
-            let hw = cfg.usize("data.hw", 32);
+        "resnet8" | "resnet20" | "resnet11b" | "mlp" | "mlp_wide" => {
+            // the native MLP manifests bake in 8×8 inputs; the conv models
+            // keep the CIFAR-like 32×32 default
+            let default_hw = if model.starts_with("mlp") { 8 } else { 32 };
+            let hw = cfg.usize("data.hw", default_hw);
             // same task (prototypes), disjoint sample streams
             let tr = images::generate_split(train_n, classes, hw, noise, seed, seed);
             let te = images::generate_split(test_n, classes, hw, noise, seed, seed ^ 0x7e57);
@@ -84,7 +89,7 @@ mod tests {
     #[test]
     fn builds_every_model_task() {
         let cfg = Config::empty();
-        for m in ["resnet8", "resnet20", "resnet11b", "bert_tiny", "gpt_mini"] {
+        for m in ["resnet8", "resnet20", "resnet11b", "bert_tiny", "gpt_mini", "mlp", "mlp_wide"] {
             let t = build_task(m, 8, &cfg).unwrap();
             assert!(t.train.n_batches() > 0, "{m}");
             assert!(t.test.n_batches() > 0, "{m}");

@@ -14,13 +14,12 @@
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
-
+use crate::backend::Step;
 use crate::data::Loader;
+use crate::error::{anyhow, bail, Result};
 use crate::freeze::{site_k, FreezePolicy, Mode, Selection, Site};
 use crate::model::{Manifest, ParamStore, QParamStore, StateStore};
 use crate::optim::{Adam, SgdMomentum};
-use crate::runtime::Step;
 use crate::tensor::Tensor;
 
 use super::binder::{bind_inputs, BindCtx};

@@ -1,0 +1,137 @@
+//! Minimal error handling (the `anyhow` crate is unavailable offline).
+//!
+//! Provides the exact subset this project uses of the anyhow API surface:
+//! an opaque string-carrying [`Error`], the [`Result`] alias with a
+//! defaulted error type, the [`anyhow!`](crate::anyhow) and
+//! [`bail!`](crate::bail) macros, and the [`Context`] extension trait for
+//! `Result`/`Option`.  Any `std::error::Error` converts into [`Error`]
+//! via `?`, so `std::fs` / parsing call sites read exactly as they would
+//! with anyhow.
+
+use std::fmt;
+
+/// Opaque error: a human-readable message, optionally wrapped by
+/// [`Context`] frames (`"outer context: inner message"`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything stringly (the `anyhow!` macro calls this).
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+
+    /// Prepend a context frame, anyhow-style.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?`.  `Error` itself deliberately does NOT
+// implement `std::error::Error`, exactly like anyhow, so this blanket
+// impl cannot collide with the reflexive `From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// anyhow-style `.context(..)` / `.with_context(|| ..)` on results and
+/// options.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`](crate::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`](crate::error::Error) built from a
+/// format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::error::Error::msg(format!($($arg)*))) };
+}
+
+// Make `use crate::error::{anyhow, bail}` work like the anyhow imports
+// the call sites were written against.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: Result<()> = fails().context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: boom 42");
+        let r: Result<()> = fails().with_context(|| format!("step {}", 7));
+        assert_eq!(r.unwrap_err().to_string(), "step 7: boom 42");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+}

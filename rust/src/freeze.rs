@@ -16,14 +16,20 @@
 
 use crate::tensor::{topk, Tensor};
 
+/// The paper's three freezing policies (Table 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
+    /// Channel-wise per-layer: top-k channels inside every layer.
     Cwpl,
+    /// Channel-wise per-network: channels ranked globally.
     Cwpn,
+    /// Layer-wise per-network: whole layers freeze under a weight budget.
     Lwpn,
 }
 
 impl Mode {
+    /// Parse a CLI mode name (`cwpl` / `cwpn` / `lwpn`, case-insensitive);
+    /// `qat` / `r0` are not modes — they run without a policy.
     pub fn parse(s: &str) -> Option<Mode> {
         match s.to_ascii_lowercase().as_str() {
             "cwpl" => Some(Mode::Cwpl),
@@ -37,7 +43,9 @@ impl Mode {
 /// One freezable weight site (a conv's output channels / a linear's rows).
 #[derive(Clone, Debug)]
 pub struct Site {
+    /// Parameter name of the site's weight tensor.
     pub name: String,
+    /// Output-channel count (the leading weight dimension).
     pub c_out: usize,
     /// gradient slots in the ratio artifacts: k = max(1, ⌊r·C_out⌋)
     pub k: usize,
@@ -54,11 +62,16 @@ pub struct Selection {
     pub flags: Vec<bool>,
 }
 
+/// Stateful selection policy: tracks per-channel importances (Eq. 6) and
+/// re-runs Top-K selection every `freq` training samples (paper §3.2).
 pub struct FreezePolicy {
+    /// Which of the paper's three policies drives selection.
     pub mode: Mode,
+    /// Unfrozen fraction `r` (CWPL/CWPN: per-layer slots; LWPN: weight budget).
     pub ratio: f32,
     /// recompute importances every `freq` samples (paper's f)
     pub freq: usize,
+    /// The freezable weight sites, in manifest order.
     pub sites: Vec<Site>,
     importance: Vec<Vec<f32>>,
     selection: Selection,
@@ -68,6 +81,8 @@ pub struct FreezePolicy {
 }
 
 impl FreezePolicy {
+    /// Build a policy, seed importances from the current weights (Eq. 6),
+    /// and run the initial selection.
     pub fn new(mode: Mode, ratio: f32, freq: usize, sites: Vec<Site>, weights: &[&Tensor]) -> Self {
         assert_eq!(sites.len(), weights.len());
         let importance: Vec<Vec<f32>> = weights.iter().map(|w| w.row_abs_mean()).collect();
@@ -85,10 +100,13 @@ impl FreezePolicy {
         p
     }
 
+    /// The current selection (bound to the artifact each step).
     pub fn selection(&self) -> &Selection {
         &self.selection
     }
 
+    /// Current per-channel importances of one site (Eq. 6; frozen
+    /// channels keep their stale value, as in the paper).
     pub fn importance(&self, site: usize) -> &[f32] {
         &self.importance[site]
     }

@@ -1,12 +1,15 @@
-//! Minimal JSON parser for artifact manifests (serde is unavailable offline).
+//! Minimal JSON parser + writer for artifact and bundle manifests (serde
+//! is unavailable offline).
 //!
 //! Supports the full JSON grammar the manifests use: objects, arrays,
 //! strings (with escapes), numbers, booleans, null.  Not streaming, not
-//! zero-copy — manifests are a few hundred KiB at most.
+//! zero-copy — manifests are a few hundred KiB at most.  [`Json::render`]
+//! serializes back to pretty-printed text with stable (sorted) object key
+//! order, so bundle manifests are byte-stable across rebuilds.
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{anyhow, bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -71,6 +74,92 @@ impl Json {
     pub fn shape(&self) -> Result<Vec<usize>> {
         self.arr()?.iter().map(|j| j.usize()).collect()
     }
+
+    /// Serialize to pretty-printed JSON (2-space indent, sorted keys).
+    /// `Json::parse(&j.render())` round-trips for every value this module
+    /// can represent.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN; parse() rejects them, so a
+                    // hand-constructed non-finite renders as null rather
+                    // than emitting unparseable output
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    // integers render without a trailing ".0" so
+                    // hashes/sizes stay readable and stable
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                if v.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    item.write_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -168,31 +257,43 @@ impl<'a> Parser<'a> {
         let mut s = String::new();
         loop {
             let c = *self.b.get(self.i).ok_or_else(|| anyhow!("unterminated string"))?;
-            self.i += 1;
-            match c {
-                b'"' => return Ok(s),
-                b'\\' => {
-                    let e = *self.b.get(self.i).ok_or_else(|| anyhow!("bad escape"))?;
-                    self.i += 1;
-                    match e {
-                        b'"' => s.push('"'),
-                        b'\\' => s.push('\\'),
-                        b'/' => s.push('/'),
-                        b'n' => s.push('\n'),
-                        b't' => s.push('\t'),
-                        b'r' => s.push('\r'),
-                        b'b' => s.push('\u{8}'),
-                        b'f' => s.push('\u{c}'),
-                        b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                        }
-                        _ => bail!("bad escape \\{}", e as char),
+            if c == b'"' {
+                self.i += 1;
+                return Ok(s);
+            }
+            if c == b'\\' {
+                self.i += 1;
+                let e = *self.b.get(self.i).ok_or_else(|| anyhow!("bad escape"))?;
+                self.i += 1;
+                match e {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'u' => {
+                        let hex = self
+                            .b
+                            .get(self.i..self.i + 4)
+                            .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                        let cp = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                        self.i += 4;
+                        s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                     }
+                    _ => bail!("bad escape \\{}", e as char),
                 }
-                _ => s.push(c as char),
+            } else {
+                // the source is &str, so any multi-byte UTF-8 sequence is
+                // valid — copy the whole sequence, not one byte at a time
+                let start = self.i;
+                self.i += 1;
+                while self.i < self.b.len() && (self.b[self.i] & 0xC0) == 0x80 {
+                    self.i += 1;
+                }
+                s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
             }
         }
     }
@@ -206,7 +307,11 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let txt = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(txt.parse()?))
+        let n: f64 = txt.parse()?;
+        if !n.is_finite() {
+            bail!("number out of range at byte {start}: {txt:?}");
+        }
+        Ok(Json::Num(n))
     }
 }
 
@@ -241,6 +346,9 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-1.5e2").unwrap().num().unwrap(), -150.0);
         assert_eq!(Json::parse("42").unwrap().usize().unwrap(), 42);
+        // overflow-to-infinity is rejected, keeping render() output
+        // parseable for everything parse() accepts
+        assert!(Json::parse("1e999").is_err());
     }
 
     #[test]
@@ -255,5 +363,41 @@ mod tests {
         let j = Json::parse(r#"[[1,2],[3,[4,{"k":[5]}]]]"#).unwrap();
         let outer = j.arr().unwrap();
         assert_eq!(outer.len(), 2);
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let src = r#"{
+          "name": "bundle", "schema_version": 1, "ratio": 0.25,
+          "entries": [{"sha256": "ab\"c", "bytes": 123}],
+          "none": null, "ok": true, "empty_arr": [], "empty_obj": {}
+        }"#;
+        let j = Json::parse(src).unwrap();
+        let rendered = j.render();
+        let j2 = Json::parse(&rendered).unwrap();
+        assert_eq!(j, j2);
+        // integers render without a decimal point
+        assert!(rendered.contains("\"schema_version\": 1"));
+        assert!(rendered.contains("\"ratio\": 0.25"));
+    }
+
+    #[test]
+    fn render_escapes_strings() {
+        let j = Json::Str("a\nb\"c\\d".to_string());
+        let r = j.render();
+        assert_eq!(Json::parse(&r).unwrap(), j);
+    }
+
+    #[test]
+    fn non_ascii_strings_round_trip() {
+        let j = Json::parse(r#""café ☕ Größe""#).unwrap();
+        assert_eq!(j.str().unwrap(), "café ☕ Größe");
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_an_error_not_a_panic() {
+        assert!(Json::parse(r#""ab\u12"#).is_err());
+        assert!(Json::parse(r#""ab\u"#).is_err());
     }
 }

@@ -1,12 +1,21 @@
 //! EfQAT — Efficient Quantization-Aware Training (Ashkboos et al., 2024).
 //!
-//! Layer-3 coordinator of the three-layer reproduction:
+//! Layer-3 coordinator of the three-layer reproduction (see
+//! `docs/ARCHITECTURE.md` for the full design):
 //!
-//! * [`runtime`] loads AOT-compiled HLO artifacts (JAX/Pallas, built once by
-//!   `make artifacts`) onto a PJRT client and executes them — python is
-//!   never on the training path.
-//! * [`coordinator`] implements the paper's Algorithm 1: PTQ initialization,
-//!   the EfQAT epoch with channel/layer freezing, and the optimizer step.
+//! * [`backend`] abstracts "execute a compiled step function" behind a
+//!   [`backend::Backend`] trait with two implementations: the pure-rust
+//!   [`backend::native`] CPU reference executor (zero dependencies — the
+//!   default, and what `cargo test` exercises end-to-end) and the
+//!   feature-gated [`backend::pjrt`] runtime for AOT-compiled HLO
+//!   artifacts (JAX/Pallas, built once by `make artifacts`).
+//! * [`bundle`] defines the schema-versioned artifact bundle manifest
+//!   (`manifest.json`, RFC `docs/rfcs/0001-artifact-manifest.md`) with
+//!   per-file SHA-256 checksums, so stale or corrupt artifacts fail
+//!   loudly before training starts.
+//! * [`coordinator`] implements the paper's Algorithm 1: PTQ
+//!   initialization, the EfQAT epoch with channel/layer freezing, and the
+//!   optimizer step.
 //! * [`freeze`] implements the importance metric (Eq. 6) and the three
 //!   freezing policies (CWPL / CWPN / LWPN, Table 2).
 //! * [`quant`] mirrors the quantization math (Eq. 1–4) host-side for PTQ
@@ -14,15 +23,18 @@
 //! * [`data`] generates the synthetic datasets standing in for CIFAR-10 /
 //!   ImageNet / SQuAD (DESIGN.md §3) and a tiny LM corpus.
 //!
-//! Offline-build note: only the crates vendored with the `xla` crate are
-//! available, so [`cli`], [`cfg`], [`json`], [`rng`], [`harness`] and
-//! [`testing`] provide the small subset of clap/serde/rand/criterion/
-//! proptest functionality this project needs.
+//! Offline-build note: the default build has no external dependencies at
+//! all, so [`cli`], [`cfg`], [`json`], [`rng`], [`harness`], [`testing`]
+//! and [`error`] provide the small subset of clap/serde/rand/criterion/
+//! proptest/anyhow functionality this project needs.
 
+pub mod backend;
+pub mod bundle;
 pub mod cfg;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod freeze;
 pub mod harness;
 pub mod json;
@@ -30,6 +42,5 @@ pub mod model;
 pub mod optim;
 pub mod quant;
 pub mod rng;
-pub mod runtime;
 pub mod tensor;
 pub mod testing;

@@ -6,7 +6,12 @@
 //!   train     full pipeline: FP ckpt → PTQ → one EfQAT epoch → eval
 //!             (--mode cwpl|cwpn|lwpn|qat|r0, --ratio %, --train.freq f)
 //!   eval      evaluate a saved checkpoint (fp or quantized)
-//!   info      list artifacts and their manifests
+//!   bundle    write the schema-versioned artifacts/manifest.json inventory
+//!   info      list artifacts, their manifests, and bundle integrity
+//!
+//! Execution backend: `--backend native` (default; pure-rust CPU reference
+//! executor, models: mlp, mlp_wide) or `--backend pjrt` (AOT HLO artifacts
+//! built by `make artifacts`; requires the `pjrt` cargo feature).
 //!
 //! Any config key can be overridden with `--key value`
 //! (e.g. `--data.train_n 4096 --train.lr_w 1e-3 --config configs/cifar.toml`).
@@ -14,8 +19,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use efqat::bundle::Bundle;
 use efqat::cfg::Config;
 use efqat::cli::Args;
 use efqat::coordinator::pipeline::{
@@ -23,6 +27,7 @@ use efqat::coordinator::pipeline::{
 };
 use efqat::coordinator::tasks::build_task;
 use efqat::coordinator::{evaluate, Session};
+use efqat::error::{bail, Context, Result};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -38,7 +43,8 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: efqat <pretrain|ptq|train|eval|info> --model <m> [--bits w8a8] \
+        "usage: efqat <pretrain|ptq|train|eval|bundle|info> --model <m> \
+         [--backend native|pjrt] [--bits w8a8] \
          [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--config file.toml] [--key value ...]"
     );
 }
@@ -55,14 +61,14 @@ fn run(argv: &[String]) -> Result<()> {
     match args.subcommand.as_str() {
         "pretrain" => {
             let model = cfg.req_str("model")?;
-            let session = Session::new(&artifacts_dir(&cfg))?;
+            let session = Session::from_cfg(&cfg)?;
             run_pretrain(&session, &cfg, &model, cfg.usize("train.epochs", 3))?;
             Ok(())
         }
         "ptq" => cmd_ptq(&cfg),
         "train" => {
             let model = cfg.req_str("model")?;
-            let session = Session::new(&artifacts_dir(&cfg))?;
+            let session = Session::from_cfg(&cfg)?;
             let summary = run_efqat_pipeline(
                 &session,
                 &cfg,
@@ -75,6 +81,7 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "eval" => cmd_eval(&cfg),
+        "bundle" => cmd_bundle(&cfg),
         "info" => cmd_info(&cfg),
         other => {
             print_usage();
@@ -89,7 +96,7 @@ fn cmd_ptq(cfg: &Config) -> Result<()> {
 
     let model = cfg.req_str("model")?;
     let bits = cfg.str("bits", "w8a8");
-    let session = Session::new(&artifacts_dir(cfg))?;
+    let session = Session::from_cfg(cfg)?;
     let (params, states) = load_fp_checkpoint(cfg, &model)?;
     let calib = session.steps.get(&format!("{model}_calib"))?;
     let mut task = build_task(&model, calib.manifest.batch_size, cfg)?;
@@ -105,7 +112,7 @@ fn cmd_eval(cfg: &Config) -> Result<()> {
     let model = cfg.req_str("model")?;
     let bits = cfg.str("bits", "fp");
     let ckpt = cfg.req_str("ckpt")?;
-    let session = Session::new(&artifacts_dir(cfg))?;
+    let session = Session::from_cfg(cfg)?;
     let (params, states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
     let fwd = session.steps.get(&fwd_artifact_name_of(&model, &bits))?;
     let mut task = build_task(&model, fwd.manifest.batch_size, cfg)?;
@@ -117,6 +124,34 @@ fn cmd_eval(cfg: &Config) -> Result<()> {
         result.accuracy,
         result.headline(),
         result.n
+    );
+    Ok(())
+}
+
+/// Scan the artifacts directory and (re)write the schema-versioned bundle
+/// manifest (RFC 0001) that the PJRT backend verifies against.
+fn cmd_bundle(cfg: &Config) -> Result<()> {
+    let dir = artifacts_dir(cfg);
+    let mut prov = BTreeMap::new();
+    prov.insert("builder".to_string(), format!("efqat bundle v{}", env!("CARGO_PKG_VERSION")));
+    if let Some(note) = cfg.has("note").then(|| cfg.str("note", "")) {
+        prov.insert("note".to_string(), note);
+    }
+    let bundle = Bundle::scan(&dir, prov)?;
+    if bundle.entries.is_empty() {
+        bail!(
+            "no *.manifest.json artifacts found in {} — run `make artifacts` first",
+            dir.display()
+        );
+    }
+    let path = Bundle::manifest_path(&dir);
+    bundle.save(&path)?;
+    println!(
+        "[bundle] wrote {} ({} entries, schema v{}, hash {})",
+        path.display(),
+        bundle.entries.len(),
+        efqat::bundle::SCHEMA_VERSION,
+        &bundle.bundle_hash()[..12]
     );
     Ok(())
 }
@@ -135,7 +170,7 @@ fn cmd_info(cfg: &Config) -> Result<()> {
         .collect();
     names.sort();
     println!("{} artifacts in {}:", names.len(), dir.display());
-    for n in names {
+    for n in &names {
         let m = efqat::model::Manifest::load(&dir.join(format!("{n}.manifest.json")))?;
         println!(
             "  {n:<40} kind={:<6} bits=w{}a{} batch={} inputs={} outputs={}",
@@ -146,6 +181,21 @@ fn cmd_info(cfg: &Config) -> Result<()> {
             m.inputs.len(),
             m.outputs.len()
         );
+    }
+    let bundle_path = Bundle::manifest_path(&dir);
+    if bundle_path.exists() {
+        let bundle = Bundle::load(&bundle_path)?;
+        match bundle.verify_all(&dir) {
+            Ok(()) => println!(
+                "bundle: OK — {} entries, schema v{}, hash {}",
+                bundle.entries.len(),
+                efqat::bundle::SCHEMA_VERSION,
+                &bundle.bundle_hash()[..12]
+            ),
+            Err(e) => println!("bundle: STALE — {e}"),
+        }
+    } else {
+        println!("bundle: none (run `efqat bundle` to inventory this directory)");
     }
     Ok(())
 }

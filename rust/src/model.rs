@@ -10,8 +10,7 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{anyhow, bail, Context, Result};
 use crate::json::Json;
 use crate::quant::{weight_scales, ActQParams};
 use crate::rng::Pcg64;

@@ -6,6 +6,21 @@
 //! unit-tested to mirror `python/compile/kernels/ref.py` exactly so both
 //! layers agree bit-for-bit.
 
+/// Parse a `wXaY` bits tag (e.g. `w8a8` → `(8, 8)`) — the one grammar
+/// shared by artifact names, the CLI, and the native backend.  Widths
+/// outside 2..=16 are rejected here so malformed tags fail with the
+/// caller's descriptive error instead of overflowing `qrange_*`
+/// downstream (the paper only uses 4/8-bit grids).
+pub fn parse_bits_tag(tag: &str) -> Option<(u32, u32)> {
+    let rest = tag.strip_prefix('w')?;
+    let (w, a) = rest.split_once('a')?;
+    let (w, a): (u32, u32) = (w.parse().ok()?, a.parse().ok()?);
+    if !(2..=16).contains(&w) || !(2..=16).contains(&a) {
+        return None;
+    }
+    Some((w, a))
+}
+
 /// Symmetric signed range for b-bit weights: [-(2^{b-1}-1), 2^{b-1}-1].
 pub fn qrange_sym(bits: u32) -> (i32, i32) {
     let m = (1i32 << (bits - 1)) - 1;
@@ -20,14 +35,19 @@ pub fn qrange_asym(bits: u32) -> (i32, i32) {
 /// Quantization parameters of one activation site (per-tensor, asymmetric).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ActQParams {
+    /// Activation scale `S_x` (Eq. 2).
     pub scale: f32,
+    /// Activation zero point `Z_x` (Eq. 2); stored unrounded, rounded at
+    /// quantization time (Eq. 1).
     pub zero_point: f32,
 }
 
 /// MinMax observer (Eq. 2): S_x = (β-α)/(2^b-1), Z_x = -round(α/S_x).
 #[derive(Clone, Debug)]
 pub struct MinMaxObserver {
+    /// Smallest activation seen (α).
     pub min: f32,
+    /// Largest activation seen (β).
     pub max: f32,
     samples: usize,
 }
@@ -39,12 +59,15 @@ impl Default for MinMaxObserver {
 }
 
 impl MinMaxObserver {
+    /// Fold one pre-reduced (min, max) pair into the range — what the
+    /// calib artifacts' per-batch taps report.
     pub fn observe(&mut self, lo: f32, hi: f32) {
         self.min = self.min.min(lo);
         self.max = self.max.max(hi);
         self.samples += 1;
     }
 
+    /// Fold a raw activation slice into the range.
     pub fn observe_slice(&mut self, xs: &[f32]) {
         for &x in xs {
             self.min = self.min.min(x);
@@ -53,6 +76,9 @@ impl MinMaxObserver {
         self.samples += 1;
     }
 
+    /// Derive the activation scale/zero-point from the observed range
+    /// (Eq. 2), forcing the range to contain zero so that zero maps to
+    /// an exact code.
     pub fn qparams(&self, bits: u32) -> ActQParams {
         assert!(self.samples > 0, "observer saw no data");
         // the range must include 0 so that zero maps to an exact code
@@ -99,6 +125,19 @@ pub fn row_quant_mse(row: &[f32], s: f32, bits: u32) -> f32 {
 mod tests {
     use super::*;
     use crate::testing::forall;
+
+    #[test]
+    fn bits_tag_grammar() {
+        assert_eq!(parse_bits_tag("w8a8"), Some((8, 8)));
+        assert_eq!(parse_bits_tag("w4a8"), Some((4, 8)));
+        assert_eq!(parse_bits_tag("8a8"), None);
+        assert_eq!(parse_bits_tag("w8"), None);
+        assert_eq!(parse_bits_tag("wXa8"), None);
+        // out-of-range widths would overflow qrange_* downstream
+        assert_eq!(parse_bits_tag("w33a8"), None);
+        assert_eq!(parse_bits_tag("w0a8"), None);
+        assert_eq!(parse_bits_tag("w8a1"), None);
+    }
 
     #[test]
     fn ranges() {

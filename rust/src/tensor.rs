@@ -6,7 +6,7 @@
 //! here — row reductions for the importance metric (Eq. 6), Top-K for
 //! channel selection, and elementwise update helpers for the optimizers.
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {

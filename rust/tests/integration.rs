@@ -1,13 +1,14 @@
-//! Integration tests: rust coordinator × real AOT artifacts.
+//! Integration tests: rust coordinator × the native CPU reference backend.
 //!
-//! These exercise the full cross-language ABI — manifest binding, PJRT
+//! These exercise the full execution ABI — manifest binding, step
 //! execution, PTQ calibration, EfQAT steps with channel/layer freezing —
-//! against the resnet8 artifacts.  They require `make artifacts` to have
-//! run; if the artifacts are missing the tests fail with a clear message.
+//! against the native `mlp` model, so `cargo test` needs no Python-built
+//! artifacts and no PJRT runtime.  The same tests run unchanged against
+//! the PJRT backend by swapping the [`Session`] constructor.
 
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::path::Path;
 
+use efqat::backend::{BackendKind, Value};
 use efqat::cfg::Config;
 use efqat::coordinator::binder::{bind_inputs, BindCtx};
 use efqat::coordinator::tasks::build_task;
@@ -15,15 +16,11 @@ use efqat::coordinator::trainer::{pretrain_fp, EfqatTrainer, TrainCfg};
 use efqat::coordinator::{calibrate, evaluate, Session};
 use efqat::freeze::Mode;
 use efqat::model::{ParamStore, StateStore};
+use efqat::quant::{fq_asym, fq_sym};
+use efqat::tensor::Tensor;
 
-fn artifacts_dir() -> PathBuf {
-    let candidates = ["artifacts", "../artifacts"];
-    for c in candidates {
-        if Path::new(c).join("resnet8_fp_train.hlo.txt").exists() {
-            return PathBuf::from(c);
-        }
-    }
-    panic!("artifacts not found — run `make artifacts` first");
+fn session() -> Session {
+    Session::new(Path::new("artifacts")).expect("native session")
 }
 
 fn small_cfg() -> Config {
@@ -34,17 +31,40 @@ fn small_cfg() -> Config {
     cfg
 }
 
-fn session() -> Session {
-    Session::new(&artifacts_dir()).expect("PJRT session")
+#[test]
+fn backend_selection_is_explicit_and_fails_loudly() {
+    // native by name
+    assert!(Session::with_backend(BackendKind::Native, Path::new("artifacts")).is_ok());
+    // unknown backend names are rejected with the available set
+    let err = BackendKind::parse("tpu").unwrap_err().to_string();
+    assert!(err.contains("native"), "{err}");
+    // without the pjrt feature, asking for pjrt is a descriptive error,
+    // not a panic (with the feature it fails on the missing bundle)
+    let mut cfg = small_cfg();
+    cfg.set("backend", "pjrt");
+    cfg.set("artifacts", "/definitely/not/artifacts");
+    let err = match Session::from_cfg(&cfg) {
+        Ok(_) => panic!("pjrt session from a nonexistent dir should fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("pjrt") || err.contains("manifest"), "{err}");
+}
+
+#[test]
+fn unknown_model_yields_descriptive_error() {
+    let s = session();
+    let err = s.steps.get("resnet8_fp_train").unwrap_err().to_string();
+    assert!(err.contains("no native reference implementation"), "{err}");
+    assert!(err.contains("pjrt"), "{err}");
 }
 
 #[test]
 fn fwd_artifact_executes_and_scores() {
     let s = session();
-    let fwd = s.steps.get("resnet8_fp_fwd").unwrap();
+    let fwd = s.steps.get("mlp_fp_fwd").unwrap();
     let params = ParamStore::init(&fwd.manifest, 0);
     let states = StateStore::init(&fwd.manifest);
-    let mut task = build_task("resnet8", fwd.manifest.batch_size, &small_cfg()).unwrap();
+    let mut task = build_task("mlp", fwd.manifest.batch_size, &small_cfg()).unwrap();
     let r = evaluate(&fwd, &params, None, &states, &mut task.test).unwrap();
     assert!(r.loss.is_finite());
     assert_eq!(r.n, 128);
@@ -55,11 +75,11 @@ fn fwd_artifact_executes_and_scores() {
 #[test]
 fn fp_pretraining_reduces_loss() {
     let s = session();
-    let step = s.steps.get("resnet8_fp_train").unwrap();
+    let step = s.steps.get("mlp_fp_train").unwrap();
     let mut params = ParamStore::init(&step.manifest, 0);
     let mut states = StateStore::init(&step.manifest);
-    let mut task = build_task("resnet8", step.manifest.batch_size, &small_cfg()).unwrap();
-    let cfg = TrainCfg { lr_w: 0.05, ..TrainCfg::default() };
+    let mut task = build_task("mlp", step.manifest.batch_size, &small_cfg()).unwrap();
+    let cfg = TrainCfg { lr_w: 0.02, ..TrainCfg::default() };
     let log = pretrain_fp(&step, &mut params, &mut states, &mut task.train, 3, &cfg).unwrap();
     let first = log.records[0].loss;
     let last = log.mean_loss_tail(4);
@@ -69,10 +89,10 @@ fn fp_pretraining_reduces_loss() {
 #[test]
 fn calibration_produces_sane_qparams() {
     let s = session();
-    let calib = s.steps.get("resnet8_calib").unwrap();
+    let calib = s.steps.get("mlp_calib").unwrap();
     let params = ParamStore::init(&calib.manifest, 0);
     let states = StateStore::init(&calib.manifest);
-    let mut task = build_task("resnet8", calib.manifest.batch_size, &small_cfg()).unwrap();
+    let mut task = build_task("mlp", calib.manifest.batch_size, &small_cfg()).unwrap();
     let q = calibrate(&calib, &params, &states, &mut task.calib, 128, 8, 8).unwrap();
     assert_eq!(q.sw.len(), calib.manifest.wsites.len());
     assert_eq!(q.act.len(), calib.manifest.wsites.len());
@@ -80,19 +100,24 @@ fn calibration_produces_sane_qparams() {
         assert!(act.scale > 0.0, "{site}: scale {}", act.scale);
         assert!(act.zero_point >= 0.0 && act.zero_point <= 255.0, "{site}");
     }
-    // the first conv sees raw data (std ~1, range ~±4) → scale ~ 8/255
-    let stem = &q.act["stem.conv"];
+    // the first layer sees raw data (std ~2, range ~±8) → scale well
+    // inside (0.005, 0.2)
+    let stem = &q.act["fc1.w"];
     assert!(stem.scale > 0.005 && stem.scale < 0.2, "stem scale {}", stem.scale);
 }
 
-fn make_trainer(s: &Session, artifact: &str, mode: Option<Mode>) -> (EfqatTrainer, efqat::coordinator::tasks::Task) {
-    let calib = s.steps.get("resnet8_calib").unwrap();
+fn make_trainer(
+    s: &Session,
+    artifact: &str,
+    mode: Option<Mode>,
+) -> (EfqatTrainer, efqat::coordinator::tasks::Task) {
+    let calib = s.steps.get("mlp_calib").unwrap();
     let params = ParamStore::init(&calib.manifest, 0);
     let states = StateStore::init(&calib.manifest);
-    let mut task = build_task("resnet8", calib.manifest.batch_size, &small_cfg()).unwrap();
+    let mut task = build_task("mlp", calib.manifest.batch_size, &small_cfg()).unwrap();
     let q = calibrate(&calib, &params, &states, &mut task.calib, 128, 8, 8).unwrap();
     let step = s.steps.get(artifact).unwrap();
-    let tcfg = TrainCfg { lr_w: 0.05, ..TrainCfg::default() };
+    let tcfg = TrainCfg { lr_w: 0.02, ..TrainCfg::default() };
     let trainer = EfqatTrainer::new(step, params, q, states, mode, tcfg).unwrap();
     (trainer, task)
 }
@@ -100,15 +125,15 @@ fn make_trainer(s: &Session, artifact: &str, mode: Option<Mode>) -> (EfqatTraine
 #[test]
 fn efqat_ratio_step_updates_only_selected_rows() {
     let s = session();
-    let (mut trainer, mut task) = make_trainer(&s, "resnet8_w8a8_train_r25", Some(Mode::Cwpl));
-    let before = trainer.params.get("s1.b0.c1").unwrap().clone();
+    let (mut trainer, mut task) = make_trainer(&s, "mlp_w8a8_train_r25", Some(Mode::Cwpl));
+    let before = trainer.params.get("fc1.w").unwrap().clone();
     let sel = trainer.policy.as_ref().unwrap().selection().clone();
     let si = trainer
         .step
         .manifest
         .wsites
         .iter()
-        .position(|w| w.name == "s1.b0.c1")
+        .position(|w| w.name == "fc1.w")
         .unwrap();
     let selected = sel.channels[si].clone();
     assert!(!selected.is_empty());
@@ -118,9 +143,8 @@ fn efqat_ratio_step_updates_only_selected_rows() {
     let rec = trainer.train_step(&batch).unwrap();
     assert!(rec.loss.is_finite());
 
-    let after = trainer.params.get("s1.b0.c1").unwrap();
-    let rows = before.rows();
-    for r in 0..rows {
+    let after = trainer.params.get("fc1.w").unwrap();
+    for r in 0..before.rows() {
         let changed = before.row(r) != after.row(r);
         assert_eq!(
             changed,
@@ -129,20 +153,18 @@ fn efqat_ratio_step_updates_only_selected_rows() {
             selected.contains(&r)
         );
     }
-    // sw likewise: only selected rows move
-    let sw = &trainer.qparams.sw["s1.b0.c1"];
-    assert_eq!(sw.shape[0], rows);
+    // sw likewise: frozen rows keep their calibration value
+    let sw = &trainer.qparams.sw["fc1.w"];
+    assert_eq!(sw.shape[0], before.rows());
 }
 
 #[test]
 fn efqat_lwpn_step_skips_frozen_layers() {
     let s = session();
-    let (mut trainer, mut task) = make_trainer(&s, "resnet8_w8a8_train_lwpn", Some(Mode::Lwpn));
-    // force ratio-driven flags: policy built with artifact ratio (1.0 for the
-    // lwpn artifact); rebuild with a tighter budget through cfg is indirect,
-    // so instead check consistency: frozen ⇔ unchanged
+    let (mut trainer, mut task) = make_trainer(&s, "mlp_w8a8_train_lwpn", Some(Mode::Lwpn));
     let flags = trainer.policy.as_ref().unwrap().selection().flags.clone();
-    let names: Vec<String> = trainer.step.manifest.wsites.iter().map(|w| w.name.clone()).collect();
+    let names: Vec<String> =
+        trainer.step.manifest.wsites.iter().map(|w| w.name.clone()).collect();
     let before: Vec<_> = names.iter().map(|n| trainer.params.get(n).unwrap().clone()).collect();
 
     task.train.reset();
@@ -159,32 +181,40 @@ fn efqat_lwpn_step_skips_frozen_layers() {
 #[test]
 fn efqat_epoch_improves_over_ptq() {
     let s = session();
-    let (mut trainer, mut task) = make_trainer(&s, "resnet8_w8a8_train_r50", Some(Mode::Cwpn));
-    // quantized eval before
-    let fwd = s.steps.get("resnet8_w8a8_fwd").unwrap();
-    let before = evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test).unwrap();
+    let (mut trainer, mut task) = make_trainer(&s, "mlp_w8a8_train_r50", Some(Mode::Cwpn));
+    let fwd = s.steps.get("mlp_w8a8_fwd").unwrap();
+    let before =
+        evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test)
+            .unwrap();
     let log = trainer.train_epoch(&mut task.train).unwrap();
-    let after = evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test).unwrap();
-    // untrained random net + an 8-batch epoch: require genuine progress but
-    // leave room for SGD noise at this tiny scale
+    let after =
+        evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test)
+            .unwrap();
+    // untrained random net + a 16-batch epoch: require genuine progress
+    // but leave room for SGD noise at this tiny scale
     assert!(
         log.mean_loss_tail(4) < log.records[0].loss * 1.1,
         "no training progress: {} -> {}",
         log.records[0].loss,
         log.mean_loss_tail(4)
     );
-    assert!(after.loss <= before.loss * 1.25, "eval loss regressed: {} -> {}", before.loss, after.loss);
+    assert!(
+        after.loss <= before.loss * 1.25,
+        "eval loss regressed: {} -> {}",
+        before.loss,
+        after.loss
+    );
 }
 
 #[test]
 fn binder_rejects_wrong_selection_size() {
     let s = session();
-    let step = s.steps.get("resnet8_w8a8_train_r25").unwrap();
+    let step = s.steps.get("mlp_w8a8_train_r25").unwrap();
     let params = ParamStore::init(&step.manifest, 0);
     let states = StateStore::init(&step.manifest);
-    let mut task = build_task("resnet8", step.manifest.batch_size, &small_cfg()).unwrap();
+    let mut task = build_task("mlp", step.manifest.batch_size, &small_cfg()).unwrap();
     let batch = task.train.next_batch().unwrap();
-    // selection with wrong channel counts must be rejected at bind time
+    // a selection with wrong channel counts must be rejected at bind time
     let bad = efqat::freeze::Selection {
         channels: vec![vec![0]; step.manifest.wsites.len()],
         flags: vec![true; step.manifest.wsites.len()],
@@ -194,25 +224,145 @@ fn binder_rejects_wrong_selection_size() {
     for w in &step.manifest.wsites {
         q.act.insert(w.name.clone(), efqat::quant::ActQParams { scale: 0.05, zero_point: 0.0 });
     }
-    let ctx = BindCtx { params: &params, qparams: Some(&q), states: &states, batch: &batch, selection: Some(&bad) };
+    let ctx = BindCtx {
+        params: &params,
+        qparams: Some(&q),
+        states: &states,
+        batch: &batch,
+        selection: Some(&bad),
+    };
     let err = bind_inputs(&step.manifest, &ctx);
     assert!(err.is_err());
+}
+
+#[test]
+fn step_rejects_wrong_batch_geometry() {
+    // data generated at the wrong image size must fail at the ABI check
+    // with a descriptive error, not garbage math
+    let s = session();
+    let fwd = s.steps.get("mlp_fp_fwd").unwrap();
+    let params = ParamStore::init(&fwd.manifest, 0);
+    let states = StateStore::init(&fwd.manifest);
+    let mut cfg = small_cfg();
+    cfg.set("data.hw", "16"); // native mlp manifests are built for 8×8
+    let mut task = build_task("mlp", fwd.manifest.batch_size, &cfg).unwrap();
+    let err = evaluate(&fwd, &params, None, &states, &mut task.test)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("manifest declares"), "{err}");
 }
 
 #[test]
 fn qat_and_ratio_artifacts_agree_on_loss() {
     // identical params/batch → identical forward loss regardless of ratio
     let s = session();
-    let (mut t1, mut task) = make_trainer(&s, "resnet8_w8a8_train_r100", None);
-    let (mut t2, _) = make_trainer(&s, "resnet8_w8a8_train_r25", Some(Mode::Cwpl));
+    let (mut t1, mut task) = make_trainer(&s, "mlp_w8a8_train_r100", None);
+    let (mut t2, _) = make_trainer(&s, "mlp_w8a8_train_r25", Some(Mode::Cwpl));
     task.train.reset();
     let batch = task.train.next_batch().unwrap();
     let r1 = t1.train_step(&batch).unwrap();
     let r2 = t2.train_step(&batch).unwrap();
     assert!(
-        (r1.loss - r2.loss).abs() < 1e-4,
+        (r1.loss - r2.loss).abs() < 1e-5,
         "loss mismatch: qat {} vs r25 {}",
         r1.loss,
         r2.loss
     );
+}
+
+#[test]
+fn r0_trains_qparams_but_never_weights() {
+    let s = session();
+    let (mut trainer, mut task) = make_trainer(&s, "mlp_w8a8_train_r0", None);
+    let w_before = trainer.params.get("fc1.w").unwrap().clone();
+    let sw_before = trainer.qparams.sw["fc1.w"].clone();
+    let sx_before = trainer.qparams.act["fc1.w"].scale;
+    task.train.reset();
+    let batch = task.train.next_batch().unwrap();
+    trainer.train_step(&batch).unwrap();
+    assert_eq!(w_before.data, trainer.params.get("fc1.w").unwrap().data);
+    assert_eq!(sw_before.data, trainer.qparams.sw["fc1.w"].data);
+    // activation qparams still move (paper: qparams always train)
+    assert_ne!(sx_before, trainer.qparams.act["fc1.w"].scale);
+}
+
+#[test]
+fn native_fwd_matches_host_quant_math() {
+    // Eq. 1–4 agreement: quantize a weight row + one activation with the
+    // host-side quant.rs formulas, and check that feeding the same
+    // parameters through the native fwd artifact produces logits built
+    // from exactly those dequantized values.  One 1×1-ish configuration
+    // makes the expected value analytic.
+    let s = session();
+    let fwd = s.steps.get("mlp_w8a8_fwd").unwrap();
+    let man = &fwd.manifest;
+    let mut params = ParamStore::init(man, 0);
+    // zero everything, then set a single known path through the net
+    for t in params.map.values_mut() {
+        for v in t.data.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    params.map.get_mut("fc1.w").unwrap().data[0] = 0.37; // row 0 reads x[0]
+    params.map.get_mut("fc2.w").unwrap().data[0] = 0.91; // class 0 reads h[0]
+    let mut q = efqat::model::QParamStore::default();
+    q.init_weight_scales(man, &params, man.w_bits);
+    q.act.insert("fc1.w".into(), efqat::quant::ActQParams { scale: 0.05, zero_point: 128.0 });
+    q.act.insert("fc2.w".into(), efqat::quant::ActQParams { scale: 0.02, zero_point: 0.0 });
+
+    // one batch with a known x[0]
+    let b = man.batch_size;
+    let d_in = 3 * 8 * 8;
+    let mut x = Tensor::zeros(&[b, 3, 8, 8]);
+    x.data[0] = 1.234;
+    let states = StateStore::init(man);
+    let batch = efqat::data::Batch {
+        f32s: [("x".to_string(), x)].into_iter().collect(),
+        i32s: [("y".to_string(), efqat::tensor::ITensor::zeros(&[b]))].into_iter().collect(),
+        count: b,
+    };
+    let ctx = BindCtx {
+        params: &params,
+        qparams: Some(&q),
+        states: &states,
+        batch: &batch,
+        selection: None,
+    };
+    let out = fwd.execute(&bind_inputs(man, &ctx).unwrap()).unwrap();
+    let logits = out.get("logits").unwrap().f32().unwrap();
+
+    // host-side expectation via quant.rs (Eq. 1–4)
+    let sw1 = q.sw["fc1.w"].data[0];
+    let sw2 = q.sw["fc2.w"].data[0];
+    let xh = fq_asym(1.234, 0.05, 128.0, 8);
+    let wh1 = fq_sym(0.37, sw1, 8);
+    let h = (xh * wh1).max(0.0);
+    let hh = fq_asym(h, 0.02, 0.0, 8);
+    let wh2 = fq_sym(0.91, sw2, 8);
+    let want = hh * wh2;
+    assert!(
+        (logits.data[0] - want).abs() < 1e-5,
+        "native {} vs host {}",
+        logits.data[0],
+        want
+    );
+    // rows that read only zero inputs produce exactly zero (zero maps to
+    // an exact code in both quantizers)
+    assert!(logits.data[1].abs() < 1e-6);
+    let _ = d_in;
+}
+
+#[test]
+fn native_outputs_respect_manifest_dtypes() {
+    let s = session();
+    let step = s.steps.get("mlp_fp_train").unwrap();
+    let params = ParamStore::init(&step.manifest, 0);
+    let states = StateStore::init(&step.manifest);
+    let mut task = build_task("mlp", step.manifest.batch_size, &small_cfg()).unwrap();
+    let batch = task.train.next_batch().unwrap();
+    let ctx = BindCtx { params: &params, qparams: None, states: &states, batch: &batch, selection: None };
+    let out = step.execute(&bind_inputs(&step.manifest, &ctx).unwrap()).unwrap();
+    assert!(matches!(out.get("correct").unwrap(), Value::I32(_)));
+    assert!(matches!(out.get("d:fc1.w").unwrap(), Value::F32(_)));
+    assert_eq!(out.get("d:fc1.w").unwrap().shape(), &[32, 192]);
 }
