@@ -2,16 +2,18 @@
 //!
 //!   cargo run --release --example quickstart
 //!
-//! No Python, no artifacts, no GPUs — the native reference executor
-//! (rust/src/backend/native.rs) runs the `mlp` model end-to-end:
+//! No Python, no artifacts, no GPUs — the native layer-graph executor
+//! (rust/src/graph.rs + rust/src/ops/) runs the `mlp` model end-to-end:
 //!
 //! 1. pretrains a small FP checkpoint (paper's "FP")
 //! 2. PTQ-quantizes it with MinMax calibration (paper's "PTQ")
 //! 3. runs one EfQAT-CWPL epoch updating 25% of channels
 //! 4. compares against the QAT upper bound (100% updates)
 //!
-//! To run the conv/transformer models instead, build the PJRT artifacts
-//! (`make artifacts`) and pass `--backend pjrt --model resnet8`.
+//! `--model convnet` (conv→relu→pool→fc) and `--model tiny_tf`
+//! (embed→attention→MLP block) run the CNN / transformer graphs natively
+//! too; the paper-scale resnet/bert/gpt models need the PJRT artifacts
+//! (`make artifacts`, then `--backend pjrt --model resnet8`).
 
 use efqat::cfg::Config;
 use efqat::coordinator::pipeline::{ensure_fp_checkpoint, run_efqat_pipeline};

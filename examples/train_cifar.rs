@@ -29,7 +29,8 @@ fn main() -> Result<()> {
     let ratio = cfg.usize("ratio", 25);
 
     // resnet models need the PJRT artifacts: `make artifacts`, then
-    // `--backend pjrt`
+    // `--backend pjrt`; `--model convnet` runs the same pipeline on the
+    // native conv graph with no artifacts at all
     let session = Session::from_cfg(&cfg)?;
     ensure_fp_checkpoint(&session, &cfg, &model, cfg.usize("train.epochs", 6))?;
     let summary = run_efqat_pipeline(&session, &cfg, &model, &bits, &mode, ratio)?;

@@ -1,22 +1,26 @@
 //! Shared bench scaffolding: config from env/args, session setup.
 
+// each bench target compiles this module separately and uses a subset
+#![allow(dead_code)]
+
 use std::collections::BTreeMap;
 
 use efqat::cfg::Config;
 use efqat::coordinator::Session;
 
-/// Bench config: defaults tuned for single-core repro scale; `--key value`
-/// args and `EFQAT_BENCH_*`-style keys override.
-pub fn bench_config() -> Config {
+/// Bench config with per-bench defaults: `defaults` are applied first,
+/// then `--key value` args override.
+pub fn bench_config_with(defaults: &[(&str, &str)]) -> Config {
     let mut cfg = Config::empty();
     cfg.set("ckpt_dir", "ckpts");
     cfg.set("save_ckpt", "false");
     cfg.set("data.train_n", "1024"); // bench default: half-size epochs
-    // the paper-scale default models (resnet/bert/gpt) only exist as PJRT
-    // artifacts, so benches default to that backend; override with
-    // `--backend native --models mlp` to run dependency-free
-    cfg.set("backend", "pjrt");
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+    for (k, v) in defaults {
+        cfg.set(k, v);
+    }
+    // `cargo bench` injects a bare `--bench` flag; drop it so the
+    // `--key value` pairing below stays aligned
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let mut over = BTreeMap::new();
     for c in argv.chunks(2) {
         if let (Some(k), Some(v)) = (c[0].strip_prefix("--"), c.get(1)) {
@@ -27,12 +31,20 @@ pub fn bench_config() -> Config {
     cfg
 }
 
+/// Bench config: defaults tuned for single-core repro scale; `--key value`
+/// args and `EFQAT_BENCH_*`-style keys override.
+pub fn bench_config() -> Config {
+    // the paper-scale default models (resnet/bert/gpt) only exist as PJRT
+    // artifacts, so most benches default to that backend; override with
+    // `--backend native --models mlp` to run dependency-free
+    bench_config_with(&[("backend", "pjrt")])
+}
+
 pub fn session(cfg: &Config) -> Session {
     Session::from_cfg(cfg)
         .expect("session (pjrt backend needs `make artifacts` and `--features pjrt`)")
 }
 
-/// `cargo bench` passes --bench; strip it so chunk-parsing stays sane.
 pub fn is_quick(cfg: &Config) -> bool {
     !cfg.bool("full", false)
 }

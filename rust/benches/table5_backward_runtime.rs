@@ -3,19 +3,29 @@
 //! For each model × ratio we time the *train-step artifact execution* (the
 //! quantity the paper reports "over the total training steps during the
 //! EfQAT epoch") and isolate the backward part by subtracting the forward
-//! artifact's time on the same batch.  Absolute numbers are CPU-PJRT, not
-//! A100/A10 — the paper's claim is the *shape*: time falls monotonically
-//! with the update ratio, LWPN ≥ CWPN savings, up to ~2x at r→0 (Eq. 7/8).
+//! artifact's time on the same batch.  Absolute numbers are single-node
+//! CPU, not A100/A10 — the paper's claim is the *shape*: time falls
+//! monotonically with the update ratio, LWPN ≥ CWPN savings, up to ~2x at
+//! r→0 (Eq. 7/8).
+//!
+//! Runs on the native backend by default (all four graph models), so the
+//! perf trajectory records dependency-free; the results land in
+//! `bench_out/table5_backward_runtime.csv` and `BENCH_table5.json`
+//! (full vs partial backward wall-time per mode).
 //!
 //!   cargo bench --bench table5_backward_runtime [-- --full true]
+//!   cargo bench --bench table5_backward_runtime -- --backend pjrt --models resnet20
 
 mod common;
+
+use std::collections::BTreeMap;
 
 use efqat::coordinator::binder::{bind_inputs, BindCtx};
 use efqat::coordinator::tasks::build_task;
 use efqat::coordinator::trainer::{EfqatTrainer, TrainCfg};
 use efqat::freeze::Mode;
 use efqat::harness::{bench, Table};
+use efqat::json::Json;
 use efqat::model::{ParamStore, QParamStore, StateStore};
 use efqat::quant::ActQParams;
 
@@ -71,28 +81,36 @@ fn time_artifact(
 }
 
 fn main() {
-    let cfg = common::bench_config();
+    // native by default: the graph models record the perf trajectory with
+    // zero dependencies; `--backend pjrt --models resnet20,…` still works
+    let cfg = common::bench_config_with(&[
+        ("backend", "native"),
+        ("models", "mlp,mlp_wide,convnet,tiny_tf"),
+    ]);
     let session = common::session(&cfg);
     let quick = common::is_quick(&cfg);
-    let iters = cfg.usize("iters", if quick { 3 } else { 15 });
-    let models: Vec<String> = if quick {
-        cfg.list("models", &["resnet20"])
-    } else {
-        cfg.list("models", &["resnet8", "resnet20", "resnet11b", "bert_tiny", "gpt_mini"])
-    };
+    let iters = cfg.usize("iters", if quick { 5 } else { 20 });
+    let models: Vec<String> = cfg.list("models", &["mlp"]);
     let bits = cfg.str("bits", "w4a8");
     let ratios = [0usize, 5, 10, 25, 50];
 
     let mut t = Table::new(
-        &format!("Table 5 / Fig 2b: backward runtime per step (ms), {bits} (CPU PJRT)"),
+        &format!(
+            "Table 5 / Fig 2b: backward runtime per step (ms), {bits} ({} backend)",
+            cfg.str("backend", "native")
+        ),
         &["model", "mode", "fwd", "r0", "r5", "r10", "r25", "r50", "QAT", "bwd speedup r5", "bwd speedup lwpn"],
     );
+    // BENCH_table5.json: per model, full vs partial backward wall-time
+    let mut report = BTreeMap::new();
     for model in &models {
         let fwd = time_artifact(&session, &cfg, model, &format!("{model}_{bits}_fwd"), None, iters);
         let qat = time_artifact(&session, &cfg, model, &format!("{model}_{bits}_train_r100"), None, iters);
         let lwpn = time_artifact(&session, &cfg, model, &format!("{model}_{bits}_train_lwpn"), Some(Mode::Lwpn), iters);
-        let mut row = vec![model.clone(), "CWPN".to_string(), format!("{:.1}", fwd * 1e3)];
+        let bwd = |t: f64| (t - fwd).max(1e-9);
+        let mut row = vec![model.clone(), "CWPN".to_string(), format!("{:.2}", fwd * 1e3)];
         let mut r5_time = qat;
+        let mut modes = BTreeMap::new();
         for r in ratios {
             let name = format!("{model}_{bits}_train_r{r}");
             let mode = if r == 0 { None } else { Some(Mode::Cwpn) };
@@ -100,26 +118,47 @@ fn main() {
             if r == 5 {
                 r5_time = dt;
             }
-            row.push(format!("{:.1}", dt * 1e3));
+            row.push(format!("{:.2}", dt * 1e3));
+            modes.insert(format!("r{r}"), Json::Num(dt * 1e3));
         }
-        row.push(format!("{:.1}", qat * 1e3));
-        let bwd = |t: f64| (t - fwd).max(1e-9);
+        modes.insert("lwpn".to_string(), Json::Num(lwpn * 1e3));
+        row.push(format!("{:.2}", qat * 1e3));
         row.push(format!("{:.2}x", bwd(qat) / bwd(r5_time)));
         row.push(format!("{:.2}x", bwd(qat) / bwd(lwpn)));
         t.row(&row);
-        // LWPN row: same artifact, flags from the policy at ratio 1.0 (all
-        // unfrozen) vs the paper's per-ratio budget is exercised in fig2b
         t.row(&[
             model.clone(),
             "LWPN(r5)".to_string(),
-            format!("{:.1}", fwd * 1e3),
+            format!("{:.2}", fwd * 1e3),
             "-".into(), "-".into(), "-".into(), "-".into(), "-".into(),
-            format!("{:.1}", lwpn * 1e3),
+            format!("{:.2}", lwpn * 1e3),
             "-".into(), "-".into(),
         ]);
+        let entry: BTreeMap<String, Json> = [
+            ("fwd_ms".to_string(), Json::Num(fwd * 1e3)),
+            ("full_train_ms".to_string(), Json::Num(qat * 1e3)),
+            ("partial_train_ms".to_string(), Json::Obj(modes)),
+            ("bwd_speedup_r5".to_string(), Json::Num(bwd(qat) / bwd(r5_time))),
+            ("bwd_speedup_lwpn".to_string(), Json::Num(bwd(qat) / bwd(lwpn))),
+        ]
+        .into_iter()
+        .collect();
+        report.insert(model.clone(), Json::Obj(entry));
     }
     t.print();
     t.write_csv(std::path::Path::new("bench_out/table5_backward_runtime.csv")).unwrap();
-    println!("\npaper shape check: runtime should fall monotonically r50→r0;");
+
+    let doc: BTreeMap<String, Json> = [
+        ("bench".to_string(), Json::Str("table5_backward_runtime".to_string())),
+        ("backend".to_string(), Json::Str(cfg.str("backend", "native"))),
+        ("bits".to_string(), Json::Str(bits.clone())),
+        ("iters".to_string(), Json::Num(iters as f64)),
+        ("models".to_string(), Json::Obj(report)),
+    ]
+    .into_iter()
+    .collect();
+    std::fs::write("BENCH_table5.json", Json::Obj(doc).render()).unwrap();
+    println!("\nwrote BENCH_table5.json (full vs partial backward wall-time per mode)");
+    println!("paper shape check: runtime should fall monotonically r50→r0;");
     println!("QAT/r0 backward ratio approaches the theoretical 2x bound (Eq. 7/8).");
 }

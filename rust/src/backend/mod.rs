@@ -58,9 +58,15 @@ impl Value {
         }
     }
 
-    /// First element of an f32 value (for `[1]`-shaped scalars).
+    /// The single element of a `[1]`-shaped f32 value.  Empty or
+    /// multi-element tensors are a descriptive error, never an index
+    /// panic.
     pub fn scalar(&self) -> Result<f32> {
-        Ok(self.f32()?.data[0])
+        let t = self.f32()?;
+        match t.data.as_slice() {
+            [v] => Ok(*v),
+            _ => bail!("expected a scalar value, got shape {:?} ({} elems)", t.shape, t.data.len()),
+        }
     }
 
     /// Element type of the value.
@@ -340,6 +346,16 @@ mod tests {
         let bad = Value::I32(ITensor::zeros(&[2, 3]));
         let err = step.execute(&[bad]).unwrap_err().to_string();
         assert!(err.contains("dtype"), "{err}");
+    }
+
+    #[test]
+    fn scalar_rejects_empty_and_multi_element_values() {
+        assert_eq!(Value::F32(Tensor::scalar(3.5)).scalar().unwrap(), 3.5);
+        let err = Value::F32(Tensor::zeros(&[0])).scalar().unwrap_err().to_string();
+        assert!(err.contains("scalar"), "{err}");
+        let err = Value::F32(Tensor::zeros(&[2])).scalar().unwrap_err().to_string();
+        assert!(err.contains("scalar"), "{err}");
+        assert!(Value::I32(ITensor::zeros(&[1])).scalar().is_err());
     }
 
     #[test]

@@ -24,10 +24,10 @@ fn defaults(model: &str) -> (usize, usize, usize) {
         "resnet20" => (2048, 512, 10),
         "resnet11b" => (2048, 512, 100),
         "bert_tiny" => (2048, 512, 0),
-        "gpt_mini" => (0, 0, 0), // corpus-based, see below
-        // native-backend MLPs: small enough that a full pipeline is a
+        "gpt_mini" | "tiny_tf" => (0, 0, 0), // corpus-based, see below
+        // native-backend models: small enough that a full pipeline is a
         // sub-second affair in `cargo test`
-        "mlp" | "mlp_wide" => (512, 256, 10),
+        "mlp" | "mlp_wide" | "convnet" => (512, 256, 10),
         _ => (1024, 512, 10),
     }
 }
@@ -41,10 +41,10 @@ pub fn build_task(model: &str, batch_size: usize, cfg: &Config) -> Result<Task> 
     let noise = cfg.f32("data.noise", 2.0); // ~75% FP ceiling: leaves room for the PTQ→QAT ordering
 
     let (train_src, test_src) = match model {
-        "resnet8" | "resnet20" | "resnet11b" | "mlp" | "mlp_wide" => {
-            // the native MLP manifests bake in 8×8 inputs; the conv models
-            // keep the CIFAR-like 32×32 default
-            let default_hw = if model.starts_with("mlp") { 8 } else { 32 };
+        "resnet8" | "resnet20" | "resnet11b" | "mlp" | "mlp_wide" | "convnet" => {
+            // the native manifests bake in 8×8 inputs; the PJRT conv
+            // models keep the CIFAR-like 32×32 default
+            let default_hw = if model.starts_with("mlp") || model == "convnet" { 8 } else { 32 };
             let hw = cfg.usize("data.hw", default_hw);
             // same task (prototypes), disjoint sample streams
             let tr = images::generate_split(train_n, classes, hw, noise, seed, seed);
@@ -58,11 +58,14 @@ pub fn build_task(model: &str, batch_size: usize, cfg: &Config) -> Result<Task> 
             let te = squad::generate(test_n, seq, vocab, seed ^ 0x7e57);
             (Source::Squad(tr), Source::Squad(te))
         }
-        "gpt_mini" => {
-            let seq = cfg.usize("data.seq_len", 128);
-            let vocab = cfg.usize("data.vocab", 512);
-            let train_tokens = cfg.usize("data.train_tokens", 300_000);
-            let test_tokens = cfg.usize("data.test_tokens", 40_000);
+        "gpt_mini" | "tiny_tf" => {
+            // tiny_tf's native manifests bake in seq 16 / vocab 64; the
+            // PJRT gpt_mini keeps the larger LM defaults
+            let tf = model == "tiny_tf";
+            let seq = cfg.usize("data.seq_len", if tf { 16 } else { 128 });
+            let vocab = cfg.usize("data.vocab", if tf { 64 } else { 512 });
+            let train_tokens = cfg.usize("data.train_tokens", if tf { 8_192 } else { 300_000 });
+            let test_tokens = cfg.usize("data.test_tokens", if tf { 2_048 } else { 40_000 });
             // same language, disjoint streams
             let tr = corpus::generate_split(train_tokens, vocab, seed, seed);
             let te = corpus::generate_split(test_tokens, vocab, seed, seed ^ 0x7e57);
@@ -89,11 +92,25 @@ mod tests {
     #[test]
     fn builds_every_model_task() {
         let cfg = Config::empty();
-        for m in ["resnet8", "resnet20", "resnet11b", "bert_tiny", "gpt_mini", "mlp", "mlp_wide"] {
+        for m in [
+            "resnet8", "resnet20", "resnet11b", "bert_tiny", "gpt_mini", "mlp", "mlp_wide",
+            "convnet", "tiny_tf",
+        ] {
             let t = build_task(m, 8, &cfg).unwrap();
             assert!(t.train.n_batches() > 0, "{m}");
             assert!(t.test.n_batches() > 0, "{m}");
         }
+    }
+
+    #[test]
+    fn tiny_tf_defaults_match_the_native_manifests() {
+        let t = build_task("tiny_tf", 8, &Config::empty()).unwrap();
+        let mut train = t.train;
+        let b = train.next_batch().unwrap();
+        assert_eq!(b.i32s["x"].shape, vec![8, 16]);
+        assert_eq!(b.i32s["y"].shape, vec![8, 16]);
+        let max = b.i32s["x"].data.iter().copied().max().unwrap();
+        assert!(max < 64, "vocab overflow: {max}");
     }
 
     #[test]

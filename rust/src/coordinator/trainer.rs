@@ -1,9 +1,15 @@
 //! Trainers: FP baseline pretraining and the EfQAT epoch (Algorithm 1).
 //!
+//! Everything here is manifest-driven and model-agnostic: the same loop
+//! trains the 2-layer MLPs, the convnet, and the tiny_tf transformer on
+//! the native graph executor (or any PJRT artifact) — grads are applied
+//! by role (`weight` rows masked, `bias`/`norm`/`embed` dense, qparams
+//! via Adam), never by model-specific name.
+//!
 //! The EfQAT step is exactly the paper's loop:
-//!   1. forward + backward on the AOT artifact — the backward computes the
-//!      full dX chain but only the unfrozen rows of dW/dS_w
-//!      (ratio artifacts: gathered rows; LWPN artifact: lax.cond-gated)
+//!   1. forward + backward on the compiled step — the backward computes
+//!      the full dX chain but only the unfrozen rows of dW/dS_w
+//!      (ratio artifacts: gathered rows; LWPN artifact: flag-gated)
 //!   2. "Optimizer Step": row-masked SGD(momentum) for the unfrozen weight
 //!      channels, dense SGD for biases/norm params, Adam for quantization
 //!      parameters (S_w rows of unfrozen channels; S_x/Z_x per site)
@@ -76,6 +82,18 @@ pub fn fwd_artifact_name(model: &str, bits: &str) -> String {
     }
 }
 
+/// Label rows per example: 1 for classifiers, the sequence length for
+/// per-token LM graphs (`y: [B, T]`).  The step's `correct` output counts
+/// label rows, so [`crate::coordinator::metrics::StepRecord`] must use
+/// the same units for its denominator or train accuracy leaves `[0, 1]`.
+fn label_rows_per_example(man: &Manifest) -> usize {
+    man.inputs
+        .iter()
+        .find(|i| i.name == "y")
+        .map(|y| (y.elems() / man.batch_size.max(1)).max(1))
+        .unwrap_or(1)
+}
+
 /// FP baseline pretraining (the paper's FP / FP+1 checkpoints): dense SGD
 /// over every parameter with the `<model>_fp_train` artifact.
 pub fn pretrain_fp(
@@ -124,7 +142,7 @@ pub fn pretrain_fp(
                 step: step_no,
                 loss: out.loss()?,
                 correct: out.correct()?,
-                batch: batch.count,
+                batch: batch.count * label_rows_per_example(man),
                 timing,
             });
             step_no += 1;
@@ -341,7 +359,7 @@ impl EfqatTrainer {
             step: self.step_no,
             loss: out.loss()?,
             correct: out.correct()?,
-            batch: batch.count,
+            batch: batch.count * label_rows_per_example(&man),
             timing,
         };
         self.step_no += 1;

@@ -287,6 +287,61 @@ mod tests {
     }
 
     #[test]
+    fn cwpn_global_rank_ties_break_by_site_then_channel_order() {
+        // all importances identical → the stable global sort must keep
+        // (site, channel) push order, so each site's slots fill with its
+        // lowest channel ids — deterministic across runs and platforms
+        let w0 = Tensor::new(vec![4, 2], vec![1.0; 8]).unwrap();
+        let w1 = Tensor::new(vec![6, 2], vec![1.0; 12]).unwrap();
+        let sites = mk_sites(&[(4, 2), (6, 2)], 0.5);
+        let p = FreezePolicy::new(Mode::Cwpn, 0.5, 100, sites, &[&w0, &w1]);
+        assert_eq!(p.selection().channels[0], vec![0, 1]);
+        assert_eq!(p.selection().channels[1], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn lwpn_budget_boundaries_r0_and_r1() {
+        let w0 = Tensor::new(vec![2, 4], vec![5.0; 8]).unwrap();
+        let w1 = Tensor::new(vec![2, 4], vec![0.1; 8]).unwrap();
+        // r = 0: nothing unfreezes (the greedy "always one layer"
+        // guarantee only applies for r > 0)
+        let p = FreezePolicy::new(Mode::Lwpn, 0.0, 100, mk_sites(&[(2, 4), (2, 4)], 0.0), &[&w0, &w1]);
+        assert_eq!(p.selection().flags, vec![false, false]);
+        assert!((p.unfrozen_fraction() - 0.0).abs() < 1e-7);
+        // r = 1: the whole network fits the budget
+        let p = FreezePolicy::new(Mode::Lwpn, 1.0, 100, mk_sites(&[(2, 4), (2, 4)], 1.0), &[&w0, &w1]);
+        assert_eq!(p.selection().flags, vec![true, true]);
+        assert!((p.unfrozen_fraction() - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn stale_importance_competes_across_refresh_boundary() {
+        // paper §3.2: a frozen channel keeps its stale importance and
+        // keeps competing.  Channel 2 freezes at step 0 with importance
+        // 3; after the unfrozen channels decay below 3 over TWO refresh
+        // boundaries, its stale value must win a slot back — and the
+        // refreshed (lower) importances of the previously-unfrozen
+        // channels must persist.
+        let mut w = Tensor::new(vec![4, 1], vec![10.0, 5.0, 3.0, 0.1]).unwrap();
+        let sites = mk_sites(&[(4, 1)], 0.5);
+        let mut p = FreezePolicy::new(Mode::Cwpl, 0.5, 1, sites, &[&w]);
+        assert_eq!(p.selection().channels[0], vec![0, 1]);
+        // first refresh: unfrozen 0/1 decay but stay above the stale 3
+        w.data[0] = 9.0;
+        w.data[1] = 4.0;
+        p.refresh(&[&w]);
+        assert_eq!(p.selection().channels[0], vec![0, 1]);
+        // second refresh: channel 1 decays below the frozen channel 2's
+        // stale importance → 2 re-enters on its stale value
+        w.data[1] = 2.0;
+        p.refresh(&[&w]);
+        assert_eq!(p.selection().channels[0], vec![0, 2]);
+        assert_eq!(p.importance(0)[1], 2.0, "refreshed importance must persist");
+        assert_eq!(p.importance(0)[2], 3.0, "frozen channel keeps its stale importance");
+        assert_eq!(p.updates, 2);
+    }
+
+    #[test]
     fn cwpn_prefers_globally_important_channels() {
         // site 0 channels dwarf site 1's, so site 0's slots fill from the
         // global top while site 1 still gets its guaranteed k slots

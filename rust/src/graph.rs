@@ -1,0 +1,1326 @@
+//! Layer-graph IR: declarative native models executed by the shared op
+//! library.
+//!
+//! A [`LayerGraph`] is a sequential `Vec<Layer>` (with a [`Layer::Residual`]
+//! combinator for transformer blocks) over named parameters.  From one
+//! declaration the graph
+//!
+//! * enumerates parameters ([`LayerGraph::params`]) and freezable weight
+//!   sites ([`LayerGraph::wsites`]) — every `Linear`/`Conv2d` output
+//!   channel (and each attention projection) is an EfQAT site;
+//! * synthesizes the step-function manifest ([`build_manifest`]) for each
+//!   artifact kind, byte-compatible with what `python/compile/aot.py`
+//!   emits for the same model;
+//! * executes forward / backward / calibration generically
+//!   ([`GraphStep`]), dispatching the math to [`crate::ops`].
+//!
+//! The point of the IR is that EfQAT's frozen-channel-aware partial
+//! backward (paper Fig. 1 right) is implemented **once** — the
+//! executor's `weight_site_grads` resolves the per-site selection (full
+//! / gathered rows / layer flag / none) and applies the STE/LSQ
+//! quantizer backward — and every layer type inherits it: a linear's
+//! rows, a conv's output channels (matmul rows after im2col), and each
+//! attention projection all flow through the same code path.
+
+use std::collections::BTreeMap;
+
+use crate::backend::Value;
+use crate::error::{anyhow, bail, Result};
+use crate::freeze::site_k;
+use crate::model::{Dtype, Init, IoSpec, Manifest, ParamInfo, WSite};
+use crate::ops::attention::{sdpa_bwd, sdpa_fwd, AttnDims};
+use crate::ops::conv::{self, ConvDims};
+use crate::ops::elementwise::{embed_bwd, embed_fwd, relu_bwd, relu_fwd};
+use crate::ops::fakequant::{fq_act_bwd_tensor, fq_act_tensor, fq_weight_bwd_rows, fq_weight_rows};
+use crate::ops::loss::softmax_xent;
+use crate::ops::matmul::{col_sum, linear_fwd, matmul_dy_w, matmul_dyt_x, partial_dw};
+use crate::ops::norm::{layernorm_bwd, layernorm_fwd};
+use crate::tensor::{ITensor, Tensor};
+
+// ---------------------------------------------------------------------------
+// Step identity (what kind of artifact a graph is executed as)
+// ---------------------------------------------------------------------------
+
+/// Weight-gradient selection baked into a train artifact's ABI.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TrainSel {
+    /// FP pretraining: no quantization, full `dW`.
+    Fp,
+    /// Ratio artifact: `r=1` full, `r=0` none, otherwise per-site index
+    /// vectors of `site_k(c_out, r)` unfrozen rows.
+    Ratio(f32),
+    /// LWPN artifact: per-site flags gate whole layers at runtime.
+    Lwpn,
+}
+
+/// The three step-function kinds every model compiles to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepKind {
+    Train(TrainSel),
+    Fwd,
+    Calib,
+}
+
+/// One artifact's identity: kind + quantization widths.
+#[derive(Clone, Copy, Debug)]
+pub struct StepId {
+    pub kind: StepKind,
+    pub w_bits: u32,
+    pub a_bits: u32,
+}
+
+// ---------------------------------------------------------------------------
+// The IR
+// ---------------------------------------------------------------------------
+
+/// Quantized linear site: params `{name}.w` (`[c_out, c_in]`, freezable)
+/// and optionally `{name}.b`.
+#[derive(Clone, Debug)]
+pub struct LinearSpec {
+    pub name: String,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub bias: bool,
+}
+
+/// Quantized conv2d site: param `{name}.w` (`[c_out, c_in, k, k]` OIHW,
+/// bias-free like the python layer).  Square inputs/kernels only.
+#[derive(Clone, Debug)]
+pub struct ConvSpec {
+    pub name: String,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+/// LayerNorm over the trailing `d` features: params `{name}.g`, `{name}.b`.
+#[derive(Clone, Debug)]
+pub struct NormSpec {
+    pub name: String,
+    pub d: usize,
+}
+
+/// Token + learned-position embedding: params `{name}.tok` (`[vocab, d]`)
+/// and `{name}.pos` (`[seq, d]`), fp32 and non-freezable (trained during
+/// FP pretraining only, per the paper's transformer setup).
+#[derive(Clone, Debug)]
+pub struct EmbedSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d: usize,
+}
+
+/// Multi-head self-attention block: four quantized-linear projection
+/// sites `{name}.q/k/v/o` (each `[d, d]`) around a scaled-dot-product
+/// core.
+#[derive(Clone, Debug)]
+pub struct AttnSpec {
+    pub name: String,
+    pub d: usize,
+    pub heads: usize,
+    pub causal: bool,
+}
+
+/// One node of the sequential layer graph.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// `[B, ...] → [B, prod]`.
+    Flatten,
+    Linear(LinearSpec),
+    Conv2d(ConvSpec),
+    Relu,
+    /// 2×2 average pool, stride 2 (NCHW).
+    AvgPool2x2,
+    LayerNorm(NormSpec),
+    Embed(EmbedSpec),
+    Attention(AttnSpec),
+    /// `y = x + f(x)` — the transformer residual combinator.  The inner
+    /// sub-graph must preserve the activation shape.
+    Residual(Vec<Layer>),
+}
+
+/// What the model consumes as `x`.
+#[derive(Clone, Copy, Debug)]
+pub enum InputKind {
+    /// f32 images `[B, channels, hw, hw]`; labels `y: [B]`.
+    Image { channels: usize, hw: usize },
+    /// i32 token ids `[B, seq]`; per-token labels `y: [B, seq]` (LM).
+    Tokens { seq: usize },
+}
+
+/// A declarative native model: the whole step-function family (train /
+/// fwd / calib at every precision and ratio) derives from this one value.
+#[derive(Clone, Debug)]
+pub struct LayerGraph {
+    pub model: String,
+    /// Static batch dimension baked into the manifests.
+    pub batch: usize,
+    pub input: InputKind,
+    /// Trailing logits dimension (classifier classes or LM vocab).
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl LayerGraph {
+    /// Parameter inventory in graph order (recursing into residuals).
+    pub fn params(&self) -> Vec<ParamInfo> {
+        let mut out = Vec::new();
+        collect_params(&self.layers, &mut out);
+        out
+    }
+
+    /// Freezable weight sites in graph order.
+    pub fn wsites(&self) -> Vec<WSite> {
+        let mut out = Vec::new();
+        collect_wsites(&self.layers, &mut out);
+        out
+    }
+}
+
+fn lin_params(l: &LinearSpec, out: &mut Vec<ParamInfo>) {
+    out.push(ParamInfo {
+        name: format!("{}.w", l.name),
+        shape: vec![l.c_out, l.c_in],
+        init: Init::HeLin(l.c_in),
+        kind: "weight".into(),
+    });
+    if l.bias {
+        out.push(ParamInfo {
+            name: format!("{}.b", l.name),
+            shape: vec![l.c_out],
+            init: Init::Zeros,
+            kind: "bias".into(),
+        });
+    }
+}
+
+fn attn_projections(a: &AttnSpec) -> Vec<LinearSpec> {
+    ["q", "k", "v", "o"]
+        .iter()
+        .map(|p| LinearSpec {
+            name: format!("{}.{p}", a.name),
+            c_in: a.d,
+            c_out: a.d,
+            bias: true,
+        })
+        .collect()
+}
+
+fn collect_params(layers: &[Layer], out: &mut Vec<ParamInfo>) {
+    for layer in layers {
+        match layer {
+            Layer::Linear(l) => lin_params(l, out),
+            Layer::Conv2d(c) => out.push(ParamInfo {
+                name: format!("{}.w", c.name),
+                shape: vec![c.c_out, c.c_in, c.k, c.k],
+                init: Init::HeConv(c.c_in * c.k * c.k),
+                kind: "weight".into(),
+            }),
+            Layer::LayerNorm(n) => {
+                out.push(ParamInfo {
+                    name: format!("{}.g", n.name),
+                    shape: vec![n.d],
+                    init: Init::Ones,
+                    kind: "norm".into(),
+                });
+                out.push(ParamInfo {
+                    name: format!("{}.b", n.name),
+                    shape: vec![n.d],
+                    init: Init::Zeros,
+                    kind: "norm".into(),
+                });
+            }
+            Layer::Embed(e) => {
+                out.push(ParamInfo {
+                    name: format!("{}.tok", e.name),
+                    shape: vec![e.vocab, e.d],
+                    init: Init::Normal(0.02),
+                    kind: "embed".into(),
+                });
+                out.push(ParamInfo {
+                    name: format!("{}.pos", e.name),
+                    shape: vec![e.seq, e.d],
+                    init: Init::Normal(0.02),
+                    kind: "embed".into(),
+                });
+            }
+            Layer::Attention(a) => {
+                for p in attn_projections(a) {
+                    lin_params(&p, out);
+                }
+            }
+            Layer::Residual(inner) => collect_params(inner, out),
+            Layer::Flatten | Layer::Relu | Layer::AvgPool2x2 => {}
+        }
+    }
+}
+
+fn collect_wsites(layers: &[Layer], out: &mut Vec<WSite>) {
+    for layer in layers {
+        match layer {
+            Layer::Linear(l) => out.push(WSite {
+                name: format!("{}.w", l.name),
+                c_out: l.c_out,
+                size: l.c_out * l.c_in,
+            }),
+            Layer::Conv2d(c) => out.push(WSite {
+                name: format!("{}.w", c.name),
+                c_out: c.c_out,
+                size: c.c_out * c.c_in * c.k * c.k,
+            }),
+            Layer::Attention(a) => {
+                for p in attn_projections(a) {
+                    out.push(WSite { name: format!("{}.w", p.name), c_out: p.c_out, size: p.c_out * p.c_in });
+                }
+            }
+            Layer::Residual(inner) => collect_wsites(inner, out),
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest synthesis (mirrors python/compile/step.py's IOSpec ordering)
+// ---------------------------------------------------------------------------
+
+fn io(name: &str, shape: Vec<usize>, dtype: Dtype, role: &str, of: Option<&str>) -> IoSpec {
+    IoSpec {
+        name: name.to_string(),
+        shape,
+        dtype,
+        role: role.to_string(),
+        of: of.map(str::to_string),
+    }
+}
+
+/// Synthesize the manifest (the cross-language ABI) a compiled artifact
+/// of this graph would carry: ordered params → per-site qparams → data →
+/// selectors on the input side; loss/metrics, weight/bias grads in
+/// parameter order, then per-site qparam grads on the output side.
+pub fn build_manifest(g: &LayerGraph, name: &str, id: &StepId) -> Manifest {
+    let quant = id.w_bits > 0;
+    let params = g.params();
+    let wsites = g.wsites();
+
+    let mut inputs: Vec<IoSpec> =
+        params.iter().map(|p| io(&p.name, p.shape.clone(), Dtype::F32, "param", None)).collect();
+    if quant && id.kind != StepKind::Calib {
+        for s in &wsites {
+            inputs.push(io(&format!("sw:{}", s.name), vec![s.c_out], Dtype::F32, "qparam_sw", Some(&s.name)));
+            inputs.push(io(&format!("sx:{}", s.name), vec![1], Dtype::F32, "qparam_sx", Some(&s.name)));
+            inputs.push(io(&format!("zx:{}", s.name), vec![1], Dtype::F32, "qparam_zx", Some(&s.name)));
+        }
+    }
+    let (x_spec, y_spec, logits_shape) = match g.input {
+        InputKind::Image { channels, hw } => (
+            io("x", vec![g.batch, channels, hw, hw], Dtype::F32, "data", None),
+            io("y", vec![g.batch], Dtype::I32, "data", None),
+            vec![g.batch, g.classes],
+        ),
+        InputKind::Tokens { seq } => (
+            io("x", vec![g.batch, seq], Dtype::I32, "data", None),
+            io("y", vec![g.batch, seq], Dtype::I32, "data", None),
+            vec![g.batch, seq, g.classes],
+        ),
+    };
+    inputs.push(x_spec);
+    if id.kind != StepKind::Calib {
+        inputs.push(y_spec);
+    }
+
+    let mut outputs: Vec<IoSpec> = Vec::new();
+    match id.kind {
+        StepKind::Calib => {
+            for s in &wsites {
+                outputs.push(io(&format!("mm:{}", s.name), vec![2], Dtype::F32, "calib", Some(&s.name)));
+            }
+        }
+        StepKind::Fwd => {
+            outputs.push(io("loss", vec![1], Dtype::F32, "loss", None));
+            outputs.push(io("correct", vec![1], Dtype::I32, "metric", None));
+            outputs.push(io("logits", logits_shape, Dtype::F32, "logits", None));
+        }
+        StepKind::Train(sel) => {
+            if let TrainSel::Ratio(r) = sel {
+                if r > 0.0 && r < 1.0 {
+                    for s in &wsites {
+                        inputs.push(io(
+                            &format!("id:{}", s.name),
+                            vec![site_k(s.c_out, r)],
+                            Dtype::I32,
+                            "index",
+                            Some(&s.name),
+                        ));
+                    }
+                }
+            }
+            if sel == TrainSel::Lwpn {
+                for s in &wsites {
+                    inputs.push(io(&format!("flag:{}", s.name), vec![1], Dtype::I32, "flag", Some(&s.name)));
+                }
+            }
+            outputs.push(io("loss", vec![1], Dtype::F32, "loss", None));
+            outputs.push(io("correct", vec![1], Dtype::I32, "metric", None));
+            // weight/bias grads in parameter order, then qparam grads per
+            // site — exactly python/compile/step.py's manifest order
+            let weight_grads = |p: &ParamInfo| -> Option<Vec<usize>> {
+                match sel {
+                    TrainSel::Fp | TrainSel::Lwpn => Some(p.shape.clone()),
+                    TrainSel::Ratio(r) if r >= 1.0 => Some(p.shape.clone()),
+                    TrainSel::Ratio(r) if r <= 0.0 => None,
+                    TrainSel::Ratio(r) => {
+                        Some(vec![site_k(p.shape[0], r), p.shape[1..].iter().product()])
+                    }
+                }
+            };
+            for p in &params {
+                let shape = match p.kind.as_str() {
+                    "weight" => match weight_grads(p) {
+                        Some(s) => s,
+                        None => continue,
+                    },
+                    // embeddings train during FP pretraining only
+                    "embed" if sel != TrainSel::Fp => continue,
+                    _ => p.shape.clone(),
+                };
+                outputs.push(io(&format!("d:{}", p.name), shape, Dtype::F32, "grad", Some(&p.name)));
+            }
+            if sel != TrainSel::Fp {
+                for s in &wsites {
+                    let sw_rows = match sel {
+                        TrainSel::Ratio(r) if r <= 0.0 => None,
+                        TrainSel::Ratio(r) if r < 1.0 => Some(site_k(s.c_out, r)),
+                        _ => Some(s.c_out),
+                    };
+                    if let Some(k) = sw_rows {
+                        outputs.push(io(
+                            &format!("d:sw:{}", s.name),
+                            vec![k],
+                            Dtype::F32,
+                            "grad",
+                            Some(&format!("sw:{}", s.name)),
+                        ));
+                    }
+                    outputs.push(io(
+                        &format!("d:sx:{}", s.name),
+                        vec![1],
+                        Dtype::F32,
+                        "grad",
+                        Some(&format!("sx:{}", s.name)),
+                    ));
+                    outputs.push(io(
+                        &format!("d:zx:{}", s.name),
+                        vec![1],
+                        Dtype::F32,
+                        "grad",
+                        Some(&format!("zx:{}", s.name)),
+                    ));
+                }
+            }
+        }
+    }
+
+    let (sel_mode, ratio) = match id.kind {
+        StepKind::Train(TrainSel::Fp) => ("fp", 1.0),
+        StepKind::Train(TrainSel::Ratio(r)) => ("ratio", r),
+        StepKind::Train(TrainSel::Lwpn) => ("lwpn", 1.0),
+        _ => ("", 1.0),
+    };
+    Manifest {
+        name: name.to_string(),
+        model: g.model.clone(),
+        kind: match id.kind {
+            StepKind::Train(_) => "train",
+            StepKind::Fwd => "fwd",
+            StepKind::Calib => "calib",
+        }
+        .to_string(),
+        sel_mode: sel_mode.to_string(),
+        ratio,
+        w_bits: id.w_bits,
+        a_bits: id.a_bits,
+        batch_size: g.batch,
+        params,
+        states: Vec::new(),
+        wsites,
+        inputs,
+        outputs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+/// Named input lookup over the positional input vector.
+pub struct Vals<'a> {
+    map: BTreeMap<&'a str, &'a Value>,
+}
+
+impl<'a> Vals<'a> {
+    /// Zip manifest input specs with positional values.
+    pub fn new(man: &'a Manifest, inputs: &'a [Value]) -> Vals<'a> {
+        Vals { map: man.inputs.iter().map(|s| s.name.as_str()).zip(inputs).collect() }
+    }
+
+    fn f32(&self, name: &str) -> Result<&'a Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("graph step: missing input {name:?}"))?
+            .f32()
+    }
+
+    fn i32(&self, name: &str) -> Result<&'a ITensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("graph step: missing input {name:?}"))?
+            .i32()
+    }
+
+    fn scalar(&self, name: &str) -> Result<f32> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("graph step: missing input {name:?}"))?
+            .scalar()
+            .map_err(|e| anyhow!("input {name:?}: {e}"))
+    }
+}
+
+/// One executable step: a graph coupled with an artifact identity and
+/// the manifest synthesized for it.
+pub struct GraphStep {
+    pub graph: LayerGraph,
+    pub id: StepId,
+    pub man: Manifest,
+}
+
+/// Per-site quantization parameters pulled from the inputs.
+struct SiteQ {
+    sw: Vec<f32>,
+    sx: f32,
+    zx: f32,
+}
+
+/// Runtime weight-gradient selection for one site, resolved from the
+/// step kind + selector inputs.
+#[derive(Clone, Debug)]
+enum RunSel {
+    All,
+    None,
+    Idx(Vec<usize>),
+    Flag(bool),
+}
+
+/// Residual cache of one quantized-linear site (shared by `Linear` and
+/// the four attention projections).
+struct LinCache {
+    x_shape: Vec<usize>,
+    /// Raw pre-quant input — populated only when the quantizer backward
+    /// will need it (quantized train steps; see `Run::keep_raw`).
+    x_raw: Vec<f32>,
+    xh: Vec<f32>,
+    wh: Vec<f32>,
+    q: Option<SiteQ>,
+    rows: usize,
+}
+
+struct ConvCache {
+    /// Raw pre-quant input — populated only on quantized train steps.
+    x_raw: Vec<f32>,
+    /// im2col of the (quantized) input: `[M, C_in·k·k]`.
+    cols: Vec<f32>,
+    wh: Vec<f32>,
+    q: Option<SiteQ>,
+    dims: ConvDims,
+}
+
+struct AttnCache {
+    q_lin: LinCache,
+    k_lin: LinCache,
+    v_lin: LinCache,
+    o_lin: LinCache,
+    qy: Vec<f32>,
+    ky: Vec<f32>,
+    vy: Vec<f32>,
+    p: Vec<f32>,
+    dm: AttnDims,
+}
+
+/// What each layer's forward leaves behind for the backward pass.
+enum Cache {
+    Flatten { shape: Vec<usize> },
+    Linear(LinCache),
+    Conv(ConvCache),
+    Relu { pre: Vec<f32> },
+    Pool { shape: Vec<usize> },
+    Norm { xhat: Vec<f32>, inv: Vec<f32> },
+    Embed { ids: Vec<i32> },
+    Attn(Box<AttnCache>),
+    Residual(Vec<Cache>),
+}
+
+/// Activation flowing between layers.
+enum Act {
+    F(Tensor),
+    I(ITensor),
+}
+
+fn act_f32(act: Act) -> Result<Tensor> {
+    match act {
+        Act::F(t) => Ok(t),
+        Act::I(_) => bail!("graph: layer expected an f32 activation, got i32"),
+    }
+}
+
+impl GraphStep {
+    /// Couple a graph with an artifact identity, synthesizing the manifest.
+    pub fn new(graph: LayerGraph, artifact: &str, id: StepId) -> GraphStep {
+        let man = build_manifest(&graph, artifact, &id);
+        GraphStep { graph, id, man }
+    }
+
+    /// Execute on inputs packed in manifest order; outputs come back in
+    /// manifest order (the [`crate::backend::StepExec`] contract).
+    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        let vals = Vals::new(&self.man, inputs);
+        let mut run = Run { step: self, vals: &vals, taps: None };
+        let mut named = match self.id.kind {
+            StepKind::Train(_) => run.run_train()?,
+            StepKind::Fwd => run.run_fwd()?,
+            StepKind::Calib => run.run_calib()?,
+        };
+        self.man
+            .outputs
+            .iter()
+            .map(|spec| {
+                named.remove(&spec.name).ok_or_else(|| {
+                    anyhow!("{}: graph step produced no output {:?}", self.man.name, spec.name)
+                })
+            })
+            .collect()
+    }
+}
+
+/// One execution of a [`GraphStep`] over bound inputs.
+struct Run<'a> {
+    step: &'a GraphStep,
+    vals: &'a Vals<'a>,
+    /// `Some` during calibration: per-site `(min, max)` of the raw input
+    /// each quantized site saw (the MinMax observer taps, Eq. 2).
+    taps: Option<BTreeMap<String, (f32, f32)>>,
+}
+
+impl<'a> Run<'a> {
+    fn quantized(&self) -> bool {
+        self.step.id.w_bits > 0 && self.step.id.kind != StepKind::Calib
+    }
+
+    // ---- shared quantized-site plumbing -----------------------------------
+
+    fn siteq(&self, site: &str) -> Result<Option<SiteQ>> {
+        if !self.quantized() {
+            return Ok(None);
+        }
+        let sw = self.vals.f32(&format!("sw:{site}"))?.data.clone();
+        if sw.iter().any(|&s| s <= 0.0 || !s.is_finite()) {
+            bail!("{}: non-positive weight scale for site {site:?}", self.step.man.name);
+        }
+        let sx = self.vals.scalar(&format!("sx:{site}"))?;
+        if sx <= 0.0 || !sx.is_finite() {
+            bail!("{}: non-positive activation scale for site {site:?}", self.step.man.name);
+        }
+        let zx = self.vals.scalar(&format!("zx:{site}"))?;
+        Ok(Some(SiteQ { sw, sx, zx }))
+    }
+
+    /// Whether a site cache must keep the raw (pre-quant) input: only
+    /// the quantizer backward reads it, so fwd/calib steps — and FP
+    /// backward paths — skip the clone.
+    fn keep_raw(&self, q: &Option<SiteQ>) -> bool {
+        q.is_some() && matches!(self.step.id.kind, StepKind::Train(_))
+    }
+
+    /// Record the (min, max) a quantized site's raw input — the MinMax
+    /// observer tap of the calib artifacts.
+    fn tap(&mut self, site: &str, x: &[f32]) {
+        if let Some(taps) = &mut self.taps {
+            let lo = x.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            taps.insert(site.to_string(), (lo, hi));
+        }
+    }
+
+    /// Resolve the runtime weight-gradient selection for one site from
+    /// the step kind and the bound selector inputs.
+    fn run_sel(&self, site: &str, c_out: usize) -> Result<RunSel> {
+        match self.step.id.kind {
+            StepKind::Train(TrainSel::Fp) => Ok(RunSel::All),
+            StepKind::Train(TrainSel::Lwpn) => {
+                Ok(RunSel::Flag(self.vals.i32(&format!("flag:{site}"))?.data[0] > 0))
+            }
+            StepKind::Train(TrainSel::Ratio(r)) if r >= 1.0 => Ok(RunSel::All),
+            StepKind::Train(TrainSel::Ratio(r)) if r <= 0.0 => Ok(RunSel::None),
+            StepKind::Train(TrainSel::Ratio(_)) => {
+                let ids = self.vals.i32(&format!("id:{site}"))?;
+                let mut out = Vec::with_capacity(ids.data.len());
+                for &c in &ids.data {
+                    if c < 0 || c as usize >= c_out {
+                        bail!(
+                            "{}: selection index {c} out of range for site {site:?} (c_out {c_out})",
+                            self.step.man.name
+                        );
+                    }
+                    out.push(c as usize);
+                }
+                Ok(RunSel::Idx(out))
+            }
+            _ => Ok(RunSel::All),
+        }
+    }
+
+    /// The frozen-channel-aware weight-gradient rule (paper Fig. 1
+    /// right), implemented once for every layer type.  `full_dwhat` /
+    /// `partial_dwhat` supply the layer's own contraction (plain matmul
+    /// for linear sites, im2col matmul for conv); this function owns the
+    /// selection logic and the STE/LSQ quantizer backward:
+    ///
+    /// * `All` / `Flag(true)` — full `dŴ`, full quantizer backward;
+    /// * `Flag(false)` — the LWPN saving: the `dŴ` contraction is
+    ///   *skipped at runtime*; the ABI still carries full-shape zeros;
+    /// * `Idx` — only the gathered unfrozen rows are ever materialized
+    ///   (CWPL/CWPN): `dW[idx] = gather(dY, idx)ᵀ · X̂`;
+    /// * `None` — the r=0 case: no weight gradient at all.
+    fn weight_site_grads(
+        &self,
+        sel: &RunSel,
+        w: &Tensor,
+        q: Option<&SiteQ>,
+        row_size: usize,
+        full_dwhat: &mut dyn FnMut() -> Vec<f32>,
+        partial_dwhat: &mut dyn FnMut(&[usize]) -> Vec<f32>,
+    ) -> (Option<Tensor>, Option<Vec<f32>>) {
+        let c_out = w.shape[0];
+        let bits = self.step.id.w_bits;
+        match q {
+            Some(q) => match sel {
+                RunSel::All | RunSel::Flag(true) => {
+                    let dwhat = full_dwhat();
+                    let (dw, ds) = fq_weight_bwd_rows(&w.data, &q.sw, &dwhat, row_size, bits);
+                    (Some(Tensor { shape: w.shape.clone(), data: dw }), Some(ds))
+                }
+                RunSel::Flag(false) => {
+                    (Some(Tensor::zeros(&w.shape)), Some(vec![0.0; c_out]))
+                }
+                RunSel::Idx(ids) => {
+                    let dwhat = partial_dwhat(ids);
+                    let w_rows = w.gather_rows(ids);
+                    let s_rows: Vec<f32> = ids.iter().map(|&r| q.sw[r]).collect();
+                    let (dw, ds) = fq_weight_bwd_rows(&w_rows.data, &s_rows, &dwhat, row_size, bits);
+                    (Some(Tensor { shape: vec![ids.len(), row_size], data: dw }), Some(ds))
+                }
+                RunSel::None => (None, None),
+            },
+            None => {
+                let dw = match sel {
+                    RunSel::None => None,
+                    RunSel::Flag(false) => Some(Tensor::zeros(&w.shape)),
+                    RunSel::Idx(ids) => {
+                        Some(Tensor { shape: vec![ids.len(), row_size], data: partial_dwhat(ids) })
+                    }
+                    _ => Some(Tensor { shape: w.shape.clone(), data: full_dwhat() }),
+                };
+                (dw, None)
+            }
+        }
+    }
+
+    fn emit_site_grads(
+        &self,
+        site: &str,
+        dw: Option<Tensor>,
+        dsw: Option<Vec<f32>>,
+        grads: &mut BTreeMap<String, Value>,
+    ) {
+        if let Some(dw) = dw {
+            grads.insert(format!("d:{site}"), Value::F32(dw));
+        }
+        if let Some(ds) = dsw {
+            let n = ds.len();
+            grads.insert(format!("d:sw:{site}"), Value::F32(Tensor { shape: vec![n], data: ds }));
+        }
+    }
+
+    /// Backward through one site's activation quantizer (STE/LSQ+),
+    /// emitting the `d:sx:`/`d:zx:` grads; FP sites pass `dxh` through.
+    /// Shared by linear and conv sites, like `weight_site_grads`.
+    fn act_bwd(
+        &self,
+        site: &str,
+        q: Option<&SiteQ>,
+        x_raw: &[f32],
+        dxh: Vec<f32>,
+        grads: &mut BTreeMap<String, Value>,
+    ) -> Vec<f32> {
+        match q {
+            Some(q) => {
+                let (dx, dsx, dzx) =
+                    fq_act_bwd_tensor(x_raw, q.sx, q.zx, &dxh, self.step.id.a_bits);
+                grads.insert(format!("d:sx:{site}"), Value::F32(Tensor::scalar(dsx)));
+                grads.insert(format!("d:zx:{site}"), Value::F32(Tensor::scalar(dzx)));
+                dx
+            }
+            None => dxh,
+        }
+    }
+
+    // ---- quantized linear site (Linear + attention projections) -----------
+
+    fn lin_fwd(&mut self, spec: &LinearSpec, x: &Tensor) -> Result<(Tensor, LinCache)> {
+        if x.shape.last() != Some(&spec.c_in) {
+            bail!(
+                "{}: linear {:?} wants {} input features, activation is {:?}",
+                self.step.man.name,
+                spec.name,
+                spec.c_in,
+                x.shape
+            );
+        }
+        let rows = x.data.len() / spec.c_in;
+        let site = format!("{}.w", spec.name);
+        let w = self.vals.f32(&site)?;
+        self.tap(&site, &x.data);
+        let q = self.siteq(&site)?;
+        let (xh, wh) = match &q {
+            Some(q) => (
+                fq_act_tensor(&x.data, q.sx, q.zx, self.step.id.a_bits),
+                fq_weight_rows(&w.data, &q.sw, spec.c_in, self.step.id.w_bits),
+            ),
+            None => (x.data.clone(), w.data.clone()),
+        };
+        let bias = if spec.bias {
+            Some(&self.vals.f32(&format!("{}.b", spec.name))?.data[..])
+        } else {
+            None
+        };
+        let y = linear_fwd(&xh, &wh, bias, rows, spec.c_in, spec.c_out);
+        let mut y_shape = x.shape.clone();
+        *y_shape.last_mut().unwrap() = spec.c_out;
+        let x_raw = if self.keep_raw(&q) { x.data.clone() } else { Vec::new() };
+        let cache = LinCache { x_shape: x.shape.clone(), x_raw, xh, wh, q, rows };
+        Ok((Tensor { shape: y_shape, data: y }, cache))
+    }
+
+    fn lin_bwd(
+        &mut self,
+        spec: &LinearSpec,
+        cache: &LinCache,
+        dy: &Tensor,
+        grads: &mut BTreeMap<String, Value>,
+    ) -> Result<Tensor> {
+        let (rows, c_in, c_out) = (cache.rows, spec.c_in, spec.c_out);
+        let site = format!("{}.w", spec.name);
+        if spec.bias {
+            let db = col_sum(&dy.data, rows, c_out);
+            grads.insert(
+                format!("d:{}.b", spec.name),
+                Value::F32(Tensor { shape: vec![c_out], data: db }),
+            );
+        }
+        let dxh = matmul_dy_w(&dy.data, &cache.wh, rows, c_out, c_in);
+        let sel = self.run_sel(&site, c_out)?;
+        let w = self.vals.f32(&site)?;
+        let mut full = || matmul_dyt_x(&dy.data, &cache.xh, rows, c_out, c_in);
+        let mut partial = |ids: &[usize]| partial_dw(&dy.data, &cache.xh, ids, rows, c_out, c_in);
+        let (dw, dsw) = self.weight_site_grads(&sel, w, cache.q.as_ref(), c_in, &mut full, &mut partial);
+        self.emit_site_grads(&site, dw, dsw, grads);
+        let dx = self.act_bwd(&site, cache.q.as_ref(), &cache.x_raw, dxh, grads);
+        Ok(Tensor { shape: cache.x_shape.clone(), data: dx })
+    }
+
+    // ---- forward ----------------------------------------------------------
+
+    fn input_act(&self) -> Result<Act> {
+        match self.step.graph.input {
+            InputKind::Image { .. } => Ok(Act::F(self.vals.f32("x")?.clone())),
+            InputKind::Tokens { .. } => Ok(Act::I(self.vals.i32("x")?.clone())),
+        }
+    }
+
+    fn forward(&mut self) -> Result<(Tensor, Vec<Cache>)> {
+        let step = self.step;
+        let x0 = self.input_act()?;
+        let mut caches = Vec::new();
+        let out = self.forward_seq(&step.graph.layers, x0, &mut caches)?;
+        Ok((act_f32(out)?, caches))
+    }
+
+    fn forward_seq(&mut self, layers: &[Layer], mut act: Act, caches: &mut Vec<Cache>) -> Result<Act> {
+        for layer in layers {
+            act = self.forward_layer(layer, act, caches)?;
+        }
+        Ok(act)
+    }
+
+    fn forward_layer(&mut self, layer: &Layer, act: Act, caches: &mut Vec<Cache>) -> Result<Act> {
+        Ok(match layer {
+            Layer::Flatten => {
+                let x = act_f32(act)?;
+                let b = x.shape.first().copied().unwrap_or(1);
+                let rest: usize = x.shape[1..].iter().product();
+                caches.push(Cache::Flatten { shape: x.shape });
+                Act::F(Tensor { shape: vec![b, rest], data: x.data })
+            }
+            Layer::Linear(spec) => {
+                let x = act_f32(act)?;
+                let (y, cache) = self.lin_fwd(spec, &x)?;
+                caches.push(Cache::Linear(cache));
+                Act::F(y)
+            }
+            Layer::Conv2d(spec) => {
+                let x = act_f32(act)?;
+                if x.shape.len() != 4 || x.shape[1] != spec.c_in || x.shape[2] != x.shape[3] {
+                    bail!(
+                        "{}: conv {:?} wants [B, {}, H, H], activation is {:?}",
+                        self.step.man.name,
+                        spec.name,
+                        spec.c_in,
+                        x.shape
+                    );
+                }
+                let dims = ConvDims {
+                    batch: x.shape[0],
+                    c_in: spec.c_in,
+                    hw: x.shape[2],
+                    c_out: spec.c_out,
+                    k: spec.k,
+                    stride: spec.stride,
+                    pad: spec.pad,
+                };
+                let site = format!("{}.w", spec.name);
+                let w = self.vals.f32(&site)?;
+                self.tap(&site, &x.data);
+                let q = self.siteq(&site)?;
+                let (xh, wh) = match &q {
+                    Some(sq) => (
+                        fq_act_tensor(&x.data, sq.sx, sq.zx, self.step.id.a_bits),
+                        fq_weight_rows(&w.data, &sq.sw, dims.patch(), self.step.id.w_bits),
+                    ),
+                    None => (x.data.clone(), w.data.clone()),
+                };
+                let cols = conv::im2col(&xh, &dims);
+                let y2 = linear_fwd(&cols, &wh, None, dims.rows(), dims.patch(), dims.c_out);
+                let y = conv::rows_to_nchw(&y2, &dims);
+                let ho = dims.hw_out();
+                let x_raw = if self.keep_raw(&q) { x.data } else { Vec::new() };
+                caches.push(Cache::Conv(ConvCache { x_raw, cols, wh, q, dims }));
+                Act::F(Tensor { shape: vec![dims.batch, dims.c_out, ho, ho], data: y })
+            }
+            Layer::Relu => {
+                let x = act_f32(act)?;
+                let y = relu_fwd(&x.data);
+                caches.push(Cache::Relu { pre: x.data });
+                Act::F(Tensor { shape: x.shape, data: y })
+            }
+            Layer::AvgPool2x2 => {
+                let x = act_f32(act)?;
+                if x.shape.len() != 4 || x.shape[2] % 2 != 0 || x.shape[2] != x.shape[3] {
+                    bail!("{}: avgpool wants [B, C, 2n, 2n], got {:?}", self.step.man.name, x.shape);
+                }
+                let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2]);
+                let y = conv::avgpool2_fwd(&x.data, b, c, hw);
+                caches.push(Cache::Pool { shape: x.shape });
+                Act::F(Tensor { shape: vec![b, c, hw / 2, hw / 2], data: y })
+            }
+            Layer::LayerNorm(spec) => {
+                let x = act_f32(act)?;
+                if x.shape.last() != Some(&spec.d) {
+                    bail!("{}: layernorm {:?} wants {} features, got {:?}", self.step.man.name, spec.name, spec.d, x.shape);
+                }
+                let rows = x.data.len() / spec.d;
+                let g = self.vals.f32(&format!("{}.g", spec.name))?;
+                let b = self.vals.f32(&format!("{}.b", spec.name))?;
+                let (y, xhat, inv) = layernorm_fwd(&x.data, &g.data, &b.data, rows, spec.d);
+                caches.push(Cache::Norm { xhat, inv });
+                Act::F(Tensor { shape: x.shape, data: y })
+            }
+            Layer::Embed(spec) => {
+                let ids = match act {
+                    Act::I(t) => t,
+                    Act::F(_) => bail!("graph: embedding expects i32 token ids"),
+                };
+                for &id in &ids.data {
+                    if id < 0 || id as usize >= spec.vocab {
+                        bail!(
+                            "{}: token id {id} out of range [0, {})",
+                            self.step.man.name,
+                            spec.vocab
+                        );
+                    }
+                }
+                let tok = self.vals.f32(&format!("{}.tok", spec.name))?;
+                let pos = self.vals.f32(&format!("{}.pos", spec.name))?;
+                let y = embed_fwd(&tok.data, &pos.data, &ids.data, spec.seq, spec.d);
+                let b = ids.data.len() / spec.seq;
+                caches.push(Cache::Embed { ids: ids.data });
+                Act::F(Tensor { shape: vec![b, spec.seq, spec.d], data: y })
+            }
+            Layer::Attention(spec) => {
+                let x = act_f32(act)?;
+                if x.shape.len() != 3 || x.shape[2] != spec.d {
+                    bail!("{}: attention {:?} wants [B, T, {}], got {:?}", self.step.man.name, spec.name, spec.d, x.shape);
+                }
+                let projs = attn_projections(spec);
+                let (qy, q_lin) = self.lin_fwd(&projs[0], &x)?;
+                let (ky, k_lin) = self.lin_fwd(&projs[1], &x)?;
+                let (vy, v_lin) = self.lin_fwd(&projs[2], &x)?;
+                let dm = AttnDims { batch: x.shape[0], t: x.shape[1], d: spec.d, heads: spec.heads };
+                let (om, p) = sdpa_fwd(&qy.data, &ky.data, &vy.data, &dm, spec.causal);
+                let om_t = Tensor { shape: x.shape.clone(), data: om };
+                let (out, o_lin) = self.lin_fwd(&projs[3], &om_t)?;
+                caches.push(Cache::Attn(Box::new(AttnCache {
+                    q_lin,
+                    k_lin,
+                    v_lin,
+                    o_lin,
+                    qy: qy.data,
+                    ky: ky.data,
+                    vy: vy.data,
+                    p,
+                    dm,
+                })));
+                Act::F(out)
+            }
+            Layer::Residual(inner) => {
+                let x = act_f32(act)?;
+                let mut sub = Vec::new();
+                let y = act_f32(self.forward_seq(inner, Act::F(x.clone()), &mut sub)?)?;
+                if y.shape != x.shape {
+                    bail!(
+                        "{}: residual sub-graph changed shape {:?} -> {:?}",
+                        self.step.man.name,
+                        x.shape,
+                        y.shape
+                    );
+                }
+                let data = x.data.iter().zip(&y.data).map(|(a, b)| a + b).collect();
+                caches.push(Cache::Residual(sub));
+                Act::F(Tensor { shape: x.shape, data })
+            }
+        })
+    }
+
+    // ---- backward ---------------------------------------------------------
+
+    fn backward_seq(
+        &mut self,
+        layers: &[Layer],
+        caches: &[Cache],
+        dy: Tensor,
+        grads: &mut BTreeMap<String, Value>,
+    ) -> Result<Tensor> {
+        debug_assert_eq!(layers.len(), caches.len());
+        let mut dy = dy;
+        for (layer, cache) in layers.iter().zip(caches).rev() {
+            dy = self.backward_layer(layer, cache, dy, grads)?;
+        }
+        Ok(dy)
+    }
+
+    fn backward_layer(
+        &mut self,
+        layer: &Layer,
+        cache: &Cache,
+        dy: Tensor,
+        grads: &mut BTreeMap<String, Value>,
+    ) -> Result<Tensor> {
+        match (layer, cache) {
+            (Layer::Flatten, Cache::Flatten { shape }) => {
+                Ok(Tensor { shape: shape.clone(), data: dy.data })
+            }
+            (Layer::Linear(spec), Cache::Linear(c)) => self.lin_bwd(spec, c, &dy, grads),
+            (Layer::Conv2d(spec), Cache::Conv(c)) => {
+                let d = &c.dims;
+                let site = format!("{}.w", spec.name);
+                let dy2 = conv::nchw_to_rows(&dy.data, d);
+                let dcols = matmul_dy_w(&dy2, &c.wh, d.rows(), d.c_out, d.patch());
+                let dxh = conv::col2im(&dcols, d);
+                let sel = self.run_sel(&site, d.c_out)?;
+                let w = self.vals.f32(&site)?;
+                let mut full = || matmul_dyt_x(&dy2, &c.cols, d.rows(), d.c_out, d.patch());
+                let mut partial =
+                    |ids: &[usize]| partial_dw(&dy2, &c.cols, ids, d.rows(), d.c_out, d.patch());
+                let (dw, dsw) =
+                    self.weight_site_grads(&sel, w, c.q.as_ref(), d.patch(), &mut full, &mut partial);
+                self.emit_site_grads(&site, dw, dsw, grads);
+                let dx = self.act_bwd(&site, c.q.as_ref(), &c.x_raw, dxh, grads);
+                Ok(Tensor { shape: vec![d.batch, d.c_in, d.hw, d.hw], data: dx })
+            }
+            (Layer::Relu, Cache::Relu { pre }) => {
+                Ok(Tensor { shape: dy.shape, data: relu_bwd(&dy.data, pre) })
+            }
+            (Layer::AvgPool2x2, Cache::Pool { shape }) => {
+                let (b, c, hw) = (shape[0], shape[1], shape[2]);
+                Ok(Tensor { shape: shape.clone(), data: conv::avgpool2_bwd(&dy.data, b, c, hw) })
+            }
+            (Layer::LayerNorm(spec), Cache::Norm { xhat, inv }) => {
+                let rows = dy.data.len() / spec.d;
+                let g = self.vals.f32(&format!("{}.g", spec.name))?;
+                let (dx, dgamma, dbeta) = layernorm_bwd(&dy.data, xhat, inv, &g.data, rows, spec.d);
+                grads.insert(
+                    format!("d:{}.g", spec.name),
+                    Value::F32(Tensor { shape: vec![spec.d], data: dgamma }),
+                );
+                grads.insert(
+                    format!("d:{}.b", spec.name),
+                    Value::F32(Tensor { shape: vec![spec.d], data: dbeta }),
+                );
+                Ok(Tensor { shape: dy.shape, data: dx })
+            }
+            (Layer::Embed(spec), Cache::Embed { ids }) => {
+                // embeddings train during FP pretraining only (the
+                // manifest declares no embed grads otherwise) — skip the
+                // scatter-add entirely on quantized steps
+                if self.step.id.kind == StepKind::Train(TrainSel::Fp) {
+                    let (dtok, dpos) = embed_bwd(&dy.data, ids, spec.vocab, spec.seq, spec.d);
+                    grads.insert(
+                        format!("d:{}.tok", spec.name),
+                        Value::F32(Tensor { shape: vec![spec.vocab, spec.d], data: dtok }),
+                    );
+                    grads.insert(
+                        format!("d:{}.pos", spec.name),
+                        Value::F32(Tensor { shape: vec![spec.seq, spec.d], data: dpos }),
+                    );
+                }
+                // the input is token ids — there is no dx
+                Ok(Tensor { shape: vec![0], data: Vec::new() })
+            }
+            (Layer::Attention(spec), Cache::Attn(c)) => {
+                let projs = attn_projections(spec);
+                let dom = self.lin_bwd(&projs[3], &c.o_lin, &dy, grads)?;
+                let (dq, dk, dv) = sdpa_bwd(&dom.data, &c.qy, &c.ky, &c.vy, &c.p, &c.dm);
+                let shape = dom.shape;
+                let dxq =
+                    self.lin_bwd(&projs[0], &c.q_lin, &Tensor { shape: shape.clone(), data: dq }, grads)?;
+                let dxk =
+                    self.lin_bwd(&projs[1], &c.k_lin, &Tensor { shape: shape.clone(), data: dk }, grads)?;
+                let dxv =
+                    self.lin_bwd(&projs[2], &c.v_lin, &Tensor { shape, data: dv }, grads)?;
+                let data = dxq
+                    .data
+                    .iter()
+                    .zip(&dxk.data)
+                    .zip(&dxv.data)
+                    .map(|((a, b), c)| a + b + c)
+                    .collect();
+                Ok(Tensor { shape: dxq.shape, data })
+            }
+            (Layer::Residual(inner), Cache::Residual(sub)) => {
+                let dinner = self.backward_seq(inner, sub, dy.clone(), grads)?;
+                if dinner.data.len() != dy.data.len() {
+                    bail!("{}: residual backward shape mismatch", self.step.man.name);
+                }
+                let data = dy.data.iter().zip(&dinner.data).map(|(a, b)| a + b).collect();
+                Ok(Tensor { shape: dy.shape, data })
+            }
+            _ => bail!("{}: layer/cache mismatch in backward", self.step.man.name),
+        }
+    }
+
+    // ---- step kinds -------------------------------------------------------
+
+    fn loss_and_correct(&self, logits: &Tensor) -> Result<(f32, i32, Vec<f32>)> {
+        let classes = self.step.graph.classes;
+        let rows = logits.data.len() / classes;
+        let labels = &self.vals.i32("y")?.data;
+        let (loss, correct_rows, dlogits) = softmax_xent(&logits.data, labels, rows, classes)
+            .map_err(|e| anyhow!("{}: {e}", self.step.man.name))?;
+        // `correct` is the raw correct-row count — examples for
+        // classifiers, *tokens* for LM graphs — matching what the AOT
+        // artifacts emit (python ce_loss_fwd reports token counts)
+        Ok((loss, correct_rows as i32, dlogits))
+    }
+
+    fn run_train(&mut self) -> Result<BTreeMap<String, Value>> {
+        let step = self.step;
+        let (logits, caches) = self.forward()?;
+        let (loss, correct, dlogits) = self.loss_and_correct(&logits)?;
+        let mut out = BTreeMap::new();
+        let dl = Tensor { shape: logits.shape.clone(), data: dlogits };
+        self.backward_seq(&step.graph.layers, &caches, dl, &mut out)?;
+        out.insert("loss".into(), Value::F32(Tensor::scalar(loss)));
+        out.insert("correct".into(), Value::I32(ITensor { shape: vec![1], data: vec![correct] }));
+        Ok(out)
+    }
+
+    fn run_fwd(&mut self) -> Result<BTreeMap<String, Value>> {
+        let (logits, _caches) = self.forward()?;
+        let (loss, correct, _) = self.loss_and_correct(&logits)?;
+        let mut out = BTreeMap::new();
+        out.insert("loss".to_string(), Value::F32(Tensor::scalar(loss)));
+        out.insert("correct".to_string(), Value::I32(ITensor { shape: vec![1], data: vec![correct] }));
+        out.insert("logits".to_string(), Value::F32(logits));
+        Ok(out)
+    }
+
+    fn run_calib(&mut self) -> Result<BTreeMap<String, Value>> {
+        self.taps = Some(BTreeMap::new());
+        self.forward()?;
+        let taps = self.taps.take().unwrap_or_default();
+        let mut out = BTreeMap::new();
+        for site in &self.step.man.wsites {
+            let (lo, hi) = taps.get(&site.name).copied().ok_or_else(|| {
+                anyhow!("{}: calib tapped no data for site {:?}", self.step.man.name, site.name)
+            })?;
+            out.insert(
+                format!("mm:{}", site.name),
+                Value::F32(Tensor { shape: vec![2], data: vec![lo, hi] }),
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The mlp family as a graph — must match the manifests the seed
+    /// native backend synthesized by hand.
+    fn mlp_graph() -> LayerGraph {
+        LayerGraph {
+            model: "mlp".into(),
+            batch: 16,
+            input: InputKind::Image { channels: 3, hw: 8 },
+            classes: 10,
+            layers: vec![
+                Layer::Flatten,
+                Layer::Linear(LinearSpec { name: "fc1".into(), c_in: 192, c_out: 32, bias: true }),
+                Layer::Relu,
+                Layer::Linear(LinearSpec { name: "fc2".into(), c_in: 32, c_out: 10, bias: true }),
+            ],
+        }
+    }
+
+    fn tf_graph() -> LayerGraph {
+        LayerGraph {
+            model: "tiny_tf".into(),
+            batch: 8,
+            input: InputKind::Tokens { seq: 16 },
+            classes: 64,
+            layers: vec![
+                Layer::Embed(EmbedSpec { name: "emb".into(), vocab: 64, seq: 16, d: 16 }),
+                Layer::Residual(vec![
+                    Layer::LayerNorm(NormSpec { name: "ln1".into(), d: 16 }),
+                    Layer::Attention(AttnSpec { name: "attn".into(), d: 16, heads: 2, causal: true }),
+                ]),
+                Layer::Residual(vec![
+                    Layer::LayerNorm(NormSpec { name: "ln2".into(), d: 16 }),
+                    Layer::Linear(LinearSpec { name: "ffn1".into(), c_in: 16, c_out: 32, bias: true }),
+                    Layer::Relu,
+                    Layer::Linear(LinearSpec { name: "ffn2".into(), c_in: 32, c_out: 16, bias: true }),
+                ]),
+                Layer::LayerNorm(NormSpec { name: "lnf".into(), d: 16 }),
+                Layer::Linear(LinearSpec { name: "head".into(), c_in: 16, c_out: 64, bias: true }),
+            ],
+        }
+    }
+
+    fn id(kind: StepKind, w: u32, a: u32) -> StepId {
+        StepId { kind, w_bits: w, a_bits: a }
+    }
+
+    #[test]
+    fn train_manifest_matches_step_contract() {
+        let g = mlp_graph();
+        let m = build_manifest(&g, "mlp_w8a8_train_r25", &id(StepKind::Train(TrainSel::Ratio(0.25)), 8, 8));
+        assert_eq!(m.sel_mode, "ratio");
+        assert_eq!(m.ratio, 0.25);
+        assert_eq!(m.wsites.len(), 2);
+        // index slots sized by site_k
+        let idx: Vec<&IoSpec> = m.inputs.iter().filter(|i| i.role == "index").collect();
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx[0].shape, vec![site_k(32, 0.25)]);
+        assert_eq!(idx[1].shape, vec![site_k(10, 0.25)]);
+        // gathered grad rows match the slots
+        let dw: Vec<&IoSpec> = m
+            .outputs
+            .iter()
+            .filter(|o| o.name.starts_with("d:fc") && o.name.ends_with(".w"))
+            .collect();
+        assert_eq!(dw[0].shape, vec![site_k(32, 0.25), 192]);
+        assert_eq!(dw[1].shape, vec![site_k(10, 0.25), 32]);
+    }
+
+    #[test]
+    fn r0_manifest_has_no_weight_grads_but_keeps_act_qparam_grads() {
+        let m = build_manifest(&mlp_graph(), "mlp_w8a8_train_r0", &id(StepKind::Train(TrainSel::Ratio(0.0)), 8, 8));
+        assert!(!m.outputs.iter().any(|o| o.name == "d:fc1.w"));
+        assert!(!m.outputs.iter().any(|o| o.name == "d:sw:fc1.w"));
+        assert!(m.outputs.iter().any(|o| o.name == "d:sx:fc1.w"));
+        assert!(m.outputs.iter().any(|o| o.name == "d:fc1.b"));
+    }
+
+    #[test]
+    fn fp_manifest_has_no_qparams() {
+        let m = build_manifest(&mlp_graph(), "mlp_fp_train", &id(StepKind::Train(TrainSel::Fp), 0, 0));
+        assert_eq!(m.sel_mode, "fp");
+        assert!(!m.inputs.iter().any(|i| i.role.starts_with("qparam")));
+        assert!(m.outputs.iter().any(|o| o.name == "d:fc1.w"));
+        assert!(!m.outputs.iter().any(|o| o.name.starts_with("d:sw")));
+    }
+
+    #[test]
+    fn calib_manifest_taps_every_site() {
+        let m = build_manifest(&mlp_graph(), "mlp_calib", &id(StepKind::Calib, 0, 0));
+        assert_eq!(m.kind, "calib");
+        assert_eq!(m.outputs.len(), 2);
+        assert!(m.outputs.iter().all(|o| o.role == "calib"));
+        // calib binds x only (no labels)
+        assert!(!m.inputs.iter().any(|i| i.name == "y"));
+    }
+
+    #[test]
+    fn transformer_graph_enumerates_all_sites_and_params() {
+        let g = tf_graph();
+        let sites = g.wsites();
+        let names: Vec<&str> = sites.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["attn.q.w", "attn.k.w", "attn.v.w", "attn.o.w", "ffn1.w", "ffn2.w", "head.w"]
+        );
+        let params = g.params();
+        // 2 embeds + 3 LN pairs + 7 linears × (w, b)
+        assert_eq!(params.len(), 2 + 6 + 14);
+        assert!(params.iter().any(|p| p.name == "emb.pos" && p.kind == "embed"));
+        // embeds get grads in FP training only
+        let fp = build_manifest(&g, "tiny_tf_fp_train", &id(StepKind::Train(TrainSel::Fp), 0, 0));
+        assert!(fp.outputs.iter().any(|o| o.name == "d:emb.tok"));
+        let q = build_manifest(&g, "tiny_tf_w8a8_train_r100", &id(StepKind::Train(TrainSel::Ratio(1.0)), 8, 8));
+        assert!(!q.outputs.iter().any(|o| o.name == "d:emb.tok"));
+        // norm params always train
+        assert!(q.outputs.iter().any(|o| o.name == "d:ln1.g"));
+        // LM data is token-shaped
+        let x = q.inputs.iter().find(|i| i.name == "x").unwrap();
+        assert_eq!((x.shape.clone(), x.dtype), (vec![8, 16], Dtype::I32));
+        let logits_shape = build_manifest(&g, "tiny_tf_fp_fwd", &id(StepKind::Fwd, 0, 0))
+            .outputs
+            .iter()
+            .find(|o| o.name == "logits")
+            .unwrap()
+            .shape
+            .clone();
+        assert_eq!(logits_shape, vec![8, 16, 64]);
+    }
+
+    #[test]
+    fn lwpn_manifest_carries_flags_and_full_grad_shapes() {
+        let g = tf_graph();
+        let m = build_manifest(&g, "tiny_tf_w8a8_train_lwpn", &id(StepKind::Train(TrainSel::Lwpn), 8, 8));
+        assert_eq!(m.inputs.iter().filter(|i| i.role == "flag").count(), 7);
+        let dw = m.outputs.iter().find(|o| o.name == "d:attn.q.w").unwrap();
+        assert_eq!(dw.shape, vec![16, 16]);
+    }
+}

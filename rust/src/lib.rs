@@ -9,6 +9,15 @@
 //!   default, and what `cargo test` exercises end-to-end) and the
 //!   feature-gated [`backend::pjrt`] runtime for AOT-compiled HLO
 //!   artifacts (JAX/Pallas, built once by `make artifacts`).
+//! * [`graph`] is the layer-graph IR behind the native backend: each
+//!   native model is one declarative `Vec<Layer>` from which manifests
+//!   are synthesized and forward/backward/calibration run generically —
+//!   the frozen-channel-aware partial backward (paper Fig. 1 right) is
+//!   implemented once there and inherited by every layer type.
+//! * [`ops`] is the shared kernel library the graph executes through:
+//!   cache-blocked threaded matmul, im2col conv2d, layernorm, attention,
+//!   softmax cross-entropy and the Eq. 1–4 fake-quant ops with STE/LSQ
+//!   gradients, each mirroring `python/compile/kernels/ref.py`.
 //! * [`bundle`] defines the schema-versioned artifact bundle manifest
 //!   (`manifest.json`, RFC `docs/rfcs/0001-artifact-manifest.md`) with
 //!   per-file SHA-256 checksums, so stale or corrupt artifacts fail
@@ -36,9 +45,11 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod freeze;
+pub mod graph;
 pub mod harness;
 pub mod json;
 pub mod model;
+pub mod ops;
 pub mod optim;
 pub mod quant;
 pub mod rng;

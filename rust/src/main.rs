@@ -9,9 +9,10 @@
 //!   bundle    write the schema-versioned artifacts/manifest.json inventory
 //!   info      list artifacts, their manifests, and bundle integrity
 //!
-//! Execution backend: `--backend native` (default; pure-rust CPU reference
-//! executor, models: mlp, mlp_wide) or `--backend pjrt` (AOT HLO artifacts
-//! built by `make artifacts`; requires the `pjrt` cargo feature).
+//! Execution backend: `--backend native` (default; pure-rust layer-graph
+//! executor, models: mlp, mlp_wide, convnet, tiny_tf) or `--backend pjrt`
+//! (AOT HLO artifacts built by `make artifacts`; requires the `pjrt`
+//! cargo feature).
 //!
 //! Any config key can be overridden with `--key value`
 //! (e.g. `--data.train_n 4096 --train.lr_w 1e-3 --config configs/cifar.toml`).

@@ -1,9 +1,11 @@
 //! Artifact manifests, parameter/state stores, and checkpoint I/O.
 //!
-//! The manifest JSON emitted by `python/compile/aot.py` is the ABI between
-//! the layers: ordered input/output tensor specs plus the model's parameter
-//! inventory (shapes, initializer recipes, kinds).  The coordinator builds
-//! a [`ParamStore`] from it (so rust owns initialization — python never
+//! The manifest is the ABI between the layers: ordered input/output
+//! tensor specs plus the model's parameter inventory (shapes, initializer
+//! recipes, kinds).  `python/compile/aot.py` emits it as JSON for the
+//! PJRT artifacts; [`crate::graph::build_manifest`] synthesizes the same
+//! structure for the native layer graphs.  The coordinator builds a
+//! [`ParamStore`] from it (so rust owns initialization — python never
 //! ships weights) and binds literals by manifest order at execution time.
 
 use std::collections::BTreeMap;

@@ -1,0 +1,216 @@
+//! Scaled-dot-product attention over head-merged `[B, T, D]` layouts —
+//! mirrors `python/compile/models/transformer_common.py::mha_fwd/bwd`
+//! without materializing the `[B, H, T, d_h]` transposes: head `h` of
+//! token `t` lives at `data[(n·T + t)·D + h·d_h ..]`, so the einsums
+//! become strided dot products over that slice.
+//!
+//! The Q/K/V/O *projections* are not part of these ops — they are
+//! ordinary quantized-linear sites owned by the graph executor (that is
+//! what makes their output channels freezable like any other layer).
+
+/// Geometry of one attention op.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnDims {
+    pub batch: usize,
+    /// Sequence length.
+    pub t: usize,
+    /// Model width; must be divisible by `heads`.
+    pub d: usize,
+    pub heads: usize,
+}
+
+impl AttnDims {
+    pub fn d_head(&self) -> usize {
+        self.d / self.heads
+    }
+
+    fn scale(&self) -> f32 {
+        1.0 / (self.d_head() as f32).sqrt()
+    }
+}
+
+/// Forward: `out = softmax(Q·Kᵀ/√d_h [causal-masked]) · V`.
+///
+/// `q`/`k`/`v`/returned `out` are `[B, T, D]` head-merged; the returned
+/// probability tensor `p` is `[B, H, T, T]` (the backward cache).  Causal
+/// masking zeroes the probabilities above the diagonal, so the backward
+/// needs no explicit mask.
+pub fn sdpa_fwd(q: &[f32], k: &[f32], v: &[f32], dm: &AttnDims, causal: bool) -> (Vec<f32>, Vec<f32>) {
+    let (b, t, d, h) = (dm.batch, dm.t, dm.d, dm.heads);
+    let dh = dm.d_head();
+    let alpha = dm.scale();
+    debug_assert_eq!(q.len(), b * t * d);
+    let mut out = vec![0.0f32; b * t * d];
+    let mut p = vec![0.0f32; b * h * t * t];
+    let at = |n: usize, i: usize, hd: usize| (n * t + i) * d + hd * dh;
+    let mut scores = vec![0.0f32; t];
+    for n in 0..b {
+        for hd in 0..h {
+            for i in 0..t {
+                let jmax = if causal { i + 1 } else { t };
+                let qr = &q[at(n, i, hd)..at(n, i, hd) + dh];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, sc) in scores.iter_mut().enumerate().take(jmax) {
+                    let kr = &k[at(n, j, hd)..at(n, j, hd) + dh];
+                    let mut acc = 0.0f32;
+                    for c in 0..dh {
+                        acc += qr[c] * kr[c];
+                    }
+                    *sc = acc * alpha;
+                    mx = mx.max(*sc);
+                }
+                let mut sum = 0.0f32;
+                for sc in scores.iter_mut().take(jmax) {
+                    *sc = (*sc - mx).exp();
+                    sum += *sc;
+                }
+                let prow = &mut p[((n * h + hd) * t + i) * t..((n * h + hd) * t + i + 1) * t];
+                for j in 0..jmax {
+                    prow[j] = scores[j] / sum;
+                }
+                let orow = &mut out[at(n, i, hd)..at(n, i, hd) + dh];
+                for (j, &pj) in prow.iter().enumerate().take(jmax) {
+                    if pj == 0.0 {
+                        continue;
+                    }
+                    let vr = &v[at(n, j, hd)..at(n, j, hd) + dh];
+                    for c in 0..dh {
+                        orow[c] += pj * vr[c];
+                    }
+                }
+            }
+        }
+    }
+    (out, p)
+}
+
+/// Backward of [`sdpa_fwd`].  Returns `(dq, dk, dv)` in the same
+/// head-merged `[B, T, D]` layout.  `p` is the cached probability tensor;
+/// masked positions carry `p = 0` and therefore contribute no gradient.
+pub fn sdpa_bwd(
+    dout: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    p: &[f32],
+    dm: &AttnDims,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (b, t, d, h) = (dm.batch, dm.t, dm.d, dm.heads);
+    let dh = dm.d_head();
+    let alpha = dm.scale();
+    let mut dq = vec![0.0f32; b * t * d];
+    let mut dk = vec![0.0f32; b * t * d];
+    let mut dv = vec![0.0f32; b * t * d];
+    let at = |n: usize, i: usize, hd: usize| (n * t + i) * d + hd * dh;
+    let mut dp = vec![0.0f32; t];
+    for n in 0..b {
+        for hd in 0..h {
+            for i in 0..t {
+                let dor = &dout[at(n, i, hd)..at(n, i, hd) + dh];
+                let prow = &p[((n * h + hd) * t + i) * t..((n * h + hd) * t + i + 1) * t];
+                // dp[j] = ⟨dout_i, v_j⟩ ; dv_j += p_ij · dout_i
+                for j in 0..t {
+                    if prow[j] == 0.0 {
+                        dp[j] = 0.0;
+                        continue;
+                    }
+                    let vr = &v[at(n, j, hd)..at(n, j, hd) + dh];
+                    let dvr = &mut dv[at(n, j, hd)..at(n, j, hd) + dh];
+                    let mut acc = 0.0f32;
+                    for c in 0..dh {
+                        acc += dor[c] * vr[c];
+                        dvr[c] += prow[j] * dor[c];
+                    }
+                    dp[j] = acc;
+                }
+                // softmax backward: ds = p ⊙ (dp - ⟨dp, p⟩), then ·α
+                let dot: f32 = dp.iter().zip(prow).map(|(a, b)| a * b).sum();
+                let qr = &q[at(n, i, hd)..at(n, i, hd) + dh];
+                let dqr_base = at(n, i, hd);
+                for j in 0..t {
+                    let ds = prow[j] * (dp[j] - dot) * alpha;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let kr = &k[at(n, j, hd)..at(n, j, hd) + dh];
+                    let dkr = &mut dk[at(n, j, hd)..at(n, j, hd) + dh];
+                    for c in 0..dh {
+                        dq[dqr_base + c] += ds * kr[c];
+                        dkr[c] += ds * qr[c];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn probabilities_are_rowwise_softmax() {
+        let dm = AttnDims { batch: 2, t: 4, d: 6, heads: 2 };
+        let mut rng = Pcg64::new(1);
+        let q = rng.normal_vec(2 * 4 * 6, 1.0);
+        let k = rng.normal_vec(2 * 4 * 6, 1.0);
+        let v = rng.normal_vec(2 * 4 * 6, 1.0);
+        for causal in [false, true] {
+            let (_, p) = sdpa_fwd(&q, &k, &v, &dm, causal);
+            for (ri, row) in p.chunks(4).enumerate() {
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "row {ri} sums to {sum}");
+                if causal {
+                    let i = ri % 4;
+                    for (j, &pj) in row.iter().enumerate() {
+                        assert!(j <= i || pj == 0.0, "causal leak at ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let dm = AttnDims { batch: 1, t: 3, d: 4, heads: 2 };
+        let n = dm.batch * dm.t * dm.d;
+        let mut rng = Pcg64::new(5);
+        let q = rng.normal_vec(n, 0.8);
+        let k = rng.normal_vec(n, 0.8);
+        let v = rng.normal_vec(n, 0.8);
+        let dout = rng.normal_vec(n, 1.0);
+        for causal in [false, true] {
+            let loss = |qv: &[f32], kv: &[f32], vv: &[f32]| -> f32 {
+                let (o, _) = sdpa_fwd(qv, kv, vv, &dm, causal);
+                o.iter().zip(&dout).map(|(a, b)| a * b).sum()
+            };
+            let (_, p) = sdpa_fwd(&q, &k, &v, &dm, causal);
+            let grads = sdpa_bwd(&dout, &q, &k, &v, &p, &dm);
+            let analytic = [&grads.0, &grads.1, &grads.2];
+            let eps = 1e-3;
+            for i in 0..n {
+                for (which, name) in ["dq", "dk", "dv"].iter().enumerate() {
+                    let perturbed = |delta: f32| -> f32 {
+                        let mut qv = q.clone();
+                        let mut kv = k.clone();
+                        let mut vv = v.clone();
+                        match which {
+                            0 => qv[i] += delta,
+                            1 => kv[i] += delta,
+                            _ => vv[i] += delta,
+                        }
+                        loss(&qv, &kv, &vv)
+                    };
+                    let num = (perturbed(eps) - perturbed(-eps)) / (2.0 * eps);
+                    let got = analytic[which][i];
+                    assert!(
+                        (got - num).abs() < 5e-3,
+                        "{name}[{i}]: {got} vs {num} (causal {causal})"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Conv2d via im2col/col2im, plus 2×2 average pooling.
+//!
+//! Lowering the convolution to a patch matrix means the forward and both
+//! gradients are the *same* GEMM kernels the linear layers use
+//! ([`crate::ops::matmul`]) — including the paper's partial `dW`: a
+//! conv's output channels are matmul rows after im2col, so gathering
+//! unfrozen channels (`partial_dw`) works untouched.  This mirrors
+//! `python/compile/layers.py::qconv_*`, which reach the same contraction
+//! through `lax.conv_general_dilated`.
+//!
+//! Layouts match the python side: activations NCHW, weights OIHW
+//! (`[C_out, C_in, k, k]`, row-major — a weight row is one output
+//! channel's `C_in·k·k` patch, exactly the freezable-site convention).
+
+/// Static geometry of one conv2d site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvDims {
+    pub batch: usize,
+    pub c_in: usize,
+    /// Input height == width (square feature maps only — all repro
+    /// models use square inputs).
+    pub hw: usize,
+    pub c_out: usize,
+    /// Kernel side length.
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvDims {
+    /// Output spatial side length.
+    pub fn hw_out(&self) -> usize {
+        (self.hw + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Patch size = `C_in·k·k` — the contraction dim / weight row size.
+    pub fn patch(&self) -> usize {
+        self.c_in * self.k * self.k
+    }
+
+    /// im2col row count `M = B·H_out·W_out`.
+    pub fn rows(&self) -> usize {
+        self.batch * self.hw_out() * self.hw_out()
+    }
+}
+
+/// Unfold `x` `[B, C_in, H, H]` into the patch matrix `[M, C_in·k·k]`.
+pub fn im2col(x: &[f32], d: &ConvDims) -> Vec<f32> {
+    let (ho, p, hw) = (d.hw_out(), d.patch(), d.hw);
+    debug_assert_eq!(x.len(), d.batch * d.c_in * hw * hw);
+    let mut cols = vec![0.0f32; d.rows() * p];
+    let mut r = 0;
+    for n in 0..d.batch {
+        for oy in 0..ho {
+            for ox in 0..ho {
+                let col = &mut cols[r * p..(r + 1) * p];
+                let mut c = 0;
+                for ci in 0..d.c_in {
+                    let plane = &x[(n * d.c_in + ci) * hw * hw..(n * d.c_in + ci + 1) * hw * hw];
+                    for ky in 0..d.k {
+                        let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                        for kx in 0..d.k {
+                            let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                            if iy >= 0 && (iy as usize) < hw && ix >= 0 && (ix as usize) < hw {
+                                col[c] = plane[iy as usize * hw + ix as usize];
+                            }
+                            c += 1;
+                        }
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+    cols
+}
+
+/// Fold a patch-matrix gradient `[M, C_in·k·k]` back onto the input
+/// layout `[B, C_in, H, H]` (scatter-add — patches overlap).
+pub fn col2im(dcols: &[f32], d: &ConvDims) -> Vec<f32> {
+    let (ho, p, hw) = (d.hw_out(), d.patch(), d.hw);
+    debug_assert_eq!(dcols.len(), d.rows() * p);
+    let mut dx = vec![0.0f32; d.batch * d.c_in * hw * hw];
+    let mut r = 0;
+    for n in 0..d.batch {
+        for oy in 0..ho {
+            for ox in 0..ho {
+                let col = &dcols[r * p..(r + 1) * p];
+                let mut c = 0;
+                for ci in 0..d.c_in {
+                    let base = (n * d.c_in + ci) * hw * hw;
+                    for ky in 0..d.k {
+                        let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                        for kx in 0..d.k {
+                            let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                            if iy >= 0 && (iy as usize) < hw && ix >= 0 && (ix as usize) < hw {
+                                dx[base + iy as usize * hw + ix as usize] += col[c];
+                            }
+                            c += 1;
+                        }
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+    dx
+}
+
+/// Rearrange the GEMM output `[M, C_out]` (M = B·H_out·W_out) into NCHW
+/// `[B, C_out, H_out, W_out]`.
+pub fn rows_to_nchw(y2: &[f32], d: &ConvDims) -> Vec<f32> {
+    let ho = d.hw_out();
+    debug_assert_eq!(y2.len(), d.rows() * d.c_out);
+    let mut y = vec![0.0f32; y2.len()];
+    for n in 0..d.batch {
+        for s in 0..ho * ho {
+            let row = &y2[(n * ho * ho + s) * d.c_out..(n * ho * ho + s + 1) * d.c_out];
+            for (o, &v) in row.iter().enumerate() {
+                y[(n * d.c_out + o) * ho * ho + s] = v;
+            }
+        }
+    }
+    y
+}
+
+/// Inverse of [`rows_to_nchw`]: NCHW gradient → GEMM row layout.
+pub fn nchw_to_rows(dy: &[f32], d: &ConvDims) -> Vec<f32> {
+    let ho = d.hw_out();
+    debug_assert_eq!(dy.len(), d.rows() * d.c_out);
+    let mut dy2 = vec![0.0f32; dy.len()];
+    for n in 0..d.batch {
+        for o in 0..d.c_out {
+            let plane = &dy[(n * d.c_out + o) * ho * ho..(n * d.c_out + o + 1) * ho * ho];
+            for (s, &v) in plane.iter().enumerate() {
+                dy2[(n * ho * ho + s) * d.c_out + o] = v;
+            }
+        }
+    }
+    dy2
+}
+
+/// 2×2 average pool, stride 2.  `x`: `[B, C, H, H]`, `H` even.
+pub fn avgpool2_fwd(x: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+    debug_assert_eq!(hw % 2, 0, "avgpool2 needs an even spatial size");
+    let ho = hw / 2;
+    let mut y = vec![0.0f32; batch * c * ho * ho];
+    for nc in 0..batch * c {
+        let plane = &x[nc * hw * hw..(nc + 1) * hw * hw];
+        let out = &mut y[nc * ho * ho..(nc + 1) * ho * ho];
+        for oy in 0..ho {
+            for ox in 0..ho {
+                let (iy, ix) = (oy * 2, ox * 2);
+                out[oy * ho + ox] = 0.25
+                    * (plane[iy * hw + ix]
+                        + plane[iy * hw + ix + 1]
+                        + plane[(iy + 1) * hw + ix]
+                        + plane[(iy + 1) * hw + ix + 1]);
+            }
+        }
+    }
+    y
+}
+
+/// Backward of [`avgpool2_fwd`]: spread each output gradient evenly over
+/// its 2×2 window.
+pub fn avgpool2_bwd(dy: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+    let ho = hw / 2;
+    debug_assert_eq!(dy.len(), batch * c * ho * ho);
+    let mut dx = vec![0.0f32; batch * c * hw * hw];
+    for nc in 0..batch * c {
+        let gout = &dy[nc * ho * ho..(nc + 1) * ho * ho];
+        let gin = &mut dx[nc * hw * hw..(nc + 1) * hw * hw];
+        for oy in 0..ho {
+            for ox in 0..ho {
+                let g = 0.25 * gout[oy * ho + ox];
+                let (iy, ix) = (oy * 2, ox * 2);
+                gin[iy * hw + ix] += g;
+                gin[iy * hw + ix + 1] += g;
+                gin[(iy + 1) * hw + ix] += g;
+                gin[(iy + 1) * hw + ix + 1] += g;
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::matmul::{linear_fwd, matmul_dy_w};
+    use crate::testing::forall;
+
+    fn naive_conv(x: &[f32], w: &[f32], d: &ConvDims) -> Vec<f32> {
+        let (ho, hw) = (d.hw_out(), d.hw);
+        let mut y = vec![0.0f32; d.batch * d.c_out * ho * ho];
+        for n in 0..d.batch {
+            for o in 0..d.c_out {
+                for oy in 0..ho {
+                    for ox in 0..ho {
+                        let mut acc = 0.0;
+                        for ci in 0..d.c_in {
+                            for ky in 0..d.k {
+                                for kx in 0..d.k {
+                                    let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                                    let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                                    if iy >= 0 && (iy as usize) < hw && ix >= 0 && (ix as usize) < hw
+                                    {
+                                        let xi = x[((n * d.c_in + ci) * hw + iy as usize) * hw
+                                            + ix as usize];
+                                        let wi = w[((o * d.c_in + ci) * d.k + ky) * d.k + kx];
+                                        acc += xi * wi;
+                                    }
+                                }
+                            }
+                        }
+                        y[((n * d.c_out + o) * ho + oy) * ho + ox] = acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn prop_im2col_gemm_matches_naive_conv() {
+        forall(60, |r| {
+            let d = ConvDims {
+                batch: 1 + r.below(3),
+                c_in: 1 + r.below(3),
+                hw: 4 + 2 * r.below(3),
+                c_out: 1 + r.below(4),
+                k: 3,
+                stride: 1,
+                pad: 1,
+            };
+            let mut rng = r.split(5);
+            let x = rng.normal_vec(d.batch * d.c_in * d.hw * d.hw, 1.0);
+            let w = rng.normal_vec(d.c_out * d.patch(), 1.0);
+            let cols = im2col(&x, &d);
+            let y2 = linear_fwd(&cols, &w, None, d.rows(), d.patch(), d.c_out);
+            let got = rows_to_nchw(&y2, &d);
+            let want = naive_conv(&x, &w, &d);
+            for i in 0..got.len() {
+                assert!((got[i] - want[i]).abs() < 1e-4, "{i}: {} vs {}", got[i], want[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_col2im_is_im2col_transpose() {
+        // ⟨im2col(x), c⟩ == ⟨x, col2im(c)⟩ — the adjoint identity that
+        // makes the conv input-gradient exact
+        forall(60, |r| {
+            let d = ConvDims {
+                batch: 1 + r.below(2),
+                c_in: 1 + r.below(3),
+                hw: 4 + 2 * r.below(2),
+                c_out: 1,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            };
+            let mut rng = r.split(6);
+            let x = rng.normal_vec(d.batch * d.c_in * d.hw * d.hw, 1.0);
+            let c = rng.normal_vec(d.rows() * d.patch(), 1.0);
+            let lhs: f32 = im2col(&x, &d).iter().zip(&c).map(|(a, b)| a * b).sum();
+            let rhs: f32 = x.iter().zip(col2im(&c, &d)).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+        });
+    }
+
+    #[test]
+    fn conv_dx_matches_finite_difference() {
+        let d = ConvDims { batch: 1, c_in: 2, hw: 4, c_out: 3, k: 3, stride: 1, pad: 1 };
+        let mut rng = crate::rng::Pcg64::new(11);
+        let x = rng.normal_vec(d.batch * d.c_in * d.hw * d.hw, 1.0);
+        let w = rng.normal_vec(d.c_out * d.patch(), 0.5);
+        let dout = rng.normal_vec(d.rows() * d.c_out, 1.0); // NCHW layout
+        let loss = |xv: &[f32]| -> f32 {
+            let cols = im2col(xv, &d);
+            let y2 = linear_fwd(&cols, &w, None, d.rows(), d.patch(), d.c_out);
+            rows_to_nchw(&y2, &d).iter().zip(&dout).map(|(a, b)| a * b).sum()
+        };
+        let dy2 = nchw_to_rows(&dout, &d);
+        let dcols = matmul_dy_w(&dy2, &w, d.rows(), d.c_out, d.patch());
+        let dx = col2im(&dcols, &d);
+        // the map is linear in x, so a large step costs no curvature
+        // error and drowns f32 cancellation noise
+        let eps = 1e-2;
+        for i in [0usize, 5, 13, 31] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            assert!((dx[i] - num).abs() < 1e-2, "dx[{i}]: {} vs {num}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn nchw_row_layout_round_trips() {
+        let d = ConvDims { batch: 2, c_in: 1, hw: 4, c_out: 3, k: 3, stride: 1, pad: 1 };
+        let n = d.rows() * d.c_out;
+        let y2: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        assert_eq!(nchw_to_rows(&rows_to_nchw(&y2, &d), &d), y2);
+    }
+
+    #[test]
+    fn avgpool_round_trip_conserves_gradient_mass() {
+        let (b, c, hw) = (2, 3, 6);
+        let mut rng = crate::rng::Pcg64::new(3);
+        let x = rng.normal_vec(b * c * hw * hw, 1.0);
+        let y = avgpool2_fwd(&x, b, c, hw);
+        assert_eq!(y.len(), b * c * 9);
+        // mean of means equals global mean
+        let mx: f32 = x.iter().sum::<f32>() / x.len() as f32;
+        let my: f32 = y.iter().sum::<f32>() / y.len() as f32;
+        assert!((mx - my).abs() < 1e-5);
+        let dy = vec![1.0f32; y.len()];
+        let dx = avgpool2_bwd(&dy, b, c, hw);
+        // each input contributes 1/4 of one output
+        assert!(dx.iter().all(|&g| (g - 0.25).abs() < 1e-7));
+    }
+}

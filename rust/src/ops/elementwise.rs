@@ -1,0 +1,87 @@
+//! ReLU and the embedding lookup — the two "everything else" ops of the
+//! native model families (`python/compile/layers.py::relu_*` /
+//! `embedding_*`).  Embeddings are fp32 and non-freezable: per the
+//! paper's transformer setup they train during FP pretraining only, so
+//! their backward exists but is never row-gated.
+
+/// `y = max(x, 0)`.
+pub fn relu_fwd(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// ReLU backward against the cached *pre-activation*.
+pub fn relu_bwd(dy: &[f32], pre: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), pre.len());
+    dy.iter().zip(pre).map(|(&g, &h)| if h > 0.0 { g } else { 0.0 }).collect()
+}
+
+/// Token + learned-position embedding: `y[n,t] = tok[ids[n,t]] + pos[t]`.
+///
+/// `tok`: `[V, D]`, `pos`: `[T, D]`, `ids`: `[B·T]` → `[B·T, D]`.
+pub fn embed_fwd(tok: &[f32], pos: &[f32], ids: &[i32], t: usize, d: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; ids.len() * d];
+    for (r, &id) in ids.iter().enumerate() {
+        let tr = &tok[id as usize * d..(id as usize + 1) * d];
+        let pr = &pos[(r % t) * d..(r % t + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for c in 0..d {
+            yr[c] = tr[c] + pr[c];
+        }
+    }
+    y
+}
+
+/// Backward of [`embed_fwd`]: scatter-add into `dtok` (`[V, D]`) and
+/// reduce over the batch into `dpos` (`[T, D]`).
+pub fn embed_bwd(dy: &[f32], ids: &[i32], vocab: usize, t: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), ids.len() * d);
+    let mut dtok = vec![0.0f32; vocab * d];
+    let mut dpos = vec![0.0f32; t * d];
+    for (r, &id) in ids.iter().enumerate() {
+        let gr = &dy[r * d..(r + 1) * d];
+        let tr = &mut dtok[id as usize * d..(id as usize + 1) * d];
+        for c in 0..d {
+            tr[c] += gr[c];
+        }
+        let pr = &mut dpos[(r % t) * d..(r % t + 1) * d];
+        for c in 0..d {
+            pr[c] += gr[c];
+        }
+    }
+    (dtok, dpos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_gates_on_preactivation() {
+        let pre = [-1.0, 0.0, 2.0];
+        assert_eq!(relu_fwd(&pre), vec![0.0, 0.0, 2.0]);
+        assert_eq!(relu_bwd(&[1.0, 1.0, 1.0], &pre), vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn embed_looks_up_and_scatters_back() {
+        let (v, t, d) = (4, 2, 3);
+        let tok: Vec<f32> = (0..v * d).map(|i| i as f32).collect();
+        let pos: Vec<f32> = (0..t * d).map(|i| i as f32 * 0.1).collect();
+        // batch of 2 sequences of length 2
+        let ids = [2, 0, 2, 3];
+        let y = embed_fwd(&tok, &pos, &ids, t, d);
+        assert_eq!(y.len(), 4 * d);
+        // y[0] = tok[2] + pos[0]
+        assert!((y[0] - (6.0 + 0.0)).abs() < 1e-6);
+        // y row 3 = tok[3] + pos[1]
+        assert!((y[3 * d] - (9.0 + 0.3)).abs() < 1e-6);
+
+        let dy = vec![1.0f32; 4 * d];
+        let (dtok, dpos) = embed_bwd(&dy, &ids, v, t, d);
+        // token 2 appears twice, token 1 never
+        assert_eq!(dtok[2 * d], 2.0);
+        assert_eq!(dtok[d], 0.0);
+        // each position row sums the batch (2 sequences)
+        assert!(dpos.iter().all(|&g| (g - 2.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,146 @@
+//! Vectorized fake-quant ops (paper Eq. 1–4) with STE/LSQ gradients.
+//!
+//! The scalar formulas live in [`crate::quant`] and are shared with PTQ
+//! calibration so both layers agree bit-for-bit; these kernels apply them
+//! over whole tensors / gathered rows and add the backward rules of
+//! `python/compile/quantization.py` (`fq_weight_bwd` / `fq_act_bwd`):
+//! STE pass-through inside the clip range, LSQ scale gradients, LSQ+
+//! zero-point gradients outside it.
+
+use crate::quant::{fq_asym, fq_sym, qrange_asym, qrange_sym};
+
+/// Per-row symmetric weight fake-quant (Eq. 3): `ŵ = clip(round(w/s))·s`.
+pub fn fq_weight_rows(w: &[f32], s: &[f32], row_size: usize, bits: u32) -> Vec<f32> {
+    let mut out = vec![0.0; w.len()];
+    for (r, &sr) in s.iter().enumerate() {
+        for i in 0..row_size {
+            out[r * row_size + i] = fq_sym(w[r * row_size + i], sr, bits);
+        }
+    }
+    out
+}
+
+/// Per-tensor asymmetric activation fake-quant (Eq. 1).
+pub fn fq_act_tensor(x: &[f32], s: f32, z: f32, bits: u32) -> Vec<f32> {
+    x.iter().map(|&v| fq_asym(v, s, z, bits)).collect()
+}
+
+/// STE/LSQ backward of the weight quantizer for the given (already
+/// row-restricted) rows.  Returns `(dw, dsw)`; mirrors
+/// `python/compile/quantization.py::fq_weight_bwd`.
+pub fn fq_weight_bwd_rows(
+    w_rows: &[f32],
+    s: &[f32],
+    dwhat: &[f32],
+    row_size: usize,
+    bits: u32,
+) -> (Vec<f32>, Vec<f32>) {
+    let (qmin, qmax) = qrange_sym(bits);
+    let (qmin, qmax) = (qmin as f32, qmax as f32);
+    let mut dw = vec![0.0; w_rows.len()];
+    let mut ds = vec![0.0; s.len()];
+    for (r, &sr) in s.iter().enumerate() {
+        for i in 0..row_size {
+            let idx = r * row_size + i;
+            let v = w_rows[idx] / sr;
+            let q = v.round().clamp(qmin, qmax);
+            if v >= qmin && v <= qmax {
+                dw[idx] = dwhat[idx]; // STE pass-through inside the clip range
+                ds[r] += dwhat[idx] * (q - v); // LSQ: ∂ŵ/∂s = q - v
+            } else {
+                ds[r] += dwhat[idx] * q; // clipped: boundary code
+            }
+        }
+    }
+    (dw, ds)
+}
+
+/// STE/LSQ+ backward of the activation quantizer.  Returns
+/// `(dx, ds, dz)`; mirrors `python/compile/quantization.py::fq_act_bwd`.
+pub fn fq_act_bwd_tensor(x: &[f32], s: f32, z: f32, dxhat: &[f32], bits: u32) -> (Vec<f32>, f32, f32) {
+    let (qmin, qmax) = qrange_asym(bits);
+    let (qmin, qmax) = (qmin as f32, qmax as f32);
+    let zr = z.round();
+    let mut dx = vec![0.0; x.len()];
+    let (mut ds, mut dz) = (0f32, 0f32);
+    for i in 0..x.len() {
+        let v = x[i] / s;
+        let c = (v.round() + zr).clamp(qmin, qmax);
+        // LSQ+ convention: the pass-through mask uses the continuous code
+        if v + zr >= qmin && v + zr <= qmax {
+            dx[i] = dxhat[i];
+            ds += dxhat[i] * ((c - zr) - v);
+        } else {
+            ds += dxhat[i] * (c - zr);
+            dz += dxhat[i] * (-s);
+        }
+    }
+    (dx, ds, dz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+    use crate::testing::forall;
+
+    #[test]
+    fn prop_fq_weight_rows_matches_scalar_fq_sym() {
+        forall(200, |r| {
+            let rows = 1 + r.below(6);
+            let rs = 1 + r.below(8);
+            let bits = if r.uniform() < 0.5 { 4 } else { 8 };
+            let mut rng = r.split(11);
+            let w = rng.normal_vec(rows * rs, 1.0);
+            let s: Vec<f32> = (0..rows).map(|_| r.uniform_in(1e-3, 0.2)).collect();
+            let out = fq_weight_rows(&w, &s, rs, bits);
+            for row in 0..rows {
+                for i in 0..rs {
+                    let want = quant::fq_sym(w[row * rs + i], s[row], bits);
+                    assert_eq!(out[row * rs + i], want);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_fq_act_tensor_matches_scalar_fq_asym() {
+        forall(200, |r| {
+            let n = 1 + r.below(32);
+            let s = r.uniform_in(1e-3, 0.1);
+            let z = r.uniform_in(0.0, 255.0).round();
+            let mut rng = r.split(12);
+            let x = rng.normal_vec(n, 2.0);
+            let out = fq_act_tensor(&x, s, z, 8);
+            for i in 0..n {
+                assert_eq!(out[i], quant::fq_asym(x[i], s, z, 8));
+            }
+        });
+    }
+
+    #[test]
+    fn fq_weight_bwd_ste_rules() {
+        // in range: dw passes through, ds = (q - v)·g
+        let (dw, ds) = fq_weight_bwd_rows(&[0.05], &[0.1], &[2.0], 1, 8);
+        assert_eq!(dw, vec![2.0]);
+        // v = 0.5 → q = round(0.5) = 1 (f32::round is away-from-zero)
+        // → ds = (1 - 0.5)·2 = 1
+        assert!((ds[0] - 1.0).abs() < 1e-6, "{}", ds[0]);
+        // clipped: dw = 0, ds = boundary code · g
+        let (dw, ds) = fq_weight_bwd_rows(&[100.0], &[0.1], &[1.0], 1, 8);
+        assert_eq!(dw, vec![0.0]);
+        assert!((ds[0] - 127.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fq_act_bwd_ste_rules() {
+        // in range: dx passes through, dz = 0
+        let (dx, _ds, dz) = fq_act_bwd_tensor(&[0.5], 0.1, 10.0, &[3.0], 8);
+        assert_eq!(dx, vec![3.0]);
+        assert_eq!(dz, 0.0);
+        // clipped high: dx = 0, dz = -s·g
+        let (dx, _ds, dz) = fq_act_bwd_tensor(&[100.0], 0.1, 10.0, &[1.0], 8);
+        assert_eq!(dx, vec![0.0]);
+        assert!((dz + 0.1).abs() < 1e-7);
+    }
+}

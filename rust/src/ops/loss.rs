@@ -1,0 +1,92 @@
+//! Mean softmax cross-entropy with fused gradient — mirrors
+//! `python/compile/layers.py::ce_loss_fwd` / `ce_loss_bwd`.
+//!
+//! Works row-wise, so classifiers (`rows = B`) and per-token LM heads
+//! (`rows = B·T`) share one kernel; the mean (and the `1/rows` gradient
+//! scale) is over *rows*, matching the AOT step functions.
+
+use crate::error::{bail, Result};
+use crate::tensor::argmax;
+
+/// `loss = mean_r [lse(logits_r) - logits_r[label_r]]`.
+///
+/// Returns `(loss, correct_rows, dlogits)`; `dlogits` is the exact
+/// gradient of the mean loss (`(softmax - onehot)/rows`), computed in the
+/// same pass so forward-only callers pay nothing extra of consequence.
+/// Labels outside `[0, classes)` are a descriptive error, never an index
+/// panic.
+pub fn softmax_xent(logits: &[f32], labels: &[i32], rows: usize, classes: usize) -> Result<(f32, usize, Vec<f32>)> {
+    debug_assert_eq!(logits.len(), rows * classes);
+    if labels.len() != rows {
+        bail!("softmax_xent: {} labels for {} logit rows", labels.len(), rows);
+    }
+    let mut loss = 0f32;
+    let mut correct = 0usize;
+    let mut dlogits = vec![0f32; rows * classes];
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let y = labels[r];
+        if y < 0 || y as usize >= classes {
+            bail!("label {y} out of range [0, {classes})");
+        }
+        let y = y as usize;
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+        let lse = sum.ln() + mx;
+        loss += lse - row[y];
+        if argmax(row) == y {
+            correct += 1;
+        }
+        for c in 0..classes {
+            let p = (row[c] - lse).exp();
+            let onehot = if c == y { 1.0 } else { 0.0 };
+            dlogits[r * classes + c] = (p - onehot) / rows as f32;
+        }
+    }
+    Ok((loss / rows as f32, correct, dlogits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn uniform_logits_give_log_classes() {
+        let (loss, _, _) = softmax_xent(&[0.0; 8], &[3, 1], 2, 4).unwrap();
+        assert!((loss - (4f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_rows_sum_to_zero_and_match_fd() {
+        let mut rng = Pcg64::new(9);
+        let (rows, classes) = (3, 5);
+        let logits = rng.normal_vec(rows * classes, 1.5);
+        let labels = vec![0, 2, 4];
+        let (_, _, d) = softmax_xent(&logits, &labels, rows, classes).unwrap();
+        for r in 0..rows {
+            let s: f32 = d[r * classes..(r + 1) * classes].iter().sum();
+            assert!(s.abs() < 1e-6, "row {r} grad sum {s}");
+        }
+        let eps = 1e-3;
+        for i in 0..rows * classes {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let (fp, _, _) = softmax_xent(&lp, &labels, rows, classes).unwrap();
+            let (fm, _, _) = softmax_xent(&lm, &labels, rows, classes).unwrap();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((d[i] - num).abs() < 1e-3, "d[{i}]: {} vs {num}", d[i]);
+        }
+    }
+
+    #[test]
+    fn counts_correct_rows_and_rejects_bad_labels() {
+        let logits = [0.0, 3.0, 0.1, 0.0]; // argmax 1, argmax 0
+        let (_, correct, _) = softmax_xent(&logits, &[1, 1], 2, 2).unwrap();
+        assert_eq!(correct, 1);
+        assert!(softmax_xent(&logits, &[2, 0], 2, 2).is_err());
+        assert!(softmax_xent(&logits, &[-1, 0], 2, 2).is_err());
+    }
+}

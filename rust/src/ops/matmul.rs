@@ -1,0 +1,281 @@
+//! GEMM kernels for the native backend — the hot path of every step.
+//!
+//! Three matmuls cover the whole linear-layer VJP (paper Eq. 5):
+//!
+//! * [`linear_fwd`]   `y[b,o]  = Σ_i x[b,i]·w[o,i] (+ bias[o])`
+//! * [`matmul_dy_w`]  `dx[b,i] = Σ_o dy[b,o]·w[o,i]`  (always dense)
+//! * [`matmul_dyt_x`] `dw[o,i] = Σ_b dy[b,o]·x[b,i]`  (full weight grad)
+//! * [`partial_dw`]   the paper's Fig. 1 (right): only the gathered
+//!   unfrozen rows of `dw` are ever materialized.
+//!
+//! All kernels are cache-blocked over the contraction dim (`KC`) and
+//! split their *output rows* across `std::thread` workers when the work
+//! exceeds `PAR_MIN_FLOPS` — each thread owns a disjoint `&mut` chunk
+//! of the output, so results are deterministic regardless of thread
+//! count (no atomic accumulation, no reduction-order wobble).
+
+use std::thread;
+
+/// Contraction-dim block: 128 f32 ≈ half a 1 KiB L1 line budget per
+/// operand row, small enough that `x` and `w` blocks stay resident.
+const KC: usize = 128;
+
+/// Minimum fused-multiply-adds before spawning threads pays for itself.
+const PAR_MIN_FLOPS: usize = 1 << 18;
+
+fn thread_count(rows: usize, flops_per_row: usize) -> usize {
+    if rows == 0 {
+        return 1;
+    }
+    let hw = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let by_work = (rows.saturating_mul(flops_per_row) / PAR_MIN_FLOPS).max(1);
+    hw.min(by_work).min(rows)
+}
+
+/// Run `body(first_row, rows_chunk)` over `out` split row-wise across
+/// threads.  `out` must hold `rows * row_elems` values.
+fn par_rows<F>(out: &mut [f32], rows: usize, row_elems: usize, flops_per_row: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if out.is_empty() || row_elems == 0 {
+        return;
+    }
+    let nt = thread_count(rows, flops_per_row);
+    if nt <= 1 {
+        body(0, out);
+        return;
+    }
+    let chunk = rows.div_ceil(nt);
+    thread::scope(|s| {
+        for (ci, chunk_rows) in out.chunks_mut(chunk * row_elems).enumerate() {
+            let body = &body;
+            s.spawn(move || body(ci * chunk, chunk_rows));
+        }
+    });
+}
+
+/// `y[b,o] = Σ_i x[b,i]·w[o,i] (+ bias[o])` — x: `[m,k]`, w: `[n,k]`.
+pub fn linear_fwd(x: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0.0f32; m * n];
+    par_rows(&mut y, m, n, k * n, |r0, rows| {
+        for (ri, yr) in rows.chunks_mut(n).enumerate() {
+            let xr = &x[(r0 + ri) * k..(r0 + ri + 1) * k];
+            if let Some(b) = bias {
+                yr.copy_from_slice(b);
+            }
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + KC).min(k);
+                let xb = &xr[k0..k1];
+                for (o, yo) in yr.iter_mut().enumerate() {
+                    let wb = &w[o * k + k0..o * k + k1];
+                    let mut acc = 0.0f32;
+                    for i in 0..xb.len() {
+                        acc += xb[i] * wb[i];
+                    }
+                    *yo += acc;
+                }
+                k0 = k1;
+            }
+        }
+    });
+    y
+}
+
+/// `dx[b,i] = Σ_o dy[b,o]·w[o,i]` — the full input gradient (always
+/// computed dense, like QAT: Eq. 5's first matmul).
+pub fn matmul_dy_w(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    let mut dx = vec![0.0f32; m * k];
+    par_rows(&mut dx, m, k, n * k, |r0, rows| {
+        for (ri, dxr) in rows.chunks_mut(k).enumerate() {
+            let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
+            for (o, &g) in dyr.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                let wr = &w[o * k..(o + 1) * k];
+                for i in 0..k {
+                    dxr[i] += g * wr[i];
+                }
+            }
+        }
+    });
+    dx
+}
+
+/// `dw[o,i] = Σ_b dy[b,o]·x[b,i]` — the full weight gradient.
+pub fn matmul_dyt_x(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    let mut dw = vec![0.0f32; n * k];
+    par_rows(&mut dw, n, k, m * k, |o0, rows| {
+        for b in 0..m {
+            let xr = &x[b * k..(b + 1) * k];
+            for (oi, dwr) in rows.chunks_mut(k).enumerate() {
+                let g = dy[b * n + o0 + oi];
+                if g == 0.0 {
+                    continue;
+                }
+                for i in 0..k {
+                    dwr[i] += g * xr[i];
+                }
+            }
+        }
+    });
+    dw
+}
+
+/// Partial weight gradient (paper Fig. 1 right, mirrors
+/// `kernels/ref.py::partial_dw_ref`): `dw[r,i] = Σ_b dy[b,idx[r]]·x[b,i]`
+/// — only the `idx.len()` unfrozen rows are ever materialized.
+pub fn partial_dw(dy: &[f32], x: &[f32], idx: &[usize], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    let mut dw = vec![0.0f32; idx.len() * k];
+    par_rows(&mut dw, idx.len(), k, m * k, |r0, rows| {
+        for b in 0..m {
+            let xr = &x[b * k..(b + 1) * k];
+            for (ri, dwr) in rows.chunks_mut(k).enumerate() {
+                let g = dy[b * n + idx[r0 + ri]];
+                if g == 0.0 {
+                    continue;
+                }
+                for i in 0..k {
+                    dwr[i] += g * xr[i];
+                }
+            }
+        }
+    });
+    dw
+}
+
+/// `db[o] = Σ_b dy[b,o]` — the bias gradient (column sum).
+pub fn col_sum(dy: &[f32], m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), m * n);
+    let mut db = vec![0.0f32; n];
+    for b in 0..m {
+        let dyr = &dy[b * n..(b + 1) * n];
+        for o in 0..n {
+            db[o] += dyr[o];
+        }
+    }
+    db
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    fn naive_fwd(x: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0; m * n];
+        for b in 0..m {
+            for o in 0..n {
+                let mut acc = bias.map_or(0.0, |bv| bv[o]);
+                for i in 0..k {
+                    acc += x[b * k + i] * w[o * k + i];
+                }
+                y[b * n + o] = acc;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn prop_linear_fwd_matches_naive() {
+        forall(100, |r| {
+            let (m, k, n) = (1 + r.below(5), 1 + r.below(200), 1 + r.below(6));
+            let mut rng = r.split(1);
+            let x = rng.normal_vec(m * k, 1.0);
+            let w = rng.normal_vec(n * k, 1.0);
+            let b = rng.normal_vec(n, 1.0);
+            let got = linear_fwd(&x, &w, Some(&b), m, k, n);
+            let want = naive_fwd(&x, &w, Some(&b), m, k, n);
+            for i in 0..m * n {
+                assert!((got[i] - want[i]).abs() < 1e-4, "{}: {} vs {}", i, got[i], want[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_backward_matmuls_match_naive() {
+        forall(100, |r| {
+            let (m, k, n) = (1 + r.below(6), 1 + r.below(150), 1 + r.below(8));
+            let mut rng = r.split(2);
+            let dy = rng.normal_vec(m * n, 1.0);
+            let x = rng.normal_vec(m * k, 1.0);
+            let w = rng.normal_vec(n * k, 1.0);
+            let dx = matmul_dy_w(&dy, &w, m, n, k);
+            let dw = matmul_dyt_x(&dy, &x, m, n, k);
+            for b in 0..m {
+                for i in 0..k {
+                    let want: f32 = (0..n).map(|o| dy[b * n + o] * w[o * k + i]).sum();
+                    assert!((dx[b * k + i] - want).abs() < 1e-4);
+                }
+            }
+            for o in 0..n {
+                for i in 0..k {
+                    let want: f32 = (0..m).map(|b| dy[b * n + o] * x[b * k + i]).sum();
+                    assert!((dw[o * k + i] - want).abs() < 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_partial_dw_is_gathered_full_dw() {
+        forall(100, |r| {
+            let (m, k, n) = (2 + r.below(4), 1 + r.below(40), 2 + r.below(10));
+            let mut rng = r.split(3);
+            let dy = rng.normal_vec(m * n, 1.0);
+            let x = rng.normal_vec(m * k, 1.0);
+            let nk = 1 + r.below(n);
+            let idx = {
+                let mut rng2 = r.split(4);
+                rng2.choice(n, nk)
+            };
+            let full = matmul_dyt_x(&dy, &x, m, n, k);
+            let part = partial_dw(&dy, &x, &idx, m, n, k);
+            for (ri, &o) in idx.iter().enumerate() {
+                for i in 0..k {
+                    let a = full[o * k + i];
+                    let b = part[ri * k + i];
+                    assert!((a - b).abs() < 1e-5, "row {o}: {a} vs {b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn col_sum_is_bias_grad() {
+        let dy = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2, 3]
+        assert_eq!(col_sum(&dy, 2, 3), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn large_shapes_parallelize_consistently() {
+        // big enough to cross PAR_MIN_FLOPS: result must equal the naive
+        // single-thread answer exactly (disjoint output rows — no
+        // reduction-order dependence)
+        let (m, k, n) = (64, 300, 48);
+        let mut rng = crate::rng::Pcg64::new(7);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(n * k, 1.0);
+        let got = linear_fwd(&x, &w, None, m, k, n);
+        let want = naive_fwd(&x, &w, None, m, k, n);
+        for i in 0..m * n {
+            assert!((got[i] - want[i]).abs() < 1e-3, "{i}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_do_not_panic() {
+        assert!(linear_fwd(&[], &[], None, 0, 4, 0).is_empty());
+        assert!(partial_dw(&[], &[], &[], 0, 0, 4).is_empty());
+    }
+}

@@ -1,0 +1,33 @@
+//! Shared op library: paired forward/VJP kernels for the native backend.
+//!
+//! Every op here mirrors its oracle in `python/compile/kernels/ref.py` /
+//! `python/compile/layers.py` — same math, same conventions (weights are
+//! `[C_out, ...]` row-major, activations carry the batch in the leading
+//! dim) — so the rust graph executor ([`crate::graph`]) and the AOT
+//! artifacts agree bit-for-bit wherever both exist.  The ops are plain
+//! functions over `&[f32]` slices: the layer-graph IR owns shapes and
+//! residual caches, the ops own the math.
+//!
+//! * [`matmul`] — cache-blocked, `std::thread`-parallel GEMM variants:
+//!   the linear forward, both backward matmuls (Eq. 5), and the paper's
+//!   partial `dW` (Fig. 1 right) that only materializes unfrozen rows.
+//! * [`conv`] — im2col/col2im so conv2d forward and both gradients reuse
+//!   the matmul kernels (and therefore the same partial-`dW` path), plus
+//!   2×2 average pooling.
+//! * [`fakequant`] — vectorized Eq. 1–4 fake-quant with STE/LSQ
+//!   gradients, shared with PTQ via the scalar formulas in
+//!   [`crate::quant`].
+//! * [`norm`] — LayerNorm over the trailing feature axis.
+//! * [`attention`] — scaled-dot-product attention (optionally causal)
+//!   over head-merged `[B, T, D]` layouts.
+//! * [`loss`] — mean softmax cross-entropy with fused dlogits.
+//! * [`elementwise`] — ReLU and the (fp32, non-freezable) embedding
+//!   lookup.
+
+pub mod attention;
+pub mod conv;
+pub mod elementwise;
+pub mod fakequant;
+pub mod loss;
+pub mod matmul;
+pub mod norm;

@@ -1,0 +1,124 @@
+//! LayerNorm over the trailing feature axis — mirrors
+//! `python/compile/layers.py::ln_fwd` / `ln_bwd` (ε = 1e-5).
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// Normalize each of `rows` length-`d` rows.  Returns `(y, xhat, inv)`
+/// where `xhat`/`inv` are the residual cache for [`layernorm_bwd`]
+/// (`inv` is one `1/σ` per row).
+pub fn layernorm_fwd(x: &[f32], gamma: &[f32], beta: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        inv[r] = iv;
+        for i in 0..d {
+            let h = (xr[i] - mu) * iv;
+            xhat[r * d + i] = h;
+            y[r * d + i] = gamma[i] * h + beta[i];
+        }
+    }
+    (y, xhat, inv)
+}
+
+/// Backward of [`layernorm_fwd`].  Returns `(dx, dgamma, dbeta)`.
+pub fn layernorm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    inv: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), rows * d);
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dgamma = vec![0.0f32; d];
+    let mut dbeta = vec![0.0f32; d];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xr = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0.0f32; // mean of dxhat
+        let mut m2 = 0.0f32; // mean of dxhat·xhat
+        for i in 0..d {
+            dgamma[i] += dyr[i] * xr[i];
+            dbeta[i] += dyr[i];
+            let dh = dyr[i] * gamma[i];
+            m1 += dh;
+            m2 += dh * xr[i];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        for i in 0..d {
+            let dh = dyr[i] * gamma[i];
+            dx[r * d + i] = inv[r] * (dh - m1 - xr[i] * m2);
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn forward_normalizes_rows() {
+        let mut rng = Pcg64::new(1);
+        let (rows, d) = (5, 8);
+        let x = rng.normal_vec(rows * d, 3.0);
+        let gamma = vec![1.0; d];
+        let beta = vec![0.0; d];
+        let (y, _, _) = layernorm_fwd(&x, &gamma, &beta, rows, d);
+        for r in 0..rows {
+            let yr = &y[r * d..(r + 1) * d];
+            let mu = yr.iter().sum::<f32>() / d as f32;
+            let var = yr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            assert!(mu.abs() < 1e-5, "row {r} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Pcg64::new(2);
+        let (rows, d) = (2, 6);
+        let x = rng.normal_vec(rows * d, 1.5);
+        let gamma = rng.normal_vec(d, 0.5);
+        let beta = rng.normal_vec(d, 0.5);
+        let dout = rng.normal_vec(rows * d, 1.0);
+        let loss = |xv: &[f32], gv: &[f32], bv: &[f32]| -> f32 {
+            let (y, _, _) = layernorm_fwd(xv, gv, bv, rows, d);
+            y.iter().zip(&dout).map(|(a, b)| a * b).sum()
+        };
+        let (_, xhat, inv) = layernorm_fwd(&x, &gamma, &beta, rows, d);
+        let (dx, dgamma, dbeta) = layernorm_bwd(&dout, &xhat, &inv, &gamma, rows, d);
+        let eps = 1e-2;
+        for i in [0usize, 3, 7, 11] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps);
+            assert!((dx[i] - num).abs() < 2e-2, "dx[{i}]: {} vs {num}", dx[i]);
+        }
+        for i in 0..d {
+            let mut gp = gamma.clone();
+            gp[i] += eps;
+            let mut gm = gamma.clone();
+            gm[i] -= eps;
+            let num = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps);
+            assert!((dgamma[i] - num).abs() < 2e-2, "dgamma[{i}]: {} vs {num}", dgamma[i]);
+            let mut bp = beta.clone();
+            bp[i] += eps;
+            let mut bm = beta.clone();
+            bm[i] -= eps;
+            let num = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps);
+            assert!((dbeta[i] - num).abs() < 2e-2, "dbeta[{i}]: {} vs {num}", dbeta[i]);
+        }
+    }
+}

@@ -1,10 +1,12 @@
 //! Host-side quantization math (paper Eq. 1–4) and the PTQ MinMax observer.
 //!
 //! The coordinator computes the *initial* quantization parameters here
-//! (the PTQ step of Algorithm 1); the training-time fake-quant itself runs
-//! inside the AOT artifacts (L1 Pallas kernels).  The formulas are
-//! unit-tested to mirror `python/compile/kernels/ref.py` exactly so both
-//! layers agree bit-for-bit.
+//! (the PTQ step of Algorithm 1); the training-time fake-quant itself
+//! runs inside the step functions — the L1 Pallas kernels on the PJRT
+//! backend, [`crate::ops::fakequant`] on the native graph executor, both
+//! built on these scalar formulas.  The formulas are unit-tested to
+//! mirror `python/compile/kernels/ref.py` exactly so every layer agrees
+//! bit-for-bit.
 
 /// Parse a `wXaY` bits tag (e.g. `w8a8` → `(8, 8)`) — the one grammar
 /// shared by artifact names, the CLI, and the native backend.  Widths

@@ -69,6 +69,17 @@ impl Tensor {
         &mut self.data[r * rs..(r + 1) * rs]
     }
 
+    /// Gather whole rows by index into a new `[idx.len(), row_size]`
+    /// tensor — the EfQAT "unfrozen rows" view of a weight site.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let rs = self.row_size();
+        let mut data = Vec::with_capacity(idx.len() * rs);
+        for &r in idx {
+            data.extend_from_slice(self.row(r));
+        }
+        Tensor { shape: vec![idx.len(), rs], data }
+    }
+
     /// Channel importance I_B = mean |w| per output row (paper Eq. 6).
     pub fn row_abs_mean(&self) -> Vec<f32> {
         let rs = self.row_size() as f32;
@@ -164,6 +175,15 @@ mod tests {
         assert_eq!(t.row_abs_max(), vec![3.0, 6.0]);
         assert_eq!(t.min(), -6.0);
         assert_eq!(t.max(), 5.0);
+    }
+
+    #[test]
+    fn gather_rows_copies_whole_rows() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.shape, vec![2, 2]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+        assert_eq!(t.gather_rows(&[]).data, Vec::<f32>::new());
     }
 
     #[test]

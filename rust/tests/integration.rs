@@ -15,9 +15,10 @@ use efqat::coordinator::tasks::build_task;
 use efqat::coordinator::trainer::{pretrain_fp, EfqatTrainer, TrainCfg};
 use efqat::coordinator::{calibrate, evaluate, Session};
 use efqat::freeze::Mode;
-use efqat::model::{ParamStore, StateStore};
+use efqat::model::{Dtype, Manifest, ParamStore, StateStore};
 use efqat::quant::{fq_asym, fq_sym};
-use efqat::tensor::Tensor;
+use efqat::rng::Pcg64;
+use efqat::tensor::{ITensor, Tensor};
 
 fn session() -> Session {
     Session::new(Path::new("artifacts")).expect("native session")
@@ -350,6 +351,215 @@ fn native_fwd_matches_host_quant_math() {
     // an exact code in both quantizers)
     assert!(logits.data[1].abs() < 1e-6);
     let _ = d_in;
+}
+
+/// Build valid inputs for any native manifest without a dataset: real
+/// initialized params, sane qparams, random images / zero token ids, and
+/// the first-k selection per site.
+fn generic_inputs(man: &Manifest, params: &ParamStore, seed: u64) -> Vec<Value> {
+    let mut rng = Pcg64::new(seed);
+    man.inputs
+        .iter()
+        .map(|spec| match spec.role.as_str() {
+            "param" => Value::F32(params.get(&spec.name).unwrap().clone()),
+            "qparam_sw" => {
+                Value::F32(Tensor { shape: spec.shape.clone(), data: vec![0.05; spec.elems()] })
+            }
+            "qparam_sx" => Value::F32(Tensor::scalar(0.05)),
+            "qparam_zx" => Value::F32(Tensor::scalar(128.0)),
+            "data" => match spec.dtype {
+                Dtype::F32 => Value::F32(Tensor {
+                    shape: spec.shape.clone(),
+                    data: rng.normal_vec(spec.elems(), 1.0),
+                }),
+                // zeros are valid labels and valid token ids everywhere
+                Dtype::I32 => Value::I32(ITensor::zeros(&spec.shape)),
+            },
+            "index" => Value::I32(ITensor {
+                shape: spec.shape.clone(),
+                data: (0..spec.shape[0] as i32).collect(),
+            }),
+            "flag" => Value::I32(ITensor { shape: vec![1], data: vec![1] }),
+            other => panic!("unexpected input role {other:?}"),
+        })
+        .collect()
+}
+
+#[test]
+fn every_native_model_executes_every_artifact_kind() {
+    // the whole (model × step-kind) matrix runs through the graph
+    // executor; Step::execute validates every output against the
+    // manifest ABI in both directions, so this catches any shape drift
+    let s = session();
+    for model in ["mlp", "mlp_wide", "convnet", "tiny_tf"] {
+        for suffix in [
+            "calib",
+            "fp_train",
+            "fp_fwd",
+            "w8a8_fwd",
+            "w4a8_train_r25",
+            "w8a8_train_r0",
+            "w8a8_train_r100",
+            "w8a8_train_lwpn",
+        ] {
+            let name = format!("{model}_{suffix}");
+            let step = s.steps.get(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let params = ParamStore::init(&step.manifest, 1);
+            let inputs = generic_inputs(&step.manifest, &params, 7);
+            let out = step.execute(&inputs).unwrap_or_else(|e| panic!("{name}: {e}"));
+            if step.manifest.kind != "calib" {
+                assert!(out.loss().unwrap().is_finite(), "{name}: non-finite loss");
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_backward_matches_full_backward_on_unfrozen_rows() {
+    // acceptance: r25 (gathered-row) gradients agree with the gathered
+    // rows of the r100 (full) gradients to ≤ 1e-5, per site, for every
+    // native model family — the paper's Fig. 1 (right) correctness claim
+    let s = session();
+    for model in ["mlp", "convnet", "tiny_tf"] {
+        let full_step = s.steps.get(&format!("{model}_w8a8_train_r100")).unwrap();
+        let part_step = s.steps.get(&format!("{model}_w8a8_train_r25")).unwrap();
+        let params = ParamStore::init(&full_step.manifest, 3);
+
+        // shared inputs; the partial artifact additionally binds a random
+        // (but in-range) selection per site
+        let full_inputs = generic_inputs(&full_step.manifest, &params, 11);
+        let mut sel: std::collections::BTreeMap<String, Vec<i32>> = Default::default();
+        let mut rng = Pcg64::new(42);
+        let part_inputs: Vec<Value> = part_step
+            .manifest
+            .inputs
+            .iter()
+            .zip(generic_inputs(&part_step.manifest, &params, 11))
+            .map(|(spec, v)| {
+                if spec.role == "index" {
+                    let site = spec.of.clone().unwrap();
+                    let c_out = part_step
+                        .manifest
+                        .wsites
+                        .iter()
+                        .find(|w| w.name == site)
+                        .unwrap()
+                        .c_out;
+                    let ids: Vec<i32> =
+                        rng.choice(c_out, spec.shape[0]).into_iter().map(|c| c as i32).collect();
+                    sel.insert(site, ids.clone());
+                    Value::I32(ITensor { shape: spec.shape.clone(), data: ids })
+                } else {
+                    v
+                }
+            })
+            .collect();
+
+        let full = full_step.execute(&full_inputs).unwrap();
+        let part = part_step.execute(&part_inputs).unwrap();
+        assert!(
+            (full.loss().unwrap() - part.loss().unwrap()).abs() < 1e-6,
+            "{model}: forward loss must not depend on the selection"
+        );
+        for site in &full_step.manifest.wsites {
+            let ids = &sel[&site.name];
+            let dw_full = full.get(&format!("d:{}", site.name)).unwrap().f32().unwrap();
+            let dw_part = part.get(&format!("d:{}", site.name)).unwrap().f32().unwrap();
+            let rs = dw_full.data.len() / site.c_out;
+            assert_eq!(dw_part.data.len(), ids.len() * rs, "{model}:{}", site.name);
+            for (gi, &row) in ids.iter().enumerate() {
+                let row = row as usize;
+                for i in 0..rs {
+                    let a = dw_full.data[row * rs + i];
+                    let b = dw_part.data[gi * rs + i];
+                    assert!(
+                        (a - b).abs() <= 1e-5,
+                        "{model}:{} row {row}[{i}]: full {a} vs partial {b}",
+                        site.name
+                    );
+                }
+            }
+            let dsw_full = full.get(&format!("d:sw:{}", site.name)).unwrap().f32().unwrap();
+            let dsw_part = part.get(&format!("d:sw:{}", site.name)).unwrap().f32().unwrap();
+            for (gi, &row) in ids.iter().enumerate() {
+                let a = dsw_full.data[row as usize];
+                let b = dsw_part.data[gi];
+                assert!(
+                    (a - b).abs() <= 1e-5,
+                    "{model}:{} dsw row {row}: full {a} vs partial {b}",
+                    site.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn convnet_partial_step_updates_only_selected_conv_channels() {
+    // conv-style WSites flow through freeze.rs + the trainer exactly like
+    // linear rows: frozen output channels of conv1.w must not move
+    let s = session();
+    let calib = s.steps.get("convnet_calib").unwrap();
+    let params = ParamStore::init(&calib.manifest, 0);
+    let states = StateStore::init(&calib.manifest);
+    let mut task = build_task("convnet", calib.manifest.batch_size, &small_cfg()).unwrap();
+    let q = calibrate(&calib, &params, &states, &mut task.calib, 128, 8, 8).unwrap();
+    let step = s.steps.get("convnet_w8a8_train_r25").unwrap();
+    let tcfg = TrainCfg { lr_w: 0.02, ..TrainCfg::default() };
+    let mut trainer = EfqatTrainer::new(step, params, q, states, Some(Mode::Cwpl), tcfg).unwrap();
+
+    let before = trainer.params.get("conv1.w").unwrap().clone();
+    let sel = trainer.policy.as_ref().unwrap().selection().clone();
+    let si = trainer.step.manifest.wsites.iter().position(|w| w.name == "conv1.w").unwrap();
+    let selected = sel.channels[si].clone();
+    assert_eq!(selected.len(), 2); // site_k(8, 0.25)
+
+    task.train.reset();
+    let batch = task.train.next_batch().unwrap();
+    let rec = trainer.train_step(&batch).unwrap();
+    assert!(rec.loss.is_finite());
+
+    let after = trainer.params.get("conv1.w").unwrap();
+    for r in 0..before.rows() {
+        let changed = before.row(r) != after.row(r);
+        assert_eq!(changed, selected.contains(&r), "conv channel {r}");
+    }
+}
+
+#[test]
+fn tiny_tf_lwpn_freezes_whole_projection_sites() {
+    let s = session();
+    let calib = s.steps.get("tiny_tf_calib").unwrap();
+    let params = ParamStore::init(&calib.manifest, 0);
+    let states = StateStore::init(&calib.manifest);
+    let mut task = build_task("tiny_tf", calib.manifest.batch_size, &small_cfg()).unwrap();
+    let q = calibrate(&calib, &params, &states, &mut task.calib, 64, 8, 8).unwrap();
+    assert_eq!(q.sw.len(), 7, "tiny_tf has 7 freezable projection sites");
+    let step = s.steps.get("tiny_tf_w8a8_train_lwpn").unwrap();
+    let tcfg =
+        TrainCfg { lr_w: 0.01, ratio_override: Some(0.25), ..TrainCfg::default() };
+    let mut trainer = EfqatTrainer::new(step, params, q, states, Some(Mode::Lwpn), tcfg).unwrap();
+    let flags = trainer.policy.as_ref().unwrap().selection().flags.clone();
+    assert!(flags.iter().any(|&f| f) && flags.iter().any(|&f| !f), "budget must split sites");
+    let names: Vec<String> =
+        trainer.step.manifest.wsites.iter().map(|w| w.name.clone()).collect();
+    let before: Vec<_> = names.iter().map(|n| trainer.params.get(n).unwrap().clone()).collect();
+
+    task.train.reset();
+    let batch = task.train.next_batch().unwrap();
+    trainer.train_step(&batch).unwrap();
+
+    for ((name, before), &flag) in names.iter().zip(&before).zip(&flags) {
+        let after = trainer.params.get(name).unwrap();
+        let changed = before.data != after.data;
+        assert_eq!(changed, flag, "{name}: changed={changed} flag={flag}");
+    }
+    // embeddings never move during EfQAT (fp32, not updated)
+    let emb_before = ParamStore::init(&trainer.step.manifest, 0);
+    assert_eq!(
+        emb_before.get("emb.tok").unwrap().data,
+        trainer.params.get("emb.tok").unwrap().data
+    );
 }
 
 #[test]

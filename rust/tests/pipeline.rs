@@ -78,6 +78,49 @@ fn every_efqat_mode_runs_through_the_native_backend() {
 }
 
 #[test]
+fn convnet_runs_the_full_pipeline_in_every_mode() {
+    // PTQ → CWPL/CWPN/LWPN/QAT/r0, natively, on conv-style WSites
+    let mut cfg = tiny_cfg("convnet");
+    cfg.set("train.lr_w", "0.01");
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+    let session = Session::from_cfg(&cfg).unwrap();
+    ensure_fp_checkpoint(&session, &cfg, "convnet", 2).unwrap();
+    for mode in ["cwpl", "cwpn", "lwpn", "qat", "r0"] {
+        let s = run_efqat_pipeline(&session, &cfg, "convnet", "w8a8", mode, 25)
+            .unwrap_or_else(|e| panic!("convnet/{mode}: {e}"));
+        assert!(s.losses.iter().all(|l| l.is_finite()), "convnet/{mode}: non-finite loss");
+        assert!(!s.losses.is_empty(), "convnet/{mode}: empty epoch");
+        assert!(
+            s.efqat_headline >= s.ptq_headline - 10.0,
+            "convnet/{mode}: EfQAT {} collapsed vs PTQ {}",
+            s.efqat_headline,
+            s.ptq_headline
+        );
+    }
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+}
+
+#[test]
+fn tiny_tf_runs_the_full_pipeline_in_every_mode() {
+    // the paper's transformer shape: embed → attention → MLP block, with
+    // all seven projection sites quantized and freezable
+    let mut cfg = tiny_cfg("tiny_tf");
+    cfg.set("train.lr_w", "0.01");
+    cfg.set("data.train_tokens", "4096");
+    cfg.set("data.test_tokens", "1024");
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+    let session = Session::from_cfg(&cfg).unwrap();
+    ensure_fp_checkpoint(&session, &cfg, "tiny_tf", 2).unwrap();
+    for mode in ["cwpl", "cwpn", "lwpn", "qat", "r0"] {
+        let s = run_efqat_pipeline(&session, &cfg, "tiny_tf", "w8a8", mode, 25)
+            .unwrap_or_else(|e| panic!("tiny_tf/{mode}: {e}"));
+        assert!(s.losses.iter().all(|l| l.is_finite()), "tiny_tf/{mode}: non-finite loss");
+        assert!(!s.losses.is_empty(), "tiny_tf/{mode}: empty epoch");
+    }
+    std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
+}
+
+#[test]
 fn lwpn_pipeline_respects_budget() {
     let cfg = tiny_cfg("lwpn");
     std::fs::remove_dir_all(cfg.str("ckpt_dir", "")).ok();
