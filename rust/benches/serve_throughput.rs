@@ -1,0 +1,174 @@
+//! Serving throughput: the lowered int8 engine vs the fake-quant float
+//! forward — the first *deployed-arithmetic* entry in the perf
+//! trajectory.
+//!
+//! For each native model × batch size we time (a) the float serving
+//! path — the `w8a8` graph forward-to-logits, which fake-quants weights
+//! and activations in f32 on every call — and (b) one
+//! [`efqat::lower::QuantizedGraph`] forward, whose weights were
+//! quantized to i8 once at lowering time and whose GEMMs run
+//! `u8×i8→i32`.  Both sides stop at logits (no loss/metric work), so the
+//! speedup isolates the quantized kernels.  Examples/sec for both,
+//! speedup, and the max per-logit deviation land in
+//! `bench_out/serve_throughput.csv` and `BENCH_serve.json`.
+//!
+//!   cargo bench --bench serve_throughput [-- --full true]
+//!   cargo bench --bench serve_throughput -- --models mlp --iters 50
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use efqat::backend::native::model_graph;
+use efqat::backend::Value;
+use efqat::coordinator::binder::{bind_inputs, BindCtx};
+use efqat::data::Batch;
+use efqat::graph::{GraphStep, InputKind, StepId, StepKind};
+use efqat::harness::{bench, Table};
+use efqat::json::Json;
+use efqat::lower::lower;
+use efqat::model::{ParamStore, QParamStore, StateStore};
+use efqat::quant::ActQParams;
+use efqat::rng::Pcg64;
+use efqat::tensor::{ITensor, Tensor};
+
+fn max_abs_dev(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+fn main() {
+    let cfg = common::bench_config_with(&[("models", "mlp,convnet,tiny_tf")]);
+    let quick = common::is_quick(&cfg);
+    let iters = cfg.usize("iters", if quick { 15 } else { 50 });
+    let models: Vec<String> = cfg.list("models", &["mlp"]);
+    let bits = cfg.str("bits", "w8a8");
+    let (w_bits, a_bits) = efqat::quant::parse_bits_tag(&bits).expect("bits tag");
+    let batches: &[usize] = if quick { &[1, 32] } else { &[1, 8, 32, 128] };
+
+    let mut t = Table::new(
+        &format!("Serving throughput: int8 engine vs fake-quant float fwd, {bits}"),
+        &["model", "batch", "float ex/s", "int8 ex/s", "speedup", "max |Δlogit|"],
+    );
+    let mut report = BTreeMap::new();
+    let mut best_speedup_b32 = 0.0f64;
+    for model in &models {
+        let base = model_graph(model).unwrap_or_else(|| panic!("{model}: not a native model"));
+        let id = StepId { kind: StepKind::Fwd, w_bits, a_bits };
+        let man0 = efqat::graph::build_manifest(&base, &format!("{model}_{bits}_fwd"), &id);
+        let params = ParamStore::init(&man0, 0);
+        let mut q = QParamStore::default();
+        q.init_weight_scales(&man0, &params, w_bits);
+        // mid-grid zero point, valid for any a_bits (128 at a8, 8 at a4)
+        let zp = ((efqat::quant::qrange_asym(a_bits).1 + 1) / 2) as f32;
+        for s in &man0.wsites {
+            q.act.insert(s.name.clone(), ActQParams { scale: 0.05, zero_point: zp });
+        }
+        // lowered once: i8 weights are frozen here, not per call
+        let qg = lower(&base, &params, &q, w_bits, a_bits).unwrap();
+
+        let mut per_batch = BTreeMap::new();
+        for &b in batches {
+            let mut g = base.clone();
+            g.batch = b;
+            let step = GraphStep::new(g, &format!("{model}_{bits}_fwd_b{b}"), id);
+            let mut rng = Pcg64::new(17 + b as u64);
+            // one synthetic batch: x plus zero labels, bound through the
+            // coordinator's real binder (one role-dispatch in the tree)
+            let mut batch = Batch { f32s: BTreeMap::new(), i32s: BTreeMap::new(), count: b };
+            let x = match base.input {
+                InputKind::Image { channels, hw } => {
+                    batch.i32s.insert("y".into(), ITensor::zeros(&[b]));
+                    Value::F32(Tensor {
+                        shape: vec![b, channels, hw, hw],
+                        data: rng.normal_vec(b * channels * hw * hw, 1.0),
+                    })
+                }
+                InputKind::Tokens { seq } => {
+                    batch.i32s.insert("y".into(), ITensor::zeros(&[b, seq]));
+                    Value::I32(ITensor {
+                        shape: vec![b, seq],
+                        data: (0..b * seq).map(|_| rng.below(base.classes) as i32).collect(),
+                    })
+                }
+            };
+            match &x {
+                Value::F32(t) => {
+                    batch.f32s.insert("x".into(), t.clone());
+                }
+                Value::I32(t) => {
+                    batch.i32s.insert("x".into(), t.clone());
+                }
+            }
+            let states = StateStore::init(&step.man);
+            let ctx = BindCtx {
+                params: &params,
+                qparams: Some(&q),
+                states: &states,
+                batch: &batch,
+                selection: None,
+            };
+            let inputs = bind_inputs(&step.man, &ctx).unwrap();
+
+            // parity before timing: the two engines must agree on logits
+            let float_logits = step.forward_logits(&inputs).unwrap();
+            let int8_logits = qg.forward(&x).unwrap();
+            let dev = max_abs_dev(&float_logits.data, &int8_logits.data);
+
+            // both sides run forward-to-logits only (no loss/metrics), so
+            // the speedup is the quantized GEMMs vs the fake-quant f32 path
+            let fs = bench(2, iters, || {
+                step.forward_logits(&inputs).unwrap();
+            });
+            let is = bench(2, iters, || {
+                qg.forward(&x).unwrap();
+            });
+            let f_ex = b as f64 / fs.mean;
+            let i_ex = b as f64 / is.mean;
+            let speedup = fs.mean / is.mean;
+            if b >= 32 {
+                best_speedup_b32 = best_speedup_b32.max(speedup);
+            }
+            t.row(&[
+                model.clone(),
+                b.to_string(),
+                format!("{f_ex:.0}"),
+                format!("{i_ex:.0}"),
+                format!("{speedup:.2}x"),
+                format!("{dev:.2e}"),
+            ]);
+            let entry: BTreeMap<String, Json> = [
+                ("float_ex_per_s".to_string(), Json::Num(f_ex)),
+                ("int8_ex_per_s".to_string(), Json::Num(i_ex)),
+                ("speedup".to_string(), Json::Num(speedup)),
+                ("max_logit_dev".to_string(), Json::Num(dev)),
+            ]
+            .into_iter()
+            .collect();
+            per_batch.insert(format!("b{b}"), Json::Obj(entry));
+            assert!(
+                dev <= 1e-3,
+                "{model} b{b}: int8 logits deviate {dev} from the float reference"
+            );
+        }
+        report.insert(model.clone(), Json::Obj(per_batch));
+    }
+    t.print();
+    t.write_csv(std::path::Path::new("bench_out/serve_throughput.csv")).unwrap();
+
+    let doc: BTreeMap<String, Json> = [
+        ("bench".to_string(), Json::Str("serve_throughput".to_string())),
+        ("bits".to_string(), Json::Str(bits.clone())),
+        ("iters".to_string(), Json::Num(iters as f64)),
+        ("batches".to_string(), Json::Arr(batches.iter().map(|&b| Json::Num(b as f64)).collect())),
+        ("models".to_string(), Json::Obj(report)),
+        ("best_speedup_at_batch_ge_32".to_string(), Json::Num(best_speedup_b32)),
+    ]
+    .into_iter()
+    .collect();
+    std::fs::write("BENCH_serve.json", Json::Obj(doc).render()).unwrap();
+    println!("\nwrote BENCH_serve.json (int8 vs float forward examples/sec per batch size)");
+    println!(
+        "north-star check: best int8 speedup at batch ≥ 32 is {best_speedup_b32:.2}x \
+         (target ≥ 1.5x on at least one model)"
+    );
+}

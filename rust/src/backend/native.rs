@@ -137,7 +137,7 @@ fn parse_artifact(name: &str) -> Result<(&'static NativeModel, StepId)> {
     let mut best: Option<(&'static NativeModel, &str)> = None;
     for m in NATIVE_MODELS {
         if let Some(rest) = name.strip_prefix(m.name).and_then(|r| r.strip_prefix('_')) {
-            if best.map_or(true, |(b, _)| m.name.len() > b.name.len()) {
+            if !best.is_some_and(|(b, _)| b.name.len() >= m.name.len()) {
                 best = Some((m, rest));
             }
         }

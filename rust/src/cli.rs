@@ -3,7 +3,9 @@
 //! Grammar: `efqat <subcommand> [--key value | --flag] ...`
 //! All `--key value` pairs are collected and overlaid onto the experiment
 //! [`crate::cfg::Config`], so any config key can be overridden from the
-//! command line.
+//! command line — including the execution selectors (`--backend
+//! native|pjrt`, `--exec fakequant|int8`) and serving knobs like
+//! `--serve.batch`, which need no parser support of their own.
 
 use std::collections::BTreeMap;
 
@@ -32,7 +34,7 @@ impl Args {
                     a.options.insert(k.to_string(), v.to_string());
                 } else if KNOWN_FLAGS.contains(&key) {
                     a.flags.push(key.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     a.options.insert(key.to_string(), it.next().unwrap().clone());
                 } else {
                     a.flags.push(key.to_string());

@@ -1,10 +1,15 @@
 //! Evaluation: accuracy (CNNs), span exact-match + token-F1 (QA),
-//! loss/perplexity (LM) — the metrics of the paper's Tables 3/4.
+//! loss/perplexity (LM) — the metrics of the paper's Tables 3/4, over
+//! either the fake-quant float reference ([`evaluate`]) or the lowered
+//! int8 serving engine ([`evaluate_int8`]).
 
-use crate::backend::Step;
+use crate::backend::{Step, Value};
 use crate::data::{squad::span_f1, Batch, Loader};
-use crate::error::Result;
+use crate::error::{anyhow, Result};
+use crate::graph::InputKind;
+use crate::lower::QuantizedGraph;
 use crate::model::{ParamStore, QParamStore, StateStore};
+use crate::ops::loss::softmax_xent;
 use crate::tensor::argmax;
 
 use super::binder::{bind_inputs, BindCtx};
@@ -64,6 +69,45 @@ pub fn evaluate(
         loss: (loss_sum / batches.max(1) as f64) as f32,
         accuracy: correct as f32 / n.max(1) as f32,
         f1: if is_qa { Some((f1_sum / n.max(1) as f64 * 100.0) as f32) } else { None },
+        n,
+    })
+}
+
+/// Run the lowered int8 engine over the loader — the *deployed*
+/// arithmetic, not the fake-quant simulation.  Scoring and the padded
+/// final-batch handling mirror [`evaluate`] exactly, so the two paths'
+/// metrics are directly comparable (the parity tests assert identical
+/// accuracy); loss is recomputed host-side from the int8 logits with the
+/// same mean softmax cross-entropy the fwd artifacts emit.
+pub fn evaluate_int8(qg: &QuantizedGraph, loader: &mut Loader) -> Result<EvalResult> {
+    loader.reset();
+    let (mut loss_sum, mut correct, mut n) = (0f64, 0usize, 0usize);
+    let mut batches = 0usize;
+    while let Some(mut batch) = loader.next_batch() {
+        // move x out of the owned batch — no copy; only the labels are
+        // read afterwards
+        let x = match qg.input {
+            InputKind::Image { .. } => Value::F32(
+                batch.f32s.remove("x").ok_or_else(|| anyhow!("batch missing f32 \"x\""))?,
+            ),
+            InputKind::Tokens { .. } => Value::I32(
+                batch.i32s.remove("x").ok_or_else(|| anyhow!("batch missing i32 \"x\""))?,
+            ),
+        };
+        let logits = qg.forward_owned(x)?;
+        let labels = &batch.i32s.get("y").ok_or_else(|| anyhow!("batch missing labels \"y\""))?.data;
+        let rows = logits.data.len() / qg.classes;
+        let (loss, _rows_ok, _dl) = softmax_xent(&logits.data, labels, rows, qg.classes)
+            .map_err(|e| anyhow!("{} int8 eval: {e}", qg.model))?;
+        loss_sum += loss as f64; // padded rows repeat real rows, like the float path
+        batches += 1;
+        correct += score_top1(&logits, &batch);
+        n += batch.count;
+    }
+    Ok(EvalResult {
+        loss: (loss_sum / batches.max(1) as f64) as f32,
+        accuracy: correct as f32 / n.max(1) as f32,
+        f1: None,
         n,
     })
 }

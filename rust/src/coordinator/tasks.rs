@@ -85,6 +85,16 @@ pub fn build_task(model: &str, batch_size: usize, cfg: &Config) -> Result<Task> 
     })
 }
 
+/// Inference-only entry point: just the test split at an arbitrary
+/// serving batch size.  The int8 eval path (`efqat eval --exec int8`)
+/// goes through here — unlike training, serving is not bound to the
+/// batch the manifests bake in.  (Implemented over [`build_task`]: the
+/// discarded train/calib splits cost microseconds at repro scale; grow a
+/// split-selective builder if a real dataset ever lands.)
+pub fn test_loader(model: &str, batch_size: usize, cfg: &Config) -> Result<Loader> {
+    Ok(build_task(model, batch_size, cfg)?.test)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +134,14 @@ mod tests {
     #[test]
     fn unknown_model_rejected() {
         assert!(build_task("nope", 8, &Config::empty()).is_err());
+    }
+
+    #[test]
+    fn test_loader_honors_serving_batch_sizes() {
+        for bs in [1usize, 32] {
+            let mut l = test_loader("mlp", bs, &Config::empty()).unwrap();
+            let b = l.next_batch().unwrap();
+            assert_eq!(b.f32s["x"].shape[0], bs);
+        }
     }
 }

@@ -21,6 +21,11 @@
 //! quantizer backward — and every layer type inherits it: a linear's
 //! rows, a conv's output channels (matmul rows after im2col), and each
 //! attention projection all flow through the same code path.
+//!
+//! Training-time execution here *simulates* quantization (fake-quant in
+//! f32); the declaration is also the input of the int8 serving lowering
+//! ([`crate::lower::lower`]), which compiles the same `Vec<Layer>` into
+//! a [`crate::lower::QuantizedGraph`] of true integer kernels.
 
 use std::collections::BTreeMap;
 
@@ -197,7 +202,11 @@ fn lin_params(l: &LinearSpec, out: &mut Vec<ParamInfo>) {
     }
 }
 
-fn attn_projections(a: &AttnSpec) -> Vec<LinearSpec> {
+/// The four quantized-linear projection sites of one attention block, in
+/// execution order (`q`, `k`, `v`, `o`).  Public because the int8
+/// lowering pass ([`crate::lower`]) must enumerate exactly the same
+/// sites with exactly the same names as the float executor.
+pub fn attn_projections(a: &AttnSpec) -> Vec<LinearSpec> {
     ["q", "k", "v", "o"]
         .iter()
         .map(|p| LinearSpec {
@@ -580,6 +589,18 @@ impl GraphStep {
     pub fn new(graph: LayerGraph, artifact: &str, id: StepId) -> GraphStep {
         let man = build_manifest(&graph, artifact, &id);
         GraphStep { graph, id, man }
+    }
+
+    /// Forward to logits only — no loss, metric, or `dlogits` work.
+    /// The serving bench times this against the int8 engine
+    /// ([`crate::lower::QuantizedGraph::forward`]) so both sides do the
+    /// same job; residual-cache building remains, as it is intrinsic to
+    /// this executor.
+    pub fn forward_logits(&self, inputs: &[Value]) -> Result<Tensor> {
+        let vals = Vals::new(&self.man, inputs);
+        let mut run = Run { step: self, vals: &vals, taps: None };
+        let (logits, _caches) = run.forward()?;
+        Ok(logits)
     }
 
     /// Execute on inputs packed in manifest order; outputs come back in

@@ -17,7 +17,14 @@
 //! * [`ops`] is the shared kernel library the graph executes through:
 //!   cache-blocked threaded matmul, im2col conv2d, layernorm, attention,
 //!   softmax cross-entropy and the Eq. 1–4 fake-quant ops with STE/LSQ
-//!   gradients, each mirroring `python/compile/kernels/ref.py`.
+//!   gradients, each mirroring `python/compile/kernels/ref.py` — plus
+//!   the `u8×i8→i32` serving kernels ([`ops::qmatmul`], [`ops::qconv`]).
+//! * [`lower`] is the float-train → int8-serve boundary: it compiles a
+//!   trained graph + calibrated qparams into a [`lower::QuantizedGraph`]
+//!   of true integer kernels (weights frozen to per-channel i8 once,
+//!   activations quantized at layer boundaries) for forward-only batched
+//!   inference — the deployed arithmetic `--exec int8` evaluates and
+//!   `benches/serve_throughput.rs` measures.
 //! * [`bundle`] defines the schema-versioned artifact bundle manifest
 //!   (`manifest.json`, RFC `docs/rfcs/0001-artifact-manifest.md`) with
 //!   per-file SHA-256 checksums, so stale or corrupt artifacts fail
@@ -48,6 +55,7 @@ pub mod freeze;
 pub mod graph;
 pub mod harness;
 pub mod json;
+pub mod lower;
 pub mod model;
 pub mod ops;
 pub mod optim;

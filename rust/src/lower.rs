@@ -1,0 +1,572 @@
+//! Float-train → int8-serve lowering: compile a trained/calibrated
+//! [`crate::graph::LayerGraph`] + its [`crate::model::QParamStore`] into
+//! a [`QuantizedGraph`] of true integer kernels.
+//!
+//! Training simulates quantization (fake-quant in f32, so gradients
+//! exist); deployment should *execute* it.  [`lower`] freezes that
+//! boundary:
+//!
+//! * every weight site is quantized **once** to per-channel `i8` codes
+//!   (Eq. 3/4), with the per-channel code sums precomputed for the
+//!   zero-point correction;
+//! * activations are quantized to `u8` codes at each site boundary
+//!   (Eq. 1/2) and the site's GEMM/conv runs `u8×i8→i32` with a
+//!   per-channel `S_x·S_w[o]` rescale back to f32
+//!   ([`crate::ops::qmatmul`], [`crate::ops::qconv`]);
+//! * everything between sites (ReLU, pooling, LayerNorm, softmax
+//!   attention core, residual adds, embeddings) stays f32 — exactly the
+//!   arithmetic the fake-quant simulation trains against, so the lowered
+//!   engine reproduces the float reference's logits to ≤ 1e-3 and its
+//!   eval accuracy bit-for-bit (`tests/int8_parity.rs`).
+//!
+//! The executor is forward-only and *batch-flexible*: unlike the
+//! training artifacts (whose manifests bake in a static batch), a
+//! [`QuantizedGraph`] serves any leading batch dimension — that is what
+//! `benches/serve_throughput.rs` sweeps.
+
+use crate::backend::Value;
+use crate::error::{anyhow, bail, Result};
+use crate::graph::{attn_projections, InputKind, Layer, LayerGraph, LinearSpec};
+use crate::model::{ParamStore, QParamStore};
+use crate::ops::attention::{sdpa_fwd, AttnDims};
+use crate::ops::conv::{avgpool2_fwd, ConvDims};
+use crate::ops::elementwise::{embed_fwd, relu_fwd};
+use crate::ops::norm::layernorm_fwd;
+use crate::ops::qconv::qconv_fwd;
+use crate::ops::qmatmul::{qlinear_fwd, quantize_acts, quantize_weight_rows};
+use crate::quant::qrange_asym;
+use crate::tensor::{ITensor, Tensor};
+
+/// i32 accumulation is exact for contractions up to 2³¹/(255·127); stay
+/// well inside it.
+const MAX_CONTRACTION: usize = 60_000;
+
+// ---------------------------------------------------------------------------
+// Lowered layers
+// ---------------------------------------------------------------------------
+
+/// One lowered quantized-linear site: weights frozen to i8 codes, the
+/// activation quantizer's `(S_x, Z_x)` baked in, rescale per channel.
+pub struct QLinearSite {
+    /// Site name (`{layer}.w`), kept for diagnostics.
+    pub name: String,
+    c_in: usize,
+    c_out: usize,
+    qw: Vec<i8>,
+    /// Per-channel `Σ_i qw[o,i]` — the zero-point correction term.
+    wsum: Vec<i32>,
+    /// Per-channel dequantization scale `S_x·S_w[o]`.
+    scale: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    sx: f32,
+    /// Rounded activation zero-point code, validated into `[0, 2^a−1]`.
+    zx: i32,
+    a_bits: u32,
+}
+
+impl QLinearSite {
+    /// Quantize the f32 input to codes and run the integer GEMM.
+    /// `x` is `[rows, c_in]` flattened; returns `[rows, c_out]`.
+    fn fwd(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let qx = quantize_acts(x, self.sx, self.zx as f32, self.a_bits);
+        qlinear_fwd(
+            &qx,
+            &self.qw,
+            &self.wsum,
+            self.zx,
+            &self.scale,
+            self.bias.as_deref(),
+            rows,
+            self.c_in,
+            self.c_out,
+        )
+    }
+}
+
+enum QLayer {
+    Flatten,
+    Linear(QLinearSite),
+    Conv { site: QLinearSite, c_in: usize, k: usize, stride: usize, pad: usize },
+    Relu,
+    AvgPool2x2,
+    LayerNorm { g: Vec<f32>, b: Vec<f32>, d: usize },
+    Embed { tok: Vec<f32>, pos: Vec<f32>, vocab: usize, seq: usize, d: usize },
+    Attention { proj: Vec<QLinearSite>, heads: usize, causal: bool, d: usize },
+    Residual(Vec<QLayer>),
+}
+
+/// A lowered, forward-only integer inference graph.
+pub struct QuantizedGraph {
+    pub model: String,
+    pub input: InputKind,
+    /// Trailing logits dimension (classes or vocab).
+    pub classes: usize,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    layers: Vec<QLayer>,
+}
+
+// ---------------------------------------------------------------------------
+// The lowering pass
+// ---------------------------------------------------------------------------
+
+/// Lower a graph + calibrated qparams to an int8 inference engine.
+/// Fails with a descriptive error on missing/invalid qparams, widths the
+/// i8/u8 code domain cannot hold, or contractions too large for exact
+/// i32 accumulation — never at serve time.
+pub fn lower(
+    g: &LayerGraph,
+    params: &ParamStore,
+    qparams: &QParamStore,
+    w_bits: u32,
+    a_bits: u32,
+) -> Result<QuantizedGraph> {
+    if !(2..=8).contains(&w_bits) || !(2..=8).contains(&a_bits) {
+        bail!(
+            "lower({}): w{w_bits}a{a_bits} does not fit the i8/u8 code domain \
+             (the int8 engine serves 2..=8-bit grids)",
+            g.model
+        );
+    }
+    let cx = LowerCtx { model: &g.model, params, qparams, w_bits, a_bits };
+    Ok(QuantizedGraph {
+        model: g.model.clone(),
+        input: g.input,
+        classes: g.classes,
+        w_bits,
+        a_bits,
+        layers: cx.lower_seq(&g.layers)?,
+    })
+}
+
+/// Convenience: lower a named native model
+/// ([`crate::backend::native::NATIVE_MODELS`]).
+pub fn lower_native(
+    model: &str,
+    params: &ParamStore,
+    qparams: &QParamStore,
+    w_bits: u32,
+    a_bits: u32,
+) -> Result<QuantizedGraph> {
+    let g = crate::backend::native::model_graph(model).ok_or_else(|| {
+        anyhow!(
+            "model {model:?} has no native graph declaration — the int8 engine lowers \
+             native models only (the PJRT artifacts serve through XLA)"
+        )
+    })?;
+    lower(&g, params, qparams, w_bits, a_bits)
+}
+
+struct LowerCtx<'a> {
+    model: &'a str,
+    params: &'a ParamStore,
+    qparams: &'a QParamStore,
+    w_bits: u32,
+    a_bits: u32,
+}
+
+impl LowerCtx<'_> {
+    fn lower_seq(&self, layers: &[Layer]) -> Result<Vec<QLayer>> {
+        layers.iter().map(|l| self.lower_layer(l)).collect()
+    }
+
+    fn lower_layer(&self, layer: &Layer) -> Result<QLayer> {
+        Ok(match layer {
+            Layer::Flatten => QLayer::Flatten,
+            Layer::Relu => QLayer::Relu,
+            Layer::AvgPool2x2 => QLayer::AvgPool2x2,
+            Layer::Linear(spec) => QLayer::Linear(self.lower_site(spec)?),
+            Layer::Conv2d(spec) => {
+                let patch = spec.c_in * spec.k * spec.k;
+                let site = self.lower_raw_site(
+                    &format!("{}.w", spec.name),
+                    patch,
+                    spec.c_out,
+                    None,
+                )?;
+                QLayer::Conv {
+                    site,
+                    c_in: spec.c_in,
+                    k: spec.k,
+                    stride: spec.stride,
+                    pad: spec.pad,
+                }
+            }
+            Layer::LayerNorm(spec) => QLayer::LayerNorm {
+                g: self.param(&format!("{}.g", spec.name), spec.d)?,
+                b: self.param(&format!("{}.b", spec.name), spec.d)?,
+                d: spec.d,
+            },
+            Layer::Embed(spec) => QLayer::Embed {
+                tok: self.param(&format!("{}.tok", spec.name), spec.vocab * spec.d)?,
+                pos: self.param(&format!("{}.pos", spec.name), spec.seq * spec.d)?,
+                vocab: spec.vocab,
+                seq: spec.seq,
+                d: spec.d,
+            },
+            Layer::Attention(spec) => {
+                let proj = attn_projections(spec)
+                    .iter()
+                    .map(|p| self.lower_site(p))
+                    .collect::<Result<Vec<_>>>()?;
+                QLayer::Attention { proj, heads: spec.heads, causal: spec.causal, d: spec.d }
+            }
+            Layer::Residual(inner) => QLayer::Residual(self.lower_seq(inner)?),
+        })
+    }
+
+    fn param(&self, name: &str, want: usize) -> Result<Vec<f32>> {
+        let t = self.params.get(name)?;
+        if t.data.len() != want {
+            bail!("lower({}): param {name:?} has {} elems, graph wants {want}", self.model, t.data.len());
+        }
+        Ok(t.data.clone())
+    }
+
+    fn lower_site(&self, spec: &LinearSpec) -> Result<QLinearSite> {
+        let bias = if spec.bias {
+            Some(self.param(&format!("{}.b", spec.name), spec.c_out)?)
+        } else {
+            None
+        };
+        self.lower_raw_site(&format!("{}.w", spec.name), spec.c_in, spec.c_out, bias)
+    }
+
+    /// Quantize one weight site's rows to i8 once and bake its activation
+    /// quantizer in — shared by linear, conv (rows are im2col patches),
+    /// and the four attention projections.
+    fn lower_raw_site(
+        &self,
+        site: &str,
+        row_size: usize,
+        c_out: usize,
+        bias: Option<Vec<f32>>,
+    ) -> Result<QLinearSite> {
+        if row_size > MAX_CONTRACTION {
+            bail!(
+                "lower({}): site {site:?} contracts over {row_size} elements — too large \
+                 for exact i32 accumulation (max {MAX_CONTRACTION})",
+                self.model
+            );
+        }
+        let w = self.params.get(site)?;
+        if w.data.len() != c_out * row_size {
+            bail!("lower({}): weight {site:?} has {} elems, want {c_out}×{row_size}", self.model, w.data.len());
+        }
+        let sw = self
+            .qparams
+            .sw
+            .get(site)
+            .ok_or_else(|| anyhow!("lower({}): no weight scales for site {site:?} — calibrate or load a quantized checkpoint", self.model))?;
+        if sw.data.len() != c_out {
+            bail!("lower({}): site {site:?} has {} weight scales, want {c_out}", self.model, sw.data.len());
+        }
+        if sw.data.iter().any(|&s| s <= 0.0 || !s.is_finite()) {
+            bail!("lower({}): non-positive weight scale for site {site:?}", self.model);
+        }
+        let act = self
+            .qparams
+            .act
+            .get(site)
+            .ok_or_else(|| anyhow!("lower({}): no activation qparams for site {site:?}", self.model))?;
+        if act.scale <= 0.0 || !act.scale.is_finite() {
+            bail!("lower({}): non-positive activation scale for site {site:?}", self.model);
+        }
+        let (_, qmax) = qrange_asym(self.a_bits);
+        let zx = act.zero_point.round();
+        if !(0.0..=qmax as f32).contains(&zx) {
+            bail!(
+                "lower({}): site {site:?} zero point {zx} escapes [0, {qmax}] — the float \
+                 reference pads with an exact zero code the u8 grid cannot represent",
+                self.model
+            );
+        }
+        let (qw, wsum) = quantize_weight_rows(&w.data, &sw.data, row_size, self.w_bits);
+        let scale: Vec<f32> = sw.data.iter().map(|&s| s * act.scale).collect();
+        Ok(QLinearSite {
+            name: site.to_string(),
+            c_in: row_size,
+            c_out,
+            qw,
+            wsum,
+            scale,
+            bias,
+            sx: act.scale,
+            zx: zx as i32,
+            a_bits: self.a_bits,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward execution
+// ---------------------------------------------------------------------------
+
+enum Act {
+    F(Tensor),
+    I(ITensor),
+}
+
+fn act_f32(model: &str, act: Act) -> Result<Tensor> {
+    match act {
+        Act::F(t) => Ok(t),
+        Act::I(_) => bail!("{model} int8 forward: layer expected an f32 activation, got i32"),
+    }
+}
+
+impl QuantizedGraph {
+    /// Count of frozen i8 weight codes — what a deployment would ship.
+    pub fn quantized_weights(&self) -> usize {
+        fn count(layers: &[QLayer]) -> usize {
+            layers
+                .iter()
+                .map(|l| match l {
+                    QLayer::Linear(s) | QLayer::Conv { site: s, .. } => s.qw.len(),
+                    QLayer::Attention { proj, .. } => proj.iter().map(|s| s.qw.len()).sum(),
+                    QLayer::Residual(inner) => count(inner),
+                    _ => 0,
+                })
+                .sum()
+        }
+        count(&self.layers)
+    }
+
+    /// Batched forward to logits — borrowing wrapper over
+    /// [`Self::forward_owned`] (pays one input copy, symmetric with the
+    /// float executor, which also clones its input into the first
+    /// activation).
+    pub fn forward(&self, x: &Value) -> Result<Tensor> {
+        self.forward_owned(x.clone())
+    }
+
+    /// Zero-copy forward: consumes the input value — the serving eval
+    /// hot path ([`crate::coordinator::eval::evaluate_int8`]) moves the
+    /// batch tensor straight in.  `x` is f32 images `[B, C, H, H]` or
+    /// i32 token ids `[B, T]` per the graph's [`InputKind`]; any batch
+    /// size is accepted (serving is not bound to the training batch).
+    pub fn forward_owned(&self, x: Value) -> Result<Tensor> {
+        let x0 = match (self.input, x) {
+            (InputKind::Image { channels, hw }, Value::F32(t)) => {
+                if t.shape.len() != 4 || t.shape[1] != channels || t.shape[2] != hw || t.shape[3] != hw {
+                    bail!(
+                        "{} int8 forward: want images [B, {channels}, {hw}, {hw}], got {:?}",
+                        self.model,
+                        t.shape
+                    );
+                }
+                Act::F(t)
+            }
+            (InputKind::Tokens { seq }, Value::I32(t)) => {
+                if t.shape.len() != 2 || t.shape[1] != seq {
+                    bail!("{} int8 forward: want token ids [B, {seq}], got {:?}", self.model, t.shape);
+                }
+                Act::I(t)
+            }
+            _ => bail!("{} int8 forward: input dtype does not match the graph's input kind", self.model),
+        };
+        let out = self.forward_seq(&self.layers, x0)?;
+        act_f32(&self.model, out)
+    }
+
+    fn forward_seq(&self, layers: &[QLayer], mut act: Act) -> Result<Act> {
+        for layer in layers {
+            act = self.forward_layer(layer, act)?;
+        }
+        Ok(act)
+    }
+
+    fn forward_layer(&self, layer: &QLayer, act: Act) -> Result<Act> {
+        Ok(match layer {
+            QLayer::Flatten => {
+                let x = act_f32(&self.model, act)?;
+                let b = x.shape.first().copied().unwrap_or(1);
+                let rest: usize = x.shape[1..].iter().product();
+                Act::F(Tensor { shape: vec![b, rest], data: x.data })
+            }
+            QLayer::Linear(site) => {
+                let x = act_f32(&self.model, act)?;
+                if x.shape.last() != Some(&site.c_in) {
+                    bail!(
+                        "{} int8 forward: site {:?} wants {} input features, activation is {:?}",
+                        self.model,
+                        site.name,
+                        site.c_in,
+                        x.shape
+                    );
+                }
+                let rows = x.data.len() / site.c_in;
+                let y = site.fwd(&x.data, rows);
+                let mut shape = x.shape;
+                *shape.last_mut().unwrap() = site.c_out;
+                Act::F(Tensor { shape, data: y })
+            }
+            QLayer::Conv { site, c_in, k, stride, pad } => {
+                let x = act_f32(&self.model, act)?;
+                if x.shape.len() != 4 || x.shape[1] != *c_in || x.shape[2] != x.shape[3] {
+                    bail!(
+                        "{} int8 forward: conv {:?} wants [B, {c_in}, H, H], activation is {:?}",
+                        self.model,
+                        site.name,
+                        x.shape
+                    );
+                }
+                let dims = ConvDims {
+                    batch: x.shape[0],
+                    c_in: *c_in,
+                    hw: x.shape[2],
+                    c_out: site.c_out,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                };
+                let qx = quantize_acts(&x.data, site.sx, site.zx as f32, site.a_bits);
+                let y = qconv_fwd(&qx, &site.qw, &site.wsum, site.zx, &site.scale, &dims);
+                let ho = dims.hw_out();
+                Act::F(Tensor { shape: vec![dims.batch, site.c_out, ho, ho], data: y })
+            }
+            QLayer::Relu => {
+                let x = act_f32(&self.model, act)?;
+                Act::F(Tensor { shape: x.shape, data: relu_fwd(&x.data) })
+            }
+            QLayer::AvgPool2x2 => {
+                let x = act_f32(&self.model, act)?;
+                if x.shape.len() != 4 || x.shape[2] % 2 != 0 || x.shape[2] != x.shape[3] {
+                    bail!("{} int8 forward: avgpool wants [B, C, 2n, 2n], got {:?}", self.model, x.shape);
+                }
+                let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2]);
+                let y = avgpool2_fwd(&x.data, b, c, hw);
+                Act::F(Tensor { shape: vec![b, c, hw / 2, hw / 2], data: y })
+            }
+            QLayer::LayerNorm { g, b, d } => {
+                let x = act_f32(&self.model, act)?;
+                if x.shape.last() != Some(d) {
+                    bail!("{} int8 forward: layernorm wants {d} features, got {:?}", self.model, x.shape);
+                }
+                let rows = x.data.len() / d;
+                // layernorm_fwd also returns backward-only caches (x̂, 1/σ),
+                // dropped here; a fwd-only variant is a future serving win
+                // that would benefit the float forward path equally
+                let (y, _xhat, _inv) = layernorm_fwd(&x.data, g, b, rows, *d);
+                Act::F(Tensor { shape: x.shape, data: y })
+            }
+            QLayer::Embed { tok, pos, vocab, seq, d } => {
+                let ids = match act {
+                    Act::I(t) => t,
+                    Act::F(_) => bail!("{} int8 forward: embedding expects i32 token ids", self.model),
+                };
+                for &id in &ids.data {
+                    if id < 0 || id as usize >= *vocab {
+                        bail!("{} int8 forward: token id {id} out of range [0, {vocab})", self.model);
+                    }
+                }
+                let y = embed_fwd(tok, pos, &ids.data, *seq, *d);
+                let b = ids.data.len() / seq;
+                Act::F(Tensor { shape: vec![b, *seq, *d], data: y })
+            }
+            QLayer::Attention { proj, heads, causal, d } => {
+                let x = act_f32(&self.model, act)?;
+                if x.shape.len() != 3 || x.shape[2] != *d {
+                    bail!("{} int8 forward: attention wants [B, T, {d}], got {:?}", self.model, x.shape);
+                }
+                let rows = x.data.len() / d;
+                let qy = proj[0].fwd(&x.data, rows);
+                let ky = proj[1].fwd(&x.data, rows);
+                let vy = proj[2].fwd(&x.data, rows);
+                let dm = AttnDims { batch: x.shape[0], t: x.shape[1], d: *d, heads: *heads };
+                // sdpa_fwd materializes the [B·H, T, T] probs cache for the
+                // training backward; dropped here — same deal as layernorm
+                let (om, _p) = sdpa_fwd(&qy, &ky, &vy, &dm, *causal);
+                let out = proj[3].fwd(&om, rows);
+                Act::F(Tensor { shape: x.shape, data: out })
+            }
+            QLayer::Residual(inner) => {
+                let x = act_f32(&self.model, act)?;
+                let y = act_f32(&self.model, self.forward_seq(inner, Act::F(x.clone()))?)?;
+                if y.shape != x.shape {
+                    bail!(
+                        "{} int8 forward: residual sub-graph changed shape {:?} -> {:?}",
+                        self.model,
+                        x.shape,
+                        y.shape
+                    );
+                }
+                let data = x.data.iter().zip(&y.data).map(|(a, b)| a + b).collect();
+                Act::F(Tensor { shape: x.shape, data })
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::model_graph;
+    use crate::graph::{build_manifest, StepId, StepKind};
+    use crate::quant::ActQParams;
+
+    fn fixture(model: &str) -> (LayerGraph, ParamStore, QParamStore) {
+        let g = model_graph(model).unwrap();
+        let man = build_manifest(&g, "fwd", &StepId { kind: StepKind::Fwd, w_bits: 8, a_bits: 8 });
+        let params = ParamStore::init(&man, 1);
+        let mut q = QParamStore::default();
+        q.init_weight_scales(&man, &params, 8);
+        for s in &man.wsites {
+            q.act.insert(s.name.clone(), ActQParams { scale: 0.05, zero_point: 128.0 });
+        }
+        (g, params, q)
+    }
+
+    #[test]
+    fn lowers_every_native_model() {
+        for model in ["mlp", "mlp_wide", "convnet", "tiny_tf"] {
+            let (g, params, q) = fixture(model);
+            let qg = lower(&g, &params, &q, 8, 8).unwrap_or_else(|e| panic!("{model}: {e}"));
+            assert!(qg.quantized_weights() > 0, "{model}");
+            assert_eq!(qg.classes, g.classes);
+        }
+    }
+
+    #[test]
+    fn rejects_wide_grids_and_missing_qparams() {
+        let (g, params, q) = fixture("mlp");
+        let err = lower(&g, &params, &q, 16, 8).unwrap_err().to_string();
+        assert!(err.contains("i8/u8 code domain"), "{err}");
+        let err = lower(&g, &params, &QParamStore::default(), 8, 8).unwrap_err().to_string();
+        assert!(err.contains("weight scales"), "{err}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_zero_point() {
+        let (g, params, mut q) = fixture("mlp");
+        q.act.insert("fc1.w".into(), ActQParams { scale: 0.05, zero_point: 300.0 });
+        let err = lower(&g, &params, &q, 8, 8).unwrap_err().to_string();
+        assert!(err.contains("zero point"), "{err}");
+    }
+
+    #[test]
+    fn forward_accepts_any_batch_size() {
+        let (g, params, q) = fixture("mlp");
+        let qg = lower(&g, &params, &q, 8, 8).unwrap();
+        for b in [1usize, 3, 32] {
+            let x = Value::F32(Tensor::zeros(&[b, 3, 8, 8]));
+            let y = qg.forward(&x).unwrap();
+            assert_eq!(y.shape, vec![b, 10]);
+        }
+        // wrong geometry is a descriptive error
+        let err = qg.forward(&Value::F32(Tensor::zeros(&[2, 3, 16, 16]))).unwrap_err().to_string();
+        assert!(err.contains("images"), "{err}");
+    }
+
+    #[test]
+    fn token_graph_validates_ids_and_seq() {
+        let (g, params, q) = fixture("tiny_tf");
+        let qg = lower(&g, &params, &q, 8, 8).unwrap();
+        let y = qg.forward(&Value::I32(ITensor::zeros(&[2, 16]))).unwrap();
+        assert_eq!(y.shape, vec![2, 16, 64]);
+        let err = qg.forward(&Value::I32(ITensor::zeros(&[2, 8]))).unwrap_err().to_string();
+        assert!(err.contains("token ids"), "{err}");
+        let bad = ITensor { shape: vec![1, 16], data: vec![99; 16] };
+        let err = qg.forward(&Value::I32(bad)).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+}

@@ -5,7 +5,10 @@
 //!   ptq       MinMax post-training quantization + eval (paper Table 3 "PTQ")
 //!   train     full pipeline: FP ckpt → PTQ → one EfQAT epoch → eval
 //!             (--mode cwpl|cwpn|lwpn|qat|r0, --ratio %, --train.freq f)
-//!   eval      evaluate a saved checkpoint (fp or quantized)
+//!   eval      evaluate a saved checkpoint (fp or quantized);
+//!             `--exec int8` lowers the graph to the integer engine and
+//!             reports accuracy on the *deployed* arithmetic
+//!             (`--serve.batch N` picks the serving batch size)
 //!   bundle    write the schema-versioned artifacts/manifest.json inventory
 //!   info      list artifacts, their manifests, and bundle integrity
 //!
@@ -26,9 +29,10 @@ use efqat::cli::Args;
 use efqat::coordinator::pipeline::{
     artifacts_dir, fwd_artifact_name_of, load_quant_checkpoint, run_efqat_pipeline, run_pretrain,
 };
-use efqat::coordinator::tasks::build_task;
-use efqat::coordinator::{evaluate, Session};
+use efqat::coordinator::tasks::{build_task, test_loader};
+use efqat::coordinator::{evaluate, evaluate_int8, Session};
 use efqat::error::{bail, Context, Result};
+use efqat::lower::lower_native;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -45,7 +49,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "usage: efqat <pretrain|ptq|train|eval|bundle|info> --model <m> \
-         [--backend native|pjrt] [--bits w8a8] \
+         [--backend native|pjrt] [--bits w8a8] [--exec fakequant|int8] \
          [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--config file.toml] [--key value ...]"
     );
 }
@@ -113,20 +117,48 @@ fn cmd_eval(cfg: &Config) -> Result<()> {
     let model = cfg.req_str("model")?;
     let bits = cfg.str("bits", "fp");
     let ckpt = cfg.req_str("ckpt")?;
-    let session = Session::from_cfg(cfg)?;
-    let (params, states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
-    let fwd = session.steps.get(&fwd_artifact_name_of(&model, &bits))?;
-    let mut task = build_task(&model, fwd.manifest.batch_size, cfg)?;
-    let qopt = if bits == "fp" { None } else { Some(&q) };
-    let result = evaluate(&fwd, &params, qopt, &states, &mut task.test)?;
-    println!(
-        "[eval] {model} {bits}: loss {:.4} acc {:.4} headline {:.2} (n={})",
-        result.loss,
-        result.accuracy,
-        result.headline(),
-        result.n
-    );
-    Ok(())
+    let exec = cfg.str("exec", "fakequant");
+    match exec.as_str() {
+        "fakequant" | "float" => {
+            let session = Session::from_cfg(cfg)?;
+            let (params, states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
+            let fwd = session.steps.get(&fwd_artifact_name_of(&model, &bits))?;
+            let mut task = build_task(&model, fwd.manifest.batch_size, cfg)?;
+            let qopt = if bits == "fp" { None } else { Some(&q) };
+            let result = evaluate(&fwd, &params, qopt, &states, &mut task.test)?;
+            println!(
+                "[eval] {model} {bits}: loss {:.4} acc {:.4} headline {:.2} (n={})",
+                result.loss,
+                result.accuracy,
+                result.headline(),
+                result.n
+            );
+            Ok(())
+        }
+        "int8" => {
+            // deployed-arithmetic eval: lower the trained graph + qparams
+            // to the integer engine and score the test set on it
+            if bits == "fp" {
+                bail!("--exec int8 needs a quantized --bits tag (e.g. --bits w8a8)");
+            }
+            let (w_bits, a_bits) = efqat::coordinator::pipeline::parse_bits(&bits)?;
+            let (params, _states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
+            let qg = lower_native(&model, &params, &q, w_bits, a_bits)?;
+            let batch = cfg.usize("serve.batch", 32);
+            let mut loader = test_loader(&model, batch, cfg)?;
+            let result = evaluate_int8(&qg, &mut loader)?;
+            println!(
+                "[eval int8] {model} {bits}: loss {:.4} acc {:.4} headline {:.2} (n={}, {} i8 weights)",
+                result.loss,
+                result.accuracy,
+                result.headline(),
+                result.n,
+                qg.quantized_weights()
+            );
+            Ok(())
+        }
+        other => bail!("unknown --exec {other:?} (available: fakequant, int8)"),
+    }
 }
 
 /// Scan the artifacts directory and (re)write the schema-versioned bundle

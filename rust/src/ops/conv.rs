@@ -44,11 +44,16 @@ impl ConvDims {
     }
 }
 
-/// Unfold `x` `[B, C_in, H, H]` into the patch matrix `[M, C_in·k·k]`.
-pub fn im2col(x: &[f32], d: &ConvDims) -> Vec<f32> {
+/// Unfold `x` `[B, C_in, H, H]` into the patch matrix `[M, C_in·k·k]`,
+/// filling out-of-bounds taps with `pad`.  Generic over the element so
+/// the f32 training path ([`im2col`], pad `0.0`) and the int8 serving
+/// path ([`crate::ops::qconv::im2col_codes`], pad = zero-point code)
+/// share one traversal — the stride/pad index math is parity-critical
+/// and must never fork.
+pub fn im2col_with<T: Copy>(x: &[T], d: &ConvDims, pad: T) -> Vec<T> {
     let (ho, p, hw) = (d.hw_out(), d.patch(), d.hw);
     debug_assert_eq!(x.len(), d.batch * d.c_in * hw * hw);
-    let mut cols = vec![0.0f32; d.rows() * p];
+    let mut cols = vec![pad; d.rows() * p];
     let mut r = 0;
     for n in 0..d.batch {
         for oy in 0..ho {
@@ -73,6 +78,11 @@ pub fn im2col(x: &[f32], d: &ConvDims) -> Vec<f32> {
         }
     }
     cols
+}
+
+/// Unfold f32 activations into the patch matrix (zero padding).
+pub fn im2col(x: &[f32], d: &ConvDims) -> Vec<f32> {
+    im2col_with(x, d, 0.0)
 }
 
 /// Fold a patch-matrix gradient `[M, C_in·k·k]` back onto the input

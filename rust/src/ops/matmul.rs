@@ -33,10 +33,13 @@ fn thread_count(rows: usize, flops_per_row: usize) -> usize {
 }
 
 /// Run `body(first_row, rows_chunk)` over `out` split row-wise across
-/// threads.  `out` must hold `rows * row_elems` values.
-fn par_rows<F>(out: &mut [f32], rows: usize, row_elems: usize, flops_per_row: usize, body: F)
+/// threads.  `out` must hold `rows * row_elems` values.  Generic over the
+/// output element so the f32 GEMMs here and the int8 serving kernels
+/// ([`crate::ops::qmatmul`]) share one deterministic work-splitting rule.
+pub(crate) fn par_rows<T, F>(out: &mut [T], rows: usize, row_elems: usize, flops_per_row: usize, body: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     if out.is_empty() || row_elems == 0 {
         return;

@@ -17,6 +17,10 @@
 //! * [`fakequant`] — vectorized Eq. 1–4 fake-quant with STE/LSQ
 //!   gradients, shared with PTQ via the scalar formulas in
 //!   [`crate::quant`].
+//! * [`qmatmul`] / [`qconv`] — the *serving* kernels: `u8×i8→i32`
+//!   GEMM with per-channel f32 rescale and its im2col conv lowering,
+//!   executing the codes the fake-quant ops merely simulate (see
+//!   [`crate::lower`] for the graph-level lowering pass).
 //! * [`norm`] — LayerNorm over the trailing feature axis.
 //! * [`attention`] — scaled-dot-product attention (optionally causal)
 //!   over head-merged `[B, T, D]` layouts.
@@ -31,3 +35,5 @@ pub mod fakequant;
 pub mod loss;
 pub mod matmul;
 pub mod norm;
+pub mod qconv;
+pub mod qmatmul;

@@ -1,0 +1,105 @@
+//! Int8 conv2d for the serving path: im2col over *codes*, then the
+//! [`crate::ops::qmatmul`] integer GEMM.
+//!
+//! Identical lowering shape to the float path ([`crate::ops::conv`]) —
+//! a conv is a GEMM over unfolded patches — with one integer-domain
+//! subtlety: float im2col pads with `0.0`, and the dequantized value
+//! `0.0` corresponds to the *zero-point code* `Z_x`, not to code 0.  So
+//! the code-domain patch matrix pads with `Z_x`, which makes the padded
+//! positions contribute `(Z_x − Z_x)·qw = 0` after the zero-point
+//! correction, exactly like the float reference.
+
+use crate::ops::conv::{im2col_with, ConvDims};
+use crate::ops::qmatmul::qlinear_fwd;
+
+/// Unfold u8 activation codes `[B, C_in, H, H]` into the patch matrix
+/// `[M, C_in·k·k]`, padding out-of-bounds taps with `pad_code` (the
+/// activation zero point).  One traversal with the float path
+/// ([`crate::ops::conv::im2col`]) — only the element type and the pad
+/// value differ.
+pub fn im2col_codes(qx: &[u8], d: &ConvDims, pad_code: u8) -> Vec<u8> {
+    im2col_with(qx, d, pad_code)
+}
+
+/// Int8 conv2d forward over codes: `[B, C_in, H, H]` u8 codes → f32
+/// NCHW output `[B, C_out, H_out, H_out]`, dequantized by the
+/// per-channel `scale[o] = S_x·S_w[o]` like the linear path.
+pub fn qconv_fwd(
+    qx: &[u8],
+    qw: &[i8],
+    wsum: &[i32],
+    zx: i32,
+    scale: &[f32],
+    d: &ConvDims,
+) -> Vec<f32> {
+    let cols = im2col_codes(qx, d, zx as u8);
+    let y2 = qlinear_fwd(&cols, qw, wsum, zx, scale, None, d.rows(), d.patch(), d.c_out);
+    crate::ops::conv::rows_to_nchw(&y2, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::conv::{im2col, rows_to_nchw};
+    use crate::ops::fakequant::{fq_act_tensor, fq_weight_rows};
+    use crate::ops::matmul::linear_fwd;
+    use crate::ops::qmatmul::{quantize_acts, quantize_weight_rows};
+    use crate::quant::weight_scales;
+    use crate::testing::forall;
+
+    #[test]
+    fn prop_qconv_matches_fakequant_reference() {
+        forall(40, |r| {
+            let d = ConvDims {
+                batch: 1 + r.below(3),
+                c_in: 1 + r.below(3),
+                hw: 4 + 2 * r.below(3),
+                c_out: 1 + r.below(4),
+                k: 3,
+                stride: 1,
+                pad: 1,
+            };
+            let mut rng = r.split(31);
+            let x = rng.normal_vec(d.batch * d.c_in * d.hw * d.hw, 2.0);
+            let w = rng.normal_vec(d.c_out * d.patch(), 1.0);
+            let sx = r.uniform_in(1e-2, 0.1);
+            let zx = r.uniform_in(20.0, 230.0).round();
+            let amax: Vec<f32> = (0..d.c_out)
+                .map(|o| w[o * d.patch()..(o + 1) * d.patch()].iter().fold(0f32, |a, &v| a.max(v.abs())))
+                .collect();
+            let sw = weight_scales(&amax, 8);
+
+            // float reference: fake-quant, im2col over dequantized values
+            let xh = fq_act_tensor(&x, sx, zx, 8);
+            let wh = fq_weight_rows(&w, &sw, d.patch(), 8);
+            let cols = im2col(&xh, &d);
+            let y2 = linear_fwd(&cols, &wh, None, d.rows(), d.patch(), d.c_out);
+            let want = rows_to_nchw(&y2, &d);
+
+            // integer path, including the zero-point padding rule
+            let (qw, wsum) = quantize_weight_rows(&w, &sw, d.patch(), 8);
+            let qx = quantize_acts(&x, sx, zx, 8);
+            let scale: Vec<f32> = sw.iter().map(|&s| s * sx).collect();
+            let got = qconv_fwd(&qx, &qw, &wsum, zx as i32, &scale, &d);
+
+            for i in 0..got.len() {
+                let tol = 1e-3 * want[i].abs().max(1.0);
+                assert!((got[i] - want[i]).abs() <= tol, "[{i}] {} vs {}", got[i], want[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn padding_contributes_exactly_zero() {
+        // a constant input at the zero-point code with non-trivial
+        // weights: every output must be exactly 0 — the padded taps and
+        // the interior taps alike cancel against the correction term
+        let d = ConvDims { batch: 1, c_in: 1, hw: 4, c_out: 2, k: 3, stride: 1, pad: 1 };
+        let zx = 77i32;
+        let qx = vec![zx as u8; 16];
+        let qw: Vec<i8> = (0..2 * 9).map(|i| (i as i8) - 9).collect();
+        let wsum: Vec<i32> = (0..2).map(|o| qw[o * 9..(o + 1) * 9].iter().map(|&c| c as i32).sum()).collect();
+        let y = qconv_fwd(&qx, &qw, &wsum, zx, &[0.01, 0.02], &d);
+        assert!(y.iter().all(|&v| v == 0.0), "{y:?}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Integer GEMM for the int8 serving path — the hot kernel of the
+//! lowered inference engine ([`crate::lower`]).
+//!
+//! The fake-quant forward computes `ŷ = x̂·ŵᵀ` over *dequantized* f32
+//! values; algebraically the same contraction over the integer codes is
+//!
+//! ```text
+//! y[b,o] = S_x·S_w[o] · ( Σ_i qx[b,i]·qw[o,i]  −  Z_x·Σ_i qw[o,i] ) + bias[o]
+//! ```
+//!
+//! so serving needs one `u8×i8→i32` GEMM, a per-channel column-sum of the
+//! weight codes (precomputed once at lowering time), and a per-channel
+//! f32 rescale.  Codes come from [`crate::quant::code_sym`] /
+//! [`crate::quant::code_asym`] — the *same* round+clip the fake-quant
+//! simulation uses — so the integer engine reproduces the float
+//! reference's logits up to rescale rounding (≤ 1e-3 per logit, see
+//! `tests/int8_parity.rs`).
+//!
+//! The kernel is cache-blocked over the contraction dim and
+//! `std::thread`-parallel over output rows via the same `par_rows`
+//! splitter as the f32 GEMMs in [`crate::ops::matmul`]: each thread
+//! owns a disjoint output chunk, i32 accumulation is exact, so results
+//! are bit-deterministic regardless of thread count.
+
+use crate::ops::matmul::par_rows;
+use crate::quant::{code_asym, code_sym};
+
+/// Contraction-dim block.  i8 operands are 4× denser than f32, so a
+/// larger block than the f32 GEMM's still fits the same L1 budget.
+const KC: usize = 512;
+
+/// Quantize weight rows to their symmetric signed codes (Eq. 3) and
+/// return `(codes, per-row code sums)` — the column-sum term of the
+/// zero-point correction, computed once per model at lowering time.
+pub fn quantize_weight_rows(w: &[f32], s: &[f32], row_size: usize, bits: u32) -> (Vec<i8>, Vec<i32>) {
+    debug_assert_eq!(w.len(), s.len() * row_size);
+    debug_assert!(bits <= 8, "int8 engine: weight codes must fit i8");
+    let mut qw = vec![0i8; w.len()];
+    let mut wsum = vec![0i32; s.len()];
+    for (r, &sr) in s.iter().enumerate() {
+        let mut acc = 0i32;
+        for i in 0..row_size {
+            let c = code_sym(w[r * row_size + i], sr, bits);
+            qw[r * row_size + i] = c as i8;
+            acc += c;
+        }
+        wsum[r] = acc;
+    }
+    (qw, wsum)
+}
+
+/// Quantize an activation tensor to its asymmetric unsigned codes
+/// (Eq. 1) — the layer-boundary quantization of the serving path.
+pub fn quantize_acts(x: &[f32], s: f32, z: f32, bits: u32) -> Vec<u8> {
+    debug_assert!(bits <= 8, "int8 engine: activation codes must fit u8");
+    x.iter().map(|&v| code_asym(v, s, z, bits) as u8).collect()
+}
+
+/// `y[b,o] = scale[o]·(Σ_i qx[b,i]·qw[o,i] − zx·wsum[o]) (+ bias[o])`
+/// — qx: `[m,k]` u8 codes, qw: `[n,k]` i8 codes, `scale[o] = S_x·S_w[o]`.
+///
+/// i32 accumulation is exact for `k ≤ 2³¹/(255·127)` (≈ 66k — far above
+/// any repro model; [`crate::lower`] rejects larger contractions), and
+/// the zero-point correction is applied in i64 before the single f32
+/// rescale per output element.
+#[allow(clippy::too_many_arguments)] // a GEMM ABI: operands, correction, rescale, dims
+pub fn qlinear_fwd(
+    qx: &[u8],
+    qw: &[i8],
+    wsum: &[i32],
+    zx: i32,
+    scale: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(qx.len(), m * k);
+    debug_assert_eq!(qw.len(), n * k);
+    debug_assert_eq!(wsum.len(), n);
+    debug_assert_eq!(scale.len(), n);
+    let mut y = vec![0.0f32; m * n];
+    par_rows(&mut y, m, n, k * n, |r0, rows| {
+        let mut acc = vec![0i32; n];
+        for (ri, yr) in rows.chunks_mut(n).enumerate() {
+            let xr = &qx[(r0 + ri) * k..(r0 + ri + 1) * k];
+            acc.fill(0);
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + KC).min(k);
+                let xb = &xr[k0..k1];
+                for (o, ao) in acc.iter_mut().enumerate() {
+                    let wb = &qw[o * k + k0..o * k + k1];
+                    let mut a = 0i32;
+                    for i in 0..xb.len() {
+                        a += xb[i] as i32 * wb[i] as i32;
+                    }
+                    *ao += a;
+                }
+                k0 = k1;
+            }
+            for (o, yo) in yr.iter_mut().enumerate() {
+                let corrected = acc[o] as i64 - zx as i64 * wsum[o] as i64;
+                let mut v = scale[o] * corrected as f32;
+                if let Some(b) = bias {
+                    v += b[o];
+                }
+                *yo = v;
+            }
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::fakequant::{fq_act_tensor, fq_weight_rows};
+    use crate::ops::matmul::linear_fwd;
+    use crate::quant::weight_scales;
+    use crate::testing::forall;
+
+    /// The acceptance-level identity: the integer GEMM over codes must
+    /// match the f32 GEMM over the dequantized fake-quant values.
+    #[test]
+    fn prop_qlinear_matches_fakequant_reference() {
+        forall(100, |r| {
+            let (m, k, n) = (1 + r.below(6), 1 + r.below(200), 1 + r.below(8));
+            let bits = if r.uniform() < 0.5 { 4 } else { 8 };
+            let mut rng = r.split(21);
+            let x = rng.normal_vec(m * k, 2.0);
+            let w = rng.normal_vec(n * k, 1.0);
+            let b = rng.normal_vec(n, 0.5);
+            let sx = r.uniform_in(1e-2, 0.1);
+            let zx = r.uniform_in(0.0, 200.0).round();
+            let sw = {
+                let amax: Vec<f32> = (0..n)
+                    .map(|o| w[o * k..(o + 1) * k].iter().fold(0f32, |a, &v| a.max(v.abs())))
+                    .collect();
+                weight_scales(&amax, bits)
+            };
+
+            // float reference: fake-quant then dense f32 GEMM
+            let xh = fq_act_tensor(&x, sx, zx, bits);
+            let wh = fq_weight_rows(&w, &sw, k, bits);
+            let want = linear_fwd(&xh, &wh, Some(&b), m, k, n);
+
+            // integer path
+            let (qw, wsum) = quantize_weight_rows(&w, &sw, k, bits);
+            let qx = quantize_acts(&x, sx, zx, bits);
+            let scale: Vec<f32> = sw.iter().map(|&s| s * sx).collect();
+            let got = qlinear_fwd(&qx, &qw, &wsum, zx as i32, &scale, Some(&b), m, k, n);
+
+            for i in 0..m * n {
+                let tol = 1e-3 * want[i].abs().max(1.0);
+                assert!(
+                    (got[i] - want[i]).abs() <= tol,
+                    "[{i}] int8 {} vs float {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn weight_codes_and_sums_are_consistent() {
+        let w = [0.1, -0.2, 0.3, 1.27, -1.27, 0.0];
+        let s = [0.01, 0.01];
+        let (qw, wsum) = quantize_weight_rows(&w, &s, 3, 8);
+        assert_eq!(qw, vec![10, -20, 30, 127, -127, 0]);
+        assert_eq!(wsum, vec![20, 0]);
+    }
+
+    #[test]
+    fn act_codes_clamp_to_u8_range() {
+        let q = quantize_acts(&[-100.0, 0.0, 100.0], 0.05, 128.0, 8);
+        assert_eq!(q, vec![0, 128, 255]);
+    }
+
+    #[test]
+    fn empty_gemm_does_not_panic() {
+        assert!(qlinear_fwd(&[], &[], &[], 0, &[], None, 0, 4, 0).is_empty());
+    }
+
+    #[test]
+    fn large_shapes_parallelize_deterministically() {
+        // cross the threading threshold: i32 accumulation is exact, so
+        // the parallel result must equal a naive single-pass sum exactly
+        let (m, k, n) = (64, 300, 48);
+        let mut rng = crate::rng::Pcg64::new(9);
+        let qx: Vec<u8> = (0..m * k).map(|_| (rng.uniform() * 255.0) as u8).collect();
+        let qw: Vec<i8> = (0..n * k).map(|_| ((rng.uniform() - 0.5) * 254.0) as i8).collect();
+        let wsum: Vec<i32> = (0..n).map(|o| qw[o * k..(o + 1) * k].iter().map(|&c| c as i32).sum()).collect();
+        let scale = vec![1e-4f32; n];
+        let got = qlinear_fwd(&qx, &qw, &wsum, 128, &scale, None, m, k, n);
+        for b in 0..m {
+            for o in 0..n {
+                let acc: i64 = (0..k)
+                    .map(|i| (qx[b * k + i] as i64 - 128) * qw[o * k + i] as i64)
+                    .sum();
+                let want = 1e-4f32 * acc as f32;
+                assert_eq!(got[b * n + o], want, "({b},{o})");
+            }
+        }
+    }
+}

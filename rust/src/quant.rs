@@ -99,19 +99,32 @@ pub fn weight_scales(row_abs_max: &[f32], bits: u32) -> Vec<f32> {
     row_abs_max.iter().map(|&m| (m / qmax as f32).max(1e-8)).collect()
 }
 
+/// The b-bit symmetric signed *code* of a weight (the round+clip of
+/// Eq. 3).  [`fq_sym`] and the int8 serving path
+/// ([`crate::ops::qmatmul`]) are both defined through this function, so
+/// the integer engine and the fake-quant simulation agree on every code
+/// by construction.
+pub fn code_sym(w: f32, s: f32, bits: u32) -> i32 {
+    let (qmin, qmax) = qrange_sym(bits);
+    (w / s).round().clamp(qmin as f32, qmax as f32) as i32
+}
+
+/// The b-bit asymmetric unsigned *code* of an activation (the
+/// round+shift+clip of Eq. 1).  Shared by [`fq_asym`] and the int8
+/// activation quantizer for bit-identical codes.
+pub fn code_asym(x: f32, s: f32, z: f32, bits: u32) -> i32 {
+    let (qmin, qmax) = qrange_asym(bits);
+    ((x / s).round() + z.round()).clamp(qmin as f32, qmax as f32) as i32
+}
+
 /// Reference symmetric fake-quant (Eq. 3) — mirrors kernels/ref.py.
 pub fn fq_sym(w: f32, s: f32, bits: u32) -> f32 {
-    let (qmin, qmax) = qrange_sym(bits);
-    let q = (w / s).round().clamp(qmin as f32, qmax as f32);
-    q * s
+    code_sym(w, s, bits) as f32 * s
 }
 
 /// Reference asymmetric fake-quant (Eq. 1) — mirrors kernels/ref.py.
 pub fn fq_asym(x: f32, s: f32, z: f32, bits: u32) -> f32 {
-    let (qmin, qmax) = qrange_asym(bits);
-    let zr = z.round();
-    let c = ((x / s).round() + zr).clamp(qmin as f32, qmax as f32);
-    (c - zr) * s
+    (code_asym(x, s, z, bits) as f32 - z.round()) * s
 }
 
 /// Mean squared quantization error of a row under a given scale — used by
@@ -185,6 +198,72 @@ mod tests {
             let err = (w - fq_sym(w, s, bits)).abs();
             assert!(err <= s * 0.5 + 1e-6, "err {err} s {s} bits {bits}");
         });
+    }
+
+    #[test]
+    fn prop_codes_land_in_range_and_rebuild_fq() {
+        forall(1000, |r| {
+            let bits = if r.uniform() < 0.5 { 4 } else { 8 };
+            let s = r.uniform_in(1e-4, 0.3);
+            let z = r.uniform_in(0.0, qrange_asym(bits).1 as f32).round();
+            let w = r.uniform_in(-50.0, 50.0);
+            let (wmin, wmax) = qrange_sym(bits);
+            let cw = code_sym(w, s, bits);
+            assert!(cw >= wmin && cw <= wmax, "weight code {cw} out of range");
+            assert_eq!(fq_sym(w, s, bits), cw as f32 * s);
+            let (amin, amax) = qrange_asym(bits);
+            let ca = code_asym(w, s, z, bits);
+            assert!(ca >= amin && ca <= amax, "act code {ca} out of range");
+            assert_eq!(fq_asym(w, s, z, bits), (ca as f32 - z) * s);
+        });
+    }
+
+    #[test]
+    fn adversarial_weight_rows_quantize_in_range() {
+        // all-zero, constant, outlier-dominated, and near-denormal rows:
+        // Eq. 4 scales must stay positive and every code must stay inside
+        // the symmetric grid, with per-element error ≤ s/2 for in-range w
+        let rows: &[&[f32]] = &[
+            &[0.0, 0.0, 0.0, 0.0],
+            &[0.5, 0.5, 0.5, 0.5],
+            &[1e4, -1.0, 0.001, 2.0],
+            &[1e-30, -1e-30, 0.0, 1e-38],
+            &[-3.0, -7.5, -0.25, -1e3],
+        ];
+        for row in rows {
+            let amax = row.iter().fold(0f32, |m, x| m.max(x.abs()));
+            let s = weight_scales(&[amax], 8)[0];
+            assert!(s > 0.0 && s.is_finite(), "scale {s} for row {row:?}");
+            let (qmin, qmax) = qrange_sym(8);
+            for &w in *row {
+                let c = code_sym(w, s, 8);
+                assert!(c >= qmin && c <= qmax, "code {c} for {w} (s {s})");
+                // Eq. 4 covers the whole row, so nothing clips: the
+                // dequantization error is at most half a step
+                let err = (w - fq_sym(w, s, 8)).abs();
+                assert!(err <= 0.5 * s + 1e-6 * w.abs(), "err {err} vs s {s} for {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_activation_ranges_keep_zero_point_in_range() {
+        // all-positive, all-negative, constant, and outlier-heavy
+        // calibration ranges must all produce z ∈ [0, qmax] (u8-codable)
+        for range in [[3.0, 5.0], [-9.0, -2.0], [0.0, 0.0], [-1e-6, 1e4], [-1e4, 1e-6]] {
+            let mut o = MinMaxObserver::default();
+            o.observe(range[0], range[1]);
+            let q = o.qparams(8);
+            let (_, qmax) = qrange_asym(8);
+            assert!(q.scale > 0.0 && q.scale.is_finite(), "{range:?}");
+            assert!(
+                q.zero_point >= 0.0 && q.zero_point <= qmax as f32,
+                "{range:?}: zero point {} escapes [0, {qmax}]",
+                q.zero_point
+            );
+            // zero always maps to an exact code
+            assert_eq!(fq_asym(0.0, q.scale, q.zero_point, 8), 0.0);
+        }
     }
 
     #[test]
