@@ -1,0 +1,182 @@
+//! Serving latency/throughput under dynamic micro-batching: offered
+//! load × batcher settings, per-request latency percentiles.
+//!
+//! For each (submitters, max_batch) cell, S submitter threads each fire
+//! `requests` single-example requests at the serving runtime
+//! (`efqat::serve`), keeping a `window` of them in flight (pipelined
+//! closed loop), so offered load scales with S × window and the batcher
+//! sees real backlog rather than lockstep arrivals.  Per-request latency
+//! (submit → logits, queueing included) lands in p50/p95/p99; completed
+//! examples over wall time is the throughput.  The worker pool is pinned
+//! to one thread so the lever being measured is *batching*, not worker
+//! parallelism: at `max_batch 1` every request pays its own queue hops
+//! and GEMM, at `max_batch ≥ 8` the `u8×i8→i32` GEMMs amortize — the
+//! north-star check asserts batched throughput beats unbatched at the
+//! highest offered load.  Results go to `BENCH_latency.json` and
+//! `bench_out/serve_latency.csv`.
+//!
+//!   cargo bench --bench serve_latency [-- --full true]
+//!   cargo bench --bench serve_latency -- --model mlp --requests 200 --wait-ms 1
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use efqat::backend::Value;
+use efqat::graph::InputKind;
+use efqat::harness::Table;
+use efqat::json::Json;
+use efqat::lower::lower;
+use efqat::rng::Pcg64;
+use efqat::serve::{BatchCfg, Engine, Server, ServeCfg};
+use efqat::tensor::{ITensor, Tensor};
+
+/// Percentile over a sorted sample (nearest-rank on the inclusive grid).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn example(kind: InputKind, classes: usize, rng: &mut Pcg64) -> Value {
+    match kind {
+        InputKind::Image { channels, hw } => Value::F32(Tensor {
+            shape: vec![channels, hw, hw],
+            data: rng.normal_vec(channels * hw * hw, 1.0),
+        }),
+        InputKind::Tokens { seq } => Value::I32(ITensor {
+            shape: vec![seq],
+            data: (0..seq).map(|_| rng.below(classes) as i32).collect(),
+        }),
+    }
+}
+
+fn main() {
+    let cfg = common::bench_config_with(&[("model", "mlp")]);
+    let quick = common::is_quick(&cfg);
+    let model = cfg.str("model", "mlp");
+    let requests = cfg.usize("requests", if quick { 400 } else { 4000 });
+    let window = cfg.usize("window", 8).max(1);
+    let workers = cfg.usize("workers", 1);
+    let wait_ms = cfg.f32("wait-ms", 2.0);
+    let submitter_counts: &[usize] = if quick { &[1, 32] } else { &[1, 8, 32] };
+    let batch_sizes: &[usize] = &[1, 8, 32];
+
+    // lowered once from the shared synthetic fixture, reused by every cell
+    let (base, params, q) = efqat::testing::synth_lowering_fixture(&model);
+    let engine = Arc::new(lower(&base, &params, &q, 8, 8).unwrap());
+
+    let mut t = Table::new(
+        &format!("Serve latency: offered load × max_batch, {model} int8, {workers} worker(s)"),
+        &["submitters", "max_batch", "ex/s", "p50 ms", "p95 ms", "p99 ms"],
+    );
+    let mut cells = BTreeMap::new();
+    let mut unbatched_at_max_load = 0.0f64;
+    let mut batched_at_max_load = 0.0f64;
+    let max_load = *submitter_counts.last().unwrap();
+    for &submitters in submitter_counts {
+        for &max_batch in batch_sizes {
+            let scfg = ServeCfg {
+                batch: BatchCfg {
+                    max_batch,
+                    max_wait: Duration::from_secs_f32(wait_ms / 1e3),
+                },
+                workers,
+                queue_cap: 4096,
+            };
+            let server = Server::start(engine.clone() as Arc<dyn Engine>, scfg);
+            let t0 = Instant::now();
+            let mut lat_ms: Vec<f64> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..submitters)
+                    .map(|si| {
+                        let (server, engine) = (&server, &engine);
+                        s.spawn(move || {
+                            let mut rng = Pcg64::new(1000 + si as u64);
+                            let mut lats = Vec::with_capacity(requests);
+                            let mut inflight = std::collections::VecDeque::with_capacity(window);
+                            for _ in 0..requests {
+                                if inflight.len() >= window {
+                                    let (q0, tk): (Instant, efqat::serve::Ticket) =
+                                        inflight.pop_front().unwrap();
+                                    tk.wait().expect("request failed");
+                                    lats.push(q0.elapsed().as_secs_f64() * 1e3);
+                                }
+                                let x = example(engine.input, engine.classes, &mut rng);
+                                inflight.push_back((Instant::now(), server.submit(x).unwrap()));
+                            }
+                            for (q0, tk) in inflight {
+                                tk.wait().expect("request failed");
+                                lats.push(q0.elapsed().as_secs_f64() * 1e3);
+                            }
+                            lats
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            let elapsed = t0.elapsed().as_secs_f64();
+            server.shutdown();
+            lat_ms.sort_unstable_by(f64::total_cmp);
+            let total = (submitters * requests) as f64;
+            let tput = total / elapsed;
+            let (p50, p95, p99) = (pct(&lat_ms, 0.50), pct(&lat_ms, 0.95), pct(&lat_ms, 0.99));
+            if submitters == max_load {
+                if max_batch == 1 {
+                    unbatched_at_max_load = tput;
+                } else if max_batch >= 8 {
+                    batched_at_max_load = batched_at_max_load.max(tput);
+                }
+            }
+            t.row(&[
+                submitters.to_string(),
+                max_batch.to_string(),
+                format!("{tput:.0}"),
+                format!("{p50:.3}"),
+                format!("{p95:.3}"),
+                format!("{p99:.3}"),
+            ]);
+            let cell: BTreeMap<String, Json> = [
+                ("ex_per_s".to_string(), Json::Num(tput)),
+                ("p50_ms".to_string(), Json::Num(p50)),
+                ("p95_ms".to_string(), Json::Num(p95)),
+                ("p99_ms".to_string(), Json::Num(p99)),
+                ("requests".to_string(), Json::Num(total)),
+            ]
+            .into_iter()
+            .collect();
+            cells.insert(format!("s{submitters}_b{max_batch}"), Json::Obj(cell));
+        }
+    }
+    t.print();
+    t.write_csv(std::path::Path::new("bench_out/serve_latency.csv")).unwrap();
+
+    let speedup = batched_at_max_load / unbatched_at_max_load.max(1e-12);
+    let doc: BTreeMap<String, Json> = [
+        ("bench".to_string(), Json::Str("serve_latency".to_string())),
+        ("model".to_string(), Json::Str(model.clone())),
+        ("workers".to_string(), Json::Num(workers as f64)),
+        ("wait_ms".to_string(), Json::Num(wait_ms as f64)),
+        ("window".to_string(), Json::Num(window as f64)),
+        ("requests_per_submitter".to_string(), Json::Num(requests as f64)),
+        ("cells".to_string(), Json::Obj(cells)),
+        ("unbatched_ex_per_s_at_max_load".to_string(), Json::Num(unbatched_at_max_load)),
+        ("batched_ex_per_s_at_max_load".to_string(), Json::Num(batched_at_max_load)),
+        ("batched_over_unbatched".to_string(), Json::Num(speedup)),
+    ]
+    .into_iter()
+    .collect();
+    std::fs::write("BENCH_latency.json", Json::Obj(doc).render()).unwrap();
+    println!("\nwrote BENCH_latency.json (p50/p95/p99 latency + examples/sec per cell)");
+    println!(
+        "north-star check: batched throughput at {max_load} submitters is {speedup:.2}x unbatched"
+    );
+    assert!(
+        speedup > 1.0,
+        "micro-batching must beat unbatched serving at max offered load \
+         ({batched_at_max_load:.0} vs {unbatched_at_max_load:.0} ex/s)"
+    );
+}

@@ -53,7 +53,9 @@ fn main() {
         for bits in bits_set {
             let (wb, ab) = parse_bits(bits).unwrap();
             let calib = session.steps.get(&format!("{model}_calib")).unwrap();
-            let q = calibrate(&calib, &orig_params, &orig_states, &mut task.calib, task.calib_samples, wb, ab).unwrap();
+            let samples = task.calib_samples;
+            let q = calibrate(&calib, &orig_params, &orig_states, &mut task.calib, samples, wb, ab)
+                .unwrap();
             let fwd = session.steps.get(&fwd_artifact_name(model, bits)).unwrap();
             let ptq = evaluate(&fwd, &orig_params, Some(&q), &orig_states, &mut task.test).unwrap();
             t.row(&[
@@ -68,5 +70,7 @@ fn main() {
     }
     t.print();
     t.write_csv(std::path::Path::new("bench_out/table3_baselines.csv")).unwrap();
-    println!("\npaper shape check: PTQ degrades with fewer bits; W4A4 collapses on the deeper net.");
+    println!(
+        "\npaper shape check: PTQ degrades with fewer bits; W4A4 collapses on the deeper net."
+    );
 }

@@ -99,5 +99,7 @@ fn main() {
             t.write_csv(std::path::Path::new("bench_out/table4_accuracy.csv")).unwrap();
         }
     }
-    println!("\npaper shape check: PTQ < 0% < EfQAT(r) ≤ QAT, rising with r; modes within noise.");
+    println!(
+        "\npaper shape check: PTQ < 0% < EfQAT(r) ≤ QAT, rising with r; modes within noise."
+    );
 }

@@ -55,7 +55,13 @@ fn time_artifact(
     let batch = task.train.next_batch().unwrap();
 
     if man.kind == "fwd" {
-        let ctx = BindCtx { params: &params, qparams: Some(&q), states: &states, batch: &batch, selection: None };
+        let ctx = BindCtx {
+            params: &params,
+            qparams: Some(&q),
+            states: &states,
+            batch: &batch,
+            selection: None,
+        };
         let inputs = bind_inputs(&man, &ctx).unwrap();
         let st = bench(2, iters, || {
             step.execute(&inputs).unwrap();
@@ -99,14 +105,28 @@ fn main() {
             "Table 5 / Fig 2b: backward runtime per step (ms), {bits} ({} backend)",
             cfg.str("backend", "native")
         ),
-        &["model", "mode", "fwd", "r0", "r5", "r10", "r25", "r50", "QAT", "bwd speedup r5", "bwd speedup lwpn"],
+        &[
+            "model",
+            "mode",
+            "fwd",
+            "r0",
+            "r5",
+            "r10",
+            "r25",
+            "r50",
+            "QAT",
+            "bwd speedup r5",
+            "bwd speedup lwpn",
+        ],
     );
     // BENCH_table5.json: per model, full vs partial backward wall-time
     let mut report = BTreeMap::new();
     for model in &models {
         let fwd = time_artifact(&session, &cfg, model, &format!("{model}_{bits}_fwd"), None, iters);
-        let qat = time_artifact(&session, &cfg, model, &format!("{model}_{bits}_train_r100"), None, iters);
-        let lwpn = time_artifact(&session, &cfg, model, &format!("{model}_{bits}_train_lwpn"), Some(Mode::Lwpn), iters);
+        let qat_name = format!("{model}_{bits}_train_r100");
+        let qat = time_artifact(&session, &cfg, model, &qat_name, None, iters);
+        let lwpn_name = format!("{model}_{bits}_train_lwpn");
+        let lwpn = time_artifact(&session, &cfg, model, &lwpn_name, Some(Mode::Lwpn), iters);
         let bwd = |t: f64| (t - fwd).max(1e-9);
         let mut row = vec![model.clone(), "CWPN".to_string(), format!("{:.2}", fwd * 1e3)];
         let mut r5_time = qat;

@@ -17,8 +17,9 @@ fn main() {
     let model = cfg.str("model", "resnet20");
     let bits = cfg.str("bits", "w8a8");
     let ratio = cfg.usize("ratio", 25);
+    let all_freqs: &[&str] = &["16", "128", "1024", "4096", "16384"];
     let freqs: Vec<usize> = cfg
-        .list("freqs", if quick { &["128", "16384"] } else { &["16", "128", "1024", "4096", "16384"] })
+        .list("freqs", if quick { &["128", "16384"] } else { all_freqs })
         .iter()
         .map(|s| s.parse().unwrap())
         .collect();
@@ -33,7 +34,11 @@ fn main() {
         let mut c = cfg.clone();
         c.set("train.freq", &f.to_string());
         let s = run_efqat_pipeline(&session, &c, &model, &bits, "cwpn", ratio).unwrap();
-        t.row(&[f.to_string(), format!("{:.2}", s.efqat_headline), format!("{:.3}", s.overhead_seconds)]);
+        t.row(&[
+            f.to_string(),
+            format!("{:.2}", s.efqat_headline),
+            format!("{:.3}", s.overhead_seconds),
+        ]);
     }
     t.print();
     t.write_csv(std::path::Path::new("bench_out/table6_freeze_freq.csv")).unwrap();

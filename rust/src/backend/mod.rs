@@ -290,11 +290,9 @@ impl StepCache {
         if let Some(s) = self.cache.borrow().get(name) {
             return Ok(s.clone());
         }
-        let step = Rc::new(
-            self.backend
-                .load(name)
-                .with_context(|| format!("loading artifact {name} on the {} backend", self.backend.name()))?,
-        );
+        let step = Rc::new(self.backend.load(name).with_context(|| {
+            format!("loading artifact {name} on the {} backend", self.backend.name())
+        })?);
         self.cache.borrow_mut().insert(name.to_string(), step.clone());
         Ok(step)
     }

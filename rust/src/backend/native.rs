@@ -91,7 +91,14 @@ fn graph_convnet() -> LayerGraph {
         input: InputKind::Image { channels: 3, hw: 8 },
         classes: 10,
         layers: vec![
-            Layer::Conv2d(ConvSpec { name: "conv1".into(), c_in: 3, c_out: 8, k: 3, stride: 1, pad: 1 }),
+            Layer::Conv2d(ConvSpec {
+                name: "conv1".into(),
+                c_in: 3,
+                c_out: 8,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            }),
             Layer::Relu,
             Layer::AvgPool2x2,
             Layer::Flatten,
@@ -159,8 +166,9 @@ fn parse_artifact(name: &str) -> Result<(&'static NativeModel, StepId)> {
             let (tag, tail) = rest
                 .split_once('_')
                 .ok_or_else(|| anyhow!("artifact {name:?}: malformed suffix {rest:?}"))?;
-            let (w, a) = crate::quant::parse_bits_tag(tag)
-                .ok_or_else(|| anyhow!("artifact {name:?}: bad bits tag {tag:?} (want e.g. w8a8)"))?;
+            let (w, a) = crate::quant::parse_bits_tag(tag).ok_or_else(|| {
+                anyhow!("artifact {name:?}: bad bits tag {tag:?} (want e.g. w8a8)")
+            })?;
             let kind = if tail == "fwd" {
                 StepKind::Fwd
             } else if tail == "train_lwpn" {
@@ -291,7 +299,8 @@ mod tests {
 
     #[test]
     fn no_per_model_step_code_means_manifests_come_from_the_graph() {
-        let step = NativeBackend::new(Path::new("artifacts")).load("convnet_w8a8_train_r25").unwrap();
+        let backend = NativeBackend::new(Path::new("artifacts"));
+        let step = backend.load("convnet_w8a8_train_r25").unwrap();
         let m = &step.manifest;
         assert_eq!(m.model, "convnet");
         assert_eq!(m.wsites.len(), 2);

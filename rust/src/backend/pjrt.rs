@@ -80,7 +80,8 @@ mod imp {
                 .client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {artifact}: {e:?}"))?;
-            let exec = PjrtStep { exe, outputs: manifest.outputs.clone(), name: artifact.to_string() };
+            let exec =
+                PjrtStep { exe, outputs: manifest.outputs.clone(), name: artifact.to_string() };
             Ok(Step::new(manifest, "pjrt", t0.elapsed(), Box::new(exec)))
         }
     }
@@ -108,7 +109,12 @@ mod imp {
             let dt = t0.elapsed();
             let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
             if parts.len() != self.outputs.len() {
-                bail!("{}: {} outputs returned, manifest declares {}", self.name, parts.len(), self.outputs.len());
+                bail!(
+                    "{}: {} outputs returned, manifest declares {}",
+                    self.name,
+                    parts.len(),
+                    self.outputs.len()
+                );
             }
             let outs = self
                 .outputs

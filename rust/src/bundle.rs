@@ -194,7 +194,10 @@ impl Bundle {
         for (role, f) in &entry.files {
             let path = dir.join(&f.path);
             let data = std::fs::read(&path).with_context(|| {
-                format!("artifact {name}: {role} file {} listed in manifest.json is unreadable", path.display())
+                format!(
+                    "artifact {name}: {role} file {} listed in manifest.json is unreadable",
+                    path.display()
+                )
             })?;
             if data.len() as u64 != f.bytes {
                 bail!(
@@ -316,7 +319,8 @@ pub fn sha256_hex(data: &[u8]) -> String {
     for chunk in msg.chunks_exact(64) {
         let mut w = [0u32; 64];
         for i in 0..16 {
-            w[i] = u32::from_be_bytes([chunk[4 * i], chunk[4 * i + 1], chunk[4 * i + 2], chunk[4 * i + 3]]);
+            let b = [chunk[4 * i], chunk[4 * i + 1], chunk[4 * i + 2], chunk[4 * i + 3]];
+            w[i] = u32::from_be_bytes(b);
         }
         for i in 16..64 {
             let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);

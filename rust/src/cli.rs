@@ -5,7 +5,8 @@
 //! [`crate::cfg::Config`], so any config key can be overridden from the
 //! command line — including the execution selectors (`--backend
 //! native|pjrt`, `--exec fakequant|int8`) and serving knobs like
-//! `--serve.batch`, which need no parser support of their own.
+//! `--serve.batch` or `efqat serve`'s `--batch.max` / `--batch.wait-ms`
+//! / `--port`, which need no parser support of their own.
 
 use std::collections::BTreeMap;
 
@@ -70,7 +71,8 @@ mod tests {
 
     #[test]
     fn parses_subcommand_options_flags() {
-        let a = Args::parse(&v(&["train", "--model", "resnet20", "--ratio=0.25", "--verbose", "ckpt.bin"])).unwrap();
+        let argv = v(&["train", "--model", "resnet20", "--ratio=0.25", "--verbose", "ckpt.bin"]);
+        let a = Args::parse(&argv).unwrap();
         assert_eq!(a.subcommand, "train");
         assert_eq!(a.opt("model"), Some("resnet20"));
         assert_eq!(a.opt("ratio"), Some("0.25"));

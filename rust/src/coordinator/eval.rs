@@ -5,12 +5,12 @@
 
 use crate::backend::{Step, Value};
 use crate::data::{squad::span_f1, Batch, Loader};
-use crate::error::{anyhow, Result};
+use crate::error::{anyhow, bail, Result};
 use crate::graph::InputKind;
 use crate::lower::QuantizedGraph;
 use crate::model::{ParamStore, QParamStore, StateStore};
 use crate::ops::loss::softmax_xent;
-use crate::tensor::argmax;
+use crate::tensor::{argmax, ITensor, Tensor};
 
 use super::binder::{bind_inputs, BindCtx};
 
@@ -95,7 +95,8 @@ pub fn evaluate_int8(qg: &QuantizedGraph, loader: &mut Loader) -> Result<EvalRes
             ),
         };
         let logits = qg.forward_owned(x)?;
-        let labels = &batch.i32s.get("y").ok_or_else(|| anyhow!("batch missing labels \"y\""))?.data;
+        let labels =
+            &batch.i32s.get("y").ok_or_else(|| anyhow!("batch missing labels \"y\""))?.data;
         let rows = logits.data.len() / qg.classes;
         let (loss, _rows_ok, _dl) = softmax_xent(&logits.data, labels, rows, qg.classes)
             .map_err(|e| anyhow!("{} int8 eval: {e}", qg.model))?;
@@ -110,6 +111,46 @@ pub fn evaluate_int8(qg: &QuantizedGraph, loader: &mut Loader) -> Result<EvalRes
         f1: None,
         n,
     })
+}
+
+/// Split one loader batch into per-example serving inputs — the request
+/// granularity of [`crate::serve`] (images → f32 `[C, H, H]`, tokens →
+/// i32 `[T]`, no batch dimension).  Only the `batch.count` real examples
+/// are returned; wrap-padded rows are dropped, so feeding these through
+/// the request path scores exactly the set [`evaluate_int8`] scores —
+/// the serve parity tests and latency bench pull their traffic from the
+/// same loaders as offline eval.
+pub fn example_inputs(kind: InputKind, batch: &Batch) -> Result<Vec<Value>> {
+    match kind {
+        InputKind::Image { .. } => {
+            let x = batch.f32s.get("x").ok_or_else(|| anyhow!("batch missing f32 \"x\""))?;
+            let rows = *x.shape.first().unwrap_or(&0);
+            if rows == 0 || batch.count > rows {
+                bail!("batch has {} examples but x is {:?}", batch.count, x.shape);
+            }
+            let shape: Vec<usize> = x.shape[1..].to_vec();
+            let per = x.data.len() / rows;
+            Ok(x.data
+                .chunks(per)
+                .take(batch.count)
+                .map(|c| Value::F32(Tensor { shape: shape.clone(), data: c.to_vec() }))
+                .collect())
+        }
+        InputKind::Tokens { .. } => {
+            let x = batch.i32s.get("x").ok_or_else(|| anyhow!("batch missing i32 \"x\""))?;
+            let rows = *x.shape.first().unwrap_or(&0);
+            if rows == 0 || batch.count > rows {
+                bail!("batch has {} examples but x is {:?}", batch.count, x.shape);
+            }
+            let shape: Vec<usize> = x.shape[1..].to_vec();
+            let per = x.data.len() / rows;
+            Ok(x.data
+                .chunks(per)
+                .take(batch.count)
+                .map(|c| Value::I32(ITensor { shape: shape.clone(), data: c.to_vec() }))
+                .collect())
+        }
+    }
 }
 
 fn score_top1(logits: &crate::tensor::Tensor, batch: &Batch) -> usize {

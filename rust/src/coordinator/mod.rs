@@ -24,7 +24,7 @@ pub mod tasks;
 pub mod trainer;
 
 pub use binder::bind_inputs;
-pub use eval::{evaluate, evaluate_int8, EvalResult};
+pub use eval::{evaluate, evaluate_int8, example_inputs, EvalResult};
 pub use ptq::calibrate;
 pub use trainer::{pretrain_fp, EfqatTrainer, TrainCfg};
 

@@ -111,7 +111,8 @@ pub struct PipelineSummary {
 impl PipelineSummary {
     pub fn render(&self) -> String {
         format!(
-            "[efqat] {} {} mode={} ratio={}%\n  PTQ   headline {:.2}\n  EfQAT headline {:.2}  ({:+.2})\n  step exec {:.2}s, coordinator overhead {:.2}s\n  loss {}",
+            "[efqat] {} {} mode={} ratio={}%\n  PTQ   headline {:.2}\n  EfQAT headline \
+             {:.2}  ({:+.2})\n  step exec {:.2}s, coordinator overhead {:.2}s\n  loss {}",
             self.model,
             self.bits,
             self.mode,
@@ -143,7 +144,8 @@ pub fn run_efqat_pipeline(
     // PTQ initialization (Algorithm 1: "Start from a PTQ model")
     let calib = session.steps.get(&format!("{model}_calib"))?;
     let mut task = build_task(model, calib.manifest.batch_size, cfg)?;
-    let q = calibrate(&calib, &params, &states, &mut task.calib, task.calib_samples, w_bits, a_bits)?;
+    let q =
+        calibrate(&calib, &params, &states, &mut task.calib, task.calib_samples, w_bits, a_bits)?;
     let fwd = session.steps.get(&fwd_artifact_name(model, bits))?;
     let ptq_eval = evaluate(&fwd, &params, Some(&q), &states, &mut task.test)?;
 
@@ -169,7 +171,8 @@ pub fn run_efqat_pipeline(
         }
     }
 
-    let result = evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test)?;
+    let result =
+        evaluate(&fwd, &trainer.params, Some(&trainer.qparams), &trainer.states, &mut task.test)?;
 
     if cfg.bool("save_ckpt", true) {
         let qmap = qparams_to_tensors(&trainer.qparams);
@@ -194,7 +197,12 @@ pub fn run_efqat_pipeline(
 }
 
 /// Make sure an FP checkpoint exists (pretraining if needed); idempotent.
-pub fn ensure_fp_checkpoint(session: &Session, cfg: &Config, model: &str, epochs: usize) -> Result<()> {
+pub fn ensure_fp_checkpoint(
+    session: &Session,
+    cfg: &Config,
+    model: &str,
+    epochs: usize,
+) -> Result<()> {
     if fp_ckpt_path(cfg, model).exists() {
         return Ok(());
     }

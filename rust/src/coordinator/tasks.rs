@@ -38,7 +38,8 @@ pub fn build_task(model: &str, batch_size: usize, cfg: &Config) -> Result<Task> 
     let train_n = cfg.usize("data.train_n", dn);
     let test_n = cfg.usize("data.test_n", tn);
     let calib_samples = cfg.usize("data.calib_samples", 512);
-    let noise = cfg.f32("data.noise", 2.0); // ~75% FP ceiling: leaves room for the PTQ→QAT ordering
+    // ~75% FP ceiling: leaves room for the PTQ→QAT ordering
+    let noise = cfg.f32("data.noise", 2.0);
 
     let (train_src, test_src) = match model {
         "resnet8" | "resnet20" | "resnet11b" | "mlp" | "mlp_wide" | "convnet" => {

@@ -40,7 +40,11 @@ fn protos(classes: usize, hw: usize, seed: u64) -> Vec<ClassProto> {
                 rng.uniform_in(0.2, 0.8) * hw as f32,
                 rng.uniform_in(0.15, 0.3) * hw as f32,
             ),
-            color: [rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)],
+            color: [
+                rng.uniform_in(-1.0, 1.0),
+                rng.uniform_in(-1.0, 1.0),
+                rng.uniform_in(-1.0, 1.0),
+            ],
         })
         .collect()
 }
@@ -82,7 +86,8 @@ pub fn generate_split(
                     let grating = (tau * (fx * xf + fy * yf) + ph).sin();
                     let bx = x as f32 + dx - p.blob.0;
                     let by = y as f32 + dy - p.blob.1;
-                    let blob = p.color[c] * (-(bx * bx + by * by) / (2.0 * p.blob.2 * p.blob.2)).exp();
+                    let gauss = (-(bx * bx + by * by) / (2.0 * p.blob.2 * p.blob.2)).exp();
+                    let blob = p.color[c] * gauss;
                     let v = gain * (0.6 * grating + blob) + noise * rng.normal();
                     images[base + c * hw * hw + y * hw + x] = v;
                 }
@@ -151,7 +156,8 @@ mod tests {
                 correct += 1;
             }
         }
-        assert!(correct > 100, "nearest-proto acc too low: {correct}/200"); // 5x chance — CNNs do much better
+        // 5x chance — CNNs do much better
+        assert!(correct > 100, "nearest-proto acc too low: {correct}/200");
     }
 
     #[test]

@@ -55,7 +55,13 @@ pub struct Loader {
 }
 
 impl Loader {
-    pub fn new(source: Source, batch_size: usize, seed: u64, shuffle: bool, drop_last: bool) -> Loader {
+    pub fn new(
+        source: Source,
+        batch_size: usize,
+        seed: u64,
+        shuffle: bool,
+        drop_last: bool,
+    ) -> Loader {
         let mut l = Loader {
             indices: (0..source.len()).collect(),
             source,

@@ -68,7 +68,11 @@ impl SquadDataset {
 /// Token-overlap F1 between a predicted span and the gold span — the
 /// SQuAD metric the paper reports for BERT.
 pub fn span_f1(pred_start: usize, pred_end: usize, gold_start: usize, gold_end: usize) -> f32 {
-    let (ps, pe) = if pred_end < pred_start { (pred_start, pred_start) } else { (pred_start, pred_end) };
+    let (ps, pe) = if pred_end < pred_start {
+        (pred_start, pred_start)
+    } else {
+        (pred_start, pred_end)
+    };
     let overlap = {
         let lo = ps.max(gold_start);
         let hi = pe.min(gold_end);

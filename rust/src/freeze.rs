@@ -305,11 +305,13 @@ mod tests {
         let w1 = Tensor::new(vec![2, 4], vec![0.1; 8]).unwrap();
         // r = 0: nothing unfreezes (the greedy "always one layer"
         // guarantee only applies for r > 0)
-        let p = FreezePolicy::new(Mode::Lwpn, 0.0, 100, mk_sites(&[(2, 4), (2, 4)], 0.0), &[&w0, &w1]);
+        let sites = mk_sites(&[(2, 4), (2, 4)], 0.0);
+        let p = FreezePolicy::new(Mode::Lwpn, 0.0, 100, sites, &[&w0, &w1]);
         assert_eq!(p.selection().flags, vec![false, false]);
         assert!((p.unfrozen_fraction() - 0.0).abs() < 1e-7);
         // r = 1: the whole network fits the budget
-        let p = FreezePolicy::new(Mode::Lwpn, 1.0, 100, mk_sites(&[(2, 4), (2, 4)], 1.0), &[&w0, &w1]);
+        let sites = mk_sites(&[(2, 4), (2, 4)], 1.0);
+        let p = FreezePolicy::new(Mode::Lwpn, 1.0, 100, sites, &[&w0, &w1]);
         assert_eq!(p.selection().flags, vec![true, true]);
         assert!((p.unfrozen_fraction() - 1.0).abs() < 1e-7);
     }

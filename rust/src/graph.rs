@@ -282,7 +282,11 @@ fn collect_wsites(layers: &[Layer], out: &mut Vec<WSite>) {
             }),
             Layer::Attention(a) => {
                 for p in attn_projections(a) {
-                    out.push(WSite { name: format!("{}.w", p.name), c_out: p.c_out, size: p.c_out * p.c_in });
+                    out.push(WSite {
+                        name: format!("{}.w", p.name),
+                        c_out: p.c_out,
+                        size: p.c_out * p.c_in,
+                    });
                 }
             }
             Layer::Residual(inner) => collect_wsites(inner, out),
@@ -318,9 +322,14 @@ pub fn build_manifest(g: &LayerGraph, name: &str, id: &StepId) -> Manifest {
         params.iter().map(|p| io(&p.name, p.shape.clone(), Dtype::F32, "param", None)).collect();
     if quant && id.kind != StepKind::Calib {
         for s in &wsites {
-            inputs.push(io(&format!("sw:{}", s.name), vec![s.c_out], Dtype::F32, "qparam_sw", Some(&s.name)));
-            inputs.push(io(&format!("sx:{}", s.name), vec![1], Dtype::F32, "qparam_sx", Some(&s.name)));
-            inputs.push(io(&format!("zx:{}", s.name), vec![1], Dtype::F32, "qparam_zx", Some(&s.name)));
+            let (sw, sx, zx) = (
+                format!("sw:{}", s.name),
+                format!("sx:{}", s.name),
+                format!("zx:{}", s.name),
+            );
+            inputs.push(io(&sw, vec![s.c_out], Dtype::F32, "qparam_sw", Some(&s.name)));
+            inputs.push(io(&sx, vec![1], Dtype::F32, "qparam_sx", Some(&s.name)));
+            inputs.push(io(&zx, vec![1], Dtype::F32, "qparam_zx", Some(&s.name)));
         }
     }
     let (x_spec, y_spec, logits_shape) = match g.input {
@@ -344,7 +353,8 @@ pub fn build_manifest(g: &LayerGraph, name: &str, id: &StepId) -> Manifest {
     match id.kind {
         StepKind::Calib => {
             for s in &wsites {
-                outputs.push(io(&format!("mm:{}", s.name), vec![2], Dtype::F32, "calib", Some(&s.name)));
+                let mm = format!("mm:{}", s.name);
+                outputs.push(io(&mm, vec![2], Dtype::F32, "calib", Some(&s.name)));
             }
         }
         StepKind::Fwd => {
@@ -368,7 +378,8 @@ pub fn build_manifest(g: &LayerGraph, name: &str, id: &StepId) -> Manifest {
             }
             if sel == TrainSel::Lwpn {
                 for s in &wsites {
-                    inputs.push(io(&format!("flag:{}", s.name), vec![1], Dtype::I32, "flag", Some(&s.name)));
+                    let flag = format!("flag:{}", s.name);
+                    inputs.push(io(&flag, vec![1], Dtype::I32, "flag", Some(&s.name)));
                 }
             }
             outputs.push(io("loss", vec![1], Dtype::F32, "loss", None));
@@ -395,7 +406,8 @@ pub fn build_manifest(g: &LayerGraph, name: &str, id: &StepId) -> Manifest {
                     "embed" if sel != TrainSel::Fp => continue,
                     _ => p.shape.clone(),
                 };
-                outputs.push(io(&format!("d:{}", p.name), shape, Dtype::F32, "grad", Some(&p.name)));
+                let d = format!("d:{}", p.name);
+                outputs.push(io(&d, shape, Dtype::F32, "grad", Some(&p.name)));
             }
             if sel != TrainSel::Fp {
                 for s in &wsites {
@@ -739,8 +751,10 @@ impl<'a> Run<'a> {
                     let dwhat = partial_dwhat(ids);
                     let w_rows = w.gather_rows(ids);
                     let s_rows: Vec<f32> = ids.iter().map(|&r| q.sw[r]).collect();
-                    let (dw, ds) = fq_weight_bwd_rows(&w_rows.data, &s_rows, &dwhat, row_size, bits);
-                    (Some(Tensor { shape: vec![ids.len(), row_size], data: dw }), Some(ds))
+                    let (dw, ds) =
+                        fq_weight_bwd_rows(&w_rows.data, &s_rows, &dwhat, row_size, bits);
+                    let dw = Tensor { shape: vec![ids.len(), row_size], data: dw };
+                    (Some(dw), Some(ds))
                 }
                 RunSel::None => (None, None),
             },
@@ -855,7 +869,8 @@ impl<'a> Run<'a> {
         let w = self.vals.f32(&site)?;
         let mut full = || matmul_dyt_x(&dy.data, &cache.xh, rows, c_out, c_in);
         let mut partial = |ids: &[usize]| partial_dw(&dy.data, &cache.xh, ids, rows, c_out, c_in);
-        let (dw, dsw) = self.weight_site_grads(&sel, w, cache.q.as_ref(), c_in, &mut full, &mut partial);
+        let (dw, dsw) =
+            self.weight_site_grads(&sel, w, cache.q.as_ref(), c_in, &mut full, &mut partial);
         self.emit_site_grads(&site, dw, dsw, grads);
         let dx = self.act_bwd(&site, cache.q.as_ref(), &cache.x_raw, dxh, grads);
         Ok(Tensor { shape: cache.x_shape.clone(), data: dx })
@@ -878,7 +893,12 @@ impl<'a> Run<'a> {
         Ok((act_f32(out)?, caches))
     }
 
-    fn forward_seq(&mut self, layers: &[Layer], mut act: Act, caches: &mut Vec<Cache>) -> Result<Act> {
+    fn forward_seq(
+        &mut self,
+        layers: &[Layer],
+        mut act: Act,
+        caches: &mut Vec<Cache>,
+    ) -> Result<Act> {
         for layer in layers {
             act = self.forward_layer(layer, act, caches)?;
         }
@@ -948,7 +968,8 @@ impl<'a> Run<'a> {
             Layer::AvgPool2x2 => {
                 let x = act_f32(act)?;
                 if x.shape.len() != 4 || x.shape[2] % 2 != 0 || x.shape[2] != x.shape[3] {
-                    bail!("{}: avgpool wants [B, C, 2n, 2n], got {:?}", self.step.man.name, x.shape);
+                    let step = &self.step.man.name;
+                    bail!("{step}: avgpool wants [B, C, 2n, 2n], got {:?}", x.shape);
                 }
                 let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2]);
                 let y = conv::avgpool2_fwd(&x.data, b, c, hw);
@@ -958,7 +979,13 @@ impl<'a> Run<'a> {
             Layer::LayerNorm(spec) => {
                 let x = act_f32(act)?;
                 if x.shape.last() != Some(&spec.d) {
-                    bail!("{}: layernorm {:?} wants {} features, got {:?}", self.step.man.name, spec.name, spec.d, x.shape);
+                    let step = &self.step.man.name;
+                    bail!(
+                        "{step}: layernorm {:?} wants {} features, got {:?}",
+                        spec.name,
+                        spec.d,
+                        x.shape
+                    );
                 }
                 let rows = x.data.len() / spec.d;
                 let g = self.vals.f32(&format!("{}.g", spec.name))?;
@@ -991,13 +1018,20 @@ impl<'a> Run<'a> {
             Layer::Attention(spec) => {
                 let x = act_f32(act)?;
                 if x.shape.len() != 3 || x.shape[2] != spec.d {
-                    bail!("{}: attention {:?} wants [B, T, {}], got {:?}", self.step.man.name, spec.name, spec.d, x.shape);
+                    let step = &self.step.man.name;
+                    bail!(
+                        "{step}: attention {:?} wants [B, T, {}], got {:?}",
+                        spec.name,
+                        spec.d,
+                        x.shape
+                    );
                 }
                 let projs = attn_projections(spec);
                 let (qy, q_lin) = self.lin_fwd(&projs[0], &x)?;
                 let (ky, k_lin) = self.lin_fwd(&projs[1], &x)?;
                 let (vy, v_lin) = self.lin_fwd(&projs[2], &x)?;
-                let dm = AttnDims { batch: x.shape[0], t: x.shape[1], d: spec.d, heads: spec.heads };
+                let dm =
+                    AttnDims { batch: x.shape[0], t: x.shape[1], d: spec.d, heads: spec.heads };
                 let (om, p) = sdpa_fwd(&qy.data, &ky.data, &vy.data, &dm, spec.causal);
                 let om_t = Tensor { shape: x.shape.clone(), data: om };
                 let (out, o_lin) = self.lin_fwd(&projs[3], &om_t)?;
@@ -1073,8 +1107,9 @@ impl<'a> Run<'a> {
                 let mut full = || matmul_dyt_x(&dy2, &c.cols, d.rows(), d.c_out, d.patch());
                 let mut partial =
                     |ids: &[usize]| partial_dw(&dy2, &c.cols, ids, d.rows(), d.c_out, d.patch());
+                let patch = d.patch();
                 let (dw, dsw) =
-                    self.weight_site_grads(&sel, w, c.q.as_ref(), d.patch(), &mut full, &mut partial);
+                    self.weight_site_grads(&sel, w, c.q.as_ref(), patch, &mut full, &mut partial);
                 self.emit_site_grads(&site, dw, dsw, grads);
                 let dx = self.act_bwd(&site, c.q.as_ref(), &c.x_raw, dxh, grads);
                 Ok(Tensor { shape: vec![d.batch, d.c_in, d.hw, d.hw], data: dx })
@@ -1123,12 +1158,12 @@ impl<'a> Run<'a> {
                 let dom = self.lin_bwd(&projs[3], &c.o_lin, &dy, grads)?;
                 let (dq, dk, dv) = sdpa_bwd(&dom.data, &c.qy, &c.ky, &c.vy, &c.p, &c.dm);
                 let shape = dom.shape;
-                let dxq =
-                    self.lin_bwd(&projs[0], &c.q_lin, &Tensor { shape: shape.clone(), data: dq }, grads)?;
-                let dxk =
-                    self.lin_bwd(&projs[1], &c.k_lin, &Tensor { shape: shape.clone(), data: dk }, grads)?;
-                let dxv =
-                    self.lin_bwd(&projs[2], &c.v_lin, &Tensor { shape, data: dv }, grads)?;
+                let dq = Tensor { shape: shape.clone(), data: dq };
+                let dxq = self.lin_bwd(&projs[0], &c.q_lin, &dq, grads)?;
+                let dk = Tensor { shape: shape.clone(), data: dk };
+                let dxk = self.lin_bwd(&projs[1], &c.k_lin, &dk, grads)?;
+                let dv = Tensor { shape, data: dv };
+                let dxv = self.lin_bwd(&projs[2], &c.v_lin, &dv, grads)?;
                 let data = dxq
                     .data
                     .iter()
@@ -1181,7 +1216,8 @@ impl<'a> Run<'a> {
         let (loss, correct, _) = self.loss_and_correct(&logits)?;
         let mut out = BTreeMap::new();
         out.insert("loss".to_string(), Value::F32(Tensor::scalar(loss)));
-        out.insert("correct".to_string(), Value::I32(ITensor { shape: vec![1], data: vec![correct] }));
+        let correct = ITensor { shape: vec![1], data: vec![correct] };
+        out.insert("correct".to_string(), Value::I32(correct));
         out.insert("logits".to_string(), Value::F32(logits));
         Ok(out)
     }
@@ -1235,13 +1271,28 @@ mod tests {
                 Layer::Embed(EmbedSpec { name: "emb".into(), vocab: 64, seq: 16, d: 16 }),
                 Layer::Residual(vec![
                     Layer::LayerNorm(NormSpec { name: "ln1".into(), d: 16 }),
-                    Layer::Attention(AttnSpec { name: "attn".into(), d: 16, heads: 2, causal: true }),
+                    Layer::Attention(AttnSpec {
+                        name: "attn".into(),
+                        d: 16,
+                        heads: 2,
+                        causal: true,
+                    }),
                 ]),
                 Layer::Residual(vec![
                     Layer::LayerNorm(NormSpec { name: "ln2".into(), d: 16 }),
-                    Layer::Linear(LinearSpec { name: "ffn1".into(), c_in: 16, c_out: 32, bias: true }),
+                    Layer::Linear(LinearSpec {
+                        name: "ffn1".into(),
+                        c_in: 16,
+                        c_out: 32,
+                        bias: true,
+                    }),
                     Layer::Relu,
-                    Layer::Linear(LinearSpec { name: "ffn2".into(), c_in: 32, c_out: 16, bias: true }),
+                    Layer::Linear(LinearSpec {
+                        name: "ffn2".into(),
+                        c_in: 32,
+                        c_out: 16,
+                        bias: true,
+                    }),
                 ]),
                 Layer::LayerNorm(NormSpec { name: "lnf".into(), d: 16 }),
                 Layer::Linear(LinearSpec { name: "head".into(), c_in: 16, c_out: 64, bias: true }),
@@ -1256,7 +1307,8 @@ mod tests {
     #[test]
     fn train_manifest_matches_step_contract() {
         let g = mlp_graph();
-        let m = build_manifest(&g, "mlp_w8a8_train_r25", &id(StepKind::Train(TrainSel::Ratio(0.25)), 8, 8));
+        let sel = id(StepKind::Train(TrainSel::Ratio(0.25)), 8, 8);
+        let m = build_manifest(&g, "mlp_w8a8_train_r25", &sel);
         assert_eq!(m.sel_mode, "ratio");
         assert_eq!(m.ratio, 0.25);
         assert_eq!(m.wsites.len(), 2);
@@ -1277,7 +1329,8 @@ mod tests {
 
     #[test]
     fn r0_manifest_has_no_weight_grads_but_keeps_act_qparam_grads() {
-        let m = build_manifest(&mlp_graph(), "mlp_w8a8_train_r0", &id(StepKind::Train(TrainSel::Ratio(0.0)), 8, 8));
+        let sel = id(StepKind::Train(TrainSel::Ratio(0.0)), 8, 8);
+        let m = build_manifest(&mlp_graph(), "mlp_w8a8_train_r0", &sel);
         assert!(!m.outputs.iter().any(|o| o.name == "d:fc1.w"));
         assert!(!m.outputs.iter().any(|o| o.name == "d:sw:fc1.w"));
         assert!(m.outputs.iter().any(|o| o.name == "d:sx:fc1.w"));
@@ -1286,7 +1339,8 @@ mod tests {
 
     #[test]
     fn fp_manifest_has_no_qparams() {
-        let m = build_manifest(&mlp_graph(), "mlp_fp_train", &id(StepKind::Train(TrainSel::Fp), 0, 0));
+        let sel = id(StepKind::Train(TrainSel::Fp), 0, 0);
+        let m = build_manifest(&mlp_graph(), "mlp_fp_train", &sel);
         assert_eq!(m.sel_mode, "fp");
         assert!(!m.inputs.iter().any(|i| i.role.starts_with("qparam")));
         assert!(m.outputs.iter().any(|o| o.name == "d:fc1.w"));
@@ -1319,7 +1373,8 @@ mod tests {
         // embeds get grads in FP training only
         let fp = build_manifest(&g, "tiny_tf_fp_train", &id(StepKind::Train(TrainSel::Fp), 0, 0));
         assert!(fp.outputs.iter().any(|o| o.name == "d:emb.tok"));
-        let q = build_manifest(&g, "tiny_tf_w8a8_train_r100", &id(StepKind::Train(TrainSel::Ratio(1.0)), 8, 8));
+        let sel = id(StepKind::Train(TrainSel::Ratio(1.0)), 8, 8);
+        let q = build_manifest(&g, "tiny_tf_w8a8_train_r100", &sel);
         assert!(!q.outputs.iter().any(|o| o.name == "d:emb.tok"));
         // norm params always train
         assert!(q.outputs.iter().any(|o| o.name == "d:ln1.g"));
@@ -1339,7 +1394,8 @@ mod tests {
     #[test]
     fn lwpn_manifest_carries_flags_and_full_grad_shapes() {
         let g = tf_graph();
-        let m = build_manifest(&g, "tiny_tf_w8a8_train_lwpn", &id(StepKind::Train(TrainSel::Lwpn), 8, 8));
+        let sel = id(StepKind::Train(TrainSel::Lwpn), 8, 8);
+        let m = build_manifest(&g, "tiny_tf_w8a8_train_lwpn", &sel);
         assert_eq!(m.inputs.iter().filter(|i| i.role == "flag").count(), 7);
         let dw = m.outputs.iter().find(|o| o.name == "d:attn.q.w").unwrap();
         assert_eq!(dw.shape, vec![16, 16]);

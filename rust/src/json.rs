@@ -85,6 +85,45 @@ impl Json {
         out
     }
 
+    /// Serialize to compact single-line JSON (no whitespace, sorted
+    /// keys) — the line format of the JSONL serve protocol (RFC 0002),
+    /// where one value must be one `\n`-terminated line.  Round-trips
+    /// through [`Json::parse`] exactly like [`Json::render`].
+    pub fn render_min(&self) -> String {
+        let mut out = String::new();
+        self.write_min(&mut out);
+        out
+    }
+
+    fn write_min(&self, out: &mut String) {
+        match self {
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_min(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_min(out);
+                }
+                out.push('}');
+            }
+            // scalars render identically in both modes
+            other => other.write_into(out, 0),
+        }
+    }
+
     fn write_into(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -181,7 +220,8 @@ impl<'a> Parser<'a> {
 
     fn eat(&mut self, c: u8) -> Result<()> {
         if self.peek()? != c {
-            bail!("expected {:?} at byte {}, found {:?}", c as char, self.i, self.b[self.i] as char);
+            let found = self.b[self.i] as char;
+            bail!("expected {:?} at byte {}, found {found:?}", c as char, self.i);
         }
         self.i += 1;
         Ok(())
@@ -379,6 +419,18 @@ mod tests {
         // integers render without a decimal point
         assert!(rendered.contains("\"schema_version\": 1"));
         assert!(rendered.contains("\"ratio\": 0.25"));
+    }
+
+    #[test]
+    fn render_min_is_single_line_and_round_trips() {
+        let src = r#"{"id": "r1", "logits": [1.5, -2, 0.25], "n": 3, "ok": true}"#;
+        let j = Json::parse(src).unwrap();
+        let line = j.render_min();
+        assert!(!line.contains('\n') && !line.contains(' '), "{line:?}");
+        assert_eq!(line, r#"{"id":"r1","logits":[1.5,-2,0.25],"n":3,"ok":true}"#);
+        assert_eq!(Json::parse(&line).unwrap(), j);
+        assert_eq!(Json::Arr(vec![]).render_min(), "[]");
+        assert_eq!(Json::Obj(BTreeMap::new()).render_min(), "{}");
     }
 
     #[test]

@@ -25,6 +25,12 @@
 //!   activations quantized at layer boundaries) for forward-only batched
 //!   inference — the deployed arithmetic `--exec int8` evaluates and
 //!   `benches/serve_throughput.rs` measures.
+//! * [`serve`] is the concurrent serving runtime above the lowering
+//!   boundary (`efqat serve`): a bounded request queue, a dynamic
+//!   micro-batcher (flush on `max_batch` or a `max_wait` deadline), and
+//!   a worker pool sharing one `Arc<QuantizedGraph>` — requests arrive
+//!   as JSONL over stdin or TCP (RFC `docs/rfcs/0002-serve-protocol.md`)
+//!   and each answer is bit-identical to a batch-of-1 forward.
 //! * [`bundle`] defines the schema-versioned artifact bundle manifest
 //!   (`manifest.json`, RFC `docs/rfcs/0001-artifact-manifest.md`) with
 //!   per-file SHA-256 checksums, so stale or corrupt artifacts fail
@@ -61,5 +67,6 @@ pub mod ops;
 pub mod optim;
 pub mod quant;
 pub mod rng;
+pub mod serve;
 pub mod tensor;
 pub mod testing;

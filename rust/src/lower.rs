@@ -22,7 +22,10 @@
 //! The executor is forward-only and *batch-flexible*: unlike the
 //! training artifacts (whose manifests bake in a static batch), a
 //! [`QuantizedGraph`] serves any leading batch dimension — that is what
-//! `benches/serve_throughput.rs` sweeps.
+//! `benches/serve_throughput.rs` sweeps and what the concurrent serving
+//! runtime ([`crate::serve`]) micro-batches over.
+
+#![warn(missing_docs)]
 
 use crate::backend::Value;
 use crate::error::{anyhow, bail, Result};
@@ -96,15 +99,32 @@ enum QLayer {
 }
 
 /// A lowered, forward-only integer inference graph.
+///
+/// All state is owned, immutable after [`lower`], and free of interior
+/// mutability, so one graph is shared across serving worker threads as
+/// a plain `Arc<QuantizedGraph>` — the compile-time proof is below.
 pub struct QuantizedGraph {
+    /// Name of the native model this graph was lowered from.
     pub model: String,
+    /// Input domain (image geometry or token sequence length).
     pub input: InputKind,
     /// Trailing logits dimension (classes or vocab).
     pub classes: usize,
+    /// Weight-grid width the i8 codes were quantized on (Eq. 3/4).
     pub w_bits: u32,
+    /// Activation-grid width the u8 codes are quantized on (Eq. 1/2).
     pub a_bits: u32,
     layers: Vec<QLayer>,
 }
+
+// The serving runtime (`crate::serve`) pools `std::thread` workers over
+// one `Arc<QuantizedGraph>`; keep the graph shareable by construction.
+// This fails to compile if a future field introduces `Rc`/`RefCell`/raw
+// pointers instead of failing at the distant `Server::start` call site.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<QuantizedGraph>();
+};
 
 // ---------------------------------------------------------------------------
 // The lowering pass
@@ -218,7 +238,8 @@ impl LowerCtx<'_> {
     fn param(&self, name: &str, want: usize) -> Result<Vec<f32>> {
         let t = self.params.get(name)?;
         if t.data.len() != want {
-            bail!("lower({}): param {name:?} has {} elems, graph wants {want}", self.model, t.data.len());
+            let got = t.data.len();
+            bail!("lower({}): param {name:?} has {got} elems, graph wants {want}", self.model);
         }
         Ok(t.data.clone())
     }
@@ -251,24 +272,26 @@ impl LowerCtx<'_> {
         }
         let w = self.params.get(site)?;
         if w.data.len() != c_out * row_size {
-            bail!("lower({}): weight {site:?} has {} elems, want {c_out}×{row_size}", self.model, w.data.len());
+            let (m, got) = (self.model, w.data.len());
+            bail!("lower({m}): weight {site:?} has {got} elems, want {c_out}×{row_size}");
         }
-        let sw = self
-            .qparams
-            .sw
-            .get(site)
-            .ok_or_else(|| anyhow!("lower({}): no weight scales for site {site:?} — calibrate or load a quantized checkpoint", self.model))?;
+        let sw = self.qparams.sw.get(site).ok_or_else(|| {
+            anyhow!(
+                "lower({}): no weight scales for site {site:?} — calibrate or load a \
+                 quantized checkpoint",
+                self.model
+            )
+        })?;
         if sw.data.len() != c_out {
-            bail!("lower({}): site {site:?} has {} weight scales, want {c_out}", self.model, sw.data.len());
+            let got = sw.data.len();
+            bail!("lower({}): site {site:?} has {got} weight scales, want {c_out}", self.model);
         }
         if sw.data.iter().any(|&s| s <= 0.0 || !s.is_finite()) {
             bail!("lower({}): non-positive weight scale for site {site:?}", self.model);
         }
-        let act = self
-            .qparams
-            .act
-            .get(site)
-            .ok_or_else(|| anyhow!("lower({}): no activation qparams for site {site:?}", self.model))?;
+        let act = self.qparams.act.get(site).ok_or_else(|| {
+            anyhow!("lower({}): no activation qparams for site {site:?}", self.model)
+        })?;
         if act.scale <= 0.0 || !act.scale.is_finite() {
             bail!("lower({}): non-positive activation scale for site {site:?}", self.model);
         }
@@ -315,6 +338,21 @@ fn act_f32(model: &str, act: Act) -> Result<Tensor> {
 }
 
 impl QuantizedGraph {
+    /// Vocabulary size of a token-input graph (`None` for image
+    /// models).  The serving runtime validates ids against this at
+    /// submission time, so one bad request cannot fail the healthy
+    /// requests micro-batched with it.
+    pub fn vocab(&self) -> Option<usize> {
+        fn find(layers: &[QLayer]) -> Option<usize> {
+            layers.iter().find_map(|l| match l {
+                QLayer::Embed { vocab, .. } => Some(*vocab),
+                QLayer::Residual(inner) => find(inner),
+                _ => None,
+            })
+        }
+        find(&self.layers)
+    }
+
     /// Count of frozen i8 weight codes — what a deployment would ship.
     pub fn quantized_weights(&self) -> usize {
         fn count(layers: &[QLayer]) -> usize {
@@ -347,7 +385,11 @@ impl QuantizedGraph {
     pub fn forward_owned(&self, x: Value) -> Result<Tensor> {
         let x0 = match (self.input, x) {
             (InputKind::Image { channels, hw }, Value::F32(t)) => {
-                if t.shape.len() != 4 || t.shape[1] != channels || t.shape[2] != hw || t.shape[3] != hw {
+                let good = t.shape.len() == 4
+                    && t.shape[1] == channels
+                    && t.shape[2] == hw
+                    && t.shape[3] == hw;
+                if !good {
                     bail!(
                         "{} int8 forward: want images [B, {channels}, {hw}, {hw}], got {:?}",
                         self.model,
@@ -358,11 +400,15 @@ impl QuantizedGraph {
             }
             (InputKind::Tokens { seq }, Value::I32(t)) => {
                 if t.shape.len() != 2 || t.shape[1] != seq {
-                    bail!("{} int8 forward: want token ids [B, {seq}], got {:?}", self.model, t.shape);
+                    let m = &self.model;
+                    bail!("{m} int8 forward: want token ids [B, {seq}], got {:?}", t.shape);
                 }
                 Act::I(t)
             }
-            _ => bail!("{} int8 forward: input dtype does not match the graph's input kind", self.model),
+            _ => bail!(
+                "{} int8 forward: input dtype does not match the graph's input kind",
+                self.model
+            ),
         };
         let out = self.forward_seq(&self.layers, x0)?;
         act_f32(&self.model, out)
@@ -431,7 +477,8 @@ impl QuantizedGraph {
             QLayer::AvgPool2x2 => {
                 let x = act_f32(&self.model, act)?;
                 if x.shape.len() != 4 || x.shape[2] % 2 != 0 || x.shape[2] != x.shape[3] {
-                    bail!("{} int8 forward: avgpool wants [B, C, 2n, 2n], got {:?}", self.model, x.shape);
+                    let m = &self.model;
+                    bail!("{m} int8 forward: avgpool wants [B, C, 2n, 2n], got {:?}", x.shape);
                 }
                 let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2]);
                 let y = avgpool2_fwd(&x.data, b, c, hw);
@@ -440,7 +487,8 @@ impl QuantizedGraph {
             QLayer::LayerNorm { g, b, d } => {
                 let x = act_f32(&self.model, act)?;
                 if x.shape.last() != Some(d) {
-                    bail!("{} int8 forward: layernorm wants {d} features, got {:?}", self.model, x.shape);
+                    let m = &self.model;
+                    bail!("{m} int8 forward: layernorm wants {d} features, got {:?}", x.shape);
                 }
                 let rows = x.data.len() / d;
                 // layernorm_fwd also returns backward-only caches (x̂, 1/σ),
@@ -452,11 +500,14 @@ impl QuantizedGraph {
             QLayer::Embed { tok, pos, vocab, seq, d } => {
                 let ids = match act {
                     Act::I(t) => t,
-                    Act::F(_) => bail!("{} int8 forward: embedding expects i32 token ids", self.model),
+                    Act::F(_) => {
+                        bail!("{} int8 forward: embedding expects i32 token ids", self.model)
+                    }
                 };
                 for &id in &ids.data {
                     if id < 0 || id as usize >= *vocab {
-                        bail!("{} int8 forward: token id {id} out of range [0, {vocab})", self.model);
+                        let m = &self.model;
+                        bail!("{m} int8 forward: token id {id} out of range [0, {vocab})");
                     }
                 }
                 let y = embed_fwd(tok, pos, &ids.data, *seq, *d);
@@ -466,7 +517,8 @@ impl QuantizedGraph {
             QLayer::Attention { proj, heads, causal, d } => {
                 let x = act_f32(&self.model, act)?;
                 if x.shape.len() != 3 || x.shape[2] != *d {
-                    bail!("{} int8 forward: attention wants [B, T, {d}], got {:?}", self.model, x.shape);
+                    let m = &self.model;
+                    bail!("{m} int8 forward: attention wants [B, T, {d}], got {:?}", x.shape);
                 }
                 let rows = x.data.len() / d;
                 let qy = proj[0].fwd(&x.data, rows);
@@ -481,7 +533,7 @@ impl QuantizedGraph {
             }
             QLayer::Residual(inner) => {
                 let x = act_f32(&self.model, act)?;
-                let y = act_f32(&self.model, self.forward_seq(inner, Act::F(x.clone()))?)?;
+                let mut y = act_f32(&self.model, self.forward_seq(inner, Act::F(x.clone()))?)?;
                 if y.shape != x.shape {
                     bail!(
                         "{} int8 forward: residual sub-graph changed shape {:?} -> {:?}",
@@ -490,8 +542,13 @@ impl QuantizedGraph {
                         y.shape
                     );
                 }
-                let data = x.data.iter().zip(&y.data).map(|(a, b)| a + b).collect();
-                Act::F(Tensor { shape: x.shape, data })
+                // add into the sub-graph's buffer: one clone (the skip
+                // input the inner sequence consumes) is inherent, a
+                // third allocation for the sum is not
+                for (yo, xi) in y.data.iter_mut().zip(&x.data) {
+                    *yo += xi;
+                }
+                Act::F(y)
             }
         })
     }
@@ -500,20 +557,10 @@ impl QuantizedGraph {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::native::model_graph;
-    use crate::graph::{build_manifest, StepId, StepKind};
     use crate::quant::ActQParams;
 
     fn fixture(model: &str) -> (LayerGraph, ParamStore, QParamStore) {
-        let g = model_graph(model).unwrap();
-        let man = build_manifest(&g, "fwd", &StepId { kind: StepKind::Fwd, w_bits: 8, a_bits: 8 });
-        let params = ParamStore::init(&man, 1);
-        let mut q = QParamStore::default();
-        q.init_weight_scales(&man, &params, 8);
-        for s in &man.wsites {
-            q.act.insert(s.name.clone(), ActQParams { scale: 0.05, zero_point: 128.0 });
-        }
-        (g, params, q)
+        crate::testing::synth_lowering_fixture(model)
     }
 
     #[test]
@@ -555,6 +602,15 @@ mod tests {
         // wrong geometry is a descriptive error
         let err = qg.forward(&Value::F32(Tensor::zeros(&[2, 3, 16, 16]))).unwrap_err().to_string();
         assert!(err.contains("images"), "{err}");
+    }
+
+    #[test]
+    fn vocab_reported_for_token_graphs_only() {
+        let (g, params, q) = fixture("tiny_tf");
+        let qg = lower(&g, &params, &q, 8, 8).unwrap();
+        assert_eq!(qg.vocab(), Some(64));
+        let (g, params, q) = fixture("mlp");
+        assert_eq!(lower(&g, &params, &q, 8, 8).unwrap().vocab(), None);
     }
 
     #[test]

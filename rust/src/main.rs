@@ -9,6 +9,11 @@
 //!             `--exec int8` lowers the graph to the integer engine and
 //!             reports accuracy on the *deployed* arithmetic
 //!             (`--serve.batch N` picks the serving batch size)
+//!   serve     answer concurrent JSONL inference requests on the lowered
+//!             int8 engine (or the f32 reference) with dynamic
+//!             micro-batching: stdin/stdout by default, a TCP listener
+//!             with `--port`; `--batch.max N` and `--batch.wait-ms T`
+//!             set the flush policy (RFC docs/rfcs/0002-serve-protocol.md)
 //!   bundle    write the schema-versioned artifacts/manifest.json inventory
 //!   info      list artifacts, their manifests, and bundle integrity
 //!
@@ -31,7 +36,7 @@ use efqat::coordinator::pipeline::{
 };
 use efqat::coordinator::tasks::{build_task, test_loader};
 use efqat::coordinator::{evaluate, evaluate_int8, Session};
-use efqat::error::{bail, Context, Result};
+use efqat::error::{anyhow, bail, Context, Result};
 use efqat::lower::lower_native;
 
 fn main() {
@@ -48,9 +53,11 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: efqat <pretrain|ptq|train|eval|bundle|info> --model <m> \
+        "usage: efqat <pretrain|ptq|train|eval|serve|bundle|info> --model <m> \
          [--backend native|pjrt] [--bits w8a8] [--exec fakequant|int8] \
-         [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--config file.toml] [--key value ...]"
+         [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--config file.toml] [--key value ...]\n\
+       serve: efqat serve --model <m> --ckpt <file> [--exec int8|f32] [--bits w8a8] \
+         [--batch.max 32] [--batch.wait-ms 2] [--serve.workers 2] [--port 7878]"
     );
 }
 
@@ -86,6 +93,7 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "eval" => cmd_eval(&cfg),
+        "serve" => cmd_serve(&cfg),
         "bundle" => cmd_bundle(&cfg),
         "info" => cmd_info(&cfg),
         other => {
@@ -106,7 +114,8 @@ fn cmd_ptq(cfg: &Config) -> Result<()> {
     let calib = session.steps.get(&format!("{model}_calib"))?;
     let mut task = build_task(&model, calib.manifest.batch_size, cfg)?;
     let (w_bits, a_bits) = parse_bits(&bits)?;
-    let q = calibrate(&calib, &params, &states, &mut task.calib, task.calib_samples, w_bits, a_bits)?;
+    let q =
+        calibrate(&calib, &params, &states, &mut task.calib, task.calib_samples, w_bits, a_bits)?;
     let fwd = session.steps.get(&fwd_artifact_name_of(&model, &bits))?;
     let result = evaluate(&fwd, &params, Some(&q), &states, &mut task.test)?;
     println!("[ptq] {model} {bits}: loss {:.4} headline {:.2}", result.loss, result.headline());
@@ -159,6 +168,61 @@ fn cmd_eval(cfg: &Config) -> Result<()> {
         }
         other => bail!("unknown --exec {other:?} (available: fakequant, int8)"),
     }
+}
+
+/// Serve concurrent JSONL inference requests with dynamic micro-batching
+/// (RFC 0002): lower the checkpoint to the int8 engine (`--exec int8`,
+/// default) or wrap the fake-quant f32 reference (`--exec f32`), start
+/// the queue → batcher → worker-pool runtime, and answer over
+/// stdin/stdout — or a TCP listener with `--port`.
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    use efqat::backend::native::model_graph;
+    use efqat::coordinator::pipeline::parse_bits;
+    use efqat::serve::{protocol, FloatEngine, Server, ServeCfg};
+
+    let model = cfg.req_str("model")?;
+    let ckpt = cfg.req_str("ckpt")?;
+    let bits = cfg.str("bits", "w8a8");
+    let exec = cfg.str("exec", "int8");
+    let engine: std::sync::Arc<dyn efqat::serve::Engine> = match exec.as_str() {
+        "int8" => {
+            let (w_bits, a_bits) = parse_bits(&bits)?;
+            let (params, _states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
+            std::sync::Arc::new(lower_native(&model, &params, &q, w_bits, a_bits)?)
+        }
+        "f32" | "float" | "fakequant" => {
+            let g = model_graph(&model)
+                .ok_or_else(|| anyhow!("model {model:?} has no native graph declaration"))?;
+            let (params, _states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
+            let (quant, w_bits, a_bits) = if bits == "fp" {
+                (None, 0, 0)
+            } else {
+                let (w, a) = parse_bits(&bits)?;
+                (Some(q), w, a)
+            };
+            std::sync::Arc::new(FloatEngine::new(g, params, quant, w_bits, a_bits))
+        }
+        other => bail!("unknown --exec {other:?} (available: int8, f32)"),
+    };
+    let scfg = ServeCfg::from_config(cfg);
+    eprintln!(
+        "[serve] {model} {bits} exec={exec}: max_batch={} wait={:?} workers={} queue={}",
+        scfg.batch.max_batch, scfg.batch.max_wait, scfg.workers, scfg.queue_cap
+    );
+    let server = Server::start(engine, scfg);
+    if cfg.has("port") {
+        let port = cfg.usize("port", 0);
+        if port == 0 || port > u16::MAX as usize {
+            bail!("--port wants a TCP port in [1, 65535]");
+        }
+        protocol::serve_tcp(&server, &cfg.str("serve.bind", "127.0.0.1"), port as u16)?;
+    } else {
+        let stdin = std::io::stdin();
+        let n = protocol::serve_stream(&server, stdin.lock(), std::io::stdout())?;
+        eprintln!("[serve] stdin closed: answered {n} requests");
+    }
+    server.shutdown();
+    Ok(())
 }
 
 /// Scan the artifacts directory and (re)write the schema-versioned bundle

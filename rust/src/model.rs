@@ -233,7 +233,11 @@ impl StateStore {
             .states
             .iter()
             .map(|s| {
-                let t = if s.init == "ones" { Tensor::ones(&s.shape) } else { Tensor::zeros(&s.shape) };
+                let t = if s.init == "ones" {
+                    Tensor::ones(&s.shape)
+                } else {
+                    Tensor::zeros(&s.shape)
+                };
                 (s.name.clone(), t)
             })
             .collect();
@@ -424,7 +428,8 @@ mod tests {
         let dir = std::env::temp_dir().join("efqat_test_ckpt");
         let path = dir.join("a.ckpt");
         let mut params = BTreeMap::new();
-        params.insert("w".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        let w = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        params.insert("w".to_string(), w);
         let mut states = BTreeMap::new();
         states.insert("rm".to_string(), Tensor::zeros(&[3]));
         save_checkpoint(&path, &[("params", &params), ("states", &states)]).unwrap();

@@ -35,7 +35,13 @@ impl AttnDims {
 /// probability tensor `p` is `[B, H, T, T]` (the backward cache).  Causal
 /// masking zeroes the probabilities above the diagonal, so the backward
 /// needs no explicit mask.
-pub fn sdpa_fwd(q: &[f32], k: &[f32], v: &[f32], dm: &AttnDims, causal: bool) -> (Vec<f32>, Vec<f32>) {
+pub fn sdpa_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dm: &AttnDims,
+    causal: bool,
+) -> (Vec<f32>, Vec<f32>) {
     let (b, t, d, h) = (dm.batch, dm.t, dm.d, dm.heads);
     let dh = dm.d_head();
     let alpha = dm.scale();

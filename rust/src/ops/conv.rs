@@ -214,8 +214,11 @@ mod tests {
                                 for kx in 0..d.k {
                                     let iy = (oy * d.stride + ky) as isize - d.pad as isize;
                                     let ix = (ox * d.stride + kx) as isize - d.pad as isize;
-                                    if iy >= 0 && (iy as usize) < hw && ix >= 0 && (ix as usize) < hw
-                                    {
+                                    let inside = iy >= 0
+                                        && (iy as usize) < hw
+                                        && ix >= 0
+                                        && (ix as usize) < hw;
+                                    if inside {
                                         let xi = x[((n * d.c_in + ci) * hw + iy as usize) * hw
                                             + ix as usize];
                                         let wi = w[((o * d.c_in + ci) * d.k + ky) * d.k + kx];

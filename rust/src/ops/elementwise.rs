@@ -33,7 +33,13 @@ pub fn embed_fwd(tok: &[f32], pos: &[f32], ids: &[i32], t: usize, d: usize) -> V
 
 /// Backward of [`embed_fwd`]: scatter-add into `dtok` (`[V, D]`) and
 /// reduce over the batch into `dpos` (`[T, D]`).
-pub fn embed_bwd(dy: &[f32], ids: &[i32], vocab: usize, t: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+pub fn embed_bwd(
+    dy: &[f32],
+    ids: &[i32],
+    vocab: usize,
+    t: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
     debug_assert_eq!(dy.len(), ids.len() * d);
     let mut dtok = vec![0.0f32; vocab * d];
     let mut dpos = vec![0.0f32; t * d];

@@ -57,7 +57,13 @@ pub fn fq_weight_bwd_rows(
 
 /// STE/LSQ+ backward of the activation quantizer.  Returns
 /// `(dx, ds, dz)`; mirrors `python/compile/quantization.py::fq_act_bwd`.
-pub fn fq_act_bwd_tensor(x: &[f32], s: f32, z: f32, dxhat: &[f32], bits: u32) -> (Vec<f32>, f32, f32) {
+pub fn fq_act_bwd_tensor(
+    x: &[f32],
+    s: f32,
+    z: f32,
+    dxhat: &[f32],
+    bits: u32,
+) -> (Vec<f32>, f32, f32) {
     let (qmin, qmax) = qrange_asym(bits);
     let (qmin, qmax) = (qmin as f32, qmax as f32);
     let zr = z.round();

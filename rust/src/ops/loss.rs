@@ -15,7 +15,12 @@ use crate::tensor::argmax;
 /// same pass so forward-only callers pay nothing extra of consequence.
 /// Labels outside `[0, classes)` are a descriptive error, never an index
 /// panic.
-pub fn softmax_xent(logits: &[f32], labels: &[i32], rows: usize, classes: usize) -> Result<(f32, usize, Vec<f32>)> {
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    rows: usize,
+    classes: usize,
+) -> Result<(f32, usize, Vec<f32>)> {
     debug_assert_eq!(logits.len(), rows * classes);
     if labels.len() != rows {
         bail!("softmax_xent: {} labels for {} logit rows", labels.len(), rows);

@@ -36,8 +36,13 @@ fn thread_count(rows: usize, flops_per_row: usize) -> usize {
 /// threads.  `out` must hold `rows * row_elems` values.  Generic over the
 /// output element so the f32 GEMMs here and the int8 serving kernels
 /// ([`crate::ops::qmatmul`]) share one deterministic work-splitting rule.
-pub(crate) fn par_rows<T, F>(out: &mut [T], rows: usize, row_elems: usize, flops_per_row: usize, body: F)
-where
+pub(crate) fn par_rows<T, F>(
+    out: &mut [T],
+    rows: usize,
+    row_elems: usize,
+    flops_per_row: usize,
+    body: F,
+) where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
@@ -59,7 +64,14 @@ where
 }
 
 /// `y[b,o] = Σ_i x[b,i]·w[o,i] (+ bias[o])` — x: `[m,k]`, w: `[n,k]`.
-pub fn linear_fwd(x: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+pub fn linear_fwd(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), n * k);
     let mut y = vec![0.0f32; m * n];
@@ -175,7 +187,14 @@ mod tests {
     use super::*;
     use crate::testing::forall;
 
-    fn naive_fwd(x: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+    fn naive_fwd(
+        x: &[f32],
+        w: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
         let mut y = vec![0.0; m * n];
         for b in 0..m {
             for o in 0..n {

@@ -6,7 +6,13 @@ pub const LN_EPS: f32 = 1e-5;
 /// Normalize each of `rows` length-`d` rows.  Returns `(y, xhat, inv)`
 /// where `xhat`/`inv` are the residual cache for [`layernorm_bwd`]
 /// (`inv` is one `1/σ` per row).
-pub fn layernorm_fwd(x: &[f32], gamma: &[f32], beta: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+pub fn layernorm_fwd(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     debug_assert_eq!(x.len(), rows * d);
     let mut y = vec![0.0f32; rows * d];
     let mut xhat = vec![0.0f32; rows * d];

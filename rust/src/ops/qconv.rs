@@ -9,6 +9,8 @@
 //! positions contribute `(Z_x − Z_x)·qw = 0` after the zero-point
 //! correction, exactly like the float reference.
 
+#![warn(missing_docs)]
+
 use crate::ops::conv::{im2col_with, ConvDims};
 use crate::ops::qmatmul::qlinear_fwd;
 
@@ -65,7 +67,10 @@ mod tests {
             let sx = r.uniform_in(1e-2, 0.1);
             let zx = r.uniform_in(20.0, 230.0).round();
             let amax: Vec<f32> = (0..d.c_out)
-                .map(|o| w[o * d.patch()..(o + 1) * d.patch()].iter().fold(0f32, |a, &v| a.max(v.abs())))
+                .map(|o| {
+                    let row = &w[o * d.patch()..(o + 1) * d.patch()];
+                    row.iter().fold(0f32, |a, &v| a.max(v.abs()))
+                })
                 .collect();
             let sw = weight_scales(&amax, 8);
 
@@ -98,7 +103,9 @@ mod tests {
         let zx = 77i32;
         let qx = vec![zx as u8; 16];
         let qw: Vec<i8> = (0..2 * 9).map(|i| (i as i8) - 9).collect();
-        let wsum: Vec<i32> = (0..2).map(|o| qw[o * 9..(o + 1) * 9].iter().map(|&c| c as i32).sum()).collect();
+        let wsum: Vec<i32> = (0..2)
+            .map(|o| qw[o * 9..(o + 1) * 9].iter().map(|&c| c as i32).sum())
+            .collect();
         let y = qconv_fwd(&qx, &qw, &wsum, zx, &[0.01, 0.02], &d);
         assert!(y.iter().all(|&v| v == 0.0), "{y:?}");
     }

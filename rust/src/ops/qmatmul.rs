@@ -20,7 +20,13 @@
 //! `std::thread`-parallel over output rows via the same `par_rows`
 //! splitter as the f32 GEMMs in [`crate::ops::matmul`]: each thread
 //! owns a disjoint output chunk, i32 accumulation is exact, so results
-//! are bit-deterministic regardless of thread count.
+//! are bit-deterministic regardless of thread count.  Determinism is
+//! also per-*row*: each output element reduces over `k` in a fixed block
+//! order independent of the batch dimension, so serving an example in a
+//! micro-batch of 64 ([`crate::serve`]) yields the same bits as serving
+//! it alone.
+
+#![warn(missing_docs)]
 
 use crate::ops::matmul::par_rows;
 use crate::quant::{code_asym, code_sym};
@@ -32,7 +38,12 @@ const KC: usize = 512;
 /// Quantize weight rows to their symmetric signed codes (Eq. 3) and
 /// return `(codes, per-row code sums)` — the column-sum term of the
 /// zero-point correction, computed once per model at lowering time.
-pub fn quantize_weight_rows(w: &[f32], s: &[f32], row_size: usize, bits: u32) -> (Vec<i8>, Vec<i32>) {
+pub fn quantize_weight_rows(
+    w: &[f32],
+    s: &[f32],
+    row_size: usize,
+    bits: u32,
+) -> (Vec<i8>, Vec<i32>) {
     debug_assert_eq!(w.len(), s.len() * row_size);
     debug_assert!(bits <= 8, "int8 engine: weight codes must fit i8");
     let mut qw = vec![0i8; w.len()];
@@ -191,7 +202,9 @@ mod tests {
         let mut rng = crate::rng::Pcg64::new(9);
         let qx: Vec<u8> = (0..m * k).map(|_| (rng.uniform() * 255.0) as u8).collect();
         let qw: Vec<i8> = (0..n * k).map(|_| ((rng.uniform() - 0.5) * 254.0) as i8).collect();
-        let wsum: Vec<i32> = (0..n).map(|o| qw[o * k..(o + 1) * k].iter().map(|&c| c as i32).sum()).collect();
+        let wsum: Vec<i32> = (0..n)
+            .map(|o| qw[o * k..(o + 1) * k].iter().map(|&c| c as i32).sum())
+            .collect();
         let scale = vec![1e-4f32; n];
         let got = qlinear_fwd(&qx, &qw, &wsum, 128, &scale, None, m, k, n);
         for b in 0..m {

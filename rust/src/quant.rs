@@ -104,6 +104,25 @@ pub fn weight_scales(row_abs_max: &[f32], bits: u32) -> Vec<f32> {
 /// ([`crate::ops::qmatmul`]) are both defined through this function, so
 /// the integer engine and the fake-quant simulation agree on every code
 /// by construction.
+///
+/// Codes round-trip: dequantizing a code (`c·S_w`) reproduces the
+/// fake-quant value exactly, and in-range weights land within half a
+/// step of themselves:
+///
+/// ```
+/// use efqat::quant::{code_sym, fq_sym, qrange_sym};
+/// let (s, bits) = (0.01_f32, 8);
+/// for w in [0.1234_f32, -0.5, 0.0, 1.26] {
+///     let c = code_sym(w, s, bits);
+///     let (qmin, qmax) = qrange_sym(bits);
+///     assert!(c >= qmin && c <= qmax);
+///     assert_eq!(c as f32 * s, fq_sym(w, s, bits));       // code ↔ fake-quant
+///     assert!((w - c as f32 * s).abs() <= 0.5 * s + 1e-6); // round-trip error ≤ s/2
+/// }
+/// // out-of-range weights clip to the grid edge instead of overflowing i8
+/// assert_eq!(code_sym(10.0, s, bits), 127);
+/// assert_eq!(code_sym(-10.0, s, bits), -127);
+/// ```
 pub fn code_sym(w: f32, s: f32, bits: u32) -> i32 {
     let (qmin, qmax) = qrange_sym(bits);
     (w / s).round().clamp(qmin as f32, qmax as f32) as i32
@@ -112,6 +131,27 @@ pub fn code_sym(w: f32, s: f32, bits: u32) -> i32 {
 /// The b-bit asymmetric unsigned *code* of an activation (the
 /// round+shift+clip of Eq. 1).  Shared by [`fq_asym`] and the int8
 /// activation quantizer for bit-identical codes.
+///
+/// Codes round-trip through the zero point: `(c − Z_x)·S_x` rebuilds
+/// the fake-quant value exactly, zero maps to the zero-point code, and
+/// in-range activations land within half a step:
+///
+/// ```
+/// use efqat::quant::{code_asym, fq_asym, qrange_asym};
+/// let (s, z, bits) = (0.05_f32, 128.0_f32, 8);
+/// assert_eq!(code_asym(0.0, s, z, bits), 128);             // zero → Z_x exactly
+/// for x in [-1.7_f32, 0.03, 2.5] {
+///     let c = code_asym(x, s, z, bits);
+///     let (qmin, qmax) = qrange_asym(bits);
+///     assert!(c >= qmin && c <= qmax);
+///     let back = (c as f32 - z) * s;                        // dequantize
+///     assert_eq!(back, fq_asym(x, s, z, bits));             // code ↔ fake-quant
+///     assert!((x - back).abs() <= 0.5 * s + 1e-6);          // round-trip error ≤ s/2
+/// }
+/// // saturation: far outside the range clips to the u8 grid edges
+/// assert_eq!(code_asym(1e9, s, z, bits), 255);
+/// assert_eq!(code_asym(-1e9, s, z, bits), 0);
+/// ```
 pub fn code_asym(x: f32, s: f32, z: f32, bits: u32) -> i32 {
     let (qmin, qmax) = qrange_asym(bits);
     ((x / s).round() + z.round()).clamp(qmin as f32, qmax as f32) as i32

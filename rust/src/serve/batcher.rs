@@ -1,0 +1,145 @@
+//! Dynamic micro-batcher: groups queued requests into batches of at most
+//! `max_batch`, flushing early when `max_wait` elapses — whichever comes
+//! first.
+//!
+//! The batching window opens when the *first* request of a batch is
+//! popped, so a lone request waits at most `max_wait` before running,
+//! while a busy queue fills `max_batch` immediately and never waits.
+//! Requests are popped in FIFO order and batches are emitted in FIFO
+//! order, so no request can be overtaken by one submitted after it
+//! (fairness; completion order across a multi-worker pool may still
+//! interleave, which per-request routing makes harmless).
+
+#![warn(missing_docs)]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::queue::{BoundedQueue, Popped};
+
+/// Batching knobs (`--batch.max` / `--batch.wait-ms` on the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCfg {
+    /// Flush as soon as a batch holds this many requests.
+    pub max_batch: usize,
+    /// Flush a partial batch this long after its first request arrived.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        BatchCfg { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Run the batching loop until the request queue is closed and drained.
+///
+/// Every popped request is emitted in exactly one batch — including
+/// during shutdown: close-then-drain semantics of [`BoundedQueue`] mean
+/// the final partial batches still flow downstream before this returns.
+/// The batch queue is closed on exit so the worker pool winds down after
+/// draining it.
+pub fn run<T>(requests: &Arc<BoundedQueue<T>>, batches: &Arc<BoundedQueue<Vec<T>>>, cfg: BatchCfg) {
+    let max_batch = cfg.max_batch.max(1);
+    'serve: while let Some(first) = requests.pop() {
+        let deadline = Instant::now() + cfg.max_wait;
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(first);
+        let mut drained = false;
+        while batch.len() < max_batch {
+            match requests.pop_deadline(deadline) {
+                Popped::Item(v) => batch.push(v),
+                Popped::TimedOut => break,
+                Popped::Closed => {
+                    drained = true;
+                    break;
+                }
+            }
+        }
+        if batches.push(batch).is_err() {
+            // downstream gone (worker pool shut first): dropping the
+            // requests resolves their oneshots as abandoned
+            break 'serve;
+        }
+        if drained {
+            break;
+        }
+    }
+    batches.close();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    type ReqQueue = Arc<BoundedQueue<usize>>;
+    type BatchQueue = Arc<BoundedQueue<Vec<usize>>>;
+
+    fn spawn_batcher(cfg: BatchCfg, cap: usize) -> (ReqQueue, BatchQueue, thread::JoinHandle<()>) {
+        let requests = BoundedQueue::new(cap);
+        let batches = BoundedQueue::new(cap);
+        let (rq, bq) = (requests.clone(), batches.clone());
+        let h = thread::spawn(move || run(&rq, &bq, cfg));
+        (requests, batches, h)
+    }
+
+    #[test]
+    fn full_batches_flush_in_fifo_order() {
+        let cfg = BatchCfg { max_batch: 4, max_wait: Duration::from_secs(5) };
+        let (requests, batches, h) = spawn_batcher(cfg, 64);
+        for i in 0..8 {
+            requests.push(i).unwrap();
+        }
+        // two full batches despite the long deadline — max_batch flushes
+        assert_eq!(batches.pop(), Some(vec![0, 1, 2, 3]));
+        assert_eq!(batches.pop(), Some(vec![4, 5, 6, 7]));
+        requests.close();
+        h.join().unwrap();
+        assert_eq!(batches.pop(), None);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let cfg = BatchCfg { max_batch: 64, max_wait: Duration::from_millis(15) };
+        let (requests, batches, h) = spawn_batcher(cfg, 64);
+        let t0 = Instant::now();
+        requests.push(1).unwrap();
+        requests.push(2).unwrap();
+        // far fewer than max_batch queued: only the deadline can flush
+        assert_eq!(batches.pop(), Some(vec![1, 2]));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline flush did not engage");
+        requests.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn close_drains_pending_requests_into_final_batches() {
+        let cfg = BatchCfg { max_batch: 4, max_wait: Duration::from_secs(5) };
+        let requests = BoundedQueue::new(64);
+        let batches = BoundedQueue::new(64);
+        for i in 0..10 {
+            requests.push(i).unwrap();
+        }
+        requests.close();
+        // batcher started after close: everything buffered still flows
+        run(&requests, &batches, cfg);
+        let mut got = Vec::new();
+        while let Some(b) = batches.pop() {
+            assert!(b.len() <= 4);
+            got.extend(b);
+        }
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert!(batches.is_closed());
+    }
+
+    #[test]
+    fn exits_when_downstream_closes_first() {
+        let cfg = BatchCfg { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let (requests, batches, h) = spawn_batcher(cfg, 8);
+        batches.close();
+        requests.push(1).unwrap();
+        h.join().unwrap();
+    }
+}

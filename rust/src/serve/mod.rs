@@ -1,0 +1,291 @@
+//! Batched int8 serving runtime (`efqat serve`): the layer between the
+//! lowering boundary ([`crate::lower`]) and concurrent callers.
+//!
+//! Topology (all `std::thread` + `Condvar`, zero dependencies):
+//!
+//! ```text
+//!  submitters ──► BoundedQueue<Request> ──► batcher ──► BoundedQueue<Vec<Request>> ──► workers
+//!  (bounded: backpressure)      (flush on max_batch │ max_wait)            (shared Arc<Engine>)
+//!        ▲                                                                     │
+//!        └────────────────── oneshot per request (logits or error) ◄───────────┘
+//! ```
+//!
+//! * [`queue`] — the bounded MPSC queue + oneshot primitives; close is
+//!   *draining*, so shutdown answers everything already accepted.
+//! * [`batcher`] — dynamic micro-batching: a batch flushes when it holds
+//!   `max_batch` requests or `max_wait` after its first request,
+//!   whichever comes first; FIFO in, FIFO out.
+//! * [`worker`] — the pool: one engine forward per batch (amortizing the
+//!   `u8×i8→i32` GEMMs), per-example logits routed back through each
+//!   request's oneshot.  Per-example logits are bit-identical to a
+//!   batch-of-1 forward (see `worker`'s module docs).
+//! * [`protocol`] — the versioned JSONL request/response grammar (RFC
+//!   `docs/rfcs/0002-serve-protocol.md`) and the stdin/TCP drivers.
+//!
+//! The engine behind the pool is an [`worker::Engine`]: the lowered
+//! [`crate::lower::QuantizedGraph`] (`--exec int8`, the deployed
+//! arithmetic) or the fake-quant [`worker::FloatEngine`] (`--exec f32`,
+//! the A/B reference).
+
+#![warn(missing_docs)]
+
+pub mod batcher;
+pub mod protocol;
+pub mod queue;
+pub mod worker;
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::backend::Value;
+use crate::cfg::Config;
+use crate::error::{anyhow, Result};
+use crate::tensor::Tensor;
+
+pub use batcher::BatchCfg;
+pub use worker::{Engine, FloatEngine, Request};
+
+use queue::{oneshot, BoundedQueue, OneshotReceiver};
+
+/// Serving-runtime knobs; every field maps to a CLI/config key
+/// (see [`ServeCfg::from_config`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCfg {
+    /// Micro-batching policy (`--batch.max`, `--batch.wait-ms`).
+    pub batch: BatchCfg,
+    /// Worker threads running batches (`--serve.workers`).
+    pub workers: usize,
+    /// Request-queue capacity; a full queue blocks submitters
+    /// (`--serve.queue-cap`).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { batch: BatchCfg::default(), workers: 2, queue_cap: 1024 }
+    }
+}
+
+impl ServeCfg {
+    /// Read the serving knobs from config/CLI overrides:
+    /// `batch.max`, `batch.wait-ms`, `serve.workers`, `serve.queue-cap`.
+    pub fn from_config(cfg: &Config) -> ServeCfg {
+        let d = ServeCfg::default();
+        // sanitize before Duration::from_secs_f32, which panics on
+        // negative/NaN/inf input: out-of-domain waits fall back to the
+        // default (0 = "flush immediately" stays expressible)
+        let default_ms = d.batch.max_wait.as_secs_f32() * 1e3;
+        let mut wait_ms = cfg.f32("batch.wait-ms", default_ms);
+        if !wait_ms.is_finite() || wait_ms < 0.0 {
+            wait_ms = default_ms;
+        }
+        ServeCfg {
+            batch: BatchCfg {
+                max_batch: cfg.usize("batch.max", d.batch.max_batch),
+                max_wait: Duration::from_secs_f32(wait_ms / 1e3),
+            },
+            workers: cfg.usize("serve.workers", d.workers).max(1),
+            queue_cap: cfg.usize("serve.queue-cap", d.queue_cap),
+        }
+    }
+}
+
+/// Handle for one submitted request; resolves to its logits.
+pub struct Ticket {
+    rx: OneshotReceiver<Result<Tensor>>,
+}
+
+impl Ticket {
+    /// Block until this request's batch executed.  An abandoned request
+    /// (worker died mid-batch) is an error, never a hang.
+    pub fn wait(self) -> Result<Tensor> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|| Err(anyhow!("request abandoned: serving runtime shut down")))
+    }
+}
+
+/// A running serving runtime: queue + batcher thread + worker pool
+/// around a shared engine.
+///
+/// Dropping (or [`shutdown`](Server::shutdown)ing) the server closes the
+/// intake, drains every queued request through the workers, and joins
+/// all threads — accepted requests are always answered.
+pub struct Server {
+    engine: Arc<dyn Engine>,
+    requests: Arc<BoundedQueue<Request>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the batcher and worker threads around `engine`.
+    pub fn start(engine: Arc<dyn Engine>, cfg: ServeCfg) -> Server {
+        let requests: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_cap);
+        // small batch buffer: enough to keep every worker busy without
+        // letting latency hide in a deep intermediate queue
+        let batches: Arc<BoundedQueue<Vec<Request>>> = BoundedQueue::new(cfg.workers.max(1) * 2);
+        let mut threads = Vec::with_capacity(cfg.workers + 1);
+        {
+            let (rq, bq) = (requests.clone(), batches.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("efqat-batcher".into())
+                    .spawn(move || batcher::run(&rq, &bq, cfg.batch))
+                    .expect("spawn batcher"),
+            );
+        }
+        for i in 0..cfg.workers.max(1) {
+            let (eng, bq) = (engine.clone(), batches.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("efqat-worker-{i}"))
+                    .spawn(move || worker::run(&eng, &bq))
+                    .expect("spawn worker"),
+            );
+        }
+        Server { engine, requests, threads }
+    }
+
+    /// The engine this server answers with.
+    pub fn engine(&self) -> &Arc<dyn Engine> {
+        &self.engine
+    }
+
+    /// Submit one example for inference.  Validates dtype/shape/token
+    /// range immediately (a malformed example never joins a batch),
+    /// then enqueues — blocking while the queue is full (backpressure).
+    /// Fails once the server is shut down.
+    pub fn submit(&self, input: Value) -> Result<Ticket> {
+        self.engine.validate_example(&input)?;
+        let (tx, rx) = oneshot();
+        self.requests
+            .push(Request { input, tx })
+            .map_err(|_| anyhow!("{} serve: server is shut down", self.engine.model()))?;
+        Ok(Ticket { rx })
+    }
+
+    /// Requests currently queued (not yet batched) — telemetry/tests.
+    pub fn pending(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Close the intake, drain every queued request, join all threads.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // close-then-join IS the drain: the batcher pops until the
+        // request queue is empty, closes the batch queue, and the
+        // workers pop until that is empty too
+        self.requests.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_fixture {
+    use crate::lower::{lower, QuantizedGraph};
+
+    /// A lowered graph over the shared synthetic fixture
+    /// ([`crate::testing::synth_lowering_fixture`]) — what the serve unit
+    /// tests pool workers around.
+    pub fn lowered(model: &str) -> QuantizedGraph {
+        let (g, params, q) = crate::testing::synth_lowering_fixture(model);
+        lower(&g, &params, &q, 8, 8).unwrap()
+    }
+
+    pub fn lowered_mlp() -> QuantizedGraph {
+        lowered("mlp")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::time::Duration;
+
+    fn image(seed: u64) -> Value {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        Value::F32(Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) })
+    }
+
+    #[test]
+    fn single_request_matches_direct_forward() {
+        let qg = std::sync::Arc::new(test_fixture::lowered_mlp());
+        let server = Server::start(qg.clone(), ServeCfg::default());
+        let x = image(3);
+        let got = server.submit(x.clone()).unwrap().wait().unwrap();
+        let stacked = crate::serve::worker::stack_examples(qg.input, &[x]).unwrap();
+        let want = qg.forward(&stacked).unwrap();
+        assert_eq!(got.shape, vec![10]);
+        assert_eq!(got.data, want.data, "served logits must be bit-identical");
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_malformed_examples() {
+        let engine = std::sync::Arc::new(test_fixture::lowered_mlp());
+        let server = Server::start(engine, ServeCfg::default());
+        let bad = Value::F32(Tensor::zeros(&[3, 4, 4]));
+        let err = server.submit(bad).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+        let bad = Value::I32(crate::tensor::ITensor::zeros(&[16]));
+        let err = server.submit(bad).unwrap_err().to_string();
+        assert!(err.contains("f32"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        // one slow-ish config: big max_batch + long deadline would hold
+        // requests hostage if shutdown did not drain
+        let cfg = ServeCfg {
+            batch: BatchCfg { max_batch: 64, max_wait: Duration::from_secs(30) },
+            workers: 1,
+            queue_cap: 64,
+        };
+        let server = Server::start(std::sync::Arc::new(test_fixture::lowered_mlp()), cfg);
+        let tickets: Vec<Ticket> =
+            (0..5).map(|i| server.submit(image(i)).unwrap()).collect();
+        server.shutdown(); // closes intake, drains, joins
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().shape, vec![10]);
+        }
+    }
+
+    #[test]
+    fn serve_cfg_reads_cli_keys() {
+        let mut cfg = crate::cfg::Config::empty();
+        cfg.set("batch.max", "8");
+        cfg.set("batch.wait-ms", "0.5");
+        cfg.set("serve.workers", "3");
+        cfg.set("serve.queue-cap", "16");
+        let sc = ServeCfg::from_config(&cfg);
+        assert_eq!(sc.batch.max_batch, 8);
+        // f32 ms → Duration conversion: exact to within a nanosecond
+        let wait = sc.batch.max_wait.as_nanos() as i128;
+        assert!((wait - 500_000).abs() <= 1, "{wait}ns");
+        assert_eq!(sc.workers, 3);
+        assert_eq!(sc.queue_cap, 16);
+    }
+
+    #[test]
+    fn out_of_domain_wait_ms_falls_back_instead_of_panicking() {
+        for bad in ["-1", "nan", "inf"] {
+            let mut cfg = crate::cfg::Config::empty();
+            cfg.set("batch.wait-ms", bad);
+            let sc = ServeCfg::from_config(&cfg);
+            assert_eq!(sc.batch.max_wait, BatchCfg::default().max_wait, "{bad}");
+        }
+        // zero stays expressible: "flush immediately"
+        let mut cfg = crate::cfg::Config::empty();
+        cfg.set("batch.wait-ms", "0");
+        assert_eq!(ServeCfg::from_config(&cfg).batch.max_wait, Duration::ZERO);
+    }
+}

@@ -1,0 +1,288 @@
+//! The JSONL serve protocol (RFC `docs/rfcs/0002-serve-protocol.md`) and
+//! the stdin/TCP drivers of `efqat serve`.
+//!
+//! One request per line in, one response per line out:
+//!
+//! ```text
+//! → {"id": "r1", "data": [0.1, -0.4, ...]}
+//! ← {"id":"r1","shape":[10],"logits":[1.52,...]}
+//! → {"id": 7, "data": [3, 1, 4], "shape": [3]}
+//! ← {"id":7,"error":"mlp: want an f32 example of shape [3, 8, 8], got [3]"}
+//! ```
+//!
+//! Responses are written in request order (FIFO): the reader thread
+//! submits each parsed line to the [`Server`] and hands the ticket to a
+//! writer thread that resolves them in submission order.  Head-of-line
+//! waiting is bounded by the batcher deadline, and FIFO output means a
+//! client can correlate by position as well as by `id`.
+
+#![warn(missing_docs)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+use crate::backend::Value;
+use crate::error::{anyhow, bail, Context, Result};
+use crate::graph::InputKind;
+use crate::json::Json;
+use crate::tensor::{ITensor, Tensor};
+
+use super::queue::BoundedQueue;
+use super::{Engine, Server, Ticket};
+
+/// The protocol version this build speaks; requests may pin it with the
+/// optional `"v"` field and are rejected on mismatch (RFC 0002
+/// versioning rules).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Parse one request line against an engine's input domain.  Returns the
+/// request id (for the response envelope — `Json::Null` when the line is
+/// too broken to carry one) alongside the decoded example or the error
+/// to answer with.
+pub fn parse_request(line: &str, engine: &dyn Engine) -> (Json, Result<Value>) {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return (Json::Null, Err(anyhow!("bad request JSON: {e}"))),
+    };
+    let id = doc.opt("id").cloned().unwrap_or(Json::Null);
+    (id, decode_request(&doc, engine))
+}
+
+fn decode_request(doc: &Json, engine: &dyn Engine) -> Result<Value> {
+    if doc.opt("id").is_none() {
+        bail!("request is missing the required \"id\" field");
+    }
+    if let Some(v) = doc.opt("v") {
+        let v = v.num().context("request \"v\" field")? as u64;
+        if v != PROTOCOL_VERSION {
+            bail!("unsupported protocol version {v} (this build speaks {PROTOCOL_VERSION})");
+        }
+    }
+    let data = doc
+        .opt("data")
+        .ok_or_else(|| anyhow!("request is missing the required \"data\" field"))?
+        .arr()
+        .context("request \"data\" field")?;
+    let shape = match doc.opt("shape") {
+        Some(s) => s.shape().context("request \"shape\" field")?,
+        None => engine.example_shape(),
+    };
+    let want: usize = shape.iter().product();
+    if data.len() != want {
+        bail!("request \"data\" has {} elements, shape {shape:?} wants {want}", data.len());
+    }
+    match engine.input() {
+        InputKind::Image { .. } => {
+            let data: Result<Vec<f32>> = data.iter().map(|j| j.num().map(|n| n as f32)).collect();
+            Ok(Value::F32(Tensor { shape, data: data? }))
+        }
+        InputKind::Tokens { .. } => {
+            // token ids must arrive as integers — silently truncating 5.9
+            // to token 5 would serve a sequence the client never sent
+            let data: Result<Vec<i32>> = data
+                .iter()
+                .map(|j| {
+                    let n = j.num()?;
+                    if n.fract() != 0.0 || !(i32::MIN as f64..=i32::MAX as f64).contains(&n) {
+                        return Err(anyhow!("token id {n} is not an integer id"));
+                    }
+                    Ok(n as i32)
+                })
+                .collect();
+            Ok(Value::I32(ITensor { shape, data: data? }))
+        }
+    }
+}
+
+/// Render one response line (no trailing newline): logits on success,
+/// the error message otherwise.  Always single-line
+/// ([`Json::render_min`]).
+pub fn render_response(id: &Json, result: &Result<Tensor>) -> String {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("id".to_string(), id.clone());
+    match result {
+        Ok(t) => {
+            obj.insert(
+                "shape".to_string(),
+                Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            obj.insert(
+                "logits".to_string(),
+                Json::Arr(t.data.iter().map(|&v| Json::Num(v as f64)).collect()),
+            );
+        }
+        Err(e) => {
+            obj.insert("error".to_string(), Json::Str(e.to_string()));
+        }
+    }
+    Json::Obj(obj).render_min()
+}
+
+/// Drive the server over one line stream: read → submit → answer, with
+/// responses written in request order.  Returns the number of lines
+/// answered once the input reaches EOF and every ticket resolved.
+pub fn serve_stream<R: BufRead, W: Write + Send>(
+    server: &Server,
+    input: R,
+    mut output: W,
+) -> Result<usize> {
+    // tickets ride a second bounded queue so reading (and batching)
+    // stays ahead of the in-order writer
+    let tickets: std::sync::Arc<BoundedQueue<(Json, Result<Ticket>)>> = BoundedQueue::new(4096);
+    std::thread::scope(|s| -> Result<usize> {
+        let writer_tickets = tickets.clone();
+        let writer = s.spawn(move || -> Result<usize> {
+            let mut served = 0usize;
+            while let Some((id, outcome)) = writer_tickets.pop() {
+                let result = outcome.and_then(Ticket::wait);
+                let wrote = writeln!(output, "{}", render_response(&id, &result))
+                    .and_then(|()| output.flush());
+                if let Err(e) = wrote {
+                    // the reader may be blocked pushing into a full
+                    // tickets queue; closing it unblocks the reader so
+                    // serve_stream returns instead of wedging (e.g. on
+                    // EPIPE when the consumer of stdout went away)
+                    writer_tickets.close();
+                    return Err(anyhow!("writing response: {e}"));
+                }
+                served += 1;
+            }
+            Ok(served)
+        });
+        for line in input.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    tickets.close();
+                    let _ = writer.join();
+                    return Err(anyhow!("reading request line: {e}"));
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (id, parsed) = parse_request(&line, server.engine().as_ref());
+            let outcome = parsed.and_then(|v| server.submit(v));
+            if tickets.push((id, outcome)).is_err() {
+                break; // writer side is gone
+            }
+        }
+        tickets.close();
+        writer.join().map_err(|_| anyhow!("response writer panicked"))?
+    })
+}
+
+/// Serve JSONL over TCP: accept connections forever on
+/// `{bind}:{port}`, one reader/writer pair per connection, all feeding
+/// the same batcher — concurrent clients get co-batched.  Per-connection
+/// failures are logged and do not stop the listener; this returns only
+/// if the listener socket itself fails.
+pub fn serve_tcp(server: &Server, bind: &str, port: u16) -> Result<()> {
+    let listener =
+        TcpListener::bind((bind, port)).with_context(|| format!("binding {bind}:{port}"))?;
+    eprintln!("[serve] listening on {bind}:{port} (JSONL per connection)");
+    std::thread::scope(|s| {
+        for conn in listener.incoming() {
+            match conn {
+                Ok(stream) => {
+                    s.spawn(move || {
+                        let peer = stream
+                            .peer_addr()
+                            .map(|a| a.to_string())
+                            .unwrap_or_else(|_| "?".into());
+                        let reader = match stream.try_clone() {
+                            Ok(r) => BufReader::new(r),
+                            Err(e) => {
+                                eprintln!("[serve] {peer}: {e}");
+                                return;
+                            }
+                        };
+                        match serve_stream(server, reader, &stream) {
+                            Ok(n) => eprintln!("[serve] {peer}: answered {n} requests"),
+                            Err(e) => eprintln!("[serve] {peer}: {e}"),
+                        }
+                    });
+                }
+                Err(e) => eprintln!("[serve] accept failed: {e}"),
+            }
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::QuantizedGraph;
+    use std::sync::Arc;
+
+    fn mlp_engine() -> Arc<QuantizedGraph> {
+        Arc::new(crate::serve::test_fixture::lowered_mlp())
+    }
+
+    #[test]
+    fn parse_accepts_default_and_explicit_shape() {
+        let eng = mlp_engine();
+        let data: Vec<String> = (0..192).map(|i| format!("{}", i as f32 * 0.01)).collect();
+        let line = format!("{{\"id\": \"a\", \"data\": [{}]}}", data.join(","));
+        let (id, v) = parse_request(&line, eng.as_ref());
+        assert_eq!(id, Json::Str("a".into()));
+        assert_eq!(v.unwrap().shape(), &[3, 8, 8]);
+
+        let body = data.join(",");
+        let line = format!("{{\"id\": 2, \"v\": 1, \"shape\": [3, 8, 8], \"data\": [{body}]}}");
+        let (id, v) = parse_request(&line, eng.as_ref());
+        assert_eq!(id, Json::Num(2.0));
+        assert!(v.is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_bad_requests_with_best_effort_id() {
+        let eng = mlp_engine();
+        // broken JSON: no id recoverable
+        let (id, v) = parse_request("{nope", eng.as_ref());
+        assert_eq!(id, Json::Null);
+        assert!(v.unwrap_err().to_string().contains("bad request JSON"));
+        // well-formed but wrong element count: id still echoed
+        let (id, v) = parse_request(r#"{"id": "x", "data": [1, 2]}"#, eng.as_ref());
+        assert_eq!(id, Json::Str("x".into()));
+        assert!(v.unwrap_err().to_string().contains("2 elements"));
+        // missing id
+        let (_, v) = parse_request(r#"{"data": [1]}"#, eng.as_ref());
+        assert!(v.unwrap_err().to_string().contains("\"id\""));
+        // future protocol version
+        let (_, v) = parse_request(r#"{"id": 1, "v": 2, "data": [1]}"#, eng.as_ref());
+        assert!(v.unwrap_err().to_string().contains("protocol version"));
+    }
+
+    #[test]
+    fn token_requests_reject_non_integer_ids() {
+        let eng = Arc::new(crate::serve::test_fixture::lowered("tiny_tf"));
+        let ids: Vec<String> = (0..16).map(|i| (i % 64).to_string()).collect();
+        let line = format!("{{\"id\": 1, \"data\": [{}]}}", ids.join(","));
+        let (_, v) = parse_request(&line, eng.as_ref());
+        assert!(v.is_ok());
+        // 5.9 must not silently truncate to token 5
+        let mut ids = ids;
+        ids[3] = "5.9".to_string();
+        let line = format!("{{\"id\": 1, \"data\": [{}]}}", ids.join(","));
+        let (_, v) = parse_request(&line, eng.as_ref());
+        assert!(v.unwrap_err().to_string().contains("not an integer"), "float id accepted");
+    }
+
+    #[test]
+    fn response_lines_round_trip() {
+        let id = Json::Str("r9".into());
+        let ok = Ok(Tensor { shape: vec![2], data: vec![1.5, -0.25] });
+        let line = render_response(&id, &ok);
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.get("id").unwrap(), &id);
+        assert_eq!(doc.get("shape").unwrap().shape().unwrap(), vec![2]);
+        let logits = doc.get("logits").unwrap().arr().unwrap();
+        assert_eq!(logits[1].num().unwrap() as f32, -0.25);
+
+        let err: Result<Tensor> = Err(anyhow!("boom"));
+        let doc = Json::parse(&render_response(&id, &err)).unwrap();
+        assert_eq!(doc.get("error").unwrap().str().unwrap(), "boom");
+    }
+}

@@ -1,0 +1,354 @@
+//! std-only concurrency primitives of the serving runtime: a bounded
+//! MPSC queue and a oneshot result channel, both built on
+//! `Mutex` + `Condvar` (no external crates, matching the zero-dep
+//! default build).
+//!
+//! The request path is `submitters → [BoundedQueue<Request>] → batcher →
+//! [BoundedQueue<Vec<Request>>] → workers`, with each request carrying a
+//! [`OneshotSender`] the worker resolves — see [`crate::serve`] for the
+//! full topology.
+//!
+//! Shutdown is *draining* by design: [`BoundedQueue::close`] rejects new
+//! pushes but lets consumers pop everything already queued, so every
+//! accepted request is answered before the server's threads exit.
+
+#![warn(missing_docs)]
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Outcome of a deadline-bounded pop ([`BoundedQueue::pop_deadline`]).
+#[derive(Debug)]
+pub enum Popped<T> {
+    /// An item arrived before the deadline.
+    Item(T),
+    /// The deadline passed with the queue still empty (and open).
+    TimedOut,
+    /// The queue is closed and fully drained; no item will ever arrive.
+    Closed,
+}
+
+struct QueueState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer FIFO queue.
+///
+/// * `push` blocks while the queue is full (backpressure toward
+///   submitters) and fails once the queue is closed;
+/// * `pop` blocks while the queue is empty and returns `None` only when
+///   the queue is closed *and* drained — close never drops queued items;
+/// * `pop_deadline` is the batcher's deadline wait: an item, a timeout,
+///   or closed-and-drained, whichever comes first.
+///
+/// Shared by reference (`Arc<BoundedQueue<T>>`) between producer and
+/// consumer threads.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// Ignore mutex poisoning: queue state is a plain `VecDeque` + flag, so
+/// it is never left mid-invariant, and shutdown paths must keep working
+/// even after a worker thread panicked.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create a queue holding at most `cap` items (`cap` is clamped to
+    /// at least 1), ready to share via `Arc`.
+    pub fn new(cap: usize) -> Arc<BoundedQueue<T>> {
+        Arc::new(BoundedQueue {
+            cap: cap.max(1),
+            state: Mutex::new(QueueState { buf: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        })
+    }
+
+    /// Enqueue `v`, blocking while the queue is full.  Returns `Err(v)`
+    /// (handing the item back) if the queue is closed.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let mut st = lock(&self.state);
+        loop {
+            if st.closed {
+                return Err(v);
+            }
+            if st.buf.len() < self.cap {
+                st.buf.push_back(v);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Dequeue, blocking while the queue is empty.  Returns `None` only
+    /// when the queue is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = lock(&self.state);
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Dequeue, waiting no later than `deadline`.  The batcher uses this
+    /// to flush a partial batch when `max_wait` elapses before
+    /// `max_batch` requests arrive.
+    pub fn pop_deadline(&self, deadline: Instant) -> Popped<T> {
+        let mut st = lock(&self.state);
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.not_full.notify_one();
+                return Popped::Item(v);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+                return Popped::TimedOut;
+            };
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(st, left)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+            if timeout.timed_out() && st.buf.is_empty() && !st.closed {
+                return Popped::TimedOut;
+            }
+        }
+    }
+
+    /// Close the queue: subsequent pushes fail, consumers drain what is
+    /// already buffered, and every blocked thread wakes.  Idempotent.
+    pub fn close(&self) {
+        lock(&self.state).closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Whether [`close`](Self::close) has been called.
+    pub fn is_closed(&self) -> bool {
+        lock(&self.state).closed
+    }
+
+    /// Items currently buffered (a racy snapshot, for tests/telemetry).
+    pub fn len(&self) -> usize {
+        lock(&self.state).buf.len()
+    }
+
+    /// Whether the buffer is currently empty (racy snapshot).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oneshot
+// ---------------------------------------------------------------------------
+
+enum Slot<T> {
+    /// No value yet; sender still alive.
+    Pending,
+    /// Value delivered, waiting for the receiver.
+    Sent(T),
+    /// Sender dropped without sending (request was abandoned).
+    Hung,
+}
+
+struct OneshotInner<T> {
+    slot: Mutex<Slot<T>>,
+    cv: Condvar,
+}
+
+/// Sending half of a [`oneshot`] channel; consumed by
+/// [`send`](OneshotSender::send).  Dropping it unsent wakes the receiver
+/// with "no value" instead of deadlocking it — that is how a request
+/// abandoned mid-shutdown resolves.
+pub struct OneshotSender<T>(Option<Arc<OneshotInner<T>>>);
+
+/// Receiving half of a [`oneshot`] channel; consumed by
+/// [`recv`](OneshotReceiver::recv).
+pub struct OneshotReceiver<T>(Arc<OneshotInner<T>>);
+
+/// Create the per-request result channel: the worker resolves the
+/// sender, the submitter blocks on the receiver.
+pub fn oneshot<T>() -> (OneshotSender<T>, OneshotReceiver<T>) {
+    let inner = Arc::new(OneshotInner { slot: Mutex::new(Slot::Pending), cv: Condvar::new() });
+    (OneshotSender(Some(inner.clone())), OneshotReceiver(inner))
+}
+
+impl<T> OneshotSender<T> {
+    /// Deliver the value and wake the receiver.
+    pub fn send(mut self, v: T) {
+        if let Some(inner) = self.0.take() {
+            *lock(&inner.slot) = Slot::Sent(v);
+            inner.cv.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for OneshotSender<T> {
+    fn drop(&mut self) {
+        if let Some(inner) = self.0.take() {
+            let mut slot = lock(&inner.slot);
+            if matches!(*slot, Slot::Pending) {
+                *slot = Slot::Hung;
+                inner.cv.notify_all();
+            }
+        }
+    }
+}
+
+impl<T> OneshotReceiver<T> {
+    /// Block until the value arrives; `None` if the sender was dropped
+    /// without sending.
+    pub fn recv(self) -> Option<T> {
+        let mut slot = lock(&self.0.slot);
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Hung) {
+                Slot::Sent(v) => return Some(v),
+                Slot::Hung => return None,
+                Slot::Pending => {
+                    *slot = Slot::Pending;
+                    slot = self.0.cv.wait(slot).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_pop() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.push(2).is_ok());
+        // the producer is parked on not_full until we pop
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(1));
+        assert!(t.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_pops() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.push(8), Err(8));
+        // the buffered item survives close — draining shutdown
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q: Arc<BoundedQueue<u32>> = BoundedQueue::new(4);
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_then_delivers() {
+        let q: Arc<BoundedQueue<u32>> = BoundedQueue::new(4);
+        let t0 = Instant::now();
+        assert!(matches!(
+            q.pop_deadline(t0 + Duration::from_millis(10)),
+            Popped::TimedOut
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        q.push(3).unwrap();
+        assert!(matches!(
+            q.pop_deadline(Instant::now() + Duration::from_millis(10)),
+            Popped::Item(3)
+        ));
+    }
+
+    #[test]
+    fn pop_deadline_reports_closed() {
+        let q: Arc<BoundedQueue<u32>> = BoundedQueue::new(4);
+        q.close();
+        assert!(matches!(
+            q.pop_deadline(Instant::now() + Duration::from_millis(5)),
+            Popped::Closed
+        ));
+    }
+
+    #[test]
+    fn mpsc_under_contention_delivers_everything() {
+        let q = BoundedQueue::new(4);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push(p * 100 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let mut got = Vec::new();
+        for _ in 0..200 {
+            got.push(q.pop().unwrap());
+        }
+        for t in producers {
+            t.join().unwrap();
+        }
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 200);
+    }
+
+    #[test]
+    fn oneshot_delivers() {
+        let (tx, rx) = oneshot();
+        let t = thread::spawn(move || rx.recv());
+        tx.send(42);
+        assert_eq!(t.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn dropped_sender_resolves_receiver() {
+        let (tx, rx) = oneshot::<u32>();
+        drop(tx);
+        assert_eq!(rx.recv(), None);
+    }
+}

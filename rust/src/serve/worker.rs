@@ -1,0 +1,314 @@
+//! Worker pool: turns micro-batches into answers.
+//!
+//! Each worker pops one `Vec<Request>` at a time, stacks the per-example
+//! inputs into a single batched tensor, runs **one** engine forward over
+//! it (amortizing the `u8×i8→i32` GEMMs across the whole batch — the
+//! point of micro-batching), splits the logits back per example, and
+//! resolves each request's oneshot.  Per-example logits are *batch
+//! invariant*: every kernel on the serving path (integer GEMM, im2col
+//! conv, relu, pooling, layernorm, per-sequence attention, residual add)
+//! computes each example independently with a fixed reduction order, so
+//! a request answered inside a batch of 64 carries bit-identical logits
+//! to the same example served alone (`rust/tests/serve.rs` asserts
+//! this against `--exec int8` eval).
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::backend::Value;
+use crate::coordinator::binder::{bind_inputs, BindCtx};
+use crate::data::Batch;
+use crate::error::{anyhow, bail, Result};
+use crate::graph::{GraphStep, InputKind, Layer, LayerGraph, StepId, StepKind};
+use crate::lower::QuantizedGraph;
+use crate::model::{ParamStore, QParamStore, StateStore};
+use crate::tensor::{ITensor, Tensor};
+
+use super::queue::{BoundedQueue, OneshotSender};
+
+/// One queued inference request: a single example plus the channel its
+/// logits (or error) are routed back through.
+pub struct Request {
+    /// One example in the engine's input domain: f32 `[C, H, H]` images
+    /// or i32 `[T]` token ids — no batch dimension; the batcher adds it.
+    pub input: Value,
+    /// Resolved by the worker that executes this request's batch.
+    pub tx: OneshotSender<Result<Tensor>>,
+}
+
+/// A batch-flexible forward engine the serving runtime can pool workers
+/// over.  Implemented by the lowered int8 [`QuantizedGraph`] (the
+/// deployed arithmetic, `--exec int8`) and by [`FloatEngine`] (the
+/// fake-quant f32 reference, `--exec f32` — the A/B baseline).
+pub trait Engine: Send + Sync {
+    /// Model name, for logs and error messages.
+    fn model(&self) -> &str;
+    /// Input domain (image geometry or token sequence length).
+    fn input(&self) -> InputKind;
+    /// Trailing logits dimension (classes or vocab).
+    fn classes(&self) -> usize;
+    /// Vocabulary size for token models (`None` for image models) —
+    /// lets submission reject out-of-range ids *before* they join a
+    /// batch, where they would fail every co-batched request.
+    fn vocab(&self) -> Option<usize>;
+    /// Run one batched forward to logits, consuming the input.
+    fn forward_batch(&self, x: Value) -> Result<Tensor>;
+
+    /// The shape of one example (no batch dimension).
+    fn example_shape(&self) -> Vec<usize> {
+        match self.input() {
+            InputKind::Image { channels, hw } => vec![channels, hw, hw],
+            InputKind::Tokens { seq } => vec![seq],
+        }
+    }
+
+    /// Validate a single example at submission time: dtype, shape, and
+    /// (for token models) id range.  Rejecting here keeps a malformed
+    /// request from poisoning the healthy requests batched with it.
+    fn validate_example(&self, v: &Value) -> Result<()> {
+        let want = self.example_shape();
+        match (self.input(), v) {
+            (InputKind::Image { .. }, Value::F32(t)) => {
+                if t.shape != want {
+                    let m = self.model();
+                    bail!("{m}: want an f32 example of shape {want:?}, got {:?}", t.shape);
+                }
+            }
+            (InputKind::Tokens { .. }, Value::I32(t)) => {
+                if t.shape != want {
+                    let m = self.model();
+                    bail!("{m}: want i32 token ids of shape {want:?}, got {:?}", t.shape);
+                }
+                if let Some(vocab) = self.vocab() {
+                    if let Some(&id) = t.data.iter().find(|&&id| id < 0 || id as usize >= vocab) {
+                        bail!("{}: token id {id} out of range [0, {vocab})", self.model());
+                    }
+                }
+            }
+            (InputKind::Image { .. }, Value::I32(_)) => {
+                bail!("{}: this model serves f32 image examples, got i32 data", self.model())
+            }
+            (InputKind::Tokens { .. }, Value::F32(_)) => {
+                bail!("{}: this model serves i32 token examples, got f32 data", self.model())
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Engine for QuantizedGraph {
+    fn model(&self) -> &str {
+        &self.model
+    }
+
+    fn input(&self) -> InputKind {
+        self.input
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        // the inherent accessor, named explicitly so this cannot recurse
+        QuantizedGraph::vocab(self)
+    }
+
+    fn forward_batch(&self, x: Value) -> Result<Tensor> {
+        // zero-copy entry: the stacked batch moves straight into the
+        // integer engine (the satellite audit that motivated
+        // `forward_owned`)
+        self.forward_owned(x)
+    }
+}
+
+/// The fake-quant f32 serving baseline: executes the float
+/// [`LayerGraph`] forward (`GraphStep::forward_logits`) at whatever
+/// batch size the batcher produced.  Every call re-synthesizes a
+/// manifest for the batch size and re-binds parameters — an intentional
+/// non-optimization, since this engine exists to A/B the int8 path, not
+/// to win benchmarks.
+pub struct FloatEngine {
+    graph: LayerGraph,
+    id: StepId,
+    params: ParamStore,
+    qparams: Option<QParamStore>,
+}
+
+impl FloatEngine {
+    /// Wrap a trained graph for f32 serving.  `qparams: None` serves the
+    /// plain FP forward; `Some` fake-quants weights and activations per
+    /// call like the `wXaY` fwd artifacts.
+    pub fn new(
+        graph: LayerGraph,
+        params: ParamStore,
+        qparams: Option<QParamStore>,
+        w_bits: u32,
+        a_bits: u32,
+    ) -> FloatEngine {
+        let (w_bits, a_bits) = if qparams.is_some() { (w_bits, a_bits) } else { (0, 0) };
+        FloatEngine { graph, id: StepId { kind: StepKind::Fwd, w_bits, a_bits }, params, qparams }
+    }
+}
+
+impl Engine for FloatEngine {
+    fn model(&self) -> &str {
+        &self.graph.model
+    }
+
+    fn input(&self) -> InputKind {
+        self.graph.input
+    }
+
+    fn classes(&self) -> usize {
+        self.graph.classes
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        fn find(layers: &[Layer]) -> Option<usize> {
+            layers.iter().find_map(|l| match l {
+                Layer::Embed(e) => Some(e.vocab),
+                Layer::Residual(inner) => find(inner),
+                _ => None,
+            })
+        }
+        find(&self.graph.layers)
+    }
+
+    fn forward_batch(&self, x: Value) -> Result<Tensor> {
+        let b = *x.shape().first().ok_or_else(|| anyhow!("empty batch"))?;
+        let mut g = self.graph.clone();
+        g.batch = b;
+        let step = GraphStep::new(g, &format!("{}_serve_f32_b{b}", self.graph.model), self.id);
+        let mut batch = Batch { f32s: BTreeMap::new(), i32s: BTreeMap::new(), count: b };
+        // move the stacked batch in (no copy); zero labels satisfy the fwd
+        // manifest's `y` input without touching the logits
+        match (self.graph.input, x) {
+            (InputKind::Image { .. }, Value::F32(t)) => {
+                batch.i32s.insert("y".into(), ITensor::zeros(&[b]));
+                batch.f32s.insert("x".into(), t);
+            }
+            (InputKind::Tokens { seq }, Value::I32(t)) => {
+                batch.i32s.insert("y".into(), ITensor::zeros(&[b, seq]));
+                batch.i32s.insert("x".into(), t);
+            }
+            _ => bail!("{}: batch dtype does not match the graph's input kind", self.graph.model),
+        }
+        let states = StateStore::init(&step.man);
+        let ctx = BindCtx {
+            params: &self.params,
+            qparams: self.qparams.as_ref(),
+            states: &states,
+            batch: &batch,
+            selection: None,
+        };
+        let inputs = bind_inputs(&step.man, &ctx)?;
+        step.forward_logits(&inputs)
+    }
+}
+
+/// Stack per-example inputs into one batched value (`[B, ...]`).  All
+/// examples were validated at submission, so shapes agree; this only
+/// concatenates.
+pub fn stack_examples(kind: InputKind, examples: &[Value]) -> Result<Value> {
+    let b = examples.len();
+    match kind {
+        InputKind::Image { channels, hw } => {
+            let mut data = Vec::with_capacity(b * channels * hw * hw);
+            for v in examples {
+                data.extend_from_slice(&v.f32()?.data);
+            }
+            Ok(Value::F32(Tensor { shape: vec![b, channels, hw, hw], data }))
+        }
+        InputKind::Tokens { seq } => {
+            let mut data = Vec::with_capacity(b * seq);
+            for v in examples {
+                data.extend_from_slice(&v.i32()?.data);
+            }
+            Ok(Value::I32(ITensor { shape: vec![b, seq], data }))
+        }
+    }
+}
+
+/// Split batched logits `[B, ...]` back into `B` per-example tensors of
+/// shape `[...]` (the batch dimension dropped).
+pub fn split_logits(out: Tensor, b: usize) -> Result<Vec<Tensor>> {
+    if out.shape.first() != Some(&b) || b == 0 {
+        bail!("cannot split logits {:?} into {b} examples", out.shape);
+    }
+    let shape: Vec<usize> = out.shape[1..].to_vec();
+    let per: usize = shape.iter().product();
+    if per == 0 {
+        bail!("cannot split logits {:?}: zero-sized example dimension", out.shape);
+    }
+    Ok(out
+        .data
+        .chunks(per)
+        .map(|c| Tensor { shape: shape.clone(), data: c.to_vec() })
+        .collect())
+}
+
+/// Worker loop: consume batches until the batch queue is closed and
+/// drained.  An engine failure on a batch resolves *every* request in it
+/// with the error — no request is left hanging.
+pub fn run(engine: &Arc<dyn Engine>, batches: &Arc<BoundedQueue<Vec<Request>>>) {
+    while let Some(batch) = batches.pop() {
+        let b = batch.len();
+        let (inputs, txs): (Vec<Value>, Vec<OneshotSender<Result<Tensor>>>) =
+            batch.into_iter().map(|r| (r.input, r.tx)).unzip();
+        let result = stack_examples(engine.input(), &inputs)
+            .and_then(|x| engine.forward_batch(x))
+            .and_then(|y| split_logits(y, b));
+        match result {
+            Ok(parts) => {
+                for (tx, logits) in txs.into_iter().zip(parts) {
+                    tx.send(Ok(logits));
+                }
+            }
+            Err(e) => {
+                for tx in txs {
+                    tx.send(Err(anyhow!("{} serve: batch of {b} failed: {e}", engine.model())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_and_split_round_trip_images() {
+        let kind = InputKind::Image { channels: 1, hw: 2 };
+        let ex: Vec<Value> = (0..3)
+            .map(|i| Value::F32(Tensor { shape: vec![1, 2, 2], data: vec![i as f32; 4] }))
+            .collect();
+        let x = stack_examples(kind, &ex).unwrap();
+        assert_eq!(x.shape(), &[3, 1, 2, 2]);
+        let out = Tensor { shape: vec![3, 5], data: (0..15).map(|v| v as f32).collect() };
+        let parts = split_logits(out, 3).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[1].shape, vec![5]);
+        assert_eq!(parts[1].data, vec![5.0, 6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn stack_tokens_keeps_sequence_layout() {
+        let kind = InputKind::Tokens { seq: 2 };
+        let ex = [
+            Value::I32(ITensor { shape: vec![2], data: vec![1, 2] }),
+            Value::I32(ITensor { shape: vec![2], data: vec![3, 4] }),
+        ];
+        let x = stack_examples(kind, &ex).unwrap();
+        assert_eq!(x.i32().unwrap().data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn split_rejects_mismatched_batch() {
+        let out = Tensor { shape: vec![3, 5], data: vec![0.0; 15] };
+        assert!(split_logits(out, 4).is_err());
+    }
+}

@@ -25,6 +25,29 @@ pub fn fvec(rng: &mut Pcg64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
     (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
 }
 
+/// Synthetic-but-valid int8-lowering inputs for a native model: real
+/// weights from the init distribution, PTQ weight scales, and mid-grid
+/// activation qparams (`S_x = 0.05`, `Z_x = 128`).  One definition for
+/// the `lower.rs` units, the serve tests, and the serve benches, so the
+/// fixtures cannot drift from each other.
+pub fn synth_lowering_fixture(
+    model: &str,
+) -> (crate::graph::LayerGraph, crate::model::ParamStore, crate::model::QParamStore) {
+    use crate::graph::{build_manifest, StepId, StepKind};
+    use crate::quant::ActQParams;
+
+    let g = crate::backend::native::model_graph(model)
+        .unwrap_or_else(|| panic!("{model}: not a native model"));
+    let man = build_manifest(&g, "fwd", &StepId { kind: StepKind::Fwd, w_bits: 8, a_bits: 8 });
+    let params = crate::model::ParamStore::init(&man, 1);
+    let mut q = crate::model::QParamStore::default();
+    q.init_weight_scales(&man, &params, 8);
+    for s in &man.wsites {
+        q.act.insert(s.name.clone(), ActQParams { scale: 0.05, zero_point: 128.0 });
+    }
+    (g, params, q)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -570,7 +570,8 @@ fn native_outputs_respect_manifest_dtypes() {
     let states = StateStore::init(&step.manifest);
     let mut task = build_task("mlp", step.manifest.batch_size, &small_cfg()).unwrap();
     let batch = task.train.next_batch().unwrap();
-    let ctx = BindCtx { params: &params, qparams: None, states: &states, batch: &batch, selection: None };
+    let ctx =
+        BindCtx { params: &params, qparams: None, states: &states, batch: &batch, selection: None };
     let out = step.execute(&bind_inputs(&step.manifest, &ctx).unwrap()).unwrap();
     assert!(matches!(out.get("correct").unwrap(), Value::I32(_)));
     assert!(matches!(out.get("d:fc1.w").unwrap(), Value::F32(_)));

@@ -1,0 +1,259 @@
+//! Serving-runtime integration tests: the acceptance bar is that a
+//! request answered through the concurrent batched path carries
+//! **bit-identical** logits to the same example scored by offline
+//! `--exec int8` eval — micro-batching is a latency/throughput lever,
+//! never an accuracy one.
+//!
+//! Also covered here: deadline flush with a partial batch, routing to
+//! the correct submitter under concurrency, token-model validation at
+//! submission, the f32 reference engine, drain-on-shutdown, and the
+//! JSONL protocol end-to-end through `serve_stream`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use efqat::backend::native::model_graph;
+use efqat::backend::Value;
+use efqat::cfg::Config;
+use efqat::coordinator::tasks::test_loader;
+use efqat::coordinator::{evaluate_int8, example_inputs};
+use efqat::json::Json;
+use efqat::lower::{lower, QuantizedGraph};
+use efqat::model::{ParamStore, QParamStore};
+use efqat::serve::{BatchCfg, Engine, FloatEngine, Server, ServeCfg};
+use efqat::tensor::{ITensor, Tensor};
+
+/// The shared synthetic lowering fixture, pre-lowered: real weights from
+/// the init distribution, mid-grid activation qparams.
+fn fixture(model: &str) -> (QuantizedGraph, ParamStore, QParamStore) {
+    let (g, params, q) = efqat::testing::synth_lowering_fixture(model);
+    let qg = lower(&g, &params, &q, 8, 8).unwrap();
+    (qg, params, q)
+}
+
+fn serve_cfg(max_batch: usize, wait: Duration, workers: usize) -> ServeCfg {
+    ServeCfg { batch: BatchCfg { max_batch, max_wait: wait }, workers, queue_cap: 256 }
+}
+
+#[test]
+fn batched_serving_is_bit_identical_to_int8_eval() {
+    // the same loader drives offline eval and the request stream
+    let (qg, _, _) = fixture("mlp");
+    let cfg = Config::empty();
+    let mut loader = test_loader("mlp", 32, &cfg).unwrap();
+    let eval = evaluate_int8(&qg, &mut loader).unwrap();
+    assert!(eval.n > 0);
+
+    let engine = Arc::new(fixture("mlp").0);
+    let server = Server::start(
+        engine.clone() as Arc<dyn Engine>,
+        serve_cfg(16, Duration::from_millis(1), 2),
+    );
+    let mut loader = test_loader("mlp", 32, &cfg).unwrap();
+    loader.reset();
+    let mut checked = 0usize;
+    while let Some(batch) = loader.next_batch() {
+        let examples = example_inputs(engine.input, &batch).unwrap();
+        // single-request reference: a batch-of-1 forward per example
+        let singles: Vec<Tensor> = examples
+            .iter()
+            .map(|v| {
+                let one = match v {
+                    Value::F32(t) => {
+                        let mut shape = vec![1];
+                        shape.extend_from_slice(&t.shape);
+                        Value::F32(Tensor { shape, data: t.data.clone() })
+                    }
+                    Value::I32(t) => {
+                        let mut shape = vec![1];
+                        shape.extend_from_slice(&t.shape);
+                        Value::I32(ITensor { shape, data: t.data.clone() })
+                    }
+                };
+                engine.forward_owned(one).unwrap()
+            })
+            .collect();
+        let tickets: Vec<_> = examples.into_iter().map(|v| server.submit(v).unwrap()).collect();
+        for (t, want) in tickets.into_iter().zip(singles) {
+            let got = t.wait().unwrap();
+            assert_eq!(got.data, want.data, "batched logits diverged from batch-of-1");
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, eval.n, "served exactly the examples eval scored");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_get_their_own_logits() {
+    let engine = Arc::new(fixture("mlp").0);
+    let server = Server::start(
+        engine.clone() as Arc<dyn Engine>,
+        serve_cfg(8, Duration::from_millis(1), 3),
+    );
+    std::thread::scope(|s| {
+        for t in 0..6u64 {
+            let (server, engine) = (&server, &engine);
+            s.spawn(move || {
+                let mut rng = efqat::rng::Pcg64::new(100 + t);
+                for _ in 0..40 {
+                    let x = Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) };
+                    let want = engine
+                        .forward(&Value::F32(Tensor {
+                            shape: vec![1, 3, 8, 8],
+                            data: x.data.clone(),
+                        }))
+                        .unwrap();
+                    let got = server.submit(Value::F32(x)).unwrap().wait().unwrap();
+                    // distinct random inputs per submitter: any misrouted
+                    // response would fail this equality
+                    assert_eq!(got.data, want.data, "response routed to the wrong request");
+                }
+            });
+        }
+    });
+    server.shutdown();
+}
+
+#[test]
+fn deadline_flushes_partial_batches() {
+    let engine = Arc::new(fixture("mlp").0);
+    // max_batch far above the offered load: only the deadline can flush
+    let server = Server::start(
+        engine as Arc<dyn Engine>,
+        serve_cfg(1024, Duration::from_millis(10), 1),
+    );
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..3)
+        .map(|_| server.submit(Value::F32(Tensor::zeros(&[3, 8, 8]))).unwrap())
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().shape, vec![10]);
+    }
+    let waited = t0.elapsed();
+    assert!(waited >= Duration::from_millis(10), "flushed before the deadline: {waited:?}");
+    assert!(waited < Duration::from_secs(10), "deadline flush did not engage");
+    server.shutdown();
+}
+
+#[test]
+fn token_model_serves_and_validates_ids() {
+    let engine = Arc::new(fixture("tiny_tf").0);
+    let server = Server::start(
+        engine.clone() as Arc<dyn Engine>,
+        serve_cfg(4, Duration::from_millis(1), 2),
+    );
+    let ids = ITensor { shape: vec![16], data: (0..16).map(|i| i % 64).collect() };
+    let want = engine
+        .forward(&Value::I32(ITensor { shape: vec![1, 16], data: ids.data.clone() }))
+        .unwrap();
+    let got = server.submit(Value::I32(ids)).unwrap().wait().unwrap();
+    assert_eq!(got.shape, vec![16, 64]);
+    assert_eq!(got.data, want.data);
+    // an out-of-vocab id is rejected at submit — it never joins a batch
+    let bad = ITensor { shape: vec![16], data: vec![99; 16] };
+    let err = server.submit(Value::I32(bad)).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+    server.shutdown();
+}
+
+#[test]
+fn f32_engine_serves_within_fakequant_tolerance() {
+    let (qg, params, q) = fixture("convnet");
+    let engine = Arc::new(FloatEngine::new(
+        model_graph("convnet").unwrap(),
+        params,
+        Some(q),
+        8,
+        8,
+    ));
+    let server = Server::start(
+        engine as Arc<dyn Engine>,
+        serve_cfg(4, Duration::from_millis(1), 1),
+    );
+    let mut rng = efqat::rng::Pcg64::new(5);
+    // odd request count: exercises a partial trailing batch in f32 too
+    let examples: Vec<Tensor> =
+        (0..5).map(|_| Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) }).collect();
+    let tickets: Vec<_> = examples
+        .iter()
+        .map(|x| server.submit(Value::F32(x.clone())).unwrap())
+        .collect();
+    for (x, t) in examples.iter().zip(tickets) {
+        let got = t.wait().unwrap();
+        let int8 = qg
+            .forward(&Value::F32(Tensor { shape: vec![1, 3, 8, 8], data: x.data.clone() }))
+            .unwrap();
+        // f32 vs int8 agree to the lowering tolerance (int8_parity bar)
+        for (a, b) in got.data.iter().zip(&int8.data) {
+            assert!((a - b).abs() <= 1e-3 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn jsonl_stream_round_trips_bit_identically() {
+    let engine = Arc::new(fixture("mlp").0);
+    let server = Server::start(
+        engine.clone() as Arc<dyn Engine>,
+        serve_cfg(8, Duration::from_millis(1), 2),
+    );
+    let mut rng = efqat::rng::Pcg64::new(11);
+    let examples: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(192, 1.0)).collect();
+    let mut input = String::new();
+    for (i, ex) in examples.iter().enumerate() {
+        let nums: Vec<String> = ex.iter().map(|v| format!("{}", *v as f64)).collect();
+        input.push_str(&format!("{{\"id\": {i}, \"data\": [{}]}}\n", nums.join(",")));
+    }
+    input.push_str("{\"id\": \"bad\", \"data\": [1, 2]}\n"); // wrong length → error line
+
+    let mut out: Vec<u8> = Vec::new();
+    let n = efqat::serve::protocol::serve_stream(&server, input.as_bytes(), &mut out).unwrap();
+    assert_eq!(n, 5);
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim().lines().collect();
+    assert_eq!(lines.len(), 5);
+    // FIFO responses: line i answers request i
+    for (i, ex) in examples.iter().enumerate() {
+        let doc = Json::parse(lines[i]).unwrap();
+        assert_eq!(doc.get("id").unwrap().num().unwrap() as usize, i);
+        let logits: Vec<f32> = doc
+            .get("logits")
+            .unwrap()
+            .arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.num().unwrap() as f32)
+            .collect();
+        let want = engine
+            .forward(&Value::F32(Tensor { shape: vec![1, 3, 8, 8], data: ex.clone() }))
+            .unwrap();
+        // f64 text round-trip is exact for f32 values
+        assert_eq!(logits, want.data, "request {i}");
+    }
+    let err = Json::parse(lines[4]).unwrap();
+    assert_eq!(err.get("id").unwrap().str().unwrap(), "bad");
+    assert!(err.get("error").unwrap().str().unwrap().contains("2 elements"));
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_answers_everything_accepted() {
+    let engine = Arc::new(fixture("mlp").0);
+    let server = Server::start(
+        engine as Arc<dyn Engine>,
+        // huge batch + long wait: shutdown itself must force the drain
+        serve_cfg(512, Duration::from_secs(30), 2),
+    );
+    let tickets: Vec<_> = (0..40)
+        .map(|i| {
+            let mut rng = efqat::rng::Pcg64::new(i);
+            let x = Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) };
+            server.submit(Value::F32(x)).unwrap()
+        })
+        .collect();
+    server.shutdown();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().shape, vec![10], "request dropped during shutdown");
+    }
+}
