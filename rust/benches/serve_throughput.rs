@@ -70,7 +70,7 @@ fn main() {
         for &b in batches {
             let mut g = base.clone();
             g.batch = b;
-            let step = GraphStep::new(g, &format!("{model}_{bits}_fwd_b{b}"), id);
+            let step = GraphStep::new(g, &format!("{model}_{bits}_fwd_b{b}"), id).unwrap();
             let mut rng = Pcg64::new(17 + b as u64);
             // one synthetic batch: x plus zero labels, bound through the
             // coordinator's real binder (one role-dispatch in the tree)
@@ -114,13 +114,19 @@ fn main() {
             let int8_logits = qg.forward(&x).unwrap();
             let dev = max_abs_dev(&float_logits.data, &int8_logits.data);
 
-            // both sides run forward-to-logits only (no loss/metrics), so
-            // the speedup is the quantized GEMMs vs the fake-quant f32 path
+            // both sides run forward-to-logits only (no loss/metrics) over
+            // a reused workspace — the planned-executor steady state the
+            // serving workers actually run — so the speedup is the
+            // quantized GEMMs vs the fake-quant f32 path
+            let mut fws = efqat::exec::Workspace::new();
             let fs = bench(2, iters, || {
-                step.forward_logits(&inputs).unwrap();
+                let y = step.forward_logits_ws(&inputs, &mut fws).unwrap();
+                fws.give_tensor(y);
             });
+            let mut iws = efqat::exec::Workspace::new();
             let is = bench(2, iters, || {
-                qg.forward(&x).unwrap();
+                let y = qg.forward_into(&x, &mut iws).unwrap();
+                iws.give_f32(y);
             });
             let f_ex = b as f64 / fs.mean;
             let i_ex = b as f64 / is.mean;

@@ -63,8 +63,11 @@ fn time_artifact(
             selection: None,
         };
         let inputs = bind_inputs(&man, &ctx).unwrap();
+        // reused workspace: time the planned executor's steady state
+        let mut ws = efqat::exec::Workspace::new();
         let st = bench(2, iters, || {
-            step.execute(&inputs).unwrap();
+            let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+            ws.give_values(outs);
         });
         return st.mean;
     }
@@ -80,8 +83,11 @@ fn time_artifact(
         selection: selection.as_ref(),
     };
     let inputs = bind_inputs(&man, &ctx).unwrap();
+    // reused workspace: time the planned executor's steady state
+    let mut ws = efqat::exec::Workspace::new();
     let st = bench(2, iters, || {
-        step.execute(&inputs).unwrap();
+        let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+        ws.give_values(outs);
     });
     st.mean
 }

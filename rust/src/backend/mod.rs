@@ -31,6 +31,7 @@ use std::rc::Rc;
 use std::time::Duration;
 
 use crate::error::{anyhow, bail, Context, Result};
+use crate::exec::Workspace;
 use crate::model::{Dtype, IoSpec, Manifest};
 use crate::tensor::{ITensor, Tensor};
 
@@ -126,6 +127,15 @@ pub trait StepExec {
     /// compute for native) and exclude host-side packing/unpacking, so
     /// the Table 5 runtime numbers stay comparable across backends.
     fn run(&self, inputs: &[Value]) -> Result<(Vec<Value>, Duration)>;
+
+    /// Like [`Self::run`], drawing every scratch/output buffer from a
+    /// caller-owned [`Workspace`] so steady-state execution performs no
+    /// heap allocation.  Backends without a planned executor (PJRT —
+    /// the device owns its buffers) fall through to [`Self::run`].
+    fn run_ws(&self, inputs: &[Value], ws: &mut Workspace) -> Result<(Vec<Value>, Duration)> {
+        let _ = ws;
+        self.run(inputs)
+    }
 }
 
 /// One loaded step function: its manifest (the cross-language ABI) plus a
@@ -166,6 +176,26 @@ impl Step {
     /// backward-runtime measurements in Table 5 report exactly this
     /// duration — see [`StepExec::run`] for what it covers).
     pub fn execute_timed(&self, inputs: &[Value]) -> Result<(Outputs, Duration)> {
+        let mut ws = Workspace::new();
+        let (outs, dt) = self.execute_timed_ws(inputs, &mut ws)?;
+        let mut map = BTreeMap::new();
+        for (spec, v) in self.manifest.outputs.iter().zip(outs) {
+            map.insert(spec.name.clone(), v);
+        }
+        Ok((Outputs { map }, dt))
+    }
+
+    /// Positional, workspace-pooled execution: outputs come back in
+    /// manifest order with no named map built, and on the native
+    /// backend every buffer is drawn from `ws` — this is the trainer's
+    /// and evaluator's hot path.  Recycle the returned values with
+    /// [`Workspace::give_values`] after consuming them and the steady
+    /// state performs zero heap allocations per step.
+    pub fn execute_timed_ws(
+        &self,
+        inputs: &[Value],
+        ws: &mut Workspace,
+    ) -> Result<(Vec<Value>, Duration)> {
         if inputs.len() != self.manifest.inputs.len() {
             bail!(
                 "{}: {} inputs supplied, manifest wants {}",
@@ -177,7 +207,7 @@ impl Step {
         for (spec, v) in self.manifest.inputs.iter().zip(inputs) {
             check_abi(&self.manifest.name, "input", spec, v)?;
         }
-        let (outs, dt) = self.exec.run(inputs)?;
+        let (outs, dt) = self.exec.run_ws(inputs, ws)?;
         if outs.len() != self.manifest.outputs.len() {
             bail!(
                 "{}: {} outputs returned, manifest declares {}",
@@ -186,12 +216,10 @@ impl Step {
                 self.manifest.outputs.len()
             );
         }
-        let mut map = BTreeMap::new();
-        for (spec, v) in self.manifest.outputs.iter().zip(outs) {
-            check_abi(&self.manifest.name, "output", spec, &v)?;
-            map.insert(spec.name.clone(), v);
+        for (spec, v) in self.manifest.outputs.iter().zip(&outs) {
+            check_abi(&self.manifest.name, "output", spec, v)?;
         }
-        Ok((Outputs { map }, dt))
+        Ok((outs, dt))
     }
 }
 

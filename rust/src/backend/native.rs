@@ -202,6 +202,16 @@ impl StepExec for NativeStep {
         let outs = self.step.execute(inputs)?;
         Ok((outs, t0.elapsed()))
     }
+
+    fn run_ws(
+        &self,
+        inputs: &[Value],
+        ws: &mut crate::exec::Workspace,
+    ) -> Result<(Vec<Value>, Duration)> {
+        let t0 = Instant::now();
+        let outs = self.step.execute_ws(inputs, ws)?;
+        Ok((outs, t0.elapsed()))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -231,7 +241,7 @@ impl Backend for NativeBackend {
     fn load(&self, artifact: &str) -> Result<Step> {
         let t0 = Instant::now();
         let (model, id) = parse_artifact(artifact)?;
-        let step = GraphStep::new((model.build)(), artifact, id);
+        let step = GraphStep::new((model.build)(), artifact, id)?;
         let man = step.man.clone();
         Ok(Step::new(man, "native", t0.elapsed(), Box::new(NativeStep { step })))
     }

@@ -21,10 +21,11 @@ pub struct BindCtx<'a> {
 
 /// Pack host values in manifest input order.
 ///
-/// Note: values are cloned into owned [`Value`]s — one copy per input
-/// per step.  That keeps the backend seam lifetime-free; if profiling
-/// ever shows the copies on a hot path, the seam-preserving fix is
-/// `Value` holding `Rc<Tensor>` rather than borrowing here.
+/// Note: values are cloned into owned [`Value`]s — one allocation plus
+/// one copy per input per step.  That keeps the backend seam
+/// lifetime-free; hot loops should hold a [`Binder`] instead, which
+/// pays the allocations once and then refreshes the same buffers in
+/// place every step.
 pub fn bind_inputs(man: &Manifest, ctx: &BindCtx) -> Result<Vec<Value>> {
     let site_pos = |of: &Option<String>| -> Result<usize> {
         let name = of.as_deref().ok_or_else(|| anyhow!("selector input without 'of'"))?;
@@ -90,4 +91,139 @@ pub fn bind_inputs(man: &Manifest, ctx: &BindCtx) -> Result<Vec<Value>> {
         out.push(val);
     }
     Ok(out)
+}
+
+/// Persistent input binding for hot loops: the first [`Binder::bind`]
+/// builds the owned input vector via [`bind_inputs`]; every later call
+/// refreshes the same buffers in place (`copy_from_slice` — no heap
+/// allocation), so a training epoch's bind phase stops generating
+/// allocator traffic after the first step.  One binder serves one
+/// manifest; shapes are fixed by the artifact ABI, so in-place refresh
+/// is always size-exact (a drifting store is a descriptive error).
+#[derive(Default)]
+pub struct Binder {
+    vals: Vec<Value>,
+}
+
+impl Binder {
+    /// A binder with no bound inputs yet.
+    pub fn new() -> Binder {
+        Binder::default()
+    }
+
+    /// Bind (first call) or refresh (steady state) the input vector for
+    /// `man` from `ctx`, returning it in manifest order.
+    pub fn bind(&mut self, man: &Manifest, ctx: &BindCtx) -> Result<&[Value]> {
+        if self.vals.is_empty() {
+            self.vals = bind_inputs(man, ctx)?;
+            return Ok(&self.vals);
+        }
+        if self.vals.len() != man.inputs.len() {
+            bail!("binder: bound {} inputs, manifest wants {}", self.vals.len(), man.inputs.len());
+        }
+        let site_pos = |of: &Option<String>| -> Result<usize> {
+            let name = of.as_deref().ok_or_else(|| anyhow!("selector input without 'of'"))?;
+            man.wsites
+                .iter()
+                .position(|s| s.name == name)
+                .ok_or_else(|| anyhow!("unknown wsite {name:?}"))
+        };
+        for (spec, slot) in man.inputs.iter().zip(self.vals.iter_mut()) {
+            match spec.role.as_str() {
+                "param" => refresh_f32(spec, slot, &ctx.params.get(&spec.name)?.data)?,
+                "qparam_sw" => {
+                    let q = ctx.qparams.ok_or_else(|| anyhow!("artifact wants qparams"))?;
+                    let of = spec.of.as_deref().unwrap_or("");
+                    let sw = q.sw.get(of).ok_or_else(|| anyhow!("missing sw for {of:?}"))?;
+                    refresh_f32(spec, slot, &sw.data)?;
+                }
+                "qparam_sx" | "qparam_zx" => {
+                    let q = ctx.qparams.ok_or_else(|| anyhow!("artifact wants qparams"))?;
+                    let of = spec.of.as_deref().unwrap_or("");
+                    let act =
+                        q.act.get(of).ok_or_else(|| anyhow!("missing act qparams for {of:?}"))?;
+                    let v = if spec.role == "qparam_sx" { act.scale } else { act.zero_point };
+                    refresh_f32(spec, slot, &[v])?;
+                }
+                "state" => refresh_f32(spec, slot, &ctx.states.get(&spec.name)?.data)?,
+                "data" => match spec.dtype {
+                    Dtype::F32 => {
+                        let t = ctx
+                            .batch
+                            .f32s
+                            .get(&spec.name)
+                            .ok_or_else(|| anyhow!("batch missing f32 {:?}", spec.name))?;
+                        refresh_f32(spec, slot, &t.data)?;
+                    }
+                    Dtype::I32 => {
+                        let t = ctx
+                            .batch
+                            .i32s
+                            .get(&spec.name)
+                            .ok_or_else(|| anyhow!("batch missing i32 {:?}", spec.name))?;
+                        refresh_i32(spec, slot, &t.data)?;
+                    }
+                },
+                "index" => {
+                    let sel = ctx.selection.ok_or_else(|| anyhow!("artifact wants a selection"))?;
+                    let ids = &sel.channels[site_pos(&spec.of)?];
+                    if ids.len() != spec.shape[0] {
+                        bail!(
+                            "site {:?}: selection has {} channels, artifact slot is {}",
+                            spec.of,
+                            ids.len(),
+                            spec.shape[0]
+                        );
+                    }
+                    match slot {
+                        Value::I32(t) => {
+                            if t.data.len() != ids.len() {
+                                bail!("binder: input {:?} changed size", spec.name);
+                            }
+                            for (dst, &c) in t.data.iter_mut().zip(ids) {
+                                *dst = c as i32;
+                            }
+                        }
+                        Value::F32(_) => bail!("binder: input {:?} changed dtype", spec.name),
+                    }
+                }
+                "flag" => {
+                    let sel = ctx.selection.ok_or_else(|| anyhow!("artifact wants a selection"))?;
+                    let flag = sel.flags[site_pos(&spec.of)?] as i32;
+                    match slot {
+                        Value::I32(t) => t.data[0] = flag,
+                        Value::F32(_) => bail!("binder: input {:?} changed dtype", spec.name),
+                    }
+                }
+                other => bail!("unknown input role {other:?} ({})", spec.name),
+            }
+        }
+        Ok(&self.vals)
+    }
+}
+
+fn refresh_f32(spec: &crate::model::IoSpec, slot: &mut Value, src: &[f32]) -> Result<()> {
+    match slot {
+        Value::F32(t) => {
+            if t.data.len() != src.len() {
+                bail!("binder: input {:?} changed size", spec.name);
+            }
+            t.data.copy_from_slice(src);
+            Ok(())
+        }
+        Value::I32(_) => bail!("binder: input {:?} changed dtype", spec.name),
+    }
+}
+
+fn refresh_i32(spec: &crate::model::IoSpec, slot: &mut Value, src: &[i32]) -> Result<()> {
+    match slot {
+        Value::I32(t) => {
+            if t.data.len() != src.len() {
+                bail!("binder: input {:?} changed size", spec.name);
+            }
+            t.data.copy_from_slice(src);
+            Ok(())
+        }
+        Value::F32(_) => bail!("binder: input {:?} changed dtype", spec.name),
+    }
 }

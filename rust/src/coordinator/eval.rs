@@ -6,13 +6,14 @@
 use crate::backend::{Step, Value};
 use crate::data::{squad::span_f1, Batch, Loader};
 use crate::error::{anyhow, bail, Result};
+use crate::exec::Workspace;
 use crate::graph::InputKind;
 use crate::lower::QuantizedGraph;
 use crate::model::{ParamStore, QParamStore, StateStore};
-use crate::ops::loss::softmax_xent;
+use crate::ops::loss::softmax_xent_into;
 use crate::tensor::{argmax, ITensor, Tensor};
 
-use super::binder::{bind_inputs, BindCtx};
+use super::binder::{BindCtx, Binder};
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalResult {
@@ -37,6 +38,8 @@ impl EvalResult {
 
 /// Run the fwd artifact over the loader.  Handles wrap-padded final
 /// batches by scoring only the first `batch.count` examples host-side.
+/// One workspace and one persistent input binding serve every batch, so
+/// the loop stops generating allocator traffic after the first batch.
 pub fn evaluate(
     fwd: &Step,
     params: &ParamStore,
@@ -50,20 +53,26 @@ pub fn evaluate(
     loader.reset();
     let (mut loss_sum, mut correct, mut f1_sum, mut n) = (0f64, 0usize, 0f64, 0usize);
     let mut batches = 0usize;
+    let mut ws = Workspace::new();
+    let mut binder = Binder::new();
+    let loss_i = man.out_pos("loss")?;
+    let logits_i = man.out_pos("logits")?;
     while let Some(batch) = loader.next_batch() {
         let ctx = BindCtx { params, qparams, states, batch: &batch, selection: None };
-        let out = fwd.execute(&bind_inputs(man, &ctx)?)?;
-        loss_sum += out.loss()? as f64; // padded rows repeat real rows; bias is negligible for loss
+        let inputs = binder.bind(man, &ctx)?;
+        let (outs, _dt) = fwd.execute_timed_ws(inputs, &mut ws)?;
+        loss_sum += outs[loss_i].scalar()? as f64; // padded rows repeat real rows; negligible bias
         batches += 1;
-        let logits = out.get("logits")?.f32()?;
+        let logits = outs[logits_i].f32()?;
         if is_qa {
             let (em, f1) = score_spans(logits, &batch);
             correct += em;
             f1_sum += f1;
         } else {
-            correct += score_top1(logits, &batch);
+            correct += score_top1(&logits.data, &logits.shape, &batch);
         }
         n += batch.count;
+        ws.give_values(outs);
     }
     Ok(EvalResult {
         loss: (loss_sum / batches.max(1) as f64) as f32,
@@ -78,11 +87,13 @@ pub fn evaluate(
 /// final-batch handling mirror [`evaluate`] exactly, so the two paths'
 /// metrics are directly comparable (the parity tests assert identical
 /// accuracy); loss is recomputed host-side from the int8 logits with the
-/// same mean softmax cross-entropy the fwd artifacts emit.
+/// same mean softmax cross-entropy the fwd artifacts emit.  Every batch
+/// runs the planned forward over one reused workspace.
 pub fn evaluate_int8(qg: &QuantizedGraph, loader: &mut Loader) -> Result<EvalResult> {
     loader.reset();
     let (mut loss_sum, mut correct, mut n) = (0f64, 0usize, 0usize);
     let mut batches = 0usize;
+    let mut ws = Workspace::new();
     while let Some(mut batch) = loader.next_batch() {
         // move x out of the owned batch — no copy; only the labels are
         // read afterwards
@@ -94,15 +105,20 @@ pub fn evaluate_int8(qg: &QuantizedGraph, loader: &mut Loader) -> Result<EvalRes
                 batch.i32s.remove("x").ok_or_else(|| anyhow!("batch missing i32 \"x\""))?,
             ),
         };
-        let logits = qg.forward_owned(x)?;
+        let b = x.shape().first().copied().unwrap_or(0);
+        let logits = qg.forward_into(&x, &mut ws)?;
         let labels =
             &batch.i32s.get("y").ok_or_else(|| anyhow!("batch missing labels \"y\""))?.data;
-        let rows = logits.data.len() / qg.classes;
-        let (loss, _rows_ok, _dl) = softmax_xent(&logits.data, labels, rows, qg.classes)
+        let rows = logits.len() / qg.classes;
+        let mut dl = ws.take_f32(logits.len());
+        let (loss, _rows_ok) = softmax_xent_into(&logits, labels, rows, qg.classes, &mut dl)
             .map_err(|e| anyhow!("{} int8 eval: {e}", qg.model))?;
+        ws.give_f32(dl);
         loss_sum += loss as f64; // padded rows repeat real rows, like the float path
         batches += 1;
-        correct += score_top1(&logits, &batch);
+        let shape = qg.logits_dims(b);
+        correct += score_top1(&logits, &shape, &batch);
+        ws.give_f32(logits);
         n += batch.count;
     }
     Ok(EvalResult {
@@ -153,21 +169,21 @@ pub fn example_inputs(kind: InputKind, batch: &Batch) -> Result<Vec<Value>> {
     }
 }
 
-fn score_top1(logits: &crate::tensor::Tensor, batch: &Batch) -> usize {
+fn score_top1(logits: &[f32], shape: &[usize], batch: &Batch) -> usize {
     // logits [B, C] (CNNs) or [B, T, V] (LM: token accuracy)
     let labels = &batch.i32s["y"].data;
-    if logits.shape.len() == 2 {
-        let c = logits.shape[1];
+    if shape.len() == 2 {
+        let c = shape[1];
         (0..batch.count)
-            .filter(|&i| argmax(&logits.data[i * c..(i + 1) * c]) == labels[i] as usize)
+            .filter(|&i| argmax(&logits[i * c..(i + 1) * c]) == labels[i] as usize)
             .count()
     } else {
-        let (t, v) = (logits.shape[1], logits.shape[2]);
+        let (t, v) = (shape[1], shape[2]);
         let mut ok = 0;
         for i in 0..batch.count {
             for j in 0..t {
                 let off = (i * t + j) * v;
-                if argmax(&logits.data[off..off + v]) == labels[i * t + j] as usize {
+                if argmax(&logits[off..off + v]) == labels[i * t + j] as usize {
                     ok += 1;
                 }
             }

@@ -23,12 +23,13 @@ use std::time::Instant;
 use crate::backend::Step;
 use crate::data::Loader;
 use crate::error::{anyhow, bail, Result};
-use crate::freeze::{site_k, FreezePolicy, Mode, Selection, Site};
+use crate::exec::Workspace;
+use crate::freeze::{site_k, FreezePolicy, Mode, Site};
 use crate::model::{Manifest, ParamStore, QParamStore, StateStore};
 use crate::optim::{Adam, SgdMomentum};
 use crate::tensor::Tensor;
 
-use super::binder::{bind_inputs, BindCtx};
+use super::binder::{BindCtx, Binder};
 use super::metrics::{MetricsLog, StepRecord, StepTiming};
 
 /// Hyper-parameters of one training phase (defaults follow the paper §4).
@@ -111,40 +112,47 @@ pub fn pretrain_fp(
     let mut sgd = SgdMomentum::new(cfg.lr_w, cfg.momentum, cfg.weight_decay);
     let mut log = MetricsLog::new(&format!("pretrain:{}", man.model));
     let mut step_no = 0usize;
+    // one workspace + one persistent binding across all epochs/steps —
+    // the steady-state loop performs no per-step heap allocation
+    let mut ws = Workspace::new();
+    let mut binder = Binder::new();
+    let loss_i = man.out_pos("loss")?;
+    let correct_i = man.out_pos("correct")?;
     for _ in 0..epochs {
         loader.reset();
         while let Some(batch) = loader.next_batch() {
             let mut timing = StepTiming::default();
             let t0 = Instant::now();
             let ctx = BindCtx { params, qparams: None, states, batch: &batch, selection: None };
-            let inputs = bind_inputs(man, &ctx)?;
+            let inputs = binder.bind(man, &ctx)?;
             timing.bind = t0.elapsed();
-            let (out, dt) = step.execute_timed(&inputs)?;
+            let (outs, dt) = step.execute_timed_ws(inputs, &mut ws)?;
             timing.exec = dt;
 
             let t2 = Instant::now();
-            for spec in &man.outputs {
+            for (spec, val) in man.outputs.iter().zip(&outs) {
                 match spec.role.as_str() {
                     "grad" => {
                         let of = spec.of.as_deref().unwrap();
-                        let g = out.get(&spec.name)?.f32()?;
-                        sgd.apply_full(of, params.get_mut(of)?, &g.data);
+                        sgd.apply_full(of, params.get_mut(of)?, &val.f32()?.data);
                     }
                     "state" => {
                         let of = spec.of.as_deref().unwrap();
-                        *states.map.get_mut(of).unwrap() = out.get(&spec.name)?.f32()?.clone();
+                        *states.map.get_mut(of).unwrap() = val.f32()?.clone();
                     }
                     _ => {}
                 }
             }
             timing.optim = t2.elapsed();
-            log.push(StepRecord {
+            let rec = StepRecord {
                 step: step_no,
-                loss: out.loss()?,
-                correct: out.correct()?,
+                loss: outs[loss_i].scalar()?,
+                correct: outs[correct_i].i32()?.data[0],
                 batch: batch.count * label_rows_per_example(man),
                 timing,
-            });
+            };
+            ws.give_values(outs);
+            log.push(rec);
             step_no += 1;
         }
     }
@@ -188,6 +196,13 @@ pub struct EfqatTrainer {
     sgd: SgdMomentum,
     adam: Adam,
     step_no: usize,
+    /// One execution workspace reused across all epochs/steps.
+    ws: Workspace,
+    /// Persistent input binding, refreshed in place each step.
+    binder: Binder,
+    /// Positions of the `loss` / `correct` outputs, resolved once.
+    loss_i: usize,
+    correct_i: usize,
 }
 
 impl EfqatTrainer {
@@ -239,19 +254,40 @@ impl EfqatTrainer {
         };
         let sgd = SgdMomentum::new(cfg.lr_w, cfg.momentum, cfg.weight_decay);
         let adam = Adam::new(cfg.lr_q).log_domain(cfg.log_domain_scales);
-        Ok(EfqatTrainer { step, params, qparams, states, cfg, policy, sel, sgd, adam, step_no: 0 })
-    }
-
-    /// Current selection snapshot (bound to the artifact this step).
-    fn selection(&self) -> Option<Selection> {
-        self.policy.as_ref().map(|p| p.selection().clone())
+        let loss_i = man.out_pos("loss")?;
+        let correct_i = man.out_pos("correct")?;
+        Ok(EfqatTrainer {
+            step,
+            params,
+            qparams,
+            states,
+            cfg,
+            policy,
+            sel,
+            sgd,
+            adam,
+            step_no: 0,
+            ws: Workspace::new(),
+            binder: Binder::new(),
+            loss_i,
+            correct_i,
+        })
     }
 
     /// One training step on one batch.  Returns the step record.
+    ///
+    /// The hot loop is allocation-free in the steady state: the step
+    /// (an `Rc`) is cloned instead of its manifest, the freeze
+    /// selection is borrowed instead of cloned, inputs are refreshed in
+    /// place by the persistent [`Binder`], the executor draws every
+    /// buffer from the trainer's [`Workspace`], and the positional
+    /// outputs are recycled back into it after the optimizer consumes
+    /// them.
     pub fn train_step(&mut self, batch: &crate::data::Batch) -> Result<StepRecord> {
-        let man = self.step.manifest.clone();
+        let step = Rc::clone(&self.step);
+        let man = &step.manifest;
         let mut timing = StepTiming::default();
-        let selection = self.selection();
+        let selection = self.policy.as_ref().map(|p| p.selection());
 
         let t0 = Instant::now();
         let ctx = BindCtx {
@@ -259,12 +295,12 @@ impl EfqatTrainer {
             qparams: Some(&self.qparams),
             states: &self.states,
             batch,
-            selection: selection.as_ref(),
+            selection,
         };
-        let inputs = bind_inputs(&man, &ctx)?;
+        let inputs = self.binder.bind(man, &ctx)?;
         timing.bind = t0.elapsed();
 
-        let (out, dt) = self.step.execute_timed(&inputs)?;
+        let (outs, dt) = step.execute_timed_ws(inputs, &mut self.ws)?;
         timing.exec = dt;
 
         // ---- Optimizer Step (Algorithm 1) --------------------------------
@@ -277,11 +313,11 @@ impl EfqatTrainer {
                 .unwrap_or("")
         };
         let site_index = |name: &str| man.wsites.iter().position(|s| s.name == name);
-        for spec in &man.outputs {
+        for (spec, val) in man.outputs.iter().zip(&outs) {
             match spec.role.as_str() {
                 "grad" => {
                     let of = spec.of.as_deref().unwrap();
-                    let g = out.get(&spec.name)?.f32()?;
+                    let g = val.f32()?;
                     if let Some(site) = of.strip_prefix("sw:") {
                         // per-row weight scales: only unfrozen channels update
                         let sw = self.qparams.sw.get_mut(site).unwrap();
@@ -336,30 +372,38 @@ impl EfqatTrainer {
                 }
                 "state" => {
                     let of = spec.of.as_deref().unwrap();
-                    *self.states.map.get_mut(of).unwrap() = out.get(&spec.name)?.f32()?.clone();
+                    *self.states.map.get_mut(of).unwrap() = val.f32()?.clone();
                 }
                 _ => {}
             }
         }
         timing.optim = t2.elapsed();
 
+        let loss = outs[self.loss_i].scalar()?;
+        let correct = outs[self.correct_i].i32()?.data[0];
+        self.ws.give_values(outs);
+
         // ---- freezing-frequency bookkeeping -------------------------------
         let t3 = Instant::now();
         if let Some(policy) = &mut self.policy {
-            let weights: Vec<&Tensor> = policy
-                .sites
-                .iter()
-                .map(|s| self.params.get(&s.name).unwrap())
-                .collect();
-            policy.observe_samples(batch.count, &weights);
+            if policy.will_refresh(batch.count) {
+                let weights: Vec<&Tensor> = policy
+                    .sites
+                    .iter()
+                    .map(|s| self.params.get(&s.name).unwrap())
+                    .collect();
+                policy.observe_samples(batch.count, &weights);
+            } else {
+                policy.observe_samples(batch.count, &[]);
+            }
         }
         timing.freeze = t3.elapsed();
 
         let rec = StepRecord {
             step: self.step_no,
-            loss: out.loss()?,
-            correct: out.correct()?,
-            batch: batch.count * label_rows_per_example(&man),
+            loss,
+            correct,
+            batch: batch.count * label_rows_per_example(man),
             timing,
         };
         self.step_no += 1;

@@ -1,0 +1,341 @@
+//! Execution workspace: the reusable buffer arena behind the planned
+//! executors (RFC `docs/rfcs/0003-exec-plan.md`).
+//!
+//! EfQAT's headline win is a cheaper backward pass (paper Fig. 1 right),
+//! but an executor that re-allocates every activation, residual cache,
+//! and gradient buffer on every step hands a slice of that win back to
+//! the allocator.  A [`Workspace`] removes the allocator from the steady
+//! state: every scratch/cache/output buffer a planned execution needs is
+//! *taken* from a typed free list and *given* back when its lifetime
+//! ends, so after one warmup iteration the same capacities circulate
+//! forever and the per-step / per-request heap-allocation count is zero
+//! (`rust/tests/workspace_alloc.rs` asserts exactly that under a
+//! counting global allocator).
+//!
+//! Ownership model: `take_*` hands out an **owned** `Vec` (cleared and
+//! zero-resized to the requested length), which makes the arena safe to
+//! thread through recursive executors without aliasing bookkeeping —
+//! there are no offsets to keep disjoint and no `unsafe`.  The cost is
+//! one `memset` per take (cheaper than `malloc`+`memset`, and the point
+//! is reuse, not zero-fill avoidance).  Buffer selection is best-fit by
+//! capacity, so a serving workspace naturally implements the high-water
+//! resize policy: shrinking the dynamic batch reuses the large buffers,
+//! growing past the high-water mark grows exactly one buffer per slot
+//! and then plateaus.
+//!
+//! Who holds one:
+//!
+//! * the trainer — one workspace across all epochs/steps
+//!   ([`crate::coordinator::trainer`]);
+//! * offline eval — one across all batches ([`crate::coordinator::eval`]);
+//! * each serving worker — one per worker thread, reused across
+//!   micro-batches ([`crate::serve::worker`]);
+//! * the thin allocating wrappers (`GraphStep::execute`,
+//!   `QuantizedGraph::forward`) — a throwaway workspace per call, so
+//!   cold paths and tests keep their old signatures.
+
+use crate::backend::Value;
+use crate::tensor::{ITensor, Tensor};
+
+/// Reuse statistics — how well the steady state is holding.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WsStats {
+    /// Total `take_*` calls served.
+    pub takes: u64,
+    /// Takes that could not be served from pooled capacity and had to
+    /// allocate or grow.  Flat across iterations ⇒ zero steady-state
+    /// heap allocations from this workspace.
+    pub misses: u64,
+}
+
+/// A typed free-list arena of reusable buffers.
+///
+/// See the module docs for the ownership model; the short version is
+/// `let buf = ws.take_f32(n); ...; ws.give_f32(buf);` with `take`
+/// returning a cleared, zero-filled, length-`n` owned vector.
+#[derive(Default)]
+pub struct Workspace {
+    f32s: Vec<Vec<f32>>,
+    i32s: Vec<Vec<i32>>,
+    u8s: Vec<Vec<u8>>,
+    shapes: Vec<Vec<usize>>,
+    values: Vec<Vec<Value>>,
+    slots: Vec<Vec<Option<Value>>>,
+    stats: WsStats,
+}
+
+/// Free-list length cap.  Gives beyond this drop the buffer instead of
+/// pooling it: a workspace can *adopt* buffers it did not hand out
+/// (e.g. a serving worker recycling logits from an engine that does
+/// not draw from the workspace), and without a cap such adoption grows
+/// the pool — and the best-fit scan — without bound.  The planned
+/// executors keep well under this many live buffers, so the cap never
+/// affects the steady-state zero-allocation guarantee.
+const MAX_POOL: usize = 256;
+
+/// Best-fit pop: the smallest pooled vector whose capacity covers `n`,
+/// else the largest available (growing one buffer beats allocating a
+/// second), else `None`.
+fn pop_fit<T>(pool: &mut Vec<Vec<T>>, n: usize) -> Option<Vec<T>> {
+    let mut best: Option<(usize, usize)> = None; // (index, capacity)
+    let mut biggest: Option<(usize, usize)> = None;
+    for (i, v) in pool.iter().enumerate() {
+        let cap = v.capacity();
+        if cap >= n && !matches!(best, Some((_, b)) if b <= cap) {
+            best = Some((i, cap));
+        }
+        if !matches!(biggest, Some((_, b)) if b >= cap) {
+            biggest = Some((i, cap));
+        }
+    }
+    best.or(biggest).map(|(i, _)| pool.swap_remove(i))
+}
+
+impl Workspace {
+    /// A fresh, empty workspace.
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Reuse statistics (takes vs. pool misses).
+    pub fn stats(&self) -> WsStats {
+        self.stats
+    }
+
+    fn note(&mut self, missed: bool) {
+        self.stats.takes += 1;
+        if missed {
+            self.stats.misses += 1;
+        }
+    }
+
+    /// Take a zero-filled `f32` buffer of length `n`.
+    pub fn take_f32(&mut self, n: usize) -> Vec<f32> {
+        let mut v = pop_fit(&mut self.f32s, n).unwrap_or_default();
+        self.note(v.capacity() < n);
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Return an `f32` buffer to the pool.  Zero-capacity vectors (the
+    /// `Vec::new()` placeholders some caches use) are dropped — they
+    /// hold no memory worth keeping and would silt up the free list.
+    pub fn give_f32(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.f32s.len() < MAX_POOL {
+            self.f32s.push(v);
+        }
+    }
+
+    /// Take a zero-filled `i32` buffer of length `n`.
+    pub fn take_i32(&mut self, n: usize) -> Vec<i32> {
+        let mut v = pop_fit(&mut self.i32s, n).unwrap_or_default();
+        self.note(v.capacity() < n);
+        v.clear();
+        v.resize(n, 0);
+        v
+    }
+
+    /// Return an `i32` buffer to the pool (zero-capacity vectors drop).
+    pub fn give_i32(&mut self, v: Vec<i32>) {
+        if v.capacity() > 0 && self.i32s.len() < MAX_POOL {
+            self.i32s.push(v);
+        }
+    }
+
+    /// Take a zero-filled `u8` code buffer of length `n`.
+    pub fn take_u8(&mut self, n: usize) -> Vec<u8> {
+        let mut v = pop_fit(&mut self.u8s, n).unwrap_or_default();
+        self.note(v.capacity() < n);
+        v.clear();
+        v.resize(n, 0);
+        v
+    }
+
+    /// Return a `u8` buffer to the pool (zero-capacity vectors drop).
+    pub fn give_u8(&mut self, v: Vec<u8>) {
+        if v.capacity() > 0 && self.u8s.len() < MAX_POOL {
+            self.u8s.push(v);
+        }
+    }
+
+    /// Take a shape vector holding a copy of `dims`.
+    pub fn take_shape(&mut self, dims: &[usize]) -> Vec<usize> {
+        let mut v = pop_fit(&mut self.shapes, dims.len()).unwrap_or_default();
+        self.note(v.capacity() < dims.len());
+        v.clear();
+        v.extend_from_slice(dims);
+        v
+    }
+
+    /// Take an *empty* index vector with capacity for at least `n`
+    /// entries — for callers that push a data-dependent number of
+    /// elements (≤ `n`) instead of copying a template.  Requesting the
+    /// full capacity up front keeps the steady state reallocation-free
+    /// and the miss counter honest.
+    pub fn take_indices(&mut self, n: usize) -> Vec<usize> {
+        let mut v = pop_fit(&mut self.shapes, n).unwrap_or_default();
+        self.note(v.capacity() < n);
+        v.clear();
+        v.reserve(n);
+        v
+    }
+
+    /// Return a shape vector to the pool (zero-capacity vectors drop).
+    pub fn give_shape(&mut self, v: Vec<usize>) {
+        if v.capacity() > 0 && self.shapes.len() < MAX_POOL {
+            self.shapes.push(v);
+        }
+    }
+
+    /// Build an f32 tensor from pooled shape + the given (typically
+    /// pooled) data.
+    pub fn tensor(&mut self, dims: &[usize], data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { shape: self.take_shape(dims), data }
+    }
+
+    /// Build a pooled `[1]`-shaped scalar tensor.
+    pub fn scalar(&mut self, v: f32) -> Tensor {
+        let mut data = self.take_f32(1);
+        data[0] = v;
+        Tensor { shape: self.take_shape(&[1]), data }
+    }
+
+    /// Build an i32 tensor from pooled shape + the given data.
+    pub fn itensor(&mut self, dims: &[usize], data: Vec<i32>) -> ITensor {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        ITensor { shape: self.take_shape(dims), data }
+    }
+
+    /// Dismantle a tensor back into the pools.
+    pub fn give_tensor(&mut self, t: Tensor) {
+        self.give_shape(t.shape);
+        self.give_f32(t.data);
+    }
+
+    /// Dismantle an i32 tensor back into the pools.
+    pub fn give_itensor(&mut self, t: ITensor) {
+        self.give_shape(t.shape);
+        self.give_i32(t.data);
+    }
+
+    /// Dismantle a backend value back into the pools.
+    pub fn give_value(&mut self, v: Value) {
+        match v {
+            Value::F32(t) => self.give_tensor(t),
+            Value::I32(t) => self.give_itensor(t),
+        }
+    }
+
+    /// Take an empty reusable `Vec<Value>` (positional outputs).
+    pub fn take_values(&mut self) -> Vec<Value> {
+        self.values.pop().unwrap_or_default()
+    }
+
+    /// Recycle a positional output vector *and* every value in it.
+    pub fn give_values(&mut self, mut vals: Vec<Value>) {
+        while let Some(v) = vals.pop() {
+            self.give_value(v);
+        }
+        self.values.push(vals);
+    }
+
+    /// Take an output-slot vector of `n` empty slots.
+    pub fn take_slots(&mut self, n: usize) -> Vec<Option<Value>> {
+        let mut v = self.slots.pop().unwrap_or_default();
+        v.clear();
+        v.resize_with(n, || None);
+        v
+    }
+
+    /// Recycle an output-slot vector, dismantling any leftover values.
+    pub fn give_slots(&mut self, mut slots: Vec<Option<Value>>) {
+        while let Some(slot) = slots.pop() {
+            if let Some(v) = slot {
+                self.give_value(v);
+            }
+        }
+        self.slots.push(slots);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zero_fills_and_reuse_hits_the_pool() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_f32(16);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a[3] = 7.0;
+        ws.give_f32(a);
+        // the dirty buffer comes back clean
+        let b = ws.take_f32(16);
+        assert!(b.iter().all(|&v| v == 0.0));
+        ws.give_f32(b);
+        let s = ws.stats();
+        assert_eq!(s.takes, 2);
+        assert_eq!(s.misses, 1, "second take must be a pool hit");
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_capacity() {
+        let mut ws = Workspace::new();
+        let small = ws.take_f32(8);
+        let big = ws.take_f32(1024);
+        let small_cap = small.capacity();
+        ws.give_f32(small);
+        ws.give_f32(big);
+        let got = ws.take_f32(8);
+        assert_eq!(got.capacity(), small_cap, "best-fit should not burn the big buffer");
+        ws.give_f32(got);
+    }
+
+    #[test]
+    fn shrink_then_regrow_stays_within_high_water() {
+        let mut ws = Workspace::new();
+        let a = ws.take_f32(100);
+        ws.give_f32(a);
+        let before = ws.stats().misses;
+        for n in [40usize, 100, 7, 100] {
+            let v = ws.take_f32(n);
+            assert_eq!(v.len(), n);
+            ws.give_f32(v);
+        }
+        assert_eq!(ws.stats().misses, before, "within the high-water mark nothing allocates");
+        // growing past the mark misses exactly once, then plateaus again
+        let v = ws.take_f32(200);
+        ws.give_f32(v);
+        let after_grow = ws.stats().misses;
+        assert_eq!(after_grow, before + 1);
+        let v = ws.take_f32(200);
+        ws.give_f32(v);
+        assert_eq!(ws.stats().misses, after_grow);
+    }
+
+    #[test]
+    fn tensors_and_values_round_trip_through_the_pools() {
+        let mut ws = Workspace::new();
+        let data = ws.take_f32(6);
+        let t = ws.tensor(&[2, 3], data);
+        assert_eq!(t.shape, vec![2, 3]);
+        ws.give_value(Value::F32(t));
+        let s = ws.scalar(4.5);
+        assert_eq!((s.shape.as_slice(), s.data[0]), (&[1usize][..], 4.5));
+        ws.give_tensor(s);
+        let mut d = ws.take_i32(2);
+        d[1] = 9;
+        let it = ws.itensor(&[2], d);
+        assert_eq!(it.data, vec![0, 9]);
+        ws.give_value(Value::I32(it));
+        let mut slots = ws.take_slots(3);
+        slots[1] = Some(Value::F32(ws.scalar(1.0)));
+        ws.give_slots(slots);
+        let vals = ws.take_values();
+        assert!(vals.is_empty());
+        ws.give_values(vals);
+    }
+}

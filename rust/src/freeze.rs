@@ -111,6 +111,13 @@ impl FreezePolicy {
         &self.importance[site]
     }
 
+    /// Whether observing `n` more samples would trigger a refresh —
+    /// hot loops use this to skip gathering weight references (and the
+    /// allocation that entails) on the steps between refreshes.
+    pub fn will_refresh(&self, n: usize) -> bool {
+        self.samples_since_update + n >= self.freq.max(1)
+    }
+
     /// Advance the sample counter; when `f` samples have passed, refresh the
     /// importance of the currently-unfrozen channels and reselect.
     /// Returns true if a refresh happened.

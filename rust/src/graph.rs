@@ -12,7 +12,10 @@
 //!   artifact kind, byte-compatible with what `python/compile/aot.py`
 //!   emits for the same model;
 //! * executes forward / backward / calibration generically
-//!   ([`GraphStep`]), dispatching the math to [`crate::ops`].
+//!   ([`GraphStep`]), dispatching the math to [`crate::ops`] — through
+//!   an execution plan compiled once at load (names resolved to
+//!   positions) over a reusable [`crate::exec::Workspace`], so
+//!   steady-state steps perform zero heap allocations (RFC 0003).
 //!
 //! The point of the IR is that EfQAT's frozen-channel-aware partial
 //! backward (paper Fig. 1 right) is implemented **once** — the
@@ -27,19 +30,25 @@
 //! ([`crate::lower::lower`]), which compiles the same `Vec<Layer>` into
 //! a [`crate::lower::QuantizedGraph`] of true integer kernels.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 use crate::backend::Value;
 use crate::error::{anyhow, bail, Result};
+use crate::exec::Workspace;
 use crate::freeze::site_k;
 use crate::model::{Dtype, Init, IoSpec, Manifest, ParamInfo, WSite};
-use crate::ops::attention::{sdpa_bwd, sdpa_fwd, AttnDims};
+use crate::ops::attention::{sdpa_bwd_into, sdpa_fwd_into, AttnDims};
 use crate::ops::conv::{self, ConvDims};
-use crate::ops::elementwise::{embed_bwd, embed_fwd, relu_bwd, relu_fwd};
-use crate::ops::fakequant::{fq_act_bwd_tensor, fq_act_tensor, fq_weight_bwd_rows, fq_weight_rows};
-use crate::ops::loss::softmax_xent;
-use crate::ops::matmul::{col_sum, linear_fwd, matmul_dy_w, matmul_dyt_x, partial_dw};
-use crate::ops::norm::{layernorm_bwd, layernorm_fwd};
+use crate::ops::elementwise::{embed_bwd_into, embed_fwd_into, relu_fwd_into};
+use crate::ops::fakequant::{
+    fq_act_bwd_tensor_into, fq_act_tensor_into, fq_weight_bwd_rows_into, fq_weight_rows_into,
+};
+use crate::ops::loss::softmax_xent_into;
+use crate::ops::matmul::{
+    col_sum_into, linear_fwd_into, matmul_dy_w_into, matmul_dyt_x_into, partial_dw_into,
+};
+use crate::ops::norm::{layernorm_bwd_into, layernorm_fwd_into};
 use crate::tensor::{ITensor, Tensor};
 
 // ---------------------------------------------------------------------------
@@ -473,61 +482,291 @@ pub fn build_manifest(g: &LayerGraph, name: &str, id: &StepId) -> Manifest {
 }
 
 // ---------------------------------------------------------------------------
+// Execution plan: manifest names resolved to positions, once, at load
+// ---------------------------------------------------------------------------
+//
+// The executor below never performs a name lookup per step.  At
+// `GraphStep::new` time the graph is compiled against its own manifest
+// into a `GraphPlan`: every parameter / qparam / selector input becomes
+// a position into the positional input vector, and every gradient /
+// metric output becomes a slot into the positional output vector.  The
+// per-step cost of the old `Vals` map (a BTreeMap rebuilt per
+// execution, plus `format!` keys on every access — including a full
+// clone of each site's `sw:` scale tensor) is gone.
+
+/// Input positions of one site's quantization parameters.
+struct QSlots {
+    sw: usize,
+    sx: usize,
+    zx: usize,
+}
+
+/// Compile-time weight-gradient selection: which selector input (if
+/// any) gates this site at run time.
+enum PlanSel {
+    All,
+    None,
+    /// Position of the `id:{site}` index vector (CWPL/CWPN ratios).
+    Idx(usize),
+    /// Position of the `flag:{site}` scalar (LWPN).
+    Flag(usize),
+}
+
+/// One quantized-linear site with every manifest name resolved.
+struct PlanLin {
+    /// Site name (`{layer}.w`) — diagnostics and calib taps only.
+    site: String,
+    c_in: usize,
+    c_out: usize,
+    w: usize,
+    b_in: Option<usize>,
+    q: Option<QSlots>,
+    sel: PlanSel,
+    dw: Option<usize>,
+    db: Option<usize>,
+    dsw: Option<usize>,
+    dsx: Option<usize>,
+    dzx: Option<usize>,
+}
+
+struct PlanConv {
+    /// The site view: `c_in` here is the im2col patch size.
+    lin: PlanLin,
+    c_in: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+}
+
+struct PlanNorm {
+    name: String,
+    d: usize,
+    g: usize,
+    b: usize,
+    dg: Option<usize>,
+    db: Option<usize>,
+}
+
+struct PlanEmbed {
+    vocab: usize,
+    seq: usize,
+    d: usize,
+    tok: usize,
+    pos: usize,
+    dtok: Option<usize>,
+    dpos: Option<usize>,
+}
+
+struct PlanAttn {
+    proj: [PlanLin; 4],
+    heads: usize,
+    causal: bool,
+    d: usize,
+}
+
+/// The planned mirror of one [`Layer`].
+#[allow(clippy::large_enum_variant)] // compile-time structure, built once per artifact
+enum PlanLayer {
+    Flatten,
+    Linear(PlanLin),
+    Conv(PlanConv),
+    Relu,
+    Pool,
+    Norm(PlanNorm),
+    Embed(PlanEmbed),
+    Attn(Box<PlanAttn>),
+    Residual(Vec<PlanLayer>),
+}
+
+/// The compiled execution plan of one `GraphStep`.
+struct GraphPlan {
+    layers: Vec<PlanLayer>,
+    x: usize,
+    y: Option<usize>,
+    loss: Option<usize>,
+    correct: Option<usize>,
+    logits: Option<usize>,
+}
+
+struct PlanCx<'m> {
+    man: &'m Manifest,
+    id: &'m StepId,
+}
+
+impl PlanCx<'_> {
+    fn in_pos(&self, name: &str) -> Result<usize> {
+        self.man
+            .inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{}: plan: manifest missing input {name:?}", self.man.name))
+    }
+
+    fn find_in(&self, name: &str) -> Option<usize> {
+        self.man.inputs.iter().position(|s| s.name == name)
+    }
+
+    fn find_out(&self, name: &str) -> Option<usize> {
+        self.man.outputs.iter().position(|s| s.name == name)
+    }
+
+    fn quantized(&self) -> bool {
+        self.id.w_bits > 0 && self.id.kind != StepKind::Calib
+    }
+
+    fn lin(&self, spec: &LinearSpec) -> Result<PlanLin> {
+        let bias = if spec.bias { Some(format!("{}.b", spec.name)) } else { None };
+        self.raw_site(&format!("{}.w", spec.name), spec.c_in, spec.c_out, bias)
+    }
+
+    fn raw_site(
+        &self,
+        site: &str,
+        c_in: usize,
+        c_out: usize,
+        bias: Option<String>,
+    ) -> Result<PlanLin> {
+        let q = if self.quantized() {
+            Some(QSlots {
+                sw: self.in_pos(&format!("sw:{site}"))?,
+                sx: self.in_pos(&format!("sx:{site}"))?,
+                zx: self.in_pos(&format!("zx:{site}"))?,
+            })
+        } else {
+            None
+        };
+        let sel = match self.id.kind {
+            StepKind::Train(TrainSel::Lwpn) => {
+                PlanSel::Flag(self.in_pos(&format!("flag:{site}"))?)
+            }
+            StepKind::Train(TrainSel::Ratio(r)) if r <= 0.0 => PlanSel::None,
+            StepKind::Train(TrainSel::Ratio(r)) if r < 1.0 => {
+                PlanSel::Idx(self.in_pos(&format!("id:{site}"))?)
+            }
+            _ => PlanSel::All,
+        };
+        let b_in = match &bias {
+            Some(b) => Some(self.in_pos(b)?),
+            None => None,
+        };
+        let db = bias.as_deref().and_then(|b| self.find_out(&format!("d:{b}")));
+        Ok(PlanLin {
+            site: site.to_string(),
+            c_in,
+            c_out,
+            w: self.in_pos(site)?,
+            b_in,
+            q,
+            sel,
+            dw: self.find_out(&format!("d:{site}")),
+            db,
+            dsw: self.find_out(&format!("d:sw:{site}")),
+            dsx: self.find_out(&format!("d:sx:{site}")),
+            dzx: self.find_out(&format!("d:zx:{site}")),
+        })
+    }
+
+    fn layers(&self, layers: &[Layer]) -> Result<Vec<PlanLayer>> {
+        layers.iter().map(|l| self.layer(l)).collect()
+    }
+
+    fn layer(&self, layer: &Layer) -> Result<PlanLayer> {
+        Ok(match layer {
+            Layer::Flatten => PlanLayer::Flatten,
+            Layer::Relu => PlanLayer::Relu,
+            Layer::AvgPool2x2 => PlanLayer::Pool,
+            Layer::Linear(spec) => PlanLayer::Linear(self.lin(spec)?),
+            Layer::Conv2d(spec) => {
+                let patch = spec.c_in * spec.k * spec.k;
+                let wname = format!("{}.w", spec.name);
+                PlanLayer::Conv(PlanConv {
+                    lin: self.raw_site(&wname, patch, spec.c_out, None)?,
+                    c_in: spec.c_in,
+                    k: spec.k,
+                    stride: spec.stride,
+                    pad: spec.pad,
+                })
+            }
+            Layer::LayerNorm(spec) => PlanLayer::Norm(PlanNorm {
+                name: spec.name.clone(),
+                d: spec.d,
+                g: self.in_pos(&format!("{}.g", spec.name))?,
+                b: self.in_pos(&format!("{}.b", spec.name))?,
+                dg: self.find_out(&format!("d:{}.g", spec.name)),
+                db: self.find_out(&format!("d:{}.b", spec.name)),
+            }),
+            Layer::Embed(spec) => PlanLayer::Embed(PlanEmbed {
+                vocab: spec.vocab,
+                seq: spec.seq,
+                d: spec.d,
+                tok: self.in_pos(&format!("{}.tok", spec.name))?,
+                pos: self.in_pos(&format!("{}.pos", spec.name))?,
+                dtok: self.find_out(&format!("d:{}.tok", spec.name)),
+                dpos: self.find_out(&format!("d:{}.pos", spec.name)),
+            }),
+            Layer::Attention(spec) => {
+                let projs = attn_projections(spec);
+                let mut lins = projs.iter().map(|p| self.lin(p));
+                let proj = [
+                    lins.next().unwrap()?,
+                    lins.next().unwrap()?,
+                    lins.next().unwrap()?,
+                    lins.next().unwrap()?,
+                ];
+                PlanLayer::Attn(Box::new(PlanAttn {
+                    proj,
+                    heads: spec.heads,
+                    causal: spec.causal,
+                    d: spec.d,
+                }))
+            }
+            Layer::Residual(inner) => PlanLayer::Residual(self.layers(inner)?),
+        })
+    }
+}
+
+impl GraphPlan {
+    fn compile(graph: &LayerGraph, man: &Manifest, id: &StepId) -> Result<GraphPlan> {
+        let cx = PlanCx { man, id };
+        Ok(GraphPlan {
+            layers: cx.layers(&graph.layers)?,
+            x: cx.in_pos("x")?,
+            y: cx.find_in("y"),
+            loss: cx.find_out("loss"),
+            correct: cx.find_out("correct"),
+            logits: cx.find_out("logits"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Execution
 // ---------------------------------------------------------------------------
 
-/// Named input lookup over the positional input vector.
-pub struct Vals<'a> {
-    map: BTreeMap<&'a str, &'a Value>,
-}
-
-impl<'a> Vals<'a> {
-    /// Zip manifest input specs with positional values.
-    pub fn new(man: &'a Manifest, inputs: &'a [Value]) -> Vals<'a> {
-        Vals { map: man.inputs.iter().map(|s| s.name.as_str()).zip(inputs).collect() }
-    }
-
-    fn f32(&self, name: &str) -> Result<&'a Tensor> {
-        self.map
-            .get(name)
-            .ok_or_else(|| anyhow!("graph step: missing input {name:?}"))?
-            .f32()
-    }
-
-    fn i32(&self, name: &str) -> Result<&'a ITensor> {
-        self.map
-            .get(name)
-            .ok_or_else(|| anyhow!("graph step: missing input {name:?}"))?
-            .i32()
-    }
-
-    fn scalar(&self, name: &str) -> Result<f32> {
-        self.map
-            .get(name)
-            .ok_or_else(|| anyhow!("graph step: missing input {name:?}"))?
-            .scalar()
-            .map_err(|e| anyhow!("input {name:?}: {e}"))
-    }
-}
-
-/// One executable step: a graph coupled with an artifact identity and
-/// the manifest synthesized for it.
+/// One executable step: a graph coupled with an artifact identity, the
+/// manifest synthesized for it, and the execution plan compiled against
+/// that manifest.
 pub struct GraphStep {
     pub graph: LayerGraph,
     pub id: StepId,
     pub man: Manifest,
+    plan: GraphPlan,
+    /// Recycled residual-cache vectors (capacity only — always empty
+    /// between executions), so the per-step cache bookkeeping performs
+    /// no heap allocation either.
+    cache_pool: RefCell<Vec<Vec<Cache>>>,
 }
 
-/// Per-site quantization parameters pulled from the inputs.
-struct SiteQ {
-    sw: Vec<f32>,
+/// Per-site quantization parameters borrowed from the bound inputs —
+/// the `sw:` scale tensor is **borrowed**, never cloned per step.
+struct SiteQ<'v> {
+    sw: &'v [f32],
     sx: f32,
     zx: f32,
 }
 
-/// Runtime weight-gradient selection for one site, resolved from the
-/// step kind + selector inputs.
-#[derive(Clone, Debug)]
+/// Runtime weight-gradient selection for one site; the `Idx` vector is
+/// drawn from the workspace and returned to it after use.
 enum RunSel {
     All,
     None,
@@ -536,29 +775,32 @@ enum RunSel {
 }
 
 /// Residual cache of one quantized-linear site (shared by `Linear` and
-/// the four attention projections).
+/// the four attention projections).  All buffers are workspace-owned;
+/// `None` means the backward reads the shared fallback instead
+/// (attention's FP path, where `x̂ = x` for all three of q/k/v).
 struct LinCache {
-    x_shape: Vec<usize>,
-    /// Raw pre-quant input — populated only when the quantizer backward
-    /// will need it (quantized train steps; see `Run::keep_raw`).
-    x_raw: Vec<f32>,
-    xh: Vec<f32>,
-    wh: Vec<f32>,
-    q: Option<SiteQ>,
+    xh: Option<Vec<f32>>,
+    /// Fake-quantized weights; `None` on FP paths (backward reads the
+    /// raw weight input — no clone).
+    wh: Option<Vec<f32>>,
     rows: usize,
 }
 
 struct ConvCache {
-    /// Raw pre-quant input — populated only on quantized train steps.
+    /// Raw pre-quant input — kept only on quantized train steps.
     x_raw: Vec<f32>,
     /// im2col of the (quantized) input: `[M, C_in·k·k]`.
     cols: Vec<f32>,
-    wh: Vec<f32>,
-    q: Option<SiteQ>,
+    wh: Option<Vec<f32>>,
     dims: ConvDims,
 }
 
 struct AttnCache {
+    /// Block input: the raw input of the q/k/v quantizer backwards and
+    /// the shared `x̂` fallback on FP paths.
+    x: Vec<f32>,
+    /// SDPA output: the o-projection's input, in the same dual role.
+    om: Vec<f32>,
     q_lin: LinCache,
     k_lin: LinCache,
     v_lin: LinCache,
@@ -571,114 +813,285 @@ struct AttnCache {
 }
 
 /// What each layer's forward leaves behind for the backward pass.
+/// Everything inside is workspace-owned and returned to the pools as
+/// the backward consumes it.
+#[allow(clippy::large_enum_variant)] // few live at once; boxing would cost a per-step alloc
 enum Cache {
     Flatten { shape: Vec<usize> },
-    Linear(LinCache),
+    Linear { lin: LinCache, x_raw: Vec<f32>, x_shape: Vec<usize> },
     Conv(ConvCache),
     Relu { pre: Vec<f32> },
-    Pool { shape: Vec<usize> },
-    Norm { xhat: Vec<f32>, inv: Vec<f32> },
-    Embed { ids: Vec<i32> },
-    Attn(Box<AttnCache>),
+    Pool { b: usize, c: usize, hw: usize },
+    Norm { xhat: Vec<f32>, inv: Vec<f32>, rows: usize },
+    Embed,
+    Attn(AttnCache),
     Residual(Vec<Cache>),
 }
 
-/// Activation flowing between layers.
+/// Activation flowing between layers.  Token ids never leave the input
+/// vector — the embedding (and its backward) reads them through the
+/// plan, so `I` carries nothing.
 enum Act {
     F(Tensor),
-    I(ITensor),
+    I,
 }
 
 fn act_f32(act: Act) -> Result<Tensor> {
     match act {
         Act::F(t) => Ok(t),
-        Act::I(_) => bail!("graph: layer expected an f32 activation, got i32"),
+        Act::I => bail!("graph: layer expected an f32 activation, got i32"),
     }
 }
 
 impl GraphStep {
-    /// Couple a graph with an artifact identity, synthesizing the manifest.
-    pub fn new(graph: LayerGraph, artifact: &str, id: StepId) -> GraphStep {
+    /// Couple a graph with an artifact identity, synthesizing the
+    /// manifest and compiling the execution plan against it.
+    pub fn new(graph: LayerGraph, artifact: &str, id: StepId) -> Result<GraphStep> {
         let man = build_manifest(&graph, artifact, &id);
-        GraphStep { graph, id, man }
+        let plan = GraphPlan::compile(&graph, &man, &id)?;
+        Ok(GraphStep { graph, id, man, plan, cache_pool: RefCell::new(Vec::new()) })
+    }
+
+    fn take_caches(&self) -> Vec<Cache> {
+        self.cache_pool.borrow_mut().pop().unwrap_or_default()
+    }
+
+    fn give_caches(&self, caches: Vec<Cache>) {
+        debug_assert!(caches.is_empty(), "recycled cache vec must be drained");
+        self.cache_pool.borrow_mut().push(caches);
     }
 
     /// Forward to logits only — no loss, metric, or `dlogits` work.
     /// The serving bench times this against the int8 engine
     /// ([`crate::lower::QuantizedGraph::forward`]) so both sides do the
-    /// same job; residual-cache building remains, as it is intrinsic to
-    /// this executor.
+    /// same job.  Allocating wrapper over [`Self::forward_logits_ws`].
     pub fn forward_logits(&self, inputs: &[Value]) -> Result<Tensor> {
-        let vals = Vals::new(&self.man, inputs);
-        let mut run = Run { step: self, vals: &vals, taps: None };
-        let (logits, _caches) = run.forward()?;
-        Ok(logits)
+        let mut ws = Workspace::new();
+        self.forward_logits_ws(inputs, &mut ws)
+    }
+
+    /// Forward to logits over a caller-owned workspace; the returned
+    /// tensor's buffers are pooled — give them back to `ws` to recycle.
+    pub fn forward_logits_ws(&self, inputs: &[Value], ws: &mut Workspace) -> Result<Tensor> {
+        self.check_arity(inputs)?;
+        let out = ws.take_slots(0);
+        let mut caches = self.take_caches();
+        let mut run = Run { step: self, inputs, ws: &mut *ws, out, taps: None };
+        let result = run.forward(&mut caches);
+        run.drop_caches(&mut caches);
+        let out = run.out;
+        self.give_caches(caches);
+        ws.give_slots(out);
+        result
     }
 
     /// Execute on inputs packed in manifest order; outputs come back in
     /// manifest order (the [`crate::backend::StepExec`] contract).
+    /// Allocating wrapper over [`Self::execute_ws`].
     pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Value>> {
-        let vals = Vals::new(&self.man, inputs);
-        let mut run = Run { step: self, vals: &vals, taps: None };
-        let mut named = match self.id.kind {
-            StepKind::Train(_) => run.run_train()?,
-            StepKind::Fwd => run.run_fwd()?,
-            StepKind::Calib => run.run_calib()?,
+        let mut ws = Workspace::new();
+        self.execute_ws(inputs, &mut ws)
+    }
+
+    /// Execute over a caller-owned workspace.  Every activation, cache,
+    /// gradient, and output buffer is drawn from `ws`; recycle the
+    /// returned values with [`Workspace::give_values`] after consuming
+    /// them and the steady state performs zero heap allocations per
+    /// step (`rust/tests/workspace_alloc.rs`).
+    pub fn execute_ws(&self, inputs: &[Value], ws: &mut Workspace) -> Result<Vec<Value>> {
+        self.check_arity(inputs)?;
+        let slots = ws.take_slots(self.man.outputs.len());
+        let mut run = Run { step: self, inputs, ws: &mut *ws, out: slots, taps: None };
+        let result = match self.id.kind {
+            StepKind::Train(_) => run.run_train(),
+            StepKind::Fwd => run.run_fwd(),
+            StepKind::Calib => run.run_calib(),
         };
-        self.man
-            .outputs
-            .iter()
-            .map(|spec| {
-                named.remove(&spec.name).ok_or_else(|| {
-                    anyhow!("{}: graph step produced no output {:?}", self.man.name, spec.name)
-                })
-            })
-            .collect()
+        let mut slots = run.out;
+        if let Err(e) = result {
+            ws.give_slots(slots);
+            return Err(e);
+        }
+        let mut vals = ws.take_values();
+        let mut missing = None;
+        for (i, slot) in slots.iter_mut().enumerate() {
+            match slot.take() {
+                Some(v) => vals.push(v),
+                None => {
+                    missing = Some(i);
+                    break;
+                }
+            }
+        }
+        if let Some(i) = missing {
+            let name = self.man.outputs[i].name.clone();
+            ws.give_values(vals);
+            ws.give_slots(slots);
+            bail!("{}: graph step produced no output {name:?}", self.man.name);
+        }
+        ws.give_slots(slots);
+        Ok(vals)
+    }
+
+    fn check_arity(&self, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != self.man.inputs.len() {
+            bail!(
+                "{}: {} inputs supplied, manifest wants {}",
+                self.man.name,
+                inputs.len(),
+                self.man.inputs.len()
+            );
+        }
+        Ok(())
     }
 }
 
-/// One execution of a [`GraphStep`] over bound inputs.
-struct Run<'a> {
-    step: &'a GraphStep,
-    vals: &'a Vals<'a>,
+/// The frozen-channel-aware weight-gradient rule (paper Fig. 1 right),
+/// implemented once for every layer type.  `full_dwhat` /
+/// `partial_dwhat` supply the layer's own contraction (plain matmul for
+/// linear sites, im2col matmul for conv) as workspace-drawing closures;
+/// this function owns the selection logic and the STE/LSQ quantizer
+/// backward:
+///
+/// * `All` / `Flag(true)` — full `dŴ`, full quantizer backward;
+/// * `Flag(false)` — the LWPN saving: the `dŴ` contraction is
+///   *skipped at runtime*; the ABI still carries full-shape zeros;
+/// * `Idx` — only the gathered unfrozen rows are ever materialized
+///   (CWPL/CWPN): `dW[idx] = gather(dY, idx)ᵀ · X̂`;
+/// * `None` — the r=0 case: no weight gradient at all.
+#[allow(clippy::too_many_arguments)] // a VJP dispatcher: selection, operands, ws, contractions
+fn weight_site_grads(
+    w_bits: u32,
+    sel: &RunSel,
+    w: &Tensor,
+    q: Option<&SiteQ<'_>>,
+    row_size: usize,
+    ws: &mut Workspace,
+    full_dwhat: &mut dyn FnMut(&mut Workspace) -> Vec<f32>,
+    partial_dwhat: &mut dyn FnMut(&mut Workspace, &[usize]) -> Vec<f32>,
+) -> (Option<Tensor>, Option<Vec<f32>>) {
+    let c_out = w.shape[0];
+    match q {
+        Some(q) => match sel {
+            RunSel::All | RunSel::Flag(true) => {
+                let dwhat = full_dwhat(ws);
+                let mut dw = ws.take_f32(w.data.len());
+                let mut ds = ws.take_f32(c_out);
+                fq_weight_bwd_rows_into(&w.data, q.sw, &dwhat, row_size, w_bits, &mut dw, &mut ds);
+                ws.give_f32(dwhat);
+                (Some(Tensor { shape: ws.take_shape(&w.shape), data: dw }), Some(ds))
+            }
+            RunSel::Flag(false) => {
+                // take_* zero-fills, so these are the ABI's zero grads
+                let data = ws.take_f32(w.data.len());
+                let dw = Tensor { shape: ws.take_shape(&w.shape), data };
+                (Some(dw), Some(ws.take_f32(c_out)))
+            }
+            RunSel::Idx(ids) => {
+                let dwhat = partial_dwhat(ws, ids);
+                let mut w_rows = ws.take_f32(ids.len() * row_size);
+                let mut s_rows = ws.take_f32(ids.len());
+                for (gi, &r) in ids.iter().enumerate() {
+                    let src = &w.data[r * row_size..(r + 1) * row_size];
+                    w_rows[gi * row_size..(gi + 1) * row_size].copy_from_slice(src);
+                    s_rows[gi] = q.sw[r];
+                }
+                let mut dw = ws.take_f32(ids.len() * row_size);
+                let mut ds = ws.take_f32(ids.len());
+                fq_weight_bwd_rows_into(
+                    &w_rows, &s_rows, &dwhat, row_size, w_bits, &mut dw, &mut ds,
+                );
+                ws.give_f32(dwhat);
+                ws.give_f32(w_rows);
+                ws.give_f32(s_rows);
+                let dw = Tensor { shape: ws.take_shape(&[ids.len(), row_size]), data: dw };
+                (Some(dw), Some(ds))
+            }
+            RunSel::None => (None, None),
+        },
+        None => {
+            let dw = match sel {
+                RunSel::None => None,
+                RunSel::Flag(false) => Some(Tensor {
+                    shape: ws.take_shape(&w.shape),
+                    data: ws.take_f32(w.data.len()),
+                }),
+                RunSel::Idx(ids) => {
+                    let data = partial_dwhat(ws, ids);
+                    Some(Tensor { shape: ws.take_shape(&[ids.len(), row_size]), data })
+                }
+                _ => {
+                    let data = full_dwhat(ws);
+                    Some(Tensor { shape: ws.take_shape(&w.shape), data })
+                }
+            };
+            (dw, None)
+        }
+    }
+}
+
+/// One execution of a [`GraphStep`] over bound inputs and a workspace.
+struct Run<'p, 'v, 'w> {
+    step: &'p GraphStep,
+    inputs: &'v [Value],
+    ws: &'w mut Workspace,
+    /// Positional output slots (manifest order).
+    out: Vec<Option<Value>>,
     /// `Some` during calibration: per-site `(min, max)` of the raw input
     /// each quantized site saw (the MinMax observer taps, Eq. 2).
     taps: Option<BTreeMap<String, (f32, f32)>>,
 }
 
-impl<'a> Run<'a> {
+impl<'p, 'v, 'w> Run<'p, 'v, 'w> {
+    // ---- plan-resolved input access (decoupled from &self) ----------------
+
+    fn f32_in(&self, i: usize) -> Result<&'v Tensor> {
+        let inputs: &'v [Value] = self.inputs;
+        inputs[i].f32()
+    }
+
+    fn i32_in(&self, i: usize) -> Result<&'v ITensor> {
+        let inputs: &'v [Value] = self.inputs;
+        inputs[i].i32()
+    }
+
+    fn scalar_in(&self, i: usize) -> Result<f32> {
+        let inputs: &'v [Value] = self.inputs;
+        inputs[i].scalar().map_err(|e| anyhow!("{}: input {i}: {e}", self.step.man.name))
+    }
+
     fn quantized(&self) -> bool {
         self.step.id.w_bits > 0 && self.step.id.kind != StepKind::Calib
     }
 
-    // ---- shared quantized-site plumbing -----------------------------------
-
-    fn siteq(&self, site: &str) -> Result<Option<SiteQ>> {
-        if !self.quantized() {
-            return Ok(None);
-        }
-        let sw = self.vals.f32(&format!("sw:{site}"))?.data.clone();
-        if sw.iter().any(|&s| s <= 0.0 || !s.is_finite()) {
-            bail!("{}: non-positive weight scale for site {site:?}", self.step.man.name);
-        }
-        let sx = self.vals.scalar(&format!("sx:{site}"))?;
-        if sx <= 0.0 || !sx.is_finite() {
-            bail!("{}: non-positive activation scale for site {site:?}", self.step.man.name);
-        }
-        let zx = self.vals.scalar(&format!("zx:{site}"))?;
-        Ok(Some(SiteQ { sw, sx, zx }))
+    /// Whether a quantized site must keep its raw (pre-quant) input:
+    /// only the quantizer backward reads it, so fwd/calib steps skip it.
+    fn keep_raw(&self) -> bool {
+        matches!(self.step.id.kind, StepKind::Train(_))
     }
 
-    /// Whether a site cache must keep the raw (pre-quant) input: only
-    /// the quantizer backward reads it, so fwd/calib steps — and FP
-    /// backward paths — skip the clone.
-    fn keep_raw(&self, q: &Option<SiteQ>) -> bool {
-        q.is_some() && matches!(self.step.id.kind, StepKind::Train(_))
+    // ---- shared quantized-site plumbing -----------------------------------
+
+    fn siteq(&self, p: &PlanLin) -> Result<Option<SiteQ<'v>>> {
+        let slots = match (&p.q, self.quantized()) {
+            (Some(s), true) => s,
+            _ => return Ok(None),
+        };
+        let sw = &self.f32_in(slots.sw)?.data[..];
+        if sw.iter().any(|&s| s <= 0.0 || !s.is_finite()) {
+            bail!("{}: non-positive weight scale for site {:?}", self.step.man.name, p.site);
+        }
+        let sx = self.scalar_in(slots.sx)?;
+        if sx <= 0.0 || !sx.is_finite() {
+            bail!("{}: non-positive activation scale for site {:?}", self.step.man.name, p.site);
+        }
+        let zx = self.scalar_in(slots.zx)?;
+        Ok(Some(SiteQ { sw, sx, zx }))
     }
 
     /// Record the (min, max) a quantized site's raw input — the MinMax
     /// observer tap of the calib artifacts.
-    fn tap(&mut self, site: &str, x: &[f32]) {
+    fn tap_site(&mut self, site: &str, x: &[f32]) {
         if let Some(taps) = &mut self.taps {
             let lo = x.iter().copied().fold(f32::INFINITY, f32::min);
             let hi = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -686,383 +1099,474 @@ impl<'a> Run<'a> {
         }
     }
 
-    /// Resolve the runtime weight-gradient selection for one site from
-    /// the step kind and the bound selector inputs.
-    fn run_sel(&self, site: &str, c_out: usize) -> Result<RunSel> {
-        match self.step.id.kind {
-            StepKind::Train(TrainSel::Fp) => Ok(RunSel::All),
-            StepKind::Train(TrainSel::Lwpn) => {
-                Ok(RunSel::Flag(self.vals.i32(&format!("flag:{site}"))?.data[0] > 0))
-            }
-            StepKind::Train(TrainSel::Ratio(r)) if r >= 1.0 => Ok(RunSel::All),
-            StepKind::Train(TrainSel::Ratio(r)) if r <= 0.0 => Ok(RunSel::None),
-            StepKind::Train(TrainSel::Ratio(_)) => {
-                let ids = self.vals.i32(&format!("id:{site}"))?;
-                let mut out = Vec::with_capacity(ids.data.len());
+    /// Resolve the runtime weight-gradient selection for one site.  The
+    /// `Idx` vector is pooled — return it with `give_shape` after use.
+    fn run_sel(&mut self, p: &PlanLin) -> Result<RunSel> {
+        Ok(match p.sel {
+            PlanSel::All => RunSel::All,
+            PlanSel::None => RunSel::None,
+            PlanSel::Flag(pos) => RunSel::Flag(self.i32_in(pos)?.data[0] > 0),
+            PlanSel::Idx(pos) => {
+                let ids = self.i32_in(pos)?;
+                let mut out = self.ws.take_indices(ids.data.len());
                 for &c in &ids.data {
-                    if c < 0 || c as usize >= c_out {
+                    if c < 0 || c as usize >= p.c_out {
                         bail!(
-                            "{}: selection index {c} out of range for site {site:?} (c_out {c_out})",
-                            self.step.man.name
+                            "{}: selection index {c} out of range for site {:?} (c_out {})",
+                            self.step.man.name,
+                            p.site,
+                            p.c_out
                         );
                     }
                     out.push(c as usize);
                 }
-                Ok(RunSel::Idx(out))
+                RunSel::Idx(out)
             }
-            _ => Ok(RunSel::All),
+        })
+    }
+
+    // ---- output emission --------------------------------------------------
+
+    fn emit(&mut self, slot: Option<usize>, v: Value) {
+        match slot {
+            Some(s) => self.out[s] = Some(v),
+            None => self.ws.give_value(v),
         }
     }
 
-    /// The frozen-channel-aware weight-gradient rule (paper Fig. 1
-    /// right), implemented once for every layer type.  `full_dwhat` /
-    /// `partial_dwhat` supply the layer's own contraction (plain matmul
-    /// for linear sites, im2col matmul for conv); this function owns the
-    /// selection logic and the STE/LSQ quantizer backward:
-    ///
-    /// * `All` / `Flag(true)` — full `dŴ`, full quantizer backward;
-    /// * `Flag(false)` — the LWPN saving: the `dŴ` contraction is
-    ///   *skipped at runtime*; the ABI still carries full-shape zeros;
-    /// * `Idx` — only the gathered unfrozen rows are ever materialized
-    ///   (CWPL/CWPN): `dW[idx] = gather(dY, idx)ᵀ · X̂`;
-    /// * `None` — the r=0 case: no weight gradient at all.
-    fn weight_site_grads(
-        &self,
-        sel: &RunSel,
-        w: &Tensor,
-        q: Option<&SiteQ>,
-        row_size: usize,
-        full_dwhat: &mut dyn FnMut() -> Vec<f32>,
-        partial_dwhat: &mut dyn FnMut(&[usize]) -> Vec<f32>,
-    ) -> (Option<Tensor>, Option<Vec<f32>>) {
-        let c_out = w.shape[0];
-        let bits = self.step.id.w_bits;
-        match q {
-            Some(q) => match sel {
-                RunSel::All | RunSel::Flag(true) => {
-                    let dwhat = full_dwhat();
-                    let (dw, ds) = fq_weight_bwd_rows(&w.data, &q.sw, &dwhat, row_size, bits);
-                    (Some(Tensor { shape: w.shape.clone(), data: dw }), Some(ds))
-                }
-                RunSel::Flag(false) => {
-                    (Some(Tensor::zeros(&w.shape)), Some(vec![0.0; c_out]))
-                }
-                RunSel::Idx(ids) => {
-                    let dwhat = partial_dwhat(ids);
-                    let w_rows = w.gather_rows(ids);
-                    let s_rows: Vec<f32> = ids.iter().map(|&r| q.sw[r]).collect();
-                    let (dw, ds) =
-                        fq_weight_bwd_rows(&w_rows.data, &s_rows, &dwhat, row_size, bits);
-                    let dw = Tensor { shape: vec![ids.len(), row_size], data: dw };
-                    (Some(dw), Some(ds))
-                }
-                RunSel::None => (None, None),
-            },
-            None => {
-                let dw = match sel {
-                    RunSel::None => None,
-                    RunSel::Flag(false) => Some(Tensor::zeros(&w.shape)),
-                    RunSel::Idx(ids) => {
-                        Some(Tensor { shape: vec![ids.len(), row_size], data: partial_dwhat(ids) })
-                    }
-                    _ => Some(Tensor { shape: w.shape.clone(), data: full_dwhat() }),
-                };
-                (dw, None)
-            }
+    fn emit_f32(&mut self, slot: Option<usize>, t: Option<Tensor>) {
+        if let Some(t) = t {
+            self.emit(slot, Value::F32(t));
         }
     }
 
-    fn emit_site_grads(
-        &self,
-        site: &str,
-        dw: Option<Tensor>,
-        dsw: Option<Vec<f32>>,
-        grads: &mut BTreeMap<String, Value>,
-    ) {
-        if let Some(dw) = dw {
-            grads.insert(format!("d:{site}"), Value::F32(dw));
-        }
-        if let Some(ds) = dsw {
+    fn emit_dsw(&mut self, slot: Option<usize>, ds: Option<Vec<f32>>) {
+        if let Some(ds) = ds {
             let n = ds.len();
-            grads.insert(format!("d:sw:{site}"), Value::F32(Tensor { shape: vec![n], data: ds }));
-        }
-    }
-
-    /// Backward through one site's activation quantizer (STE/LSQ+),
-    /// emitting the `d:sx:`/`d:zx:` grads; FP sites pass `dxh` through.
-    /// Shared by linear and conv sites, like `weight_site_grads`.
-    fn act_bwd(
-        &self,
-        site: &str,
-        q: Option<&SiteQ>,
-        x_raw: &[f32],
-        dxh: Vec<f32>,
-        grads: &mut BTreeMap<String, Value>,
-    ) -> Vec<f32> {
-        match q {
-            Some(q) => {
-                let (dx, dsx, dzx) =
-                    fq_act_bwd_tensor(x_raw, q.sx, q.zx, &dxh, self.step.id.a_bits);
-                grads.insert(format!("d:sx:{site}"), Value::F32(Tensor::scalar(dsx)));
-                grads.insert(format!("d:zx:{site}"), Value::F32(Tensor::scalar(dzx)));
-                dx
-            }
-            None => dxh,
+            let t = self.ws.tensor(&[n], ds);
+            self.emit_f32(slot, Some(t));
         }
     }
 
     // ---- quantized linear site (Linear + attention projections) -----------
 
-    fn lin_fwd(&mut self, spec: &LinearSpec, x: &Tensor) -> Result<(Tensor, LinCache)> {
-        if x.shape.last() != Some(&spec.c_in) {
+    /// Linear forward consuming its input: the input buffer becomes the
+    /// FP `x̂` cache, the quantizer's raw cache, or goes straight back
+    /// to the workspace — never a clone.
+    fn lin_fwd_owned(&mut self, p: &PlanLin, x: Tensor) -> Result<(Tensor, Cache)> {
+        let step = self.step;
+        if x.shape.last() != Some(&p.c_in) {
             bail!(
                 "{}: linear {:?} wants {} input features, activation is {:?}",
-                self.step.man.name,
-                spec.name,
-                spec.c_in,
+                step.man.name,
+                p.site,
+                p.c_in,
                 x.shape
             );
         }
-        let rows = x.data.len() / spec.c_in;
-        let site = format!("{}.w", spec.name);
-        let w = self.vals.f32(&site)?;
-        self.tap(&site, &x.data);
-        let q = self.siteq(&site)?;
-        let (xh, wh) = match &q {
-            Some(q) => (
-                fq_act_tensor(&x.data, q.sx, q.zx, self.step.id.a_bits),
-                fq_weight_rows(&w.data, &q.sw, spec.c_in, self.step.id.w_bits),
-            ),
-            None => (x.data.clone(), w.data.clone()),
+        let rows = x.data.len() / p.c_in;
+        self.tap_site(&p.site, &x.data);
+        let q = self.siteq(p)?;
+        let w = self.f32_in(p.w)?;
+        let bias: Option<&[f32]> = match p.b_in {
+            Some(i) => Some(&self.f32_in(i)?.data[..]),
+            None => None,
         };
-        let bias = if spec.bias {
-            Some(&self.vals.f32(&format!("{}.b", spec.name))?.data[..])
-        } else {
-            None
+        let mut y = self.ws.take_f32(rows * p.c_out);
+        let keep = q.is_some() && self.keep_raw();
+        let (lin, x_raw, x_shape) = match &q {
+            Some(sq) => {
+                let mut xh = self.ws.take_f32(x.data.len());
+                fq_act_tensor_into(&x.data, sq.sx, sq.zx, step.id.a_bits, &mut xh);
+                let mut wh = self.ws.take_f32(w.data.len());
+                fq_weight_rows_into(&w.data, sq.sw, p.c_in, step.id.w_bits, &mut wh);
+                linear_fwd_into(&xh, &wh, bias, rows, p.c_in, p.c_out, &mut y);
+                let Tensor { shape, data } = x;
+                let x_raw = if keep {
+                    data
+                } else {
+                    self.ws.give_f32(data);
+                    Vec::new()
+                };
+                (LinCache { xh: Some(xh), wh: Some(wh), rows }, x_raw, shape)
+            }
+            None => {
+                linear_fwd_into(&x.data, &w.data, bias, rows, p.c_in, p.c_out, &mut y);
+                let Tensor { shape, data } = x;
+                (LinCache { xh: Some(data), wh: None, rows }, Vec::new(), shape)
+            }
         };
-        let y = linear_fwd(&xh, &wh, bias, rows, spec.c_in, spec.c_out);
-        let mut y_shape = x.shape.clone();
-        *y_shape.last_mut().unwrap() = spec.c_out;
-        let x_raw = if self.keep_raw(&q) { x.data.clone() } else { Vec::new() };
-        let cache = LinCache { x_shape: x.shape.clone(), x_raw, xh, wh, q, rows };
-        Ok((Tensor { shape: y_shape, data: y }, cache))
+        let mut y_shape = self.ws.take_shape(&x_shape);
+        *y_shape.last_mut().unwrap() = p.c_out;
+        Ok((Tensor { shape: y_shape, data: y }, Cache::Linear { lin, x_raw, x_shape }))
     }
 
-    fn lin_bwd(
+    /// Linear forward over a shared input (the attention projections,
+    /// which all read the same block input).  On FP paths the cache
+    /// stores nothing — backward falls back to the shared slice.
+    fn lin_fwd_shared(
         &mut self,
-        spec: &LinearSpec,
-        cache: &LinCache,
-        dy: &Tensor,
-        grads: &mut BTreeMap<String, Value>,
-    ) -> Result<Tensor> {
-        let (rows, c_in, c_out) = (cache.rows, spec.c_in, spec.c_out);
-        let site = format!("{}.w", spec.name);
-        if spec.bias {
-            let db = col_sum(&dy.data, rows, c_out);
-            grads.insert(
-                format!("d:{}.b", spec.name),
-                Value::F32(Tensor { shape: vec![c_out], data: db }),
-            );
+        p: &PlanLin,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<(Vec<f32>, LinCache)> {
+        let step = self.step;
+        self.tap_site(&p.site, x);
+        let q = self.siteq(p)?;
+        let w = self.f32_in(p.w)?;
+        let bias: Option<&[f32]> = match p.b_in {
+            Some(i) => Some(&self.f32_in(i)?.data[..]),
+            None => None,
+        };
+        let mut y = self.ws.take_f32(rows * p.c_out);
+        let lin = match &q {
+            Some(sq) => {
+                let mut xh = self.ws.take_f32(x.len());
+                fq_act_tensor_into(x, sq.sx, sq.zx, step.id.a_bits, &mut xh);
+                let mut wh = self.ws.take_f32(w.data.len());
+                fq_weight_rows_into(&w.data, sq.sw, p.c_in, step.id.w_bits, &mut wh);
+                linear_fwd_into(&xh, &wh, bias, rows, p.c_in, p.c_out, &mut y);
+                LinCache { xh: Some(xh), wh: Some(wh), rows }
+            }
+            None => {
+                linear_fwd_into(x, &w.data, bias, rows, p.c_in, p.c_out, &mut y);
+                LinCache { xh: None, wh: None, rows }
+            }
+        };
+        Ok((y, lin))
+    }
+
+    /// Shared linear backward.  `xh_fallback` / `x_raw` supply the
+    /// shared-input roles for attention projections (`cache.xh == None`
+    /// on FP paths); plain linears pass their own cached buffers.
+    /// Returns the pooled `dx` data.
+    fn lin_bwd_core(
+        &mut self,
+        p: &PlanLin,
+        cache: LinCache,
+        dy: &[f32],
+        xh_fallback: &[f32],
+        x_raw: &[f32],
+    ) -> Result<Vec<f32>> {
+        let step = self.step;
+        let (rows, c_in, c_out) = (cache.rows, p.c_in, p.c_out);
+        if let Some(slot) = p.db {
+            let mut db = self.ws.take_f32(c_out);
+            col_sum_into(dy, rows, c_out, &mut db);
+            let t = self.ws.tensor(&[c_out], db);
+            self.emit_f32(Some(slot), Some(t));
         }
-        let dxh = matmul_dy_w(&dy.data, &cache.wh, rows, c_out, c_in);
-        let sel = self.run_sel(&site, c_out)?;
-        let w = self.vals.f32(&site)?;
-        let mut full = || matmul_dyt_x(&dy.data, &cache.xh, rows, c_out, c_in);
-        let mut partial = |ids: &[usize]| partial_dw(&dy.data, &cache.xh, ids, rows, c_out, c_in);
-        let (dw, dsw) =
-            self.weight_site_grads(&sel, w, cache.q.as_ref(), c_in, &mut full, &mut partial);
-        self.emit_site_grads(&site, dw, dsw, grads);
-        let dx = self.act_bwd(&site, cache.q.as_ref(), &cache.x_raw, dxh, grads);
-        Ok(Tensor { shape: cache.x_shape.clone(), data: dx })
+        let q = self.siteq(p)?;
+        let w = self.f32_in(p.w)?;
+        let wh: &[f32] = match &cache.wh {
+            Some(v) => v,
+            None => &w.data,
+        };
+        let mut dxh = self.ws.take_f32(rows * c_in);
+        matmul_dy_w_into(dy, wh, rows, c_out, c_in, &mut dxh);
+        let sel = self.run_sel(p)?;
+        let xh: &[f32] = match &cache.xh {
+            Some(v) => v,
+            None => xh_fallback,
+        };
+        let mut full = |ws: &mut Workspace| {
+            let mut dw = ws.take_f32(c_out * c_in);
+            matmul_dyt_x_into(dy, xh, rows, c_out, c_in, &mut dw);
+            dw
+        };
+        let mut partial = |ws: &mut Workspace, ids: &[usize]| {
+            let mut dw = ws.take_f32(ids.len() * c_in);
+            partial_dw_into(dy, xh, ids, rows, c_out, c_in, &mut dw);
+            dw
+        };
+        let (dw, dsw) = weight_site_grads(
+            step.id.w_bits,
+            &sel,
+            w,
+            q.as_ref(),
+            c_in,
+            &mut *self.ws,
+            &mut full,
+            &mut partial,
+        );
+        if let RunSel::Idx(ids) = sel {
+            self.ws.give_shape(ids);
+        }
+        self.emit_f32(p.dw, dw);
+        self.emit_dsw(p.dsw, dsw);
+        let dx = match &q {
+            Some(sq) => {
+                let mut dx = self.ws.take_f32(rows * c_in);
+                let (ds, dz) =
+                    fq_act_bwd_tensor_into(x_raw, sq.sx, sq.zx, &dxh, step.id.a_bits, &mut dx);
+                self.ws.give_f32(dxh);
+                let t = self.ws.scalar(ds);
+                self.emit_f32(p.dsx, Some(t));
+                let t = self.ws.scalar(dz);
+                self.emit_f32(p.dzx, Some(t));
+                dx
+            }
+            None => dxh,
+        };
+        if let Some(v) = cache.xh {
+            self.ws.give_f32(v);
+        }
+        if let Some(v) = cache.wh {
+            self.ws.give_f32(v);
+        }
+        Ok(dx)
     }
 
     // ---- forward ----------------------------------------------------------
 
-    fn input_act(&self) -> Result<Act> {
-        match self.step.graph.input {
-            InputKind::Image { .. } => Ok(Act::F(self.vals.f32("x")?.clone())),
-            InputKind::Tokens { .. } => Ok(Act::I(self.vals.i32("x")?.clone())),
+    fn input_act(&mut self) -> Result<Act> {
+        let step = self.step;
+        match step.graph.input {
+            InputKind::Image { .. } => {
+                let x = self.f32_in(step.plan.x)?;
+                let mut data = self.ws.take_f32(x.data.len());
+                data.copy_from_slice(&x.data);
+                let shape = self.ws.take_shape(&x.shape);
+                Ok(Act::F(Tensor { shape, data }))
+            }
+            InputKind::Tokens { .. } => Ok(Act::I),
         }
     }
 
-    fn forward(&mut self) -> Result<(Tensor, Vec<Cache>)> {
+    fn forward(&mut self, caches: &mut Vec<Cache>) -> Result<Tensor> {
         let step = self.step;
         let x0 = self.input_act()?;
-        let mut caches = Vec::new();
-        let out = self.forward_seq(&step.graph.layers, x0, &mut caches)?;
-        Ok((act_f32(out)?, caches))
+        let out = self.forward_seq(&step.plan.layers, x0, caches)?;
+        act_f32(out)
     }
 
     fn forward_seq(
         &mut self,
-        layers: &[Layer],
+        plans: &'p [PlanLayer],
         mut act: Act,
         caches: &mut Vec<Cache>,
     ) -> Result<Act> {
-        for layer in layers {
-            act = self.forward_layer(layer, act, caches)?;
+        for plan in plans {
+            act = self.forward_layer(plan, act, caches)?;
         }
         Ok(act)
     }
 
-    fn forward_layer(&mut self, layer: &Layer, act: Act, caches: &mut Vec<Cache>) -> Result<Act> {
-        Ok(match layer {
-            Layer::Flatten => {
+    fn forward_layer(
+        &mut self,
+        plan: &'p PlanLayer,
+        act: Act,
+        caches: &mut Vec<Cache>,
+    ) -> Result<Act> {
+        Ok(match plan {
+            PlanLayer::Flatten => {
                 let x = act_f32(act)?;
                 let b = x.shape.first().copied().unwrap_or(1);
                 let rest: usize = x.shape[1..].iter().product();
-                caches.push(Cache::Flatten { shape: x.shape });
-                Act::F(Tensor { shape: vec![b, rest], data: x.data })
+                let Tensor { shape, data } = x;
+                caches.push(Cache::Flatten { shape });
+                Act::F(Tensor { shape: self.ws.take_shape(&[b, rest]), data })
             }
-            Layer::Linear(spec) => {
+            PlanLayer::Linear(p) => {
                 let x = act_f32(act)?;
-                let (y, cache) = self.lin_fwd(spec, &x)?;
-                caches.push(Cache::Linear(cache));
+                let (y, cache) = self.lin_fwd_owned(p, x)?;
+                caches.push(cache);
                 Act::F(y)
             }
-            Layer::Conv2d(spec) => {
+            PlanLayer::Conv(pc) => {
                 let x = act_f32(act)?;
-                if x.shape.len() != 4 || x.shape[1] != spec.c_in || x.shape[2] != x.shape[3] {
+                let p = &pc.lin;
+                if x.shape.len() != 4 || x.shape[1] != pc.c_in || x.shape[2] != x.shape[3] {
                     bail!(
                         "{}: conv {:?} wants [B, {}, H, H], activation is {:?}",
                         self.step.man.name,
-                        spec.name,
-                        spec.c_in,
+                        p.site,
+                        pc.c_in,
                         x.shape
                     );
                 }
                 let dims = ConvDims {
                     batch: x.shape[0],
-                    c_in: spec.c_in,
+                    c_in: pc.c_in,
                     hw: x.shape[2],
-                    c_out: spec.c_out,
-                    k: spec.k,
-                    stride: spec.stride,
-                    pad: spec.pad,
+                    c_out: p.c_out,
+                    k: pc.k,
+                    stride: pc.stride,
+                    pad: pc.pad,
                 };
-                let site = format!("{}.w", spec.name);
-                let w = self.vals.f32(&site)?;
-                self.tap(&site, &x.data);
-                let q = self.siteq(&site)?;
-                let (xh, wh) = match &q {
-                    Some(sq) => (
-                        fq_act_tensor(&x.data, sq.sx, sq.zx, self.step.id.a_bits),
-                        fq_weight_rows(&w.data, &sq.sw, dims.patch(), self.step.id.w_bits),
-                    ),
-                    None => (x.data.clone(), w.data.clone()),
+                self.tap_site(&p.site, &x.data);
+                let q = self.siteq(p)?;
+                let w = self.f32_in(p.w)?;
+                let patch = dims.patch();
+                let mut cols = self.ws.take_f32(dims.rows() * patch);
+                let wh = match &q {
+                    Some(sq) => {
+                        let mut xh = self.ws.take_f32(x.data.len());
+                        fq_act_tensor_into(&x.data, sq.sx, sq.zx, self.step.id.a_bits, &mut xh);
+                        let mut wh = self.ws.take_f32(w.data.len());
+                        fq_weight_rows_into(&w.data, sq.sw, patch, self.step.id.w_bits, &mut wh);
+                        conv::im2col_into(&xh, &dims, &mut cols);
+                        self.ws.give_f32(xh);
+                        Some(wh)
+                    }
+                    None => {
+                        conv::im2col_into(&x.data, &dims, &mut cols);
+                        None
+                    }
                 };
-                let cols = conv::im2col(&xh, &dims);
-                let y2 = linear_fwd(&cols, &wh, None, dims.rows(), dims.patch(), dims.c_out);
-                let y = conv::rows_to_nchw(&y2, &dims);
+                let keep = q.is_some() && self.keep_raw();
+                let mut y2 = self.ws.take_f32(dims.rows() * p.c_out);
+                let whs: &[f32] = match &wh {
+                    Some(v) => v,
+                    None => &w.data,
+                };
+                linear_fwd_into(&cols, whs, None, dims.rows(), patch, p.c_out, &mut y2);
+                let mut y = self.ws.take_f32(y2.len());
+                conv::rows_to_nchw_into(&y2, &dims, &mut y);
+                self.ws.give_f32(y2);
                 let ho = dims.hw_out();
-                let x_raw = if self.keep_raw(&q) { x.data } else { Vec::new() };
-                caches.push(Cache::Conv(ConvCache { x_raw, cols, wh, q, dims }));
-                Act::F(Tensor { shape: vec![dims.batch, dims.c_out, ho, ho], data: y })
+                let Tensor { mut shape, data } = x;
+                let x_raw = if keep {
+                    data
+                } else {
+                    self.ws.give_f32(data);
+                    Vec::new()
+                };
+                shape[1] = p.c_out;
+                shape[2] = ho;
+                shape[3] = ho;
+                caches.push(Cache::Conv(ConvCache { x_raw, cols, wh, dims }));
+                Act::F(Tensor { shape, data: y })
             }
-            Layer::Relu => {
+            PlanLayer::Relu => {
                 let x = act_f32(act)?;
-                let y = relu_fwd(&x.data);
-                caches.push(Cache::Relu { pre: x.data });
-                Act::F(Tensor { shape: x.shape, data: y })
+                let mut y = self.ws.take_f32(x.data.len());
+                relu_fwd_into(&x.data, &mut y);
+                let Tensor { shape, data } = x;
+                caches.push(Cache::Relu { pre: data });
+                Act::F(Tensor { shape, data: y })
             }
-            Layer::AvgPool2x2 => {
+            PlanLayer::Pool => {
                 let x = act_f32(act)?;
                 if x.shape.len() != 4 || x.shape[2] % 2 != 0 || x.shape[2] != x.shape[3] {
                     let step = &self.step.man.name;
                     bail!("{step}: avgpool wants [B, C, 2n, 2n], got {:?}", x.shape);
                 }
                 let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2]);
-                let y = conv::avgpool2_fwd(&x.data, b, c, hw);
-                caches.push(Cache::Pool { shape: x.shape });
-                Act::F(Tensor { shape: vec![b, c, hw / 2, hw / 2], data: y })
+                let ho = hw / 2;
+                let mut y = self.ws.take_f32(b * c * ho * ho);
+                conv::avgpool2_fwd_into(&x.data, b, c, hw, &mut y);
+                let Tensor { mut shape, data } = x;
+                self.ws.give_f32(data);
+                shape[2] = ho;
+                shape[3] = ho;
+                caches.push(Cache::Pool { b, c, hw });
+                Act::F(Tensor { shape, data: y })
             }
-            Layer::LayerNorm(spec) => {
+            PlanLayer::Norm(pn) => {
                 let x = act_f32(act)?;
-                if x.shape.last() != Some(&spec.d) {
+                if x.shape.last() != Some(&pn.d) {
                     let step = &self.step.man.name;
                     bail!(
                         "{step}: layernorm {:?} wants {} features, got {:?}",
-                        spec.name,
-                        spec.d,
+                        pn.name,
+                        pn.d,
                         x.shape
                     );
                 }
-                let rows = x.data.len() / spec.d;
-                let g = self.vals.f32(&format!("{}.g", spec.name))?;
-                let b = self.vals.f32(&format!("{}.b", spec.name))?;
-                let (y, xhat, inv) = layernorm_fwd(&x.data, &g.data, &b.data, rows, spec.d);
-                caches.push(Cache::Norm { xhat, inv });
-                Act::F(Tensor { shape: x.shape, data: y })
+                let rows = x.data.len() / pn.d;
+                let g = self.f32_in(pn.g)?;
+                let bb = self.f32_in(pn.b)?;
+                let mut y = self.ws.take_f32(x.data.len());
+                let mut xhat = self.ws.take_f32(x.data.len());
+                let mut inv = self.ws.take_f32(rows);
+                layernorm_fwd_into(
+                    &x.data, &g.data, &bb.data, rows, pn.d, &mut y, &mut xhat, &mut inv,
+                );
+                let Tensor { shape, data } = x;
+                self.ws.give_f32(data);
+                caches.push(Cache::Norm { xhat, inv, rows });
+                Act::F(Tensor { shape, data: y })
             }
-            Layer::Embed(spec) => {
-                let ids = match act {
-                    Act::I(t) => t,
-                    Act::F(_) => bail!("graph: embedding expects i32 token ids"),
-                };
+            PlanLayer::Embed(pe) => {
+                if let Act::F(_) = act {
+                    bail!("graph: embedding expects i32 token ids");
+                }
+                let ids = self.i32_in(self.step.plan.x)?;
                 for &id in &ids.data {
-                    if id < 0 || id as usize >= spec.vocab {
+                    if id < 0 || id as usize >= pe.vocab {
                         bail!(
                             "{}: token id {id} out of range [0, {})",
                             self.step.man.name,
-                            spec.vocab
+                            pe.vocab
                         );
                     }
                 }
-                let tok = self.vals.f32(&format!("{}.tok", spec.name))?;
-                let pos = self.vals.f32(&format!("{}.pos", spec.name))?;
-                let y = embed_fwd(&tok.data, &pos.data, &ids.data, spec.seq, spec.d);
-                let b = ids.data.len() / spec.seq;
-                caches.push(Cache::Embed { ids: ids.data });
-                Act::F(Tensor { shape: vec![b, spec.seq, spec.d], data: y })
+                let b = ids.data.len() / pe.seq;
+                let tok = self.f32_in(pe.tok)?;
+                let pos = self.f32_in(pe.pos)?;
+                let mut y = self.ws.take_f32(ids.data.len() * pe.d);
+                embed_fwd_into(&tok.data, &pos.data, &ids.data, pe.seq, pe.d, &mut y);
+                caches.push(Cache::Embed);
+                Act::F(Tensor { shape: self.ws.take_shape(&[b, pe.seq, pe.d]), data: y })
             }
-            Layer::Attention(spec) => {
+            PlanLayer::Attn(pa) => {
                 let x = act_f32(act)?;
-                if x.shape.len() != 3 || x.shape[2] != spec.d {
+                if x.shape.len() != 3 || x.shape[2] != pa.d {
                     let step = &self.step.man.name;
-                    bail!(
-                        "{step}: attention {:?} wants [B, T, {}], got {:?}",
-                        spec.name,
-                        spec.d,
-                        x.shape
-                    );
+                    bail!("{step}: attention wants [B, T, {}], got {:?}", pa.d, x.shape);
                 }
-                let projs = attn_projections(spec);
-                let (qy, q_lin) = self.lin_fwd(&projs[0], &x)?;
-                let (ky, k_lin) = self.lin_fwd(&projs[1], &x)?;
-                let (vy, v_lin) = self.lin_fwd(&projs[2], &x)?;
-                let dm =
-                    AttnDims { batch: x.shape[0], t: x.shape[1], d: spec.d, heads: spec.heads };
-                let (om, p) = sdpa_fwd(&qy.data, &ky.data, &vy.data, &dm, spec.causal);
-                let om_t = Tensor { shape: x.shape.clone(), data: om };
-                let (out, o_lin) = self.lin_fwd(&projs[3], &om_t)?;
-                caches.push(Cache::Attn(Box::new(AttnCache {
+                let rows = x.data.len() / pa.d;
+                let (b, t) = (x.shape[0], x.shape[1]);
+                let (qy, q_lin) = self.lin_fwd_shared(&pa.proj[0], &x.data, rows)?;
+                let (ky, k_lin) = self.lin_fwd_shared(&pa.proj[1], &x.data, rows)?;
+                let (vy, v_lin) = self.lin_fwd_shared(&pa.proj[2], &x.data, rows)?;
+                let dm = AttnDims { batch: b, t, d: pa.d, heads: pa.heads };
+                let mut om = self.ws.take_f32(x.data.len());
+                let mut p = self.ws.take_f32(b * pa.heads * t * t);
+                let mut scores = self.ws.take_f32(t);
+                sdpa_fwd_into(&qy, &ky, &vy, &dm, pa.causal, &mut om, &mut p, &mut scores);
+                self.ws.give_f32(scores);
+                let (out, o_lin) = self.lin_fwd_shared(&pa.proj[3], &om, rows)?;
+                let Tensor { shape, data } = x;
+                caches.push(Cache::Attn(AttnCache {
+                    x: data,
+                    om,
                     q_lin,
                     k_lin,
                     v_lin,
                     o_lin,
-                    qy: qy.data,
-                    ky: ky.data,
-                    vy: vy.data,
+                    qy,
+                    ky,
+                    vy,
                     p,
                     dm,
-                })));
-                Act::F(out)
+                }));
+                Act::F(Tensor { shape, data: out })
             }
-            Layer::Residual(inner) => {
+            PlanLayer::Residual(inner) => {
                 let x = act_f32(act)?;
-                let mut sub = Vec::new();
-                let y = act_f32(self.forward_seq(inner, Act::F(x.clone()), &mut sub)?)?;
+                let step = self.step;
+                let mut xc_data = self.ws.take_f32(x.data.len());
+                xc_data.copy_from_slice(&x.data);
+                let xc = Tensor { shape: self.ws.take_shape(&x.shape), data: xc_data };
+                let mut sub = step.take_caches();
+                let y = self.forward_seq(inner, Act::F(xc), &mut sub)?;
+                let mut y = act_f32(y)?;
                 if y.shape != x.shape {
                     bail!(
                         "{}: residual sub-graph changed shape {:?} -> {:?}",
-                        self.step.man.name,
+                        step.man.name,
                         x.shape,
                         y.shape
                     );
                 }
-                let data = x.data.iter().zip(&y.data).map(|(a, b)| a + b).collect();
+                for (yo, xi) in y.data.iter_mut().zip(&x.data) {
+                    *yo += xi;
+                }
+                self.ws.give_tensor(x);
                 caches.push(Cache::Residual(sub));
-                Act::F(Tensor { shape: x.shape, data })
+                Act::F(y)
             }
         })
     }
@@ -1071,172 +1575,355 @@ impl<'a> Run<'a> {
 
     fn backward_seq(
         &mut self,
-        layers: &[Layer],
-        caches: &[Cache],
-        dy: Tensor,
-        grads: &mut BTreeMap<String, Value>,
+        plans: &'p [PlanLayer],
+        caches: &mut Vec<Cache>,
+        mut dy: Tensor,
     ) -> Result<Tensor> {
-        debug_assert_eq!(layers.len(), caches.len());
-        let mut dy = dy;
-        for (layer, cache) in layers.iter().zip(caches).rev() {
-            dy = self.backward_layer(layer, cache, dy, grads)?;
+        debug_assert_eq!(plans.len(), caches.len());
+        for plan in plans.iter().rev() {
+            let cache = caches.pop().ok_or_else(|| {
+                anyhow!("{}: cache underflow in backward", self.step.man.name)
+            })?;
+            dy = self.backward_layer(plan, cache, dy)?;
         }
         Ok(dy)
     }
 
+    fn conv_bwd(&mut self, pc: &PlanConv, c: ConvCache, dy: &[f32]) -> Result<Vec<f32>> {
+        let step = self.step;
+        let p = &pc.lin;
+        let d = c.dims;
+        let patch = d.patch();
+        let mut dy2 = self.ws.take_f32(d.rows() * d.c_out);
+        conv::nchw_to_rows_into(dy, &d, &mut dy2);
+        let q = self.siteq(p)?;
+        let w = self.f32_in(p.w)?;
+        let wh: &[f32] = match &c.wh {
+            Some(v) => v,
+            None => &w.data,
+        };
+        let mut dcols = self.ws.take_f32(d.rows() * patch);
+        matmul_dy_w_into(&dy2, wh, d.rows(), d.c_out, patch, &mut dcols);
+        let mut dxh = self.ws.take_f32(d.batch * d.c_in * d.hw * d.hw);
+        conv::col2im_into(&dcols, &d, &mut dxh);
+        self.ws.give_f32(dcols);
+        let sel = self.run_sel(p)?;
+        let cols = &c.cols;
+        let mut full = |ws: &mut Workspace| {
+            let mut dw = ws.take_f32(d.c_out * patch);
+            matmul_dyt_x_into(&dy2, cols, d.rows(), d.c_out, patch, &mut dw);
+            dw
+        };
+        let mut partial = |ws: &mut Workspace, ids: &[usize]| {
+            let mut dw = ws.take_f32(ids.len() * patch);
+            partial_dw_into(&dy2, cols, ids, d.rows(), d.c_out, patch, &mut dw);
+            dw
+        };
+        let (dw, dsw) = weight_site_grads(
+            step.id.w_bits,
+            &sel,
+            w,
+            q.as_ref(),
+            patch,
+            &mut *self.ws,
+            &mut full,
+            &mut partial,
+        );
+        if let RunSel::Idx(ids) = sel {
+            self.ws.give_shape(ids);
+        }
+        self.ws.give_f32(dy2);
+        self.emit_f32(p.dw, dw);
+        self.emit_dsw(p.dsw, dsw);
+        let dx = match &q {
+            Some(sq) => {
+                let mut dx = self.ws.take_f32(dxh.len());
+                let (ds, dz) =
+                    fq_act_bwd_tensor_into(&c.x_raw, sq.sx, sq.zx, &dxh, step.id.a_bits, &mut dx);
+                self.ws.give_f32(dxh);
+                let t = self.ws.scalar(ds);
+                self.emit_f32(p.dsx, Some(t));
+                let t = self.ws.scalar(dz);
+                self.emit_f32(p.dzx, Some(t));
+                dx
+            }
+            None => dxh,
+        };
+        self.ws.give_f32(c.x_raw);
+        self.ws.give_f32(c.cols);
+        if let Some(v) = c.wh {
+            self.ws.give_f32(v);
+        }
+        Ok(dx)
+    }
+
     fn backward_layer(
         &mut self,
-        layer: &Layer,
-        cache: &Cache,
-        dy: Tensor,
-        grads: &mut BTreeMap<String, Value>,
+        plan: &'p PlanLayer,
+        cache: Cache,
+        mut dy: Tensor,
     ) -> Result<Tensor> {
-        match (layer, cache) {
-            (Layer::Flatten, Cache::Flatten { shape }) => {
-                Ok(Tensor { shape: shape.clone(), data: dy.data })
+        match (plan, cache) {
+            (PlanLayer::Flatten, Cache::Flatten { shape }) => {
+                let Tensor { shape: dy_shape, data } = dy;
+                self.ws.give_shape(dy_shape);
+                Ok(Tensor { shape, data })
             }
-            (Layer::Linear(spec), Cache::Linear(c)) => self.lin_bwd(spec, c, &dy, grads),
-            (Layer::Conv2d(spec), Cache::Conv(c)) => {
-                let d = &c.dims;
-                let site = format!("{}.w", spec.name);
-                let dy2 = conv::nchw_to_rows(&dy.data, d);
-                let dcols = matmul_dy_w(&dy2, &c.wh, d.rows(), d.c_out, d.patch());
-                let dxh = conv::col2im(&dcols, d);
-                let sel = self.run_sel(&site, d.c_out)?;
-                let w = self.vals.f32(&site)?;
-                let mut full = || matmul_dyt_x(&dy2, &c.cols, d.rows(), d.c_out, d.patch());
-                let mut partial =
-                    |ids: &[usize]| partial_dw(&dy2, &c.cols, ids, d.rows(), d.c_out, d.patch());
-                let patch = d.patch();
-                let (dw, dsw) =
-                    self.weight_site_grads(&sel, w, c.q.as_ref(), patch, &mut full, &mut partial);
-                self.emit_site_grads(&site, dw, dsw, grads);
-                let dx = self.act_bwd(&site, c.q.as_ref(), &c.x_raw, dxh, grads);
-                Ok(Tensor { shape: vec![d.batch, d.c_in, d.hw, d.hw], data: dx })
+            (PlanLayer::Linear(p), Cache::Linear { lin, x_raw, x_shape }) => {
+                let dx = self.lin_bwd_core(p, lin, &dy.data, &x_raw, &x_raw)?;
+                self.ws.give_f32(x_raw);
+                self.ws.give_tensor(dy);
+                Ok(Tensor { shape: x_shape, data: dx })
             }
-            (Layer::Relu, Cache::Relu { pre }) => {
-                Ok(Tensor { shape: dy.shape, data: relu_bwd(&dy.data, pre) })
+            (PlanLayer::Conv(pc), Cache::Conv(c)) => {
+                let d = c.dims;
+                let dx = self.conv_bwd(pc, c, &dy.data)?;
+                let Tensor { mut shape, data } = dy;
+                self.ws.give_f32(data);
+                shape[0] = d.batch;
+                shape[1] = d.c_in;
+                shape[2] = d.hw;
+                shape[3] = d.hw;
+                Ok(Tensor { shape, data: dx })
             }
-            (Layer::AvgPool2x2, Cache::Pool { shape }) => {
-                let (b, c, hw) = (shape[0], shape[1], shape[2]);
-                Ok(Tensor { shape: shape.clone(), data: conv::avgpool2_bwd(&dy.data, b, c, hw) })
+            (PlanLayer::Relu, Cache::Relu { pre }) => {
+                // gate in place on the cached pre-activation — no new buffer
+                for (g, &h) in dy.data.iter_mut().zip(&pre) {
+                    if h <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+                self.ws.give_f32(pre);
+                Ok(dy)
             }
-            (Layer::LayerNorm(spec), Cache::Norm { xhat, inv }) => {
-                let rows = dy.data.len() / spec.d;
-                let g = self.vals.f32(&format!("{}.g", spec.name))?;
-                let (dx, dgamma, dbeta) = layernorm_bwd(&dy.data, xhat, inv, &g.data, rows, spec.d);
-                grads.insert(
-                    format!("d:{}.g", spec.name),
-                    Value::F32(Tensor { shape: vec![spec.d], data: dgamma }),
+            (PlanLayer::Pool, Cache::Pool { b, c, hw }) => {
+                let mut dx = self.ws.take_f32(b * c * hw * hw);
+                conv::avgpool2_bwd_into(&dy.data, b, c, hw, &mut dx);
+                let Tensor { mut shape, data } = dy;
+                self.ws.give_f32(data);
+                shape[2] = hw;
+                shape[3] = hw;
+                Ok(Tensor { shape, data: dx })
+            }
+            (PlanLayer::Norm(pn), Cache::Norm { xhat, inv, rows }) => {
+                let g = self.f32_in(pn.g)?;
+                let mut dx = self.ws.take_f32(dy.data.len());
+                let mut dgamma = self.ws.take_f32(pn.d);
+                let mut dbeta = self.ws.take_f32(pn.d);
+                layernorm_bwd_into(
+                    &dy.data, &xhat, &inv, &g.data, rows, pn.d, &mut dx, &mut dgamma, &mut dbeta,
                 );
-                grads.insert(
-                    format!("d:{}.b", spec.name),
-                    Value::F32(Tensor { shape: vec![spec.d], data: dbeta }),
-                );
-                Ok(Tensor { shape: dy.shape, data: dx })
+                self.ws.give_f32(xhat);
+                self.ws.give_f32(inv);
+                let t = self.ws.tensor(&[pn.d], dgamma);
+                self.emit_f32(pn.dg, Some(t));
+                let t = self.ws.tensor(&[pn.d], dbeta);
+                self.emit_f32(pn.db, Some(t));
+                let Tensor { shape, data } = dy;
+                self.ws.give_f32(data);
+                Ok(Tensor { shape, data: dx })
             }
-            (Layer::Embed(spec), Cache::Embed { ids }) => {
+            (PlanLayer::Embed(pe), Cache::Embed) => {
                 // embeddings train during FP pretraining only (the
                 // manifest declares no embed grads otherwise) — skip the
                 // scatter-add entirely on quantized steps
-                if self.step.id.kind == StepKind::Train(TrainSel::Fp) {
-                    let (dtok, dpos) = embed_bwd(&dy.data, ids, spec.vocab, spec.seq, spec.d);
-                    grads.insert(
-                        format!("d:{}.tok", spec.name),
-                        Value::F32(Tensor { shape: vec![spec.vocab, spec.d], data: dtok }),
-                    );
-                    grads.insert(
-                        format!("d:{}.pos", spec.name),
-                        Value::F32(Tensor { shape: vec![spec.seq, spec.d], data: dpos }),
-                    );
+                if pe.dtok.is_some() {
+                    let ids = self.i32_in(self.step.plan.x)?;
+                    let mut dtok = self.ws.take_f32(pe.vocab * pe.d);
+                    let mut dpos = self.ws.take_f32(pe.seq * pe.d);
+                    embed_bwd_into(&dy.data, &ids.data, pe.seq, pe.d, &mut dtok, &mut dpos);
+                    let t = self.ws.tensor(&[pe.vocab, pe.d], dtok);
+                    self.emit_f32(pe.dtok, Some(t));
+                    let t = self.ws.tensor(&[pe.seq, pe.d], dpos);
+                    self.emit_f32(pe.dpos, Some(t));
                 }
+                self.ws.give_tensor(dy);
                 // the input is token ids — there is no dx
-                Ok(Tensor { shape: vec![0], data: Vec::new() })
+                Ok(Tensor { shape: self.ws.take_shape(&[0]), data: self.ws.take_f32(0) })
             }
-            (Layer::Attention(spec), Cache::Attn(c)) => {
-                let projs = attn_projections(spec);
-                let dom = self.lin_bwd(&projs[3], &c.o_lin, &dy, grads)?;
-                let (dq, dk, dv) = sdpa_bwd(&dom.data, &c.qy, &c.ky, &c.vy, &c.p, &c.dm);
-                let shape = dom.shape;
-                let dq = Tensor { shape: shape.clone(), data: dq };
-                let dxq = self.lin_bwd(&projs[0], &c.q_lin, &dq, grads)?;
-                let dk = Tensor { shape: shape.clone(), data: dk };
-                let dxk = self.lin_bwd(&projs[1], &c.k_lin, &dk, grads)?;
-                let dv = Tensor { shape, data: dv };
-                let dxv = self.lin_bwd(&projs[2], &c.v_lin, &dv, grads)?;
-                let data = dxq
-                    .data
-                    .iter()
-                    .zip(&dxk.data)
-                    .zip(&dxv.data)
-                    .map(|((a, b), c)| a + b + c)
-                    .collect();
-                Ok(Tensor { shape: dxq.shape, data })
-            }
-            (Layer::Residual(inner), Cache::Residual(sub)) => {
-                let dinner = self.backward_seq(inner, sub, dy.clone(), grads)?;
-                if dinner.data.len() != dy.data.len() {
-                    bail!("{}: residual backward shape mismatch", self.step.man.name);
+            (PlanLayer::Attn(pa), Cache::Attn(ac)) => {
+                let AttnCache { x, om, q_lin, k_lin, v_lin, o_lin, qy, ky, vy, p, dm } = ac;
+                let dom = self.lin_bwd_core(&pa.proj[3], o_lin, &dy.data, &om, &om)?;
+                let n = dy.data.len();
+                let mut dq = self.ws.take_f32(n);
+                let mut dk = self.ws.take_f32(n);
+                let mut dv = self.ws.take_f32(n);
+                let mut dp = self.ws.take_f32(dm.t);
+                sdpa_bwd_into(&dom, &qy, &ky, &vy, &p, &dm, &mut dq, &mut dk, &mut dv, &mut dp);
+                self.ws.give_f32(dom);
+                self.ws.give_f32(dp);
+                self.ws.give_f32(om);
+                self.ws.give_f32(qy);
+                self.ws.give_f32(ky);
+                self.ws.give_f32(vy);
+                self.ws.give_f32(p);
+                let mut dxq = self.lin_bwd_core(&pa.proj[0], q_lin, &dq, &x, &x)?;
+                self.ws.give_f32(dq);
+                let dxk = self.lin_bwd_core(&pa.proj[1], k_lin, &dk, &x, &x)?;
+                self.ws.give_f32(dk);
+                let dxv = self.lin_bwd_core(&pa.proj[2], v_lin, &dv, &x, &x)?;
+                self.ws.give_f32(dv);
+                for ((a, b), c) in dxq.iter_mut().zip(&dxk).zip(&dxv) {
+                    *a += b + c;
                 }
-                let data = dy.data.iter().zip(&dinner.data).map(|(a, b)| a + b).collect();
-                Ok(Tensor { shape: dy.shape, data })
+                self.ws.give_f32(dxk);
+                self.ws.give_f32(dxv);
+                self.ws.give_f32(x);
+                let Tensor { shape, data } = dy;
+                self.ws.give_f32(data);
+                Ok(Tensor { shape, data: dxq })
+            }
+            (PlanLayer::Residual(inner), Cache::Residual(mut sub)) => {
+                let step = self.step;
+                let mut dc_data = self.ws.take_f32(dy.data.len());
+                dc_data.copy_from_slice(&dy.data);
+                let dc = Tensor { shape: self.ws.take_shape(&dy.shape), data: dc_data };
+                let dinner = self.backward_seq(inner, &mut sub, dc)?;
+                step.give_caches(sub);
+                if dinner.data.len() != dy.data.len() {
+                    bail!("{}: residual backward shape mismatch", step.man.name);
+                }
+                for (a, b) in dy.data.iter_mut().zip(&dinner.data) {
+                    *a += b;
+                }
+                self.ws.give_tensor(dinner);
+                Ok(dy)
             }
             _ => bail!("{}: layer/cache mismatch in backward", self.step.man.name),
         }
     }
 
+    /// Recycle a forward-only cache tree (fwd/calib steps, error paths).
+    fn drop_caches(&mut self, caches: &mut Vec<Cache>) {
+        while let Some(cache) = caches.pop() {
+            match cache {
+                Cache::Flatten { shape } => self.ws.give_shape(shape),
+                Cache::Linear { lin, x_raw, x_shape } => {
+                    self.give_lin(lin);
+                    self.ws.give_f32(x_raw);
+                    self.ws.give_shape(x_shape);
+                }
+                Cache::Conv(c) => {
+                    self.ws.give_f32(c.x_raw);
+                    self.ws.give_f32(c.cols);
+                    if let Some(v) = c.wh {
+                        self.ws.give_f32(v);
+                    }
+                }
+                Cache::Relu { pre } => self.ws.give_f32(pre),
+                Cache::Pool { .. } | Cache::Embed => {}
+                Cache::Norm { xhat, inv, .. } => {
+                    self.ws.give_f32(xhat);
+                    self.ws.give_f32(inv);
+                }
+                Cache::Attn(ac) => {
+                    let AttnCache { x, om, q_lin, k_lin, v_lin, o_lin, qy, ky, vy, p, .. } = ac;
+                    for v in [x, om, qy, ky, vy, p] {
+                        self.ws.give_f32(v);
+                    }
+                    for lin in [q_lin, k_lin, v_lin, o_lin] {
+                        self.give_lin(lin);
+                    }
+                }
+                Cache::Residual(mut sub) => {
+                    self.drop_caches(&mut sub);
+                    self.step.give_caches(sub);
+                }
+            }
+        }
+    }
+
+    fn give_lin(&mut self, lin: LinCache) {
+        if let Some(v) = lin.xh {
+            self.ws.give_f32(v);
+        }
+        if let Some(v) = lin.wh {
+            self.ws.give_f32(v);
+        }
+    }
+
     // ---- step kinds -------------------------------------------------------
 
-    fn loss_and_correct(&self, logits: &Tensor) -> Result<(f32, i32, Vec<f32>)> {
-        let classes = self.step.graph.classes;
-        let rows = logits.data.len() / classes;
-        let labels = &self.vals.i32("y")?.data;
-        let (loss, correct_rows, dlogits) = softmax_xent(&logits.data, labels, rows, classes)
-            .map_err(|e| anyhow!("{}: {e}", self.step.man.name))?;
-        // `correct` is the raw correct-row count — examples for
-        // classifiers, *tokens* for LM graphs — matching what the AOT
-        // artifacts emit (python ce_loss_fwd reports token counts)
-        Ok((loss, correct_rows as i32, dlogits))
-    }
-
-    fn run_train(&mut self) -> Result<BTreeMap<String, Value>> {
+    /// Mean softmax cross-entropy over the logits against the bound
+    /// labels — shared by train and fwd steps so the metric convention
+    /// cannot fork.  Returns `(loss, correct_rows, dlogits)`; `correct`
+    /// is the raw correct-row count — examples for classifiers,
+    /// *tokens* for LM graphs — matching what the AOT artifacts emit
+    /// (python ce_loss_fwd reports token counts).  `dlogits` is pooled;
+    /// give it back if unused.
+    fn loss_and_correct(&mut self, logits: &Tensor) -> Result<(f32, usize, Vec<f32>)> {
         let step = self.step;
-        let (logits, caches) = self.forward()?;
-        let (loss, correct, dlogits) = self.loss_and_correct(&logits)?;
-        let mut out = BTreeMap::new();
-        let dl = Tensor { shape: logits.shape.clone(), data: dlogits };
-        self.backward_seq(&step.graph.layers, &caches, dl, &mut out)?;
-        out.insert("loss".into(), Value::F32(Tensor::scalar(loss)));
-        out.insert("correct".into(), Value::I32(ITensor { shape: vec![1], data: vec![correct] }));
-        Ok(out)
+        let classes = step.graph.classes;
+        let rows = logits.data.len() / classes;
+        let y_idx = step.plan.y.ok_or_else(|| anyhow!("{}: plan has no labels", step.man.name))?;
+        let labels = self.i32_in(y_idx)?;
+        let mut dl = self.ws.take_f32(logits.data.len());
+        let (loss, correct) = softmax_xent_into(&logits.data, &labels.data, rows, classes, &mut dl)
+            .map_err(|e| anyhow!("{}: {e}", step.man.name))?;
+        Ok((loss, correct, dl))
     }
 
-    fn run_fwd(&mut self) -> Result<BTreeMap<String, Value>> {
-        let (logits, _caches) = self.forward()?;
-        let (loss, correct, _) = self.loss_and_correct(&logits)?;
-        let mut out = BTreeMap::new();
-        out.insert("loss".to_string(), Value::F32(Tensor::scalar(loss)));
-        let correct = ITensor { shape: vec![1], data: vec![correct] };
-        out.insert("correct".to_string(), Value::I32(correct));
-        out.insert("logits".to_string(), Value::F32(logits));
-        Ok(out)
+    /// Emit the pooled `loss` / `correct` outputs.
+    fn emit_metrics(&mut self, loss: f32, correct: usize) {
+        let (loss_slot, correct_slot) = (self.step.plan.loss, self.step.plan.correct);
+        let loss_t = self.ws.scalar(loss);
+        self.emit(loss_slot, Value::F32(loss_t));
+        let mut cdata = self.ws.take_i32(1);
+        cdata[0] = correct as i32;
+        let correct_t = self.ws.itensor(&[1], cdata);
+        self.emit(correct_slot, Value::I32(correct_t));
     }
 
-    fn run_calib(&mut self) -> Result<BTreeMap<String, Value>> {
+    fn run_train(&mut self) -> Result<()> {
+        let step = self.step;
+        let mut caches = step.take_caches();
+        let logits = self.forward(&mut caches)?;
+        let (loss, correct, dl_data) = self.loss_and_correct(&logits)?;
+        let Tensor { shape: dl_shape, data: logits_data } = logits;
+        self.ws.give_f32(logits_data);
+        let dl = Tensor { shape: dl_shape, data: dl_data };
+        let dx = self.backward_seq(&step.plan.layers, &mut caches, dl)?;
+        self.ws.give_tensor(dx);
+        step.give_caches(caches);
+        self.emit_metrics(loss, correct);
+        Ok(())
+    }
+
+    fn run_fwd(&mut self) -> Result<()> {
+        let step = self.step;
+        let mut caches = step.take_caches();
+        let logits = self.forward(&mut caches)?;
+        self.drop_caches(&mut caches);
+        step.give_caches(caches);
+        let (loss, correct, dl) = self.loss_and_correct(&logits)?;
+        self.ws.give_f32(dl);
+        self.emit_metrics(loss, correct);
+        self.emit(step.plan.logits, Value::F32(logits));
+        Ok(())
+    }
+
+    fn run_calib(&mut self) -> Result<()> {
         self.taps = Some(BTreeMap::new());
-        self.forward()?;
+        let step = self.step;
+        let mut caches = step.take_caches();
+        let logits = self.forward(&mut caches)?;
+        self.ws.give_tensor(logits);
+        self.drop_caches(&mut caches);
+        step.give_caches(caches);
         let taps = self.taps.take().unwrap_or_default();
-        let mut out = BTreeMap::new();
-        for site in &self.step.man.wsites {
+        // calib outputs are exactly the wsites, in order (build_manifest)
+        debug_assert_eq!(step.man.outputs.len(), step.man.wsites.len());
+        for (i, site) in step.man.wsites.iter().enumerate() {
             let (lo, hi) = taps.get(&site.name).copied().ok_or_else(|| {
-                anyhow!("{}: calib tapped no data for site {:?}", self.step.man.name, site.name)
+                anyhow!("{}: calib tapped no data for site {:?}", step.man.name, site.name)
             })?;
-            out.insert(
-                format!("mm:{}", site.name),
-                Value::F32(Tensor { shape: vec![2], data: vec![lo, hi] }),
-            );
+            let mut data = self.ws.take_f32(2);
+            data[0] = lo;
+            data[1] = hi;
+            let t = self.ws.tensor(&[2], data);
+            self.emit(Some(i), Value::F32(t));
         }
-        Ok(out)
+        Ok(())
     }
 }
 

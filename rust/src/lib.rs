@@ -25,6 +25,12 @@
 //!   activations quantized at layer boundaries) for forward-only batched
 //!   inference — the deployed arithmetic `--exec int8` evaluates and
 //!   `benches/serve_throughput.rs` measures.
+//! * [`exec`] is the execution workspace behind every hot path: a typed
+//!   free-list arena ([`exec::Workspace`]) the planned executors (graph
+//!   train/eval steps, the lowered serving forward) draw every
+//!   activation, cache, gradient, and scratch buffer from, so the steady
+//!   state performs zero heap allocations per training step and per
+//!   serve request (RFC `docs/rfcs/0003-exec-plan.md`).
 //! * [`serve`] is the concurrent serving runtime above the lowering
 //!   boundary (`efqat serve`): a bounded request queue, a dynamic
 //!   micro-batcher (flush on `max_batch` or a `max_wait` deadline), and
@@ -57,6 +63,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod exec;
 pub mod freeze;
 pub mod graph;
 pub mod harness;

@@ -1,6 +1,7 @@
 //! Float-train → int8-serve lowering: compile a trained/calibrated
 //! [`crate::graph::LayerGraph`] + its [`crate::model::QParamStore`] into
-//! a [`QuantizedGraph`] of true integer kernels.
+//! a [`QuantizedGraph`] of true integer kernels behind a *planned*
+//! forward schedule.
 //!
 //! Training simulates quantization (fake-quant in f32, so gradients
 //! exist); deployment should *execute* it.  [`lower`] freezes that
@@ -17,35 +18,56 @@
 //!   attention core, residual adds, embeddings) stays f32 — exactly the
 //!   arithmetic the fake-quant simulation trains against, so the lowered
 //!   engine reproduces the float reference's logits to ≤ 1e-3 and its
-//!   eval accuracy bit-for-bit (`tests/int8_parity.rs`).
+//!   eval accuracy bit-for-bit (`tests/int8_parity.rs`);
+//! * the layer tree is flattened into an [`ExecPlan`]: a straight-line
+//!   op schedule (residual combinators become save/add-skip
+//!   instructions) with every per-example shape inferred **at lowering
+//!   time**, so a malformed graph fails in [`lower`] with a
+//!   descriptive error — never at serve time — and the runtime walk
+//!   does no shape bookkeeping at all.
 //!
 //! The executor is forward-only and *batch-flexible*: unlike the
 //! training artifacts (whose manifests bake in a static batch), a
-//! [`QuantizedGraph`] serves any leading batch dimension — that is what
-//! `benches/serve_throughput.rs` sweeps and what the concurrent serving
-//! runtime ([`crate::serve`]) micro-batches over.
+//! [`QuantizedGraph`] serves any leading batch dimension.  The hot
+//! entry point is [`QuantizedGraph::forward_into`], which draws every
+//! activation, code, and accumulator buffer from a caller-owned
+//! [`Workspace`] — after one warmup batch a serving worker's steady
+//! state performs **zero** heap allocations per request batch, and a
+//! shrinking dynamic batch reuses the high-water buffers while a
+//! growing one resizes exactly once (`rust/tests/workspace_alloc.rs`).
+//! The borrowing [`QuantizedGraph::forward`] / consuming
+//! [`QuantizedGraph::forward_owned`] wrappers keep the historical
+//! allocate-per-call signatures for tests and cold paths.
 
 #![warn(missing_docs)]
 
 use crate::backend::Value;
 use crate::error::{anyhow, bail, Result};
+use crate::exec::Workspace;
 use crate::graph::{attn_projections, InputKind, Layer, LayerGraph, LinearSpec};
 use crate::model::{ParamStore, QParamStore};
-use crate::ops::attention::{sdpa_fwd, AttnDims};
-use crate::ops::conv::{avgpool2_fwd, ConvDims};
-use crate::ops::elementwise::{embed_fwd, relu_fwd};
-use crate::ops::norm::layernorm_fwd;
-use crate::ops::qconv::qconv_fwd;
-use crate::ops::qmatmul::{qlinear_fwd, quantize_acts, quantize_weight_rows};
+use crate::ops::attention::{sdpa_fwd_into, AttnDims};
+use crate::ops::conv::{avgpool2_fwd_into, ConvDims};
+use crate::ops::elementwise::embed_fwd_into;
+use crate::ops::norm::layernorm_fwd_into;
+use crate::ops::qconv::qconv_fwd_into;
+use crate::ops::qmatmul::{
+    qlinear_fwd_into, qlinear_scratch_len, quantize_acts_into, quantize_weight_rows,
+};
 use crate::quant::qrange_asym;
-use crate::tensor::{ITensor, Tensor};
+use crate::tensor::Tensor;
 
 /// i32 accumulation is exact for contractions up to 2³¹/(255·127); stay
 /// well inside it.
 const MAX_CONTRACTION: usize = 60_000;
 
+/// Deepest supported residual nesting.  Skip saves live in a fixed
+/// on-stack array at run time (no per-forward allocation); every repro
+/// model nests at most once.
+const MAX_SKIP_DEPTH: usize = 4;
+
 // ---------------------------------------------------------------------------
-// Lowered layers
+// Lowered sites and the planned schedule
 // ---------------------------------------------------------------------------
 
 /// One lowered quantized-linear site: weights frozen to i8 codes, the
@@ -68,11 +90,15 @@ pub struct QLinearSite {
 }
 
 impl QLinearSite {
-    /// Quantize the f32 input to codes and run the integer GEMM.
-    /// `x` is `[rows, c_in]` flattened; returns `[rows, c_out]`.
-    fn fwd(&self, x: &[f32], rows: usize) -> Vec<f32> {
-        let qx = quantize_acts(x, self.sx, self.zx as f32, self.a_bits);
-        qlinear_fwd(
+    /// Quantize the f32 input to codes and run the integer GEMM over
+    /// workspace buffers.  `x` is `[rows, c_in]` flattened; returns the
+    /// pooled `[rows, c_out]` output.
+    fn fwd_ws(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Vec<f32> {
+        let mut qx = ws.take_u8(rows * self.c_in);
+        quantize_acts_into(x, self.sx, self.zx as f32, self.a_bits, &mut qx);
+        let mut y = ws.take_f32(rows * self.c_out);
+        let mut acc = ws.take_i32(qlinear_scratch_len(rows, self.c_in, self.c_out));
+        qlinear_fwd_into(
             &qx,
             &self.qw,
             &self.wsum,
@@ -82,23 +108,81 @@ impl QLinearSite {
             rows,
             self.c_in,
             self.c_out,
-        )
+            &mut y,
+            &mut acc,
+        );
+        ws.give_u8(qx);
+        ws.give_i32(acc);
+        y
     }
 }
 
-enum QLayer {
-    Flatten,
-    Linear(QLinearSite),
-    Conv { site: QLinearSite, c_in: usize, k: usize, stride: usize, pad: usize },
-    Relu,
-    AvgPool2x2,
-    LayerNorm { g: Vec<f32>, b: Vec<f32>, d: usize },
-    Embed { tok: Vec<f32>, pos: Vec<f32>, vocab: usize, seq: usize, d: usize },
-    Attention { proj: Vec<QLinearSite>, heads: usize, causal: bool, d: usize },
-    Residual(Vec<QLayer>),
+/// Lowered LayerNorm parameters.
+struct QNorm {
+    g: Vec<f32>,
+    b: Vec<f32>,
+    d: usize,
 }
 
-/// A lowered, forward-only integer inference graph.
+/// Lowered embedding tables.
+struct QEmbed {
+    tok: Vec<f32>,
+    pos: Vec<f32>,
+    vocab: usize,
+    seq: usize,
+    d: usize,
+}
+
+/// One instruction of the flattened forward schedule.  All indices are
+/// into the [`QuantizedGraph`]'s flat site/norm/embed tables; all
+/// geometry is per-example and was inferred at lowering time — the
+/// runtime multiplies by the dynamic batch and nothing else.
+enum QOp {
+    /// Pure reshape — contiguous data, nothing to do at run time.
+    Flatten,
+    /// Quantized linear site over `rows_per` rows per example.
+    Linear { site: usize, rows_per: usize },
+    /// Quantized conv2d site (`hw` = input spatial side).
+    Conv { site: usize, c_in: usize, hw: usize, k: usize, stride: usize, pad: usize },
+    /// In-place `max(x, 0)`.
+    Relu,
+    /// 2×2 average pool over `[B, c, hw, hw]`.
+    AvgPool { c: usize, hw: usize },
+    /// LayerNorm over `rows_per` rows per example.
+    LayerNorm { norm: usize, rows_per: usize },
+    /// Token + position embedding (always the first op of token graphs).
+    Embed { embed: usize },
+    /// Four projection sites around a scaled-dot-product core.
+    Attention { proj: [usize; 4], heads: usize, causal: bool, t: usize, d: usize },
+    /// Copy the current activation into skip slot `slot`.
+    SaveSkip { slot: usize },
+    /// Add skip slot `slot` back into the current activation.
+    AddSkip { slot: usize },
+}
+
+/// The compiled straight-line schedule of a [`QuantizedGraph`] — what
+/// the tentpole refactor calls the execution plan.  Owned by the graph;
+/// exposed as a type so diagnostics can talk about it.
+pub struct ExecPlan {
+    ops: Vec<QOp>,
+    /// Per-example logits element count (classes, or seq·classes).
+    logits_per: usize,
+}
+
+impl ExecPlan {
+    /// Number of instructions in the flattened schedule.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Whether the schedule is empty (never true for a lowered model).
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// A lowered, forward-only integer inference graph with its compiled
+/// execution plan.
 ///
 /// All state is owned, immutable after [`lower`], and free of interior
 /// mutability, so one graph is shared across serving worker threads as
@@ -114,7 +198,10 @@ pub struct QuantizedGraph {
     pub w_bits: u32,
     /// Activation-grid width the u8 codes are quantized on (Eq. 1/2).
     pub a_bits: u32,
-    layers: Vec<QLayer>,
+    sites: Vec<QLinearSite>,
+    norms: Vec<QNorm>,
+    embeds: Vec<QEmbed>,
+    plan: ExecPlan,
 }
 
 // The serving runtime (`crate::serve`) pools `std::thread` workers over
@@ -130,10 +217,11 @@ const _: () = {
 // The lowering pass
 // ---------------------------------------------------------------------------
 
-/// Lower a graph + calibrated qparams to an int8 inference engine.
-/// Fails with a descriptive error on missing/invalid qparams, widths the
-/// i8/u8 code domain cannot hold, or contractions too large for exact
-/// i32 accumulation — never at serve time.
+/// Lower a graph + calibrated qparams to an int8 inference engine and
+/// compile its execution plan.  Fails with a descriptive error on
+/// missing/invalid qparams, widths the i8/u8 code domain cannot hold,
+/// contractions too large for exact i32 accumulation, or a graph whose
+/// shapes do not chain — never at serve time.
 pub fn lower(
     g: &LayerGraph,
     params: &ParamStore,
@@ -149,13 +237,33 @@ pub fn lower(
         );
     }
     let cx = LowerCtx { model: &g.model, params, qparams, w_bits, a_bits };
+    let mut b = Builder::default();
+    let entry = match g.input {
+        InputKind::Image { channels, hw } => Dims::Chw { c: channels, hw },
+        InputKind::Tokens { seq } => Dims::Tokens { t: seq },
+    };
+    let exit = cx.lower_seq(&g.layers, entry, 0, &mut b)?;
+    let logits_per = match (g.input, exit) {
+        (InputKind::Image { .. }, Dims::Flat { n }) if n == g.classes => g.classes,
+        (InputKind::Tokens { seq }, Dims::Seq { t, d }) if t == seq && d == g.classes => {
+            seq * g.classes
+        }
+        (_, exit) => bail!(
+            "lower({}): graph ends in {exit:?}, but the model declares {} logit classes",
+            g.model,
+            g.classes
+        ),
+    };
     Ok(QuantizedGraph {
         model: g.model.clone(),
         input: g.input,
         classes: g.classes,
         w_bits,
         a_bits,
-        layers: cx.lower_seq(&g.layers)?,
+        sites: b.sites,
+        norms: b.norms,
+        embeds: b.embeds,
+        plan: ExecPlan { ops: b.ops, logits_per },
     })
 }
 
@@ -177,6 +285,29 @@ pub fn lower_native(
     lower(&g, params, qparams, w_bits, a_bits)
 }
 
+/// Per-example activation geometry tracked by the lowering-time shape
+/// inference.  The batch dimension is symbolic — everything here is
+/// multiplied by the dynamic batch at run time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dims {
+    /// f32 feature maps `[c, hw, hw]`.
+    Chw { c: usize, hw: usize },
+    /// Flattened f32 features `[n]`.
+    Flat { n: usize },
+    /// f32 sequence activations `[t, d]`.
+    Seq { t: usize, d: usize },
+    /// i32 token ids `[t]` (before the embedding).
+    Tokens { t: usize },
+}
+
+#[derive(Default)]
+struct Builder {
+    sites: Vec<QLinearSite>,
+    norms: Vec<QNorm>,
+    embeds: Vec<QEmbed>,
+    ops: Vec<QOp>,
+}
+
 struct LowerCtx<'a> {
     model: &'a str,
     params: &'a ParamStore,
@@ -186,52 +317,189 @@ struct LowerCtx<'a> {
 }
 
 impl LowerCtx<'_> {
-    fn lower_seq(&self, layers: &[Layer]) -> Result<Vec<QLayer>> {
-        layers.iter().map(|l| self.lower_layer(l)).collect()
+    fn lower_seq(
+        &self,
+        layers: &[Layer],
+        mut dims: Dims,
+        depth: usize,
+        b: &mut Builder,
+    ) -> Result<Dims> {
+        for layer in layers {
+            dims = self.lower_layer(layer, dims, depth, b)?;
+        }
+        Ok(dims)
     }
 
-    fn lower_layer(&self, layer: &Layer) -> Result<QLayer> {
+    fn lower_layer(
+        &self,
+        layer: &Layer,
+        dims: Dims,
+        depth: usize,
+        b: &mut Builder,
+    ) -> Result<Dims> {
+        let m = self.model;
         Ok(match layer {
-            Layer::Flatten => QLayer::Flatten,
-            Layer::Relu => QLayer::Relu,
-            Layer::AvgPool2x2 => QLayer::AvgPool2x2,
-            Layer::Linear(spec) => QLayer::Linear(self.lower_site(spec)?),
+            Layer::Flatten => {
+                let n = match dims {
+                    Dims::Chw { c, hw } => c * hw * hw,
+                    Dims::Flat { n } => n,
+                    Dims::Seq { t, d } => t * d,
+                    Dims::Tokens { .. } => {
+                        bail!("lower({m}): flatten over token ids (embed first)")
+                    }
+                };
+                b.ops.push(QOp::Flatten);
+                Dims::Flat { n }
+            }
+            Layer::Linear(spec) => {
+                let (rows_per, out) = match dims {
+                    Dims::Flat { n } if n == spec.c_in => (1, Dims::Flat { n: spec.c_out }),
+                    Dims::Seq { t, d } if d == spec.c_in => (t, Dims::Seq { t, d: spec.c_out }),
+                    other => bail!(
+                        "lower({m}): linear {:?} wants {} input features, activation is {other:?}",
+                        spec.name,
+                        spec.c_in
+                    ),
+                };
+                let site = b.push_site(self.lower_site(spec)?);
+                b.ops.push(QOp::Linear { site, rows_per });
+                out
+            }
             Layer::Conv2d(spec) => {
+                let hw = match dims {
+                    Dims::Chw { c, hw } if c == spec.c_in => hw,
+                    other => bail!(
+                        "lower({m}): conv {:?} wants [B, {}, H, H], activation is {other:?}",
+                        spec.name,
+                        spec.c_in
+                    ),
+                };
                 let patch = spec.c_in * spec.k * spec.k;
-                let site = self.lower_raw_site(
-                    &format!("{}.w", spec.name),
-                    patch,
-                    spec.c_out,
-                    None,
-                )?;
-                QLayer::Conv {
-                    site,
+                let wname = format!("{}.w", spec.name);
+                let site = self.lower_raw_site(&wname, patch, spec.c_out, None)?;
+                let d = ConvDims {
+                    batch: 1,
                     c_in: spec.c_in,
+                    hw,
+                    c_out: spec.c_out,
                     k: spec.k,
                     stride: spec.stride,
                     pad: spec.pad,
+                };
+                if d.hw_out() == 0 {
+                    bail!("lower({m}): conv {:?} produces an empty output", spec.name);
                 }
+                let site = b.push_site(site);
+                b.ops.push(QOp::Conv {
+                    site,
+                    c_in: spec.c_in,
+                    hw,
+                    k: spec.k,
+                    stride: spec.stride,
+                    pad: spec.pad,
+                });
+                Dims::Chw { c: spec.c_out, hw: d.hw_out() }
             }
-            Layer::LayerNorm(spec) => QLayer::LayerNorm {
-                g: self.param(&format!("{}.g", spec.name), spec.d)?,
-                b: self.param(&format!("{}.b", spec.name), spec.d)?,
-                d: spec.d,
-            },
-            Layer::Embed(spec) => QLayer::Embed {
-                tok: self.param(&format!("{}.tok", spec.name), spec.vocab * spec.d)?,
-                pos: self.param(&format!("{}.pos", spec.name), spec.seq * spec.d)?,
-                vocab: spec.vocab,
-                seq: spec.seq,
-                d: spec.d,
-            },
+            Layer::Relu => {
+                if matches!(dims, Dims::Tokens { .. }) {
+                    bail!("lower({m}): relu over token ids");
+                }
+                b.ops.push(QOp::Relu);
+                dims
+            }
+            Layer::AvgPool2x2 => {
+                let (c, hw) = match dims {
+                    Dims::Chw { c, hw } if hw % 2 == 0 => (c, hw),
+                    other => bail!("lower({m}): avgpool wants [B, C, 2n, 2n], got {other:?}"),
+                };
+                b.ops.push(QOp::AvgPool { c, hw });
+                Dims::Chw { c, hw: hw / 2 }
+            }
+            Layer::LayerNorm(spec) => {
+                let rows_per = match dims {
+                    Dims::Flat { n } if n == spec.d => 1,
+                    Dims::Seq { t, d } if d == spec.d => t,
+                    other => bail!(
+                        "lower({m}): layernorm {:?} wants {} features, got {other:?}",
+                        spec.name,
+                        spec.d
+                    ),
+                };
+                let norm = b.norms.len();
+                b.norms.push(QNorm {
+                    g: self.param(&format!("{}.g", spec.name), spec.d)?,
+                    b: self.param(&format!("{}.b", spec.name), spec.d)?,
+                    d: spec.d,
+                });
+                b.ops.push(QOp::LayerNorm { norm, rows_per });
+                dims
+            }
+            Layer::Embed(spec) => {
+                match dims {
+                    Dims::Tokens { t } if t == spec.seq => {}
+                    other => bail!(
+                        "lower({m}): embedding {:?} wants [B, {}] token ids, got {other:?}",
+                        spec.name,
+                        spec.seq
+                    ),
+                }
+                let embed = b.embeds.len();
+                b.embeds.push(QEmbed {
+                    tok: self.param(&format!("{}.tok", spec.name), spec.vocab * spec.d)?,
+                    pos: self.param(&format!("{}.pos", spec.name), spec.seq * spec.d)?,
+                    vocab: spec.vocab,
+                    seq: spec.seq,
+                    d: spec.d,
+                });
+                b.ops.push(QOp::Embed { embed });
+                Dims::Seq { t: spec.seq, d: spec.d }
+            }
             Layer::Attention(spec) => {
-                let proj = attn_projections(spec)
-                    .iter()
-                    .map(|p| self.lower_site(p))
-                    .collect::<Result<Vec<_>>>()?;
-                QLayer::Attention { proj, heads: spec.heads, causal: spec.causal, d: spec.d }
+                let t = match dims {
+                    Dims::Seq { t, d } if d == spec.d => t,
+                    other => bail!(
+                        "lower({m}): attention {:?} wants [B, T, {}], got {other:?}",
+                        spec.name,
+                        spec.d
+                    ),
+                };
+                if spec.heads == 0 || spec.d % spec.heads != 0 {
+                    bail!(
+                        "lower({m}): attention {:?} width {} not divisible by {} heads",
+                        spec.name,
+                        spec.d,
+                        spec.heads
+                    );
+                }
+                let projs = attn_projections(spec);
+                let mut ids = [0usize; 4];
+                for (i, p) in projs.iter().enumerate() {
+                    ids[i] = b.push_site(self.lower_site(p)?);
+                }
+                b.ops.push(QOp::Attention {
+                    proj: ids,
+                    heads: spec.heads,
+                    causal: spec.causal,
+                    t,
+                    d: spec.d,
+                });
+                dims
             }
-            Layer::Residual(inner) => QLayer::Residual(self.lower_seq(inner)?),
+            Layer::Residual(inner) => {
+                if matches!(dims, Dims::Tokens { .. }) {
+                    bail!("lower({m}): residual over token ids");
+                }
+                if depth >= MAX_SKIP_DEPTH {
+                    bail!("lower({m}): residual nesting deeper than {MAX_SKIP_DEPTH}");
+                }
+                b.ops.push(QOp::SaveSkip { slot: depth });
+                let exit = self.lower_seq(inner, dims, depth + 1, b)?;
+                if exit != dims {
+                    bail!("lower({m}): residual sub-graph changed shape {dims:?} -> {exit:?}");
+                }
+                b.ops.push(QOp::AddSkip { slot: depth });
+                dims
+            }
         })
     }
 
@@ -321,69 +589,70 @@ impl LowerCtx<'_> {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Forward execution
-// ---------------------------------------------------------------------------
-
-enum Act {
-    F(Tensor),
-    I(ITensor),
-}
-
-fn act_f32(model: &str, act: Act) -> Result<Tensor> {
-    match act {
-        Act::F(t) => Ok(t),
-        Act::I(_) => bail!("{model} int8 forward: layer expected an f32 activation, got i32"),
+impl Builder {
+    fn push_site(&mut self, site: QLinearSite) -> usize {
+        self.sites.push(site);
+        self.sites.len() - 1
     }
 }
 
+// ---------------------------------------------------------------------------
+// Planned forward execution
+// ---------------------------------------------------------------------------
+
 impl QuantizedGraph {
+    /// The compiled execution plan (diagnostics / tests).
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
     /// Vocabulary size of a token-input graph (`None` for image
     /// models).  The serving runtime validates ids against this at
     /// submission time, so one bad request cannot fail the healthy
     /// requests micro-batched with it.
     pub fn vocab(&self) -> Option<usize> {
-        fn find(layers: &[QLayer]) -> Option<usize> {
-            layers.iter().find_map(|l| match l {
-                QLayer::Embed { vocab, .. } => Some(*vocab),
-                QLayer::Residual(inner) => find(inner),
-                _ => None,
-            })
-        }
-        find(&self.layers)
+        self.embeds.first().map(|e| e.vocab)
     }
 
     /// Count of frozen i8 weight codes — what a deployment would ship.
     pub fn quantized_weights(&self) -> usize {
-        fn count(layers: &[QLayer]) -> usize {
-            layers
-                .iter()
-                .map(|l| match l {
-                    QLayer::Linear(s) | QLayer::Conv { site: s, .. } => s.qw.len(),
-                    QLayer::Attention { proj, .. } => proj.iter().map(|s| s.qw.len()).sum(),
-                    QLayer::Residual(inner) => count(inner),
-                    _ => 0,
-                })
-                .sum()
+        self.sites.iter().map(|s| s.qw.len()).sum()
+    }
+
+    /// Logits shape for a batch of `b` examples.
+    pub fn logits_dims(&self, b: usize) -> Vec<usize> {
+        match self.input {
+            InputKind::Image { .. } => vec![b, self.classes],
+            InputKind::Tokens { seq } => vec![b, seq, self.classes],
         }
-        count(&self.layers)
     }
 
     /// Batched forward to logits — borrowing wrapper over
-    /// [`Self::forward_owned`] (pays one input copy, symmetric with the
-    /// float executor, which also clones its input into the first
-    /// activation).
+    /// [`Self::forward_into`] with a throwaway workspace (cold paths
+    /// and tests; the serving workers reuse a per-worker workspace).
     pub fn forward(&self, x: &Value) -> Result<Tensor> {
-        self.forward_owned(x.clone())
+        let mut ws = Workspace::new();
+        let data = self.forward_into(x, &mut ws)?;
+        let b = x.shape().first().copied().unwrap_or(0);
+        Ok(Tensor { shape: self.logits_dims(b), data })
     }
 
-    /// Zero-copy forward: consumes the input value — the serving eval
-    /// hot path ([`crate::coordinator::eval::evaluate_int8`]) moves the
-    /// batch tensor straight in.  `x` is f32 images `[B, C, H, H]` or
-    /// i32 token ids `[B, T]` per the graph's [`InputKind`]; any batch
-    /// size is accepted (serving is not bound to the training batch).
+    /// Consuming wrapper over [`Self::forward_into`] — kept for callers
+    /// that hand the batch tensor off (e.g.
+    /// [`crate::coordinator::eval::evaluate_int8`]'s historical entry).
     pub fn forward_owned(&self, x: Value) -> Result<Tensor> {
-        let x0 = match (self.input, x) {
+        self.forward(&x)
+    }
+
+    /// Walk the compiled plan over a batch, drawing every buffer from
+    /// `ws`.  `x` is f32 images `[B, C, H, H]` or i32 token ids
+    /// `[B, T]` per the graph's [`InputKind`]; any batch size is
+    /// accepted (serving is not bound to the training batch).  Returns
+    /// the pooled logits data (`b ·` per-example logits, layout per
+    /// [`Self::logits_dims`]); give it back to `ws` when done.  After
+    /// warmup this path performs zero heap allocations.
+    pub fn forward_into(&self, x: &Value, ws: &mut Workspace) -> Result<Vec<f32>> {
+        let (b, ids): (usize, &[i32]) = match (self.input, x) {
             (InputKind::Image { channels, hw }, Value::F32(t)) => {
                 let good = t.shape.len() == 4
                     && t.shape[1] == channels
@@ -396,161 +665,146 @@ impl QuantizedGraph {
                         t.shape
                     );
                 }
-                Act::F(t)
+                (t.shape[0], &[])
             }
             (InputKind::Tokens { seq }, Value::I32(t)) => {
                 if t.shape.len() != 2 || t.shape[1] != seq {
                     let m = &self.model;
                     bail!("{m} int8 forward: want token ids [B, {seq}], got {:?}", t.shape);
                 }
-                Act::I(t)
+                (t.shape[0], &t.data[..])
             }
             _ => bail!(
                 "{} int8 forward: input dtype does not match the graph's input kind",
                 self.model
             ),
         };
-        let out = self.forward_seq(&self.layers, x0)?;
-        act_f32(&self.model, out)
-    }
 
-    fn forward_seq(&self, layers: &[QLayer], mut act: Act) -> Result<Act> {
-        for layer in layers {
-            act = self.forward_layer(layer, act)?;
+        // current activation: image graphs start from a pooled copy of
+        // the input (one memcpy — the integer kernels quantize from it
+        // in place), token graphs start empty until the embedding op
+        let mut cur: Vec<f32> = match x {
+            Value::F32(t) => {
+                let mut c = ws.take_f32(t.data.len());
+                c.copy_from_slice(&t.data);
+                c
+            }
+            Value::I32(_) => Vec::new(),
+        };
+        let mut skips: [Option<Vec<f32>>; MAX_SKIP_DEPTH] = Default::default();
+
+        for op in &self.plan.ops {
+            match op {
+                QOp::Flatten => {}
+                QOp::Linear { site, rows_per } => {
+                    let site = &self.sites[*site];
+                    let y = site.fwd_ws(&cur, b * rows_per, ws);
+                    ws.give_f32(std::mem::replace(&mut cur, y));
+                }
+                QOp::Conv { site, c_in, hw, k, stride, pad } => {
+                    let site = &self.sites[*site];
+                    let d = ConvDims {
+                        batch: b,
+                        c_in: *c_in,
+                        hw: *hw,
+                        c_out: site.c_out,
+                        k: *k,
+                        stride: *stride,
+                        pad: *pad,
+                    };
+                    let mut qx = ws.take_u8(cur.len());
+                    quantize_acts_into(&cur, site.sx, site.zx as f32, site.a_bits, &mut qx);
+                    let mut cols = ws.take_u8(d.rows() * d.patch());
+                    let mut y2 = ws.take_f32(d.rows() * d.c_out);
+                    let mut acc = ws.take_i32(qlinear_scratch_len(d.rows(), d.patch(), d.c_out));
+                    let mut y = ws.take_f32(d.rows() * d.c_out);
+                    qconv_fwd_into(
+                        &qx,
+                        &site.qw,
+                        &site.wsum,
+                        site.zx,
+                        &site.scale,
+                        &d,
+                        &mut y,
+                        &mut cols,
+                        &mut y2,
+                        &mut acc,
+                    );
+                    ws.give_u8(qx);
+                    ws.give_u8(cols);
+                    ws.give_f32(y2);
+                    ws.give_i32(acc);
+                    ws.give_f32(std::mem::replace(&mut cur, y));
+                }
+                QOp::Relu => {
+                    for v in cur.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                QOp::AvgPool { c, hw } => {
+                    let ho = hw / 2;
+                    let mut y = ws.take_f32(b * c * ho * ho);
+                    avgpool2_fwd_into(&cur, b, *c, *hw, &mut y);
+                    ws.give_f32(std::mem::replace(&mut cur, y));
+                }
+                QOp::LayerNorm { norm, rows_per } => {
+                    let n = &self.norms[*norm];
+                    let rows = b * rows_per;
+                    let mut y = ws.take_f32(rows * n.d);
+                    let mut xhat = ws.take_f32(rows * n.d);
+                    let mut inv = ws.take_f32(rows);
+                    layernorm_fwd_into(&cur, &n.g, &n.b, rows, n.d, &mut y, &mut xhat, &mut inv);
+                    ws.give_f32(xhat);
+                    ws.give_f32(inv);
+                    ws.give_f32(std::mem::replace(&mut cur, y));
+                }
+                QOp::Embed { embed } => {
+                    let e = &self.embeds[*embed];
+                    for &id in ids {
+                        if id < 0 || id as usize >= e.vocab {
+                            let (m, v) = (&self.model, e.vocab);
+                            bail!("{m} int8 forward: token id {id} out of range [0, {v})");
+                        }
+                    }
+                    let mut y = ws.take_f32(ids.len() * e.d);
+                    embed_fwd_into(&e.tok, &e.pos, ids, e.seq, e.d, &mut y);
+                    ws.give_f32(std::mem::replace(&mut cur, y));
+                }
+                QOp::Attention { proj, heads, causal, t, d } => {
+                    let rows = b * t;
+                    let qy = self.sites[proj[0]].fwd_ws(&cur, rows, ws);
+                    let ky = self.sites[proj[1]].fwd_ws(&cur, rows, ws);
+                    let vy = self.sites[proj[2]].fwd_ws(&cur, rows, ws);
+                    let dm = AttnDims { batch: b, t: *t, d: *d, heads: *heads };
+                    let mut om = ws.take_f32(rows * d);
+                    let mut p = ws.take_f32(b * heads * t * t);
+                    let mut scores = ws.take_f32(*t);
+                    sdpa_fwd_into(&qy, &ky, &vy, &dm, *causal, &mut om, &mut p, &mut scores);
+                    ws.give_f32(qy);
+                    ws.give_f32(ky);
+                    ws.give_f32(vy);
+                    ws.give_f32(p);
+                    ws.give_f32(scores);
+                    let out = self.sites[proj[3]].fwd_ws(&om, rows, ws);
+                    ws.give_f32(om);
+                    ws.give_f32(std::mem::replace(&mut cur, out));
+                }
+                QOp::SaveSkip { slot } => {
+                    let mut skip = ws.take_f32(cur.len());
+                    skip.copy_from_slice(&cur);
+                    skips[*slot] = Some(skip);
+                }
+                QOp::AddSkip { slot } => {
+                    let skip = skips[*slot].take().expect("plan: AddSkip without SaveSkip");
+                    for (c, s) in cur.iter_mut().zip(&skip) {
+                        *c += s;
+                    }
+                    ws.give_f32(skip);
+                }
+            }
         }
-        Ok(act)
-    }
-
-    fn forward_layer(&self, layer: &QLayer, act: Act) -> Result<Act> {
-        Ok(match layer {
-            QLayer::Flatten => {
-                let x = act_f32(&self.model, act)?;
-                let b = x.shape.first().copied().unwrap_or(1);
-                let rest: usize = x.shape[1..].iter().product();
-                Act::F(Tensor { shape: vec![b, rest], data: x.data })
-            }
-            QLayer::Linear(site) => {
-                let x = act_f32(&self.model, act)?;
-                if x.shape.last() != Some(&site.c_in) {
-                    bail!(
-                        "{} int8 forward: site {:?} wants {} input features, activation is {:?}",
-                        self.model,
-                        site.name,
-                        site.c_in,
-                        x.shape
-                    );
-                }
-                let rows = x.data.len() / site.c_in;
-                let y = site.fwd(&x.data, rows);
-                let mut shape = x.shape;
-                *shape.last_mut().unwrap() = site.c_out;
-                Act::F(Tensor { shape, data: y })
-            }
-            QLayer::Conv { site, c_in, k, stride, pad } => {
-                let x = act_f32(&self.model, act)?;
-                if x.shape.len() != 4 || x.shape[1] != *c_in || x.shape[2] != x.shape[3] {
-                    bail!(
-                        "{} int8 forward: conv {:?} wants [B, {c_in}, H, H], activation is {:?}",
-                        self.model,
-                        site.name,
-                        x.shape
-                    );
-                }
-                let dims = ConvDims {
-                    batch: x.shape[0],
-                    c_in: *c_in,
-                    hw: x.shape[2],
-                    c_out: site.c_out,
-                    k: *k,
-                    stride: *stride,
-                    pad: *pad,
-                };
-                let qx = quantize_acts(&x.data, site.sx, site.zx as f32, site.a_bits);
-                let y = qconv_fwd(&qx, &site.qw, &site.wsum, site.zx, &site.scale, &dims);
-                let ho = dims.hw_out();
-                Act::F(Tensor { shape: vec![dims.batch, site.c_out, ho, ho], data: y })
-            }
-            QLayer::Relu => {
-                let x = act_f32(&self.model, act)?;
-                Act::F(Tensor { shape: x.shape, data: relu_fwd(&x.data) })
-            }
-            QLayer::AvgPool2x2 => {
-                let x = act_f32(&self.model, act)?;
-                if x.shape.len() != 4 || x.shape[2] % 2 != 0 || x.shape[2] != x.shape[3] {
-                    let m = &self.model;
-                    bail!("{m} int8 forward: avgpool wants [B, C, 2n, 2n], got {:?}", x.shape);
-                }
-                let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2]);
-                let y = avgpool2_fwd(&x.data, b, c, hw);
-                Act::F(Tensor { shape: vec![b, c, hw / 2, hw / 2], data: y })
-            }
-            QLayer::LayerNorm { g, b, d } => {
-                let x = act_f32(&self.model, act)?;
-                if x.shape.last() != Some(d) {
-                    let m = &self.model;
-                    bail!("{m} int8 forward: layernorm wants {d} features, got {:?}", x.shape);
-                }
-                let rows = x.data.len() / d;
-                // layernorm_fwd also returns backward-only caches (x̂, 1/σ),
-                // dropped here; a fwd-only variant is a future serving win
-                // that would benefit the float forward path equally
-                let (y, _xhat, _inv) = layernorm_fwd(&x.data, g, b, rows, *d);
-                Act::F(Tensor { shape: x.shape, data: y })
-            }
-            QLayer::Embed { tok, pos, vocab, seq, d } => {
-                let ids = match act {
-                    Act::I(t) => t,
-                    Act::F(_) => {
-                        bail!("{} int8 forward: embedding expects i32 token ids", self.model)
-                    }
-                };
-                for &id in &ids.data {
-                    if id < 0 || id as usize >= *vocab {
-                        let m = &self.model;
-                        bail!("{m} int8 forward: token id {id} out of range [0, {vocab})");
-                    }
-                }
-                let y = embed_fwd(tok, pos, &ids.data, *seq, *d);
-                let b = ids.data.len() / seq;
-                Act::F(Tensor { shape: vec![b, *seq, *d], data: y })
-            }
-            QLayer::Attention { proj, heads, causal, d } => {
-                let x = act_f32(&self.model, act)?;
-                if x.shape.len() != 3 || x.shape[2] != *d {
-                    let m = &self.model;
-                    bail!("{m} int8 forward: attention wants [B, T, {d}], got {:?}", x.shape);
-                }
-                let rows = x.data.len() / d;
-                let qy = proj[0].fwd(&x.data, rows);
-                let ky = proj[1].fwd(&x.data, rows);
-                let vy = proj[2].fwd(&x.data, rows);
-                let dm = AttnDims { batch: x.shape[0], t: x.shape[1], d: *d, heads: *heads };
-                // sdpa_fwd materializes the [B·H, T, T] probs cache for the
-                // training backward; dropped here — same deal as layernorm
-                let (om, _p) = sdpa_fwd(&qy, &ky, &vy, &dm, *causal);
-                let out = proj[3].fwd(&om, rows);
-                Act::F(Tensor { shape: x.shape, data: out })
-            }
-            QLayer::Residual(inner) => {
-                let x = act_f32(&self.model, act)?;
-                let mut y = act_f32(&self.model, self.forward_seq(inner, Act::F(x.clone()))?)?;
-                if y.shape != x.shape {
-                    bail!(
-                        "{} int8 forward: residual sub-graph changed shape {:?} -> {:?}",
-                        self.model,
-                        x.shape,
-                        y.shape
-                    );
-                }
-                // add into the sub-graph's buffer: one clone (the skip
-                // input the inner sequence consumes) is inherent, a
-                // third allocation for the sum is not
-                for (yo, xi) in y.data.iter_mut().zip(&x.data) {
-                    *yo += xi;
-                }
-                Act::F(y)
-            }
-        })
+        debug_assert_eq!(cur.len(), b * self.plan.logits_per);
+        Ok(cur)
     }
 }
 
@@ -558,6 +812,7 @@ impl QuantizedGraph {
 mod tests {
     use super::*;
     use crate::quant::ActQParams;
+    use crate::tensor::ITensor;
 
     fn fixture(model: &str) -> (LayerGraph, ParamStore, QParamStore) {
         crate::testing::synth_lowering_fixture(model)
@@ -570,6 +825,7 @@ mod tests {
             let qg = lower(&g, &params, &q, 8, 8).unwrap_or_else(|e| panic!("{model}: {e}"));
             assert!(qg.quantized_weights() > 0, "{model}");
             assert_eq!(qg.classes, g.classes);
+            assert!(!qg.plan().is_empty(), "{model}: empty plan");
         }
     }
 
@@ -591,6 +847,19 @@ mod tests {
     }
 
     #[test]
+    fn shape_inference_rejects_inconsistent_graphs_at_lowering() {
+        // a linear whose c_in does not chain fails in lower(), not at
+        // serve time — the planned executor assumes shapes are proven
+        let (g, params, q) = fixture("mlp");
+        let mut bad = g.clone();
+        if let Layer::Linear(spec) = &mut bad.layers[1] {
+            spec.c_in = 7;
+        }
+        let err = lower(&bad, &params, &q, 8, 8).unwrap_err().to_string();
+        assert!(err.contains("input features"), "{err}");
+    }
+
+    #[test]
     fn forward_accepts_any_batch_size() {
         let (g, params, q) = fixture("mlp");
         let qg = lower(&g, &params, &q, 8, 8).unwrap();
@@ -602,6 +871,37 @@ mod tests {
         // wrong geometry is a descriptive error
         let err = qg.forward(&Value::F32(Tensor::zeros(&[2, 3, 16, 16]))).unwrap_err().to_string();
         assert!(err.contains("images"), "{err}");
+    }
+
+    #[test]
+    fn forward_into_reuses_one_workspace_bit_identically() {
+        // grow, shrink, regrow: recycled buffers must never change the
+        // logits vs a fresh-allocation forward
+        for model in ["mlp", "convnet", "tiny_tf"] {
+            let (g, params, q) = fixture(model);
+            let qg = lower(&g, &params, &q, 8, 8).unwrap();
+            let mut ws = Workspace::new();
+            for (i, b) in [2usize, 5, 1, 5, 3].into_iter().enumerate() {
+                let x = match g.input {
+                    InputKind::Image { channels, hw } => {
+                        let mut rng = crate::rng::Pcg64::new(90 + i as u64);
+                        Value::F32(Tensor {
+                            shape: vec![b, channels, hw, hw],
+                            data: rng.normal_vec(b * channels * hw * hw, 1.0),
+                        })
+                    }
+                    InputKind::Tokens { seq } => {
+                        let data: Vec<i32> =
+                            (0..b * seq).map(|j| (j as i32 * 7 + i as i32) % 64).collect();
+                        Value::I32(ITensor { shape: vec![b, seq], data })
+                    }
+                };
+                let got = qg.forward_into(&x, &mut ws).unwrap();
+                let want = qg.forward(&x).unwrap();
+                assert_eq!(got, want.data, "{model} b={b} iter {i}");
+                ws.give_f32(got);
+            }
+        }
     }
 
     #[test]

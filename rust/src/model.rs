@@ -104,6 +104,15 @@ fn parse_io(j: &Json) -> Result<IoSpec> {
 }
 
 impl Manifest {
+    /// Position of a named output in the manifest's positional output
+    /// order — hot loops resolve names once and index thereafter.
+    pub fn out_pos(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| anyhow!("{}: manifest has no output {name:?}", self.name))
+    }
+
     pub fn load(path: &Path) -> Result<Manifest> {
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {}", path.display()))?;

@@ -29,27 +29,36 @@ impl AttnDims {
     }
 }
 
-/// Forward: `out = softmax(Q·Kᵀ/√d_h [causal-masked]) · V`.
+/// Forward: `out = softmax(Q·Kᵀ/√d_h [causal-masked]) · V`, into
+/// caller-provided buffers (fed from a [`crate::exec::Workspace`] on
+/// the hot paths).
 ///
-/// `q`/`k`/`v`/returned `out` are `[B, T, D]` head-merged; the returned
-/// probability tensor `p` is `[B, H, T, T]` (the backward cache).  Causal
+/// `q`/`k`/`v`/`out` are `[B, T, D]` head-merged; the probability
+/// tensor `p` is `[B, H, T, T]` (the backward cache).  `out` and `p`
+/// are fully overwritten; `scores` is a length-`T` scratch row.  Causal
 /// masking zeroes the probabilities above the diagonal, so the backward
 /// needs no explicit mask.
-pub fn sdpa_fwd(
+#[allow(clippy::too_many_arguments)] // an attention ABI: operands, dims, outputs, scratch
+pub fn sdpa_fwd_into(
     q: &[f32],
     k: &[f32],
     v: &[f32],
     dm: &AttnDims,
     causal: bool,
-) -> (Vec<f32>, Vec<f32>) {
+    out: &mut [f32],
+    p: &mut [f32],
+    scores: &mut [f32],
+) {
     let (b, t, d, h) = (dm.batch, dm.t, dm.d, dm.heads);
     let dh = dm.d_head();
     let alpha = dm.scale();
     debug_assert_eq!(q.len(), b * t * d);
-    let mut out = vec![0.0f32; b * t * d];
-    let mut p = vec![0.0f32; b * h * t * t];
+    debug_assert_eq!(out.len(), b * t * d);
+    debug_assert_eq!(p.len(), b * h * t * t);
+    debug_assert_eq!(scores.len(), t);
+    out.fill(0.0);
+    p.fill(0.0);
     let at = |n: usize, i: usize, hd: usize| (n * t + i) * d + hd * dh;
-    let mut scores = vec![0.0f32; t];
     for n in 0..b {
         for hd in 0..h {
             for i in 0..t {
@@ -87,28 +96,53 @@ pub fn sdpa_fwd(
             }
         }
     }
+}
+
+/// Allocating wrapper over [`sdpa_fwd_into`]; returns `(out, p)`.
+pub fn sdpa_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dm: &AttnDims,
+    causal: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let (b, t, d, h) = (dm.batch, dm.t, dm.d, dm.heads);
+    let mut out = vec![0.0f32; b * t * d];
+    let mut p = vec![0.0f32; b * h * t * t];
+    let mut scores = vec![0.0f32; t];
+    sdpa_fwd_into(q, k, v, dm, causal, &mut out, &mut p, &mut scores);
     (out, p)
 }
 
-/// Backward of [`sdpa_fwd`].  Returns `(dq, dk, dv)` in the same
-/// head-merged `[B, T, D]` layout.  `p` is the cached probability tensor;
-/// masked positions carry `p = 0` and therefore contribute no gradient.
-pub fn sdpa_bwd(
+/// Backward of [`sdpa_fwd_into`], into `dq`/`dk`/`dv` (head-merged
+/// `[B, T, D]`, fully overwritten — zeroed first, so recycled buffers
+/// are safe).  `p` is the cached probability tensor; masked positions
+/// carry `p = 0` and therefore contribute no gradient.  `dp` is a
+/// length-`T` scratch row.
+#[allow(clippy::too_many_arguments)] // a VJP ABI: cotangent, operands, cache, dims, outputs
+pub fn sdpa_bwd_into(
     dout: &[f32],
     q: &[f32],
     k: &[f32],
     v: &[f32],
     p: &[f32],
     dm: &AttnDims,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    dp: &mut [f32],
+) {
     let (b, t, d, h) = (dm.batch, dm.t, dm.d, dm.heads);
     let dh = dm.d_head();
     let alpha = dm.scale();
-    let mut dq = vec![0.0f32; b * t * d];
-    let mut dk = vec![0.0f32; b * t * d];
-    let mut dv = vec![0.0f32; b * t * d];
+    debug_assert_eq!(dq.len(), b * t * d);
+    debug_assert_eq!(dk.len(), b * t * d);
+    debug_assert_eq!(dv.len(), b * t * d);
+    debug_assert_eq!(dp.len(), t);
+    dq.fill(0.0);
+    dk.fill(0.0);
+    dv.fill(0.0);
     let at = |n: usize, i: usize, hd: usize| (n * t + i) * d + hd * dh;
-    let mut dp = vec![0.0f32; t];
     for n in 0..b {
         for hd in 0..h {
             for i in 0..t {
@@ -148,6 +182,23 @@ pub fn sdpa_bwd(
             }
         }
     }
+}
+
+/// Allocating wrapper over [`sdpa_bwd_into`]; returns `(dq, dk, dv)`.
+pub fn sdpa_bwd(
+    dout: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    p: &[f32],
+    dm: &AttnDims,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = dm.batch * dm.t * dm.d;
+    let mut dq = vec![0.0f32; n];
+    let mut dk = vec![0.0f32; n];
+    let mut dv = vec![0.0f32; n];
+    let mut dp = vec![0.0f32; dm.t];
+    sdpa_bwd_into(dout, q, k, v, p, dm, &mut dq, &mut dk, &mut dv, &mut dp);
     (dq, dk, dv)
 }
 

@@ -44,16 +44,18 @@ impl ConvDims {
     }
 }
 
-/// Unfold `x` `[B, C_in, H, H]` into the patch matrix `[M, C_in·k·k]`,
-/// filling out-of-bounds taps with `pad`.  Generic over the element so
-/// the f32 training path ([`im2col`], pad `0.0`) and the int8 serving
-/// path ([`crate::ops::qconv::im2col_codes`], pad = zero-point code)
-/// share one traversal — the stride/pad index math is parity-critical
-/// and must never fork.
-pub fn im2col_with<T: Copy>(x: &[T], d: &ConvDims, pad: T) -> Vec<T> {
+/// Unfold `x` `[B, C_in, H, H]` into the patch matrix `[M, C_in·k·k]`
+/// written into `cols` (fully overwritten), filling out-of-bounds taps
+/// with `pad`.  Generic over the element so the f32 training path
+/// ([`im2col`], pad `0.0`) and the int8 serving path
+/// ([`crate::ops::qconv::im2col_codes`], pad = zero-point code) share
+/// one traversal — the stride/pad index math is parity-critical and
+/// must never fork.
+pub fn im2col_with_into<T: Copy>(x: &[T], d: &ConvDims, pad: T, cols: &mut [T]) {
     let (ho, p, hw) = (d.hw_out(), d.patch(), d.hw);
     debug_assert_eq!(x.len(), d.batch * d.c_in * hw * hw);
-    let mut cols = vec![pad; d.rows() * p];
+    debug_assert_eq!(cols.len(), d.rows() * p);
+    cols.fill(pad);
     let mut r = 0;
     for n in 0..d.batch {
         for oy in 0..ho {
@@ -77,20 +79,34 @@ pub fn im2col_with<T: Copy>(x: &[T], d: &ConvDims, pad: T) -> Vec<T> {
             }
         }
     }
+}
+
+/// Allocating form of [`im2col_with_into`].
+pub fn im2col_with<T: Copy>(x: &[T], d: &ConvDims, pad: T) -> Vec<T> {
+    let mut cols = vec![pad; d.rows() * d.patch()];
+    im2col_with_into(x, d, pad, &mut cols);
     cols
 }
 
-/// Unfold f32 activations into the patch matrix (zero padding).
+/// Unfold f32 activations into the patch matrix (zero padding), into
+/// `cols` (fully overwritten).
+pub fn im2col_into(x: &[f32], d: &ConvDims, cols: &mut [f32]) {
+    im2col_with_into(x, d, 0.0, cols);
+}
+
+/// Allocating wrapper over [`im2col_into`].
 pub fn im2col(x: &[f32], d: &ConvDims) -> Vec<f32> {
     im2col_with(x, d, 0.0)
 }
 
 /// Fold a patch-matrix gradient `[M, C_in·k·k]` back onto the input
-/// layout `[B, C_in, H, H]` (scatter-add — patches overlap).
-pub fn col2im(dcols: &[f32], d: &ConvDims) -> Vec<f32> {
+/// layout `[B, C_in, H, H]` (scatter-add — patches overlap), into `dx`
+/// (zeroed first, so recycled buffers are safe).
+pub fn col2im_into(dcols: &[f32], d: &ConvDims, dx: &mut [f32]) {
     let (ho, p, hw) = (d.hw_out(), d.patch(), d.hw);
     debug_assert_eq!(dcols.len(), d.rows() * p);
-    let mut dx = vec![0.0f32; d.batch * d.c_in * hw * hw];
+    debug_assert_eq!(dx.len(), d.batch * d.c_in * hw * hw);
+    dx.fill(0.0);
     let mut r = 0;
     for n in 0..d.batch {
         for oy in 0..ho {
@@ -114,15 +130,22 @@ pub fn col2im(dcols: &[f32], d: &ConvDims) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Allocating wrapper over [`col2im_into`].
+pub fn col2im(dcols: &[f32], d: &ConvDims) -> Vec<f32> {
+    let mut dx = vec![0.0f32; d.batch * d.c_in * d.hw * d.hw];
+    col2im_into(dcols, d, &mut dx);
     dx
 }
 
 /// Rearrange the GEMM output `[M, C_out]` (M = B·H_out·W_out) into NCHW
-/// `[B, C_out, H_out, W_out]`.
-pub fn rows_to_nchw(y2: &[f32], d: &ConvDims) -> Vec<f32> {
+/// `[B, C_out, H_out, W_out]`, into `y` (fully overwritten — every
+/// output position is assigned exactly once).
+pub fn rows_to_nchw_into(y2: &[f32], d: &ConvDims, y: &mut [f32]) {
     let ho = d.hw_out();
     debug_assert_eq!(y2.len(), d.rows() * d.c_out);
-    let mut y = vec![0.0f32; y2.len()];
+    debug_assert_eq!(y.len(), y2.len());
     for n in 0..d.batch {
         for s in 0..ho * ho {
             let row = &y2[(n * ho * ho + s) * d.c_out..(n * ho * ho + s + 1) * d.c_out];
@@ -131,14 +154,21 @@ pub fn rows_to_nchw(y2: &[f32], d: &ConvDims) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Allocating wrapper over [`rows_to_nchw_into`].
+pub fn rows_to_nchw(y2: &[f32], d: &ConvDims) -> Vec<f32> {
+    let mut y = vec![0.0f32; y2.len()];
+    rows_to_nchw_into(y2, d, &mut y);
     y
 }
 
-/// Inverse of [`rows_to_nchw`]: NCHW gradient → GEMM row layout.
-pub fn nchw_to_rows(dy: &[f32], d: &ConvDims) -> Vec<f32> {
+/// Inverse of [`rows_to_nchw`]: NCHW gradient → GEMM row layout, into
+/// `dy2` (fully overwritten).
+pub fn nchw_to_rows_into(dy: &[f32], d: &ConvDims, dy2: &mut [f32]) {
     let ho = d.hw_out();
     debug_assert_eq!(dy.len(), d.rows() * d.c_out);
-    let mut dy2 = vec![0.0f32; dy.len()];
+    debug_assert_eq!(dy2.len(), dy.len());
     for n in 0..d.batch {
         for o in 0..d.c_out {
             let plane = &dy[(n * d.c_out + o) * ho * ho..(n * d.c_out + o + 1) * ho * ho];
@@ -147,14 +177,21 @@ pub fn nchw_to_rows(dy: &[f32], d: &ConvDims) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Allocating wrapper over [`nchw_to_rows_into`].
+pub fn nchw_to_rows(dy: &[f32], d: &ConvDims) -> Vec<f32> {
+    let mut dy2 = vec![0.0f32; dy.len()];
+    nchw_to_rows_into(dy, d, &mut dy2);
     dy2
 }
 
-/// 2×2 average pool, stride 2.  `x`: `[B, C, H, H]`, `H` even.
-pub fn avgpool2_fwd(x: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+/// 2×2 average pool, stride 2.  `x`: `[B, C, H, H]`, `H` even; output
+/// into `y` (`[B, C, H/2, H/2]`, fully overwritten).
+pub fn avgpool2_fwd_into(x: &[f32], batch: usize, c: usize, hw: usize, y: &mut [f32]) {
     debug_assert_eq!(hw % 2, 0, "avgpool2 needs an even spatial size");
     let ho = hw / 2;
-    let mut y = vec![0.0f32; batch * c * ho * ho];
+    debug_assert_eq!(y.len(), batch * c * ho * ho);
     for nc in 0..batch * c {
         let plane = &x[nc * hw * hw..(nc + 1) * hw * hw];
         let out = &mut y[nc * ho * ho..(nc + 1) * ho * ho];
@@ -169,15 +206,23 @@ pub fn avgpool2_fwd(x: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Allocating wrapper over [`avgpool2_fwd_into`].
+pub fn avgpool2_fwd(x: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+    let ho = hw / 2;
+    let mut y = vec![0.0f32; batch * c * ho * ho];
+    avgpool2_fwd_into(x, batch, c, hw, &mut y);
     y
 }
 
 /// Backward of [`avgpool2_fwd`]: spread each output gradient evenly over
-/// its 2×2 window.
-pub fn avgpool2_bwd(dy: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+/// its 2×2 window, into `dx` (fully overwritten — every input position
+/// belongs to exactly one window, so each is assigned exactly once).
+pub fn avgpool2_bwd_into(dy: &[f32], batch: usize, c: usize, hw: usize, dx: &mut [f32]) {
     let ho = hw / 2;
     debug_assert_eq!(dy.len(), batch * c * ho * ho);
-    let mut dx = vec![0.0f32; batch * c * hw * hw];
+    debug_assert_eq!(dx.len(), batch * c * hw * hw);
     for nc in 0..batch * c {
         let gout = &dy[nc * ho * ho..(nc + 1) * ho * ho];
         let gin = &mut dx[nc * hw * hw..(nc + 1) * hw * hw];
@@ -185,13 +230,19 @@ pub fn avgpool2_bwd(dy: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
             for ox in 0..ho {
                 let g = 0.25 * gout[oy * ho + ox];
                 let (iy, ix) = (oy * 2, ox * 2);
-                gin[iy * hw + ix] += g;
-                gin[iy * hw + ix + 1] += g;
-                gin[(iy + 1) * hw + ix] += g;
-                gin[(iy + 1) * hw + ix + 1] += g;
+                gin[iy * hw + ix] = g;
+                gin[iy * hw + ix + 1] = g;
+                gin[(iy + 1) * hw + ix] = g;
+                gin[(iy + 1) * hw + ix + 1] = g;
             }
         }
     }
+}
+
+/// Allocating wrapper over [`avgpool2_bwd_into`].
+pub fn avgpool2_bwd(dy: &[f32], batch: usize, c: usize, hw: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; batch * c * hw * hw];
+    avgpool2_bwd_into(dy, batch, c, hw, &mut dx);
     dx
 }
 
@@ -334,5 +385,35 @@ mod tests {
         let dx = avgpool2_bwd(&dy, b, c, hw);
         // each input contributes 1/4 of one output
         assert!(dx.iter().all(|&g| (g - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        // recycled workspace buffers carry residue; every into-kernel
+        // must produce the same bits as its allocating wrapper anyway
+        let d = ConvDims { batch: 2, c_in: 2, hw: 4, c_out: 3, k: 3, stride: 1, pad: 1 };
+        let mut rng = crate::rng::Pcg64::new(21);
+        let x = rng.normal_vec(d.batch * d.c_in * d.hw * d.hw, 1.0);
+        let mut cols = vec![5.0f32; d.rows() * d.patch()];
+        im2col_into(&x, &d, &mut cols);
+        assert_eq!(cols, im2col(&x, &d));
+        let mut dx = vec![5.0f32; x.len()];
+        col2im_into(&cols, &d, &mut dx);
+        assert_eq!(dx, col2im(&cols, &d));
+        let y2 = rng.normal_vec(d.rows() * d.c_out, 1.0);
+        let mut y = vec![5.0f32; y2.len()];
+        rows_to_nchw_into(&y2, &d, &mut y);
+        assert_eq!(y, rows_to_nchw(&y2, &d));
+        let mut back = vec![5.0f32; y2.len()];
+        nchw_to_rows_into(&y, &d, &mut back);
+        assert_eq!(back, y2);
+        let (b, c, hw) = (1, 2, 4);
+        let px = rng.normal_vec(b * c * hw * hw, 1.0);
+        let mut py = vec![5.0f32; b * c * 4];
+        avgpool2_fwd_into(&px, b, c, hw, &mut py);
+        assert_eq!(py, avgpool2_fwd(&px, b, c, hw));
+        let mut pdx = vec![5.0f32; px.len()];
+        avgpool2_bwd_into(&py, b, c, hw, &mut pdx);
+        assert_eq!(pdx, avgpool2_bwd(&py, b, c, hw));
     }
 }

@@ -3,23 +3,48 @@
 //! `embedding_*`).  Embeddings are fp32 and non-freezable: per the
 //! paper's transformer setup they train during FP pretraining only, so
 //! their backward exists but is never row-gated.
+//!
+//! Like the rest of the op library, each kernel has an `_into` form
+//! writing caller-provided slices plus a thin allocating wrapper.
 
-/// `y = max(x, 0)`.
+/// `y = max(x, 0)`, into `y` (fully overwritten).
+pub fn relu_fwd_into(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o = v.max(0.0);
+    }
+}
+
+/// Allocating wrapper over [`relu_fwd_into`].
 pub fn relu_fwd(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| v.max(0.0)).collect()
+    let mut y = vec![0.0; x.len()];
+    relu_fwd_into(x, &mut y);
+    y
 }
 
-/// ReLU backward against the cached *pre-activation*.
-pub fn relu_bwd(dy: &[f32], pre: &[f32]) -> Vec<f32> {
+/// ReLU backward against the cached *pre-activation*, into `dx` (fully
+/// overwritten).
+pub fn relu_bwd_into(dy: &[f32], pre: &[f32], dx: &mut [f32]) {
     debug_assert_eq!(dy.len(), pre.len());
-    dy.iter().zip(pre).map(|(&g, &h)| if h > 0.0 { g } else { 0.0 }).collect()
+    debug_assert_eq!(dy.len(), dx.len());
+    for i in 0..dy.len() {
+        dx[i] = if pre[i] > 0.0 { dy[i] } else { 0.0 };
+    }
 }
 
-/// Token + learned-position embedding: `y[n,t] = tok[ids[n,t]] + pos[t]`.
+/// Allocating wrapper over [`relu_bwd_into`].
+pub fn relu_bwd(dy: &[f32], pre: &[f32]) -> Vec<f32> {
+    let mut dx = vec![0.0; dy.len()];
+    relu_bwd_into(dy, pre, &mut dx);
+    dx
+}
+
+/// Token + learned-position embedding: `y[n,t] = tok[ids[n,t]] + pos[t]`,
+/// into `y` (`[B·T, D]`, fully overwritten).
 ///
-/// `tok`: `[V, D]`, `pos`: `[T, D]`, `ids`: `[B·T]` → `[B·T, D]`.
-pub fn embed_fwd(tok: &[f32], pos: &[f32], ids: &[i32], t: usize, d: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; ids.len() * d];
+/// `tok`: `[V, D]`, `pos`: `[T, D]`, `ids`: `[B·T]`.
+pub fn embed_fwd_into(tok: &[f32], pos: &[f32], ids: &[i32], t: usize, d: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), ids.len() * d);
     for (r, &id) in ids.iter().enumerate() {
         let tr = &tok[id as usize * d..(id as usize + 1) * d];
         let pr = &pos[(r % t) * d..(r % t + 1) * d];
@@ -28,21 +53,30 @@ pub fn embed_fwd(tok: &[f32], pos: &[f32], ids: &[i32], t: usize, d: usize) -> V
             yr[c] = tr[c] + pr[c];
         }
     }
+}
+
+/// Allocating wrapper over [`embed_fwd_into`].
+pub fn embed_fwd(tok: &[f32], pos: &[f32], ids: &[i32], t: usize, d: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; ids.len() * d];
+    embed_fwd_into(tok, pos, ids, t, d, &mut y);
     y
 }
 
 /// Backward of [`embed_fwd`]: scatter-add into `dtok` (`[V, D]`) and
-/// reduce over the batch into `dpos` (`[T, D]`).
-pub fn embed_bwd(
+/// reduce over the batch into `dpos` (`[T, D]`); both outputs are
+/// zeroed first, so recycled buffers are safe.
+pub fn embed_bwd_into(
     dy: &[f32],
     ids: &[i32],
-    vocab: usize,
     t: usize,
     d: usize,
-) -> (Vec<f32>, Vec<f32>) {
+    dtok: &mut [f32],
+    dpos: &mut [f32],
+) {
     debug_assert_eq!(dy.len(), ids.len() * d);
-    let mut dtok = vec![0.0f32; vocab * d];
-    let mut dpos = vec![0.0f32; t * d];
+    debug_assert_eq!(dpos.len(), t * d);
+    dtok.fill(0.0);
+    dpos.fill(0.0);
     for (r, &id) in ids.iter().enumerate() {
         let gr = &dy[r * d..(r + 1) * d];
         let tr = &mut dtok[id as usize * d..(id as usize + 1) * d];
@@ -54,6 +88,19 @@ pub fn embed_bwd(
             pr[c] += gr[c];
         }
     }
+}
+
+/// Allocating wrapper over [`embed_bwd_into`].
+pub fn embed_bwd(
+    dy: &[f32],
+    ids: &[i32],
+    vocab: usize,
+    t: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dtok = vec![0.0f32; vocab * d];
+    let mut dpos = vec![0.0f32; t * d];
+    embed_bwd_into(dy, ids, t, d, &mut dtok, &mut dpos);
     (dtok, dpos)
 }
 
@@ -66,6 +113,13 @@ mod tests {
         let pre = [-1.0, 0.0, 2.0];
         assert_eq!(relu_fwd(&pre), vec![0.0, 0.0, 2.0]);
         assert_eq!(relu_bwd(&[1.0, 1.0, 1.0], &pre), vec![0.0, 0.0, 1.0]);
+        // recycled buffers are fully overwritten
+        let mut y = vec![42.0f32; 3];
+        relu_fwd_into(&pre, &mut y);
+        assert_eq!(y, vec![0.0, 0.0, 2.0]);
+        let mut dx = vec![42.0f32; 3];
+        relu_bwd_into(&[1.0, 1.0, 1.0], &pre, &mut dx);
+        assert_eq!(dx, vec![0.0, 0.0, 1.0]);
     }
 
     #[test]
@@ -89,5 +143,10 @@ mod tests {
         assert_eq!(dtok[d], 0.0);
         // each position row sums the batch (2 sequences)
         assert!(dpos.iter().all(|&g| (g - 2.0).abs() < 1e-6));
+        // the into-variant zeroes recycled buffers before scattering
+        let mut dtok2 = vec![5.0f32; v * d];
+        let mut dpos2 = vec![5.0f32; t * d];
+        embed_bwd_into(&dy, &ids, t, d, &mut dtok2, &mut dpos2);
+        assert_eq!((dtok, dpos), (dtok2, dpos2));
     }
 }

@@ -6,28 +6,84 @@
 //! `python/compile/quantization.py` (`fq_weight_bwd` / `fq_act_bwd`):
 //! STE pass-through inside the clip range, LSQ scale gradients, LSQ+
 //! zero-point gradients outside it.
+//!
+//! Every kernel has an `_into` form writing caller-provided slices (fed
+//! from a [`crate::exec::Workspace`] on the hot paths) and a thin
+//! allocating wrapper with the historical signature.
 
 use crate::quant::{fq_asym, fq_sym, qrange_asym, qrange_sym};
 
-/// Per-row symmetric weight fake-quant (Eq. 3): `ŵ = clip(round(w/s))·s`.
-pub fn fq_weight_rows(w: &[f32], s: &[f32], row_size: usize, bits: u32) -> Vec<f32> {
-    let mut out = vec![0.0; w.len()];
+/// Per-row symmetric weight fake-quant (Eq. 3): `ŵ = clip(round(w/s))·s`,
+/// into `out` (same length as `w`, fully overwritten).
+pub fn fq_weight_rows_into(w: &[f32], s: &[f32], row_size: usize, bits: u32, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), s.len() * row_size);
+    debug_assert_eq!(out.len(), w.len());
     for (r, &sr) in s.iter().enumerate() {
         for i in 0..row_size {
             out[r * row_size + i] = fq_sym(w[r * row_size + i], sr, bits);
         }
     }
+}
+
+/// Allocating wrapper over [`fq_weight_rows_into`].
+pub fn fq_weight_rows(w: &[f32], s: &[f32], row_size: usize, bits: u32) -> Vec<f32> {
+    let mut out = vec![0.0; w.len()];
+    fq_weight_rows_into(w, s, row_size, bits, &mut out);
     out
 }
 
-/// Per-tensor asymmetric activation fake-quant (Eq. 1).
+/// Per-tensor asymmetric activation fake-quant (Eq. 1), into `out`
+/// (same length as `x`, fully overwritten).
+pub fn fq_act_tensor_into(x: &[f32], s: f32, z: f32, bits: u32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = fq_asym(v, s, z, bits);
+    }
+}
+
+/// Allocating wrapper over [`fq_act_tensor_into`].
 pub fn fq_act_tensor(x: &[f32], s: f32, z: f32, bits: u32) -> Vec<f32> {
-    x.iter().map(|&v| fq_asym(v, s, z, bits)).collect()
+    let mut out = vec![0.0; x.len()];
+    fq_act_tensor_into(x, s, z, bits, &mut out);
+    out
 }
 
 /// STE/LSQ backward of the weight quantizer for the given (already
-/// row-restricted) rows.  Returns `(dw, dsw)`; mirrors
+/// row-restricted) rows, into `dw` (`w_rows.len()`) and `ds`
+/// (`s.len()`), both fully overwritten; mirrors
 /// `python/compile/quantization.py::fq_weight_bwd`.
+pub fn fq_weight_bwd_rows_into(
+    w_rows: &[f32],
+    s: &[f32],
+    dwhat: &[f32],
+    row_size: usize,
+    bits: u32,
+    dw: &mut [f32],
+    ds: &mut [f32],
+) {
+    let (qmin, qmax) = qrange_sym(bits);
+    let (qmin, qmax) = (qmin as f32, qmax as f32);
+    debug_assert_eq!(dw.len(), w_rows.len());
+    debug_assert_eq!(ds.len(), s.len());
+    for (r, &sr) in s.iter().enumerate() {
+        let mut dsr = 0.0f32;
+        for i in 0..row_size {
+            let idx = r * row_size + i;
+            let v = w_rows[idx] / sr;
+            let q = v.round().clamp(qmin, qmax);
+            if v >= qmin && v <= qmax {
+                dw[idx] = dwhat[idx]; // STE pass-through inside the clip range
+                dsr += dwhat[idx] * (q - v); // LSQ: ∂ŵ/∂s = q - v
+            } else {
+                dw[idx] = 0.0;
+                dsr += dwhat[idx] * q; // clipped: boundary code
+            }
+        }
+        ds[r] = dsr;
+    }
+}
+
+/// Allocating wrapper over [`fq_weight_bwd_rows_into`].
 pub fn fq_weight_bwd_rows(
     w_rows: &[f32],
     s: &[f32],
@@ -35,39 +91,27 @@ pub fn fq_weight_bwd_rows(
     row_size: usize,
     bits: u32,
 ) -> (Vec<f32>, Vec<f32>) {
-    let (qmin, qmax) = qrange_sym(bits);
-    let (qmin, qmax) = (qmin as f32, qmax as f32);
     let mut dw = vec![0.0; w_rows.len()];
     let mut ds = vec![0.0; s.len()];
-    for (r, &sr) in s.iter().enumerate() {
-        for i in 0..row_size {
-            let idx = r * row_size + i;
-            let v = w_rows[idx] / sr;
-            let q = v.round().clamp(qmin, qmax);
-            if v >= qmin && v <= qmax {
-                dw[idx] = dwhat[idx]; // STE pass-through inside the clip range
-                ds[r] += dwhat[idx] * (q - v); // LSQ: ∂ŵ/∂s = q - v
-            } else {
-                ds[r] += dwhat[idx] * q; // clipped: boundary code
-            }
-        }
-    }
+    fq_weight_bwd_rows_into(w_rows, s, dwhat, row_size, bits, &mut dw, &mut ds);
     (dw, ds)
 }
 
-/// STE/LSQ+ backward of the activation quantizer.  Returns
-/// `(dx, ds, dz)`; mirrors `python/compile/quantization.py::fq_act_bwd`.
-pub fn fq_act_bwd_tensor(
+/// STE/LSQ+ backward of the activation quantizer, into `dx` (fully
+/// overwritten).  Returns `(ds, dz)`; mirrors
+/// `python/compile/quantization.py::fq_act_bwd`.
+pub fn fq_act_bwd_tensor_into(
     x: &[f32],
     s: f32,
     z: f32,
     dxhat: &[f32],
     bits: u32,
-) -> (Vec<f32>, f32, f32) {
+    dx: &mut [f32],
+) -> (f32, f32) {
     let (qmin, qmax) = qrange_asym(bits);
     let (qmin, qmax) = (qmin as f32, qmax as f32);
     let zr = z.round();
-    let mut dx = vec![0.0; x.len()];
+    debug_assert_eq!(dx.len(), x.len());
     let (mut ds, mut dz) = (0f32, 0f32);
     for i in 0..x.len() {
         let v = x[i] / s;
@@ -77,10 +121,24 @@ pub fn fq_act_bwd_tensor(
             dx[i] = dxhat[i];
             ds += dxhat[i] * ((c - zr) - v);
         } else {
+            dx[i] = 0.0;
             ds += dxhat[i] * (c - zr);
             dz += dxhat[i] * (-s);
         }
     }
+    (ds, dz)
+}
+
+/// Allocating wrapper over [`fq_act_bwd_tensor_into`].
+pub fn fq_act_bwd_tensor(
+    x: &[f32],
+    s: f32,
+    z: f32,
+    dxhat: &[f32],
+    bits: u32,
+) -> (Vec<f32>, f32, f32) {
+    let mut dx = vec![0.0; x.len()];
+    let (ds, dz) = fq_act_bwd_tensor_into(x, s, z, dxhat, bits, &mut dx);
     (dx, ds, dz)
 }
 
@@ -122,6 +180,29 @@ mod tests {
                 assert_eq!(out[i], quant::fq_asym(x[i], s, z, 8));
             }
         });
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let w = [0.05f32, -0.31, 100.0];
+        let s = [0.1f32];
+        let g = [2.0f32, 1.5, 1.0];
+        let mut dw = vec![9.0f32; 3];
+        let mut ds = vec![9.0f32; 1];
+        fq_weight_bwd_rows_into(&w, &s, &g, 3, 8, &mut dw, &mut ds);
+        let (dw2, ds2) = fq_weight_bwd_rows(&w, &s, &g, 3, 8);
+        assert_eq!((dw, ds), (dw2, ds2));
+        let x = [0.5f32, 100.0];
+        let mut dx = vec![-4.0f32; 2];
+        let (ds, dz) = fq_act_bwd_tensor_into(&x, 0.1, 10.0, &[3.0, 1.0], 8, &mut dx);
+        let (dx2, ds2, dz2) = fq_act_bwd_tensor(&x, 0.1, 10.0, &[3.0, 1.0], 8);
+        assert_eq!((dx, ds, dz), (dx2, ds2, dz2));
+        let mut fq = vec![7.0f32; 2];
+        fq_act_tensor_into(&x, 0.1, 10.0, 8, &mut fq);
+        assert_eq!(fq, fq_act_tensor(&x, 0.1, 10.0, 8));
+        let mut fw = vec![7.0f32; 3];
+        fq_weight_rows_into(&w, &s, 3, 8, &mut fw);
+        assert_eq!(fw, fq_weight_rows(&w, &s, 3, 8));
     }
 
     #[test]

@@ -8,26 +8,28 @@
 use crate::error::{bail, Result};
 use crate::tensor::argmax;
 
-/// `loss = mean_r [lse(logits_r) - logits_r[label_r]]`.
+/// `loss = mean_r [lse(logits_r) - logits_r[label_r]]`, writing the
+/// exact mean-loss gradient (`(softmax - onehot)/rows`) into `dlogits`
+/// (fully overwritten; same length as `logits`).
 ///
-/// Returns `(loss, correct_rows, dlogits)`; `dlogits` is the exact
-/// gradient of the mean loss (`(softmax - onehot)/rows`), computed in the
-/// same pass so forward-only callers pay nothing extra of consequence.
+/// Returns `(loss, correct_rows)`; the gradient is computed in the same
+/// pass so forward-only callers pay nothing extra of consequence.
 /// Labels outside `[0, classes)` are a descriptive error, never an index
 /// panic.
-pub fn softmax_xent(
+pub fn softmax_xent_into(
     logits: &[f32],
     labels: &[i32],
     rows: usize,
     classes: usize,
-) -> Result<(f32, usize, Vec<f32>)> {
+    dlogits: &mut [f32],
+) -> Result<(f32, usize)> {
     debug_assert_eq!(logits.len(), rows * classes);
+    debug_assert_eq!(dlogits.len(), logits.len());
     if labels.len() != rows {
         bail!("softmax_xent: {} labels for {} logit rows", labels.len(), rows);
     }
     let mut loss = 0f32;
     let mut correct = 0usize;
-    let mut dlogits = vec![0f32; rows * classes];
     for r in 0..rows {
         let row = &logits[r * classes..(r + 1) * classes];
         let y = labels[r];
@@ -48,7 +50,20 @@ pub fn softmax_xent(
             dlogits[r * classes + c] = (p - onehot) / rows as f32;
         }
     }
-    Ok((loss / rows as f32, correct, dlogits))
+    Ok((loss / rows as f32, correct))
+}
+
+/// Allocating wrapper over [`softmax_xent_into`]; returns
+/// `(loss, correct_rows, dlogits)`.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    rows: usize,
+    classes: usize,
+) -> Result<(f32, usize, Vec<f32>)> {
+    let mut dlogits = vec![0f32; rows * classes];
+    let (loss, correct) = softmax_xent_into(logits, labels, rows, classes, &mut dlogits)?;
+    Ok((loss, correct, dlogits))
 }
 
 #[cfg(test)]
@@ -60,6 +75,17 @@ mod tests {
     fn uniform_logits_give_log_classes() {
         let (loss, _, _) = softmax_xent(&[0.0; 8], &[3, 1], 2, 4).unwrap();
         assert!((loss - (4f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn into_variant_overwrites_dirty_buffers() {
+        let logits = [0.3f32, -1.0, 0.7, 2.0, 0.0, -0.5];
+        let labels = [2, 0];
+        let (l1, c1, d1) = softmax_xent(&logits, &labels, 2, 3).unwrap();
+        let mut d2 = vec![42.0f32; 6];
+        let (l2, c2) = softmax_xent_into(&logits, &labels, 2, 3, &mut d2).unwrap();
+        assert_eq!((l1, c1), (l2, c2));
+        assert_eq!(d1, d2);
     }
 
     #[test]

@@ -8,12 +8,23 @@
 //! * [`partial_dw`]   the paper's Fig. 1 (right): only the gathered
 //!   unfrozen rows of `dw` are ever materialized.
 //!
+//! Each kernel comes in two forms: an `_into` variant that writes a
+//! caller-provided `&mut [f32]` (the planned executors feed these from a
+//! [`crate::exec::Workspace`], so the steady state never touches the
+//! allocator) and a thin allocating wrapper with the historical
+//! signature for tests and cold paths.
+//!
 //! All kernels are cache-blocked over the contraction dim (`KC`) and
 //! split their *output rows* across `std::thread` workers when the work
 //! exceeds `PAR_MIN_FLOPS` — each thread owns a disjoint `&mut` chunk
 //! of the output, so results are deterministic regardless of thread
-//! count (no atomic accumulation, no reduction-order wobble).
+//! count (no atomic accumulation, no reduction-order wobble).  The
+//! worker count follows `std::thread::available_parallelism()` unless
+//! the `EFQAT_THREADS` environment variable overrides it (read once per
+//! process; benches and CI set it for reproducible numbers across
+//! machines).
 
+use std::sync::OnceLock;
 use std::thread;
 
 /// Contraction-dim block: 128 f32 ≈ half a 1 KiB L1 line budget per
@@ -23,13 +34,36 @@ const KC: usize = 128;
 /// Minimum fused-multiply-adds before spawning threads pays for itself.
 const PAR_MIN_FLOPS: usize = 1 << 18;
 
+/// Parse an `EFQAT_THREADS` value; `None`/empty/zero/garbage means "no
+/// override".
+fn parse_threads(v: Option<String>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// Hardware (or `EFQAT_THREADS`-overridden) worker ceiling, resolved
+/// once per process — `available_parallelism` is a syscall and the env
+/// lookup allocates, neither belongs in a per-GEMM path.
+fn hw_threads() -> usize {
+    static CEILING: OnceLock<usize> = OnceLock::new();
+    *CEILING.get_or_init(|| {
+        parse_threads(std::env::var("EFQAT_THREADS").ok())
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
 fn thread_count(rows: usize, flops_per_row: usize) -> usize {
     if rows == 0 {
         return 1;
     }
-    let hw = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let by_work = (rows.saturating_mul(flops_per_row) / PAR_MIN_FLOPS).max(1);
-    hw.min(by_work).min(rows)
+    hw_threads().min(by_work).min(rows)
+}
+
+/// The worker count [`par_rows`] / [`par_rows_scratch`] would use for
+/// this shape — callers sizing per-worker scratch from a workspace need
+/// the same answer the splitter will compute.
+pub(crate) fn planned_threads(rows: usize, flops_per_row: usize) -> usize {
+    thread_count(rows, flops_per_row)
 }
 
 /// Run `body(first_row, rows_chunk)` over `out` split row-wise across
@@ -63,23 +97,64 @@ pub(crate) fn par_rows<T, F>(
     });
 }
 
-/// `y[b,o] = Σ_i x[b,i]·w[o,i] (+ bias[o])` — x: `[m,k]`, w: `[n,k]`.
-pub fn linear_fwd(
+/// [`par_rows`] with per-worker scratch: `scratch` is pre-split into
+/// `scratch_per`-element chunks, one per worker, so kernels that need a
+/// private accumulator (the int8 GEMM) can draw it from a workspace
+/// instead of allocating inside every spawned thread.  `scratch` must
+/// hold at least `planned_threads(rows, flops_per_row) * scratch_per`
+/// elements.
+pub(crate) fn par_rows_scratch<T, S, F>(
+    out: &mut [T],
+    rows: usize,
+    row_elems: usize,
+    flops_per_row: usize,
+    scratch: &mut [S],
+    scratch_per: usize,
+    body: F,
+) where
+    T: Send,
+    S: Send,
+    F: Fn(usize, &mut [T], &mut [S]) + Sync,
+{
+    if out.is_empty() || row_elems == 0 {
+        return;
+    }
+    let nt = thread_count(rows, flops_per_row);
+    debug_assert!(scratch.len() >= nt * scratch_per, "scratch under-sized for {nt} workers");
+    if nt <= 1 {
+        body(0, out, &mut scratch[..scratch_per]);
+        return;
+    }
+    let chunk = rows.div_ceil(nt);
+    thread::scope(|s| {
+        let chunks = out.chunks_mut(chunk * row_elems);
+        for ((ci, chunk_rows), sc) in chunks.enumerate().zip(scratch.chunks_mut(scratch_per)) {
+            let body = &body;
+            s.spawn(move || body(ci * chunk, chunk_rows, sc));
+        }
+    });
+}
+
+/// `y[b,o] = Σ_i x[b,i]·w[o,i] (+ bias[o])` — x: `[m,k]`, w: `[n,k]`,
+/// into caller-provided `y` (`[m,n]`, fully overwritten).
+pub fn linear_fwd_into(
     x: &[f32],
     w: &[f32],
     bias: Option<&[f32]>,
     m: usize,
     k: usize,
     n: usize,
-) -> Vec<f32> {
+    y: &mut [f32],
+) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), n * k);
-    let mut y = vec![0.0f32; m * n];
-    par_rows(&mut y, m, n, k * n, |r0, rows| {
+    debug_assert_eq!(y.len(), m * n);
+    par_rows(y, m, n, k * n, |r0, rows| {
         for (ri, yr) in rows.chunks_mut(n).enumerate() {
             let xr = &x[(r0 + ri) * k..(r0 + ri + 1) * k];
-            if let Some(b) = bias {
-                yr.copy_from_slice(b);
+            match bias {
+                Some(b) => yr.copy_from_slice(b),
+                None => yr.fill(0.0),
             }
             let mut k0 = 0;
             while k0 < k {
@@ -97,17 +172,32 @@ pub fn linear_fwd(
             }
         }
     });
+}
+
+/// Allocating wrapper over [`linear_fwd_into`].
+pub fn linear_fwd(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * n];
+    linear_fwd_into(x, w, bias, m, k, n, &mut y);
     y
 }
 
 /// `dx[b,i] = Σ_o dy[b,o]·w[o,i]` — the full input gradient (always
-/// computed dense, like QAT: Eq. 5's first matmul).
-pub fn matmul_dy_w(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// computed dense, like QAT: Eq. 5's first matmul), into `dx` (`[m,k]`,
+/// fully overwritten).
+pub fn matmul_dy_w_into(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize, dx: &mut [f32]) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(w.len(), n * k);
-    let mut dx = vec![0.0f32; m * k];
-    par_rows(&mut dx, m, k, n * k, |r0, rows| {
+    debug_assert_eq!(dx.len(), m * k);
+    par_rows(dx, m, k, n * k, |r0, rows| {
         for (ri, dxr) in rows.chunks_mut(k).enumerate() {
+            dxr.fill(0.0);
             let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
             for (o, &g) in dyr.iter().enumerate() {
                 if g == 0.0 {
@@ -120,15 +210,23 @@ pub fn matmul_dy_w(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f
             }
         }
     });
+}
+
+/// Allocating wrapper over [`matmul_dy_w_into`].
+pub fn matmul_dy_w(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * k];
+    matmul_dy_w_into(dy, w, m, n, k, &mut dx);
     dx
 }
 
-/// `dw[o,i] = Σ_b dy[b,o]·x[b,i]` — the full weight gradient.
-pub fn matmul_dyt_x(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// `dw[o,i] = Σ_b dy[b,o]·x[b,i]` — the full weight gradient, into `dw`
+/// (`[n,k]`, fully overwritten).
+pub fn matmul_dyt_x_into(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize, dw: &mut [f32]) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(x.len(), m * k);
-    let mut dw = vec![0.0f32; n * k];
-    par_rows(&mut dw, n, k, m * k, |o0, rows| {
+    debug_assert_eq!(dw.len(), n * k);
+    par_rows(dw, n, k, m * k, |o0, rows| {
+        rows.fill(0.0);
         for b in 0..m {
             let xr = &x[b * k..(b + 1) * k];
             for (oi, dwr) in rows.chunks_mut(k).enumerate() {
@@ -142,17 +240,33 @@ pub fn matmul_dyt_x(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<
             }
         }
     });
+}
+
+/// Allocating wrapper over [`matmul_dyt_x_into`].
+pub fn matmul_dyt_x(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut dw = vec![0.0f32; n * k];
+    matmul_dyt_x_into(dy, x, m, n, k, &mut dw);
     dw
 }
 
 /// Partial weight gradient (paper Fig. 1 right, mirrors
 /// `kernels/ref.py::partial_dw_ref`): `dw[r,i] = Σ_b dy[b,idx[r]]·x[b,i]`
-/// — only the `idx.len()` unfrozen rows are ever materialized.
-pub fn partial_dw(dy: &[f32], x: &[f32], idx: &[usize], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// — only the `idx.len()` unfrozen rows are ever materialized, into `dw`
+/// (`[idx.len(),k]`, fully overwritten).
+pub fn partial_dw_into(
+    dy: &[f32],
+    x: &[f32],
+    idx: &[usize],
+    m: usize,
+    n: usize,
+    k: usize,
+    dw: &mut [f32],
+) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(x.len(), m * k);
-    let mut dw = vec![0.0f32; idx.len() * k];
-    par_rows(&mut dw, idx.len(), k, m * k, |r0, rows| {
+    debug_assert_eq!(dw.len(), idx.len() * k);
+    par_rows(dw, idx.len(), k, m * k, |r0, rows| {
+        rows.fill(0.0);
         for b in 0..m {
             let xr = &x[b * k..(b + 1) * k];
             for (ri, dwr) in rows.chunks_mut(k).enumerate() {
@@ -166,19 +280,33 @@ pub fn partial_dw(dy: &[f32], x: &[f32], idx: &[usize], m: usize, n: usize, k: u
             }
         }
     });
+}
+
+/// Allocating wrapper over [`partial_dw_into`].
+pub fn partial_dw(dy: &[f32], x: &[f32], idx: &[usize], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut dw = vec![0.0f32; idx.len() * k];
+    partial_dw_into(dy, x, idx, m, n, k, &mut dw);
     dw
 }
 
-/// `db[o] = Σ_b dy[b,o]` — the bias gradient (column sum).
-pub fn col_sum(dy: &[f32], m: usize, n: usize) -> Vec<f32> {
+/// `db[o] = Σ_b dy[b,o]` — the bias gradient (column sum), into `db`
+/// (`[n]`, fully overwritten).
+pub fn col_sum_into(dy: &[f32], m: usize, n: usize, db: &mut [f32]) {
     debug_assert_eq!(dy.len(), m * n);
-    let mut db = vec![0.0f32; n];
+    debug_assert_eq!(db.len(), n);
+    db.fill(0.0);
     for b in 0..m {
         let dyr = &dy[b * n..(b + 1) * n];
         for o in 0..n {
             db[o] += dyr[o];
         }
     }
+}
+
+/// Allocating wrapper over [`col_sum_into`].
+pub fn col_sum(dy: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; n];
+    col_sum_into(dy, m, n, &mut db);
     db
 }
 
@@ -222,6 +350,33 @@ mod tests {
                 assert!((got[i] - want[i]).abs() < 1e-4, "{}: {} vs {}", i, got[i], want[i]);
             }
         });
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        // the planned executors hand these kernels recycled buffers: any
+        // residue from a previous step must be overwritten, not summed
+        let (m, k, n) = (3, 5, 4);
+        let mut rng = crate::rng::Pcg64::new(17);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(n * k, 1.0);
+        let dy = rng.normal_vec(m * n, 1.0);
+        let mut y = vec![99.0f32; m * n];
+        linear_fwd_into(&x, &w, None, m, k, n, &mut y);
+        assert_eq!(y, linear_fwd(&x, &w, None, m, k, n));
+        let mut dx = vec![-7.0f32; m * k];
+        matmul_dy_w_into(&dy, &w, m, n, k, &mut dx);
+        assert_eq!(dx, matmul_dy_w(&dy, &w, m, n, k));
+        let mut dw = vec![3.0f32; n * k];
+        matmul_dyt_x_into(&dy, &x, m, n, k, &mut dw);
+        assert_eq!(dw, matmul_dyt_x(&dy, &x, m, n, k));
+        let idx = [2usize, 0];
+        let mut dp = vec![8.0f32; idx.len() * k];
+        partial_dw_into(&dy, &x, &idx, m, n, k, &mut dp);
+        assert_eq!(dp, partial_dw(&dy, &x, &idx, m, n, k));
+        let mut db = vec![5.0f32; n];
+        col_sum_into(&dy, m, n, &mut db);
+        assert_eq!(db, col_sum(&dy, m, n));
     }
 
     #[test]
@@ -299,5 +454,34 @@ mod tests {
     fn empty_inputs_do_not_panic() {
         assert!(linear_fwd(&[], &[], None, 0, 4, 0).is_empty());
         assert!(partial_dw(&[], &[], &[], 0, 0, 4).is_empty());
+    }
+
+    #[test]
+    fn thread_override_parses_defensively() {
+        assert_eq!(parse_threads(Some("4".into())), Some(4));
+        assert_eq!(parse_threads(Some(" 2 ".into())), Some(2));
+        // zero / garbage / unset all mean "no override"
+        assert_eq!(parse_threads(Some("0".into())), None);
+        assert_eq!(parse_threads(Some("lots".into())), None);
+        assert_eq!(parse_threads(None), None);
+    }
+
+    #[test]
+    fn scratch_splitter_matches_plain_splitter() {
+        // par_rows_scratch must partition rows exactly like par_rows and
+        // hand every worker a private scratch chunk
+        let (rows, re) = (10usize, 3usize);
+        let mut out = vec![0u32; rows * re];
+        let nt = planned_threads(rows, 1 << 20);
+        let mut scratch = vec![0u8; nt.max(1) * 2];
+        par_rows_scratch(&mut out, rows, re, 1 << 20, &mut scratch, 2, |r0, chunk, sc| {
+            assert_eq!(sc.len(), 2);
+            for (ri, row) in chunk.chunks_mut(re).enumerate() {
+                row.fill((r0 + ri) as u32);
+            }
+        });
+        for r in 0..rows {
+            assert!(out[r * re..(r + 1) * re].iter().all(|&v| v == r as u32), "row {r}");
+        }
     }
 }

@@ -8,6 +8,15 @@
 //! functions over `&[f32]` slices: the layer-graph IR owns shapes and
 //! residual caches, the ops own the math.
 //!
+//! Every kernel comes in two forms: an `_into` variant writing
+//! caller-provided output slices — the planned executors
+//! ([`crate::graph`], [`crate::lower`]) feed these from a
+//! [`crate::exec::Workspace`], so steady-state execution performs no
+//! heap allocation — and a thin allocating wrapper with the historical
+//! signature for tests and cold paths.  `_into` kernels fully overwrite
+//! their outputs (zeroing first where the algorithm accumulates), so
+//! recycled buffers are always safe.
+//!
 //! * [`matmul`] — cache-blocked, `std::thread`-parallel GEMM variants:
 //!   the linear forward, both backward matmuls (Eq. 5), and the paper's
 //!   partial `dW` (Fig. 1 right) that only materializes unfrozen rows.

@@ -1,22 +1,30 @@
 //! LayerNorm over the trailing feature axis — mirrors
 //! `python/compile/layers.py::ln_fwd` / `ln_bwd` (ε = 1e-5).
+//!
+//! Both kernels have `_into` forms writing caller-provided slices (the
+//! planned executors feed them from a [`crate::exec::Workspace`]) plus
+//! thin allocating wrappers.
 
 pub const LN_EPS: f32 = 1e-5;
 
-/// Normalize each of `rows` length-`d` rows.  Returns `(y, xhat, inv)`
-/// where `xhat`/`inv` are the residual cache for [`layernorm_bwd`]
-/// (`inv` is one `1/σ` per row).
-pub fn layernorm_fwd(
+/// Normalize each of `rows` length-`d` rows, into `y` plus the residual
+/// caches `xhat` (`rows·d`) and `inv` (`rows`, one `1/σ` per row) for
+/// [`layernorm_bwd`].  All three outputs are fully overwritten.
+#[allow(clippy::too_many_arguments)] // a norm ABI: operand, params, dims, outputs
+pub fn layernorm_fwd_into(
     x: &[f32],
     gamma: &[f32],
     beta: &[f32],
     rows: usize,
     d: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    y: &mut [f32],
+    xhat: &mut [f32],
+    inv: &mut [f32],
+) {
     debug_assert_eq!(x.len(), rows * d);
-    let mut y = vec![0.0f32; rows * d];
-    let mut xhat = vec![0.0f32; rows * d];
-    let mut inv = vec![0.0f32; rows];
+    debug_assert_eq!(y.len(), rows * d);
+    debug_assert_eq!(xhat.len(), rows * d);
+    debug_assert_eq!(inv.len(), rows);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let mu = xr.iter().sum::<f32>() / d as f32;
@@ -29,22 +37,45 @@ pub fn layernorm_fwd(
             y[r * d + i] = gamma[i] * h + beta[i];
         }
     }
+}
+
+/// Allocating wrapper over [`layernorm_fwd_into`]; returns
+/// `(y, xhat, inv)`.
+pub fn layernorm_fwd(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    layernorm_fwd_into(x, gamma, beta, rows, d, &mut y, &mut xhat, &mut inv);
     (y, xhat, inv)
 }
 
-/// Backward of [`layernorm_fwd`].  Returns `(dx, dgamma, dbeta)`.
-pub fn layernorm_bwd(
+/// Backward of [`layernorm_fwd`], into `dx` / `dgamma` / `dbeta` (all
+/// fully overwritten; `dgamma`/`dbeta` are zeroed first, then
+/// row-accumulated).
+#[allow(clippy::too_many_arguments)] // a VJP ABI: cotangent, caches, param, dims, outputs
+pub fn layernorm_bwd_into(
     dy: &[f32],
     xhat: &[f32],
     inv: &[f32],
     gamma: &[f32],
     rows: usize,
     d: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
     debug_assert_eq!(dy.len(), rows * d);
-    let mut dx = vec![0.0f32; rows * d];
-    let mut dgamma = vec![0.0f32; d];
-    let mut dbeta = vec![0.0f32; d];
+    debug_assert_eq!(dx.len(), rows * d);
+    debug_assert_eq!(dgamma.len(), d);
+    debug_assert_eq!(dbeta.len(), d);
+    dgamma.fill(0.0);
+    dbeta.fill(0.0);
     for r in 0..rows {
         let dyr = &dy[r * d..(r + 1) * d];
         let xr = &xhat[r * d..(r + 1) * d];
@@ -64,6 +95,22 @@ pub fn layernorm_bwd(
             dx[r * d + i] = inv[r] * (dh - m1 - xr[i] * m2);
         }
     }
+}
+
+/// Allocating wrapper over [`layernorm_bwd_into`]; returns
+/// `(dx, dgamma, dbeta)`.
+pub fn layernorm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    inv: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dgamma = vec![0.0f32; d];
+    let mut dbeta = vec![0.0f32; d];
+    layernorm_bwd_into(dy, xhat, inv, gamma, rows, d, &mut dx, &mut dgamma, &mut dbeta);
     (dx, dgamma, dbeta)
 }
 
@@ -87,6 +134,25 @@ mod tests {
             assert!(mu.abs() < 1e-5, "row {r} mean {mu}");
             assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
         }
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let mut rng = Pcg64::new(4);
+        let (rows, d) = (3, 4);
+        let x = rng.normal_vec(rows * d, 1.0);
+        let gamma = rng.normal_vec(d, 0.5);
+        let beta = rng.normal_vec(d, 0.5);
+        let dout = rng.normal_vec(rows * d, 1.0);
+        let (y, xhat, inv) = layernorm_fwd(&x, &gamma, &beta, rows, d);
+        let (mut y2, mut xh2, mut iv2) =
+            (vec![9.0; rows * d], vec![9.0; rows * d], vec![9.0; rows]);
+        layernorm_fwd_into(&x, &gamma, &beta, rows, d, &mut y2, &mut xh2, &mut iv2);
+        assert_eq!((&y, &xhat, &inv), (&y2, &xh2, &iv2));
+        let want = layernorm_bwd(&dout, &xhat, &inv, &gamma, rows, d);
+        let (mut dx, mut dg, mut db) = (vec![9.0; rows * d], vec![9.0; d], vec![9.0; d]);
+        layernorm_bwd_into(&dout, &xhat, &inv, &gamma, rows, d, &mut dx, &mut dg, &mut db);
+        assert_eq!(want, (dx, dg, db));
     }
 
     #[test]

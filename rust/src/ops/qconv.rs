@@ -11,21 +11,50 @@
 
 #![warn(missing_docs)]
 
-use crate::ops::conv::{im2col_with, ConvDims};
-use crate::ops::qmatmul::qlinear_fwd;
+use crate::ops::conv::{im2col_with, im2col_with_into, ConvDims};
+use crate::ops::qmatmul::{qlinear_fwd, qlinear_fwd_into};
 
 /// Unfold u8 activation codes `[B, C_in, H, H]` into the patch matrix
-/// `[M, C_in·k·k]`, padding out-of-bounds taps with `pad_code` (the
-/// activation zero point).  One traversal with the float path
-/// ([`crate::ops::conv::im2col`]) — only the element type and the pad
-/// value differ.
+/// `[M, C_in·k·k]` written into `cols`, padding out-of-bounds taps with
+/// `pad_code` (the activation zero point).  One traversal with the
+/// float path ([`crate::ops::conv::im2col`]) — only the element type
+/// and the pad value differ.
+pub fn im2col_codes_into(qx: &[u8], d: &ConvDims, pad_code: u8, cols: &mut [u8]) {
+    im2col_with_into(qx, d, pad_code, cols);
+}
+
+/// Allocating wrapper over [`im2col_codes_into`].
 pub fn im2col_codes(qx: &[u8], d: &ConvDims, pad_code: u8) -> Vec<u8> {
     im2col_with(qx, d, pad_code)
 }
 
 /// Int8 conv2d forward over codes: `[B, C_in, H, H]` u8 codes → f32
-/// NCHW output `[B, C_out, H_out, H_out]`, dequantized by the
-/// per-channel `scale[o] = S_x·S_w[o]` like the linear path.
+/// NCHW output `[B, C_out, H_out, H_out]` into `y` (fully
+/// overwritten), dequantized by the per-channel `scale[o] = S_x·S_w[o]`
+/// like the linear path.  The caller provides the unfold scratch
+/// `cols` (`rows·patch` u8), the GEMM-layout scratch `y2`
+/// (`rows·c_out` f32), and the per-worker accumulator `acc`
+/// ([`crate::ops::qmatmul::qlinear_scratch_len`] i32) — all fed from a
+/// [`crate::exec::Workspace`] on the serving hot path.
+#[allow(clippy::too_many_arguments)] // a conv ABI: operands, correction, dims, out, scratch
+pub fn qconv_fwd_into(
+    qx: &[u8],
+    qw: &[i8],
+    wsum: &[i32],
+    zx: i32,
+    scale: &[f32],
+    d: &ConvDims,
+    y: &mut [f32],
+    cols: &mut [u8],
+    y2: &mut [f32],
+    acc: &mut [i32],
+) {
+    im2col_codes_into(qx, d, zx as u8, cols);
+    qlinear_fwd_into(cols, qw, wsum, zx, scale, None, d.rows(), d.patch(), d.c_out, y2, acc);
+    crate::ops::conv::rows_to_nchw_into(y2, d, y);
+}
+
+/// Allocating wrapper over [`qconv_fwd_into`].
 pub fn qconv_fwd(
     qx: &[u8],
     qw: &[i8],

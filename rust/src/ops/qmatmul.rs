@@ -17,8 +17,10 @@
 //! `tests/int8_parity.rs`).
 //!
 //! The kernel is cache-blocked over the contraction dim and
-//! `std::thread`-parallel over output rows via the same `par_rows`
-//! splitter as the f32 GEMMs in [`crate::ops::matmul`]: each thread
+//! `std::thread`-parallel over output rows via the same row splitter
+//! as the f32 GEMMs in [`crate::ops::matmul`] (the scratch-carrying
+//! variant: each worker's i32 accumulator row comes from the caller,
+//! so the serving hot path never allocates inside a thread): each thread
 //! owns a disjoint output chunk, i32 accumulation is exact, so results
 //! are bit-deterministic regardless of thread count.  Determinism is
 //! also per-*row*: each output element reduces over `k` in a fixed block
@@ -28,7 +30,7 @@
 
 #![warn(missing_docs)]
 
-use crate::ops::matmul::par_rows;
+use crate::ops::matmul::{par_rows_scratch, planned_threads};
 use crate::quant::{code_asym, code_sym};
 
 /// Contraction-dim block.  i8 operands are 4× denser than f32, so a
@@ -61,21 +63,43 @@ pub fn quantize_weight_rows(
 }
 
 /// Quantize an activation tensor to its asymmetric unsigned codes
-/// (Eq. 1) — the layer-boundary quantization of the serving path.
-pub fn quantize_acts(x: &[f32], s: f32, z: f32, bits: u32) -> Vec<u8> {
+/// (Eq. 1) — the layer-boundary quantization of the serving path —
+/// into `q` (fully overwritten; fed from a [`crate::exec::Workspace`]
+/// on the serving hot path).
+pub fn quantize_acts_into(x: &[f32], s: f32, z: f32, bits: u32, q: &mut [u8]) {
     debug_assert!(bits <= 8, "int8 engine: activation codes must fit u8");
-    x.iter().map(|&v| code_asym(v, s, z, bits) as u8).collect()
+    debug_assert_eq!(q.len(), x.len());
+    for (o, &v) in q.iter_mut().zip(x) {
+        *o = code_asym(v, s, z, bits) as u8;
+    }
+}
+
+/// Allocating wrapper over [`quantize_acts_into`].
+pub fn quantize_acts(x: &[f32], s: f32, z: f32, bits: u32) -> Vec<u8> {
+    let mut q = vec![0u8; x.len()];
+    quantize_acts_into(x, s, z, bits, &mut q);
+    q
+}
+
+/// Per-worker accumulator scratch (in `i32` elements) that
+/// [`qlinear_fwd_into`] needs for an `[m,k]×[n,k]` GEMM — one length-`n`
+/// row per planned worker thread.
+pub fn qlinear_scratch_len(m: usize, k: usize, n: usize) -> usize {
+    planned_threads(m, k * n).max(1) * n
 }
 
 /// `y[b,o] = scale[o]·(Σ_i qx[b,i]·qw[o,i] − zx·wsum[o]) (+ bias[o])`
-/// — qx: `[m,k]` u8 codes, qw: `[n,k]` i8 codes, `scale[o] = S_x·S_w[o]`.
+/// — qx: `[m,k]` u8 codes, qw: `[n,k]` i8 codes, `scale[o] = S_x·S_w[o]`,
+/// into `y` (`[m,n]`, fully overwritten).  `acc` is per-worker
+/// accumulator scratch of at least [`qlinear_scratch_len`]`(m, k, n)`
+/// elements, so the threaded hot path performs no allocation at all.
 ///
 /// i32 accumulation is exact for `k ≤ 2³¹/(255·127)` (≈ 66k — far above
 /// any repro model; [`crate::lower`] rejects larger contractions), and
 /// the zero-point correction is applied in i64 before the single f32
 /// rescale per output element.
 #[allow(clippy::too_many_arguments)] // a GEMM ABI: operands, correction, rescale, dims
-pub fn qlinear_fwd(
+pub fn qlinear_fwd_into(
     qx: &[u8],
     qw: &[i8],
     wsum: &[i32],
@@ -85,14 +109,15 @@ pub fn qlinear_fwd(
     m: usize,
     k: usize,
     n: usize,
-) -> Vec<f32> {
+    y: &mut [f32],
+    acc_scratch: &mut [i32],
+) {
     debug_assert_eq!(qx.len(), m * k);
     debug_assert_eq!(qw.len(), n * k);
     debug_assert_eq!(wsum.len(), n);
     debug_assert_eq!(scale.len(), n);
-    let mut y = vec![0.0f32; m * n];
-    par_rows(&mut y, m, n, k * n, |r0, rows| {
-        let mut acc = vec![0i32; n];
+    debug_assert_eq!(y.len(), m * n);
+    par_rows_scratch(y, m, n, k * n, acc_scratch, n, |r0, rows, acc| {
         for (ri, yr) in rows.chunks_mut(n).enumerate() {
             let xr = &qx[(r0 + ri) * k..(r0 + ri + 1) * k];
             acc.fill(0);
@@ -120,6 +145,24 @@ pub fn qlinear_fwd(
             }
         }
     });
+}
+
+/// Allocating wrapper over [`qlinear_fwd_into`].
+#[allow(clippy::too_many_arguments)] // a GEMM ABI: operands, correction, rescale, dims
+pub fn qlinear_fwd(
+    qx: &[u8],
+    qw: &[i8],
+    wsum: &[i32],
+    zx: i32,
+    scale: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * n];
+    let mut acc = vec![0i32; qlinear_scratch_len(m, k, n)];
+    qlinear_fwd_into(qx, qw, wsum, zx, scale, bias, m, k, n, &mut y, &mut acc);
     y
 }
 

@@ -28,13 +28,20 @@ impl SgdMomentum {
         SgdMomentum { lr, momentum, weight_decay, velocity: BTreeMap::new() }
     }
 
+    /// Momentum buffer for `name`, created on first use.  Lookup is by
+    /// `&str` (no key allocation) so the steady-state step allocates
+    /// nothing.
+    fn velocity(&mut self, name: &str, shape: &[usize]) -> &mut Tensor {
+        if !self.velocity.contains_key(name) {
+            self.velocity.insert(name.to_string(), Tensor::zeros(shape));
+        }
+        self.velocity.get_mut(name).expect("just inserted")
+    }
+
     /// Dense update of a whole parameter tensor.
     pub fn apply_full(&mut self, name: &str, param: &mut Tensor, grad: &[f32]) {
         assert_eq!(param.len(), grad.len(), "{name}: grad size mismatch");
-        let v = self
-            .velocity
-            .entry(name.to_string())
-            .or_insert_with(|| Tensor::zeros(&param.shape));
+        let v = self.velocity(name, &param.shape);
         for i in 0..grad.len() {
             let g = grad[i] + self.weight_decay * param.data[i];
             v.data[i] = self.momentum * v.data[i] + g;
@@ -48,10 +55,7 @@ impl SgdMomentum {
     pub fn apply_rows(&mut self, name: &str, param: &mut Tensor, grad_rows: &[f32], idx: &[usize]) {
         let rs = param.row_size();
         assert_eq!(grad_rows.len(), idx.len() * rs, "{name}: partial grad size mismatch");
-        let v = self
-            .velocity
-            .entry(name.to_string())
-            .or_insert_with(|| Tensor::zeros(&param.shape));
+        let v = self.velocity(name, &param.shape);
         for (gi, &r) in idx.iter().enumerate() {
             let g = &grad_rows[gi * rs..(gi + 1) * rs];
             let pv = &mut v.data[r * rs..(r + 1) * rs];
@@ -98,17 +102,27 @@ impl Adam {
         self
     }
 
-    /// Adam update over the given (index, grad) pairs.
-    fn apply_indices(&mut self, name: &str, param: &mut [f32], grads: &[(usize, f32)]) {
+    /// Adam update over the given (index, grad) pairs.  Takes any
+    /// iterator (no `Vec` is built) and looks state up by `&str`, so
+    /// steady-state calls perform no heap allocation.
+    fn apply_indices<I>(&mut self, name: &str, param: &mut [f32], grads: I)
+    where
+        I: IntoIterator<Item = (usize, f32)>,
+    {
         let n = param.len();
         let (b1, b2, eps, lr, logd) = (self.beta1, self.beta2, self.eps, self.lr, self.log_domain);
-        let m = self.m.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
-        let v = self.v.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
-        let t = self.t.entry(name.to_string()).or_insert(0);
+        if !self.m.contains_key(name) {
+            self.m.insert(name.to_string(), vec![0.0; n]);
+            self.v.insert(name.to_string(), vec![0.0; n]);
+            self.t.insert(name.to_string(), 0);
+        }
+        let m = self.m.get_mut(name).expect("just inserted");
+        let v = self.v.get_mut(name).expect("just inserted");
+        let t = self.t.get_mut(name).expect("just inserted");
         *t += 1;
         let bc1 = 1.0 - b1.powi(*t as i32);
         let bc2 = 1.0 - b2.powi(*t as i32);
-        for &(i, g0) in grads {
+        for (i, g0) in grads {
             // chain rule into the log domain: d/d ln(s) = s · d/ds
             let g = if logd { g0 * param[i] } else { g0 };
             m[i] = b1 * m[i] + (1.0 - b1) * g;
@@ -125,8 +139,7 @@ impl Adam {
     }
 
     pub fn apply_full(&mut self, name: &str, param: &mut [f32], grad: &[f32]) {
-        let grads: Vec<(usize, f32)> = grad.iter().copied().enumerate().collect();
-        self.apply_indices(name, param, &grads);
+        self.apply_indices(name, param, grad.iter().copied().enumerate());
     }
 
     /// Sparse update for per-row weight scales: only the unfrozen rows of
@@ -134,13 +147,12 @@ impl Adam {
     /// only if we update the weights of that channel").
     pub fn apply_rows(&mut self, name: &str, param: &mut [f32], grad_rows: &[f32], idx: &[usize]) {
         assert_eq!(grad_rows.len(), idx.len());
-        let grads: Vec<(usize, f32)> = idx.iter().copied().zip(grad_rows.iter().copied()).collect();
-        self.apply_indices(name, param, &grads);
+        self.apply_indices(name, param, idx.iter().copied().zip(grad_rows.iter().copied()));
     }
 
     pub fn apply_scalar(&mut self, name: &str, param: &mut f32, grad: f32) {
         let mut p = [*param];
-        self.apply_indices(name, &mut p, &[(0, grad)]);
+        self.apply_indices(name, &mut p, [(0usize, grad)]);
         *param = p[0];
     }
 }

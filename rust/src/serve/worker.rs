@@ -21,6 +21,7 @@ use crate::backend::Value;
 use crate::coordinator::binder::{bind_inputs, BindCtx};
 use crate::data::Batch;
 use crate::error::{anyhow, bail, Result};
+use crate::exec::Workspace;
 use crate::graph::{GraphStep, InputKind, Layer, LayerGraph, StepId, StepKind};
 use crate::lower::QuantizedGraph;
 use crate::model::{ParamStore, QParamStore, StateStore};
@@ -55,6 +56,16 @@ pub trait Engine: Send + Sync {
     fn vocab(&self) -> Option<usize>;
     /// Run one batched forward to logits, consuming the input.
     fn forward_batch(&self, x: Value) -> Result<Tensor>;
+
+    /// Run one batched forward over a caller-owned [`Workspace`] — the
+    /// worker hot path.  The returned tensor's buffers may be pooled;
+    /// give them back to `ws` after splitting.  Engines without a
+    /// planned executor fall back to [`Self::forward_batch`] (one input
+    /// clone — the f32 A/B engine does not compete on throughput).
+    fn forward_batch_ws(&self, x: &Value, ws: &mut Workspace) -> Result<Tensor> {
+        let _ = ws;
+        self.forward_batch(x.clone())
+    }
 
     /// The shape of one example (no batch dimension).
     fn example_shape(&self) -> Vec<usize> {
@@ -117,10 +128,18 @@ impl Engine for QuantizedGraph {
     }
 
     fn forward_batch(&self, x: Value) -> Result<Tensor> {
-        // zero-copy entry: the stacked batch moves straight into the
-        // integer engine (the satellite audit that motivated
-        // `forward_owned`)
         self.forward_owned(x)
+    }
+
+    fn forward_batch_ws(&self, x: &Value, ws: &mut Workspace) -> Result<Tensor> {
+        // the planned executor: every activation/code/accumulator buffer
+        // comes from the worker's workspace — zero steady-state allocs
+        let b = x.shape().first().copied().unwrap_or(0);
+        let data = self.forward_into(x, ws)?;
+        Ok(match self.input {
+            InputKind::Image { .. } => ws.tensor(&[b, self.classes], data),
+            InputKind::Tokens { seq } => ws.tensor(&[b, seq, self.classes], data),
+        })
     }
 }
 
@@ -181,7 +200,7 @@ impl Engine for FloatEngine {
         let b = *x.shape().first().ok_or_else(|| anyhow!("empty batch"))?;
         let mut g = self.graph.clone();
         g.batch = b;
-        let step = GraphStep::new(g, &format!("{}_serve_f32_b{b}", self.graph.model), self.id);
+        let step = GraphStep::new(g, &format!("{}_serve_f32_b{b}", self.graph.model), self.id)?;
         let mut batch = Batch { f32s: BTreeMap::new(), i32s: BTreeMap::new(), count: b };
         // move the stacked batch in (no copy); zero labels satisfy the fwd
         // manifest's `y` input without touching the logits
@@ -211,30 +230,46 @@ impl Engine for FloatEngine {
 
 /// Stack per-example inputs into one batched value (`[B, ...]`).  All
 /// examples were validated at submission, so shapes agree; this only
-/// concatenates.
+/// concatenates.  Allocating form of [`stack_examples_ws`].
 pub fn stack_examples(kind: InputKind, examples: &[Value]) -> Result<Value> {
+    let mut ws = Workspace::new();
+    stack_examples_ws(kind, examples, &mut ws)
+}
+
+/// Stack per-example inputs into one batched value over a caller-owned
+/// workspace — the worker hot path; give the value back to `ws` after
+/// the forward consumes it.
+pub fn stack_examples_ws(
+    kind: InputKind,
+    examples: &[Value],
+    ws: &mut Workspace,
+) -> Result<Value> {
     let b = examples.len();
     match kind {
         InputKind::Image { channels, hw } => {
-            let mut data = Vec::with_capacity(b * channels * hw * hw);
-            for v in examples {
-                data.extend_from_slice(&v.f32()?.data);
+            let per = channels * hw * hw;
+            let mut data = ws.take_f32(b * per);
+            for (i, v) in examples.iter().enumerate() {
+                data[i * per..(i + 1) * per].copy_from_slice(&v.f32()?.data);
             }
-            Ok(Value::F32(Tensor { shape: vec![b, channels, hw, hw], data }))
+            Ok(Value::F32(ws.tensor(&[b, channels, hw, hw], data)))
         }
         InputKind::Tokens { seq } => {
-            let mut data = Vec::with_capacity(b * seq);
-            for v in examples {
-                data.extend_from_slice(&v.i32()?.data);
+            let mut data = ws.take_i32(b * seq);
+            for (i, v) in examples.iter().enumerate() {
+                data[i * seq..(i + 1) * seq].copy_from_slice(&v.i32()?.data);
             }
-            Ok(Value::I32(ITensor { shape: vec![b, seq], data }))
+            Ok(Value::I32(ws.itensor(&[b, seq], data)))
         }
     }
 }
 
-/// Split batched logits `[B, ...]` back into `B` per-example tensors of
-/// shape `[...]` (the batch dimension dropped).
-pub fn split_logits(out: Tensor, b: usize) -> Result<Vec<Tensor>> {
+/// Split batched logits `[B, ...]` into `B` per-example tensors of
+/// shape `[...]` (the batch dimension dropped).  The per-example
+/// tensors are freshly allocated — they are the response envelopes that
+/// leave through the oneshots; the batched input buffer stays with the
+/// caller for recycling.
+pub fn split_logits(out: &Tensor, b: usize) -> Result<Vec<Tensor>> {
     if out.shape.first() != Some(&b) || b == 0 {
         bail!("cannot split logits {:?} into {b} examples", out.shape);
     }
@@ -253,14 +288,34 @@ pub fn split_logits(out: Tensor, b: usize) -> Result<Vec<Tensor>> {
 /// Worker loop: consume batches until the batch queue is closed and
 /// drained.  An engine failure on a batch resolves *every* request in it
 /// with the error — no request is left hanging.
+///
+/// Each worker owns one [`Workspace`] reused across micro-batches: the
+/// stacked input, every engine-internal buffer, and the batched logits
+/// all recycle, so after the first batch at a given high-water size the
+/// steady state performs zero heap allocations beyond the per-request
+/// response envelopes.  A shrinking dynamic batch reuses the high-water
+/// buffers; growing past them resizes once and plateaus.
 pub fn run(engine: &Arc<dyn Engine>, batches: &Arc<BoundedQueue<Vec<Request>>>) {
+    let mut ws = Workspace::new();
     while let Some(batch) = batches.pop() {
         let b = batch.len();
         let (inputs, txs): (Vec<Value>, Vec<OneshotSender<Result<Tensor>>>) =
             batch.into_iter().map(|r| (r.input, r.tx)).unzip();
-        let result = stack_examples(engine.input(), &inputs)
-            .and_then(|x| engine.forward_batch(x))
-            .and_then(|y| split_logits(y, b));
+        let result = match stack_examples_ws(engine.input(), &inputs, &mut ws) {
+            Ok(x) => {
+                let y = engine.forward_batch_ws(&x, &mut ws);
+                ws.give_value(x);
+                match y {
+                    Ok(y) => {
+                        let parts = split_logits(&y, b);
+                        ws.give_tensor(y);
+                        parts
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            Err(e) => Err(e),
+        };
         match result {
             Ok(parts) => {
                 for (tx, logits) in txs.into_iter().zip(parts) {
@@ -289,7 +344,7 @@ mod tests {
         let x = stack_examples(kind, &ex).unwrap();
         assert_eq!(x.shape(), &[3, 1, 2, 2]);
         let out = Tensor { shape: vec![3, 5], data: (0..15).map(|v| v as f32).collect() };
-        let parts = split_logits(out, 3).unwrap();
+        let parts = split_logits(&out, 3).unwrap();
         assert_eq!(parts.len(), 3);
         assert_eq!(parts[1].shape, vec![5]);
         assert_eq!(parts[1].data, vec![5.0, 6.0, 7.0, 8.0, 9.0]);
@@ -309,6 +364,6 @@ mod tests {
     #[test]
     fn split_rejects_mismatched_batch() {
         let out = Tensor { shape: vec![3, 5], data: vec![0.0; 15] };
-        assert!(split_logits(out, 4).is_err());
+        assert!(split_logits(&out, 4).is_err());
     }
 }

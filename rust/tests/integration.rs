@@ -415,6 +415,41 @@ fn every_native_model_executes_every_artifact_kind() {
 }
 
 #[test]
+fn execute_ws_reuse_is_bit_identical_to_fresh_execution() {
+    // acceptance for the execution-plan refactor: one workspace reused
+    // across models, artifact kinds, and repeated steps must never
+    // change a single output bit vs the fresh-allocation path
+    let s = session();
+    let mut ws = efqat::exec::Workspace::new();
+    for model in ["mlp", "convnet", "tiny_tf"] {
+        for suffix in ["fp_train", "w8a8_fwd", "w8a8_train_r25", "w8a8_train_lwpn"] {
+            let name = format!("{model}_{suffix}");
+            let step = s.steps.get(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let params = ParamStore::init(&step.manifest, 5);
+            let inputs = generic_inputs(&step.manifest, &params, 23);
+            let (fresh, _) = step.execute_timed(&inputs).unwrap_or_else(|e| panic!("{name}: {e}"));
+            for round in 0..2 {
+                let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+                for (spec, got) in step.manifest.outputs.iter().zip(&outs) {
+                    let want = fresh.get(&spec.name).unwrap();
+                    assert_eq!(got.shape(), want.shape(), "{name}:{} round {round}", spec.name);
+                    match (want, got) {
+                        (Value::F32(a), Value::F32(b)) => {
+                            assert_eq!(a.data, b.data, "{name}:{} round {round}", spec.name);
+                        }
+                        (Value::I32(a), Value::I32(b)) => {
+                            assert_eq!(a.data, b.data, "{name}:{} round {round}", spec.name);
+                        }
+                        _ => panic!("{name}:{}: dtype drift", spec.name),
+                    }
+                }
+                ws.give_values(outs);
+            }
+        }
+    }
+}
+
+#[test]
 fn partial_backward_matches_full_backward_on_unfrozen_rows() {
     // acceptance: r25 (gathered-row) gradients agree with the gathered
     // rows of the r100 (full) gradients to ≤ 1e-5, per site, for every

@@ -85,6 +85,36 @@ fn batched_serving_is_bit_identical_to_int8_eval() {
 }
 
 #[test]
+fn worker_workspace_survives_batch_resizing_bit_identically() {
+    // one worker, waves of different sizes: the worker's reused
+    // workspace sees the dynamic batch grow, shrink, and regrow; every
+    // answer must still be bit-identical to a fresh-allocation forward
+    let engine = Arc::new(fixture("mlp").0);
+    let server = Server::start(
+        engine.clone() as Arc<dyn Engine>,
+        serve_cfg(64, Duration::from_millis(1), 1),
+    );
+    let mut rng = efqat::rng::Pcg64::new(77);
+    for (wave, &count) in [4usize, 17, 1, 9, 33, 2].iter().enumerate() {
+        let examples: Vec<Tensor> = (0..count)
+            .map(|_| Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) })
+            .collect();
+        let tickets: Vec<_> = examples
+            .iter()
+            .map(|x| server.submit(Value::F32(x.clone())).unwrap())
+            .collect();
+        for (x, t) in examples.iter().zip(tickets) {
+            let got = t.wait().unwrap();
+            let want = engine
+                .forward(&Value::F32(Tensor { shape: vec![1, 3, 8, 8], data: x.data.clone() }))
+                .unwrap();
+            assert_eq!(got.data, want.data, "wave {wave} (count {count})");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
 fn concurrent_submitters_get_their_own_logits() {
     let engine = Arc::new(fixture("mlp").0);
     let server = Server::start(

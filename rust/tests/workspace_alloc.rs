@@ -1,0 +1,151 @@
+//! Steady-state allocation-count tests for the planned executors
+//! (RFC `docs/rfcs/0003-exec-plan.md`).
+//!
+//! A counting global allocator (thread-local counters, so parallel
+//! tests cannot pollute each other) proves the headline claim of the
+//! execution-plan refactor: after one warmup iteration over a
+//! [`efqat::exec::Workspace`], the int8 serving forward and the native
+//! train step (forward + frozen-channel-aware partial backward +
+//! positional outputs) perform **zero** heap allocations per
+//! request batch / per step.  The shapes used here stay below the GEMM
+//! threading threshold, so no worker threads (whose stacks the OS
+//! allocates) muddy the count — thread-level scratch is covered by the
+//! `par_rows_scratch` plumbing and the workspace stats assertions.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::Path;
+
+use efqat::backend::native::NativeBackend;
+use efqat::backend::{Backend, Value};
+use efqat::exec::Workspace;
+use efqat::model::{Dtype, Manifest, ParamStore};
+use efqat::rng::Pcg64;
+use efqat::tensor::{ITensor, Tensor};
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Valid inputs for any native manifest without a dataset: initialized
+/// params, sane qparams, random images / zero token ids, first-k
+/// selections (mirrors the integration-test helper).
+fn generic_inputs(man: &Manifest, params: &ParamStore, seed: u64) -> Vec<Value> {
+    let mut rng = Pcg64::new(seed);
+    man.inputs
+        .iter()
+        .map(|spec| match spec.role.as_str() {
+            "param" => Value::F32(params.get(&spec.name).unwrap().clone()),
+            "qparam_sw" => {
+                Value::F32(Tensor { shape: spec.shape.clone(), data: vec![0.05; spec.elems()] })
+            }
+            "qparam_sx" => Value::F32(Tensor::scalar(0.05)),
+            "qparam_zx" => Value::F32(Tensor::scalar(128.0)),
+            "data" => match spec.dtype {
+                Dtype::F32 => Value::F32(Tensor {
+                    shape: spec.shape.clone(),
+                    data: rng.normal_vec(spec.elems(), 1.0),
+                }),
+                Dtype::I32 => Value::I32(ITensor::zeros(&spec.shape)),
+            },
+            "index" => Value::I32(ITensor {
+                shape: spec.shape.clone(),
+                data: (0..spec.shape[0] as i32).collect(),
+            }),
+            "flag" => Value::I32(ITensor { shape: vec![1], data: vec![1] }),
+            other => panic!("unexpected input role {other:?}"),
+        })
+        .collect()
+}
+
+#[test]
+fn int8_serve_forward_is_allocation_free_after_warmup() {
+    for model in ["mlp", "tiny_tf"] {
+        let (g, params, q) = efqat::testing::synth_lowering_fixture(model);
+        let qg = efqat::lower::lower(&g, &params, &q, 8, 8).unwrap();
+        let b = 4usize;
+        let x = match g.input {
+            efqat::graph::InputKind::Image { channels, hw } => {
+                let mut rng = Pcg64::new(3);
+                Value::F32(Tensor {
+                    shape: vec![b, channels, hw, hw],
+                    data: rng.normal_vec(b * channels * hw * hw, 1.0),
+                })
+            }
+            efqat::graph::InputKind::Tokens { seq } => Value::I32(ITensor {
+                shape: vec![b, seq],
+                data: (0..b * seq).map(|i| (i % 64) as i32).collect(),
+            }),
+        };
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let y = qg.forward_into(&x, &mut ws).unwrap();
+            ws.give_f32(y);
+        }
+        let allocs0 = thread_allocs();
+        let misses0 = ws.stats().misses;
+        for _ in 0..8 {
+            let y = qg.forward_into(&x, &mut ws).unwrap();
+            ws.give_f32(y);
+        }
+        let delta = thread_allocs() - allocs0;
+        assert_eq!(delta, 0, "{model}: int8 forward allocated {delta}×/8 in steady state");
+        assert_eq!(ws.stats().misses, misses0, "{model}: workspace pool missed in steady state");
+    }
+}
+
+#[test]
+fn train_step_execution_is_allocation_free_after_warmup() {
+    let backend = NativeBackend::new(Path::new("artifacts"));
+    for artifact in
+        ["mlp_w8a8_train_r25", "convnet_w8a8_train_r25", "tiny_tf_w8a8_train_r25", "mlp_fp_train"]
+    {
+        let step = backend.load(artifact).unwrap();
+        let params = ParamStore::init(&step.manifest, 1);
+        let inputs = generic_inputs(&step.manifest, &params, 7);
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+            ws.give_values(outs);
+        }
+        let allocs0 = thread_allocs();
+        let misses0 = ws.stats().misses;
+        for _ in 0..8 {
+            let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+            ws.give_values(outs);
+        }
+        let delta = thread_allocs() - allocs0;
+        assert_eq!(delta, 0, "{artifact}: train step allocated {delta}×/8 in steady state");
+        assert_eq!(ws.stats().misses, misses0, "{artifact}: pool missed in steady state");
+    }
+}
