@@ -48,3 +48,16 @@ pub fn session(cfg: &Config) -> Session {
 pub fn is_quick(cfg: &Config) -> bool {
     !cfg.bool("full", false)
 }
+
+/// Synthetic mid-grid qparams for bench models — the same builder the
+/// unit and parity tests use (`efqat::testing::synth_qparams`), so
+/// bench fixtures cannot drift from the tested ones.
+pub fn synth_qparams(
+    man: &efqat::model::Manifest,
+    params: &efqat::model::ParamStore,
+    w_bits: u32,
+    a_bits: u32,
+    act_scale: f32,
+) -> efqat::model::QParamStore {
+    efqat::testing::synth_qparams(man, params, w_bits, a_bits, act_scale)
+}

@@ -158,6 +158,7 @@ fn main() {
     let doc: BTreeMap<String, Json> = [
         ("bench".to_string(), Json::Str("serve_latency".to_string())),
         ("model".to_string(), Json::Str(model.clone())),
+        ("kernel".to_string(), Json::Str(efqat::ops::simd::active().name.to_string())),
         ("workers".to_string(), Json::Num(workers as f64)),
         ("wait_ms".to_string(), Json::Num(wait_ms as f64)),
         ("window".to_string(), Json::Num(window as f64)),

@@ -27,8 +27,8 @@ use efqat::graph::{GraphStep, InputKind, StepId, StepKind};
 use efqat::harness::{bench, Table};
 use efqat::json::Json;
 use efqat::lower::lower;
-use efqat::model::{ParamStore, QParamStore, StateStore};
-use efqat::quant::ActQParams;
+use efqat::model::{ParamStore, StateStore};
+use efqat::ops::simd;
 use efqat::rng::Pcg64;
 use efqat::tensor::{ITensor, Tensor};
 
@@ -45,24 +45,23 @@ fn main() {
     let (w_bits, a_bits) = efqat::quant::parse_bits_tag(&bits).expect("bits tag");
     let batches: &[usize] = if quick { &[1, 32] } else { &[1, 8, 32, 128] };
 
+    // the kernel EFQAT_SIMD/auto dispatch resolved for this process —
+    // each timed int8 leg runs twice, dispatched and forced-scalar, so
+    // the SIMD speedup is measured in the same process and gated below
+    let kernel = simd::active().name;
     let mut t = Table::new(
-        &format!("Serving throughput: int8 engine vs fake-quant float fwd, {bits}"),
-        &["model", "batch", "float ex/s", "int8 ex/s", "speedup", "max |Δlogit|"],
+        &format!("Serving throughput: int8 engine ({kernel}) vs fake-quant float fwd, {bits}"),
+        &["model", "batch", "float ex/s", "int8 ex/s", "speedup", "simd/scalar", "max |Δlogit|"],
     );
     let mut report = BTreeMap::new();
     let mut best_speedup_b32 = 0.0f64;
+    let mut best_simd_b8 = 0.0f64;
     for model in &models {
         let base = model_graph(model).unwrap_or_else(|| panic!("{model}: not a native model"));
         let id = StepId { kind: StepKind::Fwd, w_bits, a_bits };
         let man0 = efqat::graph::build_manifest(&base, &format!("{model}_{bits}_fwd"), &id);
         let params = ParamStore::init(&man0, 0);
-        let mut q = QParamStore::default();
-        q.init_weight_scales(&man0, &params, w_bits);
-        // mid-grid zero point, valid for any a_bits (128 at a8, 8 at a4)
-        let zp = ((efqat::quant::qrange_asym(a_bits).1 + 1) / 2) as f32;
-        for s in &man0.wsites {
-            q.act.insert(s.name.clone(), ActQParams { scale: 0.05, zero_point: zp });
-        }
+        let q = common::synth_qparams(&man0, &params, w_bits, a_bits, 0.05);
         // lowered once: i8 weights are frozen here, not per call
         let qg = lower(&base, &params, &q, w_bits, a_bits).unwrap();
 
@@ -128,11 +127,25 @@ fn main() {
                 let y = qg.forward_into(&x, &mut iws).unwrap();
                 iws.give_f32(y);
             });
+            // same GEMMs forced onto the scalar oracle: the SIMD payoff,
+            // measured in-process on identical inputs and workspace state
+            simd::force(Some(0));
+            let mut sws = efqat::exec::Workspace::new();
+            let ss = bench(2, iters, || {
+                let y = qg.forward_into(&x, &mut sws).unwrap();
+                sws.give_f32(y);
+            });
+            simd::force(None);
             let f_ex = b as f64 / fs.mean;
             let i_ex = b as f64 / is.mean;
+            let s_ex = b as f64 / ss.mean;
             let speedup = fs.mean / is.mean;
+            let simd_speedup = ss.mean / is.mean;
             if b >= 32 {
                 best_speedup_b32 = best_speedup_b32.max(speedup);
+            }
+            if b >= 8 {
+                best_simd_b8 = best_simd_b8.max(simd_speedup);
             }
             t.row(&[
                 model.clone(),
@@ -140,12 +153,15 @@ fn main() {
                 format!("{f_ex:.0}"),
                 format!("{i_ex:.0}"),
                 format!("{speedup:.2}x"),
+                format!("{simd_speedup:.2}x"),
                 format!("{dev:.2e}"),
             ]);
             let entry: BTreeMap<String, Json> = [
                 ("float_ex_per_s".to_string(), Json::Num(f_ex)),
                 ("int8_ex_per_s".to_string(), Json::Num(i_ex)),
+                ("int8_scalar_ex_per_s".to_string(), Json::Num(s_ex)),
                 ("speedup".to_string(), Json::Num(speedup)),
+                ("simd_speedup".to_string(), Json::Num(simd_speedup)),
                 ("max_logit_dev".to_string(), Json::Num(dev)),
             ]
             .into_iter()
@@ -164,10 +180,12 @@ fn main() {
     let doc: BTreeMap<String, Json> = [
         ("bench".to_string(), Json::Str("serve_throughput".to_string())),
         ("bits".to_string(), Json::Str(bits.clone())),
+        ("kernel".to_string(), Json::Str(kernel.to_string())),
         ("iters".to_string(), Json::Num(iters as f64)),
         ("batches".to_string(), Json::Arr(batches.iter().map(|&b| Json::Num(b as f64)).collect())),
         ("models".to_string(), Json::Obj(report)),
         ("best_speedup_at_batch_ge_32".to_string(), Json::Num(best_speedup_b32)),
+        ("best_simd_speedup_at_batch_ge_8".to_string(), Json::Num(best_simd_b8)),
     ]
     .into_iter()
     .collect();
@@ -177,4 +195,15 @@ fn main() {
         "north-star check: best int8 speedup at batch ≥ 32 is {best_speedup_b32:.2}x \
          (target ≥ 1.5x on at least one model)"
     );
+    if kernel != "scalar" {
+        println!(
+            "simd check: {kernel} is {best_simd_b8:.2}x the scalar oracle at batch ≥ 8 \
+             (gate ≥ 1.3x)"
+        );
+        assert!(
+            best_simd_b8 >= 1.3,
+            "SIMD kernel {kernel} is only {best_simd_b8:.2}x scalar at batch ≥ 8 — \
+             the dispatched path must beat the oracle by ≥ 1.3x"
+        );
+    }
 }

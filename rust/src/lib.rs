@@ -18,7 +18,9 @@
 //!   cache-blocked threaded matmul, im2col conv2d, layernorm, attention,
 //!   softmax cross-entropy and the Eq. 1–4 fake-quant ops with STE/LSQ
 //!   gradients, each mirroring `python/compile/kernels/ref.py` — plus
-//!   the `u8×i8→i32` serving kernels ([`ops::qmatmul`], [`ops::qconv`]).
+//!   the `u8×i8→i32` serving kernels ([`ops::qmatmul`], [`ops::qconv`])
+//!   whose inner block dot runs on runtime-dispatched SIMD micro-kernels
+//!   ([`ops::simd`]: AVX2 / NEON, scalar oracle, `EFQAT_SIMD` override).
 //! * [`lower`] is the float-train → int8-serve boundary: it compiles a
 //!   trained graph + calibrated qparams into a [`lower::QuantizedGraph`]
 //!   of true integer kernels (weights frozen to per-channel i8 once,

@@ -57,9 +57,13 @@ use crate::ops::qmatmul::{
 use crate::quant::qrange_asym;
 use crate::tensor::Tensor;
 
-/// i32 accumulation is exact for contractions up to 2³¹/(255·127); stay
-/// well inside it.
+/// i32 accumulation is exact for contractions up to
+/// [`crate::ops::qmatmul::I32_EXACT_MAX_K`]; stay well inside it.  The
+/// compile-time check below keeps this guard at least as strict as the
+/// kernels' actual overflow bound, so serving can never reach the
+/// overflowing regime (and `qlinear_fwd_into` debug-asserts the same).
 const MAX_CONTRACTION: usize = 60_000;
+const _: () = assert!(MAX_CONTRACTION <= crate::ops::qmatmul::I32_EXACT_MAX_K);
 
 /// Deepest supported residual nesting.  Skip saves live in a fixed
 /// on-stack array at run time (no per-forward allocation); every repro
@@ -836,6 +840,27 @@ mod tests {
         assert!(err.contains("i8/u8 code domain"), "{err}");
         let err = lower(&g, &params, &QParamStore::default(), 8, 8).unwrap_err().to_string();
         assert!(err.contains("weight scales"), "{err}");
+    }
+
+    #[test]
+    fn absurd_contraction_rejected_at_lowering_not_serve() {
+        // a contraction beyond MAX_CONTRACTION would overflow i32 lanes
+        // at serve time; lower() must refuse it up front (before even
+        // touching weights — the guard is purely geometric)
+        let k = MAX_CONTRACTION + 1;
+        let g = LayerGraph {
+            model: "absurd".into(),
+            batch: 1,
+            input: InputKind::Image { channels: k, hw: 1 },
+            classes: 2,
+            layers: vec![
+                Layer::Flatten,
+                Layer::Linear(LinearSpec { name: "fc".into(), c_in: k, c_out: 2, bias: false }),
+            ],
+        };
+        let params = ParamStore { map: Default::default() };
+        let err = lower(&g, &params, &QParamStore::default(), 8, 8).unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
     }
 
     #[test]

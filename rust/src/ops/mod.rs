@@ -30,6 +30,9 @@
 //!   GEMM with per-channel f32 rescale and its im2col conv lowering,
 //!   executing the codes the fake-quant ops merely simulate (see
 //!   [`crate::lower`] for the graph-level lowering pass).
+//! * [`simd`] — runtime-dispatched SIMD micro-kernels (AVX2 / NEON)
+//!   for the int8 GEMM's inner block dot, with the scalar loop kept as
+//!   the bit-exactness oracle and an `EFQAT_SIMD` override.
 //! * [`norm`] — LayerNorm over the trailing feature axis.
 //! * [`attention`] — scaled-dot-product attention (optionally causal)
 //!   over head-merged `[B, T, D]` layouts.
@@ -46,3 +49,4 @@ pub mod matmul;
 pub mod norm;
 pub mod qconv;
 pub mod qmatmul;
+pub mod simd;

@@ -75,8 +75,7 @@ mod tests {
     use crate::ops::fakequant::{fq_act_tensor, fq_weight_rows};
     use crate::ops::matmul::linear_fwd;
     use crate::ops::qmatmul::{quantize_acts, quantize_weight_rows};
-    use crate::quant::weight_scales;
-    use crate::testing::forall;
+    use crate::testing::{forall, synth_row_scales, wsum_rows};
 
     #[test]
     fn prop_qconv_matches_fakequant_reference() {
@@ -95,13 +94,7 @@ mod tests {
             let w = rng.normal_vec(d.c_out * d.patch(), 1.0);
             let sx = r.uniform_in(1e-2, 0.1);
             let zx = r.uniform_in(20.0, 230.0).round();
-            let amax: Vec<f32> = (0..d.c_out)
-                .map(|o| {
-                    let row = &w[o * d.patch()..(o + 1) * d.patch()];
-                    row.iter().fold(0f32, |a, &v| a.max(v.abs()))
-                })
-                .collect();
-            let sw = weight_scales(&amax, 8);
+            let sw = synth_row_scales(&w, d.c_out, d.patch(), 8);
 
             // float reference: fake-quant, im2col over dequantized values
             let xh = fq_act_tensor(&x, sx, zx, 8);
@@ -132,9 +125,7 @@ mod tests {
         let zx = 77i32;
         let qx = vec![zx as u8; 16];
         let qw: Vec<i8> = (0..2 * 9).map(|i| (i as i8) - 9).collect();
-        let wsum: Vec<i32> = (0..2)
-            .map(|o| qw[o * 9..(o + 1) * 9].iter().map(|&c| c as i32).sum())
-            .collect();
+        let wsum = wsum_rows(&qw, 2);
         let y = qconv_fwd(&qx, &qw, &wsum, zx, &[0.01, 0.02], &d);
         assert!(y.iter().all(|&v| v == 0.0), "{y:?}");
     }

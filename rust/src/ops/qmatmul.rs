@@ -27,6 +27,13 @@
 //! order independent of the batch dimension, so serving an example in a
 //! micro-batch of 64 ([`crate::serve`]) yields the same bits as serving
 //! it alone.
+//!
+//! The innermost block dot product — `u8` codes × `i8` codes over one
+//! `KC` slab — is dispatched through [`crate::ops::simd`]: CPU features
+//! are probed once per process and the fastest exact kernel (AVX2 or
+//! NEON) replaces the scalar loop, which stays registered as the
+//! reference.  Every kernel computes the same exact integer sum, so the
+//! bit-determinism guarantees above hold under any `EFQAT_SIMD` choice.
 
 #![warn(missing_docs)]
 
@@ -36,6 +43,14 @@ use crate::quant::{code_asym, code_sym};
 /// Contraction-dim block.  i8 operands are 4× denser than f32, so a
 /// larger block than the f32 GEMM's still fits the same L1 budget.
 const KC: usize = 512;
+
+/// Largest contraction dim for which i32 accumulation of `u8×i8`
+/// products is exact: `⌊(2³¹−1)/(255·127)⌋ = 66311`.  Every kernel in
+/// [`crate::ops::simd`] (and the zero-point `Σw` reconstruction inside
+/// the `sdot` kernel) is overflow-free up to this bound;
+/// [`crate::lower`] rejects graphs whose contractions exceed it, so
+/// serving never reaches the overflowing regime.
+pub const I32_EXACT_MAX_K: usize = i32::MAX as usize / (255 * 127);
 
 /// Quantize weight rows to their symmetric signed codes (Eq. 3) and
 /// return `(codes, per-row code sums)` — the column-sum term of the
@@ -94,10 +109,13 @@ pub fn qlinear_scratch_len(m: usize, k: usize, n: usize) -> usize {
 /// accumulator scratch of at least [`qlinear_scratch_len`]`(m, k, n)`
 /// elements, so the threaded hot path performs no allocation at all.
 ///
-/// i32 accumulation is exact for `k ≤ 2³¹/(255·127)` (≈ 66k — far above
-/// any repro model; [`crate::lower`] rejects larger contractions), and
+/// i32 accumulation is exact for `k ≤` [`I32_EXACT_MAX_K`] (≈ 66k —
+/// far above any repro model; [`crate::lower`] rejects larger
+/// contractions, and this function debug-asserts the same bound), and
 /// the zero-point correction is applied in i64 before the single f32
-/// rescale per output element.
+/// rescale per output element.  The block dot product runs on whichever
+/// [`crate::ops::simd`] kernel is dispatched — all kernels are
+/// bit-identical, so the output does not depend on the choice.
 #[allow(clippy::too_many_arguments)] // a GEMM ABI: operands, correction, rescale, dims
 pub fn qlinear_fwd_into(
     qx: &[u8],
@@ -117,6 +135,9 @@ pub fn qlinear_fwd_into(
     debug_assert_eq!(wsum.len(), n);
     debug_assert_eq!(scale.len(), n);
     debug_assert_eq!(y.len(), m * n);
+    debug_assert!(k <= I32_EXACT_MAX_K, "k={k} exceeds the exact-i32 bound {I32_EXACT_MAX_K}");
+    // resolve dispatch once per GEMM, outside the worker threads
+    let dot = crate::ops::simd::active().dot;
     par_rows_scratch(y, m, n, k * n, acc_scratch, n, |r0, rows, acc| {
         for (ri, yr) in rows.chunks_mut(n).enumerate() {
             let xr = &qx[(r0 + ri) * k..(r0 + ri + 1) * k];
@@ -126,12 +147,7 @@ pub fn qlinear_fwd_into(
                 let k1 = (k0 + KC).min(k);
                 let xb = &xr[k0..k1];
                 for (o, ao) in acc.iter_mut().enumerate() {
-                    let wb = &qw[o * k + k0..o * k + k1];
-                    let mut a = 0i32;
-                    for i in 0..xb.len() {
-                        a += xb[i] as i32 * wb[i] as i32;
-                    }
-                    *ao += a;
+                    *ao += dot(xb, &qw[o * k + k0..o * k + k1]);
                 }
                 k0 = k1;
             }
@@ -171,8 +187,7 @@ mod tests {
     use super::*;
     use crate::ops::fakequant::{fq_act_tensor, fq_weight_rows};
     use crate::ops::matmul::linear_fwd;
-    use crate::quant::weight_scales;
-    use crate::testing::forall;
+    use crate::testing::{forall, rand_act_codes, rand_weight_codes, synth_row_scales, wsum_rows};
 
     /// The acceptance-level identity: the integer GEMM over codes must
     /// match the f32 GEMM over the dequantized fake-quant values.
@@ -187,12 +202,7 @@ mod tests {
             let b = rng.normal_vec(n, 0.5);
             let sx = r.uniform_in(1e-2, 0.1);
             let zx = r.uniform_in(0.0, 200.0).round();
-            let sw = {
-                let amax: Vec<f32> = (0..n)
-                    .map(|o| w[o * k..(o + 1) * k].iter().fold(0f32, |a, &v| a.max(v.abs())))
-                    .collect();
-                weight_scales(&amax, bits)
-            };
+            let sw = synth_row_scales(&w, n, k, bits);
 
             // float reference: fake-quant then dense f32 GEMM
             let xh = fq_act_tensor(&x, sx, zx, bits);
@@ -243,11 +253,9 @@ mod tests {
         // the parallel result must equal a naive single-pass sum exactly
         let (m, k, n) = (64, 300, 48);
         let mut rng = crate::rng::Pcg64::new(9);
-        let qx: Vec<u8> = (0..m * k).map(|_| (rng.uniform() * 255.0) as u8).collect();
-        let qw: Vec<i8> = (0..n * k).map(|_| ((rng.uniform() - 0.5) * 254.0) as i8).collect();
-        let wsum: Vec<i32> = (0..n)
-            .map(|o| qw[o * k..(o + 1) * k].iter().map(|&c| c as i32).sum())
-            .collect();
+        let qx = rand_act_codes(&mut rng, m * k);
+        let qw = rand_weight_codes(&mut rng, n * k);
+        let wsum = wsum_rows(&qw, n);
         let scale = vec![1e-4f32; n];
         let got = qlinear_fwd(&qx, &qw, &wsum, 128, &scale, None, m, k, n);
         for b in 0..m {

@@ -1,0 +1,100 @@
+//! NEON `u8×i8→i32` block dots for aarch64: a baseline widening
+//! multiply-accumulate kernel plus an SDOT kernel on `dotprod` CPUs.
+//!
+//! **`neon-mlal`** mirrors the AVX2 widen-then-multiply shape with core
+//! NEON only (available on every aarch64 CPU): `vmovl_u8` zero-extends
+//! the activation codes to i16 (0..255 fits), `vmovl_s8` sign-extends
+//! the weight codes, and `vmlal_s16` accumulates the exact i16×i16
+//! products into i32 lanes.
+//!
+//! **`neon-dotprod`** uses the ARMv8.2 `sdot` instruction, which only
+//! exists in same-signed u8×u8 / i8×i8 forms (the mixed-sign `usdot`
+//! needs the rarer `i8mm` extension).  Signs are reconciled by shifting
+//! the activation domain: `x ^ 0x80` reinterpreted as i8 equals
+//! `x − 128`, so
+//!
+//! ```text
+//! Σ x·w = Σ (x−128)·w + 128·Σ w
+//! ```
+//!
+//! with `Σ w` accumulated in the same loop by a second `sdot` against a
+//! ones vector.  Both terms stay inside i32 for
+//! `k ≤` [`crate::ops::qmatmul::I32_EXACT_MAX_K`] (`|Σ(x−128)·w| ≤
+//! 128·127·k` and `|128·Σw| ≤ 128·127·k`, whose sum is the exact
+//! `|Σ x·w| ≤ 255·127·k` bound), so the reconstruction is exact and
+//! bit-identical to the scalar oracle.  Tails (`k % lane`) run the
+//! scalar loop in the raw domain.
+
+use crate::ops::simd::QGemmKernel;
+
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::*;
+
+/// Core-NEON widening kernel — registered on every aarch64 CPU.
+pub(super) const NEON_MLAL: QGemmKernel =
+    QGemmKernel { name: "neon-mlal", lanes: 8, dot: dot_mlal };
+
+/// SDOT kernel — registered only when
+/// `is_aarch64_feature_detected!("dotprod")` holds.
+pub(super) const NEON_DOTPROD: QGemmKernel =
+    QGemmKernel { name: "neon-dotprod", lanes: 16, dot: dot_dotprod };
+
+fn dot_mlal(x: &[u8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    // SAFETY: only reachable through the dispatch registry, which
+    // registers this kernel after `is_aarch64_feature_detected!("neon")`.
+    unsafe { dot_mlal_impl(x, w) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_mlal_impl(x: &[u8], w: &[i8]) -> i32 {
+    let n = x.len();
+    let mut acc0 = vdupq_n_s32(0);
+    let mut acc1 = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x16 = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(x.as_ptr().add(i))));
+        let w16 = vmovl_s8(vld1_s8(w.as_ptr().add(i)));
+        acc0 = vmlal_s16(acc0, vget_low_s16(x16), vget_low_s16(w16));
+        acc1 = vmlal_s16(acc1, vget_high_s16(x16), vget_high_s16(w16));
+        i += 8;
+    }
+    let mut a = vaddvq_s32(vaddq_s32(acc0, acc1));
+    while i < n {
+        a += x[i] as i32 * w[i] as i32;
+        i += 1;
+    }
+    a
+}
+
+fn dot_dotprod(x: &[u8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    // SAFETY: only reachable through the dispatch registry, which
+    // registers this kernel after
+    // `is_aarch64_feature_detected!("dotprod")`.
+    unsafe { dot_dotprod_impl(x, w) }
+}
+
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn dot_dotprod_impl(x: &[u8], w: &[i8]) -> i32 {
+    let n = x.len();
+    let off = vdupq_n_u8(0x80);
+    let ones = vdupq_n_s8(1);
+    let mut acc = vdupq_n_s32(0); // Σ (x−128)·w
+    let mut wsum = vdupq_n_s32(0); // Σ w over the vectorized prefix
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let xv = vld1q_u8(x.as_ptr().add(i));
+        let wv = vld1q_s8(w.as_ptr().add(i));
+        let xs = vreinterpretq_s8_u8(veorq_u8(xv, off));
+        acc = vdotq_s32(acc, xs, wv);
+        wsum = vdotq_s32(wsum, ones, wv);
+        i += 16;
+    }
+    let mut a = vaddvq_s32(acc) + 128 * vaddvq_s32(wsum);
+    while i < n {
+        a += x[i] as i32 * w[i] as i32;
+        i += 1;
+    }
+    a
+}

@@ -1,0 +1,217 @@
+//! SIMD micro-kernels for the int8 serving GEMM, behind runtime CPU
+//! dispatch.
+//!
+//! The hot loop of [`crate::ops::qmatmul::qlinear_fwd_into`] (and the
+//! im2col-fed [`crate::ops::qconv`], which funnels into it) is a block
+//! dot product over `u8` activation codes × `i8` weight codes.  This
+//! module owns that inner loop as a table of interchangeable kernels:
+//!
+//! | kernel         | arch            | lanes | technique |
+//! |----------------|-----------------|-------|-----------|
+//! | `scalar`       | any             | 1     | the reference loop — the bit-exactness oracle |
+//! | `avx2`         | x86_64 + avx2   | 16    | `cvtepu8`/`cvtepi8` widen → `madd_epi16` → i32 lanes |
+//! | `neon-mlal`    | aarch64         | 8     | `vmovl` widen → `vmlal_s16` → i32 lanes |
+//! | `neon-dotprod` | aarch64 + dotprod | 16  | `sdot` over `x−128` plus a `128·Σw` reconstruction |
+//!
+//! Every kernel computes the *exact* integer sum — no saturating
+//! intermediates (the `_mm256_maddubs_epi16` i16 path would clip at
+//! `2·255·127 > i16::MAX`, so no kernel uses it) and i32 lane
+//! accumulation that is exact up to the
+//! [`crate::ops::qmatmul::I32_EXACT_MAX_K`] contraction bound enforced
+//! at lowering time.  Integer addition is associative, so every kernel
+//! returns the same i32 as the scalar oracle bit-for-bit, and therefore
+//! the same f32 logits after the per-channel rescale —
+//! `tests/simd_parity.rs` holds each kernel to that standard over an
+//! adversarial shape/value grid.
+//!
+//! Dispatch is resolved once per process (like `EFQAT_THREADS`): the
+//! registry probes `is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!` at first use, and the `EFQAT_SIMD`
+//! environment variable picks the entry — `auto` (default: fastest
+//! available), `off` (the scalar oracle; `scalar` is accepted too),
+//! `avx2`, or `neon`.  A value naming a kernel this CPU cannot run
+//! falls back to `off`, and garbage falls back to `auto`, mirroring the
+//! defensive `EFQAT_THREADS` parse.  Tests and benches that need to
+//! compare kernels *within* one process bypass the env with [`force`]:
+//!
+//! ```
+//! use efqat::ops::simd;
+//!
+//! simd::force(Some(0)); // index 0 is always the scalar oracle
+//! assert_eq!(simd::active().name, "scalar");
+//! let y = efqat::ops::qmatmul::qlinear_fwd(&[1, 2], &[3, 4], &[7], 0, &[1.0], None, 1, 2, 1);
+//! assert_eq!(y, vec![11.0]);
+//! simd::force(None); // back to EFQAT_SIMD / auto dispatch
+//! ```
+//!
+//! Kernels are plain `fn` pointers over borrowed slices: calling one
+//! allocates nothing, so the serving path's zero-allocation contract
+//! (`tests/workspace_alloc.rs`) holds under every dispatch choice.
+
+#![warn(missing_docs)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "aarch64")]
+mod aarch64;
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// A block dot product over equal-length code slices:
+/// `Σ_i x[i]·w[i]` with exact i32 accumulation.
+pub type DotFn = fn(&[u8], &[i8]) -> i32;
+
+/// One entry of the int8 GEMM kernel table.
+#[derive(Clone, Copy)]
+pub struct QGemmKernel {
+    /// Stable kernel name (`scalar`, `avx2`, `neon-mlal`, …) — what
+    /// `EFQAT_SIMD` matches against and what diagnostics print.
+    pub name: &'static str,
+    /// SIMD lane width in code elements (1 for the scalar oracle).
+    /// The parity suite derives its adversarial `k` grid from this.
+    pub lanes: usize,
+    /// The block dot product consumed by
+    /// [`crate::ops::qmatmul::qlinear_fwd_into`].
+    pub dot: DotFn,
+}
+
+/// Sentinel for "no forced kernel" in [`FORCED`].
+const UNFORCED: usize = usize::MAX;
+
+/// Test/bench override, set through [`force`].
+static FORCED: AtomicUsize = AtomicUsize::new(UNFORCED);
+
+/// The kernels this CPU can run, probed once per process.  Index 0 is
+/// always the scalar oracle; entries are ordered slowest → fastest, so
+/// `auto` dispatch is the last entry.
+pub fn kernels() -> &'static [QGemmKernel] {
+    static REGISTRY: OnceLock<Vec<QGemmKernel>> = OnceLock::new();
+    REGISTRY
+        .get_or_init(|| {
+            let mut v = vec![scalar::KERNEL];
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                v.push(x86::AVX2);
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    v.push(aarch64::NEON_MLAL);
+                }
+                if std::arch::is_aarch64_feature_detected!("dotprod") {
+                    v.push(aarch64::NEON_DOTPROD);
+                }
+            }
+            v
+        })
+        .as_slice()
+}
+
+/// Resolve an `EFQAT_SIMD` value against a kernel table (index into
+/// it).  Pure so the selection rules are unit-testable on any machine.
+fn parse_choice(v: Option<&str>, ks: &[QGemmKernel]) -> usize {
+    let auto = ks.len() - 1;
+    let family = |prefix: &str| ks.iter().rposition(|k| k.name.starts_with(prefix)).unwrap_or(0);
+    match v.map(str::trim) {
+        Some(s) if s.eq_ignore_ascii_case("off") || s.eq_ignore_ascii_case("scalar") => 0,
+        Some(s) if s.eq_ignore_ascii_case("avx2") => family("avx2"),
+        Some(s) if s.eq_ignore_ascii_case("neon") => family("neon"),
+        // unset / "auto" / garbage all mean auto, like EFQAT_THREADS
+        _ => auto,
+    }
+}
+
+/// The `EFQAT_SIMD`-selected kernel index, resolved once per process.
+fn env_choice() -> usize {
+    static IDX: OnceLock<usize> = OnceLock::new();
+    *IDX.get_or_init(|| parse_choice(std::env::var("EFQAT_SIMD").ok().as_deref(), kernels()))
+}
+
+/// The kernel the int8 GEMM dispatches to right now: the [`force`]d
+/// entry if one is set, else the `EFQAT_SIMD`/auto choice.
+pub fn active() -> &'static QGemmKernel {
+    let ks = kernels();
+    let f = FORCED.load(Ordering::SeqCst);
+    let i = if f < ks.len() { f } else { env_choice() };
+    &ks[i]
+}
+
+/// Force dispatch to [`kernels`]`()[idx]` (process-wide), or restore
+/// the `EFQAT_SIMD`/auto choice with `None`.  For tests and benches
+/// that compare kernels within one process — e.g. the differential
+/// oracle suite forces index 0 (always the scalar reference) and each
+/// detected SIMD kernel in turn.  Panics on an out-of-range index: only
+/// kernels this CPU was probed to support can ever run.
+pub fn force(idx: Option<usize>) {
+    let v = match idx {
+        Some(i) => {
+            assert!(i < kernels().len(), "simd::force({i}): only {} kernels", kernels().len());
+            i
+        }
+        None => UNFORCED,
+    };
+    FORCED.store(v, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(names: &[&'static str]) -> Vec<QGemmKernel> {
+        fn nop(_: &[u8], _: &[i8]) -> i32 {
+            0
+        }
+        names.iter().map(|&n| QGemmKernel { name: n, lanes: 1, dot: nop }).collect()
+    }
+
+    #[test]
+    fn registry_always_leads_with_the_scalar_oracle() {
+        let ks = kernels();
+        assert!(!ks.is_empty());
+        assert_eq!(ks[0].name, "scalar");
+        assert_eq!(ks[0].lanes, 1);
+        let mut names: Vec<_> = ks.iter().map(|k| k.name).collect();
+        names.dedup();
+        assert_eq!(names.len(), ks.len(), "duplicate kernel names: {names:?}");
+    }
+
+    #[test]
+    fn env_values_select_the_documented_kernels() {
+        let x86 = fake(&["scalar", "avx2"]);
+        assert_eq!(parse_choice(Some("off"), &x86), 0);
+        assert_eq!(parse_choice(Some("scalar"), &x86), 0);
+        assert_eq!(parse_choice(Some("avx2"), &x86), 1);
+        assert_eq!(parse_choice(Some("auto"), &x86), 1);
+        assert_eq!(parse_choice(None, &x86), 1);
+        // an unavailable family falls back to the scalar oracle
+        assert_eq!(parse_choice(Some("neon"), &x86), 0);
+        // garbage means auto, mirroring the EFQAT_THREADS parse
+        assert_eq!(parse_choice(Some("avx512"), &x86), 1);
+        assert_eq!(parse_choice(Some(""), &x86), 1);
+
+        // "neon" picks the best neon kernel the CPU offers
+        let arm = fake(&["scalar", "neon-mlal", "neon-dotprod"]);
+        assert_eq!(parse_choice(Some("neon"), &arm), 2);
+        assert_eq!(parse_choice(Some("auto"), &arm), 2);
+        assert_eq!(parse_choice(Some("avx2"), &arm), 0);
+        let arm_old = fake(&["scalar", "neon-mlal"]);
+        assert_eq!(parse_choice(Some("neon"), &arm_old), 1);
+    }
+
+    #[test]
+    fn every_registered_kernel_matches_the_oracle_on_smoke_shapes() {
+        // the full adversarial grid lives in tests/simd_parity.rs; this
+        // in-crate smoke check keeps `cargo test --lib` self-contained
+        let ks = kernels();
+        let mut rng = crate::rng::Pcg64::new(0x51_3d);
+        for k in ks {
+            for n in [0usize, 1, 7, 16, 33, 512] {
+                let x: Vec<u8> = (0..n).map(|_| (rng.below(256)) as u8).collect();
+                let w: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+                assert_eq!((k.dot)(&x, &w), (ks[0].dot)(&x, &w), "{} n={n}", k.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! The scalar `u8×i8→i32` block dot — the bit-exactness oracle.
+//!
+//! This is the exact inner loop the int8 GEMM ran before the SIMD
+//! dispatch layer existed, retained verbatim: every SIMD kernel in this
+//! module tree is tested against it (`tests/simd_parity.rs`) and must
+//! return the *same i32*, not merely a close one.  Integer addition is
+//! associative, so any kernel that computes the full-precision products
+//! and accumulates them in (at least) i32 lanes agrees with this loop
+//! bit-for-bit regardless of summation order.
+
+use crate::ops::simd::QGemmKernel;
+
+/// The scalar reference kernel — always registered, always index 0 of
+/// [`crate::ops::simd::kernels`].
+pub(super) const KERNEL: QGemmKernel = QGemmKernel { name: "scalar", lanes: 1, dot };
+
+/// `Σ_i x[i]·w[i]` over equal-length code slices, in plain i32.
+fn dot(x: &[u8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut a = 0i32;
+    for i in 0..x.len() {
+        a += x[i] as i32 * w[i] as i32;
+    }
+    a
+}

@@ -1,0 +1,71 @@
+//! AVX2 `u8×i8→i32` block dot for x86_64.
+//!
+//! The classic int8 instruction here is `_mm256_maddubs_epi16` (u8×i8
+//! pairs summed into i16 lanes), but its i16 intermediate *saturates*:
+//! a pair can reach `2·255·127 = 64770 > i16::MAX`, silently clipping —
+//! which would break the bit-exactness contract against the scalar
+//! oracle.  So this kernel widens first and multiplies second:
+//!
+//! ```text
+//! 16 u8 ──cvtepu8──► 16 i16 (zero-extended, 0..255)
+//! 16 i8 ──cvtepi8──► 16 i16 (sign-extended, −128..127)
+//!        ──madd_epi16──► 8 i32 lanes (a0·b0 + a1·b1, max 2·255·127 ≪ 2³¹)
+//! ```
+//!
+//! Every intermediate holds the exact product, i32 lane accumulation is
+//! exact for `k ≤` [`crate::ops::qmatmul::I32_EXACT_MAX_K`] (enforced at
+//! lowering time), and integer addition is associative — so the result
+//! equals the scalar oracle bit-for-bit.  The `k % 16` tail runs the
+//! scalar loop.
+
+use crate::ops::simd::QGemmKernel;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// The AVX2 kernel — registered only when
+/// `is_x86_feature_detected!("avx2")` holds.
+pub(super) const AVX2: QGemmKernel = QGemmKernel { name: "avx2", lanes: 16, dot };
+
+fn dot(x: &[u8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    // SAFETY: this kernel is only reachable through the dispatch
+    // registry, which registers it after `is_x86_feature_detected!`
+    // confirmed AVX2 at startup.
+    unsafe { dot_impl(x, w) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_impl(x: &[u8], w: &[i8]) -> i32 {
+    let n = x.len();
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    // two independent accumulator chains hide the madd/add latency
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let x0 = _mm256_cvtepu8_epi16(_mm_loadu_si128(xp.add(i).cast()));
+        let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp.add(i).cast()));
+        acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(x0, w0));
+        let x1 = _mm256_cvtepu8_epi16(_mm_loadu_si128(xp.add(i + 16).cast()));
+        let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp.add(i + 16).cast()));
+        acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(x1, w1));
+        i += 32;
+    }
+    if i + 16 <= n {
+        let x0 = _mm256_cvtepu8_epi16(_mm_loadu_si128(xp.add(i).cast()));
+        let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp.add(i).cast()));
+        acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(x0, w0));
+        i += 16;
+    }
+    let acc = _mm256_add_epi32(acc0, acc1);
+    let q = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+    let q = _mm_add_epi32(q, _mm_unpackhi_epi64(q, q));
+    let q = _mm_add_epi32(q, _mm_shuffle_epi32::<1>(q));
+    let mut a = _mm_cvtsi128_si32(q);
+    while i < n {
+        a += x[i] as i32 * w[i] as i32;
+        i += 1;
+    }
+    a
+}

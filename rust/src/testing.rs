@@ -25,26 +25,79 @@ pub fn fvec(rng: &mut Pcg64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
     (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
 }
 
+/// Seeded random activation codes — the full `u8` domain `0..=255`,
+/// including the saturated endpoints.
+pub fn rand_act_codes(rng: &mut Pcg64, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Seeded random weight codes over the symmetric int8 grid
+/// `−127..=127` (the code domain [`crate::quant::code_sym`] produces —
+/// `−128` is never a valid weight code).
+pub fn rand_weight_codes(rng: &mut Pcg64, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+}
+
+/// Per-row code sums of a `[rows, k]` weight-code matrix — the
+/// zero-point correction term [`crate::ops::qmatmul::quantize_weight_rows`]
+/// precomputes at lowering time, rebuilt here for synthetic-code tests.
+pub fn wsum_rows(qw: &[i8], rows: usize) -> Vec<i32> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let k = qw.len() / rows;
+    debug_assert_eq!(qw.len(), rows * k);
+    (0..rows).map(|r| qw[r * k..(r + 1) * k].iter().map(|&c| c as i32).sum()).collect()
+}
+
+/// Per-row symmetric weight scales (Eq. 4) for a `[rows, row_size]` f32
+/// matrix: the row-amax fold + [`crate::quant::weight_scales`] recipe
+/// previously duplicated across the qmatmul/qconv/parity tests.
+pub fn synth_row_scales(w: &[f32], rows: usize, row_size: usize, bits: u32) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rows * row_size);
+    let amax: Vec<f32> = (0..rows)
+        .map(|r| w[r * row_size..(r + 1) * row_size].iter().fold(0f32, |a, &v| a.max(v.abs())))
+        .collect();
+    crate::quant::weight_scales(&amax, bits)
+}
+
+/// Synthetic-but-valid qparams for a manifest's weight sites: PTQ
+/// weight scales from the real params plus mid-grid activation qparams
+/// (`Z_x = 128` at a8, `8` at a4).  One definition for the `lower.rs`
+/// units, the parity/serve tests, and the serve benches, so the
+/// fixtures cannot drift from each other.
+pub fn synth_qparams(
+    man: &crate::model::Manifest,
+    params: &crate::model::ParamStore,
+    w_bits: u32,
+    a_bits: u32,
+    act_scale: f32,
+) -> crate::model::QParamStore {
+    let zp = ((crate::quant::qrange_asym(a_bits).1 + 1) / 2) as f32;
+    let mut q = crate::model::QParamStore::default();
+    q.init_weight_scales(man, params, w_bits);
+    for s in &man.wsites {
+        q.act.insert(
+            s.name.clone(),
+            crate::quant::ActQParams { scale: act_scale, zero_point: zp },
+        );
+    }
+    q
+}
+
 /// Synthetic-but-valid int8-lowering inputs for a native model: real
 /// weights from the init distribution, PTQ weight scales, and mid-grid
-/// activation qparams (`S_x = 0.05`, `Z_x = 128`).  One definition for
-/// the `lower.rs` units, the serve tests, and the serve benches, so the
-/// fixtures cannot drift from each other.
+/// activation qparams (`S_x = 0.05`, `Z_x = 128`) via [`synth_qparams`].
 pub fn synth_lowering_fixture(
     model: &str,
 ) -> (crate::graph::LayerGraph, crate::model::ParamStore, crate::model::QParamStore) {
     use crate::graph::{build_manifest, StepId, StepKind};
-    use crate::quant::ActQParams;
 
     let g = crate::backend::native::model_graph(model)
         .unwrap_or_else(|| panic!("{model}: not a native model"));
     let man = build_manifest(&g, "fwd", &StepId { kind: StepKind::Fwd, w_bits: 8, a_bits: 8 });
     let params = crate::model::ParamStore::init(&man, 1);
-    let mut q = crate::model::QParamStore::default();
-    q.init_weight_scales(&man, &params, 8);
-    for s in &man.wsites {
-        q.act.insert(s.name.clone(), ActQParams { scale: 0.05, zero_point: 128.0 });
-    }
+    let q = synth_qparams(&man, &params, 8, 8, 0.05);
     (g, params, q)
 }
 

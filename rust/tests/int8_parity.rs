@@ -18,8 +18,9 @@ use efqat::coordinator::{calibrate, evaluate, evaluate_int8, Session};
 use efqat::graph::InputKind;
 use efqat::lower::{lower, lower_native, QuantizedGraph};
 use efqat::model::{ParamStore, QParamStore, StateStore};
-use efqat::quant::{code_asym, fq_sym, weight_scales};
+use efqat::quant::{code_asym, fq_sym};
 use efqat::rng::Pcg64;
+use efqat::testing::{synth_qparams, synth_row_scales};
 use efqat::tensor::argmax;
 
 const MODELS: [&str; 3] = ["mlp", "convnet", "tiny_tf"];
@@ -188,10 +189,7 @@ fn quantize_dequantize_roundtrip_error_bounded_per_element() {
         let rows = 1 + rng.below(6);
         let rs = 1 + rng.below(64);
         let w = rng.normal_vec(rows * rs, 1.5);
-        let amax: Vec<f32> = (0..rows)
-            .map(|r| w[r * rs..(r + 1) * rs].iter().fold(0f32, |a, &v| a.max(v.abs())))
-            .collect();
-        let sw = weight_scales(&amax, 8);
+        let sw = synth_row_scales(&w, rows, rs, 8);
         for r in 0..rows {
             for i in 0..rs {
                 let v = w[r * rs + i];
@@ -225,11 +223,7 @@ fn lowered_engine_freezes_weights_once() {
         &efqat::graph::StepId { kind: efqat::graph::StepKind::Fwd, w_bits: 8, a_bits: 8 },
     );
     let params = ParamStore::init(&man, 0);
-    let mut q = QParamStore::default();
-    q.init_weight_scales(&man, &params, 8);
-    for s in &man.wsites {
-        q.act.insert(s.name.clone(), efqat::quant::ActQParams { scale: 0.05, zero_point: 128.0 });
-    }
+    let q = synth_qparams(&man, &params, 8, 8, 0.05);
     let qg: QuantizedGraph = lower(&g, &params, &q, 8, 8).unwrap();
     assert_eq!(qg.quantized_weights(), n_expected);
 }

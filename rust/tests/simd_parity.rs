@@ -1,0 +1,196 @@
+//! Differential oracle suite for the SIMD int8 GEMM kernels.
+//!
+//! Every kernel the dispatch registry offers on this CPU must agree
+//! with the scalar oracle (`kernels()[0]`) *bit-for-bit* — identical
+//! i32 dot products and identical f32 GEMM outputs, not merely close
+//! ones — over a seeded adversarial grid: contraction lengths around
+//! each kernel's lane width (tails!), single-row batches, output widths
+//! straddling the `par_rows` thread-split boundary, every interesting
+//! zero point, all-saturated codes, and empty inputs.  The end-to-end
+//! leg checks that whole-model serving (logits and `evaluate_int8`
+//! metrics) is invariant under the dispatch choice for all three native
+//! models.
+//!
+//! Dot-level checks call the kernel function pointers directly.  Tests
+//! that exercise the *dispatched* path instead go through
+//! [`efqat::ops::simd::force`], which is process-global state — those
+//! tests serialize on a mutex so the harness's default parallelism
+//! cannot interleave forced kernels.
+
+use std::sync::Mutex;
+
+use efqat::backend::Value;
+use efqat::cfg::Config;
+use efqat::coordinator::evaluate_int8;
+use efqat::coordinator::tasks::test_loader;
+use efqat::graph::InputKind;
+use efqat::lower::lower;
+use efqat::ops::qmatmul::{qlinear_fwd, I32_EXACT_MAX_K};
+use efqat::ops::simd::{active, force, kernels};
+use efqat::rng::Pcg64;
+use efqat::tensor::{ITensor, Tensor};
+use efqat::testing::{rand_act_codes, rand_weight_codes, synth_lowering_fixture, wsum_rows};
+
+/// Serializes every test that touches the process-global [`force`]
+/// override.  Poisoning is recovered: a failed parity test must not
+/// cascade into "poisoned lock" noise in the remaining tests.
+static DISPATCH: Mutex<()> = Mutex::new(());
+
+fn dispatch_lock() -> std::sync::MutexGuard<'static, ()> {
+    DISPATCH.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The adversarial contraction lengths for a kernel: everything around
+/// its lane width (empty, scalar tail only, one-short, exact, one-over,
+/// a multi-vector run with a tail) plus a full cache block.
+fn k_grid(lanes: usize) -> Vec<usize> {
+    let mut ks = vec![0, 1, lanes.saturating_sub(1), lanes, lanes + 1, 3 * lanes + 2, 512];
+    ks.sort_unstable();
+    ks.dedup();
+    ks
+}
+
+#[test]
+fn dot_matches_scalar_oracle_on_adversarial_grid() {
+    let ks = kernels();
+    let oracle = ks[0].dot;
+    for kern in ks {
+        for klen in k_grid(kern.lanes) {
+            // seeded random codes over the full domains, several draws
+            let mut rng = Pcg64::new(0xd07 ^ klen as u64);
+            for case in 0..8 {
+                let x = rand_act_codes(&mut rng, klen);
+                let w = rand_weight_codes(&mut rng, klen);
+                assert_eq!((kern.dot)(&x, &w), oracle(&x, &w), "{} k={klen} c={case}", kern.name);
+            }
+            // all-saturated codes: the worst-magnitude products, where a
+            // saturating i16 intermediate (maddubs-style) would clip
+            let hi = vec![255u8; klen];
+            for wv in [127i8, -127] {
+                let w = vec![wv; klen];
+                assert_eq!((kern.dot)(&hi, &w), oracle(&hi, &w), "{} k={klen} w={wv}", kern.name);
+            }
+            // alternating signs: partial cancellation across lanes
+            let w: Vec<i8> = (0..klen).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect();
+            assert_eq!((kern.dot)(&hi, &w), oracle(&hi, &w), "{} k={klen} ±127", kern.name);
+        }
+    }
+}
+
+#[test]
+fn dot_is_exact_at_the_i32_bound() {
+    // at k = I32_EXACT_MAX_K with the worst-case codes the exact sum is
+    // within a few products of i32::MIN — any kernel that widens wrong,
+    // saturates, or mis-reconstructs the sdot sign trick breaks here
+    let k = I32_EXACT_MAX_K;
+    let x = vec![255u8; k];
+    let w = vec![-127i8; k];
+    let want = -(255i64 * 127 * k as i64);
+    assert!(want >= i32::MIN as i64, "test premise: bound fits i32");
+    for kern in kernels() {
+        assert_eq!((kern.dot)(&x, &w), want as i32, "{}", kern.name);
+    }
+}
+
+#[test]
+fn gemm_outputs_bit_identical_across_kernels() {
+    let _g = dispatch_lock();
+    let ks = kernels();
+    // n = 64 stays under the par_rows split at k=512/m=7; n = 160
+    // crosses it — both sides of the threading boundary are covered
+    for m in [1usize, 2, 7] {
+        for klen in k_grid(ks.iter().map(|k| k.lanes).max().unwrap()) {
+            for n in [1usize, 64, 160] {
+                for zx in [0i32, 128, 255] {
+                    let mut rng = Pcg64::new((m * 31 + klen * 7 + n) as u64 ^ zx as u64);
+                    let qx = rand_act_codes(&mut rng, m * klen);
+                    let qw = rand_weight_codes(&mut rng, n * klen);
+                    let wsum = wsum_rows(&qw, n);
+                    let scale: Vec<f32> = (0..n).map(|_| rng.uniform_in(1e-4, 1e-2)).collect();
+                    let bias: Vec<f32> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+
+                    force(Some(0));
+                    let want = qlinear_fwd(&qx, &qw, &wsum, zx, &scale, Some(&bias), m, klen, n);
+                    for idx in 1..ks.len() {
+                        force(Some(idx));
+                        let got = qlinear_fwd(&qx, &qw, &wsum, zx, &scale, Some(&bias), m, klen, n);
+                        assert_eq!(got, want, "{} m={m} k={klen} n={n} zx={zx}", ks[idx].name);
+                    }
+                    force(None);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_gemm_is_empty_under_every_kernel() {
+    let _g = dispatch_lock();
+    for idx in 0..kernels().len() {
+        force(Some(idx));
+        assert!(qlinear_fwd(&[], &[], &[], 0, &[], None, 0, 16, 0).is_empty());
+        assert!(qlinear_fwd(&[], &[], &[], 128, &[], None, 0, 0, 0).is_empty());
+        // m>0 with k=0: pure zero-point/bias path, no dot calls at all
+        let y = qlinear_fwd(&[], &[], &[0, 0], 128, &[0.5, 0.5], None, 3, 0, 2);
+        assert_eq!(y, vec![0.0; 6]);
+        force(None);
+    }
+}
+
+#[test]
+fn serve_logits_and_eval_metrics_invariant_under_dispatch() {
+    let _g = dispatch_lock();
+    let ks = kernels();
+    let auto = ks.len() - 1; // what EFQAT_SIMD=auto resolves to
+    let mut cfg = Config::empty();
+    cfg.set("data.train_n", "64");
+    cfg.set("data.test_n", "64");
+    cfg.set("data.calib_samples", "64");
+    for model in ["mlp", "convnet", "tiny_tf"] {
+        let (g, params, q) = synth_lowering_fixture(model);
+        let qg = lower(&g, &params, &q, 8, 8).unwrap();
+        let x = match g.input {
+            InputKind::Image { channels, hw } => {
+                let mut rng = Pcg64::new(0xe2e);
+                Value::F32(Tensor {
+                    shape: vec![4, channels, hw, hw],
+                    data: rng.normal_vec(4 * channels * hw * hw, 1.0),
+                })
+            }
+            InputKind::Tokens { seq } => {
+                let data: Vec<i32> = (0..4 * seq).map(|j| (j as i32 * 13) % 64).collect();
+                Value::I32(ITensor { shape: vec![4, seq], data })
+            }
+        };
+
+        force(Some(0));
+        assert_eq!(active().name, "scalar");
+        let logits_off = qg.forward(&x).unwrap();
+        let eval_off = evaluate_int8(&qg, &mut test_loader(model, 16, &cfg).unwrap()).unwrap();
+
+        force(Some(auto));
+        let logits_auto = qg.forward(&x).unwrap();
+        let eval_auto = evaluate_int8(&qg, &mut test_loader(model, 16, &cfg).unwrap()).unwrap();
+        force(None);
+
+        assert_eq!(logits_off.shape, logits_auto.shape, "{model}");
+        assert_eq!(
+            logits_off.data, logits_auto.data,
+            "{model}: serve logits differ between scalar and {}",
+            ks[auto].name
+        );
+        assert_eq!(eval_off.n, eval_auto.n, "{model}");
+        assert_eq!(eval_off.accuracy, eval_auto.accuracy, "{model}: accuracy drifted");
+        assert_eq!(eval_off.loss, eval_auto.loss, "{model}: loss drifted");
+    }
+}
+
+#[test]
+fn forced_dispatch_reports_the_forced_kernel() {
+    let _g = dispatch_lock();
+    for (idx, kern) in kernels().iter().enumerate() {
+        force(Some(idx));
+        assert_eq!(active().name, kern.name);
+    }
+    force(None);
+}

@@ -90,38 +90,52 @@ fn generic_inputs(man: &Manifest, params: &ParamStore, seed: u64) -> Vec<Value> 
 
 #[test]
 fn int8_serve_forward_is_allocation_free_after_warmup() {
-    for model in ["mlp", "tiny_tf"] {
-        let (g, params, q) = efqat::testing::synth_lowering_fixture(model);
-        let qg = efqat::lower::lower(&g, &params, &q, 8, 8).unwrap();
-        let b = 4usize;
-        let x = match g.input {
-            efqat::graph::InputKind::Image { channels, hw } => {
-                let mut rng = Pcg64::new(3);
-                Value::F32(Tensor {
-                    shape: vec![b, channels, hw, hw],
-                    data: rng.normal_vec(b * channels * hw * hw, 1.0),
-                })
+    // run the whole assertion once per dispatchable SIMD kernel: a
+    // vector kernel that sneaks in a spill buffer fails here with the
+    // kernel named, not just under the default dispatch
+    for kidx in 0..efqat::ops::simd::kernels().len() {
+        efqat::ops::simd::force(Some(kidx));
+        let kname = efqat::ops::simd::active().name;
+        for model in ["mlp", "tiny_tf"] {
+            let (g, params, q) = efqat::testing::synth_lowering_fixture(model);
+            let qg = efqat::lower::lower(&g, &params, &q, 8, 8).unwrap();
+            let b = 4usize;
+            let x = match g.input {
+                efqat::graph::InputKind::Image { channels, hw } => {
+                    let mut rng = Pcg64::new(3);
+                    Value::F32(Tensor {
+                        shape: vec![b, channels, hw, hw],
+                        data: rng.normal_vec(b * channels * hw * hw, 1.0),
+                    })
+                }
+                efqat::graph::InputKind::Tokens { seq } => Value::I32(ITensor {
+                    shape: vec![b, seq],
+                    data: (0..b * seq).map(|i| (i % 64) as i32).collect(),
+                }),
+            };
+            let mut ws = Workspace::new();
+            for _ in 0..3 {
+                let y = qg.forward_into(&x, &mut ws).unwrap();
+                ws.give_f32(y);
             }
-            efqat::graph::InputKind::Tokens { seq } => Value::I32(ITensor {
-                shape: vec![b, seq],
-                data: (0..b * seq).map(|i| (i % 64) as i32).collect(),
-            }),
-        };
-        let mut ws = Workspace::new();
-        for _ in 0..3 {
-            let y = qg.forward_into(&x, &mut ws).unwrap();
-            ws.give_f32(y);
+            let allocs0 = thread_allocs();
+            let misses0 = ws.stats().misses;
+            for _ in 0..8 {
+                let y = qg.forward_into(&x, &mut ws).unwrap();
+                ws.give_f32(y);
+            }
+            let delta = thread_allocs() - allocs0;
+            assert_eq!(
+                delta, 0,
+                "{model} [{kname}]: int8 forward allocated {delta}×/8 in steady state"
+            );
+            assert_eq!(
+                ws.stats().misses, misses0,
+                "{model} [{kname}]: workspace pool missed in steady state"
+            );
         }
-        let allocs0 = thread_allocs();
-        let misses0 = ws.stats().misses;
-        for _ in 0..8 {
-            let y = qg.forward_into(&x, &mut ws).unwrap();
-            ws.give_f32(y);
-        }
-        let delta = thread_allocs() - allocs0;
-        assert_eq!(delta, 0, "{model}: int8 forward allocated {delta}×/8 in steady state");
-        assert_eq!(ws.stats().misses, misses0, "{model}: workspace pool missed in steady state");
     }
+    efqat::ops::simd::force(None);
 }
 
 #[test]
