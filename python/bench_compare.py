@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_*.json artifacts and fail on regressions.
+
+The benches (table5, workspace_alloc, serve_throughput, serve_latency)
+all emit flat-ish JSON documents of numeric leaves.  This script walks
+both documents, pairs leaves by path, classifies each metric by its key
+name, and exits non-zero if any metric regressed by more than the
+threshold (default 15%), printing a table of offenders.
+
+Classification by key suffix/substring (case-insensitive):
+  higher-is-worse:  *_ms, *_us, *_s, *_seconds, *_bytes*, *_time*
+  lower-is-worse:   *_per_s, *speedup*, *throughput*, *_qps
+  ignored:          iters, meta keys (bench/backend/bits/models list),
+                    and anything non-numeric
+
+Usage:
+  python3 python/bench_compare.py BASE.json CANDIDATE.json [--threshold 15]
+
+Exit status: 0 = no regression beyond threshold, 1 = regression found,
+2 = usage / parse error / no comparable metrics.
+"""
+
+import json
+import sys
+
+IGNORED_KEYS = {"iters", "bench", "backend", "bits", "schema", "version"}
+HIGHER_IS_WORSE = ("_ms", "_us", "_ns", "_s", "seconds", "bytes", "time", "latency")
+
+
+def classify(key):
+    """'up' if a larger value is worse, 'down' if smaller is worse, None to skip."""
+    k = key.lower()
+    if k in IGNORED_KEYS:
+        return None
+    # suffix match for unit-like patterns ("per_s" must not catch
+    # "bytes_per_step"); substring for the descriptive ones
+    if k.endswith(("per_s", "qps")) or "speedup" in k or "throughput" in k:
+        return "down"
+    for pat in HIGHER_IS_WORSE:
+        if k.endswith(pat) or pat in k:
+            return "up"
+    return None
+
+
+def leaves(doc, path=()):
+    """Yield (path_tuple, number) for every numeric leaf."""
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            yield from leaves(v, path + (k,))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            yield from leaves(v, path + (str(i),))
+    elif isinstance(doc, (int, float)) and not isinstance(doc, bool):
+        yield path, float(doc)
+
+
+def compare(base, cand, threshold_pct):
+    base_leaves = dict(leaves(base))
+    cand_leaves = dict(leaves(cand))
+    regressions = []
+    compared = 0
+    for path, b in sorted(base_leaves.items()):
+        direction = classify(path[-1])
+        if direction is None or path not in cand_leaves:
+            continue
+        c = cand_leaves[path]
+        compared += 1
+        if b == 0:
+            continue  # nothing meaningful to ratio against
+        delta_pct = (c - b) / abs(b) * 100.0
+        worse = delta_pct if direction == "up" else -delta_pct
+        if worse > threshold_pct:
+            regressions.append((".".join(path), b, c, delta_pct, direction))
+    return compared, regressions
+
+
+def main(argv):
+    args = []
+    threshold = 15.0
+    it = iter(argv[1:])
+    for a in it:
+        if a == "--threshold":
+            try:
+                threshold = float(next(it))
+            except (StopIteration, ValueError):
+                print("bench_compare: --threshold wants a number", file=sys.stderr)
+                return 2
+        elif a.startswith("--"):
+            print(f"bench_compare: unknown flag {a}", file=sys.stderr)
+            return 2
+        else:
+            args.append(a)
+    if len(args) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    try:
+        with open(args[0]) as f:
+            base = json.load(f)
+        with open(args[1]) as f:
+            cand = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 2
+
+    compared, regressions = compare(base, cand, threshold)
+    print(f"bench_compare: {args[0]} -> {args[1]}: "
+          f"{compared} metrics compared, threshold {threshold:.0f}%")
+    if not compared:
+        print("bench_compare: no comparable metrics found "
+              "(different benches, or schema drift?)", file=sys.stderr)
+        return 2
+    if regressions:
+        width = max(len(p) for p, *_ in regressions)
+        print(f"\n{'metric'.ljust(width)}  {'base':>12}  {'candidate':>12}  {'delta':>8}")
+        for path, b, c, delta, direction in regressions:
+            arrow = "slower" if direction == "up" else "lower"
+            print(f"{path.ljust(width)}  {b:12.3f}  {c:12.3f}  {delta:+7.1f}%  ({arrow})")
+        print(f"\nbench_compare: FAIL: {len(regressions)} metric(s) "
+              f"regressed beyond {threshold:.0f}%")
+        return 1
+    print("bench_compare: OK — no regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -22,7 +22,7 @@ use std::collections::BTreeMap;
 
 use efqat::coordinator::binder::{bind_inputs, BindCtx};
 use efqat::coordinator::tasks::build_task;
-use efqat::coordinator::trainer::{EfqatTrainer, TrainCfg};
+use efqat::coordinator::trainer::{DataParallelTrainer, EfqatTrainer, TrainCfg};
 use efqat::freeze::Mode;
 use efqat::harness::{bench, Table};
 use efqat::json::Json;
@@ -90,6 +90,40 @@ fn time_artifact(
         ws.give_values(outs);
     });
     st.mean
+}
+
+/// Full data-parallel train step at `workers` workers: wall time plus the
+/// gradient-exchange payload (active and dense-equivalent bytes/step).
+fn time_workers(
+    session: &efqat::coordinator::Session,
+    cfg: &efqat::cfg::Config,
+    model: &str,
+    bits: &str,
+    ratio: usize,
+    workers: usize,
+    iters: usize,
+) -> (f64, u64, u64) {
+    let name = format!("{model}_{bits}_train_r{ratio}");
+    let mode = if ratio >= 100 { None } else { Some(Mode::Cwpn) };
+    let step = session.steps.get(&name).unwrap();
+    let man = step.manifest.clone();
+    let params = ParamStore::init(&man, 0);
+    let states = StateStore::init(&man);
+    let q = qparams_for(&man, &params);
+    let mut task = build_task(model, man.batch_size, cfg).unwrap();
+    let batch = task.train.next_batch().unwrap();
+    let inner = EfqatTrainer::new(step, params, q, states, mode, TrainCfg::default()).unwrap();
+    let mut dp = DataParallelTrainer::new(inner, workers).unwrap();
+    // one untimed step: warms workspaces/binders and yields the per-step
+    // payload (the selection, and so the payload, is stable across steps)
+    let before = (dp.active_bytes, dp.dense_bytes);
+    dp.train_step(&batch).unwrap();
+    let active = dp.active_bytes - before.0;
+    let dense = dp.dense_bytes - before.1;
+    let st = bench(1, iters, || {
+        dp.train_step(&batch).unwrap();
+    });
+    (st.mean, active, dense)
 }
 
 fn main() {
@@ -174,17 +208,62 @@ fn main() {
     t.print();
     t.write_csv(std::path::Path::new("bench_out/table5_backward_runtime.csv")).unwrap();
 
+    // ---- workers axis: data-parallel step time + exchange payload --------
+    // bit-identical results at every W (tests/data_parallel.rs), so this
+    // axis is purely throughput: per-W step time and the bytes the sparse
+    // exchange ships (which shrink ∝ (1−r) next to the dense equivalent)
+    let default_ws: &[&str] = if quick { &["1", "2"] } else { &["1", "2", "4"] };
+    let worker_axis: Vec<String> = cfg.list("workers", default_ws);
+    let mut wt = Table::new(
+        &format!("Data-parallel train step (ms) and exchange payload (KiB/step), {bits}"),
+        &["model", "W", "r25 step", "r25 ship", "r25 dense", "r100 step", "r100 ship"],
+    );
+    let mut wreport = BTreeMap::new();
+    for model in &models {
+        let mut per_w = BTreeMap::new();
+        for w in &worker_axis {
+            let w: usize = w.parse().unwrap_or(1);
+            let (t25, a25, d25) = time_workers(&session, &cfg, model, &bits, 25, w, iters);
+            let (t100, a100, _) = time_workers(&session, &cfg, model, &bits, 100, w, iters);
+            let kib = |b: u64| b as f64 / 1024.0;
+            wt.row(&[
+                model.clone(),
+                w.to_string(),
+                format!("{:.2}", t25 * 1e3),
+                format!("{:.1}", kib(a25)),
+                format!("{:.1}", kib(d25)),
+                format!("{:.2}", t100 * 1e3),
+                format!("{:.1}", kib(a100)),
+            ]);
+            let entry: BTreeMap<String, Json> = [
+                ("r25_step_ms".to_string(), Json::Num(t25 * 1e3)),
+                ("r25_bytes_per_step".to_string(), Json::Num(a25 as f64)),
+                ("r25_dense_bytes_per_step".to_string(), Json::Num(d25 as f64)),
+                ("r100_step_ms".to_string(), Json::Num(t100 * 1e3)),
+                ("r100_bytes_per_step".to_string(), Json::Num(a100 as f64)),
+            ]
+            .into_iter()
+            .collect();
+            per_w.insert(format!("w{w}"), Json::Obj(entry));
+        }
+        wreport.insert(model.clone(), Json::Obj(per_w));
+    }
+    wt.print();
+
     let doc: BTreeMap<String, Json> = [
         ("bench".to_string(), Json::Str("table5_backward_runtime".to_string())),
         ("backend".to_string(), Json::Str(cfg.str("backend", "native"))),
         ("bits".to_string(), Json::Str(bits.clone())),
         ("iters".to_string(), Json::Num(iters as f64)),
         ("models".to_string(), Json::Obj(report)),
+        ("workers".to_string(), Json::Obj(wreport)),
     ]
     .into_iter()
     .collect();
     std::fs::write("BENCH_table5.json", Json::Obj(doc).render()).unwrap();
-    println!("\nwrote BENCH_table5.json (full vs partial backward wall-time per mode)");
+    println!("\nwrote BENCH_table5.json (full vs partial backward wall-time per mode,");
+    println!("plus per-W data-parallel step time and exchange bytes)");
     println!("paper shape check: runtime should fall monotonically r50→r0;");
-    println!("QAT/r0 backward ratio approaches the theoretical 2x bound (Eq. 7/8).");
+    println!("QAT/r0 backward ratio approaches the theoretical 2x bound (Eq. 7/8);");
+    println!("exchange bytes at r25 should sit near 25% of the dense payload.");
 }

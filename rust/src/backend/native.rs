@@ -187,6 +187,18 @@ fn parse_artifact(name: &str) -> Result<(&'static NativeModel, StepId)> {
     Ok((model, id))
 }
 
+/// Synthesize a [`GraphStep`] for `artifact` with the model's static
+/// batch dimension overridden to `batch`.  The data-parallel trainer
+/// ([`crate::coordinator::DataParallelTrainer`]) builds one per worker:
+/// gradient outputs are batch-independent, so shard steps stay drop-in
+/// compatible with the full-batch manifest's optimizer ABI.
+pub fn shard_step(artifact: &str, batch: usize) -> Result<GraphStep> {
+    let (model, id) = parse_artifact(artifact)?;
+    let mut graph = (model.build)();
+    graph.batch = batch;
+    GraphStep::new(graph, artifact, id)
+}
+
 // ---------------------------------------------------------------------------
 // Step execution: the graph executor does the work, this wrapper times it
 // ---------------------------------------------------------------------------

@@ -13,13 +13,15 @@ pub struct StepTiming {
     pub exec: Duration,
     /// host optimizer (SGD rows / Adam qparams)
     pub optim: Duration,
+    /// cross-shard gradient exchange (data-parallel training only)
+    pub exchange: Duration,
     /// importance refresh + Top-K reselection
     pub freeze: Duration,
 }
 
 impl StepTiming {
     pub fn total(&self) -> Duration {
-        self.bind + self.exec + self.optim + self.freeze
+        self.bind + self.exec + self.optim + self.exchange + self.freeze
     }
 }
 
@@ -29,6 +31,12 @@ pub struct StepRecord {
     pub loss: f32,
     pub correct: i32,
     pub batch: usize,
+    /// fraction of network weights receiving gradients this step
+    /// ([`crate::freeze::Selection::active_fraction`]; 1.0 for dense)
+    pub active_frac: f32,
+    /// gradient-exchange payload actually shipped this step (bytes; 0 on
+    /// the single-trainer path)
+    pub bytes_exchanged: u64,
     pub timing: StepTiming,
 }
 
@@ -72,8 +80,19 @@ impl MetricsLog {
     pub fn total_overhead(&self) -> Duration {
         self.records
             .iter()
-            .map(|r| r.timing.bind + r.timing.optim + r.timing.freeze)
+            .map(|r| r.timing.bind + r.timing.optim + r.timing.exchange + r.timing.freeze)
             .sum()
+    }
+
+    /// Total gradient-exchange payload over the epoch (bytes).
+    pub fn total_bytes_exchanged(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_exchanged).sum()
+    }
+
+    /// Mean active-weight fraction over the epoch.
+    pub fn mean_active_frac(&self) -> f32 {
+        let s: f32 = self.records.iter().map(|r| r.active_frac).sum();
+        s / self.records.len().max(1) as f32
     }
 
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
@@ -81,18 +100,25 @@ impl MetricsLog {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "step,loss,correct,batch,bind_us,exec_us,optim_us,freeze_us")?;
+        writeln!(
+            f,
+            "step,loss,correct,batch,active_frac,bytes_exchanged,bind_us,exec_us,optim_us,\
+             exchange_us,freeze_us"
+        )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{}",
                 r.step,
                 r.loss,
                 r.correct,
                 r.batch,
+                r.active_frac,
+                r.bytes_exchanged,
                 r.timing.bind.as_micros(),
                 r.timing.exec.as_micros(),
                 r.timing.optim.as_micros(),
+                r.timing.exchange.as_micros(),
                 r.timing.freeze.as_micros()
             )?;
         }
@@ -110,10 +136,13 @@ mod tests {
             loss,
             correct: 4,
             batch: 8,
+            active_frac: 0.25,
+            bytes_exchanged: 64,
             timing: StepTiming {
                 bind: Duration::from_micros(10),
                 exec: Duration::from_micros(100),
                 optim: Duration::from_micros(5),
+                exchange: Duration::from_micros(2),
                 freeze: Duration::from_micros(1),
             },
         }
@@ -128,7 +157,9 @@ mod tests {
         assert_eq!(m.mean_loss_tail(1), 1.0);
         assert_eq!(m.train_accuracy(), 0.5);
         assert_eq!(m.total_exec(), Duration::from_micros(200));
-        assert_eq!(m.total_overhead(), Duration::from_micros(32));
+        assert_eq!(m.total_overhead(), Duration::from_micros(36));
+        assert_eq!(m.total_bytes_exchanged(), 128);
+        assert!((m.mean_active_frac() - 0.25).abs() < 1e-6);
     }
 
     #[test]

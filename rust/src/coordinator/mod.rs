@@ -20,13 +20,14 @@ pub mod pipeline;
 pub mod eval;
 pub mod metrics;
 pub mod ptq;
+pub mod shard;
 pub mod tasks;
 pub mod trainer;
 
 pub use binder::bind_inputs;
 pub use eval::{evaluate, evaluate_int8, example_inputs, EvalResult};
 pub use ptq::calibrate;
-pub use trainer::{pretrain_fp, EfqatTrainer, TrainCfg};
+pub use trainer::{pretrain_fp, DataParallelTrainer, EfqatTrainer, TrainCfg};
 
 use std::path::Path;
 use std::rc::Rc;

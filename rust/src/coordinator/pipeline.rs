@@ -16,7 +16,9 @@ use crate::tensor::Tensor;
 
 use super::metrics::MetricsLog;
 use super::tasks::build_task;
-use super::trainer::{artifact_name, fwd_artifact_name, pretrain_fp, EfqatTrainer, TrainCfg};
+use super::trainer::{
+    artifact_name, fwd_artifact_name, pretrain_fp, DataParallelTrainer, EfqatTrainer, TrainCfg,
+};
 
 pub use super::trainer::fwd_artifact_name as fwd_artifact_name_of;
 use super::{calibrate, evaluate, Session};
@@ -55,6 +57,22 @@ pub fn train_cfg(cfg: &Config, model: &str) -> TrainCfg {
         ratio_override: None,
         seed: cfg.u64("train.seed", 0),
     }
+}
+
+/// Worker-thread count for data-parallel training: the `workers` config
+/// key (CLI `--workers W`), else the `EFQAT_TRAIN_WORKERS` env var
+/// (mirroring `EFQAT_THREADS`), else 0 — the single-trainer path.
+/// Any value ≥ 1 selects [`DataParallelTrainer`]; results are
+/// bit-identical across worker counts, so this is purely a throughput
+/// knob.
+pub fn train_workers(cfg: &Config) -> usize {
+    if cfg.has("workers") {
+        return cfg.usize("workers", 0);
+    }
+    std::env::var("EFQAT_TRAIN_WORKERS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
 }
 
 pub fn load_fp_checkpoint(cfg: &Config, model: &str) -> Result<(ParamStore, StateStore)> {
@@ -105,14 +123,28 @@ pub struct PipelineSummary {
     /// artifact execution time over the epoch (paper Table 5's quantity)
     pub exec_seconds: f64,
     pub overhead_seconds: f64,
+    /// data-parallel worker count (0 = single-trainer path)
+    pub workers: usize,
+    /// gradient-exchange payload shipped over the epoch (bytes; 0 when
+    /// `workers` is 0)
+    pub bytes_exchanged: u64,
     pub losses: Vec<f32>,
 }
 
 impl PipelineSummary {
     pub fn render(&self) -> String {
+        let dp = if self.workers > 0 {
+            format!(
+                "\n  data-parallel: {} workers, {:.1} KiB exchanged",
+                self.workers,
+                self.bytes_exchanged as f64 / 1024.0
+            )
+        } else {
+            String::new()
+        };
         format!(
             "[efqat] {} {} mode={} ratio={}%\n  PTQ   headline {:.2}\n  EfQAT headline \
-             {:.2}  ({:+.2})\n  step exec {:.2}s, coordinator overhead {:.2}s\n  loss {}",
+             {:.2}  ({:+.2})\n  step exec {:.2}s, coordinator overhead {:.2}s{}\n  loss {}",
             self.model,
             self.bits,
             self.mode,
@@ -122,6 +154,7 @@ impl PipelineSummary {
             self.efqat_headline - self.ptq_headline,
             self.exec_seconds,
             self.overhead_seconds,
+            dp,
             sparkline(&self.losses, 60),
         )
     }
@@ -163,11 +196,26 @@ pub fn run_efqat_pipeline(
     }
     let mut trainer = EfqatTrainer::new(step, params, q, states, Mode::parse(mode), tcfg)?;
     let epochs = cfg.usize("train.efqat_epochs", 1);
+    let mut workers = train_workers(cfg);
     let mut log = MetricsLog::new(&art);
-    for _ in 0..epochs {
-        let l = trainer.train_epoch(&mut task.train)?;
-        for r in l.records {
-            log.push(r);
+    let mut bytes_exchanged = 0u64;
+    if workers > 0 {
+        let mut dp = DataParallelTrainer::new(trainer, workers)?;
+        for _ in 0..epochs {
+            let l = dp.train_epoch(&mut task.train)?;
+            for r in l.records {
+                log.push(r);
+            }
+        }
+        bytes_exchanged = dp.active_bytes;
+        workers = dp.workers; // report the clamped count
+        trainer = dp.into_inner();
+    } else {
+        for _ in 0..epochs {
+            let l = trainer.train_epoch(&mut task.train)?;
+            for r in l.records {
+                log.push(r);
+            }
         }
     }
 
@@ -192,6 +240,8 @@ pub fn run_efqat_pipeline(
         efqat_headline: result.headline(),
         exec_seconds: log.total_exec().as_secs_f64(),
         overhead_seconds: log.total_overhead().as_secs_f64(),
+        workers,
+        bytes_exchanged,
         losses: log.losses(),
     })
 }

@@ -1,0 +1,554 @@
+//! Data-parallel sharding: deterministic batch splitting, a fixed-order
+//! pairwise tree reduction, and the frozen-aware sparse gradient
+//! exchange (RFC 0004).
+//!
+//! Bit-exactness at any worker count is the design invariant everything
+//! here serves.  A batch is always split into a *fixed* number of
+//! virtual shards `S` chosen from the batch size alone
+//! ([`ShardPlan::new`]), never from the worker count `W` — workers pick
+//! shards round-robin (worker `w` runs shards `w, w+W, …`), so raising
+//! `W` changes who computes a shard but never how the batch is grouped.
+//! Shard results are indexed by shard id and combined after all workers
+//! join, in the fixed pairwise order of [`tree_reduce`]; f32 addition is
+//! not associative, so a fixed grouping *and* a fixed combination order
+//! are both load-bearing.
+//!
+//! The exchange itself is frozen-aware ([`GradExchange`]): ratio
+//! artifacts emit only the unfrozen channel rows of `dW`/`dS_w`
+//! (frozen rows are never materialized), so the reduced payload already
+//! shrinks with (1−r); LWPN artifacts emit dense grads but flag-frozen
+//! sites are skipped — never summed or copied — because the optimizer
+//! discards them anyway.  [`ExchangeStats`] reports both the bytes
+//! actually combined and the dense-equivalent bytes so the shrink is
+//! observable in metrics and benches.
+
+use std::collections::BTreeMap;
+
+use crate::backend::Value;
+use crate::data::Batch;
+use crate::error::{anyhow, bail, Result};
+use crate::freeze::Selection;
+use crate::model::Manifest;
+use crate::rng::Pcg64;
+use crate::tensor::{ITensor, Tensor};
+
+/// Most virtual shards a batch is split into.  Small enough that the
+/// per-shard batch stays GEMM-friendly, large enough that `W ∈ {1,2,4}`
+/// all divide the shard count for the repo's batch sizes (16 and 8).
+pub const MAX_VIRTUAL_SHARDS: usize = 4;
+
+/// How one training batch is split, independently of the worker count.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Virtual shard count `S`: the largest divisor of the batch size
+    /// that is ≤ [`MAX_VIRTUAL_SHARDS`].  Fixed per artifact, never a
+    /// function of `W`.
+    pub shards: usize,
+    /// Examples per shard (`batch_size / shards`).
+    pub shard_bs: usize,
+    /// Base seed the per-shard RNG streams derive from.
+    pub seed: u64,
+}
+
+impl ShardPlan {
+    pub fn new(batch_size: usize, seed: u64) -> ShardPlan {
+        let b = batch_size.max(1);
+        let mut s = MAX_VIRTUAL_SHARDS.min(b);
+        while b % s != 0 {
+            s -= 1;
+        }
+        ShardPlan { shards: s, shard_bs: b / s, seed }
+    }
+
+    /// Deterministic per-shard RNG stream, keyed by shard id (not by the
+    /// worker that happens to run it), so stochastic layers would draw
+    /// identical values at any `W`.
+    pub fn shard_rng(&self, shard: usize) -> Pcg64 {
+        Pcg64::new(self.seed ^ 0x05a4d_5eed).split(shard as u64)
+    }
+}
+
+/// Split `batch` into `shards` equal row-ranges, writing into `out`.
+/// The first call builds the shard batches; later calls refresh the same
+/// buffers in place (`copy_from_slice`), so the steady-state train loop
+/// allocates nothing here.
+pub fn split_batch_into(batch: &Batch, shards: usize, out: &mut Vec<Batch>) -> Result<()> {
+    let b = batch.count;
+    if shards == 0 || b == 0 || b % shards != 0 {
+        bail!("shard split: batch of {b} examples does not divide into {shards} shards");
+    }
+    let per = b / shards;
+    if out.len() != shards {
+        out.clear();
+        for s in 0..shards {
+            let mut f32s = BTreeMap::new();
+            for (name, t) in &batch.f32s {
+                f32s.insert(name.clone(), rows_f32(name, t, b, s * per, per)?);
+            }
+            let mut i32s = BTreeMap::new();
+            for (name, t) in &batch.i32s {
+                i32s.insert(name.clone(), rows_i32(name, t, b, s * per, per)?);
+            }
+            out.push(Batch { f32s, i32s, count: per });
+        }
+        return Ok(());
+    }
+    for (s, shard) in out.iter_mut().enumerate() {
+        for (name, t) in &batch.f32s {
+            let epe = elems_per_example(name, t.shape.first().copied(), t.data.len(), b)?;
+            let src = &t.data[s * per * epe..(s + 1) * per * epe];
+            let dst = shard
+                .f32s
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("shard split: batch gained f32 tensor {name:?}"))?;
+            if dst.data.len() != src.len() {
+                bail!("shard split: tensor {name:?} changed size between steps");
+            }
+            dst.data.copy_from_slice(src);
+        }
+        for (name, t) in &batch.i32s {
+            let epe = elems_per_example(name, t.shape.first().copied(), t.data.len(), b)?;
+            let src = &t.data[s * per * epe..(s + 1) * per * epe];
+            let dst = shard
+                .i32s
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("shard split: batch gained i32 tensor {name:?}"))?;
+            if dst.data.len() != src.len() {
+                bail!("shard split: tensor {name:?} changed size between steps");
+            }
+            dst.data.copy_from_slice(src);
+        }
+        shard.count = per;
+    }
+    Ok(())
+}
+
+fn elems_per_example(name: &str, lead: Option<usize>, len: usize, b: usize) -> Result<usize> {
+    if lead != Some(b) {
+        bail!("shard split: tensor {name:?} leading dim {lead:?} != batch count {b}");
+    }
+    Ok(len / b)
+}
+
+fn rows_f32(name: &str, t: &Tensor, b: usize, start: usize, n: usize) -> Result<Tensor> {
+    let epe = elems_per_example(name, t.shape.first().copied(), t.data.len(), b)?;
+    let mut shape = t.shape.clone();
+    shape[0] = n;
+    Tensor::new(shape, t.data[start * epe..(start + n) * epe].to_vec())
+}
+
+fn rows_i32(name: &str, t: &ITensor, b: usize, start: usize, n: usize) -> Result<ITensor> {
+    let epe = elems_per_example(name, t.shape.first().copied(), t.data.len(), b)?;
+    let mut shape = t.shape.clone();
+    shape[0] = n;
+    Ok(ITensor { shape, data: t.data[start * epe..(start + n) * epe].to_vec() })
+}
+
+/// Fixed-order pairwise tree reduction over `n` slots: `combine(i, j)`
+/// must fold slot `j` into slot `i` (`j > i` always).  The visit order
+/// is a pure function of `n` — gap-doubling rounds `(0,1)(2,3)… then
+/// (0,2)(4,6)… then (0,4)…` — so the combined f32 value is bit-identical
+/// no matter which worker produced which slot, or when.
+pub fn tree_reduce(n: usize, mut combine: impl FnMut(usize, usize)) {
+    let mut gap = 1;
+    while gap < n {
+        let mut i = 0;
+        while i + gap < n {
+            combine(i, i + gap);
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+}
+
+/// Run `shards` work items over `slots` worker contexts, returning the
+/// results indexed by shard id.
+///
+/// Worker `w` of `nw = min(slots, shards)` processes shards
+/// `w, w+nw, w+2nw, …` on its own OS thread with exclusive access to its
+/// slot; results are keyed by shard id, so completion timing cannot
+/// reorder them.  With one slot (or one shard) everything runs inline on
+/// the calling thread — same shard ids, same results.  Errors are
+/// reported in worker order (first failing worker wins), which keeps the
+/// failure deterministic too.
+pub fn run_sharded<W, R, F>(slots: &mut [W], shards: usize, f: F) -> Result<Vec<R>>
+where
+    W: Send,
+    R: Send,
+    F: Fn(&mut W, usize) -> Result<R> + Sync,
+{
+    if slots.is_empty() {
+        bail!("run_sharded: no worker slots");
+    }
+    let nw = slots.len().min(shards).max(1);
+    if nw <= 1 {
+        let slot = &mut slots[0];
+        return (0..shards).map(|s| f(slot, s)).collect();
+    }
+    let slotted: Vec<Option<R>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nw);
+        for (w, slot) in slots.iter_mut().take(nw).enumerate() {
+            let f = &f;
+            handles.push(scope.spawn(move || -> Result<Vec<(usize, R)>> {
+                let mut got = Vec::new();
+                let mut s = w;
+                while s < shards {
+                    got.push((s, f(slot, s)?));
+                    s += nw;
+                }
+                Ok(got)
+            }));
+        }
+        let mut out: Vec<Option<R>> = (0..shards).map(|_| None).collect();
+        let mut first_err = None;
+        for (w, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(rs)) => {
+                    for (s, r) in rs {
+                        out[s] = Some(r);
+                    }
+                }
+                Ok(Err(e)) if first_err.is_none() => first_err = Some(e),
+                Err(_) if first_err.is_none() => {
+                    first_err = Some(anyhow!("run_sharded: worker {w} panicked"))
+                }
+                _ => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    })?;
+    let mut out = Vec::with_capacity(shards);
+    for (s, r) in slotted.into_iter().enumerate() {
+        out.push(r.ok_or_else(|| anyhow!("run_sharded: shard {s} produced no result"))?);
+    }
+    Ok(out)
+}
+
+/// How one output of a train artifact is combined across shards.
+enum ExKind {
+    /// f32 shard-mean (loss and every gradient): tree-sum, then scale the
+    /// root by 1/S.  `gate_site`: wsite whose LWPN flag gates whether the
+    /// optimizer will consume this grad at all — flag-frozen sites are
+    /// skipped entirely.
+    Mean { gate_site: Option<usize> },
+    /// i32 count (the `correct` metric): tree-sum, no scaling.
+    Count,
+}
+
+struct ExOp {
+    /// Position in the manifest output vector.
+    pos: usize,
+    kind: ExKind,
+    /// f32/i32 elements actually shipped per shard pair.
+    elems: usize,
+    /// Elements a dense (freeze-unaware) exchange would ship: the full
+    /// `c_out`-row tensor for partial `dW`/`dS_w`, `elems` otherwise.
+    dense_elems: usize,
+}
+
+/// Per-step byte accounting of one [`GradExchange::reduce`] call.  Bytes
+/// count each pairwise combine of the tree (`S−1` combines per reduced
+/// buffer), the quantity a wire all-reduce would move.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExchangeStats {
+    /// Bytes actually summed (active slices only).
+    pub active_bytes: u64,
+    /// Bytes a dense exchange of the same step would have summed.
+    pub dense_bytes: u64,
+}
+
+/// The frozen-aware exchange plan for one train manifest: which outputs
+/// reduce, how, and what the dense-equivalent payload would be.
+pub struct GradExchange {
+    ops: Vec<ExOp>,
+}
+
+impl GradExchange {
+    /// Build the exchange plan from the manifest's output specs.
+    pub fn plan(man: &Manifest) -> Result<GradExchange> {
+        let site_pos = |name: &str| man.wsites.iter().position(|s| s.name == name);
+        let mut ops = Vec::with_capacity(man.outputs.len());
+        for (pos, spec) in man.outputs.iter().enumerate() {
+            let elems = spec.elems();
+            let (kind, dense_elems) = match spec.role.as_str() {
+                "loss" => (ExKind::Mean { gate_site: None }, elems),
+                "metric" => (ExKind::Count, elems),
+                "grad" => {
+                    let of = spec
+                        .of
+                        .as_deref()
+                        .ok_or_else(|| anyhow!("grad output {:?} without 'of'", spec.name))?;
+                    if let Some(site) = of.strip_prefix("sw:") {
+                        // dS_w ships k of c_out rows for ratio artifacts
+                        let si = site_pos(site)
+                            .ok_or_else(|| anyhow!("grad {:?}: unknown wsite {site:?}", spec.name))?;
+                        let dense = man.wsites[si].c_out;
+                        (ExKind::Mean { gate_site: Some(si) }, dense)
+                    } else if of.starts_with("sx:") || of.starts_with("zx:") {
+                        (ExKind::Mean { gate_site: None }, elems)
+                    } else if let Some(si) = site_pos(of) {
+                        // partial dW: [k, rest] of a [c_out, rest] site
+                        let k = spec.shape.first().copied().unwrap_or(1).max(1);
+                        let dense = elems / k * man.wsites[si].c_out;
+                        (ExKind::Mean { gate_site: Some(si) }, dense)
+                    } else {
+                        // bias / norm grads: always dense, always applied
+                        (ExKind::Mean { gate_site: None }, elems)
+                    }
+                }
+                "state" => bail!(
+                    "data-parallel training cannot exchange state output {:?} \
+                     (running statistics do not tree-reduce)",
+                    spec.name
+                ),
+                other => bail!("output {:?}: unknown role {other:?}", spec.name),
+            };
+            ops.push(ExOp { pos, kind, elems, dense_elems });
+        }
+        Ok(GradExchange { ops })
+    }
+
+    /// Combine per-shard output vectors into full-batch values in
+    /// `outs[0]`, in the fixed [`tree_reduce`] order.  Shard outputs are
+    /// shard-means (the loss kernel scales by 1/rows), so f32 buffers
+    /// tree-sum then scale by `1/S`; the `correct` count sums as-is.
+    /// LWPN flag-frozen weight/scale grads are skipped — not summed, not
+    /// copied — and only their dense-equivalent bytes are recorded.
+    pub fn reduce(&self, outs: &mut [Vec<Value>], sel: Option<&Selection>) -> Result<ExchangeStats> {
+        let n = outs.len();
+        if n == 0 {
+            bail!("gradient exchange: no shard outputs");
+        }
+        let inv = 1.0 / n as f32;
+        let pair_bytes = |elems: usize| (elems * 4 * (n - 1)) as u64;
+        let mut stats = ExchangeStats::default();
+        for op in &self.ops {
+            for (s, o) in outs.iter().enumerate() {
+                let got = o.get(op.pos).map(|v| v.dtype());
+                let want = outs[0][op.pos].dtype();
+                if o.len() != outs[0].len() || got != Some(want) {
+                    bail!("gradient exchange: shard {s} output {} diverges from shard 0", op.pos);
+                }
+            }
+            stats.dense_bytes += pair_bytes(op.dense_elems);
+            match op.kind {
+                ExKind::Mean { gate_site } => {
+                    if let (Some(si), Some(sel)) = (gate_site, sel) {
+                        let flag_frozen = sel.flags.get(si).is_some_and(|&f| !f)
+                            && sel.channels.get(si).map_or(true, |c| c.is_empty());
+                        if flag_frozen {
+                            continue; // optimizer discards this grad; never ship it
+                        }
+                    }
+                    stats.active_bytes += pair_bytes(op.elems);
+                    tree_reduce(n, |i, j| {
+                        let (lo, hi) = outs.split_at_mut(j);
+                        if let (Value::F32(dst), Value::F32(src)) =
+                            (&mut lo[i][op.pos], &hi[0][op.pos])
+                        {
+                            for (d, s) in dst.data.iter_mut().zip(&src.data) {
+                                *d += *s;
+                            }
+                        }
+                    });
+                    if let Value::F32(t) = &mut outs[0][op.pos] {
+                        for v in &mut t.data {
+                            *v *= inv;
+                        }
+                    }
+                }
+                ExKind::Count => {
+                    stats.active_bytes += pair_bytes(op.elems);
+                    tree_reduce(n, |i, j| {
+                        let (lo, hi) = outs.split_at_mut(j);
+                        if let (Value::I32(dst), Value::I32(src)) =
+                            (&mut lo[i][op.pos], &hi[0][op.pos])
+                        {
+                            for (d, s) in dst.data.iter_mut().zip(&src.data) {
+                                *d += *s;
+                            }
+                        }
+                    });
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_plan_is_a_function_of_batch_size_only() {
+        assert_eq!(ShardPlan::new(16, 0).shards, 4);
+        assert_eq!(ShardPlan::new(16, 0).shard_bs, 4);
+        assert_eq!(ShardPlan::new(8, 0).shards, 4);
+        assert_eq!(ShardPlan::new(8, 0).shard_bs, 2);
+        assert_eq!(ShardPlan::new(6, 0).shards, 3);
+        assert_eq!(ShardPlan::new(5, 0).shards, 1); // prime > 4: no split
+        assert_eq!(ShardPlan::new(1, 0).shards, 1);
+    }
+
+    #[test]
+    fn shard_rng_streams_keyed_by_shard_id() {
+        let plan = ShardPlan::new(16, 7);
+        let a: Vec<f32> = {
+            let mut r = plan.shard_rng(2);
+            (0..4).map(|_| r.uniform()).collect()
+        };
+        let b: Vec<f32> = {
+            let mut r = plan.shard_rng(2);
+            (0..4).map(|_| r.uniform()).collect()
+        };
+        let c: Vec<f32> = {
+            let mut r = plan.shard_rng(3);
+            (0..4).map(|_| r.uniform()).collect()
+        };
+        assert_eq!(a, b, "same shard id must replay the same stream");
+        assert_ne!(a, c, "different shard ids must diverge");
+    }
+
+    #[test]
+    fn tree_reduce_order_is_fixed() {
+        let order_of = |n: usize| {
+            let mut order = Vec::new();
+            tree_reduce(n, |i, j| order.push((i, j)));
+            order
+        };
+        assert_eq!(order_of(1), vec![]);
+        assert_eq!(order_of(2), vec![(0, 1)]);
+        assert_eq!(order_of(4), vec![(0, 1), (2, 3), (0, 2)]);
+        assert_eq!(order_of(5), vec![(0, 1), (2, 3), (0, 2), (0, 4)]);
+        assert_eq!(order_of(8), vec![(0, 1), (2, 3), (4, 5), (6, 7), (0, 2), (4, 6), (0, 4)]);
+    }
+
+    #[test]
+    fn split_refreshes_in_place_without_realloc() {
+        let mk = |base: f32| {
+            let mut f32s = BTreeMap::new();
+            f32s.insert(
+                "x".to_string(),
+                Tensor::new(vec![4, 3], (0..12).map(|i| base + i as f32).collect()).unwrap(),
+            );
+            let mut i32s = BTreeMap::new();
+            i32s.insert("y".to_string(), ITensor { shape: vec![4], data: vec![1, 2, 3, 4] });
+            Batch { f32s, i32s, count: 4 }
+        };
+        let mut out = Vec::new();
+        split_batch_into(&mk(0.0), 2, &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].count, 2);
+        assert_eq!(out[0].f32s["x"].shape, vec![2, 3]);
+        assert_eq!(out[1].f32s["x"].data, vec![6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(out[1].i32s["y"].data, vec![3, 4]);
+        let ptr = out[0].f32s["x"].data.as_ptr();
+        split_batch_into(&mk(100.0), 2, &mut out).unwrap();
+        assert_eq!(out[0].f32s["x"].data[0], 100.0);
+        assert_eq!(out[0].f32s["x"].data.as_ptr(), ptr, "refresh must reuse the buffer");
+    }
+
+    #[test]
+    fn split_rejects_indivisible_batches() {
+        let b = Batch { f32s: BTreeMap::new(), i32s: BTreeMap::new(), count: 5 };
+        assert!(split_batch_into(&b, 2, &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn run_sharded_results_are_shard_ordered_under_adversarial_timing() {
+        // Workers finish in inverted order (shard 0's worker sleeps the
+        // longest); results must still come back keyed by shard id, and
+        // identically at every worker count.
+        let run = |workers: usize| -> Vec<usize> {
+            let mut slots: Vec<usize> = (0..workers).collect();
+            run_sharded(&mut slots, 4, |_slot, s| {
+                std::thread::sleep(std::time::Duration::from_millis(5 * (4 - s as u64)));
+                Ok(s * 10)
+            })
+            .unwrap()
+        };
+        let w1 = run(1);
+        assert_eq!(w1, vec![0, 10, 20, 30]);
+        assert_eq!(run(2), w1);
+        assert_eq!(run(4), w1);
+    }
+
+    #[test]
+    fn run_sharded_reports_first_worker_error_deterministically() {
+        for workers in [1usize, 2, 4] {
+            let mut slots: Vec<usize> = (0..workers).collect();
+            let err = run_sharded(&mut slots, 4, |_slot, s| -> Result<()> {
+                // delay so later shards fail before earlier ones race in
+                std::thread::sleep(std::time::Duration::from_millis(3 * (4 - s as u64)));
+                bail!("shard {s} failed")
+            })
+            .unwrap_err();
+            // worker 0 owns shard 0 at every W, and worker order decides
+            assert_eq!(err.to_string(), "shard 0 failed", "W={workers}");
+        }
+    }
+
+    #[test]
+    fn reduce_matches_sequential_fixed_order_reference() {
+        // 3 "shards" of a hand-built manifest-free plan: exercise the
+        // Mean and Count paths against an explicit (((s0+s1)+s2)·⅓) with
+        // the tree's own grouping for n=3: (0,1) then (0,2).
+        let plan = GradExchange {
+            ops: vec![
+                ExOp { pos: 0, kind: ExKind::Mean { gate_site: None }, elems: 2, dense_elems: 2 },
+                ExOp { pos: 1, kind: ExKind::Count, elems: 1, dense_elems: 1 },
+            ],
+        };
+        let shard = |a: f32, b: f32, c: i32| {
+            vec![
+                Value::F32(Tensor::new(vec![2], vec![a, b]).unwrap()),
+                Value::I32(ITensor { shape: vec![1], data: vec![c] }),
+            ]
+        };
+        let mut outs = vec![shard(1.0, 2.0, 3), shard(0.5, -1.0, 2), shard(0.25, 4.0, 1)];
+        let stats = plan.reduce(&mut outs, None).unwrap();
+        let third = 1.0f32 / 3.0;
+        assert_eq!(outs[0][0].f32().unwrap().data, vec![
+            ((1.0f32 + 0.5) + 0.25) * third,
+            ((2.0f32 + -1.0) + 4.0) * third,
+        ]);
+        assert_eq!(outs[0][1].i32().unwrap().data, vec![6]);
+        // 2 f32 elems × 4 bytes × 2 combines + 1 i32 × 4 × 2
+        assert_eq!(stats, ExchangeStats { active_bytes: 24, dense_bytes: 24 });
+    }
+
+    #[test]
+    fn reduce_skips_lwpn_flag_frozen_sites() {
+        let plan = GradExchange {
+            ops: vec![
+                ExOp { pos: 0, kind: ExKind::Mean { gate_site: Some(0) }, elems: 4, dense_elems: 4 },
+                ExOp { pos: 1, kind: ExKind::Mean { gate_site: Some(1) }, elems: 4, dense_elems: 4 },
+            ],
+        };
+        let shard = || {
+            vec![
+                Value::F32(Tensor::new(vec![4], vec![1.0; 4]).unwrap()),
+                Value::F32(Tensor::new(vec![4], vec![1.0; 4]).unwrap()),
+            ]
+        };
+        let mut outs = vec![shard(), shard()];
+        // LWPN shape: empty channel lists, per-site flags
+        let sel = Selection { channels: vec![Vec::new(), Vec::new()], flags: vec![true, false] };
+        let stats = plan.reduce(&mut outs, Some(&sel)).unwrap();
+        assert_eq!(outs[0][0].f32().unwrap().data, vec![1.0; 4], "active site reduces to mean");
+        assert_eq!(outs[0][1].f32().unwrap().data, vec![1.0; 4], "frozen site left untouched");
+        assert_eq!(outs[1][1].f32().unwrap().data, vec![1.0; 4]);
+        assert_eq!(stats.active_bytes, 16, "only the unfrozen site ships");
+        assert_eq!(stats.dense_bytes, 32);
+
+        // indexed (CWPL/CWPN) selections set all flags true: never gated
+        let sel = Selection { channels: vec![vec![0], vec![1]], flags: vec![true, true] };
+        let mut outs = vec![shard(), shard()];
+        let stats = plan.reduce(&mut outs, Some(&sel)).unwrap();
+        assert_eq!(stats.active_bytes, 32);
+    }
+}

@@ -20,17 +20,20 @@
 use std::rc::Rc;
 use std::time::Instant;
 
-use crate::backend::Step;
-use crate::data::Loader;
+use crate::backend::{Step, Value};
+use crate::data::{Batch, Loader};
 use crate::error::{anyhow, bail, Result};
 use crate::exec::Workspace;
-use crate::freeze::{site_k, FreezePolicy, Mode, Site};
+use crate::freeze::{site_k, FreezePolicy, Mode, Selection, Site};
+use crate::graph::GraphStep;
 use crate::model::{Manifest, ParamStore, QParamStore, StateStore};
+use crate::ops::matmul;
 use crate::optim::{Adam, SgdMomentum};
 use crate::tensor::Tensor;
 
 use super::binder::{BindCtx, Binder};
 use super::metrics::{MetricsLog, StepRecord, StepTiming};
+use super::shard::{run_sharded, split_batch_into, GradExchange, ShardPlan};
 
 /// Hyper-parameters of one training phase (defaults follow the paper §4).
 #[derive(Clone, Debug)]
@@ -149,6 +152,8 @@ pub fn pretrain_fp(
                 loss: outs[loss_i].scalar()?,
                 correct: outs[correct_i].i32()?.data[0],
                 batch: batch.count * label_rows_per_example(man),
+                active_frac: 1.0,
+                bytes_exchanged: 0,
                 timing,
             };
             ws.give_values(outs);
@@ -182,6 +187,96 @@ fn sel_kind(man: &Manifest) -> SelKind {
     } else {
         SelKind::Full
     }
+}
+
+/// The "Optimizer Step" of Algorithm 1, applied to one step's output
+/// vector: row-masked SGD(momentum) for unfrozen weight channels, dense
+/// SGD for biases/norm params, Adam for quantization parameters, and BN
+/// running statistics threaded back into the state store.
+///
+/// Shared by [`EfqatTrainer`] and [`DataParallelTrainer`]: the reduced
+/// shard-0 output vector of the gradient exchange is ABI-identical to a
+/// full-batch output vector, so both paths converge here.
+#[allow(clippy::too_many_arguments)]
+fn apply_train_outputs(
+    man: &Manifest,
+    outs: &[Value],
+    sel: SelKind,
+    selection: Option<&Selection>,
+    sgd: &mut SgdMomentum,
+    adam: &mut Adam,
+    params: &mut ParamStore,
+    qparams: &mut QParamStore,
+    states: &mut StateStore,
+) -> Result<()> {
+    let kind_of = |name: &str| -> &str {
+        man.params
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.kind.as_str())
+            .unwrap_or("")
+    };
+    let site_index = |name: &str| man.wsites.iter().position(|s| s.name == name);
+    for (spec, val) in man.outputs.iter().zip(outs) {
+        match spec.role.as_str() {
+            "grad" => {
+                let of = spec.of.as_deref().unwrap();
+                let g = val.f32()?;
+                if let Some(site) = of.strip_prefix("sw:") {
+                    // per-row weight scales: only unfrozen channels update
+                    let sw = qparams.sw.get_mut(site).unwrap();
+                    match (sel, selection) {
+                        (SelKind::Indexed, Some(sel)) => {
+                            let si = site_index(site).unwrap();
+                            adam.apply_rows(of, &mut sw.data, &g.data, &sel.channels[si]);
+                        }
+                        (SelKind::Flagged, Some(sel)) => {
+                            let si = site_index(site).unwrap();
+                            if sel.flags[si] {
+                                adam.apply_full(of, &mut sw.data, &g.data);
+                            }
+                        }
+                        _ => adam.apply_full(of, &mut sw.data, &g.data),
+                    }
+                } else if let Some(site) = of.strip_prefix("sx:") {
+                    let act = qparams.act.get_mut(site).unwrap();
+                    adam.apply_scalar(of, &mut act.scale, g.data[0]);
+                } else if let Some(site) = of.strip_prefix("zx:") {
+                    let act = qparams.act.get_mut(site).unwrap();
+                    // zero points are plain parameters (never log-domain)
+                    let mut zp = act.zero_point;
+                    let saved = adam.log_domain;
+                    adam.log_domain = false;
+                    adam.apply_scalar(of, &mut zp, g.data[0]);
+                    adam.log_domain = saved;
+                    act.zero_point = zp;
+                } else if kind_of(of) == "weight" {
+                    match (sel, selection) {
+                        (SelKind::Indexed, Some(sel)) => {
+                            let si = site_index(of).unwrap();
+                            sgd.apply_rows(of, params.get_mut(of)?, &g.data, &sel.channels[si]);
+                        }
+                        (SelKind::Flagged, Some(sel)) => {
+                            let si = site_index(of).unwrap();
+                            if sel.flags[si] {
+                                sgd.apply_full(of, params.get_mut(of)?, &g.data);
+                            }
+                        }
+                        _ => sgd.apply_full(of, params.get_mut(of)?, &g.data),
+                    }
+                } else {
+                    // biases / norm params: always updated (paper §4)
+                    sgd.apply_full(of, params.get_mut(of)?, &g.data);
+                }
+            }
+            "state" => {
+                let of = spec.of.as_deref().unwrap();
+                *states.map.get_mut(of).unwrap() = val.f32()?.clone();
+            }
+            _ => {}
+        }
+    }
+    Ok(())
 }
 
 /// One EfQAT (or QAT) training phase over a quantized model.
@@ -305,82 +400,26 @@ impl EfqatTrainer {
 
         // ---- Optimizer Step (Algorithm 1) --------------------------------
         let t2 = Instant::now();
-        let kind_of = |name: &str| -> &str {
-            man.params
-                .iter()
-                .find(|p| p.name == name)
-                .map(|p| p.kind.as_str())
-                .unwrap_or("")
-        };
-        let site_index = |name: &str| man.wsites.iter().position(|s| s.name == name);
-        for (spec, val) in man.outputs.iter().zip(&outs) {
-            match spec.role.as_str() {
-                "grad" => {
-                    let of = spec.of.as_deref().unwrap();
-                    let g = val.f32()?;
-                    if let Some(site) = of.strip_prefix("sw:") {
-                        // per-row weight scales: only unfrozen channels update
-                        let sw = self.qparams.sw.get_mut(site).unwrap();
-                        match (self.sel, &selection) {
-                            (SelKind::Indexed, Some(sel)) => {
-                                let si = site_index(site).unwrap();
-                                self.adam.apply_rows(of, &mut sw.data, &g.data, &sel.channels[si]);
-                            }
-                            (SelKind::Flagged, Some(sel)) => {
-                                let si = site_index(site).unwrap();
-                                if sel.flags[si] {
-                                    self.adam.apply_full(of, &mut sw.data, &g.data);
-                                }
-                            }
-                            _ => self.adam.apply_full(of, &mut sw.data, &g.data),
-                        }
-                    } else if let Some(site) = of.strip_prefix("sx:") {
-                        let act = self.qparams.act.get_mut(site).unwrap();
-                        self.adam.apply_scalar(of, &mut act.scale, g.data[0]);
-                    } else if let Some(site) = of.strip_prefix("zx:") {
-                        let act = self.qparams.act.get_mut(site).unwrap();
-                        // zero points are plain parameters (never log-domain)
-                        let mut zp = act.zero_point;
-                        let saved = self.adam.log_domain;
-                        self.adam.log_domain = false;
-                        self.adam.apply_scalar(of, &mut zp, g.data[0]);
-                        self.adam.log_domain = saved;
-                        act.zero_point = zp;
-                    } else if kind_of(of) == "weight" {
-                        match (self.sel, &selection) {
-                            (SelKind::Indexed, Some(sel)) => {
-                                let si = site_index(of).unwrap();
-                                self.sgd.apply_rows(
-                                    of,
-                                    self.params.get_mut(of)?,
-                                    &g.data,
-                                    &sel.channels[si],
-                                );
-                            }
-                            (SelKind::Flagged, Some(sel)) => {
-                                let si = site_index(of).unwrap();
-                                if sel.flags[si] {
-                                    self.sgd.apply_full(of, self.params.get_mut(of)?, &g.data);
-                                }
-                            }
-                            _ => self.sgd.apply_full(of, self.params.get_mut(of)?, &g.data),
-                        }
-                    } else {
-                        // biases / norm params: always updated (paper §4)
-                        self.sgd.apply_full(of, self.params.get_mut(of)?, &g.data);
-                    }
-                }
-                "state" => {
-                    let of = spec.of.as_deref().unwrap();
-                    *self.states.map.get_mut(of).unwrap() = val.f32()?.clone();
-                }
-                _ => {}
-            }
-        }
+        apply_train_outputs(
+            man,
+            &outs,
+            self.sel,
+            selection,
+            &mut self.sgd,
+            &mut self.adam,
+            &mut self.params,
+            &mut self.qparams,
+            &mut self.states,
+        )?;
         timing.optim = t2.elapsed();
 
         let loss = outs[self.loss_i].scalar()?;
         let correct = outs[self.correct_i].i32()?.data[0];
+        let active_frac = match (&self.policy, self.sel) {
+            (Some(p), _) => p.unfrozen_fraction(),
+            (None, SelKind::None) => 0.0,
+            _ => 1.0,
+        };
         self.ws.give_values(outs);
 
         // ---- freezing-frequency bookkeeping -------------------------------
@@ -404,10 +443,19 @@ impl EfqatTrainer {
             loss,
             correct,
             batch: batch.count * label_rows_per_example(man),
+            active_frac,
+            bytes_exchanged: 0,
             timing,
         };
         self.step_no += 1;
         Ok(rec)
+    }
+
+    /// Combined bit-exact digest of the SGD and Adam optimizer state —
+    /// the data-parallel equivalence suite compares training runs with
+    /// this without exposing the private moment buffers.
+    pub fn optimizer_digest(&self) -> u64 {
+        self.sgd.state_digest() ^ self.adam.state_digest().rotate_left(1)
     }
 
     /// One full epoch (the paper applies exactly one EfQAT epoch).
@@ -419,6 +467,207 @@ impl EfqatTrainer {
             log.push(rec);
         }
         Ok(log)
+    }
+}
+
+/// One data-parallel worker's private execution context: a shard-batch
+/// [`GraphStep`] clone plus its own workspace and input binding (the
+/// graph executor is `Send` but not `Sync`, so each worker owns one).
+struct WorkerSlot {
+    step: GraphStep,
+    ws: Workspace,
+    binder: Binder,
+}
+
+/// Data-parallel EfQAT training (`efqat train --workers W`).
+///
+/// Wraps an [`EfqatTrainer`] (which keeps owning every piece of host
+/// state — params, qparams, states, optimizers, freeze policy) and adds
+/// `W` worker slots.  Each batch is split into the *fixed* virtual-shard
+/// grid of [`ShardPlan`] — a function of the batch size, never of `W` —
+/// and workers run forward + frozen-aware partial backward on their
+/// shards round-robin with a capped GEMM thread budget
+/// (`EFQAT_THREADS / W`).  The [`GradExchange`] then tree-reduces only
+/// the active gradient slices into shard 0, in a fixed pairwise order,
+/// before the ordinary optimizer step runs.  Final weights, optimizer
+/// state and metrics are bit-identical at any `W`
+/// (`rust/tests/data_parallel.rs` enforces this for W ∈ {1, 2, 4}).
+pub struct DataParallelTrainer {
+    /// The wrapped single trainer; all host state lives here.
+    pub inner: EfqatTrainer,
+    /// Actual worker count (requested, clamped to the shard count).
+    pub workers: usize,
+    /// Cumulative exchange payload actually shipped (bytes).
+    pub active_bytes: u64,
+    /// Cumulative dense-equivalent payload (bytes) — the shrink baseline.
+    pub dense_bytes: u64,
+    plan: ShardPlan,
+    exchange: GradExchange,
+    slots: Vec<WorkerSlot>,
+    /// Shard batches, refreshed in place each step.
+    shard_batches: Vec<Batch>,
+    /// Per-worker GEMM thread budget (`EFQAT_THREADS / W`, at least 1).
+    gemm_threads: usize,
+}
+
+impl DataParallelTrainer {
+    /// Wrap `inner` with `workers` worker slots.  Only native-backend
+    /// steps can be sharded (the worker steps are synthesized from the
+    /// model's graph declaration at the shard batch size).
+    pub fn new(inner: EfqatTrainer, workers: usize) -> Result<DataParallelTrainer> {
+        let man = &inner.step.manifest;
+        let plan = ShardPlan::new(man.batch_size, inner.cfg.seed);
+        let exchange = GradExchange::plan(man)?;
+        let w = workers.clamp(1, plan.shards);
+        let mut slots = Vec::with_capacity(w);
+        for _ in 0..w {
+            slots.push(WorkerSlot {
+                step: crate::backend::native::shard_step(&man.name, plan.shard_bs)?,
+                ws: Workspace::new(),
+                binder: Binder::new(),
+            });
+        }
+        let gemm_threads = (matmul::total_threads() / w).max(1);
+        Ok(DataParallelTrainer {
+            inner,
+            workers: w,
+            active_bytes: 0,
+            dense_bytes: 0,
+            plan,
+            exchange,
+            slots,
+            shard_batches: Vec::new(),
+            gemm_threads,
+        })
+    }
+
+    /// The sharding layout (for benches and diagnostics).
+    pub fn shard_plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// One data-parallel training step: split → shard forward/backward →
+    /// sparse tree-reduce → optimizer scatter → freeze bookkeeping.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<StepRecord> {
+        let mut timing = StepTiming::default();
+        let t0 = Instant::now();
+        split_batch_into(batch, self.plan.shards, &mut self.shard_batches)?;
+        timing.bind = t0.elapsed();
+
+        let selection = self.inner.policy.as_ref().map(|p| p.selection());
+        let shards = self.plan.shards;
+        let gemm = self.gemm_threads;
+        let params = &self.inner.params;
+        let qparams = &self.inner.qparams;
+        let states = &self.inner.states;
+        let shard_batches = &self.shard_batches;
+        let t1 = Instant::now();
+        let mut outs = run_sharded(&mut self.slots, shards, |slot, s| {
+            // split EFQAT_THREADS across workers; the cap is thread-local,
+            // so set it on whichever thread ended up running this shard
+            matmul::set_thread_cap(gemm);
+            let WorkerSlot { step, ws, binder } = slot;
+            let ctx = BindCtx {
+                params,
+                qparams: Some(qparams),
+                states,
+                batch: &shard_batches[s],
+                selection,
+            };
+            let inputs = binder.bind(&step.man, &ctx)?;
+            step.execute_ws(inputs, ws)
+        })?;
+        // the W=1 path runs the closure on this thread; clear the cap so
+        // eval/serve GEMMs after training see the full budget again
+        matmul::set_thread_cap(0);
+        timing.exec = t1.elapsed();
+
+        // ---- sparse gradient exchange ------------------------------------
+        let t2 = Instant::now();
+        let stats = self.exchange.reduce(&mut outs, selection)?;
+        timing.exchange = t2.elapsed();
+        self.active_bytes += stats.active_bytes;
+        self.dense_bytes += stats.dense_bytes;
+
+        // ---- Optimizer Step on the reduced shard-0 vector ----------------
+        let t3 = Instant::now();
+        apply_train_outputs(
+            &self.slots[0].step.man,
+            &outs[0],
+            self.inner.sel,
+            selection,
+            &mut self.inner.sgd,
+            &mut self.inner.adam,
+            &mut self.inner.params,
+            &mut self.inner.qparams,
+            &mut self.inner.states,
+        )?;
+        timing.optim = t3.elapsed();
+
+        let loss = outs[0][self.inner.loss_i].scalar()?;
+        let correct = outs[0][self.inner.correct_i].i32()?.data[0];
+        let active_frac = match (&self.inner.policy, self.inner.sel) {
+            (Some(p), _) => p.unfrozen_fraction(),
+            (None, SelKind::None) => 0.0,
+            _ => 1.0,
+        };
+        // recycle each shard's buffers into the workspace of the worker
+        // that produced them (shard s ran on worker s mod nw)
+        let nw = self.slots.len().min(shards).max(1);
+        for (s, o) in outs.into_iter().enumerate() {
+            self.slots[s % nw].ws.give_values(o);
+        }
+
+        // ---- freezing-frequency bookkeeping ------------------------------
+        let t4 = Instant::now();
+        if let Some(policy) = &mut self.inner.policy {
+            if policy.will_refresh(batch.count) {
+                let weights: Vec<&Tensor> = policy
+                    .sites
+                    .iter()
+                    .map(|s| self.inner.params.get(&s.name).unwrap())
+                    .collect();
+                policy.observe_samples(batch.count, &weights);
+            } else {
+                policy.observe_samples(batch.count, &[]);
+            }
+        }
+        timing.freeze = t4.elapsed();
+
+        let rec = StepRecord {
+            step: self.inner.step_no,
+            loss,
+            correct,
+            batch: batch.count * label_rows_per_example(&self.inner.step.manifest),
+            active_frac,
+            bytes_exchanged: stats.active_bytes,
+            timing,
+        };
+        self.inner.step_no += 1;
+        Ok(rec)
+    }
+
+    /// One full epoch, mirroring [`EfqatTrainer::train_epoch`].
+    pub fn train_epoch(&mut self, loader: &mut Loader) -> Result<MetricsLog> {
+        let label = format!("efqat-dp{}:{}", self.workers, self.inner.step.manifest.name);
+        let mut log = MetricsLog::new(&label);
+        loader.reset();
+        while let Some(batch) = loader.next_batch() {
+            let rec = self.train_step(&batch)?;
+            log.push(rec);
+        }
+        Ok(log)
+    }
+
+    /// Unwrap back into the single trainer (all host state lives there;
+    /// the worker slots are discarded).
+    pub fn into_inner(self) -> EfqatTrainer {
+        self.inner
+    }
+
+    /// See [`EfqatTrainer::optimizer_digest`].
+    pub fn optimizer_digest(&self) -> u64 {
+        self.inner.optimizer_digest()
     }
 }
 

@@ -62,6 +62,39 @@ pub struct Selection {
     pub flags: Vec<bool>,
 }
 
+impl Selection {
+    /// Active (gradient-receiving) output channels of one site: the
+    /// channel list's length for the channel-wise policies, all of
+    /// `c_out` or none for the flag-gated LWPN policy.
+    pub fn active_count(&self, si: usize, site: &Site) -> usize {
+        match self.channels.get(si) {
+            Some(ch) if !ch.is_empty() => ch.len(),
+            _ if self.flags.get(si).copied().unwrap_or(false) => site.c_out,
+            _ => 0,
+        }
+    }
+
+    /// Per-site active-channel counts, in site order — what the gradient
+    /// exchange ships and what the train metrics log.
+    pub fn active_counts(&self, sites: &[Site]) -> Vec<usize> {
+        sites.iter().enumerate().map(|(si, s)| self.active_count(si, s)).collect()
+    }
+
+    /// Fraction of freezable-site weights currently receiving gradients
+    /// (weighted by parameter count, so a wide unfrozen site counts for
+    /// more than a narrow one).  This is the observable the exchange
+    /// payload shrinks with: bytes-on-the-wire ∝ active_fraction.
+    pub fn active_fraction(&self, sites: &[Site]) -> f32 {
+        let total: usize = sites.iter().map(|s| s.size).sum();
+        let active: usize = sites
+            .iter()
+            .enumerate()
+            .map(|(si, s)| self.active_count(si, s) * s.size / s.c_out.max(1))
+            .sum();
+        active as f32 / total.max(1) as f32
+    }
+}
+
 /// Stateful selection policy: tracks per-channel importances (Eq. 6) and
 /// re-runs Top-K selection every `freq` training samples (paper §3.2).
 pub struct FreezePolicy {
@@ -222,25 +255,11 @@ impl FreezePolicy {
         Selection { channels: vec![Vec::new(); self.sites.len()], flags }
     }
 
-    /// Fraction of network weights currently receiving gradients.
+    /// Fraction of network weights currently receiving gradients
+    /// (delegates to [`Selection::active_fraction`] over this policy's
+    /// sites).
     pub fn unfrozen_fraction(&self) -> f32 {
-        let total: usize = self.sites.iter().map(|s| s.size).sum();
-        let unfrozen: usize = match self.mode {
-            Mode::Lwpn => self
-                .sites
-                .iter()
-                .zip(&self.selection.flags)
-                .filter(|(_, &f)| f)
-                .map(|(s, _)| s.size)
-                .sum(),
-            _ => self
-                .sites
-                .iter()
-                .zip(&self.selection.channels)
-                .map(|(s, ch)| ch.len() * s.size / s.c_out.max(1))
-                .sum(),
-        };
-        unfrozen as f32 / total.max(1) as f32
+        self.selection.active_fraction(&self.sites)
     }
 }
 
@@ -402,6 +421,39 @@ mod tests {
         w.row_mut(1).copy_from_slice(&[0.1, 0.1]);
         p.refresh(&[&w]);
         assert_eq!(p.selection().channels[0], vec![0, 2]);
+    }
+
+    #[test]
+    fn active_counts_and_fraction_cover_both_selection_shapes() {
+        let sites = mk_sites(&[(4, 2), (8, 2)], 0.5);
+        // channel-wise: counts are the per-site list lengths
+        let sel = Selection { channels: vec![vec![1, 3], vec![0, 2, 4, 6]], flags: vec![true; 2] };
+        assert_eq!(sel.active_counts(&sites), vec![2, 4]);
+        assert!((sel.active_fraction(&sites) - 0.5).abs() < 1e-7);
+        // flag-gated (LWPN): counts are all-of-c_out or zero
+        let sel = Selection { channels: vec![Vec::new(), Vec::new()], flags: vec![true, false] };
+        assert_eq!(sel.active_counts(&sites), vec![4, 0]);
+        // site 0 holds 8 of the 24 weights
+        assert!((sel.active_fraction(&sites) - 8.0 / 24.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn prop_policy_fraction_equals_selection_fraction() {
+        forall(100, |r| {
+            let n_sites = 1 + r.below(4);
+            let dims: Vec<(usize, usize)> =
+                (0..n_sites).map(|_| (1 + r.below(16), 1 + r.below(8))).collect();
+            let mut rng = r.split(9);
+            let ws = mk_weights(&mut rng, &dims);
+            let refs: Vec<&Tensor> = ws.iter().collect();
+            let ratio = r.uniform_in(0.01, 0.99);
+            for mode in [Mode::Cwpl, Mode::Cwpn, Mode::Lwpn] {
+                let p = FreezePolicy::new(mode, ratio, 100, mk_sites(&dims, ratio), &refs);
+                let f = p.unfrozen_fraction();
+                assert_eq!(f, p.selection().active_fraction(&p.sites));
+                assert!((0.0..=1.0).contains(&f), "{mode:?}: fraction {f} out of range");
+            }
+        });
     }
 
     #[test]

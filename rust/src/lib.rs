@@ -45,7 +45,10 @@
 //!   loudly before training starts.
 //! * [`coordinator`] implements the paper's Algorithm 1: PTQ
 //!   initialization, the EfQAT epoch with channel/layer freezing, and the
-//!   optimizer step.
+//!   optimizer step.  `--workers W` shards each batch across worker
+//!   threads with a frozen-aware sparse gradient exchange
+//!   ([`coordinator::shard`], RFC `docs/rfcs/0004-gradient-exchange.md`)
+//!   that is bit-identical at any worker count.
 //! * [`freeze`] implements the importance metric (Eq. 6) and the three
 //!   freezing policies (CWPL / CWPN / LWPN, Table 2).
 //! * [`quant`] mirrors the quantization math (Eq. 1–4) host-side for PTQ

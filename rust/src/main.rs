@@ -4,7 +4,10 @@
 //!   pretrain  train the FP baseline checkpoint         (paper Table 3 "FP")
 //!   ptq       MinMax post-training quantization + eval (paper Table 3 "PTQ")
 //!   train     full pipeline: FP ckpt → PTQ → one EfQAT epoch → eval
-//!             (--mode cwpl|cwpn|lwpn|qat|r0, --ratio %, --train.freq f)
+//!             (--mode cwpl|cwpn|lwpn|qat|r0, --ratio %, --train.freq f);
+//!             `--workers W` (or EFQAT_TRAIN_WORKERS) shards each batch
+//!             across W threads with a frozen-aware sparse gradient
+//!             exchange — bit-identical results at any W
 //!   eval      evaluate a saved checkpoint (fp or quantized);
 //!             `--exec int8` lowers the graph to the integer engine and
 //!             reports accuracy on the *deployed* arithmetic
@@ -55,7 +58,8 @@ fn print_usage() {
     eprintln!(
         "usage: efqat <pretrain|ptq|train|eval|serve|bundle|info> --model <m> \
          [--backend native|pjrt] [--bits w8a8] [--exec fakequant|int8] \
-         [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--config file.toml] [--key value ...]\n\
+         [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--workers W] [--config file.toml] \
+         [--key value ...]\n\
        serve: efqat serve --model <m> --ckpt <file> [--exec int8|f32] [--bits w8a8] \
          [--batch.max 32] [--batch.wait-ms 2] [--serve.workers 2] [--port 7878]"
     );

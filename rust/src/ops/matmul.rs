@@ -23,7 +23,17 @@
 //! the `EFQAT_THREADS` environment variable overrides it (read once per
 //! process; benches and CI set it for reproducible numbers across
 //! machines).
+//!
+//! The process-wide ceiling can additionally be lowered *per calling
+//! thread* via [`set_thread_cap`]: the data-parallel trainer splits
+//! `EFQAT_THREADS` across its shard workers so `W` concurrent shards do
+//! not oversubscribe the machine (each worker caps its own GEMMs at
+//! `EFQAT_THREADS / W`).  The cap is thread-local, so a capped shard
+//! worker never perturbs GEMMs issued from other threads, and it only
+//! ever changes *how many* workers split the rows — never the result
+//! (disjoint output rows are deterministic at any worker count).
 
+use std::cell::Cell;
 use std::sync::OnceLock;
 use std::thread;
 
@@ -51,12 +61,41 @@ fn hw_threads() -> usize {
     })
 }
 
+thread_local! {
+    /// Per-thread ceiling override; 0 means "no override" (use the
+    /// process-wide [`hw_threads`] ceiling).
+    static THREAD_CAP: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Cap the GEMM worker count for kernels issued *from the calling
+/// thread*; `0` clears the cap.  Spawned shard workers set this once per
+/// step so concurrent shards share the machine instead of each claiming
+/// the full `EFQAT_THREADS` ceiling.
+pub fn set_thread_cap(cap: usize) {
+    THREAD_CAP.with(|c| c.set(cap));
+}
+
+/// The calling thread's current GEMM worker cap (0 = uncapped).
+pub fn thread_cap() -> usize {
+    THREAD_CAP.with(|c| c.get())
+}
+
+/// The process-wide worker ceiling (`EFQAT_THREADS` or the hardware
+/// parallelism) — what a per-thread cap divides across shard workers.
+pub fn total_threads() -> usize {
+    hw_threads()
+}
+
 fn thread_count(rows: usize, flops_per_row: usize) -> usize {
     if rows == 0 {
         return 1;
     }
+    let ceiling = match thread_cap() {
+        0 => hw_threads(),
+        cap => cap.min(hw_threads()),
+    };
     let by_work = (rows.saturating_mul(flops_per_row) / PAR_MIN_FLOPS).max(1);
-    hw_threads().min(by_work).min(rows)
+    ceiling.min(by_work).min(rows)
 }
 
 /// The worker count [`par_rows`] / [`par_rows_scratch`] would use for
@@ -464,6 +503,49 @@ mod tests {
         assert_eq!(parse_threads(Some("0".into())), None);
         assert_eq!(parse_threads(Some("lots".into())), None);
         assert_eq!(parse_threads(None), None);
+    }
+
+    #[test]
+    fn per_thread_cap_bounds_the_split_and_clears() {
+        // far above PAR_MIN_FLOPS so only the ceiling binds
+        let uncapped = planned_threads(64, 1 << 20);
+        set_thread_cap(1);
+        assert_eq!(planned_threads(64, 1 << 20), 1);
+        set_thread_cap(2);
+        assert!(planned_threads(64, 1 << 20) <= 2);
+        set_thread_cap(usize::MAX);
+        assert_eq!(planned_threads(64, 1 << 20), uncapped, "cap never raises the ceiling");
+        set_thread_cap(0);
+        assert_eq!(planned_threads(64, 1 << 20), uncapped);
+    }
+
+    #[test]
+    fn cap_is_thread_local() {
+        set_thread_cap(0);
+        let uncapped = planned_threads(64, 1 << 20);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                set_thread_cap(1);
+                assert_eq!(planned_threads(64, 1 << 20), 1);
+            });
+        });
+        // the spawned worker's cap must not leak to this thread
+        assert_eq!(planned_threads(64, 1 << 20), uncapped);
+    }
+
+    #[test]
+    fn capped_gemm_matches_uncapped_bitwise() {
+        // the cap changes the row split only — outputs are disjoint, so
+        // the result is identical at any worker count
+        let (m, k, n) = (64, 300, 48);
+        let mut rng = crate::rng::Pcg64::new(11);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(n * k, 1.0);
+        let full = linear_fwd(&x, &w, None, m, k, n);
+        set_thread_cap(1);
+        let capped = linear_fwd(&x, &w, None, m, k, n);
+        set_thread_cap(0);
+        assert_eq!(full, capped);
     }
 
     #[test]

@@ -14,6 +14,30 @@ use std::collections::BTreeMap;
 
 use crate::tensor::Tensor;
 
+/// FNV-1a over a byte stream — tiny helper for the optimizer-state
+/// digests below (bit-exact comparisons across training runs without
+/// exposing the private moment buffers).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn update_f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.update(&x.to_bits().to_le_bytes());
+        }
+    }
+}
+
 /// SGD with momentum and decoupled weight decay (PyTorch semantics:
 /// v = μv + g + λw;  w -= lr·v).
 pub struct SgdMomentum {
@@ -47,6 +71,18 @@ impl SgdMomentum {
             v.data[i] = self.momentum * v.data[i] + g;
             param.data[i] -= self.lr * v.data[i];
         }
+    }
+
+    /// Bit-exact digest of the momentum state (buffer names + f32 bit
+    /// patterns) — lets tests assert two training runs left the
+    /// optimizer in an identical state without exposing the buffers.
+    pub fn state_digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for (name, v) in &self.velocity {
+            h.update(name.as_bytes());
+            h.update_f32s(&v.data);
+        }
+        h.0
     }
 
     /// Row-sparse update: `grad_rows` holds `idx.len()` rows of gradient
@@ -154,6 +190,23 @@ impl Adam {
         let mut p = [*param];
         self.apply_indices(name, &mut p, [(0usize, grad)]);
         *param = p[0];
+    }
+
+    /// Bit-exact digest of the Adam state (m/v moment bit patterns and
+    /// per-buffer step counts) — see [`SgdMomentum::state_digest`].
+    pub fn state_digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for (name, m) in &self.m {
+            h.update(name.as_bytes());
+            h.update_f32s(m);
+        }
+        for v in self.v.values() {
+            h.update_f32s(v);
+        }
+        for t in self.t.values() {
+            h.update(&t.to_le_bytes());
+        }
+        h.0
     }
 }
 
@@ -263,6 +316,30 @@ mod tests {
             raw.apply_scalar("s", &mut s, 10.0);
         }
         assert!(s < 0.0);
+    }
+
+    #[test]
+    fn state_digests_deterministic_and_state_sensitive() {
+        let step = |o: &mut SgdMomentum| {
+            let mut p = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+            o.apply_full("p", &mut p, &[1.0, -1.0]);
+        };
+        let mut a = SgdMomentum::new(0.1, 0.9, 0.0);
+        let mut b = SgdMomentum::new(0.1, 0.9, 0.0);
+        step(&mut a);
+        step(&mut b);
+        assert_eq!(a.state_digest(), b.state_digest());
+        step(&mut b); // one extra step must change the digest
+        assert_ne!(a.state_digest(), b.state_digest());
+
+        let mut x = Adam::new(0.1);
+        let mut y = Adam::new(0.1);
+        let (mut s1, mut s2) = (1.0f32, 1.0f32);
+        x.apply_scalar("s", &mut s1, 0.5);
+        y.apply_scalar("s", &mut s2, 0.5);
+        assert_eq!(x.state_digest(), y.state_digest());
+        y.apply_scalar("s", &mut s2, 0.5);
+        assert_ne!(x.state_digest(), y.state_digest());
     }
 
     #[test]
