@@ -2,10 +2,12 @@
 """Compare two BENCH_*.json artifacts and fail on regressions.
 
 The benches (table5, workspace_alloc, serve_throughput, serve_latency)
-all emit flat-ish JSON documents of numeric leaves.  This script walks
-both documents, pairs leaves by path, classifies each metric by its key
-name, and exits non-zero if any metric regressed by more than the
-threshold (default 15%), printing a table of offenders.
+all emit JSON documents of numeric leaves, possibly nested (e.g.
+serve_latency's per-cell grid, its two_model per-model percentiles, and
+swap_latency_ms).  This script walks both documents, pairs leaves by
+path, classifies each metric by its key name, and exits non-zero if any
+metric regressed by more than the threshold (default 15%), printing a
+table of offenders.
 
 Classification by key suffix/substring (case-insensitive):
   higher-is-worse:  *_ms, *_us, *_s, *_seconds, *_bytes*, *_time*

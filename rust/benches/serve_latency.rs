@@ -12,25 +12,31 @@
 //! parallelism: at `max_batch 1` every request pays its own queue hops
 //! and GEMM, at `max_batch ≥ 8` the `u8×i8→i32` GEMMs amortize — the
 //! north-star check asserts batched throughput beats unbatched at the
-//! highest offered load.  Results go to `BENCH_latency.json` and
-//! `bench_out/serve_latency.csv`.
+//! highest offered load.
+//!
+//! A second leg runs the multi-model registry: two models served from
+//! one runtime under concurrent load, reported per model, plus a
+//! checkpoint hot swap landed mid-load — `swap_latency_ms` is the time
+//! from `Registry::install` to the first reply served by the new
+//! checkpoint.  Results go to `BENCH_latency.json` (`cells`,
+//! `two_model`, `swap_latency_ms`) and `bench_out/serve_latency.csv`.
 //!
 //!   cargo bench --bench serve_latency [-- --full true]
 //!   cargo bench --bench serve_latency -- --model mlp --requests 200 --wait-ms 1
-
 mod common;
 
-use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use efqat::backend::Value;
 use efqat::graph::InputKind;
 use efqat::harness::Table;
 use efqat::json::Json;
-use efqat::lower::lower;
+use efqat::lower::{lower, QuantizedGraph};
 use efqat::rng::Pcg64;
-use efqat::serve::{BatchCfg, Engine, Server, ServeCfg};
+use efqat::serve::{BatchCfg, Registry, Server, ServeCfg, Ticket};
 use efqat::tensor::{ITensor, Tensor};
 
 /// Percentile over a sorted sample (nearest-rank on the inclusive grid).
@@ -55,6 +61,71 @@ fn example(kind: InputKind, classes: usize, rng: &mut Pcg64) -> Value {
     }
 }
 
+/// The bench model lowered at a chosen init seed (distinct seeds stand
+/// in for successive training checkpoints of one model).
+fn lowered_at(model: &str, seed: u64) -> Arc<QuantizedGraph> {
+    let (g, params, q) = efqat::testing::synth_lowering_fixture_seeded(model, seed);
+    Arc::new(lower(&g, &params, &q, 8, 8).unwrap())
+}
+
+/// Pipelined closed-loop submitter: keeps `window` requests in flight
+/// against `model` (`None` = the default model), returns per-request
+/// latency in ms (submit → logits, queueing included).  `done` counts
+/// completions for cross-thread progress gating.
+#[allow(clippy::too_many_arguments)]
+fn pump(
+    server: &Server,
+    model: Option<&str>,
+    kind: InputKind,
+    classes: usize,
+    requests: usize,
+    window: usize,
+    seed: u64,
+    done: Option<&AtomicUsize>,
+) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed);
+    let mut lats = Vec::with_capacity(requests);
+    let mut inflight: VecDeque<(Instant, Ticket)> = VecDeque::with_capacity(window);
+    let mut drain = |(q0, tk): (Instant, Ticket), lats: &mut Vec<f64>| {
+        tk.wait().expect("request failed");
+        lats.push(q0.elapsed().as_secs_f64() * 1e3);
+        if let Some(d) = done {
+            d.fetch_add(1, Ordering::Relaxed);
+        }
+    };
+    for _ in 0..requests {
+        if inflight.len() >= window {
+            let head = inflight.pop_front().unwrap();
+            drain(head, &mut lats);
+        }
+        let x = example(kind, classes, &mut rng);
+        let tk = server.try_submit(model, x).unwrap_or_else(|e| panic!("submit: {e}"));
+        inflight.push_back((Instant::now(), tk));
+    }
+    for pair in inflight {
+        drain(pair, &mut lats);
+    }
+    lats
+}
+
+/// p50/p95/p99 + throughput for one latency sample, as a JSON cell.
+fn cell(lat_ms: &mut Vec<f64>, elapsed_s: f64) -> (f64, f64, f64, f64, BTreeMap<String, Json>) {
+    lat_ms.sort_unstable_by(f64::total_cmp);
+    let total = lat_ms.len() as f64;
+    let tput = total / elapsed_s;
+    let (p50, p95, p99) = (pct(lat_ms, 0.50), pct(lat_ms, 0.95), pct(lat_ms, 0.99));
+    let cell: BTreeMap<String, Json> = [
+        ("ex_per_s".to_string(), Json::Num(tput)),
+        ("p50_ms".to_string(), Json::Num(p50)),
+        ("p95_ms".to_string(), Json::Num(p95)),
+        ("p99_ms".to_string(), Json::Num(p99)),
+        ("requests".to_string(), Json::Num(total)),
+    ]
+    .into_iter()
+    .collect();
+    (tput, p50, p95, p99, cell)
+}
+
 fn main() {
     let cfg = common::bench_config_with(&[("model", "mlp")]);
     let quick = common::is_quick(&cfg);
@@ -65,10 +136,11 @@ fn main() {
     let wait_ms = cfg.f32("wait-ms", 2.0);
     let submitter_counts: &[usize] = if quick { &[1, 32] } else { &[1, 8, 32] };
     let batch_sizes: &[usize] = &[1, 8, 32];
+    let max_wait = Duration::from_secs_f32(wait_ms / 1e3);
 
     // lowered once from the shared synthetic fixture, reused by every cell
-    let (base, params, q) = efqat::testing::synth_lowering_fixture(&model);
-    let engine = Arc::new(lower(&base, &params, &q, 8, 8).unwrap());
+    let engine = lowered_at(&model, 1);
+    let (kind, classes) = (engine.input, engine.classes);
 
     let mut t = Table::new(
         &format!("Serve latency: offered load × max_batch, {model} int8, {workers} worker(s)"),
@@ -81,38 +153,19 @@ fn main() {
     for &submitters in submitter_counts {
         for &max_batch in batch_sizes {
             let scfg = ServeCfg {
-                batch: BatchCfg {
-                    max_batch,
-                    max_wait: Duration::from_secs_f32(wait_ms / 1e3),
-                },
+                batch: BatchCfg { max_batch, max_wait },
                 workers,
                 queue_cap: 4096,
             };
-            let server = Server::start(engine.clone() as Arc<dyn Engine>, scfg);
+            let server = Server::single(engine.clone(), scfg);
             let t0 = Instant::now();
             let mut lat_ms: Vec<f64> = std::thread::scope(|s| {
                 let handles: Vec<_> = (0..submitters)
                     .map(|si| {
-                        let (server, engine) = (&server, &engine);
+                        let server = &server;
                         s.spawn(move || {
-                            let mut rng = Pcg64::new(1000 + si as u64);
-                            let mut lats = Vec::with_capacity(requests);
-                            let mut inflight = std::collections::VecDeque::with_capacity(window);
-                            for _ in 0..requests {
-                                if inflight.len() >= window {
-                                    let (q0, tk): (Instant, efqat::serve::Ticket) =
-                                        inflight.pop_front().unwrap();
-                                    tk.wait().expect("request failed");
-                                    lats.push(q0.elapsed().as_secs_f64() * 1e3);
-                                }
-                                let x = example(engine.input, engine.classes, &mut rng);
-                                inflight.push_back((Instant::now(), server.submit(x).unwrap()));
-                            }
-                            for (q0, tk) in inflight {
-                                tk.wait().expect("request failed");
-                                lats.push(q0.elapsed().as_secs_f64() * 1e3);
-                            }
-                            lats
+                            let seed = 1000 + si as u64;
+                            pump(server, None, kind, classes, requests, window, seed, None)
                         })
                     })
                     .collect();
@@ -120,10 +173,7 @@ fn main() {
             });
             let elapsed = t0.elapsed().as_secs_f64();
             server.shutdown();
-            lat_ms.sort_unstable_by(f64::total_cmp);
-            let total = (submitters * requests) as f64;
-            let tput = total / elapsed;
-            let (p50, p95, p99) = (pct(&lat_ms, 0.50), pct(&lat_ms, 0.95), pct(&lat_ms, 0.99));
+            let (tput, p50, p95, p99, c) = cell(&mut lat_ms, elapsed);
             if submitters == max_load {
                 if max_batch == 1 {
                     unbatched_at_max_load = tput;
@@ -139,19 +189,104 @@ fn main() {
                 format!("{p95:.3}"),
                 format!("{p99:.3}"),
             ]);
-            let cell: BTreeMap<String, Json> = [
-                ("ex_per_s".to_string(), Json::Num(tput)),
-                ("p50_ms".to_string(), Json::Num(p50)),
-                ("p95_ms".to_string(), Json::Num(p95)),
-                ("p99_ms".to_string(), Json::Num(p99)),
-                ("requests".to_string(), Json::Num(total)),
-            ]
-            .into_iter()
-            .collect();
-            cells.insert(format!("s{submitters}_b{max_batch}"), Json::Obj(cell));
+            cells.insert(format!("s{submitters}_b{max_batch}"), Json::Obj(c));
         }
     }
     t.print();
+
+    // ---- two-model registry leg: per-model lanes + a hot swap under
+    // load.  Model "a" starts on checkpoint 1 and is swapped to
+    // checkpoint 2 once half its requests completed; "b" rides along to
+    // show one lane's swap does not stall the other.
+    let swapped = lowered_at(&model, 2);
+    let registry = Registry::new();
+    registry.install("a", engine.clone(), "fp-a-ckpt1").unwrap();
+    registry.install("b", lowered_at(&model, 3), "fp-b-ckpt1").unwrap();
+    let scfg = ServeCfg {
+        batch: BatchCfg { max_batch: 8, max_wait },
+        workers,
+        queue_cap: 4096,
+    };
+    let server = Server::start(registry, scfg).unwrap();
+    let per_model_submitters = if quick { 2 } else { 4 };
+    let per_model_requests = (requests / 2).max(50);
+    let done_a = AtomicUsize::new(0);
+    let swap_ms = Mutex::new(0.0f64);
+    let t0 = Instant::now();
+    let (mut lat_a, mut lat_b) = std::thread::scope(|s| {
+        let spawn_lane = |name: &'static str, seed0: u64| {
+            (0..per_model_submitters)
+                .map(|si| {
+                    let (server, done_a) = (&server, &done_a);
+                    s.spawn(move || {
+                        let done = (name == "a").then_some(done_a);
+                        let seed = seed0 + si as u64;
+                        pump(
+                            server,
+                            Some(name),
+                            kind,
+                            classes,
+                            per_model_requests,
+                            window,
+                            seed,
+                            done,
+                        )
+                    })
+                })
+                .collect::<Vec<_>>()
+        };
+        let a_handles = spawn_lane("a", 2000);
+        let b_handles = spawn_lane("b", 3000);
+        let (server, done_a, swapped, swap_ms) = (&server, &done_a, &swapped, &swap_ms);
+        s.spawn(move || {
+            // land the swap mid-load, then time install → first reply
+            // actually served by the new checkpoint
+            let target = per_model_submitters * per_model_requests / 2;
+            while done_a.load(Ordering::Relaxed) < target {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let mut rng = Pcg64::new(7777);
+            let t0 = Instant::now();
+            server.registry().install("a", swapped.clone(), "fp-a-ckpt2").unwrap();
+            loop {
+                let x = example(kind, classes, &mut rng);
+                let reply = server.try_submit(Some("a"), x).unwrap().wait_reply().unwrap();
+                if &*reply.fingerprint == "fp-a-ckpt2" {
+                    break;
+                }
+            }
+            *swap_ms.lock().unwrap() = t0.elapsed().as_secs_f64() * 1e3;
+        });
+        let lat_a: Vec<f64> = a_handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let lat_b: Vec<f64> = b_handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        (lat_a, lat_b)
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    let swap_latency_ms = *swap_ms.lock().unwrap();
+    assert!(swap_latency_ms > 0.0, "the swap probe never observed the new checkpoint");
+
+    let mut t2 = Table::new(
+        &format!(
+            "Two-model registry: {per_model_submitters} submitters/model, \
+             swap on \"a\" mid-load"
+        ),
+        &["model", "ex/s", "p50 ms", "p95 ms", "p99 ms"],
+    );
+    let mut two_model = BTreeMap::new();
+    for (name, lat) in [("a", &mut lat_a), ("b", &mut lat_b)] {
+        let (tput, p50, p95, p99, c) = cell(lat, elapsed);
+        t2.row(&[
+            name.to_string(),
+            format!("{tput:.0}"),
+            format!("{p50:.3}"),
+            format!("{p95:.3}"),
+            format!("{p99:.3}"),
+        ]);
+        two_model.insert(name.to_string(), Json::Obj(c));
+    }
+    t2.print();
+    println!("swap latency (install -> first reply from new checkpoint): {swap_latency_ms:.3} ms");
     t.write_csv(std::path::Path::new("bench_out/serve_latency.csv")).unwrap();
 
     let speedup = batched_at_max_load / unbatched_at_max_load.max(1e-12);
@@ -164,6 +299,8 @@ fn main() {
         ("window".to_string(), Json::Num(window as f64)),
         ("requests_per_submitter".to_string(), Json::Num(requests as f64)),
         ("cells".to_string(), Json::Obj(cells)),
+        ("two_model".to_string(), Json::Obj(two_model)),
+        ("swap_latency_ms".to_string(), Json::Num(swap_latency_ms)),
         ("unbatched_ex_per_s_at_max_load".to_string(), Json::Num(unbatched_at_max_load)),
         ("batched_ex_per_s_at_max_load".to_string(), Json::Num(batched_at_max_load)),
         ("batched_over_unbatched".to_string(), Json::Num(speedup)),
@@ -171,7 +308,7 @@ fn main() {
     .into_iter()
     .collect();
     std::fs::write("BENCH_latency.json", Json::Obj(doc).render()).unwrap();
-    println!("\nwrote BENCH_latency.json (p50/p95/p99 latency + examples/sec per cell)");
+    println!("\nwrote BENCH_latency.json (per-cell + per-model latency, swap latency)");
     println!(
         "north-star check: batched throughput at {max_load} submitters is {speedup:.2}x unbatched"
     );

@@ -281,6 +281,31 @@ impl Bundle {
     }
 }
 
+/// Canonical checkpoint fingerprint for the serving registry (RFC 0005).
+///
+/// * A directory (or an explicit path to a `manifest.json`) is
+///   fingerprinted as its RFC 0001 bundle: [`Bundle::bundle_hash`], the
+///   digest over every artifact's recorded SHA-256 — so two directories
+///   with identical artifact content agree, byte-for-byte.
+/// * Any other regular file (e.g. a raw `*.ckpt` written by the
+///   pipeline) is fingerprinted as the SHA-256 of its contents.
+///
+/// Lowercase hex either way; this is what `efqat serve` installs
+/// engines under and what response `fp` fields abbreviate.
+pub fn fingerprint(path: &Path) -> Result<String> {
+    let meta = std::fs::metadata(path)
+        .with_context(|| format!("fingerprinting checkpoint {}", path.display()))?;
+    if meta.is_dir() {
+        return Ok(Bundle::load(&Bundle::manifest_path(path))?.bundle_hash());
+    }
+    if path.file_name().is_some_and(|n| n == "manifest.json") {
+        return Ok(Bundle::load(path)?.bundle_hash());
+    }
+    let data = std::fs::read(path)
+        .with_context(|| format!("fingerprinting checkpoint {}", path.display()))?;
+    Ok(sha256_hex(&data))
+}
+
 fn file_ref(dir: &Path, rel: &str) -> Result<FileRef> {
     let data = std::fs::read(dir.join(rel))
         .with_context(|| format!("reading {rel} for checksumming"))?;
@@ -460,6 +485,26 @@ mod tests {
         std::fs::remove_file(dir.join("toy_calib.manifest.json")).unwrap();
         let err = bundle.verify_entry(&dir, "toy_calib").unwrap_err().to_string();
         assert!(err.contains("unreadable"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_hashes_files_and_resolves_bundles() {
+        let dir = tmp("fp");
+        let ckpt = dir.join("model.ckpt");
+        std::fs::write(&ckpt, b"weights").unwrap();
+        assert_eq!(fingerprint(&ckpt).unwrap(), sha256_hex(b"weights"));
+
+        std::fs::write(dir.join("toy_calib.manifest.json"), TOY_MANIFEST).unwrap();
+        let bundle = Bundle::scan(&dir, BTreeMap::new()).unwrap();
+        bundle.save(&Bundle::manifest_path(&dir)).unwrap();
+        // directory and explicit manifest.json agree: both are the
+        // bundle hash, not the hash of the manifest file's bytes
+        assert_eq!(fingerprint(&dir).unwrap(), bundle.bundle_hash());
+        assert_eq!(fingerprint(&Bundle::manifest_path(&dir)).unwrap(), bundle.bundle_hash());
+
+        let err = fingerprint(&dir.join("ghost.ckpt")).unwrap_err().to_string();
+        assert!(err.contains("fingerprinting"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

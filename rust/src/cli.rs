@@ -1,12 +1,20 @@
 //! Tiny CLI parser (clap is unavailable offline).
 //!
 //! Grammar: `efqat <subcommand> [--key value | --flag] ...`
-//! All `--key value` pairs are collected and overlaid onto the experiment
-//! [`crate::cfg::Config`], so any config key can be overridden from the
-//! command line — including the execution selectors (`--backend
-//! native|pjrt`, `--exec fakequant|int8`) and serving knobs like
-//! `--serve.batch` or `efqat serve`'s `--batch.max` / `--batch.wait-ms`
-//! / `--port`, which need no parser support of their own.
+//!
+//! Two layers:
+//!
+//! * [`Args`] — the tokenizer: splits argv into subcommand, `--key
+//!   value` options, and bare `--flag`s.  Benches reuse it untyped.
+//! * [`Cli`] — the typed layer `efqat` itself runs: each subcommand has
+//!   an arg struct parsed **once**, so a misspelled or unknown option
+//!   (`--moodel`) is an error instead of being silently ignored, and
+//!   numeric options (`--ratio`, `--port`, `--workers`) fail loudly at
+//!   parse time.  Dotted keys (`--data.train_n 4096`,
+//!   `--batch.wait-ms 2`) are always accepted: they are config
+//!   overrides, overlaid onto the experiment [`crate::cfg::Config`]
+//!   together with the validated bare keys — so any config key stays
+//!   reachable from the command line without parser support of its own.
 
 use std::collections::BTreeMap;
 
@@ -16,6 +24,7 @@ use crate::error::{bail, Result};
 /// positional` ambiguity the same way clap's `action = SetTrue` would).
 const KNOWN_FLAGS: &[&str] = &["verbose", "force", "full", "fast", "help", "quiet", "no-save"];
 
+/// Untyped token layer: subcommand, `--key value` options, bare flags.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,
@@ -61,6 +70,306 @@ impl Args {
     }
 }
 
+/// Bare keys every subcommand accepts (session-level selectors read
+/// across the coordinator, not per-command).
+const GLOBAL_KEYS: &[&str] = &["config", "backend", "artifacts", "ckpt_dir"];
+
+/// Flags every subcommand tolerates without error.
+const GLOBAL_FLAGS: &[&str] = &["verbose", "quiet", "help"];
+
+/// `efqat pretrain` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct PretrainArgs {
+    /// `--model` (a config file may supply it instead).
+    pub model: Option<String>,
+    /// `--epochs` (falls back to `train.epochs`).
+    pub epochs: Option<usize>,
+}
+
+/// `efqat ptq` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct PtqArgs {
+    /// `--model`.
+    pub model: Option<String>,
+    /// `--bits`, e.g. `w8a8`.
+    pub bits: Option<String>,
+}
+
+/// `efqat train` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct TrainArgs {
+    /// `--model`.
+    pub model: Option<String>,
+    /// `--bits`, e.g. `w8a8`.
+    pub bits: Option<String>,
+    /// `--mode cwpl|cwpn|lwpn|qat|r0`.
+    pub mode: Option<String>,
+    /// `--ratio` update percentage, validated as an integer.
+    pub ratio: Option<usize>,
+    /// `--workers` data-parallel shard count.
+    pub workers: Option<usize>,
+}
+
+/// `efqat eval` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct EvalArgs {
+    /// `--model`.
+    pub model: Option<String>,
+    /// `--bits` (`fp` or a quantized tag).
+    pub bits: Option<String>,
+    /// `--ckpt` checkpoint path.
+    pub ckpt: Option<String>,
+    /// `--exec fakequant|int8`.
+    pub exec: Option<String>,
+}
+
+/// One `--models` entry: serve `name` from the checkpoint at `path`,
+/// lowered with graph architecture `arch` (defaults to `name`; spell
+/// `name=arch:path` when the serving name differs from the
+/// architecture — e.g. `mlp-canary=mlp:ckpt/new.ckpt`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Registry name requests route by.
+    pub name: String,
+    /// Native graph architecture to lower (`mlp`, `convnet`, ...).
+    pub arch: String,
+    /// Checkpoint path (quantized checkpoint file).
+    pub path: String,
+}
+
+/// `efqat serve` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct ServeArgs {
+    /// `--model` (single-model mode; mutually exclusive with `--models`).
+    pub model: Option<String>,
+    /// `--ckpt` (single-model mode).
+    pub ckpt: Option<String>,
+    /// `--bits`, e.g. `w8a8` (shared by every served model).
+    pub bits: Option<String>,
+    /// `--exec int8|f32` (single-model mode; `--models` is int8-only).
+    pub exec: Option<String>,
+    /// `--port` TCP listener (stdin/stdout when absent).
+    pub port: Option<u16>,
+    /// `--models name=path,name=arch:path,...` multi-model registry.
+    pub models: Vec<ModelSpec>,
+    /// `--default-model`: which model answers model-less (v1) requests.
+    pub default_model: Option<String>,
+}
+
+/// `efqat bundle` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct BundleArgs {
+    /// `--note` free-form provenance string.
+    pub note: Option<String>,
+}
+
+/// A fully parsed and validated invocation.
+#[derive(Clone, Debug)]
+pub enum Cmd {
+    /// `efqat pretrain`.
+    Pretrain(PretrainArgs),
+    /// `efqat ptq`.
+    Ptq(PtqArgs),
+    /// `efqat train`.
+    Train(TrainArgs),
+    /// `efqat eval`.
+    Eval(EvalArgs),
+    /// `efqat serve`.
+    Serve(ServeArgs),
+    /// `efqat bundle`.
+    Bundle(BundleArgs),
+    /// `efqat info`.
+    Info,
+    /// `--help` anywhere: print usage, exit 0.
+    Help,
+}
+
+/// The typed CLI: one subcommand struct plus the config-overlay state.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    /// The validated subcommand.
+    pub cmd: Cmd,
+    /// `--config file.toml`, loaded before overrides apply.
+    pub config: Option<String>,
+    /// Every `--key value` pair (dotted config overrides and validated
+    /// bare keys alike), to overlay onto the experiment config.
+    pub overrides: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Tokenize and validate argv into a typed subcommand.  Unknown
+    /// subcommands, unknown bare options, unknown flags, unexpected
+    /// positionals, and malformed numeric values are all errors here —
+    /// nothing is silently ignored.
+    pub fn parse(argv: &[String]) -> Result<Cli> {
+        let args = Args::parse(argv)?;
+        if args.flag("help") || args.subcommand == "help" {
+            return Ok(Cli { cmd: Cmd::Help, config: None, overrides: BTreeMap::new() });
+        }
+        for f in &args.flags {
+            if !GLOBAL_FLAGS.contains(&f.as_str()) {
+                bail!("unknown flag --{f} for `{}`", args.subcommand);
+            }
+        }
+        if let Some(p) = args.positional.first() {
+            bail!("unexpected positional argument {p:?} (options are `--key value`)");
+        }
+        let cmd = match args.subcommand.as_str() {
+            "pretrain" => {
+                check_keys(&args, &["model", "epochs", "save_ckpt"])?;
+                Cmd::Pretrain(PretrainArgs {
+                    model: opt_string(&args, "model"),
+                    epochs: opt_usize(&args, "epochs")?,
+                })
+            }
+            "ptq" => {
+                check_keys(&args, &["model", "bits"])?;
+                Cmd::Ptq(PtqArgs {
+                    model: opt_string(&args, "model"),
+                    bits: opt_string(&args, "bits"),
+                })
+            }
+            "train" => {
+                check_keys(&args, &["model", "bits", "mode", "ratio", "workers", "save_ckpt"])?;
+                Cmd::Train(TrainArgs {
+                    model: opt_string(&args, "model"),
+                    bits: opt_string(&args, "bits"),
+                    mode: opt_string(&args, "mode"),
+                    ratio: opt_usize(&args, "ratio")?,
+                    workers: opt_usize(&args, "workers")?,
+                })
+            }
+            "eval" => {
+                check_keys(&args, &["model", "bits", "ckpt", "exec"])?;
+                Cmd::Eval(EvalArgs {
+                    model: opt_string(&args, "model"),
+                    bits: opt_string(&args, "bits"),
+                    ckpt: opt_string(&args, "ckpt"),
+                    exec: opt_string(&args, "exec"),
+                })
+            }
+            "serve" => {
+                check_keys(
+                    &args,
+                    &["model", "ckpt", "bits", "exec", "port", "models", "default-model"],
+                )?;
+                let serve = ServeArgs {
+                    model: opt_string(&args, "model"),
+                    ckpt: opt_string(&args, "ckpt"),
+                    bits: opt_string(&args, "bits"),
+                    exec: opt_string(&args, "exec"),
+                    port: opt_port(&args)?,
+                    models: match args.opt("models") {
+                        Some(spec) => parse_models(spec)?,
+                        None => Vec::new(),
+                    },
+                    default_model: opt_string(&args, "default-model"),
+                };
+                if !serve.models.is_empty() {
+                    if serve.model.is_some() || serve.ckpt.is_some() {
+                        bail!("--models and --model/--ckpt are mutually exclusive");
+                    }
+                    if let Some(d) = &serve.default_model {
+                        if !serve.models.iter().any(|m| m.name == *d) {
+                            let names: Vec<&str> =
+                                serve.models.iter().map(|m| m.name.as_str()).collect();
+                            bail!(
+                                "--default-model {d:?} is not in --models [{}]",
+                                names.join(", ")
+                            );
+                        }
+                    }
+                } else if serve.default_model.is_some() {
+                    bail!("--default-model needs --models (single-model serving has one model)");
+                }
+                Cmd::Serve(serve)
+            }
+            "bundle" => {
+                check_keys(&args, &["note"])?;
+                Cmd::Bundle(BundleArgs { note: opt_string(&args, "note") })
+            }
+            "info" => {
+                check_keys(&args, &[])?;
+                Cmd::Info
+            }
+            other => bail!("unknown subcommand {other:?}"),
+        };
+        Ok(Cli { cmd, config: opt_string(&args, "config"), overrides: args.options })
+    }
+}
+
+/// Reject bare option keys the subcommand does not declare.  Dotted keys
+/// are config-tree overrides and always pass.
+fn check_keys(args: &Args, allowed: &[&str]) -> Result<()> {
+    for k in args.options.keys() {
+        if k.contains('.') || GLOBAL_KEYS.contains(&k.as_str()) || allowed.contains(&k.as_str()) {
+            continue;
+        }
+        let mut known: Vec<&str> = allowed.iter().chain(GLOBAL_KEYS).copied().collect();
+        known.sort_unstable();
+        bail!(
+            "unknown option --{k} for `{}` (expected one of: --{}, or a dotted config key)",
+            args.subcommand,
+            known.join(", --")
+        );
+    }
+    Ok(())
+}
+
+fn opt_string(args: &Args, key: &str) -> Option<String> {
+    args.opt(key).map(str::to_string)
+}
+
+fn opt_usize(args: &Args, key: &str) -> Result<Option<usize>> {
+    match args.opt(key) {
+        None => Ok(None),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => Ok(Some(n)),
+            Err(_) => bail!("--{key} wants a non-negative integer, got {v:?}"),
+        },
+    }
+}
+
+fn opt_port(args: &Args) -> Result<Option<u16>> {
+    match opt_usize(args, "port")? {
+        None => Ok(None),
+        Some(p) if (1..=u16::MAX as usize).contains(&p) => Ok(Some(p as u16)),
+        Some(p) => bail!("--port wants a TCP port in [1, 65535], got {p}"),
+    }
+}
+
+/// Parse `--models name=path,name2=arch:path2,...`.  The architecture
+/// defaults to the serving name; a `arch:` prefix on the path overrides
+/// it (recognized only when the prefix looks like an arch token, so
+/// plain paths containing `:` elsewhere stay usable).
+pub fn parse_models(spec: &str) -> Result<Vec<ModelSpec>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').filter(|e| !e.trim().is_empty()) {
+        let Some((name, rest)) = entry.split_once('=') else {
+            bail!("--models entry {entry:?} is not name=path (or name=arch:path)");
+        };
+        let (name, rest) = (name.trim(), rest.trim());
+        if name.is_empty() || rest.is_empty() {
+            bail!("--models entry {entry:?} has an empty name or path");
+        }
+        let (arch, path) = match rest.split_once(':') {
+            Some((a, p)) if !a.is_empty() && !a.contains('/') && !a.contains('.') => (a, p),
+            _ => (name, rest),
+        };
+        if path.is_empty() {
+            bail!("--models entry {entry:?} has an empty path");
+        }
+        if out.iter().any(|m: &ModelSpec| m.name == name) {
+            bail!("--models names {name:?} twice");
+        }
+        out.push(ModelSpec { name: name.to_string(), arch: arch.to_string(), path: path.into() });
+    }
+    if out.is_empty() {
+        bail!("--models wants at least one name=path entry");
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +398,86 @@ mod tests {
     #[test]
     fn requires_subcommand() {
         assert!(Args::parse(&v(&["--model", "x"])).is_err());
+    }
+
+    #[test]
+    fn typed_layer_parses_train() {
+        let cli = Cli::parse(&v(&["train", "--model", "mlp", "--ratio", "25", "--mode", "cwpn"]))
+            .unwrap();
+        let Cmd::Train(t) = &cli.cmd else { panic!("want Train") };
+        assert_eq!(t.model.as_deref(), Some("mlp"));
+        assert_eq!(t.ratio, Some(25));
+        assert_eq!(t.mode.as_deref(), Some("cwpn"));
+        assert_eq!(cli.overrides.get("model").map(String::as_str), Some("mlp"));
+    }
+
+    #[test]
+    fn unknown_bare_option_is_an_error_dotted_keys_pass() {
+        let err = Cli::parse(&v(&["train", "--moodel", "mlp"])).unwrap_err().to_string();
+        assert!(err.contains("--moodel"), "{err}");
+        assert!(err.contains("train"), "{err}");
+        // dotted keys are config overrides — never rejected
+        let cli = Cli::parse(&v(&["train", "--model", "mlp", "--data.train_n", "4096"])).unwrap();
+        assert_eq!(cli.overrides.get("data.train_n").map(String::as_str), Some("4096"));
+        // unknown flags are errors too (a misspelled switch never no-ops)
+        let err = Cli::parse(&v(&["eval", "--fastt"])).unwrap_err().to_string();
+        assert!(err.contains("--fastt"), "{err}");
+    }
+
+    #[test]
+    fn numeric_options_validate_at_parse_time() {
+        let err = Cli::parse(&v(&["train", "--ratio", "lots"])).unwrap_err().to_string();
+        assert!(err.contains("--ratio"), "{err}");
+        let err = Cli::parse(&v(&["serve", "--port", "99999"])).unwrap_err().to_string();
+        assert!(err.contains("--port"), "{err}");
+        let err = Cli::parse(&v(&["serve", "--port", "0"])).unwrap_err().to_string();
+        assert!(err.contains("--port"), "{err}");
+    }
+
+    #[test]
+    fn serve_parses_models_and_default_model() {
+        let cli = Cli::parse(&v(&[
+            "serve",
+            "--models",
+            "mlp=ckpt/a.ckpt,canary=mlp:ckpt/b.ckpt",
+            "--default-model",
+            "mlp",
+        ]))
+        .unwrap();
+        let Cmd::Serve(s) = &cli.cmd else { panic!("want Serve") };
+        assert_eq!(s.models.len(), 2);
+        assert_eq!(
+            s.models[0],
+            ModelSpec { name: "mlp".into(), arch: "mlp".into(), path: "ckpt/a.ckpt".into() }
+        );
+        assert_eq!(
+            s.models[1],
+            ModelSpec { name: "canary".into(), arch: "mlp".into(), path: "ckpt/b.ckpt".into() }
+        );
+        assert_eq!(s.default_model.as_deref(), Some("mlp"));
+    }
+
+    #[test]
+    fn serve_rejects_contradictory_model_selectors() {
+        let err = Cli::parse(&v(&["serve", "--models", "a=x.ckpt", "--model", "mlp"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let err = Cli::parse(&v(&["serve", "--models", "a=x.ckpt", "--default-model", "b"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--default-model"), "{err}");
+        let err = Cli::parse(&v(&["serve", "--models", "a=x.ckpt,a=y.ckpt"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("twice"), "{err}");
+        let err = Cli::parse(&v(&["serve", "--models", "nope"])).unwrap_err().to_string();
+        assert!(err.contains("name=path"), "{err}");
+    }
+
+    #[test]
+    fn help_short_circuits_validation() {
+        assert!(matches!(Cli::parse(&v(&["serve", "--help"])).unwrap().cmd, Cmd::Help));
+        assert!(matches!(Cli::parse(&v(&["help"])).unwrap().cmd, Cmd::Help));
     }
 }

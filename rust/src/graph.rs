@@ -156,8 +156,9 @@ pub enum Layer {
     Residual(Vec<Layer>),
 }
 
-/// What the model consumes as `x`.
-#[derive(Clone, Copy, Debug)]
+/// What the model consumes as `x`.  `PartialEq` so the serving registry
+/// can verify a hot-swapped checkpoint preserves the input domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum InputKind {
     /// f32 images `[B, channels, hw, hw]`; labels `y: [B]`.
     Image { channels: usize, hw: usize },

@@ -34,11 +34,16 @@
 //!   state performs zero heap allocations per training step and per
 //!   serve request (RFC `docs/rfcs/0003-exec-plan.md`).
 //! * [`serve`] is the concurrent serving runtime above the lowering
-//!   boundary (`efqat serve`): a bounded request queue, a dynamic
-//!   micro-batcher (flush on `max_batch` or a `max_wait` deadline), and
-//!   a worker pool sharing one `Arc<QuantizedGraph>` — requests arrive
-//!   as JSONL over stdin or TCP (RFC `docs/rfcs/0002-serve-protocol.md`)
-//!   and each answer is bit-identical to a batch-of-1 forward.
+//!   boundary (`efqat serve`): a multi-model registry
+//!   ([`serve::Registry`], RFC `docs/rfcs/0005-serving-registry.md`)
+//!   keyed by (model, checkpoint fingerprint), giving every model its
+//!   own bounded intake queue, dynamic micro-batcher (flush on
+//!   `max_batch` or a `max_wait` deadline), and worker pool — with
+//!   zero-downtime checkpoint hot swap and per-model admission control.
+//!   Requests route by model name as JSONL over stdin or TCP
+//!   (RFC `docs/rfcs/0002-serve-protocol.md`, v2) and each answer is
+//!   bit-identical to a batch-of-1 forward on the engine its reply
+//!   names.
 //! * [`bundle`] defines the schema-versioned artifact bundle manifest
 //!   (`manifest.json`, RFC `docs/rfcs/0001-artifact-manifest.md`) with
 //!   per-file SHA-256 checksums, so stale or corrupt artifacts fail

@@ -623,6 +623,23 @@ impl QuantizedGraph {
         self.sites.iter().map(|s| s.qw.len()).sum()
     }
 
+    /// One-line deployment summary for serve/eval logs: model, bit
+    /// grid, input domain, logits width, shipped i8 weight count.
+    pub fn describe(&self) -> String {
+        let input = match self.input {
+            InputKind::Image { channels, hw } => format!("image [{channels}, {hw}, {hw}]"),
+            InputKind::Tokens { seq } => format!("tokens [{seq}]"),
+        };
+        format!(
+            "{} w{}a{} {input} -> {} classes, {} i8 weights",
+            self.model,
+            self.w_bits,
+            self.a_bits,
+            self.classes,
+            self.quantized_weights()
+        )
+    }
+
     /// Logits shape for a batch of `b` examples.
     pub fn logits_dims(&self, b: usize) -> Vec<usize> {
         match self.input {

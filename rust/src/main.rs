@@ -12,11 +12,15 @@
 //!             `--exec int8` lowers the graph to the integer engine and
 //!             reports accuracy on the *deployed* arithmetic
 //!             (`--serve.batch N` picks the serving batch size)
-//!   serve     answer concurrent JSONL inference requests on the lowered
-//!             int8 engine (or the f32 reference) with dynamic
+//!   serve     answer concurrent JSONL inference requests with dynamic
 //!             micro-batching: stdin/stdout by default, a TCP listener
-//!             with `--port`; `--batch.max N` and `--batch.wait-ms T`
-//!             set the flush policy (RFC docs/rfcs/0002-serve-protocol.md)
+//!             with `--port`.  Single model (`--model` + `--ckpt`, int8
+//!             or the f32 reference) or a multi-model registry
+//!             (`--models name=path,... [--default-model m]`, int8) with
+//!             per-model admission control and hot-swappable
+//!             fingerprinted checkpoints (RFC 0002 v2 / RFC 0005);
+//!             `--batch.max N` and `--batch.wait-ms T` set the flush
+//!             policy
 //!   bundle    write the schema-versioned artifacts/manifest.json inventory
 //!   info      list artifacts, their manifests, and bundle integrity
 //!
@@ -25,15 +29,17 @@
 //! (AOT HLO artifacts built by `make artifacts`; requires the `pjrt`
 //! cargo feature).
 //!
-//! Any config key can be overridden with `--key value`
-//! (e.g. `--data.train_n 4096 --train.lr_w 1e-3 --config configs/cifar.toml`).
+//! Options are validated per subcommand (`efqat serve --moodel x` is an
+//! error, not a no-op); any *dotted* config key can be overridden with
+//! `--key value` (e.g. `--data.train_n 4096 --train.lr_w 1e-3
+//! --config configs/cifar.toml`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use efqat::bundle::Bundle;
 use efqat::cfg::Config;
-use efqat::cli::Args;
+use efqat::cli::{Cli, Cmd, ServeArgs};
 use efqat::coordinator::pipeline::{
     artifacts_dir, fwd_artifact_name_of, load_quant_checkpoint, run_efqat_pipeline, run_pretrain,
 };
@@ -59,51 +65,54 @@ fn print_usage() {
         "usage: efqat <pretrain|ptq|train|eval|serve|bundle|info> --model <m> \
          [--backend native|pjrt] [--bits w8a8] [--exec fakequant|int8] \
          [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--workers W] [--config file.toml] \
-         [--key value ...]\n\
+         [--key.dotted value ...]\n\
        serve: efqat serve --model <m> --ckpt <file> [--exec int8|f32] [--bits w8a8] \
-         [--batch.max 32] [--batch.wait-ms 2] [--serve.workers 2] [--port 7878]"
+         [--batch.max 32] [--batch.wait-ms 2] [--serve.workers 2] [--port 7878]\n\
+       serve (registry): efqat serve --models m1=ckpt1,m2=arch:ckpt2 [--default-model m1] ..."
     );
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv)?;
-    let mut cfg = match args.opt("config") {
+    let cli = Cli::parse(argv)?;
+    if matches!(cli.cmd, Cmd::Help) {
+        print_usage();
+        return Ok(());
+    }
+    let mut cfg = match &cli.config {
         Some(p) => Config::load(Path::new(p))?,
         None => Config::empty(),
     };
-    let overrides: BTreeMap<String, String> = args.options.clone();
-    cfg.override_with(&overrides);
+    cfg.override_with(&cli.overrides);
 
-    match args.subcommand.as_str() {
-        "pretrain" => {
+    match &cli.cmd {
+        Cmd::Pretrain(a) => {
             let model = cfg.req_str("model")?;
+            let epochs = a.epochs.unwrap_or_else(|| cfg.usize("train.epochs", 3));
             let session = Session::from_cfg(&cfg)?;
-            run_pretrain(&session, &cfg, &model, cfg.usize("train.epochs", 3))?;
+            run_pretrain(&session, &cfg, &model, epochs)?;
             Ok(())
         }
-        "ptq" => cmd_ptq(&cfg),
-        "train" => {
+        Cmd::Ptq(_) => cmd_ptq(&cfg),
+        Cmd::Train(a) => {
             let model = cfg.req_str("model")?;
             let session = Session::from_cfg(&cfg)?;
+            let ratio = a.ratio.unwrap_or_else(|| cfg.usize("ratio", 25));
             let summary = run_efqat_pipeline(
                 &session,
                 &cfg,
                 &model,
                 &cfg.str("bits", "w8a8"),
                 &cfg.str("mode", "cwpn"),
-                cfg.usize("ratio", 25),
+                ratio,
             )?;
             println!("{}", summary.render());
             Ok(())
         }
-        "eval" => cmd_eval(&cfg),
-        "serve" => cmd_serve(&cfg),
-        "bundle" => cmd_bundle(&cfg),
-        "info" => cmd_info(&cfg),
-        other => {
-            print_usage();
-            bail!("unknown subcommand {other:?}")
-        }
+        Cmd::Eval(_) => cmd_eval(&cfg),
+        Cmd::Serve(a) => cmd_serve(&cfg, a),
+        Cmd::Bundle(a) => cmd_bundle(&cfg, a.note.clone()),
+        Cmd::Info => cmd_info(&cfg),
+        Cmd::Help => unreachable!("handled above"),
     }
 }
 
@@ -174,56 +183,112 @@ fn cmd_eval(cfg: &Config) -> Result<()> {
     }
 }
 
+/// Shorten a fingerprint for log lines (stats and the RFC keep the
+/// full digest).
+fn fp_short(fp: &str) -> &str {
+    fp.get(..12).unwrap_or(fp)
+}
+
 /// Serve concurrent JSONL inference requests with dynamic micro-batching
-/// (RFC 0002): lower the checkpoint to the int8 engine (`--exec int8`,
-/// default) or wrap the fake-quant f32 reference (`--exec f32`), start
-/// the queue → batcher → worker-pool runtime, and answer over
-/// stdin/stdout — or a TCP listener with `--port`.
-fn cmd_serve(cfg: &Config) -> Result<()> {
+/// (RFC 0002 v2): build the serving [`Registry`](efqat::serve::Registry)
+/// — one lowered int8 engine per `--models` entry, each installed under
+/// its RFC 0001 checkpoint fingerprint, or a single `--model`/`--ckpt`
+/// engine (`--exec int8` default, `--exec f32` for the fake-quant
+/// reference) — then start the per-model lanes and answer over
+/// stdin/stdout, or a TCP listener with `--port`.
+fn cmd_serve(cfg: &Config, sa: &ServeArgs) -> Result<()> {
     use efqat::backend::native::model_graph;
     use efqat::coordinator::pipeline::parse_bits;
-    use efqat::serve::{protocol, FloatEngine, Server, ServeCfg};
+    use efqat::serve::{protocol, FloatEngine, Registry, ServeCfg, Server};
 
-    let model = cfg.req_str("model")?;
-    let ckpt = cfg.req_str("ckpt")?;
     let bits = cfg.str("bits", "w8a8");
     let exec = cfg.str("exec", "int8");
-    let engine: std::sync::Arc<dyn efqat::serve::Engine> = match exec.as_str() {
-        "int8" => {
-            let (w_bits, a_bits) = parse_bits(&bits)?;
-            let (params, _states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
-            std::sync::Arc::new(lower_native(&model, &params, &q, w_bits, a_bits)?)
+    let scfg = ServeCfg::from_config(cfg)?;
+    let registry = Registry::new();
+    if !sa.models.is_empty() {
+        // registry mode: every entry is lowered to the deployed int8
+        // arithmetic (the f32 reference stays a single-model A/B tool)
+        if exec != "int8" {
+            bail!("--models serves lowered int8 engines; --exec {exec:?} is single-model only");
         }
-        "f32" | "float" | "fakequant" => {
-            let g = model_graph(&model)
-                .ok_or_else(|| anyhow!("model {model:?} has no native graph declaration"))?;
-            let (params, _states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
-            let (quant, w_bits, a_bits) = if bits == "fp" {
-                (None, 0, 0)
-            } else {
-                let (w, a) = parse_bits(&bits)?;
-                (Some(q), w, a)
-            };
-            std::sync::Arc::new(FloatEngine::new(g, params, quant, w_bits, a_bits))
+        let (w_bits, a_bits) = parse_bits(&bits)?;
+        for spec in &sa.models {
+            let path = Path::new(&spec.path);
+            let (params, _states, q) = load_quant_checkpoint(path)?;
+            let qg = lower_native(&spec.arch, &params, &q, w_bits, a_bits)?;
+            let fp = efqat::bundle::fingerprint(path)?;
+            eprintln!("[serve] install {}: {} (fp {})", spec.name, qg.describe(), fp_short(&fp));
+            registry.install(&spec.name, std::sync::Arc::new(qg), &fp)?;
         }
-        other => bail!("unknown --exec {other:?} (available: int8, f32)"),
-    };
-    let scfg = ServeCfg::from_config(cfg);
+        if let Some(d) = &sa.default_model {
+            registry.set_default(d)?;
+        }
+    } else {
+        let model = cfg.req_str("model")?;
+        let ckpt = cfg.req_str("ckpt")?;
+        let fp = efqat::bundle::fingerprint(Path::new(&ckpt))?;
+        let engine: std::sync::Arc<dyn efqat::serve::Engine> = match exec.as_str() {
+            "int8" => {
+                let (w_bits, a_bits) = parse_bits(&bits)?;
+                let (params, _states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
+                let qg = lower_native(&model, &params, &q, w_bits, a_bits)?;
+                eprintln!("[serve] install {}: {} (fp {})", model, qg.describe(), fp_short(&fp));
+                std::sync::Arc::new(qg)
+            }
+            "f32" | "float" | "fakequant" => {
+                let g = model_graph(&model)
+                    .ok_or_else(|| anyhow!("model {model:?} has no native graph declaration"))?;
+                let (params, _states, q) = load_quant_checkpoint(Path::new(&ckpt))?;
+                let (quant, w_bits, a_bits) = if bits == "fp" {
+                    (None, 0, 0)
+                } else {
+                    let (w, a) = parse_bits(&bits)?;
+                    (Some(q), w, a)
+                };
+                std::sync::Arc::new(FloatEngine::new(g, params, quant, w_bits, a_bits))
+            }
+            other => bail!("unknown --exec {other:?} (available: int8, f32)"),
+        };
+        registry.install(&model, engine, &fp)?;
+    }
     eprintln!(
-        "[serve] {model} {bits} exec={exec}: max_batch={} wait={:?} workers={} queue={}",
-        scfg.batch.max_batch, scfg.batch.max_wait, scfg.workers, scfg.queue_cap
+        "[serve] {} model(s), default {:?}, exec={exec}: max_batch={} wait={:?} workers={} queue={}",
+        registry.len(),
+        registry.default_model().unwrap_or_else(|| "-".into()),
+        scfg.batch.max_batch,
+        scfg.batch.max_wait,
+        scfg.workers,
+        scfg.queue_cap
     );
-    let server = Server::start(engine, scfg);
-    if cfg.has("port") {
-        let port = cfg.usize("port", 0);
-        if port == 0 || port > u16::MAX as usize {
-            bail!("--port wants a TCP port in [1, 65535]");
+    let server = Server::start(registry, scfg)?;
+    let port = match sa.port {
+        Some(p) => Some(p),
+        None if cfg.has("port") => {
+            let p = cfg.usize("port", 0);
+            if p == 0 || p > u16::MAX as usize {
+                bail!("--port wants a TCP port in [1, 65535]");
+            }
+            Some(p as u16)
         }
-        protocol::serve_tcp(&server, &cfg.str("serve.bind", "127.0.0.1"), port as u16)?;
+        None => None,
+    };
+    if let Some(port) = port {
+        protocol::serve_tcp(&server, &cfg.str("serve.bind", "127.0.0.1"), port)?;
     } else {
         let stdin = std::io::stdin();
         let n = protocol::serve_stream(&server, stdin.lock(), std::io::stdout())?;
         eprintln!("[serve] stdin closed: answered {n} requests");
+    }
+    for st in server.stats() {
+        eprintln!(
+            "[serve] {}: fp {} gen {} queued {}/{}{}",
+            st.model,
+            fp_short(&st.fingerprint),
+            st.generation,
+            st.queued,
+            st.capacity,
+            if st.draining { " (draining)" } else { "" }
+        );
     }
     server.shutdown();
     Ok(())
@@ -231,11 +296,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
 
 /// Scan the artifacts directory and (re)write the schema-versioned bundle
 /// manifest (RFC 0001) that the PJRT backend verifies against.
-fn cmd_bundle(cfg: &Config) -> Result<()> {
+fn cmd_bundle(cfg: &Config, note: Option<String>) -> Result<()> {
     let dir = artifacts_dir(cfg);
     let mut prov = BTreeMap::new();
     prov.insert("builder".to_string(), format!("efqat bundle v{}", env!("CARGO_PKG_VERSION")));
-    if let Some(note) = cfg.has("note").then(|| cfg.str("note", "")) {
+    if let Some(note) = note {
         prov.insert("note".to_string(), note);
     }
     let bundle = Bundle::scan(&dir, prov)?;

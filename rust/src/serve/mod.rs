@@ -1,28 +1,36 @@
 //! Batched int8 serving runtime (`efqat serve`): the layer between the
 //! lowering boundary ([`crate::lower`]) and concurrent callers.
 //!
-//! Topology (all `std::thread` + `Condvar`, zero dependencies):
+//! Topology (all `std::thread` + `Condvar`, zero dependencies) — one
+//! *lane* per registered model:
 //!
 //! ```text
-//!  submitters ──► BoundedQueue<Request> ──► batcher ──► BoundedQueue<Vec<Request>> ──► workers
-//!  (bounded: backpressure)      (flush on max_batch │ max_wait)            (shared Arc<Engine>)
-//!        ▲                                                                     │
-//!        └────────────────── oneshot per request (logits or error) ◄───────────┘
+//!             ┌ lane "m1": BoundedQueue<Request> ─► batcher ─► BoundedQueue<Vec<_>> ─► workers ┐
+//!  submitters ┤                                                                               ├─► oneshot
+//!             └ lane "m2": … (own queue/batcher/workers; swappable Mutex<EngineSlot>) ────────┘
 //! ```
 //!
 //! * [`queue`] — the bounded MPSC queue + oneshot primitives; close is
-//!   *draining*, so shutdown answers everything already accepted.
+//!   *draining*, so shutdown answers everything already accepted, and
+//!   [`queue::BoundedQueue::try_push`] is the non-blocking admission
+//!   edge.
 //! * [`batcher`] — dynamic micro-batching: a batch flushes when it holds
 //!   `max_batch` requests or `max_wait` after its first request,
 //!   whichever comes first; FIFO in, FIFO out.
 //! * [`worker`] — the pool: one engine forward per batch (amortizing the
 //!   `u8×i8→i32` GEMMs), per-example logits routed back through each
 //!   request's oneshot.  Per-example logits are bit-identical to a
-//!   batch-of-1 forward (see `worker`'s module docs).
+//!   batch-of-1 forward (see `worker`'s module docs).  The engine is
+//!   re-read from the model's [`registry::EngineSlot`] per batch — the
+//!   hot-swap seam.
+//! * [`registry`] — the multi-model registry: engines keyed by
+//!   `(model, checkpoint fingerprint)`, zero-downtime checkpoint hot
+//!   swap, per-model admission control (RFC 0005).
 //! * [`protocol`] — the versioned JSONL request/response grammar (RFC
-//!   `docs/rfcs/0002-serve-protocol.md`) and the stdin/TCP drivers.
+//!   `docs/rfcs/0002-serve-protocol.md`, v2: model routing) and the
+//!   stdin/TCP drivers.
 //!
-//! The engine behind the pool is an [`worker::Engine`]: the lowered
+//! The engines behind the lanes are [`worker::Engine`]s: the lowered
 //! [`crate::lower::QuantizedGraph`] (`--exec int8`, the deployed
 //! arithmetic) or the fake-quant [`worker::FloatEngine`] (`--exec f32`,
 //! the A/B reference).
@@ -32,32 +40,35 @@
 pub mod batcher;
 pub mod protocol;
 pub mod queue;
+pub mod registry;
 pub mod worker;
 
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::backend::Value;
 use crate::cfg::Config;
-use crate::error::{anyhow, Result};
+use crate::error::{anyhow, bail, Result};
 use crate::tensor::Tensor;
 
 pub use batcher::BatchCfg;
+pub use registry::{EngineSlot, ModelStats, Registry, Reply, SubmitError};
 pub use worker::{Engine, FloatEngine, Request};
 
-use queue::{oneshot, BoundedQueue, OneshotReceiver};
+use queue::OneshotReceiver;
 
-/// Serving-runtime knobs; every field maps to a CLI/config key
-/// (see [`ServeCfg::from_config`]).
+/// Serving-runtime knobs; construct via the validating
+/// [`ServeCfg::builder`] (or [`ServeCfg::from_config`] for CLI/config
+/// keys).  Direct struct construction stays possible for tests/benches
+/// but skips validation.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeCfg {
     /// Micro-batching policy (`--batch.max`, `--batch.wait-ms`).
     pub batch: BatchCfg,
-    /// Worker threads running batches (`--serve.workers`).
+    /// Worker threads running batches, per model lane (`--serve.workers`).
     pub workers: usize,
-    /// Request-queue capacity; a full queue blocks submitters
-    /// (`--serve.queue-cap`).
+    /// Per-model request-queue capacity; a full queue rejects with
+    /// `overloaded` (`--serve.queue-cap`).
     pub queue_cap: usize,
 }
 
@@ -68,109 +79,178 @@ impl Default for ServeCfg {
 }
 
 impl ServeCfg {
-    /// Read the serving knobs from config/CLI overrides:
-    /// `batch.max`, `batch.wait-ms`, `serve.workers`, `serve.queue-cap`.
-    pub fn from_config(cfg: &Config) -> ServeCfg {
+    /// A builder seeded with the defaults; `build()` validates.
+    pub fn builder() -> ServeCfgBuilder {
         let d = ServeCfg::default();
-        // sanitize before Duration::from_secs_f32, which panics on
-        // negative/NaN/inf input: out-of-domain waits fall back to the
-        // default (0 = "flush immediately" stays expressible)
-        let default_ms = d.batch.max_wait.as_secs_f32() * 1e3;
-        let mut wait_ms = cfg.f32("batch.wait-ms", default_ms);
-        if !wait_ms.is_finite() || wait_ms < 0.0 {
-            wait_ms = default_ms;
+        ServeCfgBuilder {
+            max_batch: d.batch.max_batch,
+            wait_ms: d.batch.max_wait.as_secs_f32() * 1e3,
+            workers: d.workers,
+            queue_cap: d.queue_cap,
         }
-        ServeCfg {
-            batch: BatchCfg {
-                max_batch: cfg.usize("batch.max", d.batch.max_batch),
-                max_wait: Duration::from_secs_f32(wait_ms / 1e3),
-            },
-            workers: cfg.usize("serve.workers", d.workers).max(1),
-            queue_cap: cfg.usize("serve.queue-cap", d.queue_cap),
-        }
+    }
+
+    /// Read the serving knobs from config/CLI overrides — `batch.max`,
+    /// `batch.wait-ms`, `serve.workers`, `serve.queue-cap` — and
+    /// validate them: out-of-domain values (zero limits, negative or
+    /// non-finite waits) are configuration errors, not silent fallbacks.
+    pub fn from_config(cfg: &Config) -> Result<ServeCfg> {
+        let b = ServeCfg::builder();
+        b.max_batch(cfg.usize("batch.max", BatchCfg::default().max_batch))
+            .max_wait_ms(cfg.f32("batch.wait-ms", BatchCfg::default().max_wait.as_secs_f32() * 1e3))
+            .workers(cfg.usize("serve.workers", ServeCfg::default().workers))
+            .queue_cap(cfg.usize("serve.queue-cap", ServeCfg::default().queue_cap))
+            .build()
     }
 }
 
-/// Handle for one submitted request; resolves to its logits.
+/// Validating builder for [`ServeCfg`]: rejects zero/contradictory
+/// limits at construction instead of letting them surface as a wedged
+/// runtime (a 0-worker pool never answers; a 0-capacity queue never
+/// accepts).  `wait_ms == 0` stays expressible: "flush immediately".
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCfgBuilder {
+    max_batch: usize,
+    wait_ms: f32,
+    workers: usize,
+    queue_cap: usize,
+}
+
+impl ServeCfgBuilder {
+    /// Maximum requests per micro-batch (must be ≥ 1).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// Maximum wait after a batch's first request, in milliseconds
+    /// (must be finite and ≥ 0; 0 = flush immediately).
+    pub fn max_wait_ms(mut self, ms: f32) -> Self {
+        self.wait_ms = ms;
+        self
+    }
+
+    /// Worker threads per model lane (must be ≥ 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Per-model request-queue capacity (must be ≥ 1).  May be smaller
+    /// than `max_batch`: the batcher then flushes on its deadline with
+    /// whatever fits.
+    pub fn queue_cap(mut self, n: usize) -> Self {
+        self.queue_cap = n;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ServeCfg> {
+        if self.max_batch == 0 {
+            bail!("serve config: batch.max must be >= 1 (a 0-batch never flushes)");
+        }
+        if self.workers == 0 {
+            bail!("serve config: serve.workers must be >= 1 (a 0-worker pool never answers)");
+        }
+        if self.queue_cap == 0 {
+            bail!("serve config: serve.queue-cap must be >= 1 (a 0-capacity queue never accepts)");
+        }
+        if !self.wait_ms.is_finite() || self.wait_ms < 0.0 {
+            bail!("serve config: batch.wait-ms must be finite and >= 0, got {}", self.wait_ms);
+        }
+        Ok(ServeCfg {
+            batch: BatchCfg {
+                max_batch: self.max_batch,
+                max_wait: Duration::from_secs_f32(self.wait_ms / 1e3),
+            },
+            workers: self.workers,
+            queue_cap: self.queue_cap,
+        })
+    }
+}
+
+/// Handle for one submitted request; resolves to its logits (or the
+/// full [`Reply`] with serving identity via [`Ticket::wait_reply`]).
 pub struct Ticket {
-    rx: OneshotReceiver<Result<Tensor>>,
+    pub(crate) rx: OneshotReceiver<Result<Reply>>,
 }
 
 impl Ticket {
     /// Block until this request's batch executed.  An abandoned request
     /// (worker died mid-batch) is an error, never a hang.
     pub fn wait(self) -> Result<Tensor> {
+        self.wait_reply().map(|r| r.logits)
+    }
+
+    /// Like [`Ticket::wait`], but keeps the reply envelope: which
+    /// model/fingerprint/generation computed the logits.
+    pub fn wait_reply(self) -> Result<Reply> {
         self.rx
             .recv()
             .unwrap_or_else(|| Err(anyhow!("request abandoned: serving runtime shut down")))
     }
 }
 
-/// A running serving runtime: queue + batcher thread + worker pool
-/// around a shared engine.
+/// A running serving runtime over a [`Registry`]: per-model lanes
+/// (queue + batcher + worker pool) with hot-swappable engines.
 ///
-/// Dropping (or [`shutdown`](Server::shutdown)ing) the server closes the
-/// intake, drains every queued request through the workers, and joins
-/// all threads — accepted requests are always answered.
+/// Dropping (or [`shutdown`](Server::shutdown)ing) the server closes
+/// every lane's intake, drains every queued request through the
+/// workers, and joins all threads — accepted requests are always
+/// answered.
 pub struct Server {
-    engine: Arc<dyn Engine>,
-    requests: Arc<BoundedQueue<Request>>,
-    threads: Vec<JoinHandle<()>>,
+    registry: Registry,
 }
 
 impl Server {
-    /// Spawn the batcher and worker threads around `engine`.
-    pub fn start(engine: Arc<dyn Engine>, cfg: ServeCfg) -> Server {
-        let requests: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_cap);
-        // small batch buffer: enough to keep every worker busy without
-        // letting latency hide in a deep intermediate queue
-        let batches: Arc<BoundedQueue<Vec<Request>>> = BoundedQueue::new(cfg.workers.max(1) * 2);
-        let mut threads = Vec::with_capacity(cfg.workers + 1);
-        {
-            let (rq, bq) = (requests.clone(), batches.clone());
-            threads.push(
-                std::thread::Builder::new()
-                    .name("efqat-batcher".into())
-                    .spawn(move || batcher::run(&rq, &bq, cfg.batch))
-                    .expect("spawn batcher"),
-            );
-        }
-        for i in 0..cfg.workers.max(1) {
-            let (eng, bq) = (engine.clone(), batches.clone());
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("efqat-worker-{i}"))
-                    .spawn(move || worker::run(&eng, &bq))
-                    .expect("spawn worker"),
-            );
-        }
-        Server { engine, requests, threads }
+    /// Start lanes for every model in `registry` with `cfg`.  Models
+    /// installed into the registry later get a lane automatically.
+    /// Fails if the registry's lanes were already started.
+    pub fn start(registry: Registry, cfg: ServeCfg) -> Result<Server> {
+        registry.start(cfg)?;
+        Ok(Server { registry })
     }
 
-    /// The engine this server answers with.
-    pub fn engine(&self) -> &Arc<dyn Engine> {
-        &self.engine
+    /// Single-engine compat shim: a fresh one-model registry (the
+    /// engine's own model name, fingerprint `"unversioned"`, default
+    /// model) — the pre-registry `Server::start(engine, cfg)` shape.
+    pub fn single(engine: Arc<dyn Engine>, cfg: ServeCfg) -> Server {
+        let registry = Registry::new();
+        let name = engine.model().to_string();
+        registry.install(&name, engine, "unversioned").expect("install single engine");
+        Server::start(registry, cfg).expect("start fresh registry")
     }
 
-    /// Submit one example for inference.  Validates dtype/shape/token
-    /// range immediately (a malformed example never joins a batch),
-    /// then enqueues — blocking while the queue is full (backpressure).
-    /// Fails once the server is shut down.
+    /// The registry behind this server (install/swap/retire live there).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Submit one example to the default model.  Validates dtype/shape/
+    /// token range immediately (a malformed example never joins a
+    /// batch); a full lane or shut-down runtime is an error.
     pub fn submit(&self, input: Value) -> Result<Ticket> {
-        self.engine.validate_example(&input)?;
-        let (tx, rx) = oneshot();
-        self.requests
-            .push(Request { input, tx })
-            .map_err(|_| anyhow!("{} serve: server is shut down", self.engine.model()))?;
-        Ok(Ticket { rx })
+        self.registry.submit(None, input).map_err(Into::into)
     }
 
-    /// Requests currently queued (not yet batched) — telemetry/tests.
+    /// Submit one example to `model` (or the default model for `None`),
+    /// keeping the typed admission verdict — protocol drivers match on
+    /// [`SubmitError::code`].
+    pub fn try_submit(&self, model: Option<&str>, input: Value) -> registry::SubmitResult {
+        self.registry.submit(model, input)
+    }
+
+    /// Requests currently queued (not yet batched) across all models.
     pub fn pending(&self) -> usize {
-        self.requests.len()
+        self.registry.pending()
     }
 
-    /// Close the intake, drain every queued request, join all threads.
+    /// Per-model live counters (queue depth, active fingerprint, ...).
+    pub fn stats(&self) -> Vec<ModelStats> {
+        self.registry.stats()
+    }
+
+    /// Close every intake, drain every queued request, join all threads.
     pub fn shutdown(self) {
         drop(self);
     }
@@ -178,13 +258,10 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        // close-then-join IS the drain: the batcher pops until the
-        // request queue is empty, closes the batch queue, and the
+        // close-then-join IS the drain: each batcher pops until its
+        // request queue is empty, closes its batch queue, and the
         // workers pop until that is empty too
-        self.requests.close();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
-        }
+        self.registry.shutdown();
     }
 }
 
@@ -219,7 +296,7 @@ mod tests {
     #[test]
     fn single_request_matches_direct_forward() {
         let qg = std::sync::Arc::new(test_fixture::lowered_mlp());
-        let server = Server::start(qg.clone(), ServeCfg::default());
+        let server = Server::single(qg.clone(), ServeCfg::default());
         let x = image(3);
         let got = server.submit(x.clone()).unwrap().wait().unwrap();
         let stacked = crate::serve::worker::stack_examples(qg.input, &[x]).unwrap();
@@ -230,9 +307,20 @@ mod tests {
     }
 
     #[test]
+    fn single_shim_reply_carries_unversioned_identity() {
+        let server =
+            Server::single(std::sync::Arc::new(test_fixture::lowered_mlp()), ServeCfg::default());
+        assert_eq!(server.registry().default_model().as_deref(), Some("mlp"));
+        let reply = server.submit(image(9)).unwrap().wait_reply().unwrap();
+        assert_eq!(&*reply.model, "mlp");
+        assert_eq!(&*reply.fingerprint, "unversioned");
+        assert_eq!(reply.generation, 1);
+    }
+
+    #[test]
     fn submit_rejects_malformed_examples() {
         let engine = std::sync::Arc::new(test_fixture::lowered_mlp());
-        let server = Server::start(engine, ServeCfg::default());
+        let server = Server::single(engine, ServeCfg::default());
         let bad = Value::F32(Tensor::zeros(&[3, 4, 4]));
         let err = server.submit(bad).unwrap_err().to_string();
         assert!(err.contains("shape"), "{err}");
@@ -250,9 +338,8 @@ mod tests {
             workers: 1,
             queue_cap: 64,
         };
-        let server = Server::start(std::sync::Arc::new(test_fixture::lowered_mlp()), cfg);
-        let tickets: Vec<Ticket> =
-            (0..5).map(|i| server.submit(image(i)).unwrap()).collect();
+        let server = Server::single(std::sync::Arc::new(test_fixture::lowered_mlp()), cfg);
+        let tickets: Vec<Ticket> = (0..5).map(|i| server.submit(image(i)).unwrap()).collect();
         server.shutdown(); // closes intake, drains, joins
         for t in tickets {
             assert_eq!(t.wait().unwrap().shape, vec![10]);
@@ -266,7 +353,7 @@ mod tests {
         cfg.set("batch.wait-ms", "0.5");
         cfg.set("serve.workers", "3");
         cfg.set("serve.queue-cap", "16");
-        let sc = ServeCfg::from_config(&cfg);
+        let sc = ServeCfg::from_config(&cfg).unwrap();
         assert_eq!(sc.batch.max_batch, 8);
         // f32 ms → Duration conversion: exact to within a nanosecond
         let wait = sc.batch.max_wait.as_nanos() as i128;
@@ -276,16 +363,35 @@ mod tests {
     }
 
     #[test]
-    fn out_of_domain_wait_ms_falls_back_instead_of_panicking() {
+    fn builder_rejects_zero_and_out_of_domain_limits() {
+        assert!(ServeCfg::builder().max_batch(0).build().is_err());
+        assert!(ServeCfg::builder().workers(0).build().is_err());
+        assert!(ServeCfg::builder().queue_cap(0).build().is_err());
+        for bad in [-1.0, f32::NAN, f32::INFINITY] {
+            let err = ServeCfg::builder().max_wait_ms(bad).build();
+            assert!(err.is_err(), "wait-ms {bad} must be rejected");
+        }
+        // zero wait stays expressible: "flush immediately"
+        let sc = ServeCfg::builder().max_wait_ms(0.0).build().unwrap();
+        assert_eq!(sc.batch.max_wait, Duration::ZERO);
+        // queue_cap < max_batch is fine: the batcher flushes what fits
+        assert!(ServeCfg::builder().max_batch(64).queue_cap(8).build().is_ok());
+    }
+
+    #[test]
+    fn out_of_domain_config_values_are_errors_not_fallbacks() {
         for bad in ["-1", "nan", "inf"] {
             let mut cfg = crate::cfg::Config::empty();
             cfg.set("batch.wait-ms", bad);
-            let sc = ServeCfg::from_config(&cfg);
-            assert_eq!(sc.batch.max_wait, BatchCfg::default().max_wait, "{bad}");
+            let err = ServeCfg::from_config(&cfg);
+            assert!(err.is_err(), "wait-ms {bad} must be a config error");
         }
-        // zero stays expressible: "flush immediately"
+        let mut cfg = crate::cfg::Config::empty();
+        cfg.set("serve.workers", "0");
+        assert!(ServeCfg::from_config(&cfg).is_err());
+        // zero wait stays expressible: "flush immediately"
         let mut cfg = crate::cfg::Config::empty();
         cfg.set("batch.wait-ms", "0");
-        assert_eq!(ServeCfg::from_config(&cfg).batch.max_wait, Duration::ZERO);
+        assert_eq!(ServeCfg::from_config(&cfg).unwrap().batch.max_wait, Duration::ZERO);
     }
 }

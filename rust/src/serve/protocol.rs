@@ -1,14 +1,23 @@
-//! The JSONL serve protocol (RFC `docs/rfcs/0002-serve-protocol.md`) and
-//! the stdin/TCP drivers of `efqat serve`.
+//! The JSONL serve protocol (RFC `docs/rfcs/0002-serve-protocol.md`,
+//! v2) and the stdin/TCP drivers of `efqat serve`.
 //!
 //! One request per line in, one response per line out:
 //!
 //! ```text
-//! → {"id": "r1", "data": [0.1, -0.4, ...]}
-//! ← {"id":"r1","shape":[10],"logits":[1.52,...]}
-//! → {"id": 7, "data": [3, 1, 4], "shape": [3]}
-//! ← {"id":7,"error":"mlp: want an f32 example of shape [3, 8, 8], got [3]"}
+//! → {"id": "r1", "model": "mlp", "data": [0.1, -0.4, ...]}
+//! ← {"id":"r1","model":"mlp","fp":"9c1e64a2b0f3","gen":1,"shape":[10],"logits":[1.52,...]}
+//! → {"id": 7, "model": "nope", "data": [3, 1, 4], "shape": [3]}
+//! ← {"id":7,"code":"unknown_model","error":"unknown model \"nope\"; serving: [mlp]"}
+//! → {"id": 8, "stats": true}
+//! ← {"id":8,"models":[{"model":"mlp","fp":"9c1e64a2...","gen":1,"queued":0,...}]}
 //! ```
+//!
+//! v2 adds model routing over v1: requests name a `model` (absent =
+//! the registry's default model, which is how v1 clients keep working),
+//! responses echo which engine answered (`model`, `fp` fingerprint
+//! prefix, `gen` generation — the hot-swap observability surface), and
+//! errors carry a stable machine-readable `code`
+//! ([`crate::serve::SubmitError::code`] plus `bad_request`/`failed`).
 //!
 //! Responses are written in request order (FIFO): the reader thread
 //! submits each parsed line to the [`Server`] and hands the ticket to a
@@ -18,63 +27,148 @@
 
 #![warn(missing_docs)]
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 
 use crate::backend::Value;
-use crate::error::{anyhow, bail, Context, Result};
+use crate::error::{anyhow, Context, Result};
 use crate::graph::InputKind;
 use crate::json::Json;
 use crate::tensor::{ITensor, Tensor};
 
 use super::queue::BoundedQueue;
-use super::{Engine, Server, Ticket};
+use super::registry::{ModelStats, Registry, Reply, SubmitError};
+use super::{Server, Ticket};
 
-/// The protocol version this build speaks; requests may pin it with the
-/// optional `"v"` field and are rejected on mismatch (RFC 0002
-/// versioning rules).
-pub const PROTOCOL_VERSION: u64 = 1;
+/// The newest protocol version this build speaks.  Requests may pin a
+/// version with the optional `"v"` field; absent means newest.
+pub const PROTOCOL_VERSION: u64 = 2;
 
-/// Parse one request line against an engine's input domain.  Returns the
-/// request id (for the response envelope — `Json::Null` when the line is
-/// too broken to carry one) alongside the decoded example or the error
-/// to answer with.
-pub fn parse_request(line: &str, engine: &dyn Engine) -> (Json, Result<Value>) {
-    let doc = match Json::parse(line) {
-        Ok(d) => d,
-        Err(e) => return (Json::Null, Err(anyhow!("bad request JSON: {e}"))),
-    };
-    let id = doc.opt("id").cloned().unwrap_or(Json::Null);
-    (id, decode_request(&doc, engine))
+/// The oldest protocol version still accepted (v1: model-less requests,
+/// answered by the registry's default model).
+pub const MIN_PROTOCOL_VERSION: u64 = 1;
+
+/// A wire-level rejection: a stable machine-readable `code` (clients
+/// react mechanically — back off on `overloaded`, re-resolve on
+/// `unknown_model`) plus the human-readable message.
+#[derive(Debug)]
+pub struct WireError {
+    /// Stable error code (`bad_request`, `failed`, or a
+    /// [`SubmitError::code`]).
+    pub code: &'static str,
+    /// Human-readable detail for the `error` field.
+    pub msg: String,
 }
 
-fn decode_request(doc: &Json, engine: &dyn Engine) -> Result<Value> {
+impl WireError {
+    fn bad(msg: impl Into<String>) -> WireError {
+        WireError { code: "bad_request", msg: msg.into() }
+    }
+}
+
+impl From<SubmitError> for WireError {
+    fn from(e: SubmitError) -> WireError {
+        WireError { code: e.code(), msg: e.to_string() }
+    }
+}
+
+/// A successfully parsed request line.
+pub enum Parsed {
+    /// An inference request: route `input` to `model` (or the default).
+    Infer {
+        /// The `"model"` field, if present (v2).
+        model: Option<String>,
+        /// The decoded example, validated against the routed engine's
+        /// input domain.
+        input: Value,
+    },
+    /// A `{"stats": true}` introspection request (v2): answer inline
+    /// with per-model counters, nothing enters a batch.
+    Stats,
+}
+
+/// Parse one request line against the registry.  Returns the request id
+/// (for the response envelope — `Json::Null` when the line is too
+/// broken to carry one) alongside the parsed request or the typed error
+/// to answer with.
+pub fn parse_request(line: &str, registry: &Registry) -> (Json, Result<Parsed, WireError>) {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return (Json::Null, Err(WireError::bad(format!("bad request JSON: {e}")))),
+    };
+    let id = doc.opt("id").cloned().unwrap_or(Json::Null);
+    (id, decode_request(&doc, registry))
+}
+
+fn decode_request(doc: &Json, registry: &Registry) -> Result<Parsed, WireError> {
     if doc.opt("id").is_none() {
-        bail!("request is missing the required \"id\" field");
+        return Err(WireError::bad("request is missing the required \"id\" field"));
     }
-    if let Some(v) = doc.opt("v") {
-        let v = v.num().context("request \"v\" field")? as u64;
-        if v != PROTOCOL_VERSION {
-            bail!("unsupported protocol version {v} (this build speaks {PROTOCOL_VERSION})");
+    // version negotiation: absent "v" means newest; v1 is the legacy
+    // model-less grammar, so v2-only fields are rejected under it
+    // rather than silently ignored (a v1 client naming a model would
+    // otherwise get the default model's logits)
+    let version = match doc.opt("v") {
+        Some(v) => {
+            let v =
+                v.num().map_err(|e| WireError::bad(format!("request \"v\" field: {e}")))? as u64;
+            if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&v) {
+                return Err(WireError::bad(format!(
+                    "unsupported protocol version {v} (this build speaks \
+                     v{MIN_PROTOCOL_VERSION}..=v{PROTOCOL_VERSION})"
+                )));
+            }
+            v
         }
+        None => PROTOCOL_VERSION,
+    };
+    let model = match doc.opt("model") {
+        Some(m) => {
+            if version < 2 {
+                return Err(WireError::bad("the \"model\" field requires protocol v2"));
+            }
+            Some(
+                m.str()
+                    .map_err(|e| WireError::bad(format!("request \"model\" field: {e}")))?
+                    .to_string(),
+            )
+        }
+        None => None,
+    };
+    if let Some(s) = doc.opt("stats") {
+        if version < 2 {
+            return Err(WireError::bad("the \"stats\" field requires protocol v2"));
+        }
+        return match s {
+            Json::Bool(true) => Ok(Parsed::Stats),
+            _ => Err(WireError::bad("request \"stats\" field must be `true`")),
+        };
     }
+    // decode the payload against the engine the request routes to; a
+    // concurrent hot swap cannot invalidate this (swaps preserve the
+    // input geometry — see the registry's install contract)
+    let engine = registry.engine_for(model.as_deref()).map_err(WireError::from)?.engine;
     let data = doc
         .opt("data")
-        .ok_or_else(|| anyhow!("request is missing the required \"data\" field"))?
+        .ok_or_else(|| WireError::bad("request is missing the required \"data\" field"))?
         .arr()
-        .context("request \"data\" field")?;
+        .map_err(|e| WireError::bad(format!("request \"data\" field: {e}")))?;
     let shape = match doc.opt("shape") {
-        Some(s) => s.shape().context("request \"shape\" field")?,
+        Some(s) => s.shape().map_err(|e| WireError::bad(format!("request \"shape\" field: {e}")))?,
         None => engine.example_shape(),
     };
     let want: usize = shape.iter().product();
     if data.len() != want {
-        bail!("request \"data\" has {} elements, shape {shape:?} wants {want}", data.len());
+        return Err(WireError::bad(format!(
+            "request \"data\" has {} elements, shape {shape:?} wants {want}",
+            data.len()
+        )));
     }
-    match engine.input() {
+    let input = match engine.input() {
         InputKind::Image { .. } => {
             let data: Result<Vec<f32>> = data.iter().map(|j| j.num().map(|n| n as f32)).collect();
-            Ok(Value::F32(Tensor { shape, data: data? }))
+            Value::F32(Tensor { shape, data: data.map_err(|e| WireError::bad(e.to_string()))? })
         }
         InputKind::Tokens { .. } => {
             // token ids must arrive as integers — silently truncating 5.9
@@ -89,33 +183,82 @@ fn decode_request(doc: &Json, engine: &dyn Engine) -> Result<Value> {
                     Ok(n as i32)
                 })
                 .collect();
-            Ok(Value::I32(ITensor { shape, data: data? }))
+            Value::I32(ITensor { shape, data: data.map_err(|e| WireError::bad(e.to_string()))? })
         }
-    }
+    };
+    Ok(Parsed::Infer { model, input })
 }
 
-/// Render one response line (no trailing newline): logits on success,
-/// the error message otherwise.  Always single-line
-/// ([`Json::render_min`]).
-pub fn render_response(id: &Json, result: &Result<Tensor>) -> String {
-    let mut obj = std::collections::BTreeMap::new();
+/// Abbreviate a fingerprint for per-reply envelopes (12 hex chars
+/// disambiguate among any sane number of checkpoints; stats carry the
+/// full digest).
+fn fp_prefix(fp: &str) -> &str {
+    fp.get(..12).unwrap_or(fp)
+}
+
+/// Render one successful response line (no trailing newline): the
+/// logits plus the identity of the engine that computed them.  Always
+/// single-line ([`Json::render_min`]).
+pub fn render_reply(id: &Json, r: &Reply) -> String {
+    let mut obj = BTreeMap::new();
     obj.insert("id".to_string(), id.clone());
-    match result {
-        Ok(t) => {
-            obj.insert(
-                "shape".to_string(),
-                Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
-            );
-            obj.insert(
-                "logits".to_string(),
-                Json::Arr(t.data.iter().map(|&v| Json::Num(v as f64)).collect()),
-            );
-        }
-        Err(e) => {
-            obj.insert("error".to_string(), Json::Str(e.to_string()));
-        }
-    }
+    obj.insert("model".to_string(), Json::Str(r.model.to_string()));
+    obj.insert("fp".to_string(), Json::Str(fp_prefix(&r.fingerprint).to_string()));
+    obj.insert("gen".to_string(), Json::Num(r.generation as f64));
+    obj.insert(
+        "shape".to_string(),
+        Json::Arr(r.logits.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    obj.insert(
+        "logits".to_string(),
+        Json::Arr(r.logits.data.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
     Json::Obj(obj).render_min()
+}
+
+/// Render one error response line: the stable `code` plus the message.
+pub fn render_error(id: &Json, code: &str, msg: &str) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), id.clone());
+    obj.insert("code".to_string(), Json::Str(code.to_string()));
+    obj.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj).render_min()
+}
+
+/// Render one stats response line: per-model queue depth, capacity,
+/// active fingerprint (full digest) and generation, draining flag.
+pub fn render_stats(id: &Json, stats: &[ModelStats]) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), id.clone());
+    obj.insert(
+        "models".to_string(),
+        Json::Arr(
+            stats
+                .iter()
+                .map(|s| {
+                    let mut m = BTreeMap::new();
+                    m.insert("model".to_string(), Json::Str(s.model.clone()));
+                    m.insert("fp".to_string(), Json::Str(s.fingerprint.clone()));
+                    m.insert("gen".to_string(), Json::Num(s.generation as f64));
+                    m.insert("queued".to_string(), Json::Num(s.queued as f64));
+                    m.insert("cap".to_string(), Json::Num(s.capacity as f64));
+                    m.insert("draining".to_string(), Json::Bool(s.draining));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(obj).render_min()
+}
+
+/// What the in-order writer resolves for one request line.
+enum Pending {
+    /// An accepted inference request; wait for its reply.
+    Ticket(Ticket),
+    /// Rejected before entering a batch; answer with the typed code.
+    Failed(WireError),
+    /// Already rendered inline (stats) — FIFO position preserved.
+    Rendered(String),
 }
 
 /// Drive the server over one line stream: read → submit → answer, with
@@ -128,15 +271,21 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
 ) -> Result<usize> {
     // tickets ride a second bounded queue so reading (and batching)
     // stays ahead of the in-order writer
-    let tickets: std::sync::Arc<BoundedQueue<(Json, Result<Ticket>)>> = BoundedQueue::new(4096);
+    let tickets: std::sync::Arc<BoundedQueue<(Json, Pending)>> = BoundedQueue::new(4096);
     std::thread::scope(|s| -> Result<usize> {
         let writer_tickets = tickets.clone();
         let writer = s.spawn(move || -> Result<usize> {
             let mut served = 0usize;
-            while let Some((id, outcome)) = writer_tickets.pop() {
-                let result = outcome.and_then(Ticket::wait);
-                let wrote = writeln!(output, "{}", render_response(&id, &result))
-                    .and_then(|()| output.flush());
+            while let Some((id, pending)) = writer_tickets.pop() {
+                let line = match pending {
+                    Pending::Ticket(t) => match t.wait_reply() {
+                        Ok(reply) => render_reply(&id, &reply),
+                        Err(e) => render_error(&id, "failed", &e.to_string()),
+                    },
+                    Pending::Failed(we) => render_error(&id, we.code, &we.msg),
+                    Pending::Rendered(line) => line,
+                };
+                let wrote = writeln!(output, "{line}").and_then(|()| output.flush());
                 if let Err(e) = wrote {
                     // the reader may be blocked pushing into a full
                     // tickets queue; closing it unblocks the reader so
@@ -161,9 +310,18 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
             if line.trim().is_empty() {
                 continue;
             }
-            let (id, parsed) = parse_request(&line, server.engine().as_ref());
-            let outcome = parsed.and_then(|v| server.submit(v));
-            if tickets.push((id, outcome)).is_err() {
+            let (id, parsed) = parse_request(&line, server.registry());
+            let pending = match parsed {
+                Ok(Parsed::Infer { model, input }) => {
+                    match server.try_submit(model.as_deref(), input) {
+                        Ok(t) => Pending::Ticket(t),
+                        Err(e) => Pending::Failed(e.into()),
+                    }
+                }
+                Ok(Parsed::Stats) => Pending::Rendered(render_stats(&id, &server.stats())),
+                Err(we) => Pending::Failed(we),
+            };
+            if tickets.push((id, pending)).is_err() {
                 break; // writer side is gone
             }
         }
@@ -174,9 +332,9 @@ pub fn serve_stream<R: BufRead, W: Write + Send>(
 
 /// Serve JSONL over TCP: accept connections forever on
 /// `{bind}:{port}`, one reader/writer pair per connection, all feeding
-/// the same batcher — concurrent clients get co-batched.  Per-connection
-/// failures are logged and do not stop the listener; this returns only
-/// if the listener socket itself fails.
+/// the same per-model batchers — concurrent clients get co-batched.
+/// Per-connection failures are logged and do not stop the listener;
+/// this returns only if the listener socket itself fails.
 pub fn serve_tcp(server: &Server, bind: &str, port: u16) -> Result<()> {
     let listener =
         TcpListener::bind((bind, port)).with_context(|| format!("binding {bind}:{port}"))?;
@@ -213,76 +371,138 @@ pub fn serve_tcp(server: &Server, bind: &str, port: u16) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lower::QuantizedGraph;
     use std::sync::Arc;
 
-    fn mlp_engine() -> Arc<QuantizedGraph> {
-        Arc::new(crate::serve::test_fixture::lowered_mlp())
+    fn registry_with(models: &[&str]) -> Registry {
+        let reg = Registry::new();
+        for m in models {
+            let eng: Arc<dyn super::super::Engine> =
+                Arc::new(crate::serve::test_fixture::lowered(m));
+            reg.install(m, eng, &format!("fp-{m}")).unwrap();
+        }
+        reg
+    }
+
+    fn unwrap_infer(p: Result<Parsed, WireError>) -> (Option<String>, Value) {
+        match p {
+            Ok(Parsed::Infer { model, input }) => (model, input),
+            Ok(Parsed::Stats) => panic!("want Infer, got Stats"),
+            Err(e) => panic!("want Infer, got [{}] {}", e.code, e.msg),
+        }
     }
 
     #[test]
     fn parse_accepts_default_and_explicit_shape() {
-        let eng = mlp_engine();
+        let reg = registry_with(&["mlp"]);
         let data: Vec<String> = (0..192).map(|i| format!("{}", i as f32 * 0.01)).collect();
         let line = format!("{{\"id\": \"a\", \"data\": [{}]}}", data.join(","));
-        let (id, v) = parse_request(&line, eng.as_ref());
+        let (id, p) = parse_request(&line, &reg);
         assert_eq!(id, Json::Str("a".into()));
-        assert_eq!(v.unwrap().shape(), &[3, 8, 8]);
+        let (model, input) = unwrap_infer(p);
+        assert_eq!(model, None);
+        assert_eq!(input.shape(), &[3, 8, 8]);
 
         let body = data.join(",");
         let line = format!("{{\"id\": 2, \"v\": 1, \"shape\": [3, 8, 8], \"data\": [{body}]}}");
-        let (id, v) = parse_request(&line, eng.as_ref());
+        let (id, p) = parse_request(&line, &reg);
         assert_eq!(id, Json::Num(2.0));
-        assert!(v.is_ok());
+        unwrap_infer(p);
     }
 
     #[test]
-    fn parse_rejects_bad_requests_with_best_effort_id() {
-        let eng = mlp_engine();
+    fn parse_routes_v2_model_field() {
+        let reg = registry_with(&["mlp", "convnet"]);
+        let data: Vec<String> = (0..192).map(|i| format!("{}", i as f32 * 0.01)).collect();
+        let body = data.join(",");
+        let line = format!("{{\"id\": 1, \"v\": 2, \"model\": \"convnet\", \"data\": [{body}]}}");
+        let (model, _) = unwrap_infer(parse_request(&line, &reg).1);
+        assert_eq!(model.as_deref(), Some("convnet"));
+        // absent "v" means newest: model routing works without pinning
+        let line = format!("{{\"id\": 1, \"model\": \"mlp\", \"data\": [{body}]}}");
+        let (model, _) = unwrap_infer(parse_request(&line, &reg).1);
+        assert_eq!(model.as_deref(), Some("mlp"));
+    }
+
+    #[test]
+    fn parse_rejects_bad_requests_with_typed_codes() {
+        let reg = registry_with(&["mlp"]);
         // broken JSON: no id recoverable
-        let (id, v) = parse_request("{nope", eng.as_ref());
+        let (id, p) = parse_request("{nope", &reg);
         assert_eq!(id, Json::Null);
-        assert!(v.unwrap_err().to_string().contains("bad request JSON"));
+        let e = p.err().unwrap();
+        assert_eq!(e.code, "bad_request");
+        assert!(e.msg.contains("bad request JSON"), "{}", e.msg);
         // well-formed but wrong element count: id still echoed
-        let (id, v) = parse_request(r#"{"id": "x", "data": [1, 2]}"#, eng.as_ref());
+        let (id, p) = parse_request(r#"{"id": "x", "data": [1, 2]}"#, &reg);
         assert_eq!(id, Json::Str("x".into()));
-        assert!(v.unwrap_err().to_string().contains("2 elements"));
+        assert!(p.err().unwrap().msg.contains("2 elements"));
         // missing id
-        let (_, v) = parse_request(r#"{"data": [1]}"#, eng.as_ref());
-        assert!(v.unwrap_err().to_string().contains("\"id\""));
+        let (_, p) = parse_request(r#"{"data": [1]}"#, &reg);
+        assert!(p.err().unwrap().msg.contains("\"id\""));
         // future protocol version
-        let (_, v) = parse_request(r#"{"id": 1, "v": 2, "data": [1]}"#, eng.as_ref());
-        assert!(v.unwrap_err().to_string().contains("protocol version"));
+        let (_, p) = parse_request(r#"{"id": 1, "v": 3, "data": [1]}"#, &reg);
+        assert!(p.err().unwrap().msg.contains("protocol version"));
+        // v1 requests cannot name a model: that grammar is v2-only
+        let (_, p) = parse_request(r#"{"id": 1, "v": 1, "model": "mlp", "data": [1]}"#, &reg);
+        let e = p.err().unwrap();
+        assert_eq!(e.code, "bad_request");
+        assert!(e.msg.contains("requires protocol v2"), "{}", e.msg);
+        // unknown model: the registry's typed code passes through
+        let (_, p) = parse_request(r#"{"id": 1, "model": "ghost", "data": [1]}"#, &reg);
+        assert_eq!(p.err().unwrap().code, "unknown_model");
+    }
+
+    #[test]
+    fn stats_requests_parse_and_render() {
+        let reg = registry_with(&["mlp"]);
+        let (_, p) = parse_request(r#"{"id": 5, "stats": true}"#, &reg);
+        assert!(matches!(p, Ok(Parsed::Stats)));
+        let (_, p) = parse_request(r#"{"id": 5, "v": 1, "stats": true}"#, &reg);
+        assert!(p.err().unwrap().msg.contains("requires protocol v2"));
+        let line = render_stats(&Json::Num(5.0), &reg.stats());
+        let doc = Json::parse(&line).unwrap();
+        let models = doc.get("models").unwrap().arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("model").unwrap().str().unwrap(), "mlp");
+        assert_eq!(models[0].get("fp").unwrap().str().unwrap(), "fp-mlp");
     }
 
     #[test]
     fn token_requests_reject_non_integer_ids() {
-        let eng = Arc::new(crate::serve::test_fixture::lowered("tiny_tf"));
+        let reg = registry_with(&["tiny_tf"]);
         let ids: Vec<String> = (0..16).map(|i| (i % 64).to_string()).collect();
         let line = format!("{{\"id\": 1, \"data\": [{}]}}", ids.join(","));
-        let (_, v) = parse_request(&line, eng.as_ref());
-        assert!(v.is_ok());
+        let (_, p) = parse_request(&line, &reg);
+        assert!(p.is_ok());
         // 5.9 must not silently truncate to token 5
         let mut ids = ids;
         ids[3] = "5.9".to_string();
         let line = format!("{{\"id\": 1, \"data\": [{}]}}", ids.join(","));
-        let (_, v) = parse_request(&line, eng.as_ref());
-        assert!(v.unwrap_err().to_string().contains("not an integer"), "float id accepted");
+        let (_, p) = parse_request(&line, &reg);
+        assert!(p.err().unwrap().msg.contains("not an integer"), "float id accepted");
     }
 
     #[test]
     fn response_lines_round_trip() {
         let id = Json::Str("r9".into());
-        let ok = Ok(Tensor { shape: vec![2], data: vec![1.5, -0.25] });
-        let line = render_response(&id, &ok);
+        let reply = Reply {
+            logits: Tensor { shape: vec![2], data: vec![1.5, -0.25] },
+            model: Arc::from("mlp"),
+            fingerprint: Arc::from("0123456789abcdef0123"),
+            generation: 3,
+        };
+        let line = render_reply(&id, &reply);
         let doc = Json::parse(&line).unwrap();
         assert_eq!(doc.get("id").unwrap(), &id);
+        assert_eq!(doc.get("model").unwrap().str().unwrap(), "mlp");
+        assert_eq!(doc.get("fp").unwrap().str().unwrap(), "0123456789ab");
+        assert_eq!(doc.get("gen").unwrap().num().unwrap() as u64, 3);
         assert_eq!(doc.get("shape").unwrap().shape().unwrap(), vec![2]);
         let logits = doc.get("logits").unwrap().arr().unwrap();
         assert_eq!(logits[1].num().unwrap() as f32, -0.25);
 
-        let err: Result<Tensor> = Err(anyhow!("boom"));
-        let doc = Json::parse(&render_response(&id, &err)).unwrap();
+        let doc = Json::parse(&render_error(&id, "overloaded", "boom")).unwrap();
+        assert_eq!(doc.get("code").unwrap().str().unwrap(), "overloaded");
         assert_eq!(doc.get("error").unwrap().str().unwrap(), "boom");
     }
 }

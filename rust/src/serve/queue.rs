@@ -18,6 +18,16 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
+/// Rejected [`BoundedQueue::try_push`], handing the item back so the
+/// caller can answer it (the serving registry's admission control).
+#[derive(Debug)]
+pub enum TryPush<T> {
+    /// The queue was at capacity.
+    Full(T),
+    /// The queue was closed.
+    Closed(T),
+}
+
 /// Outcome of a deadline-bounded pop ([`BoundedQueue::pop_deadline`]).
 #[derive(Debug)]
 pub enum Popped<T> {
@@ -86,6 +96,24 @@ impl<T> BoundedQueue<T> {
             }
             st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
         }
+    }
+
+    /// Enqueue `v` without blocking: admission control for the serving
+    /// registry.  A full queue hands the item back as
+    /// [`TryPush::Full`] (the caller turns it into a typed
+    /// `overloaded` rejection) instead of parking the submitter; a
+    /// closed queue hands it back as [`TryPush::Closed`].
+    pub fn try_push(&self, v: T) -> Result<(), TryPush<T>> {
+        let mut st = lock(&self.state);
+        if st.closed {
+            return Err(TryPush::Closed(v));
+        }
+        if st.buf.len() >= self.cap {
+            return Err(TryPush::Full(v));
+        }
+        st.buf.push_back(v);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Dequeue, blocking while the queue is empty.  Returns `None` only
@@ -273,6 +301,22 @@ mod tests {
         assert_eq!(q.push(8), Err(8));
         // the buffered item survives close — draining shutdown
         assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn try_push_reports_full_and_closed_without_blocking() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err(TryPush::Full(3))));
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap(); // room again after a pop
+        q.close();
+        assert!(matches!(q.try_push(4), Err(TryPush::Closed(4))));
+        // the buffered items survive close — draining shutdown
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), None);
     }
 

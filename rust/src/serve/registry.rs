@@ -1,0 +1,626 @@
+//! Multi-model serving registry with zero-downtime checkpoint hot swap
+//! (RFC `docs/rfcs/0005-serving-registry.md`).
+//!
+//! The registry holds one *lane* per model name — an intake queue, a
+//! batcher thread, and a worker pool — and one [`EngineSlot`] naming the
+//! engine that lane currently answers with:
+//!
+//! ```text
+//!            ┌─ lane "resnet": intake ─► batcher ─► workers ──► Mutex<EngineSlot> gen 3
+//!  Registry ─┼─ lane "mlp":    intake ─► batcher ─► workers ──► Mutex<EngineSlot> gen 1
+//!            └─ default model, per-model draining flags, stats
+//! ```
+//!
+//! * **Hot swap** ([`Registry::install`] over an existing name) replaces
+//!   the slot's `Arc<dyn Engine>` under the slot lock and bumps the
+//!   generation.  Workers clone the slot *per batch*, so in-flight
+//!   batches keep answering from the pre-swap engine; the old `Arc` is
+//!   dropped when its last batch completes.  Nothing queued is lost and
+//!   no request is mis-routed: each [`Reply`] carries the fingerprint
+//!   and generation of the engine that actually computed it.
+//! * **Fingerprints** are the RFC 0001 bundle SHA-256
+//!   ([`crate::bundle::fingerprint`]) — the swap-safety primitive: a
+//!   swap is observable, and two deployments of the same checkpoint are
+//!   provably the same arithmetic.
+//! * **Admission control**: submission never blocks.  A full intake is a
+//!   typed [`SubmitError::Overloaded`] rejection (one hot model cannot
+//!   starve the rest — each lane has its own bounded queue), and a model
+//!   being retired answers [`SubmitError::Draining`] while its queued
+//!   requests drain on the outgoing engine.
+//!
+//! Swap safety: an engine installed over an existing model must keep the
+//! input geometry (`InputKind`), class count, and vocabulary of the
+//! engine it replaces, so a request validated or decoded against the old
+//! engine is still well-formed for the new one.  Cross-geometry changes
+//! are a new model name, not a swap.
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::thread::JoinHandle;
+
+use crate::error::{bail, Error, Result};
+use crate::tensor::Tensor;
+
+use super::batcher;
+use super::queue::{oneshot, BoundedQueue, TryPush};
+use super::worker::{self, Engine, Request};
+use super::{ServeCfg, Ticket};
+
+/// A poisoned registry lock only means some thread panicked mid-update;
+/// the registry state itself is always coherent (slot replacement is a
+/// single assignment), so every lock recovers instead of propagating.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The engine a lane currently answers with, plus the identity a
+/// [`Reply`] echoes back.  Workers clone this per batch (three `Arc`
+/// bumps and a `u64` — alloc-free), so a swap lands between batches,
+/// never inside one.
+#[derive(Clone)]
+pub struct EngineSlot {
+    /// The engine executing this lane's batches.
+    pub engine: Arc<dyn Engine>,
+    /// Model name the lane serves under (registry key, not
+    /// [`Engine::model`] — one architecture can serve under many names).
+    pub model: Arc<str>,
+    /// Checkpoint fingerprint: RFC 0001 bundle SHA-256 hex, or
+    /// `"unversioned"` for engines installed without provenance.
+    pub fingerprint: Arc<str>,
+    /// Monotonic per-model install counter; starts at 1, bumped by every
+    /// swap.  Distinguishes re-installs of an identical checkpoint.
+    pub generation: u64,
+}
+
+/// One answered request: the logits plus the identity of the engine that
+/// computed them — the proof a hot swap routed nothing to the wrong
+/// graph.
+#[derive(Clone)]
+pub struct Reply {
+    /// Per-example logits (batch dimension already split away).
+    pub logits: Tensor,
+    /// Model name the request was served under.
+    pub model: Arc<str>,
+    /// Fingerprint of the engine that computed [`Self::logits`].
+    pub fingerprint: Arc<str>,
+    /// Generation of that engine (see [`EngineSlot::generation`]).
+    pub generation: u64,
+}
+
+/// Typed admission-control verdicts: why a submission was not accepted.
+/// Each maps to a stable protocol error code ([`SubmitError::code`])
+/// so clients can react mechanically (back off, re-resolve, fail over).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// No model registered under the requested name.
+    UnknownModel {
+        /// The name the request asked for.
+        model: String,
+        /// Names the registry does serve (for the error message).
+        known: Vec<String>,
+    },
+    /// A model-less (v1) request arrived but no default model is set.
+    NoDefaultModel,
+    /// The model's intake queue is at capacity; retry with backoff.
+    Overloaded {
+        /// The model whose lane is full.
+        model: String,
+        /// Its configured queue capacity.
+        cap: usize,
+    },
+    /// The model is being retired; queued requests drain, new ones bounce.
+    Draining {
+        /// The model being retired.
+        model: String,
+    },
+    /// The serving runtime is not running (never started or shut down).
+    Shutdown {
+        /// The model the request asked for.
+        model: String,
+    },
+    /// The example failed validation against the model's input domain.
+    Invalid(Error),
+}
+
+impl SubmitError {
+    /// Stable machine-readable code, used verbatim as the RFC 0002 v2
+    /// response `code` field.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::UnknownModel { .. } => "unknown_model",
+            SubmitError::NoDefaultModel => "no_default_model",
+            SubmitError::Overloaded { .. } => "overloaded",
+            SubmitError::Draining { .. } => "draining",
+            SubmitError::Shutdown { .. } => "shutdown",
+            SubmitError::Invalid(_) => "invalid",
+        }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownModel { model, known } => {
+                write!(f, "unknown model {model:?}; serving: [{}]", known.join(", "))
+            }
+            SubmitError::NoDefaultModel => {
+                write!(f, "request names no model and no default model is configured")
+            }
+            SubmitError::Overloaded { model, cap } => {
+                write!(f, "{model}: intake queue full ({cap} queued); retry with backoff")
+            }
+            SubmitError::Draining { model } => {
+                write!(f, "{model}: draining (being retired); pick another model")
+            }
+            SubmitError::Shutdown { model } => {
+                write!(f, "{model}: serving runtime is not running")
+            }
+            SubmitError::Invalid(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl From<SubmitError> for Error {
+    fn from(e: SubmitError) -> Error {
+        Error::msg(format!("serve [{}]: {e}", e.code()))
+    }
+}
+
+/// Live per-model counters for the stats surface (`{"stats": true}`
+/// requests and `efqat serve` shutdown logs) — swaps are observable.
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    /// Model name.
+    pub model: String,
+    /// Active engine's checkpoint fingerprint.
+    pub fingerprint: String,
+    /// Active engine's generation (bumped per swap).
+    pub generation: u64,
+    /// Requests accepted but not yet batched.
+    pub queued: usize,
+    /// Intake queue capacity (0 until the lane starts).
+    pub capacity: usize,
+    /// Whether the model is being retired.
+    pub draining: bool,
+}
+
+/// One model's lane: identity, the swappable engine slot, and the
+/// queue/threads that exist once the registry is started.
+struct ModelEntry {
+    name: Arc<str>,
+    slot: Mutex<EngineSlot>,
+    draining: AtomicBool,
+    /// Intake queue; set exactly once when the lane starts.  A retired
+    /// lane is never restarted — re-installing a retired name makes a
+    /// fresh entry.
+    intake: OnceLock<Arc<BoundedQueue<Request>>>,
+    /// Intake capacity, mirrored out of [`ServeCfg`] for stats.
+    capacity: AtomicUsize,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+struct Inner {
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    default_model: RwLock<Option<String>>,
+    /// `Some(cfg)` while lanes are running; installs then start their
+    /// lane immediately.  Lock order: `models` before `running`; never
+    /// acquire `models` while holding `running`.
+    running: Mutex<Option<ServeCfg>>,
+}
+
+/// Handle to the shared registry state.  Cheap to clone; every clone
+/// sees the same models, default, and lanes.
+#[derive(Clone)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    /// An empty registry: no models, no default, lanes not started.
+    pub fn new() -> Registry {
+        Registry {
+            inner: Arc::new(Inner {
+                models: RwLock::new(BTreeMap::new()),
+                default_model: RwLock::new(None),
+                running: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Install `engine` under `name` with its checkpoint `fingerprint`
+    /// (see [`crate::bundle::fingerprint`]; `"unversioned"` is the
+    /// convention for engines without provenance).
+    ///
+    /// First install of a name creates the model (and becomes the
+    /// default model if none is set); installing over an existing name
+    /// is the *hot swap*: the new engine must match the old one's input
+    /// geometry, class count, and vocabulary, and takes over between
+    /// batches while in-flight work completes on the old `Arc`.
+    pub fn install(&self, name: &str, engine: Arc<dyn Engine>, fingerprint: &str) -> Result<()> {
+        if name.is_empty() {
+            bail!("registry: model name must be non-empty");
+        }
+        let mut models = write(&self.inner.models);
+        if let Some(entry) = models.get(name) {
+            if entry.draining.load(Ordering::SeqCst) {
+                bail!("registry: cannot install {name:?} while it is draining");
+            }
+            let mut slot = lock(&entry.slot);
+            let old = &slot.engine;
+            if old.input() != engine.input()
+                || old.classes() != engine.classes()
+                || old.vocab() != engine.vocab()
+            {
+                bail!(
+                    "registry: swap for {name:?} changes the serving contract \
+                     (input/classes/vocab); install under a new model name instead"
+                );
+            }
+            *slot = EngineSlot {
+                engine,
+                model: entry.name.clone(),
+                fingerprint: Arc::from(fingerprint),
+                generation: slot.generation + 1,
+            };
+            return Ok(());
+        }
+        let name_arc: Arc<str> = Arc::from(name);
+        let entry = Arc::new(ModelEntry {
+            name: name_arc.clone(),
+            slot: Mutex::new(EngineSlot {
+                engine,
+                model: name_arc,
+                fingerprint: Arc::from(fingerprint),
+                generation: 1,
+            }),
+            draining: AtomicBool::new(false),
+            intake: OnceLock::new(),
+            capacity: AtomicUsize::new(0),
+            threads: Mutex::new(Vec::new()),
+        });
+        // a registry already running gives the new model its lane now
+        if let Some(cfg) = *lock(&self.inner.running) {
+            start_lane(&entry, cfg);
+        }
+        models.insert(name.to_string(), entry);
+        drop(models);
+        let mut default = write(&self.inner.default_model);
+        if default.is_none() {
+            *default = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Make `name` the model that answers model-less (v1) requests.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        if !read(&self.inner.models).contains_key(name) {
+            bail!("registry: cannot default to unknown model {name:?}");
+        }
+        *write(&self.inner.default_model) = Some(name.to_string());
+        Ok(())
+    }
+
+    /// The model answering model-less (v1) requests, if any.
+    pub fn default_model(&self) -> Option<String> {
+        read(&self.inner.default_model).clone()
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<String> {
+        read(&self.inner.models).keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        read(&self.inner.models).len()
+    }
+
+    /// Whether no models are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resolve `model` (or the default) to its current engine slot — the
+    /// protocol driver decodes request payloads against this engine.
+    /// The clone is a snapshot: a swap after resolution is fine because
+    /// swaps preserve the serving contract (see [`Registry::install`]).
+    pub fn engine_for(&self, model: Option<&str>) -> Result<EngineSlot, SubmitError> {
+        let entry = self.entry_for(model)?;
+        let slot = lock(&entry.slot);
+        Ok(slot.clone())
+    }
+
+    fn entry_for(&self, model: Option<&str>) -> Result<Arc<ModelEntry>, SubmitError> {
+        let name = match model {
+            Some(m) => m.to_string(),
+            None => self.default_model().ok_or(SubmitError::NoDefaultModel)?,
+        };
+        let models = read(&self.inner.models);
+        match models.get(&name) {
+            Some(e) => Ok(e.clone()),
+            None => Err(SubmitError::UnknownModel {
+                model: name,
+                known: models.keys().cloned().collect(),
+            }),
+        }
+    }
+
+    /// Submit one example to `model` (or the default model for `None`).
+    /// Never blocks: the example is validated against the model's
+    /// current engine, then offered to its intake queue; a full queue is
+    /// [`SubmitError::Overloaded`], a retiring model
+    /// [`SubmitError::Draining`].
+    pub fn submit(&self, model: Option<&str>, input: crate::backend::Value) -> SubmitResult {
+        let entry = self.entry_for(model)?;
+        if entry.draining.load(Ordering::SeqCst) {
+            return Err(SubmitError::Draining { model: entry.name.to_string() });
+        }
+        let engine = lock(&entry.slot).engine.clone();
+        engine.validate_example(&input).map_err(SubmitError::Invalid)?;
+        let Some(intake) = entry.intake.get() else {
+            return Err(SubmitError::Shutdown { model: entry.name.to_string() });
+        };
+        let (tx, rx) = oneshot();
+        match intake.try_push(Request { input, tx }) {
+            Ok(()) => Ok(Ticket { rx }),
+            Err(TryPush::Full(_)) => Err(SubmitError::Overloaded {
+                model: entry.name.to_string(),
+                cap: entry.capacity.load(Ordering::Relaxed),
+            }),
+            // closed intake during retire reads as draining, not shutdown
+            Err(TryPush::Closed(_)) => {
+                if entry.draining.load(Ordering::SeqCst) {
+                    Err(SubmitError::Draining { model: entry.name.to_string() })
+                } else {
+                    Err(SubmitError::Shutdown { model: entry.name.to_string() })
+                }
+            }
+        }
+    }
+
+    /// Start every model's lane (intake + batcher + workers) with `cfg`.
+    /// At most once per registry; models installed later get their lane
+    /// on install.
+    pub fn start(&self, cfg: ServeCfg) -> Result<()> {
+        let models = read(&self.inner.models);
+        let mut running = lock(&self.inner.running);
+        if running.is_some() {
+            bail!("registry: serving lanes already started");
+        }
+        *running = Some(cfg);
+        drop(running);
+        for entry in models.values() {
+            start_lane(entry, cfg);
+        }
+        Ok(())
+    }
+
+    /// Retire `name`: refuse new submissions ([`SubmitError::Draining`]),
+    /// drain its queued requests on the outgoing engine, join its lane,
+    /// then remove it (clearing the default if it pointed there).
+    /// Blocks until the lane is fully drained.
+    pub fn retire(&self, name: &str) -> Result<()> {
+        let entry = match read(&self.inner.models).get(name) {
+            Some(e) => e.clone(),
+            None => bail!("registry: cannot retire unknown model {name:?}"),
+        };
+        entry.draining.store(true, Ordering::SeqCst);
+        if let Some(intake) = entry.intake.get() {
+            intake.close(); // draining close: everything queued is answered
+        }
+        let threads: Vec<JoinHandle<()>> = lock(&entry.threads).drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+        write(&self.inner.models).remove(name);
+        let mut default = write(&self.inner.default_model);
+        if default.as_deref() == Some(name) {
+            *default = None;
+        }
+        Ok(())
+    }
+
+    /// Total requests queued (accepted, not yet batched) across models.
+    pub fn pending(&self) -> usize {
+        read(&self.inner.models)
+            .values()
+            .filter_map(|e| e.intake.get().map(|q| q.len()))
+            .sum()
+    }
+
+    /// Per-model live counters, sorted by model name.
+    pub fn stats(&self) -> Vec<ModelStats> {
+        read(&self.inner.models)
+            .values()
+            .map(|e| {
+                let slot = lock(&e.slot);
+                ModelStats {
+                    model: e.name.to_string(),
+                    fingerprint: slot.fingerprint.to_string(),
+                    generation: slot.generation,
+                    queued: e.intake.get().map(|q| q.len()).unwrap_or(0),
+                    capacity: e.capacity.load(Ordering::Relaxed),
+                    draining: e.draining.load(Ordering::SeqCst),
+                }
+            })
+            .collect()
+    }
+
+    /// Close every lane's intake, drain queued work through the
+    /// workers, and join all threads.  Idempotent; the registry cannot
+    /// be restarted afterwards (build a new one).
+    pub fn shutdown(&self) {
+        *lock(&self.inner.running) = None;
+        let entries: Vec<Arc<ModelEntry>> = read(&self.inner.models).values().cloned().collect();
+        for entry in &entries {
+            if let Some(intake) = entry.intake.get() {
+                intake.close();
+            }
+        }
+        for entry in &entries {
+            let threads: Vec<JoinHandle<()>> = lock(&entry.threads).drain(..).collect();
+            for t in threads {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+/// Convenience alias for [`Registry::submit`]'s typed result.
+pub type SubmitResult = std::result::Result<Ticket, SubmitError>;
+
+/// Spawn one lane (intake queue, batcher, workers) for `entry`.  A lane
+/// starts at most once; re-entry (retired name re-installed onto the
+/// same entry) is impossible because retire removes the entry.
+fn start_lane(entry: &Arc<ModelEntry>, cfg: ServeCfg) {
+    let intake: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_cap);
+    if entry.intake.set(intake.clone()).is_err() {
+        return;
+    }
+    entry.capacity.store(cfg.queue_cap.max(1), Ordering::Relaxed);
+    // small batch buffer: enough to keep every worker busy without
+    // letting latency hide in a deep intermediate queue
+    let batches: Arc<BoundedQueue<Vec<Request>>> = BoundedQueue::new(cfg.workers.max(1) * 2);
+    let mut threads = lock(&entry.threads);
+    {
+        let (rq, bq) = (intake, batches.clone());
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("efqat-{}-batcher", entry.name))
+                .spawn(move || batcher::run(&rq, &bq, cfg.batch))
+                .expect("spawn batcher"),
+        );
+    }
+    for i in 0..cfg.workers.max(1) {
+        let (e, bq) = (entry.clone(), batches.clone());
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("efqat-{}-worker-{i}", entry.name))
+                .spawn(move || worker::run(&e.slot, &bq))
+                .expect("spawn worker"),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_fixture;
+    use super::*;
+    use crate::backend::Value;
+    use crate::tensor::Tensor;
+
+    fn image(seed: u64) -> Value {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        Value::F32(Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) })
+    }
+
+    fn mlp() -> Arc<dyn Engine> {
+        Arc::new(test_fixture::lowered_mlp())
+    }
+
+    #[test]
+    fn first_install_becomes_default_and_set_default_validates() {
+        let reg = Registry::new();
+        assert!(reg.is_empty());
+        reg.install("a", mlp(), "fp-a").unwrap();
+        reg.install("b", mlp(), "fp-b").unwrap();
+        assert_eq!(reg.default_model().as_deref(), Some("a"));
+        assert_eq!(reg.models(), vec!["a".to_string(), "b".to_string()]);
+        reg.set_default("b").unwrap();
+        assert_eq!(reg.default_model().as_deref(), Some("b"));
+        assert!(reg.set_default("nope").is_err());
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_rejects_geometry_changes() {
+        let reg = Registry::new();
+        reg.install("m", mlp(), "fp-1").unwrap();
+        assert_eq!(reg.engine_for(Some("m")).unwrap().generation, 1);
+        reg.install("m", mlp(), "fp-2").unwrap();
+        let slot = reg.engine_for(Some("m")).unwrap();
+        assert_eq!(slot.generation, 2);
+        assert_eq!(&*slot.fingerprint, "fp-2");
+        // tiny_tf is a token model: swapping it over an image model
+        // would break in-flight decoded requests — refused
+        let tf: Arc<dyn Engine> = Arc::new(test_fixture::lowered("tiny_tf"));
+        let err = reg.install("m", tf, "fp-3").unwrap_err().to_string();
+        assert!(err.contains("serving contract"), "{err}");
+    }
+
+    #[test]
+    fn submit_routes_and_reports_typed_errors() {
+        let reg = Registry::new();
+        // nothing installed: no default to fall back to
+        assert!(matches!(reg.submit(None, image(0)), Err(SubmitError::NoDefaultModel)));
+        reg.install("m", mlp(), "fp-1").unwrap();
+        // installed but lanes not started
+        match reg.submit(Some("m"), image(0)) {
+            Err(e @ SubmitError::Shutdown { .. }) => assert_eq!(e.code(), "shutdown"),
+            other => panic!("want Shutdown, got {:?}", other.err().map(|e| e.to_string())),
+        }
+        match reg.submit(Some("ghost"), image(0)) {
+            Err(e @ SubmitError::UnknownModel { .. }) => assert_eq!(e.code(), "unknown_model"),
+            other => panic!("want UnknownModel, got {:?}", other.err().map(|e| e.to_string())),
+        }
+        reg.start(ServeCfg::default()).unwrap();
+        // malformed examples are rejected before they join a batch
+        let bad = Value::F32(Tensor::zeros(&[3, 4, 4]));
+        assert!(matches!(reg.submit(Some("m"), bad), Err(SubmitError::Invalid(_))));
+        let reply = reg.submit(None, image(1)).unwrap().wait_reply().unwrap();
+        assert_eq!(&*reply.model, "m");
+        assert_eq!(&*reply.fingerprint, "fp-1");
+        assert_eq!(reply.generation, 1);
+        assert_eq!(reply.logits.shape, vec![10]);
+        reg.shutdown();
+        match reg.submit(Some("m"), image(2)) {
+            Err(e @ SubmitError::Shutdown { .. }) => assert_eq!(e.code(), "shutdown"),
+            other => panic!("want Shutdown, got {:?}", other.err().map(|e| e.to_string())),
+        }
+    }
+
+    #[test]
+    fn retire_removes_model_and_clears_default() {
+        let reg = Registry::new();
+        reg.install("m", mlp(), "fp-1").unwrap();
+        reg.start(ServeCfg::default()).unwrap();
+        reg.retire("m").unwrap();
+        assert!(reg.models().is_empty());
+        assert_eq!(reg.default_model(), None);
+        assert!(reg.retire("m").is_err());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn stats_surface_fingerprint_generation_and_capacity() {
+        let reg = Registry::new();
+        reg.install("m", mlp(), "fp-1").unwrap();
+        let st = &reg.stats()[0];
+        assert_eq!((st.capacity, st.generation, st.draining), (0, 1, false));
+        let cfg = ServeCfg::builder().queue_cap(7).build().unwrap();
+        reg.start(cfg).unwrap();
+        reg.install("m", mlp(), "fp-2").unwrap();
+        let st = &reg.stats()[0];
+        assert_eq!(st.model, "m");
+        assert_eq!(st.fingerprint, "fp-2");
+        assert_eq!((st.capacity, st.generation), (7, 2));
+        reg.shutdown();
+    }
+}

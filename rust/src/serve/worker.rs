@@ -15,7 +15,7 @@
 #![warn(missing_docs)]
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::backend::Value;
 use crate::coordinator::binder::{bind_inputs, BindCtx};
@@ -28,15 +28,16 @@ use crate::model::{ParamStore, QParamStore, StateStore};
 use crate::tensor::{ITensor, Tensor};
 
 use super::queue::{BoundedQueue, OneshotSender};
+use super::registry::{EngineSlot, Reply};
 
 /// One queued inference request: a single example plus the channel its
-/// logits (or error) are routed back through.
+/// reply (logits + serving identity, or error) is routed back through.
 pub struct Request {
     /// One example in the engine's input domain: f32 `[C, H, H]` images
     /// or i32 `[T]` token ids — no batch dimension; the batcher adds it.
     pub input: Value,
     /// Resolved by the worker that executes this request's batch.
-    pub tx: OneshotSender<Result<Tensor>>,
+    pub tx: OneshotSender<Result<Reply>>,
 }
 
 /// A batch-flexible forward engine the serving runtime can pool workers
@@ -289,17 +290,28 @@ pub fn split_logits(out: &Tensor, b: usize) -> Result<Vec<Tensor>> {
 /// drained.  An engine failure on a batch resolves *every* request in it
 /// with the error — no request is left hanging.
 ///
+/// The engine is re-read from `slot` **per batch** (a handful of `Arc`
+/// clones under a short lock): this is the hot-swap seam.  A
+/// [`Registry::install`](super::registry::Registry::install) over the
+/// same model replaces the slot between batches; a batch already popped
+/// keeps the old engine `Arc` until its replies are sent, so the
+/// outgoing graph is dropped exactly when its last in-flight batch
+/// completes.  Every [`Reply`] names the engine (fingerprint +
+/// generation) that actually computed it.
+///
 /// Each worker owns one [`Workspace`] reused across micro-batches: the
 /// stacked input, every engine-internal buffer, and the batched logits
 /// all recycle, so after the first batch at a given high-water size the
 /// steady state performs zero heap allocations beyond the per-request
 /// response envelopes.  A shrinking dynamic batch reuses the high-water
 /// buffers; growing past them resizes once and plateaus.
-pub fn run(engine: &Arc<dyn Engine>, batches: &Arc<BoundedQueue<Vec<Request>>>) {
+pub fn run(slot: &Mutex<EngineSlot>, batches: &Arc<BoundedQueue<Vec<Request>>>) {
     let mut ws = Workspace::new();
     while let Some(batch) = batches.pop() {
         let b = batch.len();
-        let (inputs, txs): (Vec<Value>, Vec<OneshotSender<Result<Tensor>>>) =
+        let snap = slot.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        let engine = &snap.engine;
+        let (inputs, txs): (Vec<Value>, Vec<OneshotSender<Result<Reply>>>) =
             batch.into_iter().map(|r| (r.input, r.tx)).unzip();
         let result = match stack_examples_ws(engine.input(), &inputs, &mut ws) {
             Ok(x) => {
@@ -319,12 +331,17 @@ pub fn run(engine: &Arc<dyn Engine>, batches: &Arc<BoundedQueue<Vec<Request>>>) 
         match result {
             Ok(parts) => {
                 for (tx, logits) in txs.into_iter().zip(parts) {
-                    tx.send(Ok(logits));
+                    tx.send(Ok(Reply {
+                        logits,
+                        model: snap.model.clone(),
+                        fingerprint: snap.fingerprint.clone(),
+                        generation: snap.generation,
+                    }));
                 }
             }
             Err(e) => {
                 for tx in txs {
-                    tx.send(Err(anyhow!("{} serve: batch of {b} failed: {e}", engine.model())));
+                    tx.send(Err(anyhow!("{} serve: batch of {b} failed: {e}", snap.model)));
                 }
             }
         }

@@ -91,12 +91,23 @@ pub fn synth_qparams(
 pub fn synth_lowering_fixture(
     model: &str,
 ) -> (crate::graph::LayerGraph, crate::model::ParamStore, crate::model::QParamStore) {
+    synth_lowering_fixture_seeded(model, 1)
+}
+
+/// [`synth_lowering_fixture`] with a caller-chosen init seed: distinct
+/// seeds yield the same architecture with different weights — the
+/// hot-swap tests use these as stand-ins for successive training
+/// checkpoints of one model.
+pub fn synth_lowering_fixture_seeded(
+    model: &str,
+    seed: u64,
+) -> (crate::graph::LayerGraph, crate::model::ParamStore, crate::model::QParamStore) {
     use crate::graph::{build_manifest, StepId, StepKind};
 
     let g = crate::backend::native::model_graph(model)
         .unwrap_or_else(|| panic!("{model}: not a native model"));
     let man = build_manifest(&g, "fwd", &StepId { kind: StepKind::Fwd, w_bits: 8, a_bits: 8 });
-    let params = crate::model::ParamStore::init(&man, 1);
+    let params = crate::model::ParamStore::init(&man, seed);
     let q = synth_qparams(&man, &params, 8, 8, 0.05);
     (g, params, q)
 }

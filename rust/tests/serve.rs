@@ -6,10 +6,17 @@
 //!
 //! Also covered here: deadline flush with a partial batch, routing to
 //! the correct submitter under concurrency, token-model validation at
-//! submission, the f32 reference engine, drain-on-shutdown, and the
-//! JSONL protocol end-to-end through `serve_stream`.
+//! submission, the f32 reference engine, drain-on-shutdown, the JSONL
+//! protocol end-to-end through `serve_stream` (v2 model routing, v1
+//! fallback to the default model, stats introspection), and the
+//! registry's hot-swap/admission-control contract: checkpoint swaps
+//! under live two-model load drop nothing and mis-route nothing, a full
+//! lane rejects with the typed `overloaded` code, and a retiring model
+//! drains everything it accepted.
 
-use std::sync::Arc;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use efqat::backend::native::model_graph;
@@ -17,10 +24,12 @@ use efqat::backend::Value;
 use efqat::cfg::Config;
 use efqat::coordinator::tasks::test_loader;
 use efqat::coordinator::{evaluate_int8, example_inputs};
+use efqat::error::Result;
+use efqat::graph::InputKind;
 use efqat::json::Json;
 use efqat::lower::{lower, QuantizedGraph};
 use efqat::model::{ParamStore, QParamStore};
-use efqat::serve::{BatchCfg, Engine, FloatEngine, Server, ServeCfg};
+use efqat::serve::{BatchCfg, Engine, FloatEngine, Registry, Server, ServeCfg};
 use efqat::tensor::{ITensor, Tensor};
 
 /// The shared synthetic lowering fixture, pre-lowered: real weights from
@@ -31,8 +40,36 @@ fn fixture(model: &str) -> (QuantizedGraph, ParamStore, QParamStore) {
     (qg, params, q)
 }
 
+/// A lowered graph at a chosen init seed: same architecture, different
+/// weights — a stand-in for a later training checkpoint of one model.
+fn fixture_seeded(model: &str, seed: u64) -> QuantizedGraph {
+    let (g, params, q) = efqat::testing::synth_lowering_fixture_seeded(model, seed);
+    lower(&g, &params, &q, 8, 8).unwrap()
+}
+
 fn serve_cfg(max_batch: usize, wait: Duration, workers: usize) -> ServeCfg {
     ServeCfg { batch: BatchCfg { max_batch, max_wait: wait }, workers, queue_cap: 256 }
+}
+
+/// Re-shape one example into a batch of 1 — the single-request reference
+/// every batched answer must be bit-identical to.
+fn unit_batch(v: &Value) -> Value {
+    match v {
+        Value::F32(t) => {
+            let mut shape = vec![1];
+            shape.extend_from_slice(&t.shape);
+            Value::F32(Tensor { shape, data: t.data.clone() })
+        }
+        Value::I32(t) => {
+            let mut shape = vec![1];
+            shape.extend_from_slice(&t.shape);
+            Value::I32(ITensor { shape, data: t.data.clone() })
+        }
+    }
+}
+
+fn logits_of(doc: &Json) -> Vec<f32> {
+    doc.get("logits").unwrap().arr().unwrap().iter().map(|j| j.num().unwrap() as f32).collect()
 }
 
 #[test]
@@ -45,34 +82,15 @@ fn batched_serving_is_bit_identical_to_int8_eval() {
     assert!(eval.n > 0);
 
     let engine = Arc::new(fixture("mlp").0);
-    let server = Server::start(
-        engine.clone() as Arc<dyn Engine>,
-        serve_cfg(16, Duration::from_millis(1), 2),
-    );
+    let server = Server::single(engine.clone(), serve_cfg(16, Duration::from_millis(1), 2));
     let mut loader = test_loader("mlp", 32, &cfg).unwrap();
     loader.reset();
     let mut checked = 0usize;
     while let Some(batch) = loader.next_batch() {
         let examples = example_inputs(engine.input, &batch).unwrap();
         // single-request reference: a batch-of-1 forward per example
-        let singles: Vec<Tensor> = examples
-            .iter()
-            .map(|v| {
-                let one = match v {
-                    Value::F32(t) => {
-                        let mut shape = vec![1];
-                        shape.extend_from_slice(&t.shape);
-                        Value::F32(Tensor { shape, data: t.data.clone() })
-                    }
-                    Value::I32(t) => {
-                        let mut shape = vec![1];
-                        shape.extend_from_slice(&t.shape);
-                        Value::I32(ITensor { shape, data: t.data.clone() })
-                    }
-                };
-                engine.forward_owned(one).unwrap()
-            })
-            .collect();
+        let singles: Vec<Tensor> =
+            examples.iter().map(|v| engine.forward_owned(unit_batch(v)).unwrap()).collect();
         let tickets: Vec<_> = examples.into_iter().map(|v| server.submit(v).unwrap()).collect();
         for (t, want) in tickets.into_iter().zip(singles) {
             let got = t.wait().unwrap();
@@ -90,10 +108,7 @@ fn worker_workspace_survives_batch_resizing_bit_identically() {
     // workspace sees the dynamic batch grow, shrink, and regrow; every
     // answer must still be bit-identical to a fresh-allocation forward
     let engine = Arc::new(fixture("mlp").0);
-    let server = Server::start(
-        engine.clone() as Arc<dyn Engine>,
-        serve_cfg(64, Duration::from_millis(1), 1),
-    );
+    let server = Server::single(engine.clone(), serve_cfg(64, Duration::from_millis(1), 1));
     let mut rng = efqat::rng::Pcg64::new(77);
     for (wave, &count) in [4usize, 17, 1, 9, 33, 2].iter().enumerate() {
         let examples: Vec<Tensor> = (0..count)
@@ -117,10 +132,7 @@ fn worker_workspace_survives_batch_resizing_bit_identically() {
 #[test]
 fn concurrent_submitters_get_their_own_logits() {
     let engine = Arc::new(fixture("mlp").0);
-    let server = Server::start(
-        engine.clone() as Arc<dyn Engine>,
-        serve_cfg(8, Duration::from_millis(1), 3),
-    );
+    let server = Server::single(engine.clone(), serve_cfg(8, Duration::from_millis(1), 3));
     std::thread::scope(|s| {
         for t in 0..6u64 {
             let (server, engine) = (&server, &engine);
@@ -149,10 +161,7 @@ fn concurrent_submitters_get_their_own_logits() {
 fn deadline_flushes_partial_batches() {
     let engine = Arc::new(fixture("mlp").0);
     // max_batch far above the offered load: only the deadline can flush
-    let server = Server::start(
-        engine as Arc<dyn Engine>,
-        serve_cfg(1024, Duration::from_millis(10), 1),
-    );
+    let server = Server::single(engine, serve_cfg(1024, Duration::from_millis(10), 1));
     let t0 = Instant::now();
     let tickets: Vec<_> = (0..3)
         .map(|_| server.submit(Value::F32(Tensor::zeros(&[3, 8, 8]))).unwrap())
@@ -169,10 +178,7 @@ fn deadline_flushes_partial_batches() {
 #[test]
 fn token_model_serves_and_validates_ids() {
     let engine = Arc::new(fixture("tiny_tf").0);
-    let server = Server::start(
-        engine.clone() as Arc<dyn Engine>,
-        serve_cfg(4, Duration::from_millis(1), 2),
-    );
+    let server = Server::single(engine.clone(), serve_cfg(4, Duration::from_millis(1), 2));
     let ids = ITensor { shape: vec![16], data: (0..16).map(|i| i % 64).collect() };
     let want = engine
         .forward(&Value::I32(ITensor { shape: vec![1, 16], data: ids.data.clone() }))
@@ -197,10 +203,7 @@ fn f32_engine_serves_within_fakequant_tolerance() {
         8,
         8,
     ));
-    let server = Server::start(
-        engine as Arc<dyn Engine>,
-        serve_cfg(4, Duration::from_millis(1), 1),
-    );
+    let server = Server::single(engine, serve_cfg(4, Duration::from_millis(1), 1));
     let mut rng = efqat::rng::Pcg64::new(5);
     // odd request count: exercises a partial trailing batch in f32 too
     let examples: Vec<Tensor> =
@@ -225,10 +228,7 @@ fn f32_engine_serves_within_fakequant_tolerance() {
 #[test]
 fn jsonl_stream_round_trips_bit_identically() {
     let engine = Arc::new(fixture("mlp").0);
-    let server = Server::start(
-        engine.clone() as Arc<dyn Engine>,
-        serve_cfg(8, Duration::from_millis(1), 2),
-    );
+    let server = Server::single(engine.clone(), serve_cfg(8, Duration::from_millis(1), 2));
     let mut rng = efqat::rng::Pcg64::new(11);
     let examples: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(192, 1.0)).collect();
     let mut input = String::new();
@@ -247,22 +247,19 @@ fn jsonl_stream_round_trips_bit_identically() {
     for (i, ex) in examples.iter().enumerate() {
         let doc = Json::parse(lines[i]).unwrap();
         assert_eq!(doc.get("id").unwrap().num().unwrap() as usize, i);
-        let logits: Vec<f32> = doc
-            .get("logits")
-            .unwrap()
-            .arr()
-            .unwrap()
-            .iter()
-            .map(|j| j.num().unwrap() as f32)
-            .collect();
+        // the v2 envelope names the engine that answered
+        assert_eq!(doc.get("model").unwrap().str().unwrap(), "mlp");
+        assert_eq!(doc.get("fp").unwrap().str().unwrap(), "unversioned");
+        assert_eq!(doc.get("gen").unwrap().num().unwrap() as u64, 1);
         let want = engine
             .forward(&Value::F32(Tensor { shape: vec![1, 3, 8, 8], data: ex.clone() }))
             .unwrap();
         // f64 text round-trip is exact for f32 values
-        assert_eq!(logits, want.data, "request {i}");
+        assert_eq!(logits_of(&doc), want.data, "request {i}");
     }
     let err = Json::parse(lines[4]).unwrap();
     assert_eq!(err.get("id").unwrap().str().unwrap(), "bad");
+    assert_eq!(err.get("code").unwrap().str().unwrap(), "bad_request");
     assert!(err.get("error").unwrap().str().unwrap().contains("2 elements"));
     server.shutdown();
 }
@@ -270,11 +267,8 @@ fn jsonl_stream_round_trips_bit_identically() {
 #[test]
 fn shutdown_answers_everything_accepted() {
     let engine = Arc::new(fixture("mlp").0);
-    let server = Server::start(
-        engine as Arc<dyn Engine>,
-        // huge batch + long wait: shutdown itself must force the drain
-        serve_cfg(512, Duration::from_secs(30), 2),
-    );
+    // huge batch + long wait: shutdown itself must force the drain
+    let server = Server::single(engine, serve_cfg(512, Duration::from_secs(30), 2));
     let tickets: Vec<_> = (0..40)
         .map(|i| {
             let mut rng = efqat::rng::Pcg64::new(i);
@@ -286,4 +280,305 @@ fn shutdown_answers_everything_accepted() {
     for t in tickets {
         assert_eq!(t.wait().unwrap().shape, vec![10], "request dropped during shutdown");
     }
+}
+
+#[test]
+fn hot_swap_under_load_is_lossless_and_bit_identical() {
+    // four successive "checkpoints" of one architecture: same serving
+    // contract, different weights — distinguishable by their logits
+    let gens: Vec<Arc<QuantizedGraph>> =
+        (1..=4).map(|seed| Arc::new(fixture_seeded("mlp", seed))).collect();
+    let right = Arc::new(fixture("tiny_tf").0);
+    let mut engines: BTreeMap<String, Arc<QuantizedGraph>> = BTreeMap::new();
+    for (i, g) in gens.iter().enumerate() {
+        engines.insert(format!("fp-gen{}", i + 1), g.clone());
+    }
+    engines.insert("fp-right".to_string(), right.clone());
+
+    let registry = Registry::new();
+    registry.install("left", gens[0].clone(), "fp-gen1").unwrap();
+    registry.install("right", right.clone(), "fp-right").unwrap();
+    let server = Server::start(registry, serve_cfg(4, Duration::from_millis(1), 2)).unwrap();
+
+    let done = AtomicUsize::new(0);
+    let fps_seen = Mutex::new(BTreeSet::new());
+    std::thread::scope(|s| {
+        // three submitters hammer "left" (the lane being swapped) ...
+        for t in 0..3u64 {
+            let (server, engines, done, fps_seen) = (&server, &engines, &done, &fps_seen);
+            s.spawn(move || {
+                let mut rng = efqat::rng::Pcg64::new(500 + t);
+                for i in 0..80 {
+                    let x = Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) };
+                    let reply = server
+                        .try_submit(Some("left"), Value::F32(x.clone()))
+                        .unwrap_or_else(|e| panic!("left request {i} bounced: {e}"))
+                        .wait_reply()
+                        .unwrap_or_else(|e| panic!("left request {i} dropped: {e}"));
+                    assert_eq!(&*reply.model, "left");
+                    // the reply names the engine that computed it — an
+                    // in-flight request swapped over mid-queue must still
+                    // match the graph its fingerprint claims, bit for bit
+                    let engine = engines
+                        .get(&*reply.fingerprint)
+                        .unwrap_or_else(|| panic!("unknown fingerprint {}", reply.fingerprint));
+                    let want = engine.forward_owned(unit_batch(&Value::F32(x))).unwrap();
+                    assert_eq!(reply.logits.data, want.data, "mis-routed to the wrong graph");
+                    fps_seen.lock().unwrap().insert(reply.fingerprint.to_string());
+                    done.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+        // ... two submitters ride "right", which swaps on "left" must
+        // never perturb
+        for t in 0..2u64 {
+            let (server, right) = (&server, &right);
+            s.spawn(move || {
+                let mut rng = efqat::rng::Pcg64::new(900 + t);
+                for _ in 0..40 {
+                    let ids = ITensor {
+                        shape: vec![16],
+                        data: (0..16).map(|_| rng.below(64) as i32).collect(),
+                    };
+                    let reply = server
+                        .try_submit(Some("right"), Value::I32(ids.clone()))
+                        .unwrap()
+                        .wait_reply()
+                        .unwrap();
+                    assert_eq!(&*reply.fingerprint, "fp-right");
+                    assert_eq!(reply.generation, 1);
+                    let want = right.forward_owned(unit_batch(&Value::I32(ids))).unwrap();
+                    assert_eq!(reply.logits.data, want.data);
+                }
+            });
+        }
+        // three swaps land while both lanes are under live load, each
+        // gated on real progress so requests straddle every swap
+        let (server, done, gens) = (&server, &done, &gens);
+        s.spawn(move || {
+            for (i, fp) in ["fp-gen2", "fp-gen3", "fp-gen4"].iter().enumerate() {
+                while done.load(Ordering::SeqCst) < (i + 1) * 40 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                server.registry().install("left", gens[i + 1].clone(), fp).unwrap();
+            }
+        });
+    });
+
+    let fps = fps_seen.into_inner().unwrap();
+    assert!(fps.contains("fp-gen1"), "pre-swap generation never answered: {fps:?}");
+    assert!(fps.iter().all(|f| engines.contains_key(f)), "unknown fingerprints seen: {fps:?}");
+    let slot = server.registry().engine_for(Some("left")).unwrap();
+    assert_eq!((&*slot.fingerprint, slot.generation), ("fp-gen4", 4));
+
+    // post-swap: the lane answers from the new checkpoint, bit-identical
+    // to its offline `--exec int8` eval over the full test set
+    let cfg = Config::empty();
+    let mut loader = test_loader("mlp", 32, &cfg).unwrap();
+    let eval = evaluate_int8(&gens[3], &mut loader).unwrap();
+    assert!(eval.n > 0);
+    let mut loader = test_loader("mlp", 32, &cfg).unwrap();
+    loader.reset();
+    let mut checked = 0usize;
+    while let Some(batch) = loader.next_batch() {
+        let examples = example_inputs(gens[3].input, &batch).unwrap();
+        let singles: Vec<Tensor> =
+            examples.iter().map(|v| gens[3].forward_owned(unit_batch(v)).unwrap()).collect();
+        let tickets: Vec<_> = examples
+            .into_iter()
+            .map(|v| server.try_submit(Some("left"), v).unwrap())
+            .collect();
+        for (t, want) in tickets.into_iter().zip(singles) {
+            let reply = t.wait_reply().unwrap();
+            assert_eq!(&*reply.fingerprint, "fp-gen4");
+            assert_eq!(reply.generation, 4);
+            assert_eq!(reply.logits.data, want.data, "post-swap diverged from offline eval");
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, eval.n, "served exactly the examples eval scored");
+    server.shutdown();
+}
+
+/// An engine whose forwards block until the test opens a gate — makes
+/// "worker busy, lane backed up" states deterministic for the admission
+/// control and draining tests.
+struct GatedEngine {
+    inner: QuantizedGraph,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+fn gate() -> Arc<(Mutex<bool>, Condvar)> {
+    Arc::new((Mutex::new(false), Condvar::new()))
+}
+
+fn open_gate(g: &Arc<(Mutex<bool>, Condvar)>) {
+    *g.0.lock().unwrap() = true;
+    g.1.notify_all();
+}
+
+impl Engine for GatedEngine {
+    fn model(&self) -> &str {
+        &self.inner.model
+    }
+
+    fn input(&self) -> InputKind {
+        self.inner.input
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        self.inner.vocab()
+    }
+
+    fn forward_batch(&self, x: Value) -> Result<Tensor> {
+        let (flag, cv) = &*self.gate;
+        let mut open = flag.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.forward_owned(x)
+    }
+}
+
+#[test]
+fn overload_rejects_with_typed_code_and_keeps_accepted_work() {
+    let g = gate();
+    let engine = Arc::new(GatedEngine { inner: fixture("mlp").0, gate: g.clone() });
+    // the smallest possible lane: every stage behind the intake is gated,
+    // so sustained submission must hit the 2-slot intake's admission edge
+    let cfg = ServeCfg::builder()
+        .max_batch(1)
+        .max_wait_ms(0.0)
+        .workers(1)
+        .queue_cap(2)
+        .build()
+        .unwrap();
+    let server = Server::single(engine, cfg);
+    let mut rng = efqat::rng::Pcg64::new(21);
+    let mut tickets = Vec::new();
+    let mut rejected = None;
+    for _ in 0..64 {
+        let x = Value::F32(Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) });
+        match server.try_submit(None, x) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                rejected = Some(e);
+                break;
+            }
+        }
+    }
+    let e = rejected.expect("a gated worker behind a 2-slot queue must overload within 64 submits");
+    assert_eq!(e.code(), "overloaded");
+    let msg = e.to_string();
+    assert!(msg.contains("intake queue full"), "{msg}");
+    // the typed verdict converts to a plain error carrying its code
+    let as_err: efqat::error::Error = e.into();
+    assert!(as_err.to_string().contains("[overloaded]"), "{as_err}");
+    // overload rejected the margin, never the accepted work
+    open_gate(&g);
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().shape, vec![10], "accepted request lost to overload");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn retire_reports_draining_then_drains_and_removes_the_model() {
+    let g = gate();
+    let engine = Arc::new(GatedEngine { inner: fixture("mlp").0, gate: g.clone() });
+    let server = Server::single(engine, serve_cfg(4, Duration::from_millis(1), 1));
+    let mut rng = efqat::rng::Pcg64::new(31);
+    let mut image = || Value::F32(Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) });
+    let tickets: Vec<_> =
+        (0..6).map(|_| server.try_submit(Some("mlp"), image()).unwrap()).collect();
+    std::thread::scope(|s| {
+        let registry = server.registry().clone();
+        let retire = s.spawn(move || registry.retire("mlp"));
+        // the gate holds the drain open: the draining window is
+        // observable for as long as this test needs it to be
+        let t0 = Instant::now();
+        while !server.stats().first().is_some_and(|m| m.draining) {
+            assert!(t0.elapsed() < Duration::from_secs(10), "draining flag never became visible");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        match server.try_submit(Some("mlp"), image()) {
+            Err(e) => assert_eq!(e.code(), "draining"),
+            Ok(_) => panic!("accepted a request while draining"),
+        }
+        open_gate(&g);
+        retire.join().unwrap().unwrap();
+    });
+    // everything accepted before the retire was answered by the
+    // outgoing engine ...
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().shape, vec![10], "request dropped during retire");
+    }
+    // ... and the name is gone afterwards
+    match server.try_submit(Some("mlp"), image()) {
+        Err(e) => assert_eq!(e.code(), "unknown_model"),
+        Ok(_) => panic!("retired model still serving"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn stream_routes_v2_falls_back_v1_and_reports_stats() {
+    let mlp = Arc::new(fixture("mlp").0);
+    let convnet = Arc::new(fixture("convnet").0);
+    let registry = Registry::new();
+    registry.install("mlp", mlp.clone(), "fp-mlp-0123456789abcdef").unwrap();
+    registry.install("convnet", convnet.clone(), "fp-convnet").unwrap();
+    let server = Server::start(registry, serve_cfg(8, Duration::from_millis(1), 2)).unwrap();
+
+    let mut rng = efqat::rng::Pcg64::new(41);
+    let ex: Vec<f32> = rng.normal_vec(192, 1.0);
+    let nums: Vec<String> = ex.iter().map(|v| format!("{}", *v as f64)).collect();
+    let body = nums.join(",");
+    let mut input = String::new();
+    // 1: a v1 client names no model — the default model answers
+    input.push_str(&format!("{{\"id\": 1, \"v\": 1, \"data\": [{body}]}}\n"));
+    // 2: v2 routes by name
+    input.push_str(&format!("{{\"id\": 2, \"model\": \"convnet\", \"data\": [{body}]}}\n"));
+    // 3: unknown model → the registry's typed code on the wire
+    input.push_str(&format!("{{\"id\": 3, \"model\": \"ghost\", \"data\": [{body}]}}\n"));
+    // 4: a v1 request cannot name a model (v2-only grammar)
+    input.push_str(&format!("{{\"id\": 4, \"v\": 1, \"model\": \"mlp\", \"data\": [{body}]}}\n"));
+    // 5: stats introspection rides the same stream, FIFO preserved
+    input.push_str("{\"id\": 5, \"stats\": true}\n");
+
+    let mut out: Vec<u8> = Vec::new();
+    let n = efqat::serve::protocol::serve_stream(&server, input.as_bytes(), &mut out).unwrap();
+    assert_eq!(n, 5);
+    let lines: Vec<Json> = std::str::from_utf8(&out)
+        .unwrap()
+        .trim()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines.len(), 5);
+    for (i, doc) in lines.iter().enumerate() {
+        assert_eq!(doc.get("id").unwrap().num().unwrap() as usize, i + 1, "FIFO order broken");
+    }
+    let x = Value::F32(Tensor { shape: vec![1, 3, 8, 8], data: ex.clone() });
+    assert_eq!(lines[0].get("model").unwrap().str().unwrap(), "mlp");
+    // per-reply envelopes abbreviate the fingerprint to 12 chars
+    assert_eq!(lines[0].get("fp").unwrap().str().unwrap(), "fp-mlp-01234");
+    assert_eq!(logits_of(&lines[0]), mlp.forward(&x).unwrap().data, "v1 fallback diverged");
+    assert_eq!(lines[1].get("model").unwrap().str().unwrap(), "convnet");
+    assert_eq!(logits_of(&lines[1]), convnet.forward(&x).unwrap().data, "v2 routing diverged");
+    assert_eq!(lines[2].get("code").unwrap().str().unwrap(), "unknown_model");
+    assert!(lines[2].get("error").unwrap().str().unwrap().contains("ghost"));
+    assert_eq!(lines[3].get("code").unwrap().str().unwrap(), "bad_request");
+    assert!(lines[3].get("error").unwrap().str().unwrap().contains("requires protocol v2"));
+    let models = lines[4].get("models").unwrap().arr().unwrap();
+    assert_eq!(models.len(), 2);
+    // sorted by name: convnet, then mlp — stats carry the full digest
+    assert_eq!(models[0].get("model").unwrap().str().unwrap(), "convnet");
+    assert_eq!(models[1].get("fp").unwrap().str().unwrap(), "fp-mlp-0123456789abcdef");
+    server.shutdown();
 }
