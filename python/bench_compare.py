@@ -62,6 +62,11 @@ def compare(base, cand, threshold_pct):
     regressions = []
     compared = 0
     for path, b in sorted(base_leaves.items()):
+        if not path:
+            # a bare-scalar document root has no key to classify; skip it
+            # so the "no comparable metrics" exit (2) fires instead of an
+            # IndexError
+            continue
         direction = classify(path[-1])
         if direction is None or path not in cand_leaves:
             continue

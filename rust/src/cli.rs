@@ -154,6 +154,29 @@ pub struct ServeArgs {
     pub models: Vec<ModelSpec>,
     /// `--default-model`: which model answers model-less (v1) requests.
     pub default_model: Option<String>,
+    /// `--record file.jsonl`: capture accepted traffic for `replay`.
+    pub record: Option<String>,
+}
+
+/// `efqat replay` arguments.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayArgs {
+    /// `--trace file.jsonl`: the recorded traffic to re-issue (required).
+    pub trace: String,
+    /// `--model` (single-model mode; mutually exclusive with `--models`).
+    pub model: Option<String>,
+    /// `--ckpt` (single-model mode).
+    pub ckpt: Option<String>,
+    /// `--bits`, e.g. `w8a8` (shared by every served model).
+    pub bits: Option<String>,
+    /// `--exec int8|f32` (single-model mode; `--models` is int8-only).
+    pub exec: Option<String>,
+    /// `--models name=path,...` multi-model registry (same as `serve`).
+    pub models: Vec<ModelSpec>,
+    /// `--default-model`: which model answers model-less (v1) records.
+    pub default_model: Option<String>,
+    /// `--speed N`: pacing multiplier (1.0 = recorded pace).
+    pub speed: Option<f64>,
 }
 
 /// `efqat bundle` arguments.
@@ -176,6 +199,8 @@ pub enum Cmd {
     Eval(EvalArgs),
     /// `efqat serve`.
     Serve(ServeArgs),
+    /// `efqat replay`.
+    Replay(ReplayArgs),
     /// `efqat bundle`.
     Bundle(BundleArgs),
     /// `efqat info`.
@@ -202,9 +227,16 @@ impl Cli {
     /// positionals, and malformed numeric values are all errors here —
     /// nothing is silently ignored.
     pub fn parse(argv: &[String]) -> Result<Cli> {
-        let args = Args::parse(argv)?;
+        let mut args = Args::parse(argv)?;
         if args.flag("help") || args.subcommand == "help" {
             return Ok(Cli { cmd: Cmd::Help, config: None, overrides: BTreeMap::new() });
+        }
+        // A bare dotted flag is a boolean config override: `--batch.adaptive`
+        // is shorthand for `--batch.adaptive true`.
+        let dotted: Vec<String> = args.flags.iter().filter(|f| f.contains('.')).cloned().collect();
+        args.flags.retain(|f| !f.contains('.'));
+        for k in dotted {
+            args.options.entry(k).or_insert_with(|| "true".to_string());
         }
         for f in &args.flags {
             if !GLOBAL_FLAGS.contains(&f.as_str()) {
@@ -251,7 +283,7 @@ impl Cli {
             "serve" => {
                 check_keys(
                     &args,
-                    &["model", "ckpt", "bits", "exec", "port", "models", "default-model"],
+                    &["model", "ckpt", "bits", "exec", "port", "models", "default-model", "record"],
                 )?;
                 let serve = ServeArgs {
                     model: opt_string(&args, "model"),
@@ -264,25 +296,44 @@ impl Cli {
                         None => Vec::new(),
                     },
                     default_model: opt_string(&args, "default-model"),
+                    record: opt_string(&args, "record"),
                 };
-                if !serve.models.is_empty() {
-                    if serve.model.is_some() || serve.ckpt.is_some() {
-                        bail!("--models and --model/--ckpt are mutually exclusive");
-                    }
-                    if let Some(d) = &serve.default_model {
-                        if !serve.models.iter().any(|m| m.name == *d) {
-                            let names: Vec<&str> =
-                                serve.models.iter().map(|m| m.name.as_str()).collect();
-                            bail!(
-                                "--default-model {d:?} is not in --models [{}]",
-                                names.join(", ")
-                            );
-                        }
-                    }
-                } else if serve.default_model.is_some() {
-                    bail!("--default-model needs --models (single-model serving has one model)");
-                }
+                check_model_selectors(
+                    &serve.model,
+                    &serve.ckpt,
+                    &serve.models,
+                    &serve.default_model,
+                )?;
                 Cmd::Serve(serve)
+            }
+            "replay" => {
+                check_keys(
+                    &args,
+                    &["trace", "model", "ckpt", "bits", "exec", "models", "default-model", "speed"],
+                )?;
+                let Some(trace) = opt_string(&args, "trace") else {
+                    bail!("replay wants --trace file.jsonl (a recorded traffic trace)");
+                };
+                let replay = ReplayArgs {
+                    trace,
+                    model: opt_string(&args, "model"),
+                    ckpt: opt_string(&args, "ckpt"),
+                    bits: opt_string(&args, "bits"),
+                    exec: opt_string(&args, "exec"),
+                    models: match args.opt("models") {
+                        Some(spec) => parse_models(spec)?,
+                        None => Vec::new(),
+                    },
+                    default_model: opt_string(&args, "default-model"),
+                    speed: opt_speed(&args)?,
+                };
+                check_model_selectors(
+                    &replay.model,
+                    &replay.ckpt,
+                    &replay.models,
+                    &replay.default_model,
+                )?;
+                Cmd::Replay(replay)
             }
             "bundle" => {
                 check_keys(&args, &["note"])?;
@@ -326,6 +377,41 @@ fn opt_usize(args: &Args, key: &str) -> Result<Option<usize>> {
         Some(v) => match v.parse::<usize>() {
             Ok(n) => Ok(Some(n)),
             Err(_) => bail!("--{key} wants a non-negative integer, got {v:?}"),
+        },
+    }
+}
+
+/// Validate the model selectors shared by `serve` and `replay`:
+/// `--models` excludes `--model`/`--ckpt`, and `--default-model` must
+/// name a `--models` entry.
+fn check_model_selectors(
+    model: &Option<String>,
+    ckpt: &Option<String>,
+    models: &[ModelSpec],
+    default_model: &Option<String>,
+) -> Result<()> {
+    if !models.is_empty() {
+        if model.is_some() || ckpt.is_some() {
+            bail!("--models and --model/--ckpt are mutually exclusive");
+        }
+        if let Some(d) = default_model {
+            if !models.iter().any(|m| m.name == *d) {
+                let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+                bail!("--default-model {d:?} is not in --models [{}]", names.join(", "));
+            }
+        }
+    } else if default_model.is_some() {
+        bail!("--default-model needs --models (single-model serving has one model)");
+    }
+    Ok(())
+}
+
+fn opt_speed(args: &Args) -> Result<Option<f64>> {
+    match args.opt("speed") {
+        None => Ok(None),
+        Some(v) => match v.parse::<f64>() {
+            Ok(s) if s.is_finite() && s > 0.0 => Ok(Some(s)),
+            _ => bail!("--speed wants a positive number, got {v:?}"),
         },
     }
 }
@@ -473,6 +559,61 @@ mod tests {
         assert!(err.contains("twice"), "{err}");
         let err = Cli::parse(&v(&["serve", "--models", "nope"])).unwrap_err().to_string();
         assert!(err.contains("name=path"), "{err}");
+    }
+
+    #[test]
+    fn bare_dotted_flag_becomes_true_override() {
+        let cli = Cli::parse(&v(&["serve", "--model", "mlp", "--batch.adaptive"])).unwrap();
+        assert_eq!(cli.overrides.get("batch.adaptive").map(String::as_str), Some("true"));
+        // an explicit value wins over the bare-flag shorthand
+        let cli = Cli::parse(&v(&["serve", "--batch.adaptive", "false"])).unwrap();
+        assert_eq!(cli.overrides.get("batch.adaptive").map(String::as_str), Some("false"));
+        // non-dotted bare flags are still validated
+        let err = Cli::parse(&v(&["serve", "--adaptive"])).unwrap_err().to_string();
+        assert!(err.contains("--adaptive"), "{err}");
+    }
+
+    #[test]
+    fn serve_parses_record_path() {
+        let cli =
+            Cli::parse(&v(&["serve", "--model", "mlp", "--record", "trace.jsonl"])).unwrap();
+        let Cmd::Serve(s) = &cli.cmd else { panic!("want Serve") };
+        assert_eq!(s.record.as_deref(), Some("trace.jsonl"));
+    }
+
+    #[test]
+    fn replay_parses_and_validates() {
+        let cli = Cli::parse(&v(&[
+            "replay",
+            "--trace",
+            "t.jsonl",
+            "--models",
+            "a=x.ckpt,b=mlp:y.ckpt",
+            "--default-model",
+            "a",
+            "--speed",
+            "8",
+        ]))
+        .unwrap();
+        let Cmd::Replay(r) = &cli.cmd else { panic!("want Replay") };
+        assert_eq!(r.trace, "t.jsonl");
+        assert_eq!(r.models.len(), 2);
+        assert_eq!(r.speed, Some(8.0));
+
+        let err = Cli::parse(&v(&["replay", "--model", "mlp"])).unwrap_err().to_string();
+        assert!(err.contains("--trace"), "{err}");
+        let err = Cli::parse(&v(&["replay", "--trace", "t.jsonl", "--speed", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--speed"), "{err}");
+        let err = Cli::parse(&v(&["replay", "--trace", "t.jsonl", "--speed", "nope"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--speed"), "{err}");
+        let err = Cli::parse(&v(&["replay", "--trace", "t", "--models", "a=x", "--model", "m"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
     }
 
     #[test]

@@ -20,7 +20,12 @@
 //!             per-model admission control and hot-swappable
 //!             fingerprinted checkpoints (RFC 0002 v2 / RFC 0005);
 //!             `--batch.max N` and `--batch.wait-ms T` set the flush
-//!             policy
+//!             policy, `--batch.adaptive` tunes the flush window from
+//!             the observed arrival rate, and `--record file.jsonl`
+//!             captures accepted traffic for `replay` (RFC 0006)
+//!   replay    re-issue a recorded traffic trace against a freshly
+//!             built registry at `--speed N` times the recorded pace,
+//!             reporting end-to-end and per-stage latency percentiles
 //!   bundle    write the schema-versioned artifacts/manifest.json inventory
 //!   info      list artifacts, their manifests, and bundle integrity
 //!
@@ -39,7 +44,7 @@ use std::path::Path;
 
 use efqat::bundle::Bundle;
 use efqat::cfg::Config;
-use efqat::cli::{Cli, Cmd, ServeArgs};
+use efqat::cli::{Cli, Cmd, ModelSpec, ReplayArgs, ServeArgs};
 use efqat::coordinator::pipeline::{
     artifacts_dir, fwd_artifact_name_of, load_quant_checkpoint, run_efqat_pipeline, run_pretrain,
 };
@@ -62,13 +67,16 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: efqat <pretrain|ptq|train|eval|serve|bundle|info> --model <m> \
+        "usage: efqat <pretrain|ptq|train|eval|serve|replay|bundle|info> --model <m> \
          [--backend native|pjrt] [--bits w8a8] [--exec fakequant|int8] \
          [--mode cwpl|cwpn|lwpn|qat|r0] [--ratio 25] [--workers W] [--config file.toml] \
          [--key.dotted value ...]\n\
        serve: efqat serve --model <m> --ckpt <file> [--exec int8|f32] [--bits w8a8] \
-         [--batch.max 32] [--batch.wait-ms 2] [--serve.workers 2] [--port 7878]\n\
-       serve (registry): efqat serve --models m1=ckpt1,m2=arch:ckpt2 [--default-model m1] ..."
+         [--batch.max 32] [--batch.wait-ms 2] [--batch.adaptive] [--serve.workers 2] \
+         [--port 7878] [--record trace.jsonl]\n\
+       serve (registry): efqat serve --models m1=ckpt1,m2=arch:ckpt2 [--default-model m1] ...\n\
+       replay: efqat replay --trace trace.jsonl --models m1=ckpt1,... [--speed 8] \
+         [--batch.adaptive]"
     );
 }
 
@@ -110,6 +118,7 @@ fn run(argv: &[String]) -> Result<()> {
         }
         Cmd::Eval(_) => cmd_eval(&cfg),
         Cmd::Serve(a) => cmd_serve(&cfg, a),
+        Cmd::Replay(a) => cmd_replay(&cfg, a),
         Cmd::Bundle(a) => cmd_bundle(&cfg, a.note.clone()),
         Cmd::Info => cmd_info(&cfg),
         Cmd::Help => unreachable!("handled above"),
@@ -189,30 +198,31 @@ fn fp_short(fp: &str) -> &str {
     fp.get(..12).unwrap_or(fp)
 }
 
-/// Serve concurrent JSONL inference requests with dynamic micro-batching
-/// (RFC 0002 v2): build the serving [`Registry`](efqat::serve::Registry)
-/// — one lowered int8 engine per `--models` entry, each installed under
-/// its RFC 0001 checkpoint fingerprint, or a single `--model`/`--ckpt`
-/// engine (`--exec int8` default, `--exec f32` for the fake-quant
-/// reference) — then start the per-model lanes and answer over
-/// stdin/stdout, or a TCP listener with `--port`.
-fn cmd_serve(cfg: &Config, sa: &ServeArgs) -> Result<()> {
+/// Build the serving [`Registry`](efqat::serve::Registry) shared by
+/// `serve` and `replay`: one lowered int8 engine per `--models` entry,
+/// each installed under its RFC 0001 checkpoint fingerprint, or a
+/// single `--model`/`--ckpt` engine (`--exec int8` default, `--exec
+/// f32` for the fake-quant reference).
+fn build_registry(
+    cfg: &Config,
+    models: &[ModelSpec],
+    default_model: Option<&str>,
+) -> Result<efqat::serve::Registry> {
     use efqat::backend::native::model_graph;
     use efqat::coordinator::pipeline::parse_bits;
-    use efqat::serve::{protocol, FloatEngine, Registry, ServeCfg, Server};
+    use efqat::serve::{FloatEngine, Registry};
 
     let bits = cfg.str("bits", "w8a8");
     let exec = cfg.str("exec", "int8");
-    let scfg = ServeCfg::from_config(cfg)?;
     let registry = Registry::new();
-    if !sa.models.is_empty() {
+    if !models.is_empty() {
         // registry mode: every entry is lowered to the deployed int8
         // arithmetic (the f32 reference stays a single-model A/B tool)
         if exec != "int8" {
             bail!("--models serves lowered int8 engines; --exec {exec:?} is single-model only");
         }
         let (w_bits, a_bits) = parse_bits(&bits)?;
-        for spec in &sa.models {
+        for spec in models {
             let path = Path::new(&spec.path);
             let (params, _states, q) = load_quant_checkpoint(path)?;
             let qg = lower_native(&spec.arch, &params, &q, w_bits, a_bits)?;
@@ -220,7 +230,7 @@ fn cmd_serve(cfg: &Config, sa: &ServeArgs) -> Result<()> {
             eprintln!("[serve] install {}: {} (fp {})", spec.name, qg.describe(), fp_short(&fp));
             registry.install(&spec.name, std::sync::Arc::new(qg), &fp)?;
         }
-        if let Some(d) = &sa.default_model {
+        if let Some(d) = default_model {
             registry.set_default(d)?;
         }
     } else {
@@ -251,16 +261,63 @@ fn cmd_serve(cfg: &Config, sa: &ServeArgs) -> Result<()> {
         };
         registry.install(&model, engine, &fp)?;
     }
+    Ok(registry)
+}
+
+/// Print the per-model trace summary (RFC 0006) after a serving or
+/// replay session: event/batch counts, batch-fill ratio, and the p95 of
+/// each pipeline stage.
+fn print_trace_stats(stats: &[efqat::serve::ModelStats]) {
+    for st in stats {
+        if let Some(t) = &st.trace {
+            eprintln!(
+                "[trace] {}: {} event(s) in {} batch(es), fill {:.2}, \
+                 p95 queue/batch/exec/total {:.0}/{:.0}/{:.0}/{:.0} us",
+                st.model,
+                t.events,
+                t.batches,
+                st.batch_fill,
+                t.queue.p95_us,
+                t.batch.p95_us,
+                t.exec.p95_us,
+                t.total.p95_us
+            );
+        }
+    }
+}
+
+/// Serve concurrent JSONL inference requests with dynamic micro-batching
+/// (RFC 0002 v2): build the serving registry, start the per-model lanes,
+/// and answer over stdin/stdout, or a TCP listener with `--port`.  With
+/// `--record` every accepted request is appended to a replayable RFC
+/// 0006 traffic trace.
+fn cmd_serve(cfg: &Config, sa: &ServeArgs) -> Result<()> {
+    use efqat::serve::{protocol, ServeCfg, Server, TrafficRecorder};
+
+    let exec = cfg.str("exec", "int8");
+    let scfg = ServeCfg::from_config(cfg)?;
+    let registry = build_registry(cfg, &sa.models, sa.default_model.as_deref())?;
     eprintln!(
-        "[serve] {} model(s), default {:?}, exec={exec}: max_batch={} wait={:?} workers={} queue={}",
+        "[serve] {} model(s), default {:?}, exec={exec}: max_batch={} wait={:?} adaptive={} \
+         workers={} queue={}",
         registry.len(),
         registry.default_model().unwrap_or_else(|| "-".into()),
         scfg.batch.max_batch,
         scfg.batch.max_wait,
+        scfg.batch.adaptive,
         scfg.workers,
         scfg.queue_cap
     );
     let server = Server::start(registry, scfg)?;
+    let recorder = match &sa.record {
+        Some(path) => {
+            let rec = std::sync::Arc::new(TrafficRecorder::create(path)?);
+            server.registry().set_recorder(rec.clone());
+            eprintln!("[serve] recording accepted traffic to {path}");
+            Some((path.clone(), rec))
+        }
+        None => None,
+    };
     let port = match sa.port {
         Some(p) => Some(p),
         None if cfg.has("port") => {
@@ -279,7 +336,8 @@ fn cmd_serve(cfg: &Config, sa: &ServeArgs) -> Result<()> {
         let n = protocol::serve_stream(&server, stdin.lock(), std::io::stdout())?;
         eprintln!("[serve] stdin closed: answered {n} requests");
     }
-    for st in server.stats() {
+    let stats = server.stats();
+    for st in &stats {
         eprintln!(
             "[serve] {}: fp {} gen {} queued {}/{}{}",
             st.model,
@@ -290,6 +348,47 @@ fn cmd_serve(cfg: &Config, sa: &ServeArgs) -> Result<()> {
             if st.draining { " (draining)" } else { "" }
         );
     }
+    print_trace_stats(&stats);
+    if let Some((path, rec)) = &recorder {
+        rec.flush();
+        eprintln!("[serve] recorded {} request(s) to {path}", rec.records());
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// Re-issue a recorded RFC 0006 traffic trace against a freshly built
+/// registry at `--speed` times the recorded pace, preserving relative
+/// arrival offsets, then report end-to-end and per-stage latency.
+fn cmd_replay(cfg: &Config, ra: &ReplayArgs) -> Result<()> {
+    use efqat::serve::{replay, ServeCfg, Server};
+
+    let records = replay::load_trace(&ra.trace)?;
+    if records.is_empty() {
+        bail!("trace {} has no records to replay", ra.trace);
+    }
+    let speed = ra.speed.unwrap_or(1.0);
+    let scfg = ServeCfg::from_config(cfg)?;
+    let registry = build_registry(cfg, &ra.models, ra.default_model.as_deref())?;
+    let server = Server::start(registry, scfg)?;
+    eprintln!(
+        "[replay] {} record(s) from {} at {speed}x (adaptive={})",
+        records.len(),
+        ra.trace,
+        scfg.batch.adaptive
+    );
+    let report = replay::replay(&server, &records, speed)?;
+    println!(
+        "[replay] {} replies in {:.1} ms ({} overloaded retried), \
+         latency p50/p95/p99 {:.3}/{:.3}/{:.3} ms",
+        report.replies.len(),
+        report.wall.as_secs_f64() * 1e3,
+        report.retries,
+        report.lat_pct(0.50),
+        report.lat_pct(0.95),
+        report.lat_pct(0.99)
+    );
+    print_trace_stats(&server.stats());
     server.shutdown();
     Ok(())
 }

@@ -9,6 +9,17 @@
 //! order, so no request can be overtaken by one submitted after it
 //! (fairness; completion order across a multi-worker pool may still
 //! interleave, which per-request routing makes harmless).
+//!
+//! **Adaptive mode** (`--batch.adaptive`, [`BatchCfg::adaptive`]) keeps
+//! both static bounds and adds an early-flush heuristic: an EWMA of the
+//! observed inter-arrival gap estimates how long the next request is
+//! likely to take; once the queue has been idle for a few multiples of
+//! that estimate the burst is over and the partial batch flushes
+//! immediately instead of sleeping out the rest of `max_wait`.  The
+//! effective flush window is always within `[0, max_wait]`
+//! ([`AdaptiveWindow::idle_wait`] clamps), so adaptive mode can only
+//! *shorten* the wait a request pays — never starve it past the static
+//! bound (property-tested below).
 
 #![warn(missing_docs)]
 
@@ -17,18 +28,92 @@ use std::time::{Duration, Instant};
 
 use super::queue::{BoundedQueue, Popped};
 
-/// Batching knobs (`--batch.max` / `--batch.wait-ms` on the CLI).
+/// Batching knobs (`--batch.max` / `--batch.wait-ms` / `--batch.adaptive`
+/// on the CLI).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchCfg {
     /// Flush as soon as a batch holds this many requests.
     pub max_batch: usize,
     /// Flush a partial batch this long after its first request arrived.
     pub max_wait: Duration,
+    /// Tune the flush window from the observed arrival rate (EWMA of
+    /// inter-arrival gaps), bounded above by `max_wait`.
+    pub adaptive: bool,
 }
 
 impl Default for BatchCfg {
     fn default() -> Self {
-        BatchCfg { max_batch: 32, max_wait: Duration::from_millis(2) }
+        BatchCfg { max_batch: 32, max_wait: Duration::from_millis(2), adaptive: false }
+    }
+}
+
+/// Items the batcher can stamp with trace timestamps.  The no-op
+/// defaults let plain payloads (tests, benches) flow through the same
+/// loop as traced [`Request`](super::worker::Request)s.
+pub trait BatchItem {
+    /// The item was popped into a forming micro-batch.
+    fn stamp_batched(&mut self, now: Instant) {
+        let _ = now;
+    }
+    /// The item's micro-batch closed and is leaving for the worker pool.
+    fn stamp_flushed(&mut self, now: Instant) {
+        let _ = now;
+    }
+}
+
+impl BatchItem for usize {}
+
+/// EWMA-driven flush-window estimator for adaptive batching.
+///
+/// `observe_gap` feeds the gap between consecutive pops within a forming
+/// batch; [`AdaptiveWindow::idle_wait`] answers "how long should the
+/// batcher wait for one more request before concluding the burst is
+/// over".  Invariant (property-tested): the answer is always within
+/// `[0, max_wait]` — before any observation it *is* `max_wait`
+/// (identical to static mode), and with observations it is
+/// `clamp(GAP_MULT × ewma, IDLE_FLOOR..max_wait)`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveWindow {
+    ewma_gap_us: f64,
+    observed: bool,
+    max_wait: Duration,
+}
+
+/// EWMA smoothing factor for inter-arrival gaps.
+const GAP_EWMA_ALPHA: f64 = 0.2;
+/// Idle patience as a multiple of the estimated inter-arrival gap.
+const GAP_MULT: f64 = 4.0;
+/// Lower clamp on the idle patience, µs — below this the batcher would
+/// burn CPU rechecking a queue the OS scheduler hasn't even woken a
+/// producer into.
+const IDLE_FLOOR_US: f64 = 50.0;
+
+impl AdaptiveWindow {
+    /// An estimator bounded above by `max_wait`.
+    pub fn new(max_wait: Duration) -> AdaptiveWindow {
+        AdaptiveWindow { ewma_gap_us: 0.0, observed: false, max_wait }
+    }
+
+    /// Feed one observed inter-arrival gap.
+    pub fn observe_gap(&mut self, gap: Duration) {
+        let us = gap.as_secs_f64() * 1e6;
+        if self.observed {
+            self.ewma_gap_us = GAP_EWMA_ALPHA * us + (1.0 - GAP_EWMA_ALPHA) * self.ewma_gap_us;
+        } else {
+            self.ewma_gap_us = us;
+            self.observed = true;
+        }
+    }
+
+    /// How long to wait for the next request before flushing a partial
+    /// batch.  Always within `[0, max_wait]`.
+    pub fn idle_wait(&self) -> Duration {
+        if !self.observed {
+            return self.max_wait;
+        }
+        let max_us = self.max_wait.as_secs_f64() * 1e6;
+        let us = (GAP_MULT * self.ewma_gap_us).clamp(IDLE_FLOOR_US.min(max_us), max_us);
+        Duration::from_secs_f64(us / 1e6)
     }
 }
 
@@ -39,22 +124,53 @@ impl Default for BatchCfg {
 /// the final partial batches still flow downstream before this returns.
 /// The batch queue is closed on exit so the worker pool winds down after
 /// draining it.
-pub fn run<T>(requests: &Arc<BoundedQueue<T>>, batches: &Arc<BoundedQueue<Vec<T>>>, cfg: BatchCfg) {
+///
+/// Items are stamped through [`BatchItem`] as they join a batch and
+/// again (batch-wide) when it flushes, feeding the serve-path trace
+/// spans (RFC 0006).
+pub fn run<T: BatchItem>(
+    requests: &Arc<BoundedQueue<T>>,
+    batches: &Arc<BoundedQueue<Vec<T>>>,
+    cfg: BatchCfg,
+) {
     let max_batch = cfg.max_batch.max(1);
-    'serve: while let Some(first) = requests.pop() {
-        let deadline = Instant::now() + cfg.max_wait;
+    let mut window = if cfg.adaptive { Some(AdaptiveWindow::new(cfg.max_wait)) } else { None };
+    'serve: while let Some(mut first) = requests.pop() {
+        let now = Instant::now();
+        first.stamp_batched(now);
+        // the static bound: a batch never flushes later than this
+        let hard_deadline = now + cfg.max_wait;
+        let mut last_pop = now;
         let mut batch = Vec::with_capacity(max_batch);
         batch.push(first);
         let mut drained = false;
         while batch.len() < max_batch {
+            let deadline = match &window {
+                Some(w) => hard_deadline.min(last_pop + w.idle_wait()),
+                None => hard_deadline,
+            };
             match requests.pop_deadline(deadline) {
-                Popped::Item(v) => batch.push(v),
+                Popped::Item(mut v) => {
+                    let now = Instant::now();
+                    if let Some(w) = &mut window {
+                        w.observe_gap(now.saturating_duration_since(last_pop));
+                    }
+                    last_pop = now;
+                    v.stamp_batched(now);
+                    batch.push(v);
+                }
+                // static: max_wait elapsed; adaptive: the burst ended
+                // (or max_wait elapsed) — either way, flush
                 Popped::TimedOut => break,
                 Popped::Closed => {
                     drained = true;
                     break;
                 }
             }
+        }
+        let flush = Instant::now();
+        for v in &mut batch {
+            v.stamp_flushed(flush);
         }
         if batches.push(batch).is_err() {
             // downstream gone (worker pool shut first): dropping the
@@ -71,6 +187,7 @@ pub fn run<T>(requests: &Arc<BoundedQueue<T>>, batches: &Arc<BoundedQueue<Vec<T>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Pcg64;
     use std::thread;
 
     type ReqQueue = Arc<BoundedQueue<usize>>;
@@ -86,7 +203,7 @@ mod tests {
 
     #[test]
     fn full_batches_flush_in_fifo_order() {
-        let cfg = BatchCfg { max_batch: 4, max_wait: Duration::from_secs(5) };
+        let cfg = BatchCfg { max_batch: 4, max_wait: Duration::from_secs(5), adaptive: false };
         let (requests, batches, h) = spawn_batcher(cfg, 64);
         for i in 0..8 {
             requests.push(i).unwrap();
@@ -101,7 +218,7 @@ mod tests {
 
     #[test]
     fn deadline_flushes_partial_batch() {
-        let cfg = BatchCfg { max_batch: 64, max_wait: Duration::from_millis(15) };
+        let cfg = BatchCfg { max_batch: 64, max_wait: Duration::from_millis(15), adaptive: false };
         let (requests, batches, h) = spawn_batcher(cfg, 64);
         let t0 = Instant::now();
         requests.push(1).unwrap();
@@ -116,7 +233,7 @@ mod tests {
 
     #[test]
     fn close_drains_pending_requests_into_final_batches() {
-        let cfg = BatchCfg { max_batch: 4, max_wait: Duration::from_secs(5) };
+        let cfg = BatchCfg { max_batch: 4, max_wait: Duration::from_secs(5), adaptive: false };
         let requests = BoundedQueue::new(64);
         let batches = BoundedQueue::new(64);
         for i in 0..10 {
@@ -136,10 +253,99 @@ mod tests {
 
     #[test]
     fn exits_when_downstream_closes_first() {
-        let cfg = BatchCfg { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let cfg = BatchCfg { max_batch: 2, max_wait: Duration::from_millis(1), adaptive: false };
         let (requests, batches, h) = spawn_batcher(cfg, 8);
         batches.close();
         requests.push(1).unwrap();
+        h.join().unwrap();
+    }
+
+    // -- adaptive-mode property tests ------------------------------------
+
+    /// Property: for any gap stream, the flush window stays in
+    /// `[0, max_wait]` — adaptive mode can only shorten the static wait.
+    #[test]
+    fn adaptive_window_always_within_static_bound() {
+        let mut rng = Pcg64::new(42);
+        for max_wait_us in [0u64, 10, 50, 2_000, 500_000] {
+            let max_wait = Duration::from_micros(max_wait_us);
+            let mut w = AdaptiveWindow::new(max_wait);
+            assert_eq!(w.idle_wait(), max_wait, "uninitialized EWMA must behave statically");
+            for _ in 0..500 {
+                // gaps spanning ns to seconds, well beyond max_wait
+                let gap = Duration::from_micros(rng.below(2_000_000) as u64);
+                w.observe_gap(gap);
+                let wait = w.idle_wait();
+                assert!(wait <= max_wait, "idle_wait {wait:?} exceeds max_wait {max_wait:?}");
+            }
+        }
+    }
+
+    /// Property: adaptive mode never emits a batch above `max_batch`,
+    /// even under a flood that keeps the EWMA near zero.
+    #[test]
+    fn adaptive_never_exceeds_max_batch() {
+        let cfg = BatchCfg { max_batch: 4, max_wait: Duration::from_millis(50), adaptive: true };
+        let (requests, batches, h) = spawn_batcher(cfg, 256);
+        for i in 0..64 {
+            requests.push(i).unwrap();
+        }
+        requests.close();
+        let mut got = Vec::new();
+        while let Some(b) = batches.pop() {
+            assert!(!b.is_empty() && b.len() <= 4, "batch of {} exceeds max_batch", b.len());
+            got.extend(b);
+        }
+        assert_eq!(got, (0..64).collect::<Vec<_>>(), "FIFO order broken");
+        h.join().unwrap();
+    }
+
+    /// Property: a steady low-rate stream is never starved longer than
+    /// the static bound — every lone request flushes within `max_wait`
+    /// (plus scheduling slack), exactly like static mode (PR 4
+    /// semantics).
+    #[test]
+    fn adaptive_low_rate_stream_not_starved_past_static_bound() {
+        let max_wait = Duration::from_millis(40);
+        let cfg = BatchCfg { max_batch: 32, max_wait, adaptive: true };
+        let (requests, batches, h) = spawn_batcher(cfg, 64);
+        for i in 0..3 {
+            let t0 = Instant::now();
+            requests.push(i).unwrap();
+            assert_eq!(batches.pop(), Some(vec![i]));
+            let waited = t0.elapsed();
+            // static bound + generous scheduling slack for busy CI hosts
+            assert!(waited < max_wait + Duration::from_millis(200), "starved: {waited:?}");
+        }
+        requests.close();
+        h.join().unwrap();
+    }
+
+    /// The adaptive win: once a burst's arrival cadence is observed, a
+    /// partial batch flushes a few EWMA-gaps after the burst ends
+    /// instead of sleeping out the full static window.
+    #[test]
+    fn adaptive_flushes_partial_batch_well_before_max_wait() {
+        let max_wait = Duration::from_millis(800);
+        let cfg = BatchCfg { max_batch: 32, max_wait, adaptive: true };
+        let requests: ReqQueue = BoundedQueue::new(64);
+        let batches: BatchQueue = BoundedQueue::new(64);
+        // a burst of 6 is already queued when the batcher starts: the
+        // intra-burst pop gaps (~µs) initialize the EWMA
+        for i in 0..6 {
+            requests.push(i).unwrap();
+        }
+        let (rq, bq) = (requests.clone(), batches.clone());
+        let h = thread::spawn(move || run(&rq, &bq, cfg));
+        let t0 = Instant::now();
+        let batch = batches.pop().expect("burst batch");
+        let waited = t0.elapsed();
+        assert_eq!(batch, vec![0, 1, 2, 3, 4, 5]);
+        assert!(
+            waited < max_wait / 2,
+            "adaptive flush took {waited:?}, expected well under {max_wait:?}"
+        );
+        requests.close();
         h.join().unwrap();
     }
 }

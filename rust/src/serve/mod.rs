@@ -41,6 +41,8 @@ pub mod batcher;
 pub mod protocol;
 pub mod queue;
 pub mod registry;
+pub mod replay;
+pub mod trace;
 pub mod worker;
 
 use std::sync::Arc;
@@ -51,8 +53,10 @@ use crate::cfg::Config;
 use crate::error::{anyhow, bail, Result};
 use crate::tensor::Tensor;
 
-pub use batcher::BatchCfg;
+pub use batcher::{AdaptiveWindow, BatchCfg, BatchItem};
 pub use registry::{EngineSlot, ModelStats, Registry, Reply, SubmitError};
+pub use replay::{ReplayRecord, ReplayReport, TrafficRecorder};
+pub use trace::{JsonlTraceRecorder, LaneTrace, Span, StagePcts, TraceStats, TraceSubscriber};
 pub use worker::{Engine, FloatEngine, Request};
 
 use queue::OneshotReceiver;
@@ -85,19 +89,22 @@ impl ServeCfg {
         ServeCfgBuilder {
             max_batch: d.batch.max_batch,
             wait_ms: d.batch.max_wait.as_secs_f32() * 1e3,
+            adaptive: d.batch.adaptive,
             workers: d.workers,
             queue_cap: d.queue_cap,
         }
     }
 
     /// Read the serving knobs from config/CLI overrides — `batch.max`,
-    /// `batch.wait-ms`, `serve.workers`, `serve.queue-cap` — and
-    /// validate them: out-of-domain values (zero limits, negative or
-    /// non-finite waits) are configuration errors, not silent fallbacks.
+    /// `batch.wait-ms`, `batch.adaptive`, `serve.workers`,
+    /// `serve.queue-cap` — and validate them: out-of-domain values (zero
+    /// limits, negative or non-finite waits) are configuration errors,
+    /// not silent fallbacks.
     pub fn from_config(cfg: &Config) -> Result<ServeCfg> {
         let b = ServeCfg::builder();
         b.max_batch(cfg.usize("batch.max", BatchCfg::default().max_batch))
             .max_wait_ms(cfg.f32("batch.wait-ms", BatchCfg::default().max_wait.as_secs_f32() * 1e3))
+            .adaptive(cfg.bool("batch.adaptive", BatchCfg::default().adaptive))
             .workers(cfg.usize("serve.workers", ServeCfg::default().workers))
             .queue_cap(cfg.usize("serve.queue-cap", ServeCfg::default().queue_cap))
             .build()
@@ -112,6 +119,7 @@ impl ServeCfg {
 pub struct ServeCfgBuilder {
     max_batch: usize,
     wait_ms: f32,
+    adaptive: bool,
     workers: usize,
     queue_cap: usize,
 }
@@ -127,6 +135,14 @@ impl ServeCfgBuilder {
     /// (must be finite and ≥ 0; 0 = flush immediately).
     pub fn max_wait_ms(mut self, ms: f32) -> Self {
         self.wait_ms = ms;
+        self
+    }
+
+    /// Adaptive flush window (`--batch.adaptive`): tune the partial-batch
+    /// wait from the observed arrival rate, never exceeding the static
+    /// `max_wait` bound.
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.adaptive = on;
         self
     }
 
@@ -162,6 +178,7 @@ impl ServeCfgBuilder {
             batch: BatchCfg {
                 max_batch: self.max_batch,
                 max_wait: Duration::from_secs_f32(self.wait_ms / 1e3),
+                adaptive: self.adaptive,
             },
             workers: self.workers,
             queue_cap: self.queue_cap,
@@ -334,7 +351,7 @@ mod tests {
         // one slow-ish config: big max_batch + long deadline would hold
         // requests hostage if shutdown did not drain
         let cfg = ServeCfg {
-            batch: BatchCfg { max_batch: 64, max_wait: Duration::from_secs(30) },
+            batch: BatchCfg { max_batch: 64, max_wait: Duration::from_secs(30), adaptive: false },
             workers: 1,
             queue_cap: 64,
         };
@@ -353,8 +370,11 @@ mod tests {
         cfg.set("batch.wait-ms", "0.5");
         cfg.set("serve.workers", "3");
         cfg.set("serve.queue-cap", "16");
+        cfg.set("batch.adaptive", "true");
         let sc = ServeCfg::from_config(&cfg).unwrap();
         assert_eq!(sc.batch.max_batch, 8);
+        assert!(sc.batch.adaptive);
+        assert!(!ServeCfg::from_config(&crate::cfg::Config::empty()).unwrap().batch.adaptive);
         // f32 ms → Duration conversion: exact to within a nanosecond
         let wait = sc.batch.max_wait.as_nanos() as i128;
         assert!((wait - 500_000).abs() <= 1, "{wait}ns");

@@ -226,7 +226,12 @@ pub fn render_error(id: &Json, code: &str, msg: &str) -> String {
 }
 
 /// Render one stats response line: per-model queue depth, capacity,
-/// active fingerprint (full digest) and generation, draining flag.
+/// active fingerprint (full digest) and generation, draining flag —
+/// plus, once a lane has served traffic, its live trace surface (RFC
+/// 0006): event count, EWMA batch-fill ratio, and per-stage
+/// `queue_us`/`batch_us`/`exec_us`/`total_us` p50/p95/p99 objects.
+/// The additions are additive within protocol v2 (readers ignore
+/// unknown fields).
 pub fn render_stats(id: &Json, stats: &[ModelStats]) -> String {
     let mut obj = BTreeMap::new();
     obj.insert("id".to_string(), id.clone());
@@ -243,12 +248,28 @@ pub fn render_stats(id: &Json, stats: &[ModelStats]) -> String {
                     m.insert("queued".to_string(), Json::Num(s.queued as f64));
                     m.insert("cap".to_string(), Json::Num(s.capacity as f64));
                     m.insert("draining".to_string(), Json::Bool(s.draining));
+                    if let Some(t) = &s.trace {
+                        m.insert("events".to_string(), Json::Num(t.events as f64));
+                        m.insert("batch_fill".to_string(), Json::Num(s.batch_fill));
+                        m.insert("queue_us".to_string(), stage_obj(&t.queue));
+                        m.insert("batch_us".to_string(), stage_obj(&t.batch));
+                        m.insert("exec_us".to_string(), stage_obj(&t.exec));
+                        m.insert("total_us".to_string(), stage_obj(&t.total));
+                    }
                     Json::Obj(m)
                 })
                 .collect(),
         ),
     );
     Json::Obj(obj).render_min()
+}
+
+fn stage_obj(p: &crate::serve::trace::StagePcts) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("p50".to_string(), Json::Num(p.p50_us));
+    o.insert("p95".to_string(), Json::Num(p.p95_us));
+    o.insert("p99".to_string(), Json::Num(p.p99_us));
+    Json::Obj(o)
 }
 
 /// What the in-order writer resolves for one request line.

@@ -41,12 +41,15 @@ use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::error::{bail, Error, Result};
 use crate::tensor::Tensor;
 
 use super::batcher;
 use super::queue::{oneshot, BoundedQueue, TryPush};
+use super::replay::TrafficRecorder;
+use super::trace::{LaneTrace, Span, TraceStats, TraceSubscriber};
 use super::worker::{self, Engine, Request};
 use super::{ServeCfg, Ticket};
 
@@ -194,6 +197,12 @@ pub struct ModelStats {
     pub capacity: usize,
     /// Whether the model is being retired.
     pub draining: bool,
+    /// EWMA batch fill ratio: mean executed batch size over
+    /// `--batch.max` (0 until the lane has executed a batch).
+    pub batch_fill: f64,
+    /// Live per-stage latency percentiles (RFC 0006); `None` until the
+    /// lane starts.
+    pub trace: Option<TraceStats>,
 }
 
 /// One model's lane: identity, the swappable engine slot, and the
@@ -209,6 +218,9 @@ struct ModelEntry {
     /// Intake capacity, mirrored out of [`ServeCfg`] for stats.
     capacity: AtomicUsize,
     threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Per-lane trace aggregation (RFC 0006); set when the lane starts,
+    /// with the subscriber set snapshotted at that moment.
+    trace: OnceLock<Arc<LaneTrace>>,
 }
 
 struct Inner {
@@ -218,6 +230,15 @@ struct Inner {
     /// lane immediately.  Lock order: `models` before `running`; never
     /// acquire `models` while holding `running`.
     running: Mutex<Option<ServeCfg>>,
+    /// Shared monotonic origin for every lane's trace-event offsets, so
+    /// multi-model traces interleave on one clock.
+    epoch: Instant,
+    /// Trace subscribers, fanned into every lane started after
+    /// registration.  Lock order: leaf (never held across other locks).
+    subscribers: Mutex<Vec<Arc<dyn TraceSubscriber>>>,
+    /// Traffic recorder (`efqat serve --record`): accepted submissions
+    /// are appended as RFC 0006 replay records.
+    recorder: RwLock<Option<Arc<TrafficRecorder>>>,
 }
 
 /// Handle to the shared registry state.  Cheap to clone; every clone
@@ -241,8 +262,27 @@ impl Registry {
                 models: RwLock::new(BTreeMap::new()),
                 default_model: RwLock::new(None),
                 running: Mutex::new(None),
+                epoch: Instant::now(),
+                subscribers: Mutex::new(Vec::new()),
+                recorder: RwLock::new(None),
             }),
         }
+    }
+
+    /// Register a trace subscriber (RFC 0006).  Lanes snapshot the
+    /// subscriber set when they start, so register *before*
+    /// [`Registry::start`] (or before installing a model into a running
+    /// registry) to see that lane's events.
+    pub fn subscribe(&self, sub: Arc<dyn TraceSubscriber>) {
+        lock(&self.inner.subscribers).push(sub);
+    }
+
+    /// Attach a traffic recorder (`efqat serve --record`): every
+    /// *accepted* submission is appended as an RFC 0006 replay record
+    /// with its arrival offset.  Pass-through of the handle so callers
+    /// can flush/inspect it; replaces any previous recorder.
+    pub fn set_recorder(&self, rec: Arc<TrafficRecorder>) {
+        *write(&self.inner.recorder) = Some(rec);
     }
 
     /// Install `engine` under `name` with its checkpoint `fingerprint`
@@ -295,10 +335,12 @@ impl Registry {
             intake: OnceLock::new(),
             capacity: AtomicUsize::new(0),
             threads: Mutex::new(Vec::new()),
+            trace: OnceLock::new(),
         });
         // a registry already running gives the new model its lane now
         if let Some(cfg) = *lock(&self.inner.running) {
-            start_lane(&entry, cfg);
+            let subs = lock(&self.inner.subscribers).clone();
+            start_lane(&entry, cfg, self.inner.epoch, subs);
         }
         models.insert(name.to_string(), entry);
         drop(models);
@@ -369,6 +411,7 @@ impl Registry {
     /// [`SubmitError::Overloaded`], a retiring model
     /// [`SubmitError::Draining`].
     pub fn submit(&self, model: Option<&str>, input: crate::backend::Value) -> SubmitResult {
+        let mut span = Span::begin();
         let entry = self.entry_for(model)?;
         if entry.draining.load(Ordering::SeqCst) {
             return Err(SubmitError::Draining { model: entry.name.to_string() });
@@ -378,9 +421,19 @@ impl Registry {
         let Some(intake) = entry.intake.get() else {
             return Err(SubmitError::Shutdown { model: entry.name.to_string() });
         };
+        // pre-render the replay record while we still borrow the input;
+        // it is written only if the submission is accepted
+        let recorder = read(&self.inner.recorder).clone();
+        let line = recorder.as_ref().map(|r| r.render_line(&entry.name, &input));
         let (tx, rx) = oneshot();
-        match intake.try_push(Request { input, tx }) {
-            Ok(()) => Ok(Ticket { rx }),
+        span.admitted = Instant::now();
+        match intake.try_push(Request { input, tx, span }) {
+            Ok(()) => {
+                if let (Some(r), Some(l)) = (&recorder, line) {
+                    r.append(l);
+                }
+                Ok(Ticket { rx })
+            }
             Err(TryPush::Full(_)) => Err(SubmitError::Overloaded {
                 model: entry.name.to_string(),
                 cap: entry.capacity.load(Ordering::Relaxed),
@@ -407,8 +460,9 @@ impl Registry {
         }
         *running = Some(cfg);
         drop(running);
+        let subs = lock(&self.inner.subscribers).clone();
         for entry in models.values() {
-            start_lane(entry, cfg);
+            start_lane(entry, cfg, self.inner.epoch, subs.clone());
         }
         Ok(())
     }
@@ -435,7 +489,22 @@ impl Registry {
         if default.as_deref() == Some(name) {
             *default = None;
         }
+        drop(default);
+        // the retired lane's last events are buffered in subscribers
+        self.flush_trace();
         Ok(())
+    }
+
+    /// Flush every trace subscriber and the traffic recorder (if any) to
+    /// their underlying sinks.
+    pub fn flush_trace(&self) {
+        let subs = lock(&self.inner.subscribers).clone();
+        for s in &subs {
+            s.flush();
+        }
+        if let Some(r) = read(&self.inner.recorder).clone() {
+            r.flush();
+        }
     }
 
     /// Total requests queued (accepted, not yet batched) across models.
@@ -448,10 +517,18 @@ impl Registry {
 
     /// Per-model live counters, sorted by model name.
     pub fn stats(&self) -> Vec<ModelStats> {
-        read(&self.inner.models)
+        let models = read(&self.inner.models);
+        // lock order: `models` before `running` (documented on Inner)
+        let max_batch = (*lock(&self.inner.running)).map(|c| c.batch.max_batch.max(1));
+        models
             .values()
             .map(|e| {
                 let slot = lock(&e.slot);
+                let trace = e.trace.get().map(|t| t.stats());
+                let batch_fill = match (&trace, max_batch) {
+                    (Some(t), Some(mb)) => t.mean_batch / mb as f64,
+                    _ => 0.0,
+                };
                 ModelStats {
                     model: e.name.to_string(),
                     fingerprint: slot.fingerprint.to_string(),
@@ -459,6 +536,8 @@ impl Registry {
                     queued: e.intake.get().map(|q| q.len()).unwrap_or(0),
                     capacity: e.capacity.load(Ordering::Relaxed),
                     draining: e.draining.load(Ordering::SeqCst),
+                    batch_fill,
+                    trace,
                 }
             })
             .collect()
@@ -481,6 +560,7 @@ impl Registry {
                 let _ = t.join();
             }
         }
+        self.flush_trace();
     }
 }
 
@@ -489,13 +569,22 @@ pub type SubmitResult = std::result::Result<Ticket, SubmitError>;
 
 /// Spawn one lane (intake queue, batcher, workers) for `entry`.  A lane
 /// starts at most once; re-entry (retired name re-installed onto the
-/// same entry) is impossible because retire removes the entry.
-fn start_lane(entry: &Arc<ModelEntry>, cfg: ServeCfg) {
+/// same entry) is impossible because retire removes the entry.  The
+/// lane's [`LaneTrace`] snapshots the registry's subscriber set at this
+/// moment and is shared by every worker in the pool.
+fn start_lane(
+    entry: &Arc<ModelEntry>,
+    cfg: ServeCfg,
+    epoch: Instant,
+    subs: Vec<Arc<dyn TraceSubscriber>>,
+) {
     let intake: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_cap);
     if entry.intake.set(intake.clone()).is_err() {
         return;
     }
     entry.capacity.store(cfg.queue_cap.max(1), Ordering::Relaxed);
+    let trace = Arc::new(LaneTrace::new(entry.name.clone(), epoch, subs));
+    let _ = entry.trace.set(trace.clone());
     // small batch buffer: enough to keep every worker busy without
     // letting latency hide in a deep intermediate queue
     let batches: Arc<BoundedQueue<Vec<Request>>> = BoundedQueue::new(cfg.workers.max(1) * 2);
@@ -510,11 +599,11 @@ fn start_lane(entry: &Arc<ModelEntry>, cfg: ServeCfg) {
         );
     }
     for i in 0..cfg.workers.max(1) {
-        let (e, bq) = (entry.clone(), batches.clone());
+        let (e, bq, tr) = (entry.clone(), batches.clone(), trace.clone());
         threads.push(
             std::thread::Builder::new()
                 .name(format!("efqat-{}-worker-{i}", entry.name))
-                .spawn(move || worker::run(&e.slot, &bq))
+                .spawn(move || worker::run(&e.slot, &bq, &tr))
                 .expect("spawn worker"),
         );
     }

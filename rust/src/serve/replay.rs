@@ -1,0 +1,415 @@
+//! Traffic record/replay harness (RFC 0006): capture live serve traffic
+//! with arrival offsets, re-issue it later at N× speed.
+//!
+//! Two pieces:
+//!
+//! * [`TrafficRecorder`] — attached to a [`Registry`] via
+//!   [`Registry::set_recorder`](super::registry::Registry::set_recorder)
+//!   (`efqat serve --record trace.jsonl`).  Every *accepted* submission
+//!   is appended as one JSON line carrying its arrival offset `t_us`,
+//!   the resolved lane name (so model-less v1 traffic replays onto the
+//!   same lane), and the example payload.
+//! * [`replay`] — the driver: load a recorded trace
+//!   ([`load_trace`]), start a registry with the same models, and
+//!   [`replay`] re-issues every record at its recorded offset divided by
+//!   a speed factor, draining replies FIFO on a side thread.  Replies
+//!   come back in issue order with per-request latencies — the
+//!   realistic-traffic leg of the `serve_latency` bench and the
+//!   deterministic soak suite (`replay_soak`) are both this function in
+//!   a loop.
+//!
+//! Recording is an I/O capture tool and allocates per request (payload
+//! serialization) — unlike tracing ([`super::trace`]), it is not part
+//! of the zero-allocation steady-state contract.
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::Value;
+use crate::error::{anyhow, bail, Result};
+use crate::json::Json;
+use crate::tensor::{ITensor, Tensor};
+
+use super::queue::BoundedQueue;
+use super::registry::Reply;
+use super::{Server, Ticket};
+
+/// Replay file schema version (RFC 0006); the meta line every trace
+/// leads with.  Readers reject other versions instead of guessing.
+pub const REPLAY_VERSION: u64 = 1;
+
+/// One captured request: arrival offset (µs since the recorder was
+/// attached), the lane it was served by, and the example payload.
+#[derive(Clone, Debug)]
+pub struct ReplayRecord {
+    /// Arrival offset in µs from the start of the capture.
+    pub t_us: u64,
+    /// Lane (model) name — always the *resolved* name, so replay routes
+    /// identically even when the original request was model-less.
+    pub model: String,
+    /// The example, exactly as submitted (f32 image or i32 tokens).
+    pub input: Value,
+}
+
+fn render_record(t_us: u64, model: &str, input: &Value) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("t_us".to_string(), Json::Num(t_us as f64));
+    obj.insert("model".to_string(), Json::Str(model.to_string()));
+    let (dtype, shape, data): (&str, &[usize], Vec<Json>) = match input {
+        Value::F32(t) => ("f32", &t.shape, t.data.iter().map(|&v| Json::Num(v as f64)).collect()),
+        Value::I32(t) => ("i32", &t.shape, t.data.iter().map(|&v| Json::Num(v as f64)).collect()),
+    };
+    obj.insert("dtype".to_string(), Json::Str(dtype.to_string()));
+    let shape = shape.iter().map(|&d| Json::Num(d as f64)).collect();
+    obj.insert("shape".to_string(), Json::Arr(shape));
+    obj.insert("data".to_string(), Json::Arr(data));
+    Json::Obj(obj).render_min()
+}
+
+fn meta_line() -> String {
+    format!("{{\"replay_version\":{REPLAY_VERSION}}}")
+}
+
+/// Write `records` as an RFC 0006 replay trace at `path` (meta line
+/// first, then one record per line).  Offsets must be non-decreasing —
+/// the order a recorder would have captured them in.
+pub fn write_trace(path: &str, records: &[ReplayRecord]) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&meta_line());
+    out.push('\n');
+    let mut last = 0u64;
+    for r in records {
+        if r.t_us < last {
+            bail!("replay trace: offsets must be non-decreasing ({} after {last})", r.t_us);
+        }
+        last = r.t_us;
+        out.push_str(&render_record(r.t_us, &r.model, &r.input));
+        out.push('\n');
+    }
+    std::fs::write(path, out).map_err(|e| anyhow!("replay trace: cannot write {path}: {e}"))
+}
+
+/// Load an RFC 0006 replay trace written by [`write_trace`] or a
+/// [`TrafficRecorder`].  Validates the version meta line, every record's
+/// fields, and that offsets are non-decreasing.
+pub fn load_trace(path: &str) -> Result<Vec<ReplayRecord>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("replay trace: cannot read {path}: {e}"))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let meta = lines.next().ok_or_else(|| anyhow!("replay trace {path}: empty file"))?;
+    let meta = Json::parse(meta).map_err(|e| anyhow!("replay trace {path}: bad meta line: {e}"))?;
+    let v = meta.get("replay_version")?.usize()? as u64;
+    if v != REPLAY_VERSION {
+        bail!("replay trace {path}: replay_version {v}, this reader speaks {REPLAY_VERSION}");
+    }
+    let mut records = Vec::new();
+    let mut last = 0u64;
+    for (i, line) in lines.enumerate() {
+        let rec = parse_record(line).map_err(|e| anyhow!("replay trace {path} record {i}: {e}"))?;
+        if rec.t_us < last {
+            bail!("replay trace {path} record {i}: t_us {} goes backwards after {last}", rec.t_us);
+        }
+        last = rec.t_us;
+        records.push(rec);
+    }
+    Ok(records)
+}
+
+fn parse_record(line: &str) -> Result<ReplayRecord> {
+    let doc = Json::parse(line)?;
+    let t_us = doc.get("t_us")?.usize()? as u64;
+    let model = doc.get("model")?.str()?.to_string();
+    let dtype = doc.get("dtype")?.str()?;
+    let shape = doc.get("shape")?.shape()?;
+    let data = doc.get("data")?.arr()?;
+    let len: usize = shape.iter().product();
+    if data.len() != len {
+        bail!("data length {} does not match shape {shape:?}", data.len());
+    }
+    let input = match dtype {
+        "f32" => {
+            let vals: Result<Vec<f32>> = data.iter().map(|j| Ok(j.num()? as f32)).collect();
+            Value::F32(Tensor { shape, data: vals? })
+        }
+        "i32" => {
+            let vals: Result<Vec<i32>> = data.iter().map(|j| Ok(j.num()? as i32)).collect();
+            Value::I32(ITensor { shape, data: vals? })
+        }
+        other => bail!("unknown dtype {other:?} (want \"f32\" or \"i32\")"),
+    };
+    Ok(ReplayRecord { t_us, model, input })
+}
+
+struct RecorderInner {
+    out: Box<dyn Write + Send>,
+    records: u64,
+}
+
+/// Captures accepted submissions as an RFC 0006 replay trace
+/// (`efqat serve --record trace.jsonl`).  The arrival clock starts when
+/// the recorder is created; lines are written through a buffered writer
+/// and pushed to disk by [`TrafficRecorder::flush`] (called by
+/// [`Registry::flush_trace`](super::registry::Registry::flush_trace) at
+/// shutdown).
+pub struct TrafficRecorder {
+    epoch: Instant,
+    inner: Mutex<RecorderInner>,
+}
+
+impl TrafficRecorder {
+    /// Record to a file at `path` (truncating), writing the version meta
+    /// line immediately.
+    pub fn create(path: &str) -> Result<TrafficRecorder> {
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow!("traffic recorder: cannot create {path}: {e}"))?;
+        TrafficRecorder::to_writer(Box::new(std::io::BufWriter::new(f)))
+    }
+
+    /// Record to an arbitrary sink (tests).
+    pub fn to_writer(mut out: Box<dyn Write + Send>) -> Result<TrafficRecorder> {
+        out.write_all(meta_line().as_bytes())
+            .and_then(|()| out.write_all(b"\n"))
+            .map_err(|e| anyhow!("traffic recorder: cannot write meta line: {e}"))?;
+        let inner = Mutex::new(RecorderInner { out, records: 0 });
+        Ok(TrafficRecorder { epoch: Instant::now(), inner })
+    }
+
+    /// Serialize one submission at the current arrival offset.  Called
+    /// by [`Registry::submit`](super::registry::Registry::submit) before
+    /// the request is offered to its lane; the line is only
+    /// [`append`](TrafficRecorder::append)ed if admission succeeds.
+    pub fn render_line(&self, model: &str, input: &Value) -> String {
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        render_record(t_us, model, input)
+    }
+
+    /// Append one pre-rendered record line.
+    pub fn append(&self, line: String) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = inner.out.write_all(line.as_bytes());
+        let _ = inner.out.write_all(b"\n");
+        inner.records += 1;
+    }
+
+    /// Records appended so far.
+    pub fn records(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).records
+    }
+
+    /// Push buffered lines to the underlying sink.
+    pub fn flush(&self) {
+        let _ = self.inner.lock().unwrap_or_else(|p| p.into_inner()).out.flush();
+    }
+}
+
+/// Outcome of a [`replay`] run.  `replies[i]` and `lat_ms[i]` belong to
+/// `records[i]` — replies are drained in issue order (the FIFO
+/// contract), so position is identity.
+pub struct ReplayReport {
+    /// One reply per record, in issue order.  Bit-identity of
+    /// `replies[i].logits` against an offline forward of `records[i]`
+    /// is the mis-route check.
+    pub replies: Vec<Reply>,
+    /// Per-request latency in ms: submission to FIFO-drained reply.
+    pub lat_ms: Vec<f64>,
+    /// Submissions that bounced `overloaded` and were retried until
+    /// accepted (replay never drops a record).
+    pub retries: u64,
+    /// Wall time of the whole replay.
+    pub wall: Duration,
+}
+
+impl ReplayReport {
+    /// Nearest-rank percentile over the per-request latencies, in ms.
+    pub fn lat_pct(&self, q: f64) -> f64 {
+        if self.lat_ms.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.lat_ms.clone();
+        sorted.sort_by(f64::total_cmp);
+        let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1);
+        sorted[rank - 1]
+    }
+}
+
+/// Re-issue `records` against `server` at `speed`× the captured pace:
+/// record `i` is submitted at `t_us / speed` after the replay starts
+/// (as close as sleep granularity allows; a replay that falls behind
+/// submits immediately — offsets are deadlines, not rate limits).
+///
+/// An `overloaded` verdict is retried with a microsleep until the lane
+/// accepts — a replay never drops a record; any other admission error
+/// aborts.  Replies are drained FIFO concurrently with submission, so
+/// intake backpressure stays realistic at high speedups.
+pub fn replay(server: &Server, records: &[ReplayRecord], speed: f64) -> Result<ReplayReport> {
+    if !(speed.is_finite() && speed > 0.0) {
+        bail!("replay: speed must be finite and > 0, got {speed}");
+    }
+    type Drained = (Vec<Result<Reply>>, Vec<f64>);
+    let inflight: Arc<BoundedQueue<(Instant, Ticket)>> = BoundedQueue::new(records.len().max(1));
+    let t0 = Instant::now();
+    let mut retries = 0u64;
+    let (replies, lat_ms) = std::thread::scope(|scope| -> Result<Drained> {
+        let drain = {
+            let inflight = inflight.clone();
+            scope.spawn(move || {
+                let mut replies = Vec::new();
+                let mut lat_ms = Vec::new();
+                while let Some((submitted, ticket)) = inflight.pop() {
+                    let reply = ticket.wait_reply();
+                    lat_ms.push(submitted.elapsed().as_secs_f64() * 1e3);
+                    replies.push(reply);
+                }
+                (replies, lat_ms)
+            })
+        };
+        let mut submit_all = || -> Result<()> {
+            for rec in records {
+                let due = t0 + Duration::from_micros((rec.t_us as f64 / speed) as u64);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                loop {
+                    match server.try_submit(Some(&rec.model), rec.input.clone()) {
+                        Ok(ticket) => {
+                            if inflight.push((Instant::now(), ticket)).is_err() {
+                                bail!("replay: inflight queue closed early");
+                            }
+                            break;
+                        }
+                        Err(e) if e.code() == "overloaded" => {
+                            retries += 1;
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(e) => bail!("replay: record for {:?} rejected: {e}", rec.model),
+                    }
+                }
+            }
+            Ok(())
+        };
+        let submitted = submit_all();
+        inflight.close();
+        let drained = drain.join().expect("replay drain thread");
+        submitted?;
+        Ok(drained)
+    })?;
+    let wall = t0.elapsed();
+    let mut out_replies = Vec::with_capacity(replies.len());
+    for r in replies {
+        out_replies.push(r?);
+    }
+    Ok(ReplayReport { replies: out_replies, lat_ms, retries, wall })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn records() -> Vec<ReplayRecord> {
+        vec![
+            ReplayRecord {
+                t_us: 0,
+                model: "a".to_string(),
+                input: Value::F32(Tensor { shape: vec![2, 2], data: vec![0.5, -1.25, 3.0, 0.1] }),
+            },
+            ReplayRecord {
+                t_us: 1500,
+                model: "b".to_string(),
+                input: Value::I32(ITensor { shape: vec![3], data: vec![5, 0, 63] }),
+            },
+        ]
+    }
+
+    #[test]
+    fn trace_file_round_trips_bitwise() {
+        let dir = std::env::temp_dir().join("efqat_replay_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let path = path.to_str().unwrap();
+        write_trace(path, &records()).unwrap();
+        let back = load_trace(path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!((back[0].t_us, back[0].model.as_str()), (0, "a"));
+        match (&back[0].input, &records()[0].input) {
+            (Value::F32(got), Value::F32(want)) => {
+                assert_eq!(got.shape, want.shape);
+                // f32 → JSON text → f32 is exact (f64 shortest round-trip)
+                assert_eq!(got.data, want.data);
+            }
+            _ => panic!("dtype lost in round trip"),
+        }
+        match &back[1].input {
+            Value::I32(t) => assert_eq!(t.data, vec![5, 0, 63]),
+            _ => panic!("i32 record decoded as f32"),
+        }
+    }
+
+    #[test]
+    fn load_rejects_bad_version_and_backwards_offsets() {
+        let dir = std::env::temp_dir().join("efqat_replay_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("v9.jsonl");
+        std::fs::write(&p1, "{\"replay_version\":9}\n").unwrap();
+        let err = load_trace(p1.to_str().unwrap()).unwrap_err().to_string();
+        assert!(err.contains("replay_version"), "{err}");
+        let mut recs = records();
+        recs[1].t_us = 0;
+        recs[0].t_us = 10;
+        let p2 = dir.join("backwards.jsonl");
+        assert!(write_trace(p2.to_str().unwrap(), &recs).is_err());
+        let r10 = render_record(10, "a", &records()[0].input);
+        let r0 = render_record(0, "a", &records()[0].input);
+        let text = format!("{}\n{r10}\n{r0}\n", meta_line());
+        std::fs::write(&p2, text).unwrap();
+        let err = load_trace(p2.to_str().unwrap()).unwrap_err().to_string();
+        assert!(err.contains("backwards"), "{err}");
+    }
+
+    #[test]
+    fn recorder_writes_meta_then_records() {
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedBuf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let rec = TrafficRecorder::to_writer(Box::new(SharedBuf(sink.clone()))).unwrap();
+        let input = records()[0].input.clone();
+        let line = rec.render_line("m", &input);
+        rec.append(line);
+        rec.flush();
+        assert_eq!(rec.records(), 1);
+        let text = String::from_utf8(sink.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let meta = Json::parse(lines[0]).unwrap();
+        assert_eq!(meta.get("replay_version").unwrap().usize().unwrap(), 1);
+        let rec0 = parse_record(lines[1]).unwrap();
+        assert_eq!(rec0.model, "m");
+        assert_eq!(rec0.input.shape(), &[2, 2]);
+    }
+
+    #[test]
+    fn replay_rejects_bad_speed() {
+        let server = Server::single(
+            Arc::new(super::super::test_fixture::lowered_mlp()),
+            super::super::ServeCfg::default(),
+        );
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(replay(&server, &[], bad).is_err(), "speed {bad} must be rejected");
+        }
+        let report = replay(&server, &[], 1.0).unwrap();
+        assert!(report.replies.is_empty() && report.retries == 0);
+        assert_eq!(report.lat_pct(0.95), 0.0);
+    }
+}

@@ -1,0 +1,662 @@
+//! Structured serve-path tracing (RFC 0006): per-request spans, rolling
+//! latency histograms, and pluggable trace subscribers.
+//!
+//! Every [`Request`](super::worker::Request) carries a [`Span`] — a
+//! `Copy` bundle of monotonic [`Instant`] stamps set as the request
+//! moves queued→admitted→batched→flushed→executed; the reply-routing
+//! stamp is taken batch-wide by the worker.  After a batch's replies are
+//! sent, the worker publishes the batch's spans to its lane's
+//! [`LaneTrace`], which (a) folds per-stage durations into rolling
+//! [`RollingHist`] percentile estimators (the live `{"stats":true}` /
+//! bench surface) and (b) fans a [`TraceEvent`] per request out to every
+//! registered [`TraceSubscriber`].
+//!
+//! The steady-state serve path stays allocation-free with tracing
+//! enabled (`rust/tests/workspace_alloc.rs` asserts this): spans are
+//! inline `Copy` data, histograms are fixed-size bucket arrays behind
+//! one per-lane mutex, and the bundled [`JsonlTraceRecorder`] buffers
+//! events in a preallocated ring it only formats and writes at flush
+//! boundaries.
+
+#![warn(missing_docs)]
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{anyhow, Result};
+
+/// Monotonic per-request timestamps, stamped as the request crosses each
+/// serve-path stage.  `Copy` and inline in the request so stamping never
+/// allocates.  All stamps default to the creation instant, so a span
+/// that skips a stage (e.g. a rejected request) still has ordered,
+/// non-panicking durations.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Submission entered the registry (before validation).
+    pub queued: Instant,
+    /// Validation passed; the request entered its lane's intake queue.
+    pub admitted: Instant,
+    /// The batcher popped the request into a forming micro-batch.
+    pub batched: Instant,
+    /// The micro-batch closed and was handed to the worker pool.
+    pub flushed: Instant,
+}
+
+impl Span {
+    /// Open a span at the current instant (all stamps initialized to now).
+    pub fn begin() -> Span {
+        let now = Instant::now();
+        Span { queued: now, admitted: now, batched: now, flushed: now }
+    }
+}
+
+/// One request's trace record, handed to [`TraceSubscriber::on_event`]
+/// after its reply was routed.  All times are microsecond offsets from
+/// the owning registry's epoch (a single monotonic clock shared by every
+/// lane, so multi-model traces interleave on one axis).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent<'a> {
+    /// Lane (model) name.
+    pub model: &'a Arc<str>,
+    /// Offset of [`Span::queued`].
+    pub queued_us: u64,
+    /// Offset of [`Span::admitted`].
+    pub admitted_us: u64,
+    /// Offset of [`Span::batched`].
+    pub batched_us: u64,
+    /// Offset of [`Span::flushed`].
+    pub flushed_us: u64,
+    /// Offset of the engine forward completing (batch-wide).
+    pub executed_us: u64,
+    /// Offset of the reply resolving the request's oneshot (batch-wide).
+    pub routed_us: u64,
+    /// How many requests shared this event's micro-batch.
+    pub batch_len: u32,
+    /// Whether the reply carried logits (`false` = engine error).
+    pub ok: bool,
+}
+
+/// A sink for [`TraceEvent`]s.  Called on the worker thread after each
+/// batch's replies were sent; implementations must not allocate per
+/// event on the steady path — buffer inline and allocate only in
+/// [`TraceSubscriber::flush`] (the contract `workspace_alloc.rs`
+/// enforces for the bundled recorder).
+pub trait TraceSubscriber: Send + Sync {
+    /// Observe one routed request.
+    fn on_event(&self, ev: &TraceEvent<'_>);
+    /// Drain any buffered events to the underlying sink.  Called at
+    /// registry shutdown/retire and whenever an implementation's buffer
+    /// fills.
+    fn flush(&self) {}
+}
+
+// ---------------------------------------------------------------------------
+// Rolling log-bucketed histogram
+// ---------------------------------------------------------------------------
+
+/// Bucket count: log-linear with 8 sub-buckets per octave (3 mantissa
+/// bits), exact below 8µs, covering ~2.3 hours before clamping — worst
+/// relative quantization error 12.5%, midpoint estimate within ~7%.
+const HIST_BUCKETS: usize = 256;
+
+/// Rolling p50/p95/p99 latency estimator over log-spaced microsecond
+/// buckets.  Two windows (current + previous) roll by event count:
+/// percentiles always reflect between `window` and `2×window` recent
+/// samples, and a burst from an hour ago cannot haunt the live stats.
+/// Recording is allocation-free; the bucket arrays are allocated once
+/// at construction.
+#[derive(Clone, Debug)]
+pub struct RollingHist {
+    cur: Vec<u32>,
+    prev: Vec<u32>,
+    cur_n: u32,
+    window: u32,
+}
+
+fn bucket_of(us: u64) -> usize {
+    if us < 8 {
+        return us as usize;
+    }
+    let msb = 63 - us.leading_zeros() as usize;
+    let idx = (msb - 3) * 8 + ((us >> (msb - 3)) as usize & 0xf);
+    idx.min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive lower edge of a bucket, in µs.
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < 8 {
+        idx as u64
+    } else {
+        let shift = idx / 8 - 1;
+        ((8 + idx % 8) as u64) << shift
+    }
+}
+
+/// Midpoint estimate for a bucket, in µs.
+fn bucket_mid(idx: usize) -> f64 {
+    if idx < 8 {
+        idx as f64
+    } else {
+        let width = 1u64 << (idx / 8 - 1);
+        bucket_floor(idx) as f64 + width as f64 / 2.0
+    }
+}
+
+impl RollingHist {
+    /// A histogram rolling every `window` recorded samples.
+    pub fn new(window: u32) -> RollingHist {
+        RollingHist {
+            cur: vec![0; HIST_BUCKETS],
+            prev: vec![0; HIST_BUCKETS],
+            cur_n: 0,
+            window: window.max(1),
+        }
+    }
+
+    /// Record one duration (µs).  Never allocates; rolls the window in
+    /// place when `window` samples have accumulated.
+    pub fn record(&mut self, us: u64) {
+        self.cur[bucket_of(us)] += 1;
+        self.cur_n += 1;
+        if self.cur_n >= self.window {
+            std::mem::swap(&mut self.cur, &mut self.prev);
+            self.cur.iter_mut().for_each(|c| *c = 0);
+            self.cur_n = 0;
+        }
+    }
+
+    /// Samples currently contributing to percentile estimates (current +
+    /// previous window).
+    pub fn len(&self) -> u64 {
+        self.cur.iter().chain(self.prev.iter()).map(|&c| c as u64).sum()
+    }
+
+    /// True when no samples have been recorded in the live windows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Nearest-rank percentile estimate in µs over the live windows
+    /// (`q` in `[0, 1]`).  Returns the matched bucket's midpoint —
+    /// within ~7% of the exact sorted-sample percentile — or `0.0` for
+    /// an empty histogram.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let total = self.len();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..HIST_BUCKETS {
+            seen += (self.cur[i] + self.prev[i]) as u64;
+            if seen >= rank {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(HIST_BUCKETS - 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-lane aggregation
+// ---------------------------------------------------------------------------
+
+/// p50/p95/p99 snapshot for one serve stage, in µs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StagePcts {
+    /// Median.
+    pub p50_us: f64,
+    /// 95th percentile.
+    pub p95_us: f64,
+    /// 99th percentile.
+    pub p99_us: f64,
+}
+
+/// Live trace snapshot for one lane, surfaced through
+/// [`ModelStats`](super::registry::ModelStats) and the inline
+/// `{"stats":true}` reply.
+#[derive(Clone, Debug)]
+pub struct TraceStats {
+    /// Requests published (routed replies, ok or failed).
+    pub events: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// EWMA of executed batch size, in requests.
+    pub mean_batch: f64,
+    /// Intake wait: queued → batched.
+    pub queue: StagePcts,
+    /// Batch formation wait: batched → flushed (the adaptive batcher's
+    /// target).
+    pub batch: StagePcts,
+    /// Stack + engine forward + split: flushed → executed.
+    pub exec: StagePcts,
+    /// End to end: queued → routed.
+    pub total: StagePcts,
+}
+
+/// EWMA smoothing for the batch-fill estimate.
+const FILL_EWMA_ALPHA: f64 = 0.2;
+/// Default histogram window (samples per roll).
+const DEFAULT_HIST_WINDOW: u32 = 4096;
+
+struct LaneMetrics {
+    queue: RollingHist,
+    batch: RollingHist,
+    exec: RollingHist,
+    total: RollingHist,
+    mean_batch: f64,
+    events: u64,
+    batches: u64,
+}
+
+/// Per-lane trace aggregation point: rolling per-stage histograms plus
+/// the registry-wide subscriber fan-out.  One per
+/// [`ModelEntry`](super::registry::Registry), shared with that lane's
+/// workers.
+pub struct LaneTrace {
+    model: Arc<str>,
+    epoch: Instant,
+    metrics: Mutex<LaneMetrics>,
+    subs: Vec<Arc<dyn TraceSubscriber>>,
+    enabled: bool,
+}
+
+impl LaneTrace {
+    /// A live trace for `model`, publishing to `subs`.  `epoch` is the
+    /// registry's shared clock origin for event offsets.
+    pub fn new(model: Arc<str>, epoch: Instant, subs: Vec<Arc<dyn TraceSubscriber>>) -> LaneTrace {
+        LaneTrace {
+            model,
+            epoch,
+            metrics: Mutex::new(LaneMetrics {
+                queue: RollingHist::new(DEFAULT_HIST_WINDOW),
+                batch: RollingHist::new(DEFAULT_HIST_WINDOW),
+                exec: RollingHist::new(DEFAULT_HIST_WINDOW),
+                total: RollingHist::new(DEFAULT_HIST_WINDOW),
+                mean_batch: 0.0,
+                events: 0,
+                batches: 0,
+            }),
+            subs,
+            enabled: true,
+        }
+    }
+
+    /// A no-op trace: `publish_batch` returns immediately.  Used by the
+    /// single-engine test shims and as the A/B baseline in the
+    /// zero-allocation test.
+    pub fn disabled(model: Arc<str>) -> LaneTrace {
+        let mut t = LaneTrace::new(model, Instant::now(), Vec::new());
+        t.enabled = false;
+        t
+    }
+
+    /// Lane name.
+    pub fn model(&self) -> &Arc<str> {
+        &self.model
+    }
+
+    /// Publish one executed micro-batch: fold every span's stage
+    /// durations into the rolling histograms (one lock per batch), then
+    /// fan events out to subscribers.  `executed`/`routed` are batch-wide
+    /// stamps taken by the worker.  Allocation-free on the steady path.
+    pub fn publish_batch(&self, spans: &[Span], executed: Instant, routed: Instant, ok: bool) {
+        if !self.enabled || spans.is_empty() {
+            return;
+        }
+        {
+            let mut m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+            for s in spans {
+                m.queue.record(dur_us(s.queued, s.batched));
+                m.batch.record(dur_us(s.batched, s.flushed));
+                m.exec.record(dur_us(s.flushed, executed));
+                m.total.record(dur_us(s.queued, routed));
+            }
+            m.events += spans.len() as u64;
+            m.batches += 1;
+            let b = spans.len() as f64;
+            m.mean_batch = if m.batches == 1 {
+                b
+            } else {
+                FILL_EWMA_ALPHA * b + (1.0 - FILL_EWMA_ALPHA) * m.mean_batch
+            };
+        }
+        if self.subs.is_empty() {
+            return;
+        }
+        let batch_len = spans.len() as u32;
+        for s in spans {
+            let ev = TraceEvent {
+                model: &self.model,
+                queued_us: off_us(self.epoch, s.queued),
+                admitted_us: off_us(self.epoch, s.admitted),
+                batched_us: off_us(self.epoch, s.batched),
+                flushed_us: off_us(self.epoch, s.flushed),
+                executed_us: off_us(self.epoch, executed),
+                routed_us: off_us(self.epoch, routed),
+                batch_len,
+                ok,
+            };
+            for sub in &self.subs {
+                sub.on_event(&ev);
+            }
+        }
+    }
+
+    /// Snapshot the lane's live percentiles and counters.
+    pub fn stats(&self) -> TraceStats {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        let pcts = |h: &RollingHist| StagePcts {
+            p50_us: h.percentile(0.50),
+            p95_us: h.percentile(0.95),
+            p99_us: h.percentile(0.99),
+        };
+        TraceStats {
+            events: m.events,
+            batches: m.batches,
+            mean_batch: m.mean_batch,
+            queue: pcts(&m.queue),
+            batch: pcts(&m.batch),
+            exec: pcts(&m.exec),
+            total: pcts(&m.total),
+        }
+    }
+}
+
+fn dur_us(from: Instant, to: Instant) -> u64 {
+    to.saturating_duration_since(from).as_micros() as u64
+}
+
+fn off_us(epoch: Instant, t: Instant) -> u64 {
+    t.saturating_duration_since(epoch).as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// JSONL trace recorder
+// ---------------------------------------------------------------------------
+
+/// Owned copy of a [`TraceEvent`] buffered between flushes.  The model
+/// handle is an `Arc` clone — no allocation on the record path.
+struct BufEvent {
+    model: Arc<str>,
+    queued_us: u64,
+    queue_us: u64,
+    batch_us: u64,
+    exec_us: u64,
+    total_us: u64,
+    batch_len: u32,
+    ok: bool,
+}
+
+struct RecInner {
+    buf: Vec<BufEvent>,
+    out: Box<dyn Write + Send>,
+}
+
+/// A [`TraceSubscriber`] writing one JSON object per event (RFC 0006
+/// trace schema) to an arbitrary sink.  Events accumulate in a
+/// preallocated buffer; formatting and I/O happen only when the buffer
+/// fills or on [`TraceSubscriber::flush`] — so with a buffer larger than
+/// the measurement window the steady serve path stays allocation-free.
+pub struct JsonlTraceRecorder {
+    inner: Mutex<RecInner>,
+    cap: usize,
+}
+
+impl JsonlTraceRecorder {
+    /// Record to `out`, buffering up to `cap` events between writes.
+    pub fn to_writer(out: Box<dyn Write + Send>, cap: usize) -> JsonlTraceRecorder {
+        let cap = cap.max(1);
+        let inner = Mutex::new(RecInner { buf: Vec::with_capacity(cap), out });
+        JsonlTraceRecorder { inner, cap }
+    }
+
+    /// Record to a file at `path` (truncating), with the default 4096
+    /// event buffer.
+    pub fn create(path: &str) -> Result<JsonlTraceRecorder> {
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow!("trace recorder: cannot create {path}: {e}"))?;
+        Ok(JsonlTraceRecorder::to_writer(Box::new(std::io::BufWriter::new(f)), 4096))
+    }
+
+    fn flush_locked(inner: &mut RecInner) {
+        let mut line = String::new();
+        for ev in inner.buf.drain(..) {
+            line.clear();
+            line.push_str("{\"t_us\":");
+            push_u64(&mut line, ev.queued_us);
+            line.push_str(",\"model\":\"");
+            line.push_str(&ev.model);
+            line.push_str("\",\"queue_us\":");
+            push_u64(&mut line, ev.queue_us);
+            line.push_str(",\"batch_us\":");
+            push_u64(&mut line, ev.batch_us);
+            line.push_str(",\"exec_us\":");
+            push_u64(&mut line, ev.exec_us);
+            line.push_str(",\"total_us\":");
+            push_u64(&mut line, ev.total_us);
+            line.push_str(",\"batch_len\":");
+            push_u64(&mut line, ev.batch_len as u64);
+            line.push_str(",\"ok\":");
+            line.push_str(if ev.ok { "true" } else { "false" });
+            line.push_str("}\n");
+            let _ = inner.out.write_all(line.as_bytes());
+        }
+        let _ = inner.out.flush();
+    }
+}
+
+fn push_u64(s: &mut String, v: u64) {
+    use std::fmt::Write as _;
+    let _ = write!(s, "{v}");
+}
+
+impl TraceSubscriber for JsonlTraceRecorder {
+    fn on_event(&self, ev: &TraceEvent<'_>) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.buf.push(BufEvent {
+            model: ev.model.clone(),
+            queued_us: ev.queued_us,
+            queue_us: ev.batched_us.saturating_sub(ev.queued_us),
+            batch_us: ev.flushed_us.saturating_sub(ev.batched_us),
+            exec_us: ev.executed_us.saturating_sub(ev.flushed_us),
+            total_us: ev.routed_us.saturating_sub(ev.queued_us),
+            batch_len: ev.batch_len,
+            ok: ev.ok,
+        });
+        if inner.buf.len() >= self.cap {
+            JsonlTraceRecorder::flush_locked(&mut inner);
+        }
+    }
+
+    fn flush(&self) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        JsonlTraceRecorder::flush_locked(&mut inner);
+    }
+}
+
+impl Drop for JsonlTraceRecorder {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn exact_percentile(sorted: &[u64], q: f64) -> f64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+        sorted[rank - 1] as f64
+    }
+
+    fn assert_close(est: f64, exact: f64, what: &str) {
+        let tol = (exact * 0.08).max(1.0);
+        assert!((est - exact).abs() <= tol, "{what}: estimate {est} vs exact {exact} (tol {tol})");
+    }
+
+    fn check_stream(samples: &[u64], what: &str) {
+        let mut h = RollingHist::new(u32::MAX);
+        for &s in samples {
+            h.record(s);
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        for q in [0.50, 0.95, 0.99] {
+            assert_close(h.percentile(q), exact_percentile(&sorted, q), &format!("{what} p{q}"));
+        }
+    }
+
+    #[test]
+    fn percentiles_match_exact_on_uniform_stream() {
+        let mut rng = Pcg64::new(11);
+        let samples: Vec<u64> = (0..5000).map(|_| rng.below(20_000) as u64 + 1).collect();
+        check_stream(&samples, "uniform");
+    }
+
+    #[test]
+    fn percentiles_match_exact_on_bimodal_stream() {
+        let mut rng = Pcg64::new(23);
+        let samples: Vec<u64> = (0..5000)
+            .map(|_| {
+                if rng.below(10) < 8 {
+                    rng.below(200) as u64 + 50 // fast mode ~50-250µs
+                } else {
+                    rng.below(5_000) as u64 + 20_000 // slow mode ~20-25ms
+                }
+            })
+            .collect();
+        check_stream(&samples, "bimodal");
+    }
+
+    #[test]
+    fn single_sample_and_empty() {
+        let mut h = RollingHist::new(16);
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(0.50), 0.0);
+        assert_eq!(h.percentile(0.99), 0.0);
+        h.record(1234);
+        for q in [0.0, 0.5, 1.0] {
+            assert_close(h.percentile(q), 1234.0, "single sample");
+        }
+        assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn window_roll_forgets_old_samples() {
+        // window 8: percentiles span the current + previous windows only
+        let mut h = RollingHist::new(8);
+        for _ in 0..8 {
+            h.record(10); // fills window 1, rolls into `prev`
+        }
+        assert_close(h.percentile(0.50), 10.0, "after first window");
+        for _ in 0..8 {
+            h.record(100_000); // window 2 rolls; window 1 is dropped
+        }
+        // live = prev(100_000 ×8) + cur(empty): the 10µs era is gone
+        assert_close(h.percentile(0.50), 100_000.0, "old era evicted");
+        assert_eq!(h.len(), 8);
+        // mixed live windows still merge
+        for _ in 0..4 {
+            h.record(10);
+        }
+        assert_close(h.percentile(0.99), 100_000.0, "slow tail still visible");
+        assert_close(h.percentile(0.25), 10.0, "fresh fast samples visible");
+    }
+
+    #[test]
+    fn buckets_are_monotonic_and_invertible() {
+        let mut last = 0;
+        for v in 0..100_000u64 {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of not monotonic at {v}");
+            last = b;
+            let (lo, mid) = (bucket_floor(b), bucket_mid(b));
+            assert!(lo <= v, "floor {lo} above value {v}");
+            let rel = (mid - v as f64).abs() / (v.max(1) as f64);
+            assert!(rel <= 0.07 || (mid - v as f64).abs() <= 1.0, "bucket error {rel} at {v}");
+        }
+    }
+
+    #[test]
+    fn lane_trace_aggregates_batches() {
+        use std::time::Duration;
+        let epoch = Instant::now();
+        let trace = LaneTrace::new(Arc::from("m"), epoch, Vec::new());
+        let mut span = Span::begin();
+        span.batched = span.queued + Duration::from_micros(100);
+        span.flushed = span.queued + Duration::from_micros(300);
+        let executed = span.queued + Duration::from_micros(900);
+        let routed = span.queued + Duration::from_micros(1000);
+        trace.publish_batch(&[span, span], executed, routed, true);
+        let s = trace.stats();
+        assert_eq!(s.events, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch, 2.0);
+        assert_close(s.queue.p50_us, 100.0, "queue stage");
+        assert_close(s.batch.p50_us, 200.0, "batch stage");
+        assert_close(s.exec.p50_us, 600.0, "exec stage");
+        assert_close(s.total.p99_us, 1000.0, "total");
+    }
+
+    #[test]
+    fn disabled_trace_publishes_nothing() {
+        let trace = LaneTrace::disabled(Arc::from("m"));
+        let span = Span::begin();
+        trace.publish_batch(&[span], Instant::now(), Instant::now(), true);
+        let s = trace.stats();
+        assert_eq!(s.events, 0);
+        assert!(trace.model().as_ref() == "m");
+    }
+
+    #[test]
+    fn jsonl_recorder_formats_events_at_flush() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>, Arc<AtomicUsize>);
+        impl Write for SharedBuf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.1.fetch_add(1, Ordering::SeqCst);
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let writes = Arc::new(AtomicUsize::new(0));
+        let sink_w = Box::new(SharedBuf(sink.clone(), writes.clone()));
+        let rec = JsonlTraceRecorder::to_writer(sink_w, 3);
+        let model: Arc<str> = Arc::from("mlp");
+        let ev = |t: u64| TraceEvent {
+            model: &model,
+            queued_us: t,
+            admitted_us: t + 1,
+            batched_us: t + 10,
+            flushed_us: t + 30,
+            executed_us: t + 90,
+            routed_us: t + 100,
+            batch_len: 2,
+            ok: true,
+        };
+        rec.on_event(&ev(0));
+        rec.on_event(&ev(500));
+        assert_eq!(writes.load(Ordering::SeqCst), 0, "no I/O before the buffer fills");
+        rec.on_event(&ev(900)); // cap = 3 → flush boundary
+        assert!(writes.load(Ordering::SeqCst) > 0);
+        rec.flush();
+        let text = String::from_utf8(sink.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let doc = crate::json::Json::parse(lines[1]).unwrap();
+        assert_eq!(doc.get("model").unwrap().str().unwrap(), "mlp");
+        assert_eq!(doc.get("t_us").unwrap().usize().unwrap(), 500);
+        assert_eq!(doc.get("queue_us").unwrap().usize().unwrap(), 10);
+        assert_eq!(doc.get("batch_us").unwrap().usize().unwrap(), 20);
+        assert_eq!(doc.get("exec_us").unwrap().usize().unwrap(), 60);
+        assert_eq!(doc.get("total_us").unwrap().usize().unwrap(), 100);
+        assert_eq!(doc.get("batch_len").unwrap().usize().unwrap(), 2);
+    }
+}

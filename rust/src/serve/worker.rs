@@ -16,6 +16,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::backend::Value;
 use crate::coordinator::binder::{bind_inputs, BindCtx};
@@ -27,8 +28,10 @@ use crate::lower::QuantizedGraph;
 use crate::model::{ParamStore, QParamStore, StateStore};
 use crate::tensor::{ITensor, Tensor};
 
+use super::batcher::BatchItem;
 use super::queue::{BoundedQueue, OneshotSender};
 use super::registry::{EngineSlot, Reply};
+use super::trace::{LaneTrace, Span};
 
 /// One queued inference request: a single example plus the channel its
 /// reply (logits + serving identity, or error) is routed back through.
@@ -38,6 +41,20 @@ pub struct Request {
     pub input: Value,
     /// Resolved by the worker that executes this request's batch.
     pub tx: OneshotSender<Result<Reply>>,
+    /// Trace stamps (RFC 0006), carried inline so stamping never
+    /// allocates.  Opened at submission; the batcher and worker fill in
+    /// the later stages.
+    pub span: Span,
+}
+
+impl BatchItem for Request {
+    fn stamp_batched(&mut self, now: Instant) {
+        self.span.batched = now;
+    }
+
+    fn stamp_flushed(&mut self, now: Instant) {
+        self.span.flushed = now;
+    }
 }
 
 /// A batch-flexible forward engine the serving runtime can pool workers
@@ -305,47 +322,70 @@ pub fn split_logits(out: &Tensor, b: usize) -> Result<Vec<Tensor>> {
 /// steady state performs zero heap allocations beyond the per-request
 /// response envelopes.  A shrinking dynamic batch reuses the high-water
 /// buffers; growing past them resizes once and plateaus.
-pub fn run(slot: &Mutex<EngineSlot>, batches: &Arc<BoundedQueue<Vec<Request>>>) {
+pub fn run(slot: &Mutex<EngineSlot>, batches: &Arc<BoundedQueue<Vec<Request>>>, trace: &LaneTrace) {
     let mut ws = Workspace::new();
     while let Some(batch) = batches.pop() {
-        let b = batch.len();
-        let snap = slot.lock().unwrap_or_else(|p| p.into_inner()).clone();
-        let engine = &snap.engine;
-        let (inputs, txs): (Vec<Value>, Vec<OneshotSender<Result<Reply>>>) =
-            batch.into_iter().map(|r| (r.input, r.tx)).unzip();
-        let result = match stack_examples_ws(engine.input(), &inputs, &mut ws) {
-            Ok(x) => {
-                let y = engine.forward_batch_ws(&x, &mut ws);
-                ws.give_value(x);
-                match y {
-                    Ok(y) => {
-                        let parts = split_logits(&y, b);
-                        ws.give_tensor(y);
-                        parts
-                    }
-                    Err(e) => Err(e),
+        process_batch(slot, batch, &mut ws, trace);
+    }
+}
+
+/// Execute one micro-batch end to end: snapshot the engine slot, stack,
+/// forward, split, resolve every request's oneshot, then publish the
+/// batch's spans to the lane trace.  Factored out of [`run`] so the
+/// zero-allocation test (`rust/tests/workspace_alloc.rs`) can drive the
+/// exact serve hot path single-threaded under a counting allocator.
+pub fn process_batch(
+    slot: &Mutex<EngineSlot>,
+    batch: Vec<Request>,
+    ws: &mut Workspace,
+    trace: &LaneTrace,
+) {
+    let b = batch.len();
+    let snap = slot.lock().unwrap_or_else(|p| p.into_inner()).clone();
+    let engine = &snap.engine;
+    let mut inputs: Vec<Value> = Vec::with_capacity(b);
+    let mut txs: Vec<OneshotSender<Result<Reply>>> = Vec::with_capacity(b);
+    let mut spans: Vec<Span> = Vec::with_capacity(b);
+    for r in batch {
+        inputs.push(r.input);
+        txs.push(r.tx);
+        spans.push(r.span);
+    }
+    let result = match stack_examples_ws(engine.input(), &inputs, ws) {
+        Ok(x) => {
+            let y = engine.forward_batch_ws(&x, ws);
+            ws.give_value(x);
+            match y {
+                Ok(y) => {
+                    let parts = split_logits(&y, b);
+                    ws.give_tensor(y);
+                    parts
                 }
+                Err(e) => Err(e),
             }
-            Err(e) => Err(e),
-        };
-        match result {
-            Ok(parts) => {
-                for (tx, logits) in txs.into_iter().zip(parts) {
-                    tx.send(Ok(Reply {
-                        logits,
-                        model: snap.model.clone(),
-                        fingerprint: snap.fingerprint.clone(),
-                        generation: snap.generation,
-                    }));
-                }
+        }
+        Err(e) => Err(e),
+    };
+    let executed = Instant::now();
+    let ok = result.is_ok();
+    match result {
+        Ok(parts) => {
+            for (tx, logits) in txs.into_iter().zip(parts) {
+                tx.send(Ok(Reply {
+                    logits,
+                    model: snap.model.clone(),
+                    fingerprint: snap.fingerprint.clone(),
+                    generation: snap.generation,
+                }));
             }
-            Err(e) => {
-                for tx in txs {
-                    tx.send(Err(anyhow!("{} serve: batch of {b} failed: {e}", snap.model)));
-                }
+        }
+        Err(e) => {
+            for tx in txs {
+                tx.send(Err(anyhow!("{} serve: batch of {b} failed: {e}", snap.model)));
             }
         }
     }
+    trace.publish_batch(&spans, executed, Instant::now(), ok);
 }
 
 #[cfg(test)]

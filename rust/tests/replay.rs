@@ -1,0 +1,168 @@
+//! Record/replay determinism tests (RFC 0006): a trace captured from a
+//! live multi-model registry, re-issued at 1× and at 8×, must produce
+//! replies that are **bit-identical** to offline evaluation of the same
+//! examples, in the FIFO order the records were issued — speedup is a
+//! scheduling lever, never a correctness one.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use efqat::backend::Value;
+use efqat::lower::{lower, QuantizedGraph};
+use efqat::serve::replay::{load_trace, replay, ReplayRecord, TrafficRecorder};
+use efqat::serve::{BatchCfg, Registry, ServeCfg, Server};
+use efqat::tensor::{ITensor, Tensor};
+
+fn fixture(model: &str) -> QuantizedGraph {
+    let (g, params, q) = efqat::testing::synth_lowering_fixture(model);
+    lower(&g, &params, &q, 8, 8).unwrap()
+}
+
+fn serve_cfg(max_batch: usize, wait: Duration, workers: usize, adaptive: bool) -> ServeCfg {
+    let batch = BatchCfg { max_batch, max_wait: wait, adaptive };
+    ServeCfg { batch, workers, queue_cap: 256 }
+}
+
+/// Re-shape one example into a batch of 1 — the offline reference every
+/// replayed reply must match bit for bit.
+fn unit_batch(v: &Value) -> Value {
+    match v {
+        Value::F32(t) => {
+            let mut shape = vec![1];
+            shape.extend_from_slice(&t.shape);
+            Value::F32(Tensor { shape, data: t.data.clone() })
+        }
+        Value::I32(t) => {
+            let mut shape = vec![1];
+            shape.extend_from_slice(&t.shape);
+            Value::I32(ITensor { shape, data: t.data.clone() })
+        }
+    }
+}
+
+fn two_model_server(adaptive: bool) -> (Server, Arc<QuantizedGraph>, Arc<QuantizedGraph>) {
+    let mlp = Arc::new(fixture("mlp"));
+    let tf = Arc::new(fixture("tiny_tf"));
+    let registry = Registry::new();
+    registry.install("mlp", mlp.clone(), "fp-mlp").unwrap();
+    registry.install("tf", tf.clone(), "fp-tf").unwrap();
+    let server =
+        Server::start(registry, serve_cfg(8, Duration::from_millis(1), 2, adaptive)).unwrap();
+    (server, mlp, tf)
+}
+
+/// A deterministic interleaved two-model request stream: even indices
+/// are mlp images, odd indices are tiny_tf token rows.
+fn traffic(n: usize) -> Vec<(String, Value)> {
+    let mut rng = efqat::rng::Pcg64::new(4242);
+    (0..n)
+        .map(|i| {
+            if i % 2 == 0 {
+                let x = Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) };
+                ("mlp".to_string(), Value::F32(x))
+            } else {
+                let ids = ITensor {
+                    shape: vec![16],
+                    data: (0..16).map(|_| rng.below(64) as i32).collect(),
+                };
+                ("tf".to_string(), Value::I32(ids))
+            }
+        })
+        .collect()
+}
+
+/// Assert `replies[i]` answers `records[i]`: right lane, and logits
+/// bit-identical to an offline batch-of-1 forward of the record's
+/// payload.  Payloads are distinct per record, so position identity is
+/// also the FIFO / mis-route check.
+fn assert_bit_identical(
+    report: &efqat::serve::ReplayReport,
+    records: &[ReplayRecord],
+    mlp: &QuantizedGraph,
+    tf: &QuantizedGraph,
+    tag: &str,
+) {
+    assert_eq!(report.replies.len(), records.len(), "{tag}: replay dropped records");
+    assert_eq!(report.lat_ms.len(), records.len(), "{tag}: missing latencies");
+    for (i, (reply, rec)) in report.replies.iter().zip(records).enumerate() {
+        assert_eq!(&*reply.model, rec.model.as_str(), "{tag}: record {i} mis-routed");
+        let engine = if rec.model == "mlp" { mlp } else { tf };
+        let want = engine.forward_owned(unit_batch(&rec.input)).unwrap();
+        assert_eq!(reply.logits.data, want.data, "{tag}: record {i} diverged from offline eval");
+    }
+}
+
+#[test]
+fn recorded_trace_replays_bit_identically_at_1x_and_8x() {
+    let dir = std::env::temp_dir().join("efqat_replay_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    let path = path.to_str().unwrap();
+
+    // live capture: a recorder attached to a two-model registry sees
+    // every accepted submission with its arrival offset
+    let (server, _mlp, _tf) = two_model_server(false);
+    let rec = Arc::new(TrafficRecorder::create(path).unwrap());
+    server.registry().set_recorder(rec.clone());
+    let stream = traffic(40);
+    let tickets: Vec<_> = stream
+        .iter()
+        .map(|(m, v)| server.try_submit(Some(m.as_str()), v.clone()).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait_reply().unwrap();
+    }
+    server.registry().flush_trace();
+    assert_eq!(rec.records(), 40);
+    server.shutdown();
+
+    let records = load_trace(path).unwrap();
+    assert_eq!(records.len(), 40, "recorder captured every accepted request");
+    assert!(records.windows(2).all(|w| w[0].t_us <= w[1].t_us), "offsets must be ordered");
+    assert!(records.iter().step_by(2).all(|r| r.model == "mlp"), "lane names captured wrong");
+
+    // 1× with the static batcher, 8× with the adaptive batcher: the
+    // replies must be bit-identical to offline eval either way, in
+    // record order — speed and flush policy change scheduling only
+    for (speed, adaptive) in [(1.0, false), (8.0, true)] {
+        let (server, mlp, tf) = two_model_server(adaptive);
+        let report = replay(&server, &records, speed).unwrap();
+        let tag = format!("speed {speed} adaptive {adaptive}");
+        assert_bit_identical(&report, &records, &mlp, &tf, &tag);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn replay_retries_overload_and_never_drops() {
+    // a burst far larger than the lane (queue_cap 2, max_batch 1): the
+    // replay driver must absorb `overloaded` verdicts by retrying, and
+    // still answer every record in order
+    let mlp = Arc::new(fixture("mlp"));
+    let registry = Registry::new();
+    registry.install("mlp", mlp.clone(), "fp-mlp").unwrap();
+    let cfg = ServeCfg::builder()
+        .max_batch(1)
+        .max_wait_ms(0.0)
+        .workers(1)
+        .queue_cap(2)
+        .build()
+        .unwrap();
+    let server = Server::start(registry, cfg).unwrap();
+
+    let mut rng = efqat::rng::Pcg64::new(7);
+    let records: Vec<ReplayRecord> = (0..32)
+        .map(|_| ReplayRecord {
+            t_us: 0, // all due immediately: maximum intake pressure
+            model: "mlp".to_string(),
+            input: Value::F32(Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) }),
+        })
+        .collect();
+    let report = replay(&server, &records, 1000.0).unwrap();
+    assert_eq!(report.replies.len(), 32, "overload must retry, not drop");
+    for (i, (reply, rec)) in report.replies.iter().zip(&records).enumerate() {
+        let want = mlp.forward_owned(unit_batch(&rec.input)).unwrap();
+        assert_eq!(reply.logits.data, want.data, "record {i} diverged under overload");
+    }
+    server.shutdown();
+}

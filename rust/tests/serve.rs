@@ -48,7 +48,8 @@ fn fixture_seeded(model: &str, seed: u64) -> QuantizedGraph {
 }
 
 fn serve_cfg(max_batch: usize, wait: Duration, workers: usize) -> ServeCfg {
-    ServeCfg { batch: BatchCfg { max_batch, max_wait: wait }, workers, queue_cap: 256 }
+    let batch = BatchCfg { max_batch, max_wait: wait, adaptive: false };
+    ServeCfg { batch, workers, queue_cap: 256 }
 }
 
 /// Re-shape one example into a batch of 1 — the single-request reference
@@ -397,6 +398,34 @@ fn hot_swap_under_load_is_lossless_and_bit_identical() {
         }
     }
     assert_eq!(checked, eval.n, "served exactly the examples eval scored");
+    server.shutdown();
+}
+
+#[test]
+fn stats_expose_trace_percentiles_and_batch_fill() {
+    let engine = Arc::new(fixture("mlp").0);
+    let server = Server::single(engine, serve_cfg(8, Duration::from_millis(1), 1));
+    let mut rng = efqat::rng::Pcg64::new(51);
+    let tickets: Vec<_> = (0..24)
+        .map(|_| {
+            let x = Tensor { shape: vec![3, 8, 8], data: rng.normal_vec(192, 1.0) };
+            server.submit(Value::F32(x)).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let stats = server.stats();
+    let st = stats.first().unwrap();
+    let tr = st.trace.as_ref().expect("a started lane publishes trace stats");
+    assert_eq!(tr.events, 24, "every answered request is one trace event");
+    assert!((1..=24).contains(&tr.batches), "batches {}", tr.batches);
+    assert!((1.0..=8.0).contains(&tr.mean_batch), "mean_batch {}", tr.mean_batch);
+    assert!(st.batch_fill > 0.0 && st.batch_fill <= 1.0, "fill {}", st.batch_fill);
+    // total = queue + batch + exec per event, and the histogram estimate
+    // is monotone, so the total percentile dominates every stage's
+    assert!(tr.total.p95_us >= tr.queue.p95_us, "{tr:?}");
+    assert!(tr.total.p95_us >= tr.exec.p95_us, "{tr:?}");
     server.shutdown();
 }
 

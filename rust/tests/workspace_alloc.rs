@@ -138,6 +138,95 @@ fn int8_serve_forward_is_allocation_free_after_warmup() {
     efqat::ops::simd::force(None);
 }
 
+/// Drive the exact serve hot path (`worker::process_batch`) over
+/// pre-built micro-batches and return the allocation count of the
+/// steady-state window (3 warmup batches, 8 measured).
+fn serve_batch_alloc_delta(trace: &efqat::serve::LaneTrace) -> u64 {
+    use efqat::serve::queue::oneshot;
+    use efqat::serve::{worker, EngineSlot, Request, Span};
+
+    let (g, params, q) = efqat::testing::synth_lowering_fixture("mlp");
+    let qg = efqat::lower::lower(&g, &params, &q, 8, 8).unwrap();
+    let slot = std::sync::Mutex::new(EngineSlot {
+        engine: std::sync::Arc::new(qg),
+        model: std::sync::Arc::from("mlp"),
+        fingerprint: std::sync::Arc::from("fp-mlp"),
+        generation: 1,
+    });
+    let mut rng = Pcg64::new(9);
+    // every batch (payloads, oneshots, spans) is built *outside* the
+    // measured region — the measured allocations are the serve path's own
+    let mut batches: Vec<Vec<Request>> = (0..11)
+        .map(|_| {
+            (0..4)
+                .map(|_| {
+                    let (tx, rx) = oneshot();
+                    drop(rx); // replies are routed, not awaited, here
+                    let input = Value::F32(Tensor {
+                        shape: vec![3, 8, 8],
+                        data: rng.normal_vec(192, 1.0),
+                    });
+                    Request { input, tx, span: Span::begin() }
+                })
+                .collect()
+        })
+        .collect();
+    let mut ws = Workspace::new();
+    let measured = batches.split_off(3);
+    for batch in batches {
+        worker::process_batch(&slot, batch, &mut ws, trace);
+    }
+    let allocs0 = thread_allocs();
+    for batch in measured {
+        worker::process_batch(&slot, batch, &mut ws, trace);
+    }
+    thread_allocs() - allocs0
+}
+
+#[test]
+fn serve_batch_tracing_allocates_only_at_flush_boundaries() {
+    use efqat::serve::{JsonlTraceRecorder, LaneTrace, TraceSubscriber};
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+    impl std::io::Write for SharedBuf {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(b);
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    // A/B under the counting allocator: the baseline is the serve path
+    // with tracing disabled; the live side runs the full pipeline — span
+    // stamps, rolling histograms, EWMA, and a JSONL subscriber whose
+    // buffer (cap 4096) cannot fill inside the window.  Tracing must add
+    // exactly zero steady-state allocations.
+    let baseline = serve_batch_alloc_delta(&LaneTrace::disabled(Arc::from("mlp")));
+    let sink = Arc::new(Mutex::new(Vec::new()));
+    let recorder = Arc::new(JsonlTraceRecorder::to_writer(
+        Box::new(SharedBuf(sink.clone())),
+        4096,
+    ));
+    let subs: Vec<Arc<dyn TraceSubscriber>> = vec![recorder.clone()];
+    let live = LaneTrace::new(Arc::from("mlp"), Instant::now(), subs);
+    let traced = serve_batch_alloc_delta(&live);
+    assert_eq!(
+        traced, baseline,
+        "tracing allocated {traced} vs {baseline} per 8 steady-state batches"
+    );
+    // nothing was formatted or written inside the steady-state window ...
+    assert!(sink.lock().unwrap().is_empty(), "subscriber wrote before a flush boundary");
+    // ... and the explicit flush boundary emits every buffered event
+    recorder.flush();
+    let text = String::from_utf8(sink.lock().unwrap().clone()).unwrap();
+    assert_eq!(text.lines().count(), 44, "11 batches of 4 requests each");
+    assert!(text.lines().all(|l| l.contains("\"model\":\"mlp\"")), "wrong lane in trace");
+}
+
 #[test]
 fn train_step_execution_is_allocation_free_after_warmup() {
     let backend = NativeBackend::new(Path::new("artifacts"));
