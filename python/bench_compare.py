@@ -11,7 +11,9 @@ table of offenders.
 
 Classification by key suffix/substring (case-insensitive):
   higher-is-worse:  *_ms, *_us, *_s, *_seconds, *_bytes*, *_time*
-  lower-is-worse:   *_per_s, *speedup*, *throughput*, *_qps
+  lower-is-worse:   *_per_s, *speedup*, *throughput*, *_qps,
+                    bwd_layers_skipped (table5's truncation depth — a
+                    shrinking boundary means the backward does more work)
   ignored:          iters, meta keys (bench/backend/bits/models list),
                     and anything non-numeric
 
@@ -37,6 +39,8 @@ def classify(key):
     # suffix match for unit-like patterns ("per_s" must not catch
     # "bytes_per_step"); substring for the descriptive ones
     if k.endswith(("per_s", "qps")) or "speedup" in k or "throughput" in k:
+        return "down"
+    if k == "bwd_layers_skipped":
         return "down"
     for pat in HIGHER_IS_WORSE:
         if k.endswith(pat) or pat in k:

@@ -109,8 +109,20 @@ class BenchCompareExitContract(unittest.TestCase):
         self.assertEqual(bench_compare.classify("bytes_per_step"), "up")
         self.assertEqual(bench_compare.classify("tput_per_s"), "down")
         self.assertEqual(bench_compare.classify("speedup_vs_float"), "down")
+        # table5's dispatch/truncation axes
+        self.assertEqual(bench_compare.classify("scalar_bwd_ms"), "up")
+        self.assertEqual(bench_compare.classify("lwpn_r25_trunc_on_ms"), "up")
+        self.assertEqual(bench_compare.classify("dispatch_speedup"), "down")
+        self.assertEqual(bench_compare.classify("bwd_layers_skipped"), "down")
         self.assertIsNone(bench_compare.classify("iters"))
         self.assertIsNone(bench_compare.classify("bench"))
+
+    def test_truncation_depth_shrinking_is_a_regression(self):
+        base = self._write("base.json", {"mlp": {"bwd_layers_skipped": 2}})
+        cand = self._write("cand.json", {"mlp": {"bwd_layers_skipped": 1}})
+        code, out, _ = self._run(base, cand)
+        self.assertEqual(code, 1)
+        self.assertIn("bwd_layers_skipped", out)
 
 
 if __name__ == "__main__":

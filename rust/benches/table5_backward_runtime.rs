@@ -92,6 +92,54 @@ fn time_artifact(
     st.mean
 }
 
+/// LWPN train step at the paper's r=0.25 with the frozen-prefix backward
+/// truncation forced on and off: (on_mean, off_mean, layers_skipped).
+/// Same selection and inputs both ways — the delta is exactly the dX
+/// propagation below the lowest active layer.
+fn time_lwpn_trunc(
+    session: &efqat::coordinator::Session,
+    cfg: &efqat::cfg::Config,
+    model: &str,
+    bits: &str,
+    iters: usize,
+) -> (f64, f64, usize) {
+    let name = format!("{model}_{bits}_train_lwpn");
+    let step = session.steps.get(&name).unwrap();
+    let man = step.manifest.clone();
+    let params = ParamStore::init(&man, 0);
+    let states = StateStore::init(&man);
+    let q = qparams_for(&man, &params);
+    let mut task = build_task(model, man.batch_size, cfg).unwrap();
+    let batch = task.train.next_batch().unwrap();
+    let tcfg = TrainCfg { ratio_override: Some(0.25), ..TrainCfg::default() };
+    let trainer =
+        EfqatTrainer::new(step.clone(), params, q, states, Some(Mode::Lwpn), tcfg).unwrap();
+    let policy = trainer.policy.as_ref().unwrap();
+    let skipped = policy.selection().lowest_active_layer(&policy.sites).unwrap_or(0);
+    let selection = Some(policy.selection().clone());
+    let ctx = BindCtx {
+        params: &trainer.params,
+        qparams: Some(&trainer.qparams),
+        states: &trainer.states,
+        batch: &batch,
+        selection: selection.as_ref(),
+    };
+    let inputs = bind_inputs(&man, &ctx).unwrap();
+    let mut ws = efqat::exec::Workspace::new();
+    efqat::graph::force_backward_truncation(Some(true));
+    let on = bench(2, iters, || {
+        let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+        ws.give_values(outs);
+    });
+    efqat::graph::force_backward_truncation(Some(false));
+    let off = bench(2, iters, || {
+        let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+        ws.give_values(outs);
+    });
+    efqat::graph::force_backward_truncation(None);
+    (on.mean, off.mean, skipped)
+}
+
 /// Full data-parallel train step at `workers` workers: wall time plus the
 /// gradient-exchange payload (active and dense-equivalent bytes/step).
 fn time_workers(
@@ -161,6 +209,16 @@ fn main() {
     );
     // BENCH_table5.json: per model, full vs partial backward wall-time
     let mut report = BTreeMap::new();
+    let mut dt_table = Table::new(
+        "f32 dispatch (QAT backward, ms) and LWPN r25 backward truncation (step, ms)",
+        &["model", "bwd scalar", "bwd simd", "speedup", "trunc off", "trunc on", "layers skipped"],
+    );
+    // CI gates (bench-smoke): best dispatch speedup across models, and the
+    // summed LWPN-r25-truncated vs QAT step times (sums absorb the
+    // per-model noise of a --iters 3 smoke run)
+    let mut best_dispatch = 0.0f64;
+    let mut trunc_on_sum = 0.0f64;
+    let mut qat_sum = 0.0f64;
     for model in &models {
         let fwd = time_artifact(&session, &cfg, model, &format!("{model}_{bits}_fwd"), None, iters);
         let qat_name = format!("{model}_{bits}_train_r100");
@@ -194,17 +252,69 @@ fn main() {
             format!("{:.2}", lwpn * 1e3),
             "-".into(), "-".into(),
         ]);
+        // ---- f32 dispatch axis: the same QAT leg forced scalar -----------
+        // fwd is re-timed under the forced kernel so the bwd isolation
+        // (train − fwd) subtracts like from like
+        efqat::ops::simd::force_f32(Some(0));
+        let fwd_name = format!("{model}_{bits}_fwd");
+        let fwd_sc = time_artifact(&session, &cfg, model, &fwd_name, None, iters);
+        let qat_sc = time_artifact(&session, &cfg, model, &qat_name, None, iters);
+        efqat::ops::simd::force_f32(None);
+        let scalar_bwd = (qat_sc - fwd_sc).max(1e-9);
+        let speedup = scalar_bwd / bwd(qat);
+        best_dispatch = best_dispatch.max(speedup);
+
+        // ---- truncation axis: LWPN at the paper's r=0.25, on vs off ------
+        let (tr_on, tr_off, skipped) = time_lwpn_trunc(&session, &cfg, model, &bits, iters);
+        trunc_on_sum += tr_on;
+        qat_sum += qat;
+
+        dt_table.row(&[
+            model.clone(),
+            format!("{:.2}", scalar_bwd * 1e3),
+            format!("{:.2}", bwd(qat) * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", tr_off * 1e3),
+            format!("{:.2}", tr_on * 1e3),
+            skipped.to_string(),
+        ]);
+
         let entry: BTreeMap<String, Json> = [
             ("fwd_ms".to_string(), Json::Num(fwd * 1e3)),
             ("full_train_ms".to_string(), Json::Num(qat * 1e3)),
             ("partial_train_ms".to_string(), Json::Obj(modes)),
             ("bwd_speedup_r5".to_string(), Json::Num(bwd(qat) / bwd(r5_time))),
             ("bwd_speedup_lwpn".to_string(), Json::Num(bwd(qat) / bwd(lwpn))),
+            ("scalar_bwd_ms".to_string(), Json::Num(scalar_bwd * 1e3)),
+            ("dispatched_bwd_ms".to_string(), Json::Num(bwd(qat) * 1e3)),
+            ("dispatch_speedup".to_string(), Json::Num(speedup)),
+            ("lwpn_r25_trunc_on_ms".to_string(), Json::Num(tr_on * 1e3)),
+            ("lwpn_r25_trunc_off_ms".to_string(), Json::Num(tr_off * 1e3)),
+            ("bwd_layers_skipped".to_string(), Json::Num(skipped as f64)),
         ]
         .into_iter()
         .collect();
         report.insert(model.clone(), Json::Obj(entry));
     }
+    dt_table.print();
+
+    // ---- CI gates (bench-smoke runs this bench and fails on panic) -------
+    if efqat::ops::simd::kernels_f32().len() > 1 {
+        assert!(
+            best_dispatch >= 1.2,
+            "dispatch gate: best f32 SIMD backward speedup {best_dispatch:.2}x < 1.2x \
+             over the scalar oracle"
+        );
+    } else {
+        println!("dispatch gate skipped: only the scalar f32 kernel is registered on this host");
+    }
+    assert!(
+        trunc_on_sum < qat_sum,
+        "truncation gate: LWPN r=0.25 with backward truncation ({:.2} ms summed) \
+         not below the r=1.0 QAT step ({:.2} ms summed)",
+        trunc_on_sum * 1e3,
+        qat_sum * 1e3
+    );
     t.print();
     t.write_csv(std::path::Path::new("bench_out/table5_backward_runtime.csv")).unwrap();
 

@@ -37,6 +37,11 @@ pub struct StepRecord {
     /// gradient-exchange payload actually shipped this step (bytes; 0 on
     /// the single-trainer path)
     pub bytes_exchanged: u64,
+    /// freezable sites below the backward-truncation boundary this step
+    /// ([`crate::freeze::Selection::lowest_active_layer`]) — dX
+    /// propagation skipped for the layers owning them; 0 when the
+    /// truncation is off or nothing is frozen from the bottom
+    pub bwd_layers_skipped: usize,
     pub timing: StepTiming,
 }
 
@@ -102,19 +107,20 @@ impl MetricsLog {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "step,loss,correct,batch,active_frac,bytes_exchanged,bind_us,exec_us,optim_us,\
-             exchange_us,freeze_us"
+            "step,loss,correct,batch,active_frac,bytes_exchanged,bwd_layers_skipped,bind_us,\
+             exec_us,optim_us,exchange_us,freeze_us"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.step,
                 r.loss,
                 r.correct,
                 r.batch,
                 r.active_frac,
                 r.bytes_exchanged,
+                r.bwd_layers_skipped,
                 r.timing.bind.as_micros(),
                 r.timing.exec.as_micros(),
                 r.timing.optim.as_micros(),
@@ -138,6 +144,7 @@ mod tests {
             batch: 8,
             active_frac: 0.25,
             bytes_exchanged: 64,
+            bwd_layers_skipped: 1,
             timing: StepTiming {
                 bind: Duration::from_micros(10),
                 exec: Duration::from_micros(100),
@@ -171,6 +178,7 @@ mod tests {
         m.write_csv(&p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.contains("step,loss"));
+        assert!(s.contains("bwd_layers_skipped"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

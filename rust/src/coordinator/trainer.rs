@@ -154,6 +154,7 @@ pub fn pretrain_fp(
                 batch: batch.count * label_rows_per_example(man),
                 active_frac: 1.0,
                 bytes_exchanged: 0,
+                bwd_layers_skipped: 0,
                 timing,
             };
             ws.give_values(outs);
@@ -420,6 +421,14 @@ impl EfqatTrainer {
             (None, SelKind::None) => 0.0,
             _ => 1.0,
         };
+        // sites below the truncation boundary the executor just used —
+        // computed before the refresh below moves the selection
+        let bwd_layers_skipped = match &self.policy {
+            Some(p) if crate::graph::backward_truncation_enabled() => {
+                p.selection().lowest_active_layer(&p.sites).unwrap_or(0)
+            }
+            _ => 0,
+        };
         self.ws.give_values(outs);
 
         // ---- freezing-frequency bookkeeping -------------------------------
@@ -445,6 +454,7 @@ impl EfqatTrainer {
             batch: batch.count * label_rows_per_example(man),
             active_frac,
             bytes_exchanged: 0,
+            bwd_layers_skipped,
             timing,
         };
         self.step_no += 1;
@@ -611,6 +621,14 @@ impl DataParallelTrainer {
             (None, SelKind::None) => 0.0,
             _ => 1.0,
         };
+        // every shard binds the same flags, so the truncation boundary
+        // (and this metric) is identical across workers
+        let bwd_layers_skipped = match &self.inner.policy {
+            Some(p) if crate::graph::backward_truncation_enabled() => {
+                p.selection().lowest_active_layer(&p.sites).unwrap_or(0)
+            }
+            _ => 0,
+        };
         // recycle each shard's buffers into the workspace of the worker
         // that produced them (shard s ran on worker s mod nw)
         let nw = self.slots.len().min(shards).max(1);
@@ -641,6 +659,7 @@ impl DataParallelTrainer {
             batch: batch.count * label_rows_per_example(&self.inner.step.manifest),
             active_frac,
             bytes_exchanged: stats.active_bytes,
+            bwd_layers_skipped,
             timing,
         };
         self.inner.step_no += 1;

@@ -80,6 +80,17 @@ impl Selection {
         sites.iter().enumerate().map(|(si, s)| self.active_count(si, s)).collect()
     }
 
+    /// The lowest site index holding any active (gradient-receiving)
+    /// channel — the frozen-prefix backward-truncation boundary: the
+    /// executor stops propagating dX below the layer owning this site
+    /// ([`crate::graph`]), so the sites before it measure skipped
+    /// backward compute.  `None` when every site is frozen (the
+    /// executor then runs the full backward defensively).  Recomputed
+    /// from the live selection, so each freeze refresh moves it.
+    pub fn lowest_active_layer(&self, sites: &[Site]) -> Option<usize> {
+        sites.iter().enumerate().find(|&(si, s)| self.active_count(si, s) > 0).map(|(si, _)| si)
+    }
+
     /// Fraction of freezable-site weights currently receiving gradients
     /// (weighted by parameter count, so a wide unfrozen site counts for
     /// more than a narrow one).  This is the observable the exchange
@@ -435,6 +446,43 @@ mod tests {
         assert_eq!(sel.active_counts(&sites), vec![4, 0]);
         // site 0 holds 8 of the 24 weights
         assert!((sel.active_fraction(&sites) - 8.0 / 24.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lowest_active_layer_is_none_when_everything_is_frozen() {
+        let sites = mk_sites(&[(4, 2), (8, 2)], 0.5);
+        let sel = Selection { channels: vec![Vec::new(), Vec::new()], flags: vec![false, false] };
+        assert_eq!(sel.lowest_active_layer(&sites), None);
+    }
+
+    #[test]
+    fn lowest_active_layer_is_zero_when_everything_is_active() {
+        let sites = mk_sites(&[(4, 2), (8, 2)], 0.5);
+        // channel-wise shape (CWPL/CWPN)
+        let sel = Selection { channels: vec![vec![1], vec![0, 2]], flags: vec![true, true] };
+        assert_eq!(sel.lowest_active_layer(&sites), Some(0));
+        // flag-gated shape (LWPN)
+        let sel = Selection { channels: vec![Vec::new(), Vec::new()], flags: vec![true, true] };
+        assert_eq!(sel.lowest_active_layer(&sites), Some(0));
+    }
+
+    #[test]
+    fn lowest_active_layer_moves_with_the_freeze_refresh() {
+        // LWPN over two equal-size sites at r=0.5: only the more
+        // important one unfreezes.  Site 0 wins at first; after its
+        // weights decay below site 1's, a refresh must move the
+        // truncation boundary from layer 0 to layer 1.
+        let mut w0 = Tensor::new(vec![2, 4], vec![5.0; 8]).unwrap();
+        let w1 = Tensor::new(vec![2, 4], vec![1.0; 8]).unwrap();
+        let sites = mk_sites(&[(2, 4), (2, 4)], 0.5);
+        let mut p = FreezePolicy::new(Mode::Lwpn, 0.5, 1, sites, &[&w0, &w1]);
+        assert_eq!(p.selection().lowest_active_layer(&p.sites), Some(0));
+        for v in w0.data.iter_mut() {
+            *v = 0.1;
+        }
+        p.refresh(&[&w0, &w1]);
+        assert_eq!(p.selection().flags, vec![false, true]);
+        assert_eq!(p.selection().lowest_active_layer(&p.sites), Some(1));
     }
 
     #[test]

@@ -23,7 +23,13 @@
 //! / gathered rows / layer flag / none) and applies the STE/LSQ
 //! quantizer backward — and every layer type inherits it: a linear's
 //! rows, a conv's output channels (matmul rows after im2col), and each
-//! attention projection all flow through the same code path.
+//! attention projection all flow through the same code path.  Quantized
+//! train steps additionally truncate the backward below the lowest
+//! layer holding an active site (`EFQAT_BWD_TRUNC`, default on): the
+//! frozen prefix skips its dX propagation outright and emits the zero
+//! gradients the masked-update contract already prescribes —
+//! bit-identical for every gradient still computed, and LWPN's frozen
+//! prefix becomes skipped compute instead of wasted work.
 //!
 //! Training-time execution here *simulates* quantization (fake-quant in
 //! f32); the declaration is also the input of the int8 serving lowering
@@ -32,6 +38,8 @@
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use crate::backend::Value;
 use crate::error::{anyhow, bail, Result};
@@ -81,6 +89,50 @@ pub struct StepId {
     pub kind: StepKind,
     pub w_bits: u32,
     pub a_bits: u32,
+}
+
+// ---------------------------------------------------------------------------
+// Frozen-prefix backward truncation (process-wide toggle)
+// ---------------------------------------------------------------------------
+
+/// Tri-state override for the frozen-prefix backward truncation:
+/// `0` = forced off, `1` = forced on, [`TRUNC_UNFORCED`] = follow the
+/// `EFQAT_BWD_TRUNC` environment variable (default on).
+static BWD_TRUNC_FORCE: AtomicUsize = AtomicUsize::new(TRUNC_UNFORCED);
+const TRUNC_UNFORCED: usize = usize::MAX;
+static BWD_TRUNC_ENV: OnceLock<bool> = OnceLock::new();
+
+/// Force the frozen-prefix backward truncation on or off for the whole
+/// process, overriding `EFQAT_BWD_TRUNC`; `None` restores env-driven
+/// behavior.  A test/bench hook, mirroring
+/// [`crate::ops::simd::force_f32`]: truncation is bit-identical for
+/// every gradient still computed, so production code never needs this —
+/// benches use it to time the truncated-vs-full legs and tests to
+/// assert the identity.
+pub fn force_backward_truncation(on: Option<bool>) {
+    let v = match on {
+        Some(false) => 0,
+        Some(true) => 1,
+        None => TRUNC_UNFORCED,
+    };
+    BWD_TRUNC_FORCE.store(v, Ordering::SeqCst);
+}
+
+/// Whether quantized train steps skip the dX propagation below the
+/// lowest active weight site.  `EFQAT_BWD_TRUNC=off` (or `0`) disables;
+/// anything else — including unset — enables.  Public so the trainer's
+/// `bwd_layers_skipped` metric can mirror what the executor will do.
+pub fn backward_truncation_enabled() -> bool {
+    match BWD_TRUNC_FORCE.load(Ordering::SeqCst) {
+        0 => false,
+        1 => true,
+        _ => *BWD_TRUNC_ENV.get_or_init(|| {
+            !matches!(
+                std::env::var("EFQAT_BWD_TRUNC").ok().as_deref().map(str::trim),
+                Some("off") | Some("0")
+            )
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1572,20 +1624,110 @@ impl<'p, 'v, 'w> Run<'p, 'v, 'w> {
         })
     }
 
+    // ---- frozen-prefix truncation -----------------------------------------
+
+    /// Whether a site's weight-gradient selection is active at runtime.
+    /// Only LWPN's `Flag(false)` counts as frozen: `All`/`Idx`/`None`
+    /// sites keep their full backward (CWPL/CWPN gather rows and r=0
+    /// still trains activation qparams through this site's `dsx`/`dzx`),
+    /// so truncating below them would change computed gradients.
+    fn plan_sel_active(&self, sel: &PlanSel) -> Result<bool> {
+        Ok(match sel {
+            PlanSel::Flag(pos) => self.i32_in(*pos)?.data[0] > 0,
+            _ => true,
+        })
+    }
+
+    /// Whether any weight site inside this (possibly nested) layer is
+    /// active this step.  Granularity is the top-level plan layer: a
+    /// residual block with one active projection runs its whole
+    /// backward.
+    fn layer_has_active_site(&self, plan: &PlanLayer) -> Result<bool> {
+        Ok(match plan {
+            PlanLayer::Linear(p) => self.plan_sel_active(&p.sel)?,
+            PlanLayer::Conv(pc) => self.plan_sel_active(&pc.lin.sel)?,
+            PlanLayer::Attn(pa) => {
+                let mut any = false;
+                for p in &pa.proj {
+                    any |= self.plan_sel_active(&p.sel)?;
+                }
+                any
+            }
+            PlanLayer::Residual(inner) => {
+                let mut any = false;
+                for l in inner {
+                    any |= self.layer_has_active_site(l)?;
+                }
+                any
+            }
+            _ => false,
+        })
+    }
+
+    /// The first top-level layer index the backward must reach: the
+    /// lowest layer holding any active weight site.  Everything below it
+    /// is frozen prefix — dX propagation there feeds only zeroed (or
+    /// absent) gradients, so `backward_seq_from` skips it outright.
+    ///
+    /// Returns 0 (full backward) on FP training (embeddings train, so
+    /// the backward must reach the bottom), when the truncation is
+    /// disabled, or — defensively — when no site is active at all.
+    fn bwd_start(&self) -> Result<usize> {
+        match self.step.id.kind {
+            StepKind::Train(TrainSel::Fp) => return Ok(0),
+            StepKind::Train(_) => {}
+            _ => return Ok(0),
+        }
+        if !backward_truncation_enabled() {
+            return Ok(0);
+        }
+        for (i, plan) in self.step.plan.layers.iter().enumerate() {
+            if self.layer_has_active_site(plan)? {
+                return Ok(i);
+            }
+        }
+        Ok(0)
+    }
+
     // ---- backward ---------------------------------------------------------
 
     fn backward_seq(
         &mut self,
         plans: &'p [PlanLayer],
         caches: &mut Vec<Cache>,
+        dy: Tensor,
+    ) -> Result<Tensor> {
+        self.backward_seq_from(plans, caches, dy, 0)
+    }
+
+    /// Backward over `plans[start..]`; the frozen prefix `plans[..start]`
+    /// skips the dX propagation entirely — each skipped layer recycles
+    /// its cache and emits zero gradients of the manifest shapes
+    /// ([`Run::skip_layer_backward`]).  Bit-identical to `start = 0` for
+    /// every gradient still computed; the zeroed prefix gradients apply
+    /// as no-op masked updates (the LWPN contract already zero-fills
+    /// frozen `dW`, this extends it to the prefix's bias/norm/qparam
+    /// slots).  When `start > 0` the returned tensor is the dX at layer
+    /// `start`, not the model input gradient.
+    fn backward_seq_from(
+        &mut self,
+        plans: &'p [PlanLayer],
+        caches: &mut Vec<Cache>,
         mut dy: Tensor,
+        start: usize,
     ) -> Result<Tensor> {
         debug_assert_eq!(plans.len(), caches.len());
-        for plan in plans.iter().rev() {
+        for plan in plans[start..].iter().rev() {
             let cache = caches.pop().ok_or_else(|| {
                 anyhow!("{}: cache underflow in backward", self.step.man.name)
             })?;
             dy = self.backward_layer(plan, cache, dy)?;
+        }
+        for plan in plans[..start].iter().rev() {
+            let cache = caches.pop().ok_or_else(|| {
+                anyhow!("{}: cache underflow in backward", self.step.man.name)
+            })?;
+            self.skip_layer_backward(plan, cache)?;
         }
         Ok(dy)
     }
@@ -1794,6 +1936,105 @@ impl<'p, 'v, 'w> Run<'p, 'v, 'w> {
         }
     }
 
+    /// One layer of the skipped frozen prefix: recycle the cache
+    /// buffers exactly as [`Run::drop_caches`] would and emit zero
+    /// gradients for every output slot the manifest declares — the ABI
+    /// is selection-invariant, so skipped layers still owe full-shape
+    /// values (`take_f32` zero-fills, making them the zero gradients of
+    /// the masked-update contract).  No dX is computed anywhere in here;
+    /// that is the saving.
+    fn skip_layer_backward(&mut self, plan: &'p PlanLayer, cache: Cache) -> Result<()> {
+        match (plan, cache) {
+            (PlanLayer::Flatten, Cache::Flatten { shape }) => self.ws.give_shape(shape),
+            (PlanLayer::Linear(p), Cache::Linear { lin, x_raw, x_shape }) => {
+                self.skip_lin(p)?;
+                self.give_lin(lin);
+                self.ws.give_f32(x_raw);
+                self.ws.give_shape(x_shape);
+            }
+            (PlanLayer::Conv(pc), Cache::Conv(c)) => {
+                self.skip_lin(&pc.lin)?;
+                self.ws.give_f32(c.x_raw);
+                self.ws.give_f32(c.cols);
+                if let Some(v) = c.wh {
+                    self.ws.give_f32(v);
+                }
+            }
+            (PlanLayer::Relu, Cache::Relu { pre }) => self.ws.give_f32(pre),
+            // embeds only have grads on FP steps, which never truncate
+            (PlanLayer::Pool, Cache::Pool { .. }) | (PlanLayer::Embed(_), Cache::Embed) => {}
+            (PlanLayer::Norm(pn), Cache::Norm { xhat, inv, .. }) => {
+                self.ws.give_f32(xhat);
+                self.ws.give_f32(inv);
+                let dg = self.ws.take_f32(pn.d);
+                let t = self.ws.tensor(&[pn.d], dg);
+                self.emit_f32(pn.dg, Some(t));
+                let db = self.ws.take_f32(pn.d);
+                let t = self.ws.tensor(&[pn.d], db);
+                self.emit_f32(pn.db, Some(t));
+            }
+            (PlanLayer::Attn(pa), Cache::Attn(ac)) => {
+                let AttnCache { x, om, q_lin, k_lin, v_lin, o_lin, qy, ky, vy, p, .. } = ac;
+                for v in [x, om, qy, ky, vy, p] {
+                    self.ws.give_f32(v);
+                }
+                for lin in [q_lin, k_lin, v_lin, o_lin] {
+                    self.give_lin(lin);
+                }
+                for p in &pa.proj {
+                    self.skip_lin(p)?;
+                }
+            }
+            (PlanLayer::Residual(inner), Cache::Residual(mut sub)) => {
+                // below the boundary no nested site is active either
+                // (layer_has_active_site recursed), so skip the whole tree
+                debug_assert_eq!(inner.len(), sub.len());
+                for plan in inner.iter().rev() {
+                    let cache = sub.pop().ok_or_else(|| {
+                        anyhow!("{}: cache underflow in skipped backward", self.step.man.name)
+                    })?;
+                    self.skip_layer_backward(plan, cache)?;
+                }
+                self.step.give_caches(sub);
+            }
+            _ => bail!("{}: layer/cache mismatch in skipped backward", self.step.man.name),
+        }
+        Ok(())
+    }
+
+    /// Emit the zero gradients a skipped quantized-linear site still
+    /// owes the manifest.  Every site below the truncation boundary
+    /// resolved to `Flag(false)` (anything else counts as active in
+    /// [`Run::bwd_start`]), so the declared `dW` slot — when present —
+    /// carries the full weight shape, never gathered rows.
+    fn skip_lin(&mut self, p: &PlanLin) -> Result<()> {
+        debug_assert!(matches!(p.sel, PlanSel::Flag(_)) || (p.dw.is_none() && p.dsw.is_none()));
+        if let Some(slot) = p.db {
+            let db = self.ws.take_f32(p.c_out);
+            let t = self.ws.tensor(&[p.c_out], db);
+            self.emit_f32(Some(slot), Some(t));
+        }
+        if p.dw.is_some() {
+            let w = self.f32_in(p.w)?;
+            let shape = self.ws.take_shape(&w.shape);
+            let data = self.ws.take_f32(w.data.len());
+            self.emit_f32(p.dw, Some(Tensor { shape, data }));
+        }
+        if p.dsw.is_some() {
+            let ds = self.ws.take_f32(p.c_out);
+            self.emit_dsw(p.dsw, Some(ds));
+        }
+        if p.dsx.is_some() {
+            let t = self.ws.scalar(0.0);
+            self.emit_f32(p.dsx, Some(t));
+        }
+        if p.dzx.is_some() {
+            let t = self.ws.scalar(0.0);
+            self.emit_f32(p.dzx, Some(t));
+        }
+        Ok(())
+    }
+
     /// Recycle a forward-only cache tree (fwd/calib steps, error paths).
     fn drop_caches(&mut self, caches: &mut Vec<Cache>) {
         while let Some(cache) = caches.pop() {
@@ -1877,13 +2118,14 @@ impl<'p, 'v, 'w> Run<'p, 'v, 'w> {
 
     fn run_train(&mut self) -> Result<()> {
         let step = self.step;
+        let start = self.bwd_start()?;
         let mut caches = step.take_caches();
         let logits = self.forward(&mut caches)?;
         let (loss, correct, dl_data) = self.loss_and_correct(&logits)?;
         let Tensor { shape: dl_shape, data: logits_data } = logits;
         self.ws.give_f32(logits_data);
         let dl = Tensor { shape: dl_shape, data: dl_data };
-        let dx = self.backward_seq(&step.plan.layers, &mut caches, dl)?;
+        let dx = self.backward_seq_from(&step.plan.layers, &mut caches, dl, start)?;
         self.ws.give_tensor(dx);
         step.give_caches(caches);
         self.emit_metrics(loss, correct);

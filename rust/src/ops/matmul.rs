@@ -24,6 +24,16 @@
 //! process; benches and CI set it for reproducible numbers across
 //! machines).
 //!
+//! The innermost loops — the forward block dot and the backward fused
+//! `y += a·x` — come from the runtime-dispatched f32 SIMD registry
+//! ([`crate::ops::simd::active_f32`], governed by `EFQAT_SIMD` like the
+//! int8 serving GEMM).  The kernel is resolved **once per GEMM call,
+//! before the row split**, so every worker thread of one GEMM runs the
+//! same kernel even if a test re-forces dispatch concurrently.  The
+//! scalar entry reproduces the pre-dispatch loops bit-for-bit; the
+//! vector entries are tolerance-equal (FMA) but individually
+//! deterministic — see the family contract in [`crate::ops::simd`].
+//!
 //! The process-wide ceiling can additionally be lowered *per calling
 //! thread* via [`set_thread_cap`]: the data-parallel trainer splits
 //! `EFQAT_THREADS` across its shard workers so `W` concurrent shards do
@@ -188,6 +198,8 @@ pub fn linear_fwd_into(
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), n * k);
     debug_assert_eq!(y.len(), m * n);
+    // resolve the dispatched kernel once, outside the worker threads
+    let kf = crate::ops::simd::active_f32();
     par_rows(y, m, n, k * n, |r0, rows| {
         for (ri, yr) in rows.chunks_mut(n).enumerate() {
             let xr = &x[(r0 + ri) * k..(r0 + ri + 1) * k];
@@ -200,12 +212,7 @@ pub fn linear_fwd_into(
                 let k1 = (k0 + KC).min(k);
                 let xb = &xr[k0..k1];
                 for (o, yo) in yr.iter_mut().enumerate() {
-                    let wb = &w[o * k + k0..o * k + k1];
-                    let mut acc = 0.0f32;
-                    for i in 0..xb.len() {
-                        acc += xb[i] * wb[i];
-                    }
-                    *yo += acc;
+                    *yo += (kf.dot)(xb, &w[o * k + k0..o * k + k1]);
                 }
                 k0 = k1;
             }
@@ -234,18 +241,18 @@ pub fn matmul_dy_w_into(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize, dx:
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(w.len(), n * k);
     debug_assert_eq!(dx.len(), m * k);
+    let kf = crate::ops::simd::active_f32();
     par_rows(dx, m, k, n * k, |r0, rows| {
         for (ri, dxr) in rows.chunks_mut(k).enumerate() {
             dxr.fill(0.0);
             let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
             for (o, &g) in dyr.iter().enumerate() {
+                // relu-gated rows are mostly zero — skip them before the
+                // kernel call, identically under every dispatch choice
                 if g == 0.0 {
                     continue;
                 }
-                let wr = &w[o * k..(o + 1) * k];
-                for i in 0..k {
-                    dxr[i] += g * wr[i];
-                }
+                (kf.axpy)(g, &w[o * k..(o + 1) * k], dxr);
             }
         }
     });
@@ -264,6 +271,7 @@ pub fn matmul_dyt_x_into(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize, dw
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(dw.len(), n * k);
+    let kf = crate::ops::simd::active_f32();
     par_rows(dw, n, k, m * k, |o0, rows| {
         rows.fill(0.0);
         for b in 0..m {
@@ -273,9 +281,7 @@ pub fn matmul_dyt_x_into(dy: &[f32], x: &[f32], m: usize, n: usize, k: usize, dw
                 if g == 0.0 {
                     continue;
                 }
-                for i in 0..k {
-                    dwr[i] += g * xr[i];
-                }
+                (kf.axpy)(g, xr, dwr);
             }
         }
     });
@@ -304,6 +310,7 @@ pub fn partial_dw_into(
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(dw.len(), idx.len() * k);
+    let kf = crate::ops::simd::active_f32();
     par_rows(dw, idx.len(), k, m * k, |r0, rows| {
         rows.fill(0.0);
         for b in 0..m {
@@ -313,9 +320,7 @@ pub fn partial_dw_into(
                 if g == 0.0 {
                     continue;
                 }
-                for i in 0..k {
-                    dwr[i] += g * xr[i];
-                }
+                (kf.axpy)(g, xr, dwr);
             }
         }
     });

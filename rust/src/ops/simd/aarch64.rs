@@ -1,5 +1,6 @@
-//! NEON `u8×i8→i32` block dots for aarch64: a baseline widening
-//! multiply-accumulate kernel plus an SDOT kernel on `dotprod` CPUs.
+//! NEON kernels for aarch64: `u8×i8→i32` block dots (a baseline
+//! widening multiply-accumulate kernel plus an SDOT kernel on `dotprod`
+//! CPUs) and an FMA `f32` kernel for the training GEMMs.
 //!
 //! **`neon-mlal`** mirrors the AVX2 widen-then-multiply shape with core
 //! NEON only (available on every aarch64 CPU): `vmovl_u8` zero-extends
@@ -24,8 +25,17 @@
 //! `|Σ x·w| ≤ 255·127·k` bound), so the reconstruction is exact and
 //! bit-identical to the scalar oracle.  Tails (`k % lane`) run the
 //! scalar loop in the raw domain.
+//!
+//! **`neon-fma`** vectorizes the f32 training GEMM inner loops with
+//! `vfmaq_f32`: the dot runs two independent 4-lane accumulator chains
+//! (8 elements per iteration) with a fixed `vaddvq_f32` reduction, and
+//! the axpy fuses `y += a·x` lane-wise.  FMA contraction makes the f32
+//! kernel tolerance-equal — not bit-equal — to the scalar oracle, with
+//! a fixed accumulation order so it is individually deterministic (the
+//! f32 family contract in [`crate::ops::simd`]).  Tails run the scalar
+//! loops.
 
-use crate::ops::simd::QGemmKernel;
+use crate::ops::simd::{F32GemmKernel, QGemmKernel};
 
 #[cfg(target_arch = "aarch64")]
 use std::arch::aarch64::*;
@@ -38,6 +48,10 @@ pub(super) const NEON_MLAL: QGemmKernel =
 /// `is_aarch64_feature_detected!("dotprod")` holds.
 pub(super) const NEON_DOTPROD: QGemmKernel =
     QGemmKernel { name: "neon-dotprod", lanes: 16, dot: dot_dotprod };
+
+/// Core-NEON FMA f32 kernel — registered on every aarch64 CPU.
+pub(super) const NEON_FMA: F32GemmKernel =
+    F32GemmKernel { name: "neon-fma", lanes: 4, dot: dot_f32, axpy: axpy_f32 };
 
 fn dot_mlal(x: &[u8], w: &[i8]) -> i32 {
     debug_assert_eq!(x.len(), w.len());
@@ -97,4 +111,57 @@ unsafe fn dot_dotprod_impl(x: &[u8], w: &[i8]) -> i32 {
         i += 1;
     }
     a
+}
+
+fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    // SAFETY: only reachable through the dispatch registry, which
+    // registers this kernel after `is_aarch64_feature_detected!("neon")`.
+    unsafe { dot_f32_impl(x, w) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_f32_impl(x: &[f32], w: &[f32]) -> f32 {
+    let n = x.len();
+    // two independent accumulator chains hide the FMA latency
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(x.as_ptr().add(i)), vld1q_f32(w.as_ptr().add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(x.as_ptr().add(i + 4)), vld1q_f32(w.as_ptr().add(i + 4)));
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(x.as_ptr().add(i)), vld1q_f32(w.as_ptr().add(i)));
+        i += 4;
+    }
+    let mut a = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        a += x[i] * w[i];
+        i += 1;
+    }
+    a
+}
+
+fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above — registry-gated on NEON detection.
+    unsafe { axpy_f32_impl(a, x, y) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f32_impl(a: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let av = vdupq_n_f32(a);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let yv = vfmaq_f32(vld1q_f32(y.as_ptr().add(i)), av, vld1q_f32(x.as_ptr().add(i)));
+        vst1q_f32(y.as_mut_ptr().add(i), yv);
+        i += 4;
+    }
+    while i < n {
+        y[i] += a * x[i];
+        i += 1;
+    }
 }

@@ -1,10 +1,11 @@
-//! SIMD micro-kernels for the int8 serving GEMM, behind runtime CPU
-//! dispatch.
+//! SIMD micro-kernels for the int8 serving GEMM *and* the f32 training
+//! GEMMs, behind runtime CPU dispatch.
 //!
-//! The hot loop of [`crate::ops::qmatmul::qlinear_fwd_into`] (and the
-//! im2col-fed [`crate::ops::qconv`], which funnels into it) is a block
-//! dot product over `u8` activation codes × `i8` weight codes.  This
-//! module owns that inner loop as a table of interchangeable kernels:
+//! **Int8 family.**  The hot loop of
+//! [`crate::ops::qmatmul::qlinear_fwd_into`] (and the im2col-fed
+//! [`crate::ops::qconv`], which funnels into it) is a block dot product
+//! over `u8` activation codes × `i8` weight codes.  This module owns
+//! that inner loop as a table of interchangeable kernels:
 //!
 //! | kernel         | arch            | lanes | technique |
 //! |----------------|-----------------|-------|-----------|
@@ -13,7 +14,7 @@
 //! | `neon-mlal`    | aarch64         | 8     | `vmovl` widen → `vmlal_s16` → i32 lanes |
 //! | `neon-dotprod` | aarch64 + dotprod | 16  | `sdot` over `x−128` plus a `128·Σw` reconstruction |
 //!
-//! Every kernel computes the *exact* integer sum — no saturating
+//! Every int8 kernel computes the *exact* integer sum — no saturating
 //! intermediates (the `_mm256_maddubs_epi16` i16 path would clip at
 //! `2·255·127 > i16::MAX`, so no kernel uses it) and i32 lane
 //! accumulation that is exact up to the
@@ -24,15 +25,41 @@
 //! `tests/simd_parity.rs` holds each kernel to that standard over an
 //! adversarial shape/value grid.
 //!
+//! **F32 family.**  The four f32 GEMM contractions in
+//! [`crate::ops::matmul`] (`linear_fwd_into`, `matmul_dy_w_into`,
+//! `matmul_dyt_x_into`, `partial_dw_into`) — the train/eval hot path,
+//! inherited by the im2col conv and the attention projections — draw
+//! their inner loops from a parallel table of [`F32GemmKernel`]s, each
+//! providing a block `dot` (forward) and a fused `axpy` (the three
+//! backward contractions):
+//!
+//! | kernel     | arch              | lanes | technique |
+//! |------------|-------------------|-------|-----------|
+//! | `scalar`   | any               | 1     | the reference loops, retained verbatim |
+//! | `avx2-fma` | x86_64 + avx2+fma | 8     | `_mm256_fmadd_ps`, two accumulator chains |
+//! | `neon-fma` | aarch64           | 4     | `vfmaq_f32`, two accumulator chains |
+//!
+//! **F32 determinism contract.**  Unlike the int8 family, the f32
+//! kernels are *not* bit-identical to each other: FMA contracts the
+//! multiply-add into one rounding, and the vector dot reassociates the
+//! sum into per-lane partials.  Cross-kernel results are
+//! tolerance-equal (gradient-check scale, ≤ 1e-5 — held to that bound
+//! by `tests/simd_parity.rs`), while **each kernel individually is
+//! deterministic**: fixed accumulation order, no data-dependent
+//! shortcuts.  Every bit-identity contract in the repo — data-parallel
+//! training at any worker count, workspace reuse, serve replay —
+//! therefore holds *per kernel choice*, and is tested that way.
+//!
 //! Dispatch is resolved once per process (like `EFQAT_THREADS`): the
-//! registry probes `is_x86_feature_detected!` /
-//! `is_aarch64_feature_detected!` at first use, and the `EFQAT_SIMD`
-//! environment variable picks the entry — `auto` (default: fastest
-//! available), `off` (the scalar oracle; `scalar` is accepted too),
-//! `avx2`, or `neon`.  A value naming a kernel this CPU cannot run
-//! falls back to `off`, and garbage falls back to `auto`, mirroring the
-//! defensive `EFQAT_THREADS` parse.  Tests and benches that need to
-//! compare kernels *within* one process bypass the env with [`force`]:
+//! registries probe `is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!` at first use, and the single
+//! `EFQAT_SIMD` environment variable picks the entry in *both* tables —
+//! `auto` (default: fastest available), `off` (the scalar oracle;
+//! `scalar` is accepted too), `avx2`, or `neon`.  A value naming a
+//! kernel this CPU cannot run falls back to `off`, and garbage falls
+//! back to `auto`, mirroring the defensive `EFQAT_THREADS` parse.
+//! Tests and benches that need to compare kernels *within* one process
+//! bypass the env with [`force`] (int8) / [`force_f32`] (f32):
 //!
 //! ```
 //! use efqat::ops::simd;
@@ -42,11 +69,16 @@
 //! let y = efqat::ops::qmatmul::qlinear_fwd(&[1, 2], &[3, 4], &[7], 0, &[1.0], None, 1, 2, 1);
 //! assert_eq!(y, vec![11.0]);
 //! simd::force(None); // back to EFQAT_SIMD / auto dispatch
+//!
+//! simd::force_f32(Some(0)); // f32 table leads with the same oracle
+//! assert_eq!(simd::active_f32().name, "scalar");
+//! simd::force_f32(None);
 //! ```
 //!
 //! Kernels are plain `fn` pointers over borrowed slices: calling one
-//! allocates nothing, so the serving path's zero-allocation contract
-//! (`tests/workspace_alloc.rs`) holds under every dispatch choice.
+//! allocates nothing, so the zero-allocation contracts for both the
+//! serving path and the train step (`tests/workspace_alloc.rs`) hold
+//! under every dispatch choice.
 
 #![warn(missing_docs)]
 
@@ -77,11 +109,40 @@ pub struct QGemmKernel {
     pub dot: DotFn,
 }
 
-/// Sentinel for "no forced kernel" in [`FORCED`].
+/// A block dot product over equal-length f32 slices: `Σ_i x[i]·w[i]`.
+/// Deterministic per kernel; tolerance-equal across kernels (FMA).
+pub type DotF32Fn = fn(&[f32], &[f32]) -> f32;
+
+/// Fused scale-accumulate over equal-length f32 slices:
+/// `y[i] += a·x[i]` for every `i`.  The backward contractions
+/// ([`crate::ops::matmul::matmul_dy_w_into`] and friends) are built
+/// from this row primitive.
+pub type AxpyF32Fn = fn(f32, &[f32], &mut [f32]);
+
+/// One entry of the f32 GEMM kernel table.
+#[derive(Clone, Copy)]
+pub struct F32GemmKernel {
+    /// Stable kernel name (`scalar`, `avx2-fma`, `neon-fma`) — matched
+    /// by `EFQAT_SIMD` family prefix and printed by diagnostics.
+    pub name: &'static str,
+    /// SIMD lane width in f32 elements (1 for the scalar oracle).
+    pub lanes: usize,
+    /// Block dot product — the forward GEMM inner loop.
+    pub dot: DotF32Fn,
+    /// Fused `y += a·x` — the backward GEMM inner loop.
+    pub axpy: AxpyF32Fn,
+}
+
+/// Sentinel for "no forced kernel" in [`FORCED`] / [`FORCED_F32`].
 const UNFORCED: usize = usize::MAX;
 
-/// Test/bench override, set through [`force`].
+/// Test/bench override for the int8 table, set through [`force`].
 static FORCED: AtomicUsize = AtomicUsize::new(UNFORCED);
+
+/// Test/bench override for the f32 table, set through [`force_f32`].
+/// Separate from [`FORCED`]: the two tables differ in length on most
+/// CPUs, so one index cannot safely address both.
+static FORCED_F32: AtomicUsize = AtomicUsize::new(UNFORCED);
 
 /// The kernels this CPU can run, probed once per process.  Index 0 is
 /// always the scalar oracle; entries are ordered slowest → fastest, so
@@ -109,11 +170,38 @@ pub fn kernels() -> &'static [QGemmKernel] {
         .as_slice()
 }
 
-/// Resolve an `EFQAT_SIMD` value against a kernel table (index into
-/// it).  Pure so the selection rules are unit-testable on any machine.
-fn parse_choice(v: Option<&str>, ks: &[QGemmKernel]) -> usize {
-    let auto = ks.len() - 1;
-    let family = |prefix: &str| ks.iter().rposition(|k| k.name.starts_with(prefix)).unwrap_or(0);
+/// The f32 kernels this CPU can run, probed once per process.  Index 0
+/// is always the scalar oracle; entries are ordered slowest → fastest,
+/// so `auto` dispatch is the last entry.  Separate table from
+/// [`kernels`]: the int8 and f32 families have different feature
+/// requirements (`avx2-fma` also needs `fma`).
+pub fn kernels_f32() -> &'static [F32GemmKernel] {
+    static REGISTRY: OnceLock<Vec<F32GemmKernel>> = OnceLock::new();
+    REGISTRY
+        .get_or_init(|| {
+            let mut v = vec![scalar::KERNEL_F32];
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                v.push(x86::AVX2_FMA);
+            }
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                v.push(aarch64::NEON_FMA);
+            }
+            v
+        })
+        .as_slice()
+}
+
+/// Resolve an `EFQAT_SIMD` value against a kernel-name table (index
+/// into it).  Shared by the int8 and f32 registries — family prefixes
+/// (`avx2`, `neon`) match `avx2-fma` / `neon-mlal` / `neon-dotprod`
+/// alike.  Pure so the selection rules are unit-testable anywhere.
+fn parse_choice(v: Option<&str>, names: &[&str]) -> usize {
+    let auto = names.len() - 1;
+    let family = |prefix: &str| names.iter().rposition(|n| n.starts_with(prefix)).unwrap_or(0);
     match v.map(str::trim) {
         Some(s) if s.eq_ignore_ascii_case("off") || s.eq_ignore_ascii_case("scalar") => 0,
         Some(s) if s.eq_ignore_ascii_case("avx2") => family("avx2"),
@@ -123,10 +211,25 @@ fn parse_choice(v: Option<&str>, ks: &[QGemmKernel]) -> usize {
     }
 }
 
-/// The `EFQAT_SIMD`-selected kernel index, resolved once per process.
+/// The `EFQAT_SIMD`-selected int8 kernel index, resolved once per
+/// process.
 fn env_choice() -> usize {
     static IDX: OnceLock<usize> = OnceLock::new();
-    *IDX.get_or_init(|| parse_choice(std::env::var("EFQAT_SIMD").ok().as_deref(), kernels()))
+    *IDX.get_or_init(|| {
+        let names: Vec<&str> = kernels().iter().map(|k| k.name).collect();
+        parse_choice(std::env::var("EFQAT_SIMD").ok().as_deref(), &names)
+    })
+}
+
+/// The `EFQAT_SIMD`-selected f32 kernel index, resolved once per
+/// process against the f32 table (its length differs from the int8
+/// one, so the indices are not interchangeable).
+fn env_choice_f32() -> usize {
+    static IDX: OnceLock<usize> = OnceLock::new();
+    *IDX.get_or_init(|| {
+        let names: Vec<&str> = kernels_f32().iter().map(|k| k.name).collect();
+        parse_choice(std::env::var("EFQAT_SIMD").ok().as_deref(), &names)
+    })
 }
 
 /// The kernel the int8 GEMM dispatches to right now: the [`force`]d
@@ -135,6 +238,17 @@ pub fn active() -> &'static QGemmKernel {
     let ks = kernels();
     let f = FORCED.load(Ordering::SeqCst);
     let i = if f < ks.len() { f } else { env_choice() };
+    &ks[i]
+}
+
+/// The kernel the f32 GEMMs dispatch to right now: the [`force_f32`]d
+/// entry if one is set, else the `EFQAT_SIMD`/auto choice.  Resolved
+/// once per GEMM call, outside the worker threads, so a concurrent
+/// re-force cannot split one GEMM across kernels.
+pub fn active_f32() -> &'static F32GemmKernel {
+    let ks = kernels_f32();
+    let f = FORCED_F32.load(Ordering::SeqCst);
+    let i = if f < ks.len() { f } else { env_choice_f32() };
     &ks[i]
 }
 
@@ -155,16 +269,24 @@ pub fn force(idx: Option<usize>) {
     FORCED.store(v, Ordering::SeqCst);
 }
 
+/// Force f32 dispatch to [`kernels_f32`]`()[idx]` (process-wide), or
+/// restore the `EFQAT_SIMD`/auto choice with `None`.  Mirrors [`force`]
+/// for the f32 table; panics on an out-of-range index.
+pub fn force_f32(idx: Option<usize>) {
+    let v = match idx {
+        Some(i) => {
+            let n = kernels_f32().len();
+            assert!(i < n, "simd::force_f32({i}): only {n} kernels");
+            i
+        }
+        None => UNFORCED,
+    };
+    FORCED_F32.store(v, Ordering::SeqCst);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn fake(names: &[&'static str]) -> Vec<QGemmKernel> {
-        fn nop(_: &[u8], _: &[i8]) -> i32 {
-            0
-        }
-        names.iter().map(|&n| QGemmKernel { name: n, lanes: 1, dot: nop }).collect()
-    }
 
     #[test]
     fn registry_always_leads_with_the_scalar_oracle() {
@@ -178,8 +300,19 @@ mod tests {
     }
 
     #[test]
+    fn f32_registry_always_leads_with_the_scalar_oracle() {
+        let ks = kernels_f32();
+        assert!(!ks.is_empty());
+        assert_eq!(ks[0].name, "scalar");
+        assert_eq!(ks[0].lanes, 1);
+        let mut names: Vec<_> = ks.iter().map(|k| k.name).collect();
+        names.dedup();
+        assert_eq!(names.len(), ks.len(), "duplicate f32 kernel names: {names:?}");
+    }
+
+    #[test]
     fn env_values_select_the_documented_kernels() {
-        let x86 = fake(&["scalar", "avx2"]);
+        let x86 = ["scalar", "avx2"];
         assert_eq!(parse_choice(Some("off"), &x86), 0);
         assert_eq!(parse_choice(Some("scalar"), &x86), 0);
         assert_eq!(parse_choice(Some("avx2"), &x86), 1);
@@ -192,12 +325,22 @@ mod tests {
         assert_eq!(parse_choice(Some(""), &x86), 1);
 
         // "neon" picks the best neon kernel the CPU offers
-        let arm = fake(&["scalar", "neon-mlal", "neon-dotprod"]);
+        let arm = ["scalar", "neon-mlal", "neon-dotprod"];
         assert_eq!(parse_choice(Some("neon"), &arm), 2);
         assert_eq!(parse_choice(Some("auto"), &arm), 2);
         assert_eq!(parse_choice(Some("avx2"), &arm), 0);
-        let arm_old = fake(&["scalar", "neon-mlal"]);
+        let arm_old = ["scalar", "neon-mlal"];
         assert_eq!(parse_choice(Some("neon"), &arm_old), 1);
+
+        // the same parse drives the f32 table: family prefixes match
+        // the -fma suffixed names
+        let f32_x86 = ["scalar", "avx2-fma"];
+        assert_eq!(parse_choice(Some("avx2"), &f32_x86), 1);
+        assert_eq!(parse_choice(Some("off"), &f32_x86), 0);
+        assert_eq!(parse_choice(None, &f32_x86), 1);
+        let f32_arm = ["scalar", "neon-fma"];
+        assert_eq!(parse_choice(Some("neon"), &f32_arm), 1);
+        assert_eq!(parse_choice(Some("avx2"), &f32_arm), 0);
     }
 
     #[test]
@@ -211,6 +354,61 @@ mod tests {
                 let x: Vec<u8> = (0..n).map(|_| (rng.below(256)) as u8).collect();
                 let w: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
                 assert_eq!((k.dot)(&x, &w), (ks[0].dot)(&x, &w), "{} n={n}", k.name);
+            }
+        }
+    }
+
+    #[test]
+    fn every_f32_kernel_is_tolerance_equal_to_the_oracle_on_smoke_shapes() {
+        let ks = kernels_f32();
+        let mut rng = crate::rng::Pcg64::new(0x7_f32);
+        for k in ks {
+            for n in [0usize, 1, 3, 7, 8, 9, 16, 33, 512] {
+                let x = rng.normal_vec(n, 1.0);
+                let w = rng.normal_vec(n, 1.0);
+                let got = (k.dot)(&x, &w);
+                let want = (ks[0].dot)(&x, &w);
+                let scale = 1.0f32.max(want.abs());
+                assert!(
+                    (got - want).abs() <= 1e-5 * scale,
+                    "{} dot n={n}: {got} vs {want}",
+                    k.name
+                );
+                let mut ya = rng.normal_vec(n, 1.0);
+                let mut yb = ya.clone();
+                (k.axpy)(0.37, &x, &mut ya);
+                (ks[0].axpy)(0.37, &x, &mut yb);
+                for i in 0..n {
+                    let scale = 1.0f32.max(yb[i].abs());
+                    assert!(
+                        (ya[i] - yb[i]).abs() <= 1e-5 * scale,
+                        "{} axpy n={n} i={i}: {} vs {}",
+                        k.name,
+                        ya[i],
+                        yb[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_kernels_are_individually_deterministic() {
+        let ks = kernels_f32();
+        let mut rng = crate::rng::Pcg64::new(0xde7);
+        let x = rng.normal_vec(259, 1.0);
+        let w = rng.normal_vec(259, 1.0);
+        for k in ks {
+            let a = (k.dot)(&x, &w);
+            for _ in 0..8 {
+                assert_eq!(a.to_bits(), (k.dot)(&x, &w).to_bits(), "{} dot wobbled", k.name);
+            }
+            let mut y0 = rng.normal_vec(259, 1.0);
+            let mut y1 = y0.clone();
+            (k.axpy)(-1.25, &x, &mut y0);
+            (k.axpy)(-1.25, &x, &mut y1);
+            for i in 0..y0.len() {
+                assert_eq!(y0[i].to_bits(), y1[i].to_bits(), "{} axpy wobbled at {i}", k.name);
             }
         }
     }

@@ -1,18 +1,33 @@
-//! The scalar `u8×i8→i32` block dot — the bit-exactness oracle.
+//! The scalar block dots — the oracles both kernel families are tested
+//! against.
 //!
-//! This is the exact inner loop the int8 GEMM ran before the SIMD
-//! dispatch layer existed, retained verbatim: every SIMD kernel in this
-//! module tree is tested against it (`tests/simd_parity.rs`) and must
-//! return the *same i32*, not merely a close one.  Integer addition is
-//! associative, so any kernel that computes the full-precision products
-//! and accumulates them in (at least) i32 lanes agrees with this loop
-//! bit-for-bit regardless of summation order.
+//! The int8 `dot` is the exact inner loop the int8 GEMM ran before the
+//! SIMD dispatch layer existed, retained verbatim: every SIMD kernel in
+//! this module tree is tested against it (`tests/simd_parity.rs`) and
+//! must return the *same i32*, not merely a close one.  Integer
+//! addition is associative, so any kernel that computes the
+//! full-precision products and accumulates them in (at least) i32 lanes
+//! agrees with this loop bit-for-bit regardless of summation order.
+//!
+//! The f32 `dot_f32` / `axpy_f32` pair is likewise the exact loop the
+//! f32 GEMMs in [`crate::ops::matmul`] ran before dispatch — strictly
+//! sequential accumulation, one rounding per multiply and per add — so
+//! forcing the scalar f32 kernel reproduces the pre-dispatch training
+//! results bit-for-bit.  The vector f32 kernels are only
+//! tolerance-equal to these loops (FMA contraction + lane
+//! reassociation), but each is individually deterministic; see the
+//! family contract in [`crate::ops::simd`].
 
-use crate::ops::simd::QGemmKernel;
+use crate::ops::simd::{F32GemmKernel, QGemmKernel};
 
 /// The scalar reference kernel — always registered, always index 0 of
 /// [`crate::ops::simd::kernels`].
 pub(super) const KERNEL: QGemmKernel = QGemmKernel { name: "scalar", lanes: 1, dot };
+
+/// The scalar f32 reference kernel — always registered, always index 0
+/// of [`crate::ops::simd::kernels_f32`].
+pub(super) const KERNEL_F32: F32GemmKernel =
+    F32GemmKernel { name: "scalar", lanes: 1, dot: dot_f32, axpy: axpy_f32 };
 
 /// `Σ_i x[i]·w[i]` over equal-length code slices, in plain i32.
 fn dot(x: &[u8], w: &[i8]) -> i32 {
@@ -22,4 +37,23 @@ fn dot(x: &[u8], w: &[i8]) -> i32 {
         a += x[i] as i32 * w[i] as i32;
     }
     a
+}
+
+/// `Σ_i x[i]·w[i]` over equal-length f32 slices, strictly sequential.
+fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut a = 0.0f32;
+    for i in 0..x.len() {
+        a += x[i] * w[i];
+    }
+    a
+}
+
+/// `y[i] += a·x[i]`, element-wise, with separate multiply and add
+/// roundings (no FMA) — the pre-dispatch backward inner loop verbatim.
+fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
 }

@@ -1,4 +1,4 @@
-//! AVX2 `u8×i8→i32` block dot for x86_64.
+//! AVX2 `u8×i8→i32` and AVX2+FMA `f32` block kernels for x86_64.
 //!
 //! The classic int8 instruction here is `_mm256_maddubs_epi16` (u8×i8
 //! pairs summed into i16 lanes), but its i16 intermediate *saturates*:
@@ -17,8 +17,18 @@
 //! lowering time), and integer addition is associative — so the result
 //! equals the scalar oracle bit-for-bit.  The `k % 16` tail runs the
 //! scalar loop.
+//!
+//! The f32 kernel (`avx2-fma`) vectorizes the training GEMM inner
+//! loops with `_mm256_fmadd_ps`: the dot accumulates two independent
+//! 8-lane chains (16 elements per iteration, hiding FMA latency) with
+//! a fixed horizontal reduction at the end, and the axpy fuses
+//! `y += a·x` lane-wise.  FMA keeps the full-precision product before
+//! the add, so results are tolerance-equal — not bit-equal — to the
+//! scalar oracle; the accumulation order is fixed, so the kernel is
+//! individually deterministic (the f32 family contract in
+//! [`crate::ops::simd`]).  Tails run the scalar loops.
 
-use crate::ops::simd::QGemmKernel;
+use crate::ops::simd::{F32GemmKernel, QGemmKernel};
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
@@ -26,6 +36,11 @@ use std::arch::x86_64::*;
 /// The AVX2 kernel — registered only when
 /// `is_x86_feature_detected!("avx2")` holds.
 pub(super) const AVX2: QGemmKernel = QGemmKernel { name: "avx2", lanes: 16, dot };
+
+/// The AVX2+FMA f32 kernel — registered only when both
+/// `is_x86_feature_detected!("avx2")` and `…("fma")` hold.
+pub(super) const AVX2_FMA: F32GemmKernel =
+    F32GemmKernel { name: "avx2-fma", lanes: 8, dot: dot_f32, axpy: axpy_f32 };
 
 fn dot(x: &[u8], w: &[i8]) -> i32 {
     debug_assert_eq!(x.len(), w.len());
@@ -68,4 +83,66 @@ unsafe fn dot_impl(x: &[u8], w: &[i8]) -> i32 {
         i += 1;
     }
     a
+}
+
+fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    // SAFETY: only reachable through the dispatch registry, which
+    // registers this kernel after `is_x86_feature_detected!` confirmed
+    // AVX2 and FMA at startup.
+    unsafe { dot_f32_impl(x, w) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_f32_impl(x: &[f32], w: &[f32]) -> f32 {
+    let n = x.len();
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    // two independent accumulator chains hide the 4-cycle FMA latency
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(wp.add(i)), acc0);
+        acc1 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i + 8)), _mm256_loadu_ps(wp.add(i + 8)), acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(wp.add(i)), acc0);
+        i += 8;
+    }
+    // fixed-order horizontal reduction: 8 lanes → 4 → 2 → 1
+    let acc = _mm256_add_ps(acc0, acc1);
+    let q = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+    let q = _mm_add_ps(q, _mm_movehl_ps(q, q));
+    let q = _mm_add_ss(q, _mm_shuffle_ps::<1>(q, q));
+    let mut a = _mm_cvtss_f32(q);
+    while i < n {
+        a += x[i] * w[i];
+        i += 1;
+    }
+    a
+}
+
+fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above — registry-gated on AVX2+FMA detection.
+    unsafe { axpy_f32_impl(a, x, y) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_f32_impl(a: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+    let av = _mm256_set1_ps(a);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let yv = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+        _mm256_storeu_ps(yp.add(i), yv);
+        i += 8;
+    }
+    while i < n {
+        y[i] += a * x[i];
+        i += 1;
+    }
 }

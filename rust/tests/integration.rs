@@ -597,6 +597,145 @@ fn tiny_tf_lwpn_freezes_whole_projection_sites() {
     );
 }
 
+/// Serializes the tests that flip the process-global
+/// [`efqat::graph::force_backward_truncation`] override — interleaving
+/// them would let one test's forced-on window corrupt the other's
+/// forced-off "full backward" leg.  (Every other test in this binary is
+/// truncation-invariant: with all flags high the skipped prefix holds
+/// only gradient-less layers.)  Poison-recovering, like simd_parity's
+/// dispatch lock.
+static TRUNC: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn trunc_lock() -> std::sync::MutexGuard<'static, ()> {
+    TRUNC.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Bitwise comparison of two named output values.
+fn assert_outputs_bitwise(
+    a: &efqat::backend::Outputs,
+    b: &efqat::backend::Outputs,
+    name: &str,
+    ctx: &str,
+) {
+    match (a.get(name).unwrap(), b.get(name).unwrap()) {
+        (Value::F32(x), Value::F32(y)) => {
+            assert_eq!(x.shape, y.shape, "{ctx}:{name} shape");
+            for (i, (p, q)) in x.data.iter().zip(&y.data).enumerate() {
+                assert_eq!(p.to_bits(), q.to_bits(), "{ctx}:{name}[{i}]: {p} vs {q}");
+            }
+        }
+        (Value::I32(x), Value::I32(y)) => {
+            assert_eq!((&x.shape, &x.data), (&y.shape, &y.data), "{ctx}:{name}");
+        }
+        _ => panic!("{ctx}:{name}: dtype drift"),
+    }
+}
+
+#[test]
+fn truncated_backward_is_bit_identical_when_every_site_is_active() {
+    // With every site active (Idx for r25, All for r100, flag=1 for
+    // lwpn — generic_inputs binds flags high) the truncation boundary
+    // sits at the lowest site layer, so the skipped prefix holds only
+    // gradient-less layers (Flatten / quantized-step Embed).  Every
+    // output must therefore be bit-identical with the truncation forced
+    // off and forced on, for all three selection families.
+    let _g = trunc_lock();
+    let s = session();
+    for model in ["mlp", "convnet", "tiny_tf"] {
+        for suffix in ["w8a8_train_r25", "w8a8_train_r100", "w8a8_train_lwpn"] {
+            let name = format!("{model}_{suffix}");
+            let step = s.steps.get(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let params = ParamStore::init(&step.manifest, 13);
+            let inputs = generic_inputs(&step.manifest, &params, 29);
+            efqat::graph::force_backward_truncation(Some(false));
+            let full = step.execute(&inputs);
+            efqat::graph::force_backward_truncation(Some(true));
+            let trunc = step.execute(&inputs);
+            efqat::graph::force_backward_truncation(None);
+            let (full, trunc) = (full.unwrap(), trunc.unwrap());
+            for spec in &step.manifest.outputs {
+                assert_outputs_bitwise(&full, &trunc, &spec.name, &name);
+            }
+        }
+    }
+}
+
+/// Whether a train output belongs to the frozen prefix of the LWPN
+/// truncation test below (sites `frozen` plus, for tiny_tf, the `ln1`
+/// norm living in the same skipped residual block as the frozen
+/// attention projections).
+fn below_boundary(model: &str, out: &str, frozen: &[String]) -> bool {
+    for site in frozen {
+        let base = site.strip_suffix(".w").unwrap_or(site);
+        if out == format!("d:{site}")
+            || out == format!("d:sw:{site}")
+            || out == format!("d:sx:{site}")
+            || out == format!("d:zx:{site}")
+            || out == format!("d:{base}.b")
+        {
+            return true;
+        }
+    }
+    model == "tiny_tf" && (out == "d:ln1.g" || out == "d:ln1.b")
+}
+
+#[test]
+fn lwpn_frozen_prefix_truncation_zeroes_exactly_the_prefix_gradients() {
+    // Freeze a leading block of sites (flags low) so the truncation
+    // boundary moves up: loss/correct and every gradient at or above
+    // the boundary must stay bit-identical to the untruncated backward,
+    // while the frozen prefix's remaining gradients (bias / norm /
+    // activation-qparam — nonzero without truncation) become the zeros
+    // of the masked-update contract.
+    let _g = trunc_lock();
+    let s = session();
+    for (model, n_frozen) in [("mlp", 1usize), ("convnet", 1), ("tiny_tf", 4)] {
+        let name = format!("{model}_w8a8_train_lwpn");
+        let step = s.steps.get(&name).unwrap();
+        let params = ParamStore::init(&step.manifest, 3);
+        let frozen: Vec<String> =
+            step.manifest.wsites.iter().take(n_frozen).map(|w| w.name.clone()).collect();
+        let inputs: Vec<Value> = step
+            .manifest
+            .inputs
+            .iter()
+            .zip(generic_inputs(&step.manifest, &params, 17))
+            .map(|(spec, v)| {
+                if spec.role == "flag" && frozen.contains(spec.of.as_ref().unwrap()) {
+                    Value::I32(ITensor { shape: vec![1], data: vec![0] })
+                } else {
+                    v
+                }
+            })
+            .collect();
+        efqat::graph::force_backward_truncation(Some(false));
+        let full = step.execute(&inputs);
+        efqat::graph::force_backward_truncation(Some(true));
+        let trunc = step.execute(&inputs);
+        efqat::graph::force_backward_truncation(None);
+        let (full, trunc) = (full.unwrap(), trunc.unwrap());
+        for spec in &step.manifest.outputs {
+            if below_boundary(model, &spec.name, &frozen) {
+                let t = trunc.get(&spec.name).unwrap().f32().unwrap();
+                assert!(
+                    t.data.iter().all(|&v| v == 0.0),
+                    "{name}:{}: truncated prefix grad not zeroed",
+                    spec.name
+                );
+            } else {
+                assert_outputs_bitwise(&full, &trunc, &spec.name, &name);
+            }
+        }
+        // the truncation must be load-bearing: without it the frozen
+        // site still computed a real activation-qparam gradient
+        let dsx = full.get(&format!("d:sx:{}", frozen[0])).unwrap().f32().unwrap();
+        assert!(
+            dsx.data[0] != 0.0,
+            "{name}: premise broken — full backward's prefix d:sx is already zero"
+        );
+    }
+}
+
 #[test]
 fn native_outputs_respect_manifest_dtypes() {
     let s = session();

@@ -1,35 +1,48 @@
-//! Differential oracle suite for the SIMD int8 GEMM kernels.
+//! Differential oracle suite for the SIMD GEMM kernels — both the
+//! int8 serving family and the f32 training family.
 //!
-//! Every kernel the dispatch registry offers on this CPU must agree
-//! with the scalar oracle (`kernels()[0]`) *bit-for-bit* — identical
-//! i32 dot products and identical f32 GEMM outputs, not merely close
-//! ones — over a seeded adversarial grid: contraction lengths around
-//! each kernel's lane width (tails!), single-row batches, output widths
-//! straddling the `par_rows` thread-split boundary, every interesting
-//! zero point, all-saturated codes, and empty inputs.  The end-to-end
-//! leg checks that whole-model serving (logits and `evaluate_int8`
-//! metrics) is invariant under the dispatch choice for all three native
-//! models.
+//! Every int8 kernel the dispatch registry offers on this CPU must
+//! agree with the scalar oracle (`kernels()[0]`) *bit-for-bit* —
+//! identical i32 dot products and identical f32 GEMM outputs, not
+//! merely close ones — over a seeded adversarial grid: contraction
+//! lengths around each kernel's lane width (tails!), single-row
+//! batches, output widths straddling the `par_rows` thread-split
+//! boundary, every interesting zero point, all-saturated codes, and
+//! empty inputs.  The end-to-end leg checks that whole-model serving
+//! (logits and `evaluate_int8` metrics) is invariant under the
+//! dispatch choice for all three native models.
+//!
+//! The f32 family (`kernels_f32()`) carries the weaker contract its
+//! FMA kernels can honor: *tolerance*-equal to the scalar oracle
+//! (≤ 1e-5 relative) but individually bit-deterministic — repeated
+//! calls of one kernel, and repeated train steps under one forced
+//! kernel, never differ by a bit.  The end-to-end leg runs a whole
+//! quantized train step forced-scalar vs dispatched and checks the
+//! loss agrees within tolerance.
 //!
 //! Dot-level checks call the kernel function pointers directly.  Tests
 //! that exercise the *dispatched* path instead go through
-//! [`efqat::ops::simd::force`], which is process-global state — those
-//! tests serialize on a mutex so the harness's default parallelism
-//! cannot interleave forced kernels.
+//! [`efqat::ops::simd::force`] / [`efqat::ops::simd::force_f32`],
+//! which are process-global state — those tests serialize on a mutex
+//! so the harness's default parallelism cannot interleave forced
+//! kernels.
 
+use std::path::Path;
 use std::sync::Mutex;
 
 use efqat::backend::Value;
 use efqat::cfg::Config;
 use efqat::coordinator::evaluate_int8;
 use efqat::coordinator::tasks::test_loader;
+use efqat::coordinator::Session;
 use efqat::graph::InputKind;
 use efqat::lower::lower;
+use efqat::model::{Dtype, Manifest, ParamStore};
 use efqat::ops::qmatmul::{qlinear_fwd, I32_EXACT_MAX_K};
-use efqat::ops::simd::{active, force, kernels};
+use efqat::ops::simd::{active, active_f32, force, force_f32, kernels, kernels_f32};
 use efqat::rng::Pcg64;
 use efqat::tensor::{ITensor, Tensor};
-use efqat::testing::{rand_act_codes, rand_weight_codes, synth_lowering_fixture, wsum_rows};
+use efqat::testing::{fvec, rand_act_codes, rand_weight_codes, synth_lowering_fixture, wsum_rows};
 
 /// Serializes every test that touches the process-global [`force`]
 /// override.  Poisoning is recovered: a failed parity test must not
@@ -193,4 +206,190 @@ fn forced_dispatch_reports_the_forced_kernel() {
         assert_eq!(active().name, kern.name);
     }
     force(None);
+}
+
+// ---------------------------------------------------------------- f32 family
+
+/// Relative tolerance for vector-vs-scalar f32 comparisons.  FMA fuses
+/// the multiply-add rounding and lane-parallel accumulation reorders
+/// the sum, so vector kernels are not bit-equal to the strictly
+/// sequential scalar oracle — but over these magnitudes they stay well
+/// inside 1e-5 relative.
+const F32_RTOL: f32 = 1e-5;
+
+fn assert_close(got: f32, want: f32, ctx: &std::fmt::Arguments) {
+    let tol = F32_RTOL * want.abs().max(1.0);
+    assert!((got - want).abs() <= tol, "{ctx}: got {got}, want {want} (tol {tol})");
+}
+
+#[test]
+fn f32_dot_and_axpy_match_scalar_oracle_within_tolerance() {
+    let ks = kernels_f32();
+    let oracle = ks[0];
+    for kern in ks {
+        for klen in k_grid(kern.lanes) {
+            let mut rng = Pcg64::new(0xf32d07 ^ klen as u64);
+            for case in 0..8 {
+                let x = fvec(&mut rng, klen, -2.0, 2.0);
+                let w = fvec(&mut rng, klen, -2.0, 2.0);
+                assert_close(
+                    (kern.dot)(&x, &w),
+                    (oracle.dot)(&x, &w),
+                    &format_args!("{} dot k={klen} c={case}", kern.name),
+                );
+
+                let a = rng.uniform_in(-3.0, 3.0);
+                let mut y = fvec(&mut rng, klen, -1.0, 1.0);
+                let mut y_want = y.clone();
+                (kern.axpy)(a, &x, &mut y);
+                (oracle.axpy)(a, &x, &mut y_want);
+                for (i, (got, want)) in y.iter().zip(&y_want).enumerate() {
+                    assert_close(
+                        *got,
+                        *want,
+                        &format_args!("{} axpy k={klen} c={case} i={i}", kern.name),
+                    );
+                }
+            }
+            // partial cancellation: alternating-sign weights against a
+            // constant vector stress the accumulation order hardest
+            let x = vec![1.5f32; klen];
+            let w: Vec<f32> = (0..klen).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            assert_close(
+                (kern.dot)(&x, &w),
+                (oracle.dot)(&x, &w),
+                &format_args!("{} dot k={klen} ±", kern.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn f32_kernels_are_individually_bit_deterministic() {
+    // the cross-kernel contract is tolerance-based, but each kernel on
+    // its own must be a pure function: same inputs, same bits, every run
+    for kern in kernels_f32() {
+        for klen in k_grid(kern.lanes) {
+            let mut rng = Pcg64::new(0xb17 ^ klen as u64);
+            let x = fvec(&mut rng, klen, -2.0, 2.0);
+            let w = fvec(&mut rng, klen, -2.0, 2.0);
+            let first = (kern.dot)(&x, &w);
+            for rep in 0..4 {
+                let again = (kern.dot)(&x, &w);
+                assert_eq!(
+                    again.to_bits(),
+                    first.to_bits(),
+                    "{} dot k={klen} rep={rep} not deterministic",
+                    kern.name
+                );
+            }
+
+            let a = 1.25f32;
+            let y0 = fvec(&mut rng, klen, -1.0, 1.0);
+            let mut y_first = y0.clone();
+            (kern.axpy)(a, &x, &mut y_first);
+            for rep in 0..4 {
+                let mut y = y0.clone();
+                (kern.axpy)(a, &x, &mut y);
+                let same = y.iter().zip(&y_first).all(|(p, q)| p.to_bits() == q.to_bits());
+                assert!(same, "{} axpy k={klen} rep={rep} not deterministic", kern.name);
+            }
+        }
+    }
+}
+
+/// Build valid inputs for a native train manifest without a dataset —
+/// same recipe as the integration suite's generic inputs: initialized
+/// params, sane qparams, seeded random images / zero token ids, first-k
+/// index selections, and all freeze flags active.
+fn train_inputs(man: &Manifest, params: &ParamStore, seed: u64) -> Vec<Value> {
+    let mut rng = Pcg64::new(seed);
+    man.inputs
+        .iter()
+        .map(|spec| match spec.role.as_str() {
+            "param" => Value::F32(params.get(&spec.name).unwrap().clone()),
+            "qparam_sw" => {
+                Value::F32(Tensor { shape: spec.shape.clone(), data: vec![0.05; spec.elems()] })
+            }
+            "qparam_sx" => Value::F32(Tensor::scalar(0.05)),
+            "qparam_zx" => Value::F32(Tensor::scalar(128.0)),
+            "data" => match spec.dtype {
+                Dtype::F32 => Value::F32(Tensor {
+                    shape: spec.shape.clone(),
+                    data: rng.normal_vec(spec.elems(), 1.0),
+                }),
+                // zeros are valid labels and valid token ids everywhere
+                Dtype::I32 => Value::I32(ITensor::zeros(&spec.shape)),
+            },
+            "index" => Value::I32(ITensor {
+                shape: spec.shape.clone(),
+                data: (0..spec.shape[0] as i32).collect(),
+            }),
+            "flag" => Value::I32(ITensor { shape: vec![1], data: vec![1] }),
+            other => panic!("unexpected input role {other:?}"),
+        })
+        .collect()
+}
+
+#[test]
+fn train_step_loss_invariant_under_f32_dispatch() {
+    let _g = dispatch_lock();
+    let ks = kernels_f32();
+    let auto = ks.len() - 1; // what EFQAT_SIMD=auto resolves to
+    let s = Session::new(Path::new("artifacts")).expect("native session");
+    for model in ["mlp", "convnet", "tiny_tf"] {
+        let name = format!("{model}_w8a8_train_r25");
+        let step = s.steps.get(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let params = ParamStore::init(&step.manifest, 17);
+        let inputs = train_inputs(&step.manifest, &params, 41);
+
+        force_f32(Some(0));
+        assert_eq!(active_f32().name, "scalar");
+        let out_scalar = step.execute(&inputs).unwrap();
+
+        force_f32(Some(auto));
+        let out_auto = step.execute(&inputs).unwrap();
+        let out_again = step.execute(&inputs).unwrap();
+        force_f32(None);
+
+        // whole-step loss: scalar vs dispatched.  Looser than the
+        // kernel-level bound — a ~1e-6 FMA difference in a GEMM output
+        // can flip a downstream fake-quant rounding decision by one
+        // code, which moves the loss by far more than the raw kernel
+        // error.  A genuinely wrong kernel misses by orders of
+        // magnitude more than this.
+        let (l0, l1) = (out_scalar.loss().unwrap(), out_auto.loss().unwrap());
+        let tol = 5e-3 * l0.abs().max(1.0);
+        assert!(
+            (l1 - l0).abs() <= tol,
+            "{name}: loss {l1} under {} vs scalar {l0} (tol {tol})",
+            ks[auto].name
+        );
+
+        // under one fixed kernel the full train step is bit-reproducible
+        for spec in &step.manifest.outputs {
+            let (a, b) = (out_auto.get(&spec.name).unwrap(), out_again.get(&spec.name).unwrap());
+            match (a, b) {
+                (Value::F32(p), Value::F32(q)) => {
+                    let same =
+                        p.data.iter().zip(&q.data).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "{name}: {} not reproducible under {}", spec.name, ks[auto].name);
+                }
+                (Value::I32(p), Value::I32(q)) => {
+                    assert_eq!(p.data, q.data, "{name}: {}", spec.name);
+                }
+                _ => panic!("{name}: {} dtype drift between runs", spec.name),
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_f32_dispatch_reports_the_forced_kernel() {
+    let _g = dispatch_lock();
+    for (idx, kern) in kernels_f32().iter().enumerate() {
+        force_f32(Some(idx));
+        assert_eq!(active_f32().name, kern.name);
+    }
+    force_f32(None);
 }

@@ -229,13 +229,75 @@ fn serve_batch_tracing_allocates_only_at_flush_boundaries() {
 
 #[test]
 fn train_step_execution_is_allocation_free_after_warmup() {
+    // once per registered f32 GEMM kernel: the training forward and
+    // backward contractions all dispatch through the f32 table, so a
+    // vector kernel that allocates scratch fails here with its name
     let backend = NativeBackend::new(Path::new("artifacts"));
-    for artifact in
-        ["mlp_w8a8_train_r25", "convnet_w8a8_train_r25", "tiny_tf_w8a8_train_r25", "mlp_fp_train"]
+    for kidx in 0..efqat::ops::simd::kernels_f32().len() {
+        efqat::ops::simd::force_f32(Some(kidx));
+        let kname = efqat::ops::simd::active_f32().name;
+        for artifact in [
+            "mlp_w8a8_train_r25",
+            "convnet_w8a8_train_r25",
+            "tiny_tf_w8a8_train_r25",
+            "mlp_fp_train",
+        ] {
+            let step = backend.load(artifact).unwrap();
+            let params = ParamStore::init(&step.manifest, 1);
+            let inputs = generic_inputs(&step.manifest, &params, 7);
+            let mut ws = Workspace::new();
+            for _ in 0..3 {
+                let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+                ws.give_values(outs);
+            }
+            let allocs0 = thread_allocs();
+            let misses0 = ws.stats().misses;
+            for _ in 0..8 {
+                let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
+                ws.give_values(outs);
+            }
+            let delta = thread_allocs() - allocs0;
+            assert_eq!(
+                delta, 0,
+                "{artifact} [{kname}]: train step allocated {delta}×/8 in steady state"
+            );
+            assert_eq!(
+                ws.stats().misses, misses0,
+                "{artifact} [{kname}]: pool missed in steady state"
+            );
+        }
+    }
+    efqat::ops::simd::force_f32(None);
+}
+
+#[test]
+fn truncated_train_step_is_allocation_free_after_warmup() {
+    // frozen-prefix backward truncation swaps real layer backwards for
+    // the skip path (cache recycling + zero-grad emission from the
+    // workspace pool) — that path must be exactly as allocation-free as
+    // the full backward it replaces
+    let backend = NativeBackend::new(Path::new("artifacts"));
+    for (artifact, n_frozen) in
+        [("mlp_w8a8_train_lwpn", 1usize), ("tiny_tf_w8a8_train_lwpn", 4)]
     {
         let step = backend.load(artifact).unwrap();
         let params = ParamStore::init(&step.manifest, 1);
-        let inputs = generic_inputs(&step.manifest, &params, 7);
+        let frozen: Vec<String> =
+            step.manifest.wsites.iter().take(n_frozen).map(|w| w.name.clone()).collect();
+        let inputs: Vec<Value> = step
+            .manifest
+            .inputs
+            .iter()
+            .zip(generic_inputs(&step.manifest, &params, 7))
+            .map(|(spec, v)| {
+                if spec.role == "flag" && frozen.contains(spec.of.as_ref().unwrap()) {
+                    Value::I32(ITensor { shape: vec![1], data: vec![0] })
+                } else {
+                    v
+                }
+            })
+            .collect();
+        efqat::graph::force_backward_truncation(Some(true));
         let mut ws = Workspace::new();
         for _ in 0..3 {
             let (outs, _) = step.execute_timed_ws(&inputs, &mut ws).unwrap();
@@ -248,7 +310,8 @@ fn train_step_execution_is_allocation_free_after_warmup() {
             ws.give_values(outs);
         }
         let delta = thread_allocs() - allocs0;
-        assert_eq!(delta, 0, "{artifact}: train step allocated {delta}×/8 in steady state");
+        efqat::graph::force_backward_truncation(None);
+        assert_eq!(delta, 0, "{artifact}: truncated step allocated {delta}×/8 in steady state");
         assert_eq!(ws.stats().misses, misses0, "{artifact}: pool missed in steady state");
     }
 }
